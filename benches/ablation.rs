@@ -1,0 +1,40 @@
+//! Bench: ablations of FastPI's design choices — reordering on/off,
+//! per-block vs monolithic A11 SVD, hub-ratio k sweep, inner SVD engine.
+//! Run: cargo bench --bench ablation [-- --dataset bibtex --alpha 0.3]
+
+use fastpi::harness::ablate;
+use fastpi::util::args::Args;
+use fastpi::util::bench::Reporter;
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"));
+    let ds = args.str_or("dataset", "bibtex");
+    let scale: f64 = args.parse_or("scale", if std::env::var("FASTPI_BENCH_FAST").is_ok() { 0.05 } else { 0.1 });
+    let alpha: f64 = args.parse_or("alpha", 0.3);
+    let seed: u64 = args.parse_or("seed", 42);
+    let mut rep = Reporter::new("ablation");
+
+    let (fs, ss, fe, se) = ablate::ablate_reorder(&ds, scale, alpha, seed).expect("reorder");
+    rep.add(&[("ablation", "reorder_on".into())], &[("secs", fs), ("err", fe)]);
+    rep.add(&[("ablation", "reorder_off".into())], &[("secs", ss), ("err", se)]);
+
+    let (bs, ms, be, me) = ablate::ablate_block_svd(&ds, scale, alpha, seed).expect("block");
+    rep.add(&[("ablation", "block_svd".into())], &[("secs", bs), ("err", be)]);
+    rep.add(&[("ablation", "monolithic_a11".into())], &[("secs", ms), ("err", me)]);
+
+    for (k, secs, m2, n2, blocks, iters) in
+        ablate::ablate_hub_ratio(&ds, scale, alpha, &[0.005, 0.01, 0.02, 0.05, 0.1], seed)
+            .expect("hub")
+    {
+        rep.add(
+            &[("ablation", format!("hub_k={k}"))],
+            &[("secs", secs), ("m2", m2 as f64), ("n2", n2 as f64), ("blocks", blocks as f64), ("iters", iters as f64)],
+        );
+    }
+    for (name, secs, err) in
+        ablate::ablate_inner_engine(&ds, scale, alpha, seed).expect("inner")
+    {
+        rep.add(&[("ablation", format!("inner_{name}"))], &[("secs", secs), ("err", err)]);
+    }
+    rep.finish();
+}

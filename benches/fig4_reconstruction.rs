@@ -1,0 +1,30 @@
+//! Bench: regenerate Figure 4 — reconstruction error ‖A−UΣVᵀ‖_F vs α for
+//! FastPI / RandPI / KrylovPI / frPCA on the four datasets.
+//! Run: cargo bench --bench fig4_reconstruction [-- --scale 0.1 --alphas 0.05,0.1,...]
+
+use fastpi::harness::sweep::{run_sweep, SweepConfig};
+use fastpi::util::args::Args;
+use fastpi::util::bench::Reporter;
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"));
+    let mut cfg = SweepConfig { reconstruction: true, ..Default::default() }.apply_fast_env();
+    if let Some(s) = args.get("scale") {
+        cfg.scale = s.parse().expect("scale");
+    }
+    cfg.alphas = args.parse_list("alphas", &cfg.alphas);
+    cfg.datasets = args.parse_list("datasets", &cfg.datasets);
+    let mut rep = Reporter::new("fig4_reconstruction");
+    run_sweep(&cfg, |r| {
+        rep.add(
+            &[
+                ("dataset", r.dataset.clone()),
+                ("method", r.method.to_string()),
+                ("alpha", format!("{}", r.alpha)),
+            ],
+            &[("recon_err", r.recon_error.unwrap()), ("secs", r.svd_secs)],
+        );
+    })
+    .expect("sweep");
+    rep.finish();
+}

@@ -1,0 +1,35 @@
+//! Bench: regenerate Figure 5 — multi-label regression P@3 vs α
+//! (90/10 split, Z = A†Y, top-k precision).
+//! Run: cargo bench --bench fig5_accuracy [-- --scale 0.1]
+
+use fastpi::harness::sweep::{run_sweep, SweepConfig};
+use fastpi::util::args::Args;
+use fastpi::util::bench::Reporter;
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"));
+    let mut cfg = SweepConfig { regression: true, ..Default::default() }.apply_fast_env();
+    if let Some(s) = args.get("scale") {
+        cfg.scale = s.parse().expect("scale");
+    }
+    cfg.alphas = args.parse_list("alphas", &cfg.alphas);
+    cfg.datasets = args.parse_list("datasets", &cfg.datasets);
+    let mut rep = Reporter::new("fig5_accuracy");
+    run_sweep(&cfg, |r| {
+        rep.add(
+            &[
+                ("dataset", r.dataset.clone()),
+                ("method", r.method.to_string()),
+                ("alpha", format!("{}", r.alpha)),
+            ],
+            &[
+                ("p@1", r.p_at_1.unwrap()),
+                ("p@3", r.p_at_3.unwrap()),
+                ("p@5", r.p_at_5.unwrap()),
+                ("secs", r.svd_secs),
+            ],
+        );
+    })
+    .expect("sweep");
+    rep.finish();
+}

@@ -1,0 +1,32 @@
+//! Bench: regenerate Figure 6 — pseudoinverse computation wall-clock vs α
+//! for all four methods on the four datasets. The paper's headline:
+//! FastPI < RandPI everywhere; KrylovPI diverges with α; FastPI beats
+//! frPCA at high α.
+//! Run: cargo bench --bench fig6_runtime [-- --scale 0.1]
+
+use fastpi::harness::sweep::{run_sweep, SweepConfig};
+use fastpi::util::args::Args;
+use fastpi::util::bench::Reporter;
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"));
+    let mut cfg = SweepConfig::default().apply_fast_env();
+    if let Some(s) = args.get("scale") {
+        cfg.scale = s.parse().expect("scale");
+    }
+    cfg.alphas = args.parse_list("alphas", &cfg.alphas);
+    cfg.datasets = args.parse_list("datasets", &cfg.datasets);
+    let mut rep = Reporter::new("fig6_runtime");
+    run_sweep(&cfg, |r| {
+        rep.add(
+            &[
+                ("dataset", r.dataset.clone()),
+                ("method", r.method.to_string()),
+                ("alpha", format!("{}", r.alpha)),
+            ],
+            &[("secs", r.svd_secs), ("rank", r.rank as f64)],
+        );
+    })
+    .expect("sweep");
+    rep.finish();
+}

@@ -1,0 +1,44 @@
+//! Bench: GEMM roofline — the L3 hot path (native blocked GEMM) and the
+//! AOT Pallas artifact path, in GFLOP/s across sizes. Feeds EXPERIMENTS.md
+//! §Perf.
+//! Run: cargo bench --bench gemm_roofline
+
+use fastpi::dense::{gemm, Matrix};
+use fastpi::runtime::{ExecMode, GemmDispatcher};
+use fastpi::util::bench::{run, BenchConfig, Reporter};
+use fastpi::util::rng::Rng;
+
+fn main() {
+    let cfg = BenchConfig::from_env();
+    let mut rep = Reporter::new("gemm_roofline");
+    let mut rng = Rng::seed_from_u64(7);
+    let sizes = [64usize, 128, 256, 512, 1024];
+    for &s in &sizes {
+        let a = Matrix::randn(s, s, &mut rng);
+        let b = Matrix::randn(s, s, &mut rng);
+        let stats = run(&cfg, || gemm::matmul(&a, &b));
+        let gflops = gemm::gemm_flops(s, s, s) / stats.min_s / 1e9;
+        rep.add(
+            &[("backend", "native".into()), ("size", s.to_string())],
+            &[("secs", stats.min_s), ("gflops", gflops)],
+        );
+    }
+    // artifact path (if built): exact bucket sizes, no padding waste
+    let d = GemmDispatcher::new(ExecMode::Auto);
+    if d.has_artifacts() {
+        let d = GemmDispatcher::new(ExecMode::ArtifactOnly);
+        for &s in &[128usize, 256, 512] {
+            let a = Matrix::randn(s, s, &mut rng);
+            let b = Matrix::randn(s, s, &mut rng);
+            let stats = run(&cfg, || d.matmul(&a, &b));
+            let gflops = gemm::gemm_flops(s, s, s) / stats.min_s / 1e9;
+            rep.add(
+                &[("backend", "pallas_artifact".into()), ("size", s.to_string())],
+                &[("secs", stats.min_s), ("gflops", gflops)],
+            );
+        }
+    } else {
+        eprintln!("artifacts not built — artifact backend skipped");
+    }
+    rep.finish();
+}

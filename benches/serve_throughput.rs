@@ -1,0 +1,74 @@
+//! Bench: scoring-server throughput and latency vs client concurrency —
+//! the request-path performance of the L3 coordinator (batching ablation:
+//! max_batch 1 vs 64).
+//! Run: cargo bench --bench serve_throughput
+
+use fastpi::coordinator::{score_request, PinvJob, PipelineCoordinator, ScoreServer, ServerConfig};
+use fastpi::data::load_dataset;
+use fastpi::pinv::Method;
+use fastpi::regress::MultiLabelModel;
+use fastpi::util::bench::Reporter;
+use std::time::{Duration, Instant};
+
+fn main() {
+    let fast = std::env::var("FASTPI_BENCH_FAST").is_ok();
+    let scale = if fast { 0.05 } else { 0.1 };
+    let n_requests: usize = if fast { 200 } else { 2000 };
+
+    let ds = load_dataset("rcv", scale, 42, None).expect("dataset");
+    let coord = PipelineCoordinator::new();
+    let job = PinvJob { method: Method::FastPi, alpha: 0.4, k: ds.k, seed: 42 };
+    let report = coord.run(&ds.a, &job).expect("pinv");
+    let (model, _) = MultiLabelModel::train(&report.pinv, &ds.y);
+
+    let mut rep = Reporter::new("serve_throughput");
+    for (label, max_batch) in [("batch=1", 1usize), ("batch=64", 64)] {
+        for clients in [1usize, 8, 32] {
+            let server = ScoreServer::start(
+                model.clone(),
+                ServerConfig {
+                    max_batch,
+                    max_wait: Duration::from_micros(500),
+                    queue_capacity: 1 << 14,
+                },
+            )
+            .expect("server");
+            let addr = server.addr;
+            let t0 = Instant::now();
+            let lats: Vec<f64> = std::thread::scope(|s| {
+                let mut hs = Vec::new();
+                for c in 0..clients {
+                    let a = &ds.a;
+                    hs.push(s.spawn(move || {
+                        let mut out = Vec::new();
+                        for i in 0..n_requests / clients {
+                            let row = (c * 997 + i * 13) % a.rows();
+                            let (js, vs) = a.row(row);
+                            let feats: Vec<(usize, f64)> =
+                                js.iter().zip(vs).map(|(&j, &v)| (j, v)).collect();
+                            let t = Instant::now();
+                            score_request(addr, &feats, 5).expect("req");
+                            out.push(t.elapsed().as_secs_f64());
+                        }
+                        out
+                    }));
+                }
+                hs.into_iter().flat_map(|h| h.join().unwrap()).collect()
+            });
+            let wall = t0.elapsed().as_secs_f64();
+            let mut sorted = lats.clone();
+            sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            rep.add(
+                &[("policy", label.into()), ("clients", clients.to_string())],
+                &[
+                    ("throughput_rps", lats.len() as f64 / wall),
+                    ("p50_ms", sorted[sorted.len() / 2] * 1e3),
+                    ("p95_ms", sorted[(sorted.len() as f64 * 0.95) as usize] * 1e3),
+                    ("avg_batch", server.stats.avg_batch()),
+                ],
+            );
+            server.shutdown();
+        }
+    }
+    rep.finish();
+}

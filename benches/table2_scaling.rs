@@ -1,0 +1,32 @@
+//! Bench: empirical complexity fits for Lemma 1 / Table 2 — FastPI time vs
+//! m (rows) at fixed rank, and vs r at fixed size, with log-log slopes.
+//! Run: cargo bench --bench table2_scaling
+
+use fastpi::harness::scaling::{loglog_slope, sweep_alpha, sweep_m};
+use fastpi::util::args::Args;
+use fastpi::util::bench::Reporter;
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"));
+    let seed: u64 = args.parse_or("seed", 42);
+    let fast = std::env::var("FASTPI_BENCH_FAST").is_ok();
+    let ms: Vec<usize> =
+        if fast { vec![500, 1000] } else { vec![500, 1000, 2000, 4000, 8000] };
+    let alphas: Vec<f64> =
+        if fast { vec![0.1, 0.4] } else { vec![0.05, 0.1, 0.2, 0.4, 0.8] };
+
+    let mut rep = Reporter::new("table2_scaling");
+    let pm = sweep_m(&ms, 200, 0.3, seed).expect("sweep_m");
+    for p in &pm {
+        rep.add(&[("axis", "m".into()), ("value", p.value.to_string())], &[("secs", p.secs)]);
+    }
+    let slope_m = loglog_slope(&pm);
+    let pa = sweep_alpha(&alphas, 2000, 400, seed).expect("sweep_alpha");
+    for p in &pa {
+        rep.add(&[("axis", "r".into()), ("value", p.value.to_string())], &[("secs", p.secs)]);
+    }
+    let slope_r = loglog_slope(&pa);
+    println!("time ~ m^{slope_m:.2} at fixed rank (Lemma 1: dominant term mr² ⇒ ≈1)");
+    println!("time ~ r^{slope_r:.2} at fixed m (Lemma 1: ⇒ ≈2)");
+    rep.finish();
+}

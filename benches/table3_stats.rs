@@ -1,0 +1,32 @@
+//! Bench: regenerate Table 3 (dataset statistics + reordering hub counts).
+//! Run: cargo bench --bench table3_stats [-- --scale 0.1]
+
+use fastpi::harness::{self, table3};
+use fastpi::util::args::Args;
+use fastpi::util::bench::Reporter;
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"));
+    let scale: f64 = args.parse_or("scale", harness::DEFAULT_SCALE);
+    let datasets: Vec<String> =
+        harness::DEFAULT_DATASETS.iter().map(|s| s.to_string()).collect();
+    let rows = table3::table3(&datasets, scale, args.parse_or("seed", 42)).expect("table3");
+    print!("{}", table3::render(&rows));
+    let mut rep = Reporter::new("table3_stats");
+    for r in &rows {
+        rep.add(
+            &[("dataset", r.dataset.clone())],
+            &[
+                ("m", r.m as f64),
+                ("n", r.n as f64),
+                ("L", r.labels as f64),
+                ("nnz", r.nnz as f64),
+                ("sp_a", r.sp_a),
+                ("sp_y", r.sp_y),
+                ("m2", r.m2 as f64),
+                ("n2", r.n2 as f64),
+            ],
+        );
+    }
+    rep.finish();
+}

@@ -1,0 +1,138 @@
+//! END-TO-END DRIVER (DESIGN.md §6): the full system on a real small
+//! workload, proving all layers compose.
+//!
+//! Pipeline: synthetic bibtex-scale multi-label dataset → FastPI
+//! pseudoinverse (reorder → block SVD → incremental updates, L3 rust) →
+//! closed-form multi-label regression Z = A†Y → batched scoring server
+//! (request path, with the PJRT/Pallas artifact GEMM exercised when built)
+//! → client load generation, reporting P@k accuracy plus latency and
+//! throughput. Results are recorded in EXPERIMENTS.md.
+//!
+//! Run: `cargo run --release --example multilabel_regression [-- --scale 0.25]`
+
+use fastpi::coordinator::{score_request, PinvJob, PipelineCoordinator, ScoreServer, ServerConfig};
+use fastpi::data::load_dataset;
+use fastpi::pinv::Method;
+use fastpi::regress::{precision_at_k, train_test_split, MultiLabelModel};
+use fastpi::util::args::Args;
+use fastpi::util::rng::Rng;
+use std::time::Instant;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let scale: f64 = args.parse_or("scale", 0.25);
+    let alpha: f64 = args.parse_or("alpha", 0.5);
+    let seed: u64 = args.parse_or("seed", 42);
+
+    // --- 1. dataset (Table-3-matched synthetic bibtex)
+    let ds = load_dataset("bibtex", scale, seed, None)?;
+    let (m, n, l, nnz, spa, spy) = ds.stats();
+    println!("dataset bibtex@{scale}: m={m} n={n} L={l} |A|={nnz} sp(A)={spa:.4} sp(Y)={spy:.4}");
+
+    // --- 2. split + FastPI pseudoinverse
+    let mut rng = Rng::seed_from_u64(seed);
+    let split = train_test_split(&ds.a, &ds.y, 0.1, &mut rng);
+    let coord = PipelineCoordinator::new();
+    let job = PinvJob { method: Method::FastPi, alpha, k: ds.k, seed };
+    let t = Instant::now();
+    let report = coord.run(&split.a_train, &job)?;
+    println!(
+        "FastPI: rank {} in {:.3}s\n{}",
+        report.rank,
+        t.elapsed().as_secs_f64(),
+        report.stages.render()
+    );
+
+    // --- 3. train Z = A†Y and evaluate offline (Figure-5 metric)
+    let (model, train_report) = MultiLabelModel::train(&report.pinv, &split.y_train);
+    println!("trained Z ({}x{}) in {:.3}s", train_report.n_features, train_report.n_labels, train_report.train_secs);
+    let scores = model.predict(&split.a_test);
+    let p1 = precision_at_k(&scores, &split.y_test, 1);
+    let p3 = precision_at_k(&scores, &split.y_test, 3);
+    let p5 = precision_at_k(&scores, &split.y_test, 5);
+    println!("offline accuracy: P@1={p1:.4} P@3={p3:.4} P@5={p5:.4} ({} test rows)", split.a_test.rows());
+
+    // --- 4. serve it: batched scoring server + client load
+    let server = ScoreServer::start(
+        model,
+        ServerConfig { max_batch: 32, max_wait: std::time::Duration::from_millis(1), queue_capacity: 4096 },
+    )?;
+    let addr = server.addr;
+    println!("scoring server up on {addr}");
+
+    let n_requests = 400usize;
+    let client_threads = 8usize;
+    let lat_and_hits: Vec<(f64, bool)> = std::thread::scope(|s| {
+        let mut handles = Vec::new();
+        for t in 0..client_threads {
+            let a_test = &split.a_test;
+            let y_test = &split.y_test;
+            handles.push(s.spawn(move || {
+                let mut out = Vec::new();
+                let per = n_requests / client_threads;
+                for i in 0..per {
+                    let row = (t * per + i) % a_test.rows();
+                    let (js, vs) = a_test.row(row);
+                    let feats: Vec<(usize, f64)> =
+                        js.iter().zip(vs).map(|(&j, &v)| (j, v)).collect();
+                    let t0 = Instant::now();
+                    let top = score_request(addr, &feats, 3).expect("request");
+                    let lat = t0.elapsed().as_secs_f64();
+                    let (truth, _) = y_test.row(row);
+                    let hit = top.iter().any(|(label, _)| truth.contains(label));
+                    out.push((lat, hit));
+                }
+                out
+            }));
+        }
+        handles.into_iter().flat_map(|h| h.join().unwrap()).collect()
+    });
+
+    let mut lats: Vec<f64> = lat_and_hits.iter().map(|(l, _)| *l).collect();
+    lats.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let total: f64 = lats.iter().sum();
+    let served = lats.len();
+    let hit_rate = lat_and_hits.iter().filter(|(_, h)| *h).count() as f64 / served as f64;
+    println!(
+        "serving: {} requests, p50 {:.2}ms p95 {:.2}ms p99 {:.2}ms, throughput {:.0} req/s (8 clients), any-hit@3 {:.3}",
+        served,
+        lats[served / 2] * 1e3,
+        lats[(served as f64 * 0.95) as usize] * 1e3,
+        lats[((served - 1) as f64 * 0.99) as usize] * 1e3,
+        served as f64 / (total / client_threads as f64),
+        hit_rate,
+    );
+    println!(
+        "batching: served={} batches={} avg_batch={:.1}",
+        server.stats.served.load(std::sync::atomic::Ordering::Relaxed),
+        server.stats.batches.load(std::sync::atomic::Ordering::Relaxed),
+        server.stats.avg_batch()
+    );
+    server.shutdown();
+
+    // --- 5. artifact-backed GEMM sanity (the PJRT/Pallas layer), if built
+    if fastpi::runtime::global_executor().is_some() {
+        let d = fastpi::runtime::GemmDispatcher::new(fastpi::runtime::ExecMode::ArtifactOnly);
+        let mut rng = Rng::seed_from_u64(1);
+        let a = fastpi::dense::Matrix::randn(256, 256, &mut rng);
+        let b = fastpi::dense::Matrix::randn(256, 256, &mut rng);
+        let t0 = Instant::now();
+        let c_art = d.matmul(&a, &b);
+        let art_secs = t0.elapsed().as_secs_f64();
+        let t0 = Instant::now();
+        let c_nat = fastpi::dense::matmul(&a, &b);
+        let nat_secs = t0.elapsed().as_secs_f64();
+        println!(
+            "AOT Pallas artifact GEMM 256³: {:.2}ms (native {:.2}ms), max|Δ| {:.2e} — {}",
+            art_secs * 1e3,
+            nat_secs * 1e3,
+            c_art.max_abs_diff(&c_nat),
+            d.stats.summary()
+        );
+    } else {
+        println!("artifacts not built (run `make artifacts`) — PJRT layer skipped");
+    }
+
+    println!("multilabel_regression E2E OK");
+    Ok(())
+}

@@ -1,0 +1,28 @@
+//! Visualize the paper's structural claims: Figure 1 (skewed degree
+//! distributions of the bipartite view) and Figure 3 (hub-and-spoke
+//! reordering concentrating non-zeros bottom-right), as text.
+//!
+//! Run: `cargo run --release --example reorder_visualize [-- --dataset amazon --scale 0.1]`
+
+use fastpi::harness::figures;
+use fastpi::util::args::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let dataset = args.str_or("dataset", "amazon");
+    let scale: f64 = args.parse_or("scale", 0.1);
+    let seed: u64 = args.parse_or("seed", 42);
+
+    let f1 = figures::fig1(&dataset, scale, seed)?;
+    print!("{}", figures::render_fig1(&f1));
+    println!();
+
+    let f3 = figures::fig3(&dataset, scale, seed)?;
+    print!("{}", figures::render_fig3(&f3));
+
+    // also show the unordered matrix for contrast (Figure 3a vs 3e)
+    let ds = fastpi::data::load_dataset(&dataset, scale, seed, None)?;
+    println!("original (unordered) spy plot for contrast:");
+    print!("{}", figures::spy_plot(&ds.a, 48, 24));
+    Ok(())
+}

@@ -1,0 +1,77 @@
+//! Serving-focused example: start the batched scoring server on a trained
+//! model and drive it with a configurable client load, reporting the
+//! latency distribution, throughput, and batching efficiency under
+//! different concurrency levels — including the backpressure path.
+//!
+//! Run: `cargo run --release --example serving [-- --clients 16 --requests 2000]`
+
+use fastpi::coordinator::{score_request, PinvJob, PipelineCoordinator, ScoreServer, ServerConfig};
+use fastpi::data::load_dataset;
+use fastpi::pinv::Method;
+use fastpi::regress::MultiLabelModel;
+use fastpi::util::args::Args;
+use std::sync::atomic::Ordering;
+use std::time::{Duration, Instant};
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let scale: f64 = args.parse_or("scale", 0.1);
+    let n_requests: usize = args.parse_or("requests", 2000);
+    let seed: u64 = args.parse_or("seed", 42);
+
+    let ds = load_dataset("rcv", scale, seed, None)?;
+    let coord = PipelineCoordinator::new();
+    let job = PinvJob { method: Method::FastPi, alpha: 0.4, k: ds.k, seed };
+    println!("training model on rcv@{scale}...");
+    let report = coord.run(&ds.a, &job)?;
+    let (model, _) = MultiLabelModel::train(&report.pinv, &ds.y);
+
+    for clients in [1usize, 4, 16] {
+        let server = ScoreServer::start(
+            model.clone(),
+            ServerConfig {
+                max_batch: 64,
+                max_wait: Duration::from_micros(500),
+                queue_capacity: 8192,
+            },
+        )?;
+        let addr = server.addr;
+        let t_all = Instant::now();
+        let lats: Vec<f64> = std::thread::scope(|s| {
+            let mut handles = Vec::new();
+            for c in 0..clients {
+                let a = &ds.a;
+                handles.push(s.spawn(move || {
+                    let mut out = Vec::new();
+                    for i in 0..n_requests / clients {
+                        let row = (c * 131 + i * 7) % a.rows();
+                        let (js, vs) = a.row(row);
+                        let feats: Vec<(usize, f64)> =
+                            js.iter().zip(vs).map(|(&j, &v)| (j, v)).collect();
+                        let t0 = Instant::now();
+                        score_request(addr, &feats, 5).expect("score");
+                        out.push(t0.elapsed().as_secs_f64());
+                    }
+                    out
+                }));
+            }
+            handles.into_iter().flat_map(|h| h.join().unwrap()).collect()
+        });
+        let wall = t_all.elapsed().as_secs_f64();
+        let mut sorted = lats.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let served = server.stats.served.load(Ordering::Relaxed);
+        let batches = server.stats.batches.load(Ordering::Relaxed).max(1);
+        println!(
+            "clients={clients:<3} served={served:<6} p50={:.2}ms p95={:.2}ms p99={:.2}ms thrpt={:.0} req/s avg_batch={:.1}",
+            sorted[sorted.len() / 2] * 1e3,
+            sorted[(sorted.len() as f64 * 0.95) as usize] * 1e3,
+            sorted[((sorted.len() - 1) as f64 * 0.99) as usize] * 1e3,
+            lats.len() as f64 / wall,
+            served as f64 / batches as f64,
+        );
+        server.shutdown();
+    }
+    println!("serving example OK");
+    Ok(())
+}

@@ -1,0 +1,44 @@
+//! Compare all four low-rank SVD engines (FastPI, RandPI, KrylovPI, frPCA)
+//! on one dataset at one rank ratio: reconstruction error, orthogonality,
+//! and wall-clock — a one-screen miniature of Figures 4 and 6.
+//!
+//! Run: `cargo run --release --example svd_comparison [-- --dataset rcv --alpha 0.3 --scale 0.1]`
+
+use fastpi::data::load_dataset;
+use fastpi::dense::qr::orthogonality_defect;
+use fastpi::pinv::{low_rank_svd, Method};
+use fastpi::util::args::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let dataset = args.str_or("dataset", "rcv");
+    let alpha: f64 = args.parse_or("alpha", 0.3);
+    let scale: f64 = args.parse_or("scale", 0.1);
+    let seed: u64 = args.parse_or("seed", 42);
+
+    let ds = load_dataset(&dataset, scale, seed, None)?;
+    let dense = ds.a.to_dense();
+    let norm = dense.fro_norm();
+    println!(
+        "dataset {dataset}@{scale}: {}x{}, {} nnz — α={alpha} (rank {})",
+        ds.a.rows(),
+        ds.a.cols(),
+        ds.a.nnz(),
+        ((alpha * ds.a.cols() as f64).ceil()) as usize
+    );
+    println!("{:<10} {:>9} {:>14} {:>12} {:>12}", "method", "secs", "‖A-UΣVᵀ‖_F", "rel.err", "U defect");
+
+    for method in Method::PAPER_SET {
+        let (svd, secs) = low_rank_svd(method, &ds.a, alpha, seed)?;
+        let err = svd.reconstruction_error(&dense);
+        println!(
+            "{:<10} {:>9.3} {:>14.4} {:>12.4} {:>12.2e}",
+            method.name(),
+            secs,
+            err,
+            err / norm,
+            orthogonality_defect(&svd.u)
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,53 @@
+"""AOT lowering: JAX entry points -> HLO *text* artifacts + manifest.
+
+HLO text (NOT serialized HloModuleProto / jax .serialize()) is the
+interchange format: jax >= 0.5 emits protos with 64-bit instruction ids that
+the xla crate's xla_extension 0.5.1 rejects; the text parser reassigns ids
+and round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage: cd python && python -m compile.aot --out-dir ../artifacts
+"""
+
+import argparse
+import pathlib
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from .model import ENTRY_POINTS, entry_name, f32
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    out_dir = pathlib.Path(args.out_dir)
+    out_dir.mkdir(parents=True, exist_ok=True)
+
+    manifest_lines = []
+    for kind, fn, shapes in ENTRY_POINTS:
+        name = entry_name(kind, shapes)
+        specs = [f32(*s) for s in shapes]
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        (out_dir / fname).write_text(text)
+        shape_str = ";".join("x".join(str(d) for d in s) for s in shapes)
+        manifest_lines.append(f"{kind} {name} {fname} {shape_str}")
+        print(f"  {name}: {len(text)} chars")
+
+    (out_dir / "manifest.txt").write_text("\n".join(manifest_lines) + "\n")
+    print(f"wrote {len(manifest_lines)} artifacts + manifest to {out_dir}")
+
+
+if __name__ == "__main__":
+    main()

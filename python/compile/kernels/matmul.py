@@ -1,0 +1,82 @@
+"""Layer 1 — Pallas tiled GEMM kernel.
+
+The compute hot-spot of every SVD engine in FastPI is dense GEMM (randomized
+projections, the incremental factor updates of Eq. 2/3, and the serving
+scorer), so the L1 kernel is a block-tiled matmul.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the grid walks (M/bm, N/bn,
+K/bk); each step streams one bm×bk panel of X and bk×bn panel of Y from HBM
+into VMEM via BlockSpec index maps and feeds the MXU with a bm×bn f32
+accumulation held in the revisited output block. Tile sizes default to
+128×128×128 — MXU-aligned, 192 KiB of VMEM at f32, far under the ~16 MiB
+budget, so the kernel is MXU-bound rather than memory-bound.
+
+CPU execution uses interpret=True (the Mosaic TPU custom-call cannot run on
+the CPU PJRT plugin); numerics are identical.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# MXU-aligned default tile.
+DEFAULT_TILE = 128
+
+
+def _matmul_kernel(x_ref, y_ref, o_ref):
+    """One grid step: o[i,j] (+)= x[i,k] @ y[k,j].
+
+    The output block is revisited along the K grid axis (its index_map
+    ignores k), so it doubles as the VMEM accumulator: initialized on the
+    first K step, accumulated in f32 on every step.
+    """
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], y_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def _pick_tile(dim: int, want: int) -> int:
+    """Largest divisor of `dim` that is <= want (prefers `want` itself)."""
+    t = min(want, dim)
+    while dim % t != 0:
+        t -= 1
+    return max(t, 1)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+def matmul(x, y, *, bm=DEFAULT_TILE, bn=DEFAULT_TILE, bk=DEFAULT_TILE, interpret=True):
+    """C = X @ Y through the Pallas kernel.
+
+    Shapes must tile evenly after `_pick_tile` clamping (all shapes do,
+    since _pick_tile falls back to divisors). dtype: f32 in/out.
+    """
+    m, k = x.shape
+    k2, n = y.shape
+    assert k == k2, f"matmul inner dim mismatch {x.shape} @ {y.shape}"
+    bm = _pick_tile(m, bm)
+    bn = _pick_tile(n, bn)
+    bk = _pick_tile(k, bk)
+    grid = (m // bm, n // bn, k // bk)
+    return pl.pallas_call(
+        _matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )(x, y)
+
+
+def vmem_bytes(bm=DEFAULT_TILE, bn=DEFAULT_TILE, bk=DEFAULT_TILE, dtype_bytes=4):
+    """VMEM footprint of one grid step (analysis helper for DESIGN.md)."""
+    return dtype_bytes * (bm * bk + bk * bn + bm * bn)

@@ -1,0 +1,19 @@
+"""Pure-jnp oracles for the Pallas kernels — the build-time correctness
+contract. pytest asserts kernel == ref across a hypothesis shape sweep."""
+
+import jax.numpy as jnp
+
+
+def matmul_ref(x, y):
+    """C = X @ Y."""
+    return jnp.dot(x, y, preferred_element_type=jnp.float32)
+
+
+def powiter_ref(a, b):
+    """One randomized-SVD subspace iteration: A @ (Aᵀ @ B)."""
+    return matmul_ref(a, matmul_ref(a.T, b))
+
+
+def score_ref(x, z):
+    """Serving scorer: Ŷ = X @ Z."""
+    return matmul_ref(x, z)

@@ -1,0 +1,69 @@
+"""Layer 2 — JAX entry points over the L1 Pallas kernel.
+
+Each entry point is a fixed-shape jitted function that the AOT path
+(`aot.py`) lowers once to HLO text. The rust runtime pads runtime operands
+to the nearest bucket, executes the compiled artifact through PJRT, and
+slices the result back. Python never runs after `make artifacts`.
+
+Entry points:
+  * matmul_MxKxN   — C = X·Y          (the GEMM hot path)
+  * powiter_MxNxR  — B' = A·(Aᵀ·B)    (randomized-SVD subspace iteration)
+  * score_BxNxL    — Ŷ = X·Z          (serving scorer, the request path)
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.matmul import matmul
+
+
+def matmul_entry(x, y):
+    """C = X @ Y via the Pallas kernel (1-tuple output for the AOT bridge)."""
+    return (matmul(x, y),)
+
+
+def powiter_entry(a, b):
+    """One subspace iteration B' = A @ (Aᵀ @ B), both GEMMs through the L1
+    kernel so they lower into a single fused HLO module."""
+    z = matmul(jnp.transpose(a), b)
+    return (matmul(a, z),)
+
+
+def score_entry(x, z):
+    """Batch scorer Ŷ = X @ Z for the serving path."""
+    return (matmul(x, z),)
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+# (kind, entry fn, operand shapes). Buckets cover the experiment sizes; the
+# rust dispatcher zero-pads to the smallest bucket that fits.
+ENTRY_POINTS = [
+    ("matmul", matmul_entry, ((128, 128), (128, 128))),
+    ("matmul", matmul_entry, ((256, 256), (256, 256))),
+    ("matmul", matmul_entry, ((512, 512), (512, 512))),
+    ("matmul", matmul_entry, ((1024, 256), (256, 256))),
+    ("powiter", powiter_entry, ((512, 256), (512, 64))),
+    ("score", score_entry, ((64, 512), (512, 256))),
+    ("score", score_entry, ((64, 2048), (2048, 512))),
+]
+
+
+def entry_name(kind, shapes):
+    """Stable artifact name, e.g. matmul_256x256x256 (M, K, N)."""
+    (s0, s1) = shapes
+    if kind == "matmul":
+        m, k = s0
+        _, n = s1
+        return f"matmul_{m}x{k}x{n}"
+    if kind == "powiter":
+        m, n = s0
+        _, r = s1
+        return f"powiter_{m}x{n}x{r}"
+    if kind == "score":
+        b, n = s0
+        _, l = s1
+        return f"score_{b}x{n}x{l}"
+    raise ValueError(kind)

@@ -1,0 +1,52 @@
+"""L2/AOT checks: entry points lower to valid HLO text, manifest naming is
+stable, shapes line up."""
+
+import jax
+import pytest
+
+from compile.aot import to_hlo_text
+from compile.model import ENTRY_POINTS, entry_name, f32, matmul_entry
+
+
+class TestEntryNaming:
+    def test_matmul_name(self):
+        assert entry_name("matmul", ((256, 128), (128, 64))) == "matmul_256x128x64"
+
+    def test_powiter_name(self):
+        assert entry_name("powiter", ((512, 256), (512, 64))) == "powiter_512x256x64"
+
+    def test_score_name(self):
+        assert entry_name("score", ((64, 512), (512, 256))) == "score_64x512x256"
+
+    def test_unknown_kind_raises(self):
+        with pytest.raises(ValueError):
+            entry_name("nope", ((1, 1), (1, 1)))
+
+    def test_all_entry_points_unique(self):
+        names = [entry_name(k, s) for k, _, s in ENTRY_POINTS]
+        assert len(names) == len(set(names))
+
+
+class TestLowering:
+    def test_matmul_lowers_to_hlo_text(self):
+        lowered = jax.jit(matmul_entry).lower(f32(128, 128), f32(128, 128))
+        text = to_hlo_text(lowered)
+        assert "HloModule" in text
+        # interpret-mode pallas must lower to plain HLO (no Mosaic custom-call)
+        assert "mosaic" not in text.lower()
+
+    def test_all_entries_lower(self):
+        for kind, fn, shapes in ENTRY_POINTS:
+            lowered = jax.jit(fn).lower(*[f32(*s) for s in shapes])
+            text = to_hlo_text(lowered)
+            assert "HloModule" in text, entry_name(kind, shapes)
+
+    def test_entry_shapes_consistent(self):
+        for kind, fn, shapes in ENTRY_POINTS:
+            (s0, s1) = shapes
+            if kind == "matmul":
+                assert s0[1] == s1[0]
+            elif kind == "powiter":
+                assert s0[0] == s1[0]  # A: MxN, B: MxR
+            elif kind == "score":
+                assert s0[1] == s1[0]

@@ -1,0 +1,117 @@
+"""L1 correctness: Pallas kernel vs pure-jnp oracle (the CORE build-time
+correctness signal), swept over shapes/tiles with hypothesis."""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels.matmul import matmul, vmem_bytes, _pick_tile
+from compile.kernels.ref import matmul_ref, powiter_ref, score_ref
+
+hypothesis.settings.register_profile(
+    "ci", deadline=None, max_examples=25, derandomize=True
+)
+hypothesis.settings.load_profile("ci")
+
+
+def rand(shape, seed):
+    return jax.random.normal(jax.random.PRNGKey(seed), shape, dtype=jnp.float32)
+
+
+class TestPickTile:
+    def test_exact_divisor(self):
+        assert _pick_tile(256, 128) == 128
+
+    def test_falls_back_to_divisor(self):
+        assert _pick_tile(100, 64) == 50
+
+    def test_small_dim(self):
+        assert _pick_tile(7, 128) == 7
+
+    def test_prime(self):
+        assert _pick_tile(13, 8) == 1
+
+
+class TestMatmulKernel:
+    @hypothesis.given(
+        m=st.integers(1, 80),
+        k=st.integers(1, 80),
+        n=st.integers(1, 80),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_matches_ref_arbitrary_shapes(self, m, k, n, seed):
+        x = rand((m, k), seed)
+        y = rand((k, n), seed + 1)
+        got = matmul(x, y, bm=32, bn=32, bk=32)
+        want = matmul_ref(x, y)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    @hypothesis.given(
+        bm=st.sampled_from([8, 16, 32, 64, 128]),
+        bn=st.sampled_from([8, 16, 32, 64, 128]),
+        bk=st.sampled_from([8, 16, 32, 64, 128]),
+    )
+    def test_tile_sweep_on_fixed_shape(self, bm, bn, bk):
+        x = rand((128, 128), 7)
+        y = rand((128, 128), 8)
+        got = matmul(x, y, bm=bm, bn=bn, bk=bk)
+        np.testing.assert_allclose(got, matmul_ref(x, y), rtol=1e-5, atol=1e-5)
+
+    def test_mxu_aligned_bucket(self):
+        x = rand((256, 256), 1)
+        y = rand((256, 256), 2)
+        np.testing.assert_allclose(
+            matmul(x, y), matmul_ref(x, y), rtol=1e-5, atol=1e-5
+        )
+
+    def test_rectangular_bucket(self):
+        x = rand((1024, 256), 3)
+        y = rand((256, 256), 4)
+        np.testing.assert_allclose(
+            matmul(x, y), matmul_ref(x, y), rtol=1e-5, atol=2e-5
+        )
+
+    def test_identity(self):
+        x = rand((64, 64), 5)
+        eye = jnp.eye(64, dtype=jnp.float32)
+        np.testing.assert_allclose(matmul(x, eye), x, rtol=1e-6, atol=1e-6)
+
+    def test_zeros(self):
+        x = rand((32, 16), 6)
+        z = jnp.zeros((16, 8), jnp.float32)
+        assert float(jnp.abs(matmul(x, z)).max()) == 0.0
+
+    def test_dtype_is_f32(self):
+        out = matmul(rand((16, 16), 0), rand((16, 16), 1))
+        assert out.dtype == jnp.float32
+
+
+class TestComposedEntries:
+    def test_powiter_matches_ref(self):
+        from compile.model import powiter_entry
+
+        a = rand((96, 48), 11)
+        b = rand((96, 8), 12)
+        (got,) = powiter_entry(a, b)
+        np.testing.assert_allclose(got, powiter_ref(a, b), rtol=1e-4, atol=1e-4)
+
+    def test_score_matches_ref(self):
+        from compile.model import score_entry
+
+        x = rand((16, 64), 13)
+        z = rand((64, 32), 14)
+        (got,) = score_entry(x, z)
+        np.testing.assert_allclose(got, score_ref(x, z), rtol=1e-5, atol=1e-5)
+
+
+class TestVmemBudget:
+    def test_default_tile_fits_vmem(self):
+        # 16 MiB VMEM budget on modern TPUs; default tile must fit with
+        # comfortable double-buffering headroom.
+        assert vmem_bytes() * 2 < 16 * 1024 * 1024
+
+    def test_footprint_formula(self):
+        assert vmem_bytes(128, 128, 128) == 4 * 3 * 128 * 128

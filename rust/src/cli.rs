@@ -1,0 +1,322 @@
+//! CLI dispatch — the leader entrypoint. One subcommand per experiment
+//! (DESIGN.md §6) plus operational commands.
+
+use crate::harness::{self, ablate, figures, scaling, sweep, table3};
+use crate::pinv::Method;
+use crate::util::args::Args;
+use crate::util::bench::Reporter;
+
+const USAGE: &str = "\
+fastpi — Fast PseudoInverse (Jung & Sael, 2020) reproduction
+
+USAGE: fastpi <command> [options]
+
+EXPERIMENTS (paper artifact regenerators):
+  table3     dataset statistics (Table 3)
+  fig1       degree distributions (Figure 1)
+  fig3       reordering progress + spy plot (Figure 3)
+  fig4       reconstruction error sweep (Figure 4)
+  fig5       multi-label P@k sweep (Figure 5)
+  fig6       running-time sweep (Figure 6)
+  scaling    empirical complexity fits (Table 2 / Lemma 1)
+  ablate     design-choice ablations
+
+OPERATIONS:
+  pinv       compute a pseudoinverse on a dataset and report stages
+  serve      start the scoring server on a trained model
+  datagen    generate + cache a dataset, print stats
+  selftest   quick end-to-end smoke test
+
+COMMON OPTIONS:
+  --datasets a,b     datasets (default amazon,rcv,eurlex,bibtex)
+  --dataset name     single dataset (fig1/fig3/pinv/serve)
+  --alphas 0.1,0.5   target rank ratios
+  --alpha 0.3        single ratio
+  --scale 0.1        dataset scale factor (1.0 = full Table 3 size)
+  --methods a,b      fastpi,randpi,krylovpi,frpca,dense
+  --seed 42          RNG seed
+  --threads N        worker threads
+";
+
+pub fn main() {
+    let args = Args::from_env();
+    if let Some(t) = args.get("threads") {
+        if let Ok(n) = t.parse::<usize>() {
+            crate::util::parallel::set_num_threads(n);
+        }
+    }
+    let cmd = args.positional().first().map(|s| s.as_str()).unwrap_or("help");
+    let result = match cmd {
+        "table3" => cmd_table3(&args),
+        "fig1" => cmd_fig1(&args),
+        "fig3" => cmd_fig3(&args),
+        "fig4" => cmd_sweep(&args, SweepKind::Fig4),
+        "fig5" => cmd_sweep(&args, SweepKind::Fig5),
+        "fig6" => cmd_sweep(&args, SweepKind::Fig6),
+        "scaling" => cmd_scaling(&args),
+        "ablate" => cmd_ablate(&args),
+        "pinv" => cmd_pinv(&args),
+        "serve" => cmd_serve(&args),
+        "datagen" => cmd_datagen(&args),
+        "selftest" => cmd_selftest(&args),
+        _ => {
+            print!("{USAGE}");
+            Ok(())
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn datasets_arg(args: &Args) -> Vec<String> {
+    args.parse_list(
+        "datasets",
+        &harness::DEFAULT_DATASETS.iter().map(|s| s.to_string()).collect::<Vec<_>>(),
+    )
+}
+
+fn methods_arg(args: &Args) -> Vec<Method> {
+    match args.get("methods") {
+        Some(spec) => spec
+            .split(',')
+            .filter(|s| !s.is_empty())
+            .map(|s| {
+                Method::from_name(s).unwrap_or_else(|| {
+                    eprintln!("unknown method `{s}`");
+                    std::process::exit(2)
+                })
+            })
+            .collect(),
+        None => Method::PAPER_SET.to_vec(),
+    }
+}
+
+fn cmd_table3(args: &Args) -> crate::error::Result<()> {
+    let rows = table3::table3(
+        &datasets_arg(args),
+        args.parse_or("scale", harness::DEFAULT_SCALE),
+        args.parse_or("seed", 42),
+    )?;
+    print!("{}", table3::render(&rows));
+    Ok(())
+}
+
+fn cmd_fig1(args: &Args) -> crate::error::Result<()> {
+    for ds in resolve_single_or_all(args) {
+        let f = figures::fig1(&ds, args.parse_or("scale", harness::DEFAULT_SCALE), args.parse_or("seed", 42))?;
+        print!("{}", figures::render_fig1(&f));
+    }
+    Ok(())
+}
+
+fn cmd_fig3(args: &Args) -> crate::error::Result<()> {
+    for ds in resolve_single_or_all(args) {
+        let f = figures::fig3(&ds, args.parse_or("scale", harness::DEFAULT_SCALE), args.parse_or("seed", 42))?;
+        print!("{}", figures::render_fig3(&f));
+    }
+    Ok(())
+}
+
+fn resolve_single_or_all(args: &Args) -> Vec<String> {
+    match args.get("dataset") {
+        Some(d) => vec![d.to_string()],
+        None => datasets_arg(args),
+    }
+}
+
+enum SweepKind {
+    Fig4,
+    Fig5,
+    Fig6,
+}
+
+fn cmd_sweep(args: &Args, kind: SweepKind) -> crate::error::Result<()> {
+    let cfg = sweep::SweepConfig {
+        datasets: datasets_arg(args),
+        alphas: args.parse_list("alphas", &harness::DEFAULT_ALPHAS),
+        methods: methods_arg(args),
+        scale: args.parse_or("scale", harness::DEFAULT_SCALE),
+        seed: args.parse_or("seed", 42),
+        reconstruction: matches!(kind, SweepKind::Fig4),
+        regression: matches!(kind, SweepKind::Fig5),
+    };
+    let name = match kind {
+        SweepKind::Fig4 => "fig4_reconstruction",
+        SweepKind::Fig5 => "fig5_accuracy",
+        SweepKind::Fig6 => "fig6_runtime",
+    };
+    let mut rep = Reporter::new(name);
+    sweep::run_sweep(&cfg, |r| {
+        let mut vals: Vec<(&str, f64)> = vec![("secs", r.svd_secs), ("rank", r.rank as f64)];
+        if let Some(e) = r.recon_error {
+            vals.push(("recon_err", e));
+        }
+        if let Some(p) = r.p_at_1 {
+            vals.push(("p@1", p));
+        }
+        if let Some(p) = r.p_at_3 {
+            vals.push(("p@3", p));
+        }
+        if let Some(p) = r.p_at_5 {
+            vals.push(("p@5", p));
+        }
+        rep.add(
+            &[
+                ("dataset", r.dataset.clone()),
+                ("method", r.method.to_string()),
+                ("alpha", format!("{}", r.alpha)),
+            ],
+            &vals,
+        );
+    })?;
+    rep.finish();
+    Ok(())
+}
+
+fn cmd_scaling(args: &Args) -> crate::error::Result<()> {
+    let seed = args.parse_or("seed", 42);
+    let ms = args.parse_list("ms", &[500usize, 1000, 2000, 4000]);
+    let pm = scaling::sweep_m(&ms, 200, 0.3, seed)?;
+    let mut rep = Reporter::new("table2_scaling");
+    for p in &pm {
+        rep.add(&[("axis", p.axis.into()), ("value", p.value.to_string())], &[("secs", p.secs)]);
+    }
+    println!("slope time~m^a: a = {:.2} (Lemma 1 predicts ≈1)", scaling::loglog_slope(&pm));
+    let alphas = args.parse_list("alphas", &[0.1, 0.2, 0.4, 0.8]);
+    let pa = scaling::sweep_alpha(&alphas, 2000, 400, seed)?;
+    for p in &pa {
+        rep.add(&[("axis", p.axis.into()), ("value", p.value.to_string())], &[("secs", p.secs)]);
+    }
+    println!("slope time~r^b: b = {:.2} (Lemma 1 predicts ≈2)", scaling::loglog_slope(&pa));
+    rep.finish();
+    Ok(())
+}
+
+fn cmd_ablate(args: &Args) -> crate::error::Result<()> {
+    let scale = args.parse_or("scale", harness::DEFAULT_SCALE);
+    let seed = args.parse_or("seed", 42);
+    let alpha = args.parse_or("alpha", 0.3);
+    let ds = args.str_or("dataset", "bibtex");
+    let mut rep = Reporter::new("ablation");
+
+    let (fs, ss, fe, se) = ablate::ablate_reorder(&ds, scale, alpha, seed)?;
+    rep.add(&[("ablation", "reorder_on".into())], &[("secs", fs), ("err", fe)]);
+    rep.add(&[("ablation", "reorder_off".into())], &[("secs", ss), ("err", se)]);
+
+    let (bs, ms, be, me) = ablate::ablate_block_svd(&ds, scale, alpha, seed)?;
+    rep.add(&[("ablation", "block_svd".into())], &[("secs", bs), ("err", be)]);
+    rep.add(&[("ablation", "monolithic_a11".into())], &[("secs", ms), ("err", me)]);
+
+    for (k, secs, m2, n2, blocks, iters) in
+        ablate::ablate_hub_ratio(&ds, scale, alpha, &[0.005, 0.01, 0.02, 0.05, 0.1], seed)?
+    {
+        rep.add(
+            &[("ablation", format!("hub_k={k}"))],
+            &[
+                ("secs", secs),
+                ("m2", m2 as f64),
+                ("n2", n2 as f64),
+                ("blocks", blocks as f64),
+                ("iters", iters as f64),
+            ],
+        );
+    }
+
+    for (name, secs, err) in ablate::ablate_inner_engine(&ds, scale, alpha, seed)? {
+        rep.add(&[("ablation", format!("inner_{name}"))], &[("secs", secs), ("err", err)]);
+    }
+    rep.finish();
+    Ok(())
+}
+
+fn cmd_pinv(args: &Args) -> crate::error::Result<()> {
+    use crate::coordinator::{PinvJob, PipelineCoordinator};
+    let ds = args.str_or("dataset", "bibtex");
+    let method = Method::from_name(&args.str_or("method", "fastpi"))
+        .unwrap_or(Method::FastPi);
+    let job = PinvJob {
+        method,
+        alpha: args.parse_or("alpha", 0.3),
+        k: args.parse_or("k", 0.01),
+        seed: args.parse_or("seed", 42),
+    };
+    let coord = PipelineCoordinator::new();
+    let report =
+        coord.run_on_dataset(&ds, args.parse_or("scale", harness::DEFAULT_SCALE), &job)?;
+    println!(
+        "{} on {ds}: rank={} secs={:.3}\nstages:\n{}",
+        report.method,
+        report.rank,
+        report.svd_secs,
+        report.stages.render()
+    );
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> crate::error::Result<()> {
+    use crate::coordinator::{PinvJob, PipelineCoordinator, ScoreServer, ServerConfig};
+    use crate::data::load_dataset;
+    use crate::regress::MultiLabelModel;
+    let name = args.str_or("dataset", "bibtex");
+    let scale = args.parse_or("scale", harness::DEFAULT_SCALE);
+    let seed = args.parse_or("seed", 42);
+    let ds = load_dataset(&name, scale, seed, None)?;
+    let job = PinvJob {
+        method: Method::FastPi,
+        alpha: args.parse_or("alpha", 0.5),
+        k: ds.k,
+        seed,
+    };
+    println!("computing pseudoinverse for {name} (scale {scale})...");
+    let report = PipelineCoordinator::new().run(&ds.a, &job)?;
+    let (model, _) = MultiLabelModel::train(&report.pinv, &ds.y);
+    let server = ScoreServer::start(model, ServerConfig::default())
+        .map_err(crate::error::Error::Io)?;
+    println!("scoring server on {} — protocol: SCORE <topk> j:v,...  (Ctrl-C to stop)", server.addr);
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+fn cmd_datagen(args: &Args) -> crate::error::Result<()> {
+    use crate::data::load_dataset;
+    for name in datasets_arg(args) {
+        let ds = load_dataset(
+            &name,
+            args.parse_or("scale", harness::DEFAULT_SCALE),
+            args.parse_or("seed", 42),
+            None,
+        )?;
+        let (m, n, l, nnz, spa, spy) = ds.stats();
+        println!("{name}: m={m} n={n} L={l} |A|={nnz} sp(A)={spa:.4} sp(Y)={spy:.4}");
+    }
+    Ok(())
+}
+
+fn cmd_selftest(args: &Args) -> crate::error::Result<()> {
+    use crate::coordinator::{PinvJob, PipelineCoordinator};
+    let coord = PipelineCoordinator::new();
+    let scale = args.parse_or("scale", 0.05);
+    for method in Method::PAPER_SET {
+        let job = PinvJob { method, alpha: 0.3, k: 0.01, seed: 1 };
+        let r = coord.run_on_dataset("bibtex", scale, &job)?;
+        println!("{:<9} rank={} secs={:.3}", r.method, r.rank, r.svd_secs);
+    }
+    // artifact runtime smoke
+    match crate::runtime::global_executor() {
+        Some(_) => {
+            let d = crate::runtime::GemmDispatcher::new(crate::runtime::ExecMode::ArtifactOnly);
+            let mut rng = crate::util::rng::Rng::seed_from_u64(0);
+            let a = crate::dense::Matrix::randn(100, 100, &mut rng);
+            let b = crate::dense::Matrix::randn(100, 100, &mut rng);
+            let c1 = d.matmul(&a, &b);
+            let c2 = crate::dense::matmul(&a, &b);
+            println!("artifact gemm max diff vs native: {:.2e}", c1.max_abs_diff(&c2));
+        }
+        None => println!("artifacts not built — runtime path skipped (run `make artifacts`)"),
+    }
+    println!("selftest OK");
+    Ok(())
+}

@@ -1,0 +1,9 @@
+//! Layer-3 coordination: the pipeline orchestrator that runs pseudoinverse
+//! jobs end-to-end, and the scoring server that serves the trained
+//! multi-label model over TCP with dynamic batching.
+
+pub mod pipeline;
+pub mod serve;
+
+pub use pipeline::{PinvJob, PinvReport, PipelineCoordinator};
+pub use serve::{score_request, ScoreServer, ServerConfig, ServerStats};

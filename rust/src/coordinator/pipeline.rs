@@ -1,0 +1,191 @@
+//! Pipeline coordinator — owns the end-to-end execution of pseudoinverse
+//! jobs: dataset loading, method dispatch (FastPI or any baseline), stage
+//! timing, model training, and evaluation. The experiment harnesses and the
+//! serving path both sit on top of this.
+
+use crate::data::{load_dataset, Dataset};
+use crate::error::Result;
+use crate::pinv::{fastpi_svd, low_rank_svd, FastPiConfig, Method, Pinv};
+use crate::regress::{ndcg_at_k, precision_at_k, train_test_split, MultiLabelModel, Split};
+use crate::sparse::Csr;
+use crate::util::rng::Rng;
+use crate::util::timer::StageTimes;
+
+/// A pseudoinverse job description.
+#[derive(Debug, Clone)]
+pub struct PinvJob {
+    pub method: Method,
+    /// target rank ratio α ∈ (0,1]
+    pub alpha: f64,
+    /// hub ratio for FastPI's reordering
+    pub k: f64,
+    pub seed: u64,
+}
+
+impl Default for PinvJob {
+    fn default() -> Self {
+        PinvJob { method: Method::FastPi, alpha: 0.3, k: 0.01, seed: 42 }
+    }
+}
+
+/// What a job run produced.
+#[derive(Debug)]
+pub struct PinvReport {
+    pub method: &'static str,
+    pub alpha: f64,
+    pub rank: usize,
+    /// wall-clock of the SVD computation (the Figure-6 metric)
+    pub svd_secs: f64,
+    /// ‖A − UΣVᵀ‖_F (the Figure-4 metric)
+    pub reconstruction_error: Option<f64>,
+    pub stages: StageTimes,
+    /// the low-rank factorization itself (for reconstruction-error metrics)
+    pub svd: crate::dense::Svd,
+    pub pinv: Pinv,
+}
+
+/// The coordinator. Stateless between jobs apart from configuration.
+#[derive(Debug, Default)]
+pub struct PipelineCoordinator {
+    /// compute ‖A−UΣVᵀ‖_F after each job (densifies A — skip at scale)
+    pub compute_reconstruction: bool,
+}
+
+impl PipelineCoordinator {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Run one pseudoinverse job on a feature matrix.
+    pub fn run(&self, a: &Csr, job: &PinvJob) -> Result<PinvReport> {
+        let (svd, secs, stages) = match job.method {
+            Method::FastPi => {
+                let cfg = FastPiConfig { alpha: job.alpha, k: job.k, ..Default::default() };
+                let mut rng = Rng::seed_from_u64(job.seed);
+                let t = std::time::Instant::now();
+                let out = fastpi_svd(a, &cfg, &mut rng)?;
+                (out.svd, t.elapsed().as_secs_f64(), out.times)
+            }
+            m => {
+                let (svd, secs) = low_rank_svd(m, a, job.alpha, job.seed)?;
+                let mut st = StageTimes::new();
+                st.add("svd", std::time::Duration::from_secs_f64(secs));
+                (svd, secs, st)
+            }
+        };
+        let reconstruction_error = if self.compute_reconstruction {
+            Some(svd.reconstruction_error(&a.to_dense()))
+        } else {
+            None
+        };
+        Ok(PinvReport {
+            method: job.method.name(),
+            alpha: job.alpha,
+            rank: svd.rank(),
+            svd_secs: secs,
+            reconstruction_error,
+            stages,
+            pinv: Pinv::from_svd(&svd),
+            svd,
+        })
+    }
+
+    /// Full Application-1 evaluation: split, compute pinv on the train
+    /// matrix, train Z = A†Y, score the test split. Returns
+    /// (report, P@1, P@3, P@5, nDCG@5).
+    pub fn run_regression(
+        &self,
+        dataset: &Dataset,
+        job: &PinvJob,
+        test_fraction: f64,
+    ) -> Result<(PinvReport, RegressionMetrics)> {
+        let mut rng = Rng::seed_from_u64(job.seed ^ 0x5117);
+        let split: Split = train_test_split(&dataset.a, &dataset.y, test_fraction, &mut rng);
+        let report = self.run(&split.a_train, job)?;
+        let (model, _train_report) = MultiLabelModel::train(&report.pinv, &split.y_train);
+        let scores = model.predict(&split.a_test);
+        let metrics = RegressionMetrics {
+            p_at_1: precision_at_k(&scores, &split.y_test, 1),
+            p_at_3: precision_at_k(&scores, &split.y_test, 3),
+            p_at_5: precision_at_k(&scores, &split.y_test, 5),
+            ndcg_at_5: ndcg_at_k(&scores, &split.y_test, 5),
+            test_rows: split.a_test.rows(),
+        };
+        Ok((report, metrics))
+    }
+
+    /// Convenience: load a registry dataset and run a job on it.
+    pub fn run_on_dataset(&self, name: &str, scale: f64, job: &PinvJob) -> Result<PinvReport> {
+        let ds = load_dataset(name, scale, job.seed, None)?;
+        self.run(&ds.a, job)
+    }
+}
+
+/// Figure-5 style metrics.
+#[derive(Debug, Clone)]
+pub struct RegressionMetrics {
+    pub p_at_1: f64,
+    pub p_at_3: f64,
+    pub p_at_5: f64,
+    pub ndcg_at_5: f64,
+    pub test_rows: usize,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{generate, SynthConfig};
+
+    fn small_dataset() -> Dataset {
+        let cfg = SynthConfig { m: 300, n: 60, labels: 25, nnz: 2200, ..Default::default() };
+        let mut rng = Rng::seed_from_u64(5);
+        let (a, y) = generate(&cfg, &mut rng);
+        Dataset { name: "unit".into(), scale: 1.0, a, y, k: 0.05 }
+    }
+
+    #[test]
+    fn run_all_methods() {
+        let ds = small_dataset();
+        let mut coord = PipelineCoordinator::new();
+        coord.compute_reconstruction = true;
+        let mut errors = Vec::new();
+        for method in Method::PAPER_SET {
+            let job = PinvJob { method, alpha: 0.4, k: 0.05, seed: 1 };
+            let r = coord.run(&ds.a, &job).unwrap();
+            assert_eq!(r.rank, (0.4f64 * 60.0).ceil() as usize);
+            assert!(r.svd_secs > 0.0);
+            errors.push((r.method, r.reconstruction_error.unwrap()));
+        }
+        // every method should land in the same error ballpark (Figure 4)
+        let errs: Vec<f64> = errors.iter().map(|(_, e)| *e).collect();
+        let min = errs.iter().cloned().fold(f64::INFINITY, f64::min);
+        let max = errs.iter().cloned().fold(0.0, f64::max);
+        assert!(max < min * 1.5 + 1e-9, "method errors diverge: {errors:?}");
+    }
+
+    #[test]
+    fn regression_end_to_end_beats_chance() {
+        let ds = small_dataset();
+        let coord = PipelineCoordinator::new();
+        let job = PinvJob { method: Method::FastPi, alpha: 0.6, k: 0.05, seed: 2 };
+        let (_r, m) = coord.run_regression(&ds, &job, 0.1).unwrap();
+        assert!(m.test_rows > 0);
+        // chance P@1 ≈ avg positives / labels ≈ 2.5/25 = 0.1
+        assert!(m.p_at_1 > 0.2, "P@1 {} barely above chance", m.p_at_1);
+        assert!(m.p_at_3 <= 1.0 && m.p_at_1 <= 1.0);
+        assert!(m.ndcg_at_5 > 0.0);
+    }
+
+    #[test]
+    fn deterministic_reports() {
+        let ds = small_dataset();
+        let coord = PipelineCoordinator::new();
+        let job = PinvJob { method: Method::FastPi, alpha: 0.3, k: 0.05, seed: 9 };
+        let r1 = coord.run(&ds.a, &job).unwrap();
+        let r2 = coord.run(&ds.a, &job).unwrap();
+        assert_eq!(r1.rank, r2.rank);
+        let d1 = r1.pinv.to_dense();
+        let d2 = r2.pinv.to_dense();
+        assert_eq!(d1.max_abs_diff(&d2), 0.0, "pinv must be bit-deterministic");
+    }
+}

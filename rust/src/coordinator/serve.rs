@@ -1,0 +1,467 @@
+//! Scoring server — the request path.
+//!
+//! Serves `ŷ = Zᵀa` queries for a trained multi-label model over TCP with
+//! *dynamic batching*: request threads enqueue parsed feature vectors into a
+//! bounded queue (backpressure: `ERR overloaded` when full); a single
+//! batcher thread drains up to `max_batch` requests (waiting at most
+//! `max_wait` for stragglers), scores them in one sparse×dense GEMM, and
+//! fans the top-k results back out. Pure rust end to end — python never
+//! runs here.
+//!
+//! Protocol (line-oriented text):
+//! ```text
+//! -> SCORE <topk> j1:v1,j2:v2,...
+//! <- OK label:score,label:score,...
+//! -> PING            <- PONG
+//! -> STATS           <- STATS served=... batches=... avg_batch=...
+//! -> QUIT            (closes the connection)
+//! ```
+
+use crate::regress::metrics::top_k_indices;
+use crate::regress::MultiLabelModel;
+use crate::sparse::{Coo, Csr};
+use std::collections::VecDeque;
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+/// Server tuning knobs.
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    pub max_batch: usize,
+    pub max_wait: Duration,
+    pub queue_capacity: usize,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            max_batch: 64,
+            max_wait: Duration::from_millis(2),
+            queue_capacity: 1024,
+        }
+    }
+}
+
+/// Live counters.
+#[derive(Debug, Default)]
+pub struct ServerStats {
+    pub served: AtomicUsize,
+    pub batches: AtomicUsize,
+    pub rejected: AtomicUsize,
+}
+
+impl ServerStats {
+    pub fn avg_batch(&self) -> f64 {
+        let b = self.batches.load(Ordering::Relaxed);
+        if b == 0 {
+            0.0
+        } else {
+            self.served.load(Ordering::Relaxed) as f64 / b as f64
+        }
+    }
+}
+
+/// One queued request.
+struct Pending {
+    indices: Vec<usize>,
+    values: Vec<f64>,
+    topk: usize,
+    reply: std::sync::mpsc::Sender<Vec<(usize, f64)>>,
+}
+
+struct Queue {
+    deque: Mutex<VecDeque<Pending>>,
+    cv: Condvar,
+    capacity: usize,
+}
+
+/// A running scoring server; dropping does NOT stop it — call `shutdown`.
+pub struct ScoreServer {
+    pub addr: std::net::SocketAddr,
+    pub stats: Arc<ServerStats>,
+    stop: Arc<AtomicBool>,
+    accept_handle: Option<std::thread::JoinHandle<()>>,
+    batch_handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl ScoreServer {
+    /// Start serving `model` on 127.0.0.1 (ephemeral port).
+    pub fn start(model: MultiLabelModel, cfg: ServerConfig) -> std::io::Result<ScoreServer> {
+        let listener = TcpListener::bind("127.0.0.1:0")?;
+        let addr = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stats = Arc::new(ServerStats::default());
+        let queue = Arc::new(Queue {
+            deque: Mutex::new(VecDeque::new()),
+            cv: Condvar::new(),
+            capacity: cfg.queue_capacity,
+        });
+
+        // batcher thread
+        let b_queue = queue.clone();
+        let b_stop = stop.clone();
+        let b_stats = stats.clone();
+        let b_cfg = cfg.clone();
+        let batch_handle = std::thread::Builder::new()
+            .name("score-batcher".into())
+            .spawn(move || batcher_loop(model, b_queue, b_stop, b_stats, b_cfg))?;
+
+        // accept loop
+        let a_stop = stop.clone();
+        let a_stats = stats.clone();
+        let a_queue = queue.clone();
+        let accept_handle = std::thread::Builder::new().name("score-accept".into()).spawn(
+            move || {
+                let mut conns: Vec<std::thread::JoinHandle<()>> = Vec::new();
+                while !a_stop.load(Ordering::Relaxed) {
+                    match listener.accept() {
+                        Ok((stream, _)) => {
+                            let q = a_queue.clone();
+                            let st = a_stats.clone();
+                            let stop2 = a_stop.clone();
+                            conns.push(std::thread::spawn(move || {
+                                let _ = handle_conn(stream, q, st, stop2);
+                            }));
+                        }
+                        Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            std::thread::sleep(Duration::from_millis(1));
+                        }
+                        Err(_) => break,
+                    }
+                }
+                for c in conns {
+                    let _ = c.join();
+                }
+            },
+        )?;
+
+        Ok(ScoreServer {
+            addr,
+            stats,
+            stop,
+            accept_handle: Some(accept_handle),
+            batch_handle: Some(batch_handle),
+        })
+    }
+
+    /// Stop the server and join its threads.
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        // wake the batcher
+        if let Some(h) = self.batch_handle.take() {
+            let _ = h.join();
+        }
+        if let Some(h) = self.accept_handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn batcher_loop(
+    model: MultiLabelModel,
+    queue: Arc<Queue>,
+    stop: Arc<AtomicBool>,
+    stats: Arc<ServerStats>,
+    cfg: ServerConfig,
+) {
+    let n_features = model.z.rows();
+    while !stop.load(Ordering::Relaxed) {
+        // collect a batch
+        let mut batch: Vec<Pending> = Vec::new();
+        {
+            let mut dq = queue.deque.lock().unwrap();
+            // wait for the first request
+            while dq.is_empty() && !stop.load(Ordering::Relaxed) {
+                let (guard, _timeout) =
+                    queue.cv.wait_timeout(dq, Duration::from_millis(20)).unwrap();
+                dq = guard;
+            }
+            if stop.load(Ordering::Relaxed) {
+                return;
+            }
+            // drain what's there (up to max_batch)
+            while batch.len() < cfg.max_batch {
+                match dq.pop_front() {
+                    Some(p) => batch.push(p),
+                    None => break,
+                }
+            }
+        }
+        // brief straggler wait if underfull
+        if batch.len() < cfg.max_batch && !cfg.max_wait.is_zero() {
+            std::thread::sleep(cfg.max_wait);
+            let mut dq = queue.deque.lock().unwrap();
+            while batch.len() < cfg.max_batch {
+                match dq.pop_front() {
+                    Some(p) => batch.push(p),
+                    None => break,
+                }
+            }
+        }
+        if batch.is_empty() {
+            continue;
+        }
+
+        // batch the sparse feature rows and score in one GEMM
+        let mut coo = Coo::new(batch.len(), n_features);
+        for (i, p) in batch.iter().enumerate() {
+            for (&j, &v) in p.indices.iter().zip(&p.values) {
+                if j < n_features {
+                    coo.push(i, j, v);
+                }
+            }
+        }
+        let a = Csr::from_coo(&coo);
+        let scores = model.predict(&a);
+
+        stats.batches.fetch_add(1, Ordering::Relaxed);
+        stats.served.fetch_add(batch.len(), Ordering::Relaxed);
+        for (i, p) in batch.into_iter().enumerate() {
+            let row = scores.row(i);
+            let top = top_k_indices(row, p.topk);
+            let out: Vec<(usize, f64)> = top.into_iter().map(|l| (l, row[l])).collect();
+            let _ = p.reply.send(out);
+        }
+    }
+}
+
+fn handle_conn(
+    stream: TcpStream,
+    queue: Arc<Queue>,
+    stats: Arc<ServerStats>,
+    stop: Arc<AtomicBool>,
+) -> std::io::Result<()> {
+    stream.set_read_timeout(Some(Duration::from_millis(200)))?;
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut writer = BufWriter::new(stream);
+    let mut line = String::new();
+    loop {
+        line.clear();
+        match reader.read_line(&mut line) {
+            Ok(0) => return Ok(()), // eof
+            Ok(_) => {}
+            Err(ref e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                if stop.load(Ordering::Relaxed) {
+                    return Ok(());
+                }
+                continue;
+            }
+            Err(e) => return Err(e),
+        }
+        let msg = line.trim();
+        if msg.is_empty() {
+            continue;
+        }
+        if msg == "QUIT" {
+            return Ok(());
+        }
+        if msg == "PING" {
+            writeln!(writer, "PONG")?;
+            writer.flush()?;
+            continue;
+        }
+        if msg == "STATS" {
+            writeln!(
+                writer,
+                "STATS served={} batches={} rejected={} avg_batch={:.2}",
+                stats.served.load(Ordering::Relaxed),
+                stats.batches.load(Ordering::Relaxed),
+                stats.rejected.load(Ordering::Relaxed),
+                stats.avg_batch(),
+            )?;
+            writer.flush()?;
+            continue;
+        }
+        match parse_score(msg) {
+            Some((topk, indices, values)) => {
+                let (tx, rx) = std::sync::mpsc::channel();
+                let accepted = {
+                    let mut dq = queue.deque.lock().unwrap();
+                    if dq.len() >= queue.capacity {
+                        false
+                    } else {
+                        dq.push_back(Pending { indices, values, topk, reply: tx });
+                        true
+                    }
+                };
+                if !accepted {
+                    stats.rejected.fetch_add(1, Ordering::Relaxed);
+                    writeln!(writer, "ERR overloaded")?;
+                    writer.flush()?;
+                    continue;
+                }
+                queue.cv.notify_one();
+                match rx.recv_timeout(Duration::from_secs(30)) {
+                    Ok(result) => {
+                        let body: Vec<String> =
+                            result.iter().map(|(l, s)| format!("{l}:{s:.6}")).collect();
+                        writeln!(writer, "OK {}", body.join(","))?;
+                    }
+                    Err(_) => writeln!(writer, "ERR timeout")?,
+                }
+                writer.flush()?;
+            }
+            None => {
+                writeln!(writer, "ERR bad request")?;
+                writer.flush()?;
+            }
+        }
+    }
+}
+
+/// Parse `SCORE <topk> j:v,j:v,...` (feature list may be empty).
+fn parse_score(msg: &str) -> Option<(usize, Vec<usize>, Vec<f64>)> {
+    let rest = msg.strip_prefix("SCORE ")?;
+    let mut parts = rest.splitn(2, ' ');
+    let topk: usize = parts.next()?.parse().ok()?;
+    if topk == 0 {
+        return None;
+    }
+    let mut indices = Vec::new();
+    let mut values = Vec::new();
+    if let Some(feats) = parts.next() {
+        for tok in feats.split(',').filter(|t| !t.is_empty()) {
+            let (j, v) = tok.split_once(':')?;
+            indices.push(j.parse().ok()?);
+            values.push(v.parse().ok()?);
+        }
+    }
+    Some((topk, indices, values))
+}
+
+/// Blocking client helper: one SCORE round-trip.
+pub fn score_request(
+    addr: std::net::SocketAddr,
+    features: &[(usize, f64)],
+    topk: usize,
+) -> std::io::Result<Vec<(usize, f64)>> {
+    let stream = TcpStream::connect(addr)?;
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut writer = BufWriter::new(stream);
+    let body: Vec<String> = features.iter().map(|(j, v)| format!("{j}:{v}")).collect();
+    writeln!(writer, "SCORE {} {}", topk, body.join(","))?;
+    writer.flush()?;
+    let mut line = String::new();
+    reader.read_line(&mut line)?;
+    let line = line.trim();
+    let rest = line.strip_prefix("OK ").ok_or_else(|| {
+        std::io::Error::new(std::io::ErrorKind::InvalidData, format!("server said: {line}"))
+    })?;
+    let mut out = Vec::new();
+    for tok in rest.split(',').filter(|t| !t.is_empty()) {
+        let (l, s) = tok.split_once(':').ok_or_else(|| {
+            std::io::Error::new(std::io::ErrorKind::InvalidData, "bad score token")
+        })?;
+        out.push((
+            l.parse().map_err(|_| std::io::Error::new(std::io::ErrorKind::InvalidData, "label"))?,
+            s.parse().map_err(|_| std::io::Error::new(std::io::ErrorKind::InvalidData, "score"))?,
+        ));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dense::Matrix;
+    use crate::util::rng::Rng;
+
+    fn model(n: usize, l: usize) -> MultiLabelModel {
+        let mut rng = Rng::seed_from_u64(1);
+        MultiLabelModel { z: Matrix::randn(n, l, &mut rng) }
+    }
+
+    #[test]
+    fn parse_score_lines() {
+        let (k, idx, vals) = parse_score("SCORE 3 1:0.5,7:2.0").unwrap();
+        assert_eq!(k, 3);
+        assert_eq!(idx, vec![1, 7]);
+        assert_eq!(vals, vec![0.5, 2.0]);
+        assert!(parse_score("SCORE 0 1:1").is_none());
+        assert!(parse_score("NOPE").is_none());
+        assert!(parse_score("SCORE x 1:1").is_none());
+        // empty feature list is legal
+        let (k, idx, _) = parse_score("SCORE 2 ").unwrap();
+        assert_eq!(k, 2);
+        assert!(idx.is_empty());
+    }
+
+    #[test]
+    fn end_to_end_scoring() {
+        let m = model(20, 10);
+        let z = m.z.clone();
+        let server = ScoreServer::start(m, ServerConfig::default()).unwrap();
+        let addr = server.addr;
+
+        // expected: score = sum_j v_j * z[j, :]
+        let feats = vec![(2usize, 1.5f64), (11, -0.5)];
+        let got = score_request(addr, &feats, 3).unwrap();
+        assert_eq!(got.len(), 3);
+        let mut expect = vec![0.0f64; 10];
+        for &(j, v) in &feats {
+            for c in 0..10 {
+                expect[c] += v * z[(j, c)];
+            }
+        }
+        let top = top_k_indices(&expect, 3);
+        assert_eq!(got[0].0, top[0]);
+        assert!((got[0].1 - expect[top[0]]).abs() < 1e-5);
+
+        server.shutdown();
+    }
+
+    #[test]
+    fn concurrent_clients_batch() {
+        let m = model(30, 12);
+        let cfg = ServerConfig { max_batch: 8, max_wait: Duration::from_millis(5), queue_capacity: 64 };
+        let server = ScoreServer::start(m, cfg).unwrap();
+        let addr = server.addr;
+
+        std::thread::scope(|s| {
+            for t in 0..16 {
+                s.spawn(move || {
+                    let feats = vec![(t % 30, 1.0)];
+                    let got = score_request(addr, &feats, 2).unwrap();
+                    assert_eq!(got.len(), 2);
+                });
+            }
+        });
+        let served = server.stats.served.load(Ordering::Relaxed);
+        let batches = server.stats.batches.load(Ordering::Relaxed);
+        assert_eq!(served, 16);
+        assert!(batches <= 16);
+        server.shutdown();
+    }
+
+    #[test]
+    fn ping_and_stats() {
+        let m = model(5, 4);
+        let server = ScoreServer::start(m, ServerConfig::default()).unwrap();
+        let stream = TcpStream::connect(server.addr).unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        let mut writer = BufWriter::new(stream);
+        writeln!(writer, "PING").unwrap();
+        writer.flush().unwrap();
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        assert_eq!(line.trim(), "PONG");
+        writeln!(writer, "STATS").unwrap();
+        writer.flush().unwrap();
+        line.clear();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.starts_with("STATS served="), "{line}");
+        writeln!(writer, "garbage").unwrap();
+        writer.flush().unwrap();
+        line.clear();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.starts_with("ERR"), "{line}");
+        server.shutdown();
+    }
+}

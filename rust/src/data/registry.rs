@@ -1,0 +1,163 @@
+//! Registry of the paper's four evaluation datasets (Table 3), with a scale
+//! knob and a binary on-disk cache.
+
+use super::synth::{generate, SynthConfig};
+use crate::error::Result;
+use crate::sparse::{io as sio, Csr};
+use crate::util::rng::Rng;
+use std::path::{Path, PathBuf};
+
+/// Specification matching a Table-3 row.
+#[derive(Debug, Clone)]
+pub struct DatasetSpec {
+    pub name: &'static str,
+    pub m: usize,
+    pub n: usize,
+    pub labels: usize,
+    pub nnz: usize,
+    /// hub selection ratio the paper used for this dataset
+    pub k: f64,
+}
+
+/// The four paper datasets (Table 3).
+pub const PAPER_DATASETS: [DatasetSpec; 4] = [
+    DatasetSpec { name: "amazon", m: 59_312, n: 10_195, labels: 13_330, nnz: 167_015, k: 0.01 },
+    DatasetSpec { name: "rcv", m: 62_385, n: 4_724, labels: 2_456, nnz: 466_675, k: 0.01 },
+    DatasetSpec { name: "eurlex", m: 15_539, n: 5_000, labels: 3_993, nnz: 3_684_773, k: 0.01 },
+    DatasetSpec { name: "bibtex", m: 7_395, n: 1_836, labels: 159, nnz: 507_746, k: 0.01 },
+];
+
+impl DatasetSpec {
+    pub fn by_name(name: &str) -> Option<&'static DatasetSpec> {
+        PAPER_DATASETS.iter().find(|d| d.name == name)
+    }
+
+    /// Scaled-down spec: dimensions scale by `f`, nnz by `f^1.5` — a
+    /// compromise between preserving density (f²) and preserving average
+    /// degree (f), keeping the matrix both sparse and connected enough to
+    /// exercise the reordering (DESIGN.md §5).
+    pub fn scaled(&self, f: f64) -> SynthConfig {
+        assert!(f > 0.0 && f <= 1.0);
+        let scale_dim = |x: usize| ((x as f64 * f).ceil() as usize).max(4);
+        let m = scale_dim(self.m);
+        let n = scale_dim(self.n);
+        let labels = scale_dim(self.labels).max(8);
+        let nnz = ((self.nnz as f64 * f.powf(1.5)).ceil() as usize).min(m * n / 2).max(m);
+        SynthConfig { m, n, labels, nnz, ..Default::default() }
+    }
+}
+
+/// A materialized dataset.
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    pub name: String,
+    pub scale: f64,
+    pub a: Csr,
+    pub y: Csr,
+    pub k: f64,
+}
+
+impl Dataset {
+    /// Table-3 style statistics row: (m, n, L, |A|, sp(A), sp(Y)).
+    pub fn stats(&self) -> (usize, usize, usize, usize, f64, f64) {
+        (
+            self.a.rows(),
+            self.a.cols(),
+            self.y.cols(),
+            self.a.nnz(),
+            self.a.sparsity(),
+            self.y.sparsity(),
+        )
+    }
+}
+
+/// Default cache directory.
+pub fn default_cache_dir() -> PathBuf {
+    PathBuf::from("target/datasets")
+}
+
+/// Load (or generate + cache) a paper dataset at the given scale and seed.
+pub fn load_dataset(name: &str, scale: f64, seed: u64, cache: Option<&Path>) -> Result<Dataset> {
+    let spec = DatasetSpec::by_name(name)
+        .ok_or_else(|| crate::error::Error::Invalid(format!("unknown dataset `{name}`")))?;
+    let cache_dir = cache.map(|p| p.to_path_buf()).unwrap_or_else(default_cache_dir);
+    let stem = format!("{name}_s{scale}_seed{seed}");
+    let a_path = cache_dir.join(format!("{stem}.a.fpi"));
+    let y_path = cache_dir.join(format!("{stem}.y.fpi"));
+
+    if a_path.exists() && y_path.exists() {
+        if let (Ok(a), Ok(y)) = (sio::read_binary(&a_path), sio::read_binary(&y_path)) {
+            return Ok(Dataset { name: name.to_string(), scale, a, y, k: spec.k });
+        }
+    }
+
+    let cfg = spec.scaled(scale);
+    let mut rng = Rng::seed_from_u64(seed ^ fxhash(name));
+    let (a, y) = generate(&cfg, &mut rng);
+    if std::fs::create_dir_all(&cache_dir).is_ok() {
+        let _ = sio::write_binary(&a_path, &a);
+        let _ = sio::write_binary(&y_path, &y);
+    }
+    Ok(Dataset { name: name.to_string(), scale, a, y, k: spec.k })
+}
+
+/// Tiny string hash so each dataset gets an independent stream per seed.
+fn fxhash(s: &str) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_covers_paper() {
+        assert_eq!(PAPER_DATASETS.len(), 4);
+        assert!(DatasetSpec::by_name("amazon").is_some());
+        assert!(DatasetSpec::by_name("bogus").is_none());
+        let rcv = DatasetSpec::by_name("rcv").unwrap();
+        assert_eq!(rcv.m, 62_385);
+    }
+
+    #[test]
+    fn scaled_spec_dimensions() {
+        let spec = DatasetSpec::by_name("bibtex").unwrap();
+        let cfg = spec.scaled(0.1);
+        assert_eq!(cfg.m, 740);
+        assert_eq!(cfg.n, 184);
+        assert!(cfg.nnz > 0 && cfg.nnz <= cfg.m * cfg.n / 2);
+    }
+
+    #[test]
+    fn load_generates_and_caches() {
+        let dir = std::env::temp_dir().join("fastpi_ds_cache_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let d1 = load_dataset("bibtex", 0.05, 7, Some(&dir)).unwrap();
+        assert_eq!(d1.a.rows(), 370);
+        // second load must come from cache and be identical
+        let d2 = load_dataset("bibtex", 0.05, 7, Some(&dir)).unwrap();
+        assert_eq!(d1.a, d2.a);
+        assert_eq!(d1.y, d2.y);
+        // different seed differs
+        let d3 = load_dataset("bibtex", 0.05, 8, Some(&dir)).unwrap();
+        assert_ne!(d1.a, d3.a);
+    }
+
+    #[test]
+    fn stats_shape() {
+        let dir = std::env::temp_dir().join("fastpi_ds_stats_test");
+        let d = load_dataset("rcv", 0.02, 1, Some(&dir)).unwrap();
+        let (m, n, l, nnz, spa, spy) = d.stats();
+        assert_eq!(m, 1248);
+        assert_eq!(n, 95);
+        assert!(l >= 8);
+        assert!(nnz > 0);
+        assert!(spa > 0.5 && spa < 1.0);
+        assert!(spy > 0.5 && spy < 1.0);
+    }
+}

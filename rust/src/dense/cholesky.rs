@@ -1,0 +1,151 @@
+//! Cholesky factorization and CholQR orthonormalization.
+//!
+//! §Perf: the Householder QR in `qr.rs` walks columns of a row-major matrix
+//! (stride-n access, no parallelism). For the tall-skinny panels the
+//! randomized engines orthonormalize (m ≫ l), CholQR converts the work into
+//! two GEMMs + one small Cholesky: `R = chol(AᵀA)`, `Q = A·R⁻ᵀ` — both
+//! cache-friendly and parallel. Falls back to Householder when AᵀA is not
+//! numerically SPD (rank deficiency / extreme conditioning).
+
+use super::gemm::{matmul, matmul_tn};
+use super::matrix::Matrix;
+use super::qr::qr_thin;
+
+/// Lower Cholesky factor of an SPD matrix; None if not numerically SPD.
+pub fn cholesky(a: &Matrix) -> Option<Matrix> {
+    let n = a.rows();
+    assert_eq!(a.cols(), n, "cholesky needs square");
+    let mut l = Matrix::zeros(n, n);
+    for j in 0..n {
+        let mut d = a[(j, j)];
+        for k in 0..j {
+            d -= l[(j, k)] * l[(j, k)];
+        }
+        if d <= 0.0 || !d.is_finite() {
+            return None;
+        }
+        let dj = d.sqrt();
+        l[(j, j)] = dj;
+        for i in j + 1..n {
+            let mut s = a[(i, j)];
+            // contiguous row-slices of L — vectorizable dot
+            let (li, lj) = (i * n, j * n);
+            let data = l.data();
+            let mut acc = 0.0;
+            for k in 0..j {
+                acc += data[li + k] * data[lj + k];
+            }
+            s -= acc;
+            l[(i, j)] = s / dj;
+        }
+    }
+    Some(l)
+}
+
+/// Solve X·Lᵀ = B for X given lower-triangular L (i.e. X = B·L⁻ᵀ),
+/// row-parallel-friendly forward substitution per row.
+fn trsm_right_lt(b: &Matrix, l: &Matrix) -> Matrix {
+    let n = l.rows();
+    assert_eq!(b.cols(), n);
+    let mut x = b.clone();
+    for i in 0..b.rows() {
+        let row = x.row_mut(i);
+        for j in 0..n {
+            let mut s = row[j];
+            for k in 0..j {
+                s -= row[k] * l[(j, k)];
+            }
+            row[j] = s / l[(j, j)];
+        }
+    }
+    x
+}
+
+/// Orthonormalize the columns of a tall matrix (m ≥ n) via CholQR with one
+/// reorthogonalization pass ("CholQR2" — restores orthogonality to machine
+/// precision for reasonably conditioned inputs). Falls back to Householder
+/// QR when the Gram matrix is not SPD.
+pub fn cholqr_orthonormalize(a: &Matrix) -> Matrix {
+    let (m, n) = a.shape();
+    if n == 0 || m < n {
+        return qr_thin_q(a);
+    }
+    let gram = matmul_tn(a, a);
+    let Some(l) = cholesky(&gram) else {
+        return qr_thin_q(a);
+    };
+    let q1 = trsm_right_lt(a, &l);
+    // second pass (CholQR2)
+    let gram2 = matmul_tn(&q1, &q1);
+    let Some(l2) = cholesky(&gram2) else {
+        return qr_thin_q(&q1);
+    };
+    trsm_right_lt(&q1, &l2)
+}
+
+fn qr_thin_q(a: &Matrix) -> Matrix {
+    if a.rows() >= a.cols() {
+        qr_thin(a).0
+    } else {
+        // degenerate wide case: orthonormalize what we can
+        let (q, _) = qr_thin(&a.left_cols(a.rows()));
+        q
+    }
+}
+
+/// Verify reconstruction for tests: ‖Q·(QᵀA) − A‖ small when colspace kept.
+#[cfg(test)]
+fn projection_error(a: &Matrix, q: &Matrix) -> f64 {
+    let qta = matmul_tn(q, a);
+    matmul(q, &qta).sub(a).fro_norm() / a.fro_norm().max(1e-300)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dense::qr::orthogonality_defect;
+    use crate::util::propcheck::check;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn cholesky_reconstructs() {
+        check("chol: LLᵀ = A", 20, |rng| {
+            let n = rng.usize_range(1, 25);
+            let b = Matrix::randn(n + 3, n, rng);
+            let a = matmul_tn(&b, &b); // SPD
+            let l = cholesky(&a).expect("SPD");
+            let rec = super::matmul(&l, &l.transpose());
+            assert!(rec.max_abs_diff(&a) < 1e-9 * (1.0 + a.max_abs()));
+        });
+    }
+
+    #[test]
+    fn cholesky_rejects_indefinite() {
+        let a = Matrix::from_rows(&[&[1.0, 2.0], &[2.0, 1.0]]); // eigenvalues 3, -1
+        assert!(cholesky(&a).is_none());
+    }
+
+    #[test]
+    fn cholqr_orthonormal_and_spans() {
+        check("cholqr: QᵀQ=I, span preserved", 15, |rng| {
+            let n = rng.usize_range(1, 20);
+            let m = n + rng.usize_range(5, 80);
+            let a = Matrix::randn(m, n, rng);
+            let q = cholqr_orthonormalize(&a);
+            assert_eq!(q.shape(), (m, n));
+            assert!(orthogonality_defect(&q) < 1e-10, "defect {}", orthogonality_defect(&q));
+            assert!(projection_error(&a, &q) < 1e-10, "span lost");
+        });
+    }
+
+    #[test]
+    fn cholqr_falls_back_on_rank_deficiency() {
+        let mut rng = Rng::seed_from_u64(3);
+        let col = Matrix::randn(30, 1, &mut rng);
+        let a = col.hstack(&col); // exactly rank 1
+        let q = cholqr_orthonormalize(&a);
+        // must not contain NaN/inf and must still contain the column space
+        assert!(q.data().iter().all(|x| x.is_finite()));
+        assert!(projection_error(&col, &q) < 1e-8);
+    }
+}

@@ -1,0 +1,177 @@
+//! Blocked, multithreaded dense GEMM: `C = alpha * op(A) * op(B) + beta * C`.
+//!
+//! This is the L3 hot path of every SVD engine in the library (randomized
+//! projections, incremental factor updates, pseudoinverse application), so it
+//! is written for cache behaviour: row panels of A are streamed against
+//! K-blocked panels of B with a contiguous inner loop over columns of C that
+//! the compiler auto-vectorizes, and the M dimension is parallelized over the
+//! worker pool. See EXPERIMENTS.md §Perf for the measured roofline.
+
+use super::matrix::Matrix;
+use crate::util::parallel;
+
+/// Cache blocking parameters (tuned in the perf pass; see EXPERIMENTS.md §Perf).
+const MC: usize = 64; // rows of A per macro-block (parallel grain)
+const KC: usize = 256; // depth per panel — A panel (MC*KC) fits L2
+
+/// C = A · B.
+pub fn matmul(a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(a.cols(), b.rows(), "matmul: {}x{} · {}x{}", a.rows(), a.cols(), b.rows(), b.cols());
+    let mut c = Matrix::zeros(a.rows(), b.cols());
+    gemm_into(1.0, a, b, 0.0, &mut c);
+    c
+}
+
+/// C = Aᵀ · B (A given untransposed).
+pub fn matmul_tn(a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(a.rows(), b.rows(), "matmul_tn shape");
+    // Explicit transpose then GEMM: the O(mn) copy is negligible next to the
+    // O(mnk) product and keeps a single fast kernel.
+    matmul(&a.transpose(), b)
+}
+
+/// C = A · Bᵀ (B given untransposed).
+pub fn matmul_nt(a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(a.cols(), b.cols(), "matmul_nt shape");
+    matmul(a, &b.transpose())
+}
+
+/// General form: C = alpha·A·B + beta·C.
+pub fn gemm_into(alpha: f64, a: &Matrix, b: &Matrix, beta: f64, c: &mut Matrix) {
+    let (m, k) = a.shape();
+    let (k2, n) = b.shape();
+    assert_eq!(k, k2, "gemm_into inner dim");
+    assert_eq!(c.shape(), (m, n), "gemm_into output shape");
+
+    if beta != 1.0 {
+        if beta == 0.0 {
+            c.data_mut().fill(0.0);
+        } else {
+            c.scale_inplace(beta);
+        }
+    }
+    if m == 0 || n == 0 || k == 0 || alpha == 0.0 {
+        return;
+    }
+
+    let a_data = a.data();
+    let b_data = b.data();
+    // Parallelize over row macro-blocks; each block owns disjoint C rows.
+    let c_ptr = CPtr(c.data_mut().as_mut_ptr());
+    let c_ptr = &c_ptr; // capture the Sync wrapper, not the raw field
+    let blocks = m.div_ceil(MC);
+    parallel::for_each_index(blocks, |bi| {
+        let i0 = bi * MC;
+        let i1 = (i0 + MC).min(m);
+        for k0 in (0..k).step_by(KC) {
+            let k1 = (k0 + KC).min(k);
+            for i in i0..i1 {
+                // SAFETY: rows [i0, i1) are exclusively owned by this task.
+                let crow =
+                    unsafe { std::slice::from_raw_parts_mut(c_ptr.0.add(i * n), n) };
+                let arow = &a_data[i * k..(i + 1) * k];
+                for kk in k0..k1 {
+                    let aik = alpha * arow[kk];
+                    if aik != 0.0 {
+                        let brow = &b_data[kk * n..(kk + 1) * n];
+                        // contiguous saxpy over the C row — auto-vectorized
+                        for j in 0..n {
+                            crow[j] += aik * brow[j];
+                        }
+                    }
+                }
+            }
+        }
+    });
+}
+
+/// Raw pointer wrapper: workers write disjoint row ranges of C.
+struct CPtr(*mut f64);
+unsafe impl Sync for CPtr {}
+
+/// Flop count of a GEMM (for roofline reporting): 2·m·n·k.
+pub fn gemm_flops(m: usize, n: usize, k: usize) -> f64 {
+    2.0 * m as f64 * n as f64 * k as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::check;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn matches_naive_small() {
+        let a = Matrix::from_rows(&[&[1.0, 2.0, 3.0], &[4.0, 5.0, 6.0]]);
+        let b = Matrix::from_rows(&[&[7.0, 8.0], &[9.0, 10.0], &[11.0, 12.0]]);
+        let c = matmul(&a, &b);
+        assert_eq!(c, a.matmul_naive(&b));
+        assert_eq!(c[(0, 0)], 58.0);
+        assert_eq!(c[(1, 1)], 154.0);
+    }
+
+    #[test]
+    fn matches_naive_random_shapes() {
+        check("gemm == naive", 20, |rng: &mut Rng| {
+            let m = rng.usize_range(1, 90);
+            let k = rng.usize_range(1, 90);
+            let n = rng.usize_range(1, 90);
+            let a = Matrix::randn(m, k, rng);
+            let b = Matrix::randn(k, n, rng);
+            let c = matmul(&a, &b);
+            let c0 = a.matmul_naive(&b);
+            assert!(c.max_abs_diff(&c0) < 1e-10, "m={m} k={k} n={n}");
+        });
+    }
+
+    #[test]
+    fn transposed_variants() {
+        let mut rng = Rng::seed_from_u64(4);
+        let a = Matrix::randn(23, 17, &mut rng);
+        let b = Matrix::randn(23, 11, &mut rng);
+        let c = matmul_tn(&a, &b); // 17x11
+        let c0 = a.transpose().matmul_naive(&b);
+        assert!(c.max_abs_diff(&c0) < 1e-10);
+
+        let d = Matrix::randn(9, 17, &mut rng);
+        let e = Matrix::randn(13, 17, &mut rng);
+        let f = matmul_nt(&d, &e); // 9x13
+        let f0 = d.matmul_naive(&e.transpose());
+        assert!(f.max_abs_diff(&f0) < 1e-10);
+    }
+
+    #[test]
+    fn alpha_beta_accumulate() {
+        let mut rng = Rng::seed_from_u64(5);
+        let a = Matrix::randn(30, 20, &mut rng);
+        let b = Matrix::randn(20, 25, &mut rng);
+        let c0 = Matrix::randn(30, 25, &mut rng);
+        let mut c = c0.clone();
+        gemm_into(2.0, &a, &b, 0.5, &mut c);
+        let expect = a.matmul_naive(&b).map(|x| 2.0 * x).axpy(0.5, &c0);
+        assert!(c.max_abs_diff(&expect) < 1e-10);
+    }
+
+    #[test]
+    fn large_parallel_consistent() {
+        let mut rng = Rng::seed_from_u64(6);
+        // spans multiple MC blocks and KC panels
+        let a = Matrix::randn(300, 600, &mut rng);
+        let b = Matrix::randn(600, 50, &mut rng);
+        let c = matmul(&a, &b);
+        let c0 = a.matmul_naive(&b);
+        assert!(c.max_abs_diff(&c0) < 1e-9);
+    }
+
+    #[test]
+    fn empty_dims() {
+        let a = Matrix::zeros(0, 5);
+        let b = Matrix::zeros(5, 3);
+        assert_eq!(matmul(&a, &b).shape(), (0, 3));
+        let a = Matrix::zeros(4, 0);
+        let b = Matrix::zeros(0, 3);
+        let c = matmul(&a, &b);
+        assert_eq!(c.shape(), (4, 3));
+        assert_eq!(c.fro_norm(), 0.0);
+    }
+}

@@ -1,0 +1,207 @@
+//! Partially pivoted LU decomposition.
+//!
+//! Needed by the frPCA baseline (Feng et al. 2018), which stabilizes its
+//! power iteration with an LU factorization instead of QR.
+
+use super::matrix::Matrix;
+
+/// LU factorization with partial pivoting: P·A = L·U.
+#[derive(Debug, Clone)]
+pub struct Lu {
+    /// Combined factors: L (unit lower, below diag) and U (upper, on/above).
+    lu: Matrix,
+    /// Row permutation: row i of PA is row `perm[i]` of A.
+    perm: Vec<usize>,
+    singular: bool,
+}
+
+/// Factor a (possibly rectangular m×n, m ≥ n) matrix.
+pub fn lu_factor(a: &Matrix) -> Lu {
+    let (m, n) = a.shape();
+    assert!(m >= n, "lu_factor requires m >= n");
+    let mut lu = a.clone();
+    let mut perm: Vec<usize> = (0..m).collect();
+    let mut singular = false;
+
+    for k in 0..n {
+        // pivot: largest |entry| in column k at/below diagonal
+        let mut p = k;
+        let mut best = lu[(k, k)].abs();
+        for i in k + 1..m {
+            let v = lu[(i, k)].abs();
+            if v > best {
+                best = v;
+                p = i;
+            }
+        }
+        if best == 0.0 {
+            singular = true;
+            continue;
+        }
+        if p != k {
+            perm.swap(k, p);
+            // swap rows k,p
+            for j in 0..n {
+                let t = lu[(k, j)];
+                lu[(k, j)] = lu[(p, j)];
+                lu[(p, j)] = t;
+            }
+        }
+        let pivot = lu[(k, k)];
+        for i in k + 1..m {
+            let mult = lu[(i, k)] / pivot;
+            lu[(i, k)] = mult;
+            if mult != 0.0 {
+                for j in k + 1..n {
+                    let ukj = lu[(k, j)];
+                    lu[(i, j)] -= mult * ukj;
+                }
+            }
+        }
+    }
+    Lu { lu, perm, singular }
+}
+
+impl Lu {
+    pub fn is_singular(&self) -> bool {
+        self.singular
+    }
+
+    /// The thin unit-lower-triangular factor L (m×n).
+    pub fn l(&self) -> Matrix {
+        let (m, n) = self.lu.shape();
+        let mut l = Matrix::zeros(m, n);
+        for i in 0..m {
+            for j in 0..n.min(i) {
+                l[(i, j)] = self.lu[(i, j)];
+            }
+            if i < n {
+                l[(i, i)] = 1.0;
+            }
+        }
+        l
+    }
+
+    /// The upper factor U (n×n).
+    pub fn u(&self) -> Matrix {
+        let n = self.lu.cols();
+        let mut u = Matrix::zeros(n, n);
+        for i in 0..n {
+            for j in i..n {
+                u[(i, j)] = self.lu[(i, j)];
+            }
+        }
+        u
+    }
+
+    /// Apply the row permutation to a matrix: returns P·B.
+    pub fn permute_rows(&self, b: &Matrix) -> Matrix {
+        assert_eq!(b.rows(), self.perm.len());
+        let mut out = Matrix::zeros(b.rows(), b.cols());
+        for i in 0..b.rows() {
+            out.row_mut(i).copy_from_slice(b.row(self.perm[i]));
+        }
+        out
+    }
+
+    /// Undo the row permutation: returns Pᵀ·B.
+    pub fn unpermute_rows(&self, b: &Matrix) -> Matrix {
+        assert_eq!(b.rows(), self.perm.len());
+        let mut out = Matrix::zeros(b.rows(), b.cols());
+        for i in 0..b.rows() {
+            out.row_mut(self.perm[i]).copy_from_slice(b.row(i));
+        }
+        out
+    }
+
+    /// Solve A·X = B for square A (n×n) given this factorization.
+    pub fn solve(&self, b: &Matrix) -> Matrix {
+        let n = self.lu.cols();
+        assert_eq!(self.lu.rows(), n, "solve requires square factorization");
+        assert_eq!(b.rows(), n);
+        let mut x = self.permute_rows(b);
+        let k = x.cols();
+        // forward: L y = Pb
+        for i in 0..n {
+            for jj in 0..i {
+                let lij = self.lu[(i, jj)];
+                if lij != 0.0 {
+                    for c in 0..k {
+                        let yj = x[(jj, c)];
+                        x[(i, c)] -= lij * yj;
+                    }
+                }
+            }
+        }
+        // backward: U x = y
+        for i in (0..n).rev() {
+            for jj in i + 1..n {
+                let uij = self.lu[(i, jj)];
+                if uij != 0.0 {
+                    for c in 0..k {
+                        let xj = x[(jj, c)];
+                        x[(i, c)] -= uij * xj;
+                    }
+                }
+            }
+            let d = self.lu[(i, i)];
+            for c in 0..k {
+                x[(i, c)] /= d;
+            }
+        }
+        x
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dense::gemm::matmul;
+    use crate::util::propcheck::check;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn factors_reconstruct_pa() {
+        check("PA = LU", 20, |rng: &mut Rng| {
+            let n = rng.usize_range(1, 30);
+            let m = n + rng.usize_range(0, 20);
+            let a = Matrix::randn(m, n, rng);
+            let f = lu_factor(&a);
+            let pa = f.permute_rows(&a);
+            let lu = matmul(&f.l(), &f.u());
+            assert!(pa.max_abs_diff(&lu) < 1e-10, "m={m} n={n}");
+        });
+    }
+
+    #[test]
+    fn solve_square() {
+        check("LU solve", 20, |rng: &mut Rng| {
+            let n = rng.usize_range(1, 25);
+            let a = Matrix::randn(n, n, rng);
+            let x0 = Matrix::randn(n, 3, rng);
+            let b = matmul(&a, &x0);
+            let f = lu_factor(&a);
+            if !f.is_singular() {
+                let x = f.solve(&b);
+                assert!(x.max_abs_diff(&x0) < 1e-6, "n={n}");
+            }
+        });
+    }
+
+    #[test]
+    fn singular_detected() {
+        let a = Matrix::from_rows(&[&[1.0, 2.0], &[2.0, 4.0]]);
+        let f = lu_factor(&a);
+        assert!(f.is_singular());
+    }
+
+    #[test]
+    fn permutation_roundtrip() {
+        let mut rng = Rng::seed_from_u64(31);
+        let a = Matrix::randn(8, 5, &mut rng);
+        let f = lu_factor(&a);
+        let b = Matrix::randn(8, 4, &mut rng);
+        let rt = f.unpermute_rows(&f.permute_rows(&b));
+        assert!(rt.max_abs_diff(&b) < 1e-15);
+    }
+}

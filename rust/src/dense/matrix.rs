@@ -1,0 +1,444 @@
+//! Dense row-major `f64` matrix.
+//!
+//! This is the workhorse container of the numerical substrate. Operations
+//! that are performance-critical (GEMM) live in [`crate::dense::gemm`];
+//! this module provides construction, views, slicing, and cheap transforms.
+
+use crate::util::rng::Rng;
+
+/// Dense row-major matrix of f64.
+#[derive(Clone, PartialEq)]
+pub struct Matrix {
+    rows: usize,
+    cols: usize,
+    data: Vec<f64>,
+}
+
+impl std::fmt::Debug for Matrix {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        writeln!(f, "Matrix {}x{} [", self.rows, self.cols)?;
+        let rmax = self.rows.min(6);
+        let cmax = self.cols.min(8);
+        for i in 0..rmax {
+            write!(f, "  ")?;
+            for j in 0..cmax {
+                write!(f, "{:>10.4} ", self[(i, j)])?;
+            }
+            writeln!(f, "{}", if self.cols > cmax { "..." } else { "" })?;
+        }
+        if self.rows > rmax {
+            writeln!(f, "  ...")?;
+        }
+        write!(f, "]")
+    }
+}
+
+impl Matrix {
+    /// All-zeros matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Matrix { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    /// Identity matrix.
+    pub fn eye(n: usize) -> Self {
+        let mut m = Matrix::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    /// Build from a function of (row, col).
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f64) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                data.push(f(i, j));
+            }
+        }
+        Matrix { rows, cols, data }
+    }
+
+    /// Wrap an existing row-major buffer.
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f64>) -> Self {
+        assert_eq!(data.len(), rows * cols, "buffer length mismatch");
+        Matrix { rows, cols, data }
+    }
+
+    /// Build from nested rows (for tests/small literals).
+    pub fn from_rows(rows: &[&[f64]]) -> Self {
+        let r = rows.len();
+        let c = rows.first().map_or(0, |row| row.len());
+        let mut data = Vec::with_capacity(r * c);
+        for row in rows {
+            assert_eq!(row.len(), c, "ragged rows");
+            data.extend_from_slice(row);
+        }
+        Matrix { rows: r, cols: c, data }
+    }
+
+    /// i.i.d. standard normal entries.
+    pub fn randn(rows: usize, cols: usize, rng: &mut Rng) -> Self {
+        Matrix { rows, cols, data: rng.normal_vec(rows * cols) }
+    }
+
+    /// Diagonal matrix from values.
+    pub fn diag(d: &[f64]) -> Self {
+        let n = d.len();
+        let mut m = Matrix::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = d[i];
+        }
+        m
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+    #[inline]
+    pub fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+    #[inline]
+    pub fn data(&self) -> &[f64] {
+        &self.data
+    }
+    #[inline]
+    pub fn data_mut(&mut self) -> &mut [f64] {
+        &mut self.data
+    }
+    pub fn into_vec(self) -> Vec<f64> {
+        self.data
+    }
+
+    /// Borrow row i as a slice.
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f64] {
+        debug_assert!(i < self.rows);
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Borrow row i mutably.
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f64] {
+        debug_assert!(i < self.rows);
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Copy of column j.
+    pub fn col(&self, j: usize) -> Vec<f64> {
+        (0..self.rows).map(|i| self[(i, j)]).collect()
+    }
+
+    /// Set column j from a slice.
+    pub fn set_col(&mut self, j: usize, v: &[f64]) {
+        assert_eq!(v.len(), self.rows);
+        for i in 0..self.rows {
+            self[(i, j)] = v[i];
+        }
+    }
+
+    /// Transposed copy (cache-blocked).
+    pub fn transpose(&self) -> Matrix {
+        let mut t = Matrix::zeros(self.cols, self.rows);
+        const B: usize = 32;
+        for ib in (0..self.rows).step_by(B) {
+            for jb in (0..self.cols).step_by(B) {
+                for i in ib..(ib + B).min(self.rows) {
+                    for j in jb..(jb + B).min(self.cols) {
+                        t.data[j * self.rows + i] = self.data[i * self.cols + j];
+                    }
+                }
+            }
+        }
+        t
+    }
+
+    /// Contiguous copy of a rectangular region.
+    pub fn submatrix(&self, r0: usize, c0: usize, nr: usize, nc: usize) -> Matrix {
+        assert!(r0 + nr <= self.rows && c0 + nc <= self.cols, "submatrix out of range");
+        let mut out = Matrix::zeros(nr, nc);
+        for i in 0..nr {
+            out.row_mut(i).copy_from_slice(&self.data[(r0 + i) * self.cols + c0..][..nc]);
+        }
+        out
+    }
+
+    /// Write `block` into this matrix at (r0, c0).
+    pub fn set_submatrix(&mut self, r0: usize, c0: usize, block: &Matrix) {
+        assert!(r0 + block.rows <= self.rows && c0 + block.cols <= self.cols);
+        for i in 0..block.rows {
+            let dst = (r0 + i) * self.cols + c0;
+            self.data[dst..dst + block.cols].copy_from_slice(block.row(i));
+        }
+    }
+
+    /// Vertical concatenation [self; other].
+    pub fn vstack(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.cols, other.cols, "vstack col mismatch");
+        let mut data = Vec::with_capacity((self.rows + other.rows) * self.cols);
+        data.extend_from_slice(&self.data);
+        data.extend_from_slice(&other.data);
+        Matrix { rows: self.rows + other.rows, cols: self.cols, data }
+    }
+
+    /// Horizontal concatenation [self | other].
+    pub fn hstack(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.rows, other.rows, "hstack row mismatch");
+        let mut out = Matrix::zeros(self.rows, self.cols + other.cols);
+        for i in 0..self.rows {
+            out.row_mut(i)[..self.cols].copy_from_slice(self.row(i));
+            out.row_mut(i)[self.cols..].copy_from_slice(other.row(i));
+        }
+        out
+    }
+
+    /// First `nr` rows.
+    pub fn top_rows(&self, nr: usize) -> Matrix {
+        self.submatrix(0, 0, nr, self.cols)
+    }
+
+    /// First `nc` columns.
+    pub fn left_cols(&self, nc: usize) -> Matrix {
+        self.submatrix(0, 0, self.rows, nc)
+    }
+
+    /// Zero-pad to (nr, nc) with self at the top-left.
+    pub fn pad_to(&self, nr: usize, nc: usize) -> Matrix {
+        assert!(nr >= self.rows && nc >= self.cols);
+        let mut out = Matrix::zeros(nr, nc);
+        out.set_submatrix(0, 0, self);
+        out
+    }
+
+    /// Elementwise map.
+    pub fn map(&self, f: impl Fn(f64) -> f64) -> Matrix {
+        Matrix {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().map(|&x| f(x)).collect(),
+        }
+    }
+
+    /// In-place scale.
+    pub fn scale_inplace(&mut self, a: f64) {
+        for x in &mut self.data {
+            *x *= a;
+        }
+    }
+
+    /// self + a*other (new matrix).
+    pub fn axpy(&self, a: f64, other: &Matrix) -> Matrix {
+        assert_eq!(self.shape(), other.shape());
+        let data = self.data.iter().zip(&other.data).map(|(x, y)| x + a * y).collect();
+        Matrix { rows: self.rows, cols: self.cols, data }
+    }
+
+    /// Difference self - other.
+    pub fn sub(&self, other: &Matrix) -> Matrix {
+        self.axpy(-1.0, other)
+    }
+
+    /// Scale columns by d: A · diag(d).
+    pub fn scale_cols(&self, d: &[f64]) -> Matrix {
+        assert_eq!(d.len(), self.cols);
+        let mut out = self.clone();
+        for i in 0..self.rows {
+            let row = out.row_mut(i);
+            for j in 0..row.len() {
+                row[j] *= d[j];
+            }
+        }
+        out
+    }
+
+    /// Scale rows by d: diag(d) · A.
+    pub fn scale_rows(&self, d: &[f64]) -> Matrix {
+        assert_eq!(d.len(), self.rows);
+        let mut out = self.clone();
+        for i in 0..self.rows {
+            let s = d[i];
+            for x in out.row_mut(i) {
+                *x *= s;
+            }
+        }
+        out
+    }
+
+    /// Frobenius norm.
+    pub fn fro_norm(&self) -> f64 {
+        self.data.iter().map(|x| x * x).sum::<f64>().sqrt()
+    }
+
+    /// Max absolute entry.
+    pub fn max_abs(&self) -> f64 {
+        self.data.iter().fold(0.0f64, |m, &x| m.max(x.abs()))
+    }
+
+    /// Matrix-vector product y = A x.
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.cols);
+        (0..self.rows)
+            .map(|i| self.row(i).iter().zip(x).map(|(a, b)| a * b).sum())
+            .collect()
+    }
+
+    /// Transposed matrix-vector product y = Aᵀ x.
+    pub fn matvec_t(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.rows);
+        let mut y = vec![0.0; self.cols];
+        for i in 0..self.rows {
+            let xi = x[i];
+            if xi != 0.0 {
+                for (yj, &aij) in y.iter_mut().zip(self.row(i)) {
+                    *yj += xi * aij;
+                }
+            }
+        }
+        y
+    }
+
+    /// Reference (naive) matmul — used as the oracle in tests; for real work
+    /// use [`crate::dense::gemm::matmul`].
+    pub fn matmul_naive(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.cols, other.rows, "matmul dim mismatch");
+        let mut out = Matrix::zeros(self.rows, other.cols);
+        for i in 0..self.rows {
+            for k in 0..self.cols {
+                let a = self[(i, k)];
+                if a != 0.0 {
+                    let brow = other.row(k);
+                    let orow = out.row_mut(i);
+                    for j in 0..brow.len() {
+                        orow[j] += a * brow[j];
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Max |self - other| (for test tolerances).
+    pub fn max_abs_diff(&self, other: &Matrix) -> f64 {
+        assert_eq!(self.shape(), other.shape());
+        self.data
+            .iter()
+            .zip(&other.data)
+            .fold(0.0f64, |m, (a, b)| m.max((a - b).abs()))
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for Matrix {
+    type Output = f64;
+    #[inline(always)]
+    fn index(&self, (i, j): (usize, usize)) -> &f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &self.data[i * self.cols + j]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for Matrix {
+    #[inline(always)]
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &mut self.data[i * self.cols + j]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construct_and_index() {
+        let m = Matrix::from_rows(&[&[1.0, 2.0], &[3.0, 4.0]]);
+        assert_eq!(m.shape(), (2, 2));
+        assert_eq!(m[(0, 1)], 2.0);
+        assert_eq!(m.row(1), &[3.0, 4.0]);
+        assert_eq!(m.col(0), vec![1.0, 3.0]);
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let mut rng = Rng::seed_from_u64(1);
+        let m = Matrix::randn(37, 53, &mut rng);
+        let t = m.transpose();
+        assert_eq!(t.shape(), (53, 37));
+        assert_eq!(t.transpose(), m);
+        assert_eq!(t[(10, 20)], m[(20, 10)]);
+    }
+
+    #[test]
+    fn submatrix_and_set() {
+        let m = Matrix::from_fn(6, 5, |i, j| (i * 5 + j) as f64);
+        let s = m.submatrix(2, 1, 3, 2);
+        assert_eq!(s[(0, 0)], 11.0);
+        assert_eq!(s[(2, 1)], 22.0);
+        let mut z = Matrix::zeros(6, 5);
+        z.set_submatrix(2, 1, &s);
+        assert_eq!(z[(4, 2)], 22.0);
+        assert_eq!(z[(0, 0)], 0.0);
+    }
+
+    #[test]
+    fn stacking() {
+        let a = Matrix::from_rows(&[&[1.0, 2.0]]);
+        let b = Matrix::from_rows(&[&[3.0, 4.0]]);
+        let v = a.vstack(&b);
+        assert_eq!(v.shape(), (2, 2));
+        assert_eq!(v[(1, 0)], 3.0);
+        let h = a.hstack(&b);
+        assert_eq!(h.shape(), (1, 4));
+        assert_eq!(h[(0, 3)], 4.0);
+    }
+
+    #[test]
+    fn matvec_agrees_with_matmul() {
+        let mut rng = Rng::seed_from_u64(2);
+        let a = Matrix::randn(8, 5, &mut rng);
+        let x: Vec<f64> = rng.normal_vec(5);
+        let xm = Matrix::from_vec(5, 1, x.clone());
+        let y = a.matvec(&x);
+        let ym = a.matmul_naive(&xm);
+        for i in 0..8 {
+            assert!((y[i] - ym[(i, 0)]).abs() < 1e-12);
+        }
+        // transposed
+        let z: Vec<f64> = rng.normal_vec(8);
+        let yt = a.matvec_t(&z);
+        let zt = Matrix::from_vec(1, 8, z).matmul_naive(&a);
+        for j in 0..5 {
+            assert!((yt[j] - zt[(0, j)]).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn scale_rows_cols() {
+        let a = Matrix::from_rows(&[&[1.0, 2.0], &[3.0, 4.0]]);
+        let sc = a.scale_cols(&[2.0, 3.0]);
+        assert_eq!(sc[(1, 1)], 12.0);
+        let sr = a.scale_rows(&[2.0, 3.0]);
+        assert_eq!(sr[(1, 0)], 9.0);
+    }
+
+    #[test]
+    fn norms() {
+        let a = Matrix::from_rows(&[&[3.0, 0.0], &[0.0, 4.0]]);
+        assert!((a.fro_norm() - 5.0).abs() < 1e-12);
+        assert_eq!(a.max_abs(), 4.0);
+    }
+
+    #[test]
+    fn pad_to_places_topleft() {
+        let a = Matrix::from_rows(&[&[1.0, 2.0]]);
+        let p = a.pad_to(3, 4);
+        assert_eq!(p.shape(), (3, 4));
+        assert_eq!(p[(0, 1)], 2.0);
+        assert_eq!(p[(2, 3)], 0.0);
+    }
+}

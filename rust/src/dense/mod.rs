@@ -1,0 +1,18 @@
+//! Dense linear-algebra substrate (built from scratch — the paper's MATLAB
+//! substrate equivalent). Row-major f64 throughout.
+
+pub mod cholesky;
+pub mod gemm;
+pub mod gramsvd;
+pub mod lu;
+pub mod matrix;
+pub mod qr;
+pub mod svd;
+
+pub use cholesky::{cholesky, cholqr_orthonormalize};
+pub use gemm::{gemm_into, matmul, matmul_nt, matmul_tn};
+pub use gramsvd::{fast_svd_truncated, jacobi_eigh, svd_gram_truncated};
+pub use lu::{lu_factor, Lu};
+pub use matrix::Matrix;
+pub use qr::{orthonormalize, qr_thin};
+pub use svd::{svd, svd_jacobi, svd_truncated, Svd};

@@ -1,0 +1,164 @@
+//! Householder QR factorization (thin).
+//!
+//! Used by the randomized SVD engines for range-finding / orthonormalization
+//! and by the Krylov engine for reorthogonalization. Only the tall case
+//! (m ≥ n) is needed by the library.
+
+use super::matrix::Matrix;
+
+/// Thin QR: A (m×n, m ≥ n) = Q (m×n, orthonormal cols) · R (n×n upper).
+pub fn qr_thin(a: &Matrix) -> (Matrix, Matrix) {
+    let (m, n) = a.shape();
+    assert!(m >= n, "qr_thin requires m >= n (got {m}x{n})");
+    let mut work = a.clone(); // holds R in upper triangle + reflectors below
+    let mut taus = Vec::with_capacity(n);
+
+    for k in 0..n {
+        // Householder vector for column k, rows k..m. v normalized v[0]=1.
+        let mut norm2 = 0.0;
+        for i in k..m {
+            let x = work[(i, k)];
+            norm2 += x * x;
+        }
+        let alpha = work[(k, k)];
+        let norm = norm2.sqrt();
+        if norm == 0.0 {
+            taus.push(0.0);
+            continue;
+        }
+        // beta = -sign(alpha) * ||x|| avoids cancellation
+        let beta = if alpha >= 0.0 { -norm } else { norm };
+        let v0 = alpha - beta;
+        // tau = 2 v0^2 / (v0^2 + sum_{i>k} x_i^2) given v scaled so v[0]=1:
+        let tau = (beta - alpha) / beta; // LAPACK-style tau with v[0] scaled to 1
+        // scale subdiagonal entries by 1/v0 so the stored reflector has v[0]=1
+        for i in k + 1..m {
+            work[(i, k)] /= v0;
+        }
+        work[(k, k)] = beta;
+        taus.push(tau);
+
+        // Apply reflector H = I - tau v vᵀ to remaining columns
+        for j in k + 1..n {
+            // w = vᵀ · col_j
+            let mut w = work[(k, j)];
+            for i in k + 1..m {
+                w += work[(i, k)] * work[(i, j)];
+            }
+            w *= tau;
+            work[(k, j)] -= w;
+            for i in k + 1..m {
+                let vik = work[(i, k)];
+                work[(i, j)] -= w * vik;
+            }
+        }
+    }
+
+    // Extract R
+    let mut r = Matrix::zeros(n, n);
+    for i in 0..n {
+        for j in i..n {
+            r[(i, j)] = work[(i, j)];
+        }
+    }
+
+    // Back-accumulate thin Q: apply H_k ... H_1 to the first n columns of I.
+    let mut q = Matrix::zeros(m, n);
+    for i in 0..n {
+        q[(i, i)] = 1.0;
+    }
+    for k in (0..n).rev() {
+        let tau = taus[k];
+        if tau == 0.0 {
+            continue;
+        }
+        for j in 0..n {
+            let mut w = q[(k, j)];
+            for i in k + 1..m {
+                w += work[(i, k)] * q[(i, j)];
+            }
+            w *= tau;
+            q[(k, j)] -= w;
+            for i in k + 1..m {
+                let vik = work[(i, k)];
+                q[(i, j)] -= w * vik;
+            }
+        }
+    }
+    (q, r)
+}
+
+/// Orthonormal basis of the column space (Q factor of thin QR).
+pub fn orthonormalize(a: &Matrix) -> Matrix {
+    qr_thin(a).0
+}
+
+/// Measure ‖QᵀQ − I‖_max — orthogonality defect, used in tests and perf checks.
+pub fn orthogonality_defect(q: &Matrix) -> f64 {
+    let qtq = super::gemm::matmul_tn(q, q);
+    let n = qtq.rows();
+    let mut worst = 0.0f64;
+    for i in 0..n {
+        for j in 0..n {
+            let target = if i == j { 1.0 } else { 0.0 };
+            worst = worst.max((qtq[(i, j)] - target).abs());
+        }
+    }
+    worst
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dense::gemm::matmul;
+    use crate::util::propcheck::check;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn reconstructs_small() {
+        let a = Matrix::from_rows(&[&[1.0, 2.0], &[3.0, 4.0], &[5.0, 6.0]]);
+        let (q, r) = qr_thin(&a);
+        let qr = matmul(&q, &r);
+        assert!(qr.max_abs_diff(&a) < 1e-12);
+        assert!(orthogonality_defect(&q) < 1e-12);
+        // R upper triangular
+        assert_eq!(r[(1, 0)], 0.0);
+    }
+
+    #[test]
+    fn property_qr_reconstruction_and_orthogonality() {
+        check("qr: A = QR, QᵀQ = I", 25, |rng: &mut Rng| {
+            let n = rng.usize_range(1, 40);
+            let m = n + rng.usize_range(0, 60);
+            let a = Matrix::randn(m, n, rng);
+            let (q, r) = qr_thin(&a);
+            assert!(matmul(&q, &r).max_abs_diff(&a) < 1e-9, "reconstruction m={m} n={n}");
+            assert!(orthogonality_defect(&q) < 1e-10, "orthogonality m={m} n={n}");
+            for i in 0..n {
+                for j in 0..i {
+                    assert_eq!(r[(i, j)], 0.0, "R not upper");
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn rank_deficient_ok() {
+        // duplicate columns -> rank deficient; QR should not produce NaNs
+        let mut rng = Rng::seed_from_u64(8);
+        let col = Matrix::randn(20, 1, &mut rng);
+        let a = col.hstack(&col).hstack(&col);
+        let (q, r) = qr_thin(&a);
+        assert!(matmul(&q, &r).max_abs_diff(&a) < 1e-10);
+        assert!(q.data().iter().all(|x| x.is_finite()));
+        assert!(r.data().iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn zero_matrix_ok() {
+        let a = Matrix::zeros(5, 3);
+        let (q, r) = qr_thin(&a);
+        assert!(q.data().iter().all(|x| x.is_finite()));
+        assert_eq!(r.fro_norm(), 0.0);
+    }
+}

@@ -1,0 +1,681 @@
+//! Dense singular value decomposition.
+//!
+//! Two engines:
+//!  * [`svd`] — Golub–Reinsch (Householder bidiagonalization + implicitly
+//!    shifted QR on the bidiagonal), the classic EISPACK/JAMA formulation.
+//!    O(mn²) for m ≥ n; this is the substrate "standard SVD" the paper's
+//!    MATLAB calls map to.
+//!  * [`svd_jacobi`] — one-sided Jacobi. Slower but extremely robust and
+//!    independently derived; used as the cross-validation oracle in tests
+//!    and as a fallback if QR iteration ever fails to converge.
+//!
+//! Both return the *thin* SVD `A = U · diag(s) · Vᵀ` with `s` descending.
+
+use super::gemm::matmul;
+use super::matrix::Matrix;
+use crate::error::{Error, Result};
+
+/// Thin SVD result: `a ≈ u · diag(s) · vt` with `u: m×k`, `vt: k×n`.
+#[derive(Debug, Clone)]
+pub struct Svd {
+    pub u: Matrix,
+    pub s: Vec<f64>,
+    pub vt: Matrix,
+}
+
+impl Svd {
+    /// Rank of the factorization (number of retained singular values).
+    pub fn rank(&self) -> usize {
+        self.s.len()
+    }
+
+    /// Keep only the top `r` singular triplets.
+    pub fn truncate(mut self, r: usize) -> Svd {
+        let r = r.min(self.s.len());
+        self.s.truncate(r);
+        self.u = self.u.left_cols(r);
+        self.vt = self.vt.top_rows(r);
+        self
+    }
+
+    /// Reconstruct U·diag(s)·Vᵀ (test/diagnostic use).
+    pub fn reconstruct(&self) -> Matrix {
+        matmul(&self.u.scale_cols(&self.s), &self.vt)
+    }
+
+    /// ‖A − UΣVᵀ‖_F, the paper's Figure-4 metric.
+    pub fn reconstruction_error(&self, a: &Matrix) -> f64 {
+        self.reconstruct().sub(a).fro_norm()
+    }
+}
+
+#[inline]
+fn hypot(a: f64, b: f64) -> f64 {
+    a.hypot(b)
+}
+
+/// Thin SVD via Golub–Reinsch. Handles any shape (transposes internally for
+/// m < n). Fails over to Jacobi on (rare) non-convergence.
+pub fn svd(a: &Matrix) -> Svd {
+    let (m, n) = a.shape();
+    if m >= n {
+        match golub_reinsch(a) {
+            Ok(s) => s,
+            Err(_) => svd_jacobi(a),
+        }
+    } else {
+        let t = a.transpose();
+        let Svd { u, s, vt } = svd(&t);
+        Svd { u: vt.transpose(), s, vt: u.transpose() }
+    }
+}
+
+/// Thin SVD truncated to rank `r`.
+pub fn svd_truncated(a: &Matrix, r: usize) -> Svd {
+    svd(a).truncate(r)
+}
+
+/// Golub–Reinsch SVD for m ≥ n (JAMA formulation).
+fn golub_reinsch(a: &Matrix) -> Result<Svd> {
+    let (m, n) = a.shape();
+    assert!(m >= n);
+    if n == 0 {
+        return Ok(Svd { u: Matrix::zeros(m, 0), s: vec![], vt: Matrix::zeros(0, 0) });
+    }
+    let mut a = a.clone();
+    let nu = n;
+    let mut s = vec![0.0f64; n];
+    let mut e = vec![0.0f64; n];
+    let mut work = vec![0.0f64; m];
+    let mut u = Matrix::zeros(m, nu);
+    let mut v = Matrix::zeros(n, n);
+
+    let nct = (m - 1).min(n);
+    let nrt = 0.max(n.saturating_sub(2).min(m));
+
+    // --- Bidiagonalization: reduce A to bidiagonal form, storing the
+    // Householder vectors for U in (the lower part of) A and for V in e.
+    for k in 0..nct.max(nrt) {
+        if k < nct {
+            // Householder for column k.
+            s[k] = 0.0;
+            for i in k..m {
+                s[k] = hypot(s[k], a[(i, k)]);
+            }
+            if s[k] != 0.0 {
+                if a[(k, k)] < 0.0 {
+                    s[k] = -s[k];
+                }
+                for i in k..m {
+                    a[(i, k)] /= s[k];
+                }
+                a[(k, k)] += 1.0;
+            }
+            s[k] = -s[k];
+        }
+        for j in k + 1..n {
+            if k < nct && s[k] != 0.0 {
+                let mut t = 0.0;
+                for i in k..m {
+                    t += a[(i, k)] * a[(i, j)];
+                }
+                t = -t / a[(k, k)];
+                for i in k..m {
+                    let aik = a[(i, k)];
+                    a[(i, j)] += t * aik;
+                }
+            }
+            e[j] = a[(k, j)];
+        }
+        if k < nct {
+            for i in k..m {
+                u[(i, k)] = a[(i, k)];
+            }
+        }
+        if k < nrt {
+            // Householder for row k (superdiagonal part).
+            e[k] = 0.0;
+            for i in k + 1..n {
+                e[k] = hypot(e[k], e[i]);
+            }
+            if e[k] != 0.0 {
+                if e[k + 1] < 0.0 {
+                    e[k] = -e[k];
+                }
+                let ek = e[k];
+                for i in k + 1..n {
+                    e[i] /= ek;
+                }
+                e[k + 1] += 1.0;
+            }
+            e[k] = -e[k];
+            if k + 1 < m && e[k] != 0.0 {
+                for w in work.iter_mut().take(m).skip(k + 1) {
+                    *w = 0.0;
+                }
+                for j in k + 1..n {
+                    for i in k + 1..m {
+                        work[i] += e[j] * a[(i, j)];
+                    }
+                }
+                for j in k + 1..n {
+                    let t = -e[j] / e[k + 1];
+                    for i in k + 1..m {
+                        a[(i, j)] += t * work[i];
+                    }
+                }
+            }
+            for i in k + 1..n {
+                v[(i, k)] = e[i];
+            }
+        }
+    }
+
+    // Final bidiagonal values.
+    let p = n.min(m + 1);
+    if nct < n {
+        s[nct] = a[(nct, nct)];
+    }
+    if m < p {
+        s[p - 1] = 0.0;
+    }
+    if nrt + 1 < p {
+        e[nrt] = a[(nrt, p - 1)];
+    }
+    e[p - 1] = 0.0;
+
+    // --- Generate U.
+    for j in nct..nu {
+        for i in 0..m {
+            u[(i, j)] = 0.0;
+        }
+        u[(j, j)] = 1.0;
+    }
+    for k in (0..nct).rev() {
+        if s[k] != 0.0 {
+            for j in k + 1..nu {
+                let mut t = 0.0;
+                for i in k..m {
+                    t += u[(i, k)] * u[(i, j)];
+                }
+                t = -t / u[(k, k)];
+                for i in k..m {
+                    let uik = u[(i, k)];
+                    u[(i, j)] += t * uik;
+                }
+            }
+            for i in k..m {
+                u[(i, k)] = -u[(i, k)];
+            }
+            u[(k, k)] += 1.0;
+            for i in 0..k.saturating_sub(1) {
+                u[(i, k)] = 0.0;
+            }
+        } else {
+            for i in 0..m {
+                u[(i, k)] = 0.0;
+            }
+            u[(k, k)] = 1.0;
+        }
+    }
+
+    // --- Generate V.
+    for k in (0..n).rev() {
+        if k < nrt && e[k] != 0.0 {
+            for j in k + 1..nu {
+                let mut t = 0.0;
+                for i in k + 1..n {
+                    t += v[(i, k)] * v[(i, j)];
+                }
+                t = -t / v[(k + 1, k)];
+                for i in k + 1..n {
+                    let vik = v[(i, k)];
+                    v[(i, j)] += t * vik;
+                }
+            }
+        }
+        for i in 0..n {
+            v[(i, k)] = 0.0;
+        }
+        v[(k, k)] = 1.0;
+    }
+
+    // --- Main iteration: diagonalize the bidiagonal form.
+    let mut p = p;
+    let pp = p - 1;
+    let mut iter = 0usize;
+    let max_iter = 30 * n.max(8) * 8;
+    let eps = f64::EPSILON;
+    let tiny = f64::MIN_POSITIVE / eps;
+
+    while p > 0 {
+        if iter > max_iter {
+            return Err(Error::Numerical(format!(
+                "Golub-Reinsch SVD failed to converge after {max_iter} iterations"
+            )));
+        }
+        // Determine the block to act on and the action (kase).
+        // k is the index of the last negligible superdiagonal before the block.
+        let mut k = p as isize - 2;
+        while k >= 0 {
+            let ku = k as usize;
+            if e[ku].abs() <= tiny + eps * (s[ku].abs() + s[ku + 1].abs()) {
+                e[ku] = 0.0;
+                break;
+            }
+            k -= 1;
+        }
+        let kase;
+        if k == p as isize - 2 {
+            kase = 4;
+        } else {
+            let mut ks = p as isize - 1;
+            while ks > k {
+                let ksu = ks as usize;
+                let t = (if ks != p as isize - 1 { e[ksu].abs() } else { 0.0 })
+                    + (if ks != k + 1 { e[ksu - 1].abs() } else { 0.0 });
+                if s[ksu].abs() <= tiny + eps * t {
+                    s[ksu] = 0.0;
+                    break;
+                }
+                ks -= 1;
+            }
+            if ks == k {
+                kase = 3;
+            } else if ks == p as isize - 1 {
+                kase = 1;
+            } else {
+                kase = 2;
+                k = ks;
+            }
+        }
+        let k = (k + 1) as usize;
+
+        match kase {
+            // Deflate negligible s[p-1].
+            1 => {
+                let mut f = e[p - 2];
+                e[p - 2] = 0.0;
+                for j in (k..p - 1).rev() {
+                    let t = hypot(s[j], f);
+                    let cs = s[j] / t;
+                    let sn = f / t;
+                    s[j] = t;
+                    if j != k {
+                        f = -sn * e[j - 1];
+                        e[j - 1] *= cs;
+                    }
+                    rotate_cols(&mut v, j, p - 1, cs, sn);
+                }
+            }
+            // Split at negligible s[k-1].
+            2 => {
+                let mut f = e[k - 1];
+                e[k - 1] = 0.0;
+                for j in k..p {
+                    let t = hypot(s[j], f);
+                    let cs = s[j] / t;
+                    let sn = f / t;
+                    s[j] = t;
+                    f = -sn * e[j];
+                    e[j] *= cs;
+                    rotate_cols(&mut u, j, k - 1, cs, sn);
+                }
+            }
+            // One implicitly shifted QR step.
+            3 => {
+                let scale = s[p - 1]
+                    .abs()
+                    .max(s[p - 2].abs())
+                    .max(e[p - 2].abs())
+                    .max(s[k].abs())
+                    .max(e[k].abs());
+                let sp = s[p - 1] / scale;
+                let spm1 = s[p - 2] / scale;
+                let epm1 = e[p - 2] / scale;
+                let sk = s[k] / scale;
+                let ek = e[k] / scale;
+                let b = ((spm1 + sp) * (spm1 - sp) + epm1 * epm1) / 2.0;
+                let c = (sp * epm1) * (sp * epm1);
+                let mut shift = 0.0;
+                if b != 0.0 || c != 0.0 {
+                    shift = (b * b + c).sqrt();
+                    if b < 0.0 {
+                        shift = -shift;
+                    }
+                    shift = c / (b + shift);
+                }
+                let mut f = (sk + sp) * (sk - sp) + shift;
+                let mut g = sk * ek;
+                for j in k..p - 1 {
+                    let mut t = hypot(f, g);
+                    let mut cs = f / t;
+                    let mut sn = g / t;
+                    if j != k {
+                        e[j - 1] = t;
+                    }
+                    f = cs * s[j] + sn * e[j];
+                    e[j] = cs * e[j] - sn * s[j];
+                    g = sn * s[j + 1];
+                    s[j + 1] *= cs;
+                    rotate_cols(&mut v, j, j + 1, cs, sn);
+                    t = hypot(f, g);
+                    cs = f / t;
+                    sn = g / t;
+                    s[j] = t;
+                    f = cs * e[j] + sn * s[j + 1];
+                    s[j + 1] = -sn * e[j] + cs * s[j + 1];
+                    g = sn * e[j + 1];
+                    e[j + 1] *= cs;
+                    if j < m - 1 {
+                        rotate_cols(&mut u, j, j + 1, cs, sn);
+                    }
+                }
+                e[p - 2] = f;
+                iter += 1;
+            }
+            // Convergence of s[k].
+            _ => {
+                if s[k] <= 0.0 {
+                    s[k] = -s[k];
+                    for i in 0..n {
+                        v[(i, k)] = -v[(i, k)];
+                    }
+                }
+                // Order the singular value into place.
+                let mut kk = k;
+                while kk < pp {
+                    if s[kk] >= s[kk + 1] {
+                        break;
+                    }
+                    s.swap(kk, kk + 1);
+                    swap_cols(&mut v, kk, kk + 1);
+                    if kk < m - 1 {
+                        swap_cols(&mut u, kk, kk + 1);
+                    }
+                    kk += 1;
+                }
+                iter = 0;
+                p -= 1;
+            }
+        }
+    }
+
+    Ok(Svd { u, s, vt: v.transpose() })
+}
+
+#[inline]
+fn rotate_cols(m: &mut Matrix, j1: usize, j2: usize, cs: f64, sn: f64) {
+    let rows = m.rows();
+    for i in 0..rows {
+        let t = cs * m[(i, j1)] + sn * m[(i, j2)];
+        m[(i, j2)] = -sn * m[(i, j1)] + cs * m[(i, j2)];
+        m[(i, j1)] = t;
+    }
+}
+
+#[inline]
+fn swap_cols(m: &mut Matrix, j1: usize, j2: usize) {
+    let rows = m.rows();
+    for i in 0..rows {
+        let t = m[(i, j1)];
+        m[(i, j1)] = m[(i, j2)];
+        m[(i, j2)] = t;
+    }
+}
+
+/// One-sided Jacobi SVD (Hestenes). Orthogonalizes pairs of columns of a
+/// working copy of A by plane rotations until convergence; column norms
+/// become the singular values and the rotations accumulate V.
+pub fn svd_jacobi(a: &Matrix) -> Svd {
+    let (m, n) = a.shape();
+    if m < n {
+        let t = a.transpose();
+        let Svd { u, s, vt } = svd_jacobi(&t);
+        return Svd { u: vt.transpose(), s, vt: u.transpose() };
+    }
+    // Work on columns: store Aᵀ row-major so each "column" is contiguous.
+    let mut w = a.transpose(); // n×m; row j = column j of A
+    let mut v = Matrix::eye(n);
+    let eps = 1e-14;
+    let max_sweeps = 60;
+
+    for _sweep in 0..max_sweeps {
+        let mut off = 0.0f64;
+        for j1 in 0..n {
+            for j2 in j1 + 1..n {
+                // 2x2 Gram entries
+                let (mut app, mut aqq, mut apq) = (0.0, 0.0, 0.0);
+                let (r1, r2) = if j1 < j2 {
+                    let (lo, hi) = w.data().split_at(j2 * m);
+                    (&lo[j1 * m..j1 * m + m], &hi[..m])
+                } else {
+                    unreachable!()
+                };
+                for i in 0..m {
+                    app += r1[i] * r1[i];
+                    aqq += r2[i] * r2[i];
+                    apq += r1[i] * r2[i];
+                }
+                if apq.abs() <= eps * (app * aqq).sqrt() || apq == 0.0 {
+                    continue;
+                }
+                off = off.max(apq.abs() / (app * aqq).sqrt().max(f64::MIN_POSITIVE));
+                // Jacobi rotation angle
+                let tau = (aqq - app) / (2.0 * apq);
+                let t = tau.signum() / (tau.abs() + (1.0 + tau * tau).sqrt());
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s_ = c * t;
+                // rotate columns j1, j2 of A (rows of w)
+                {
+                    let data = w.data_mut();
+                    let (lo, hi) = data.split_at_mut(j2 * m);
+                    let r1 = &mut lo[j1 * m..j1 * m + m];
+                    let r2 = &mut hi[..m];
+                    for i in 0..m {
+                        let x = r1[i];
+                        let y = r2[i];
+                        r1[i] = c * x - s_ * y;
+                        r2[i] = s_ * x + c * y;
+                    }
+                }
+                // accumulate V (same rotation on columns of V)
+                for i in 0..n {
+                    let x = v[(i, j1)];
+                    let y = v[(i, j2)];
+                    v[(i, j1)] = c * x - s_ * y;
+                    v[(i, j2)] = s_ * x + c * y;
+                }
+            }
+        }
+        if off < eps {
+            break;
+        }
+    }
+
+    // Extract singular values (column norms) and U = column / sigma.
+    let mut order: Vec<usize> = (0..n).collect();
+    let norms: Vec<f64> = (0..n)
+        .map(|j| w.row(j).iter().map(|x| x * x).sum::<f64>().sqrt())
+        .collect();
+    order.sort_by(|&a, &b| norms[b].partial_cmp(&norms[a]).unwrap());
+
+    let mut u = Matrix::zeros(m, n);
+    let mut s = Vec::with_capacity(n);
+    let mut vt = Matrix::zeros(n, n);
+    for (jj, &j) in order.iter().enumerate() {
+        let sigma = norms[j];
+        s.push(sigma);
+        if sigma > 0.0 {
+            for i in 0..m {
+                u[(i, jj)] = w.row(j)[i] / sigma;
+            }
+        }
+        for i in 0..n {
+            vt[(jj, i)] = v[(i, j)];
+        }
+    }
+    Svd { u, s, vt }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dense::qr::orthogonality_defect;
+    use crate::util::propcheck::check;
+    use crate::util::rng::Rng;
+
+    fn assert_valid_svd(a: &Matrix, f: &Svd, tol: f64) {
+        let (m, n) = a.shape();
+        let k = m.min(n);
+        assert_eq!(f.u.shape(), (m, k));
+        assert_eq!(f.vt.shape(), (k, n));
+        assert_eq!(f.s.len(), k);
+        // descending, non-negative
+        for i in 0..k {
+            assert!(f.s[i] >= -1e-12, "negative sigma {}", f.s[i]);
+            if i > 0 {
+                assert!(f.s[i - 1] >= f.s[i] - 1e-10, "not descending at {i}");
+            }
+        }
+        let scale = a.fro_norm().max(1.0);
+        assert!(
+            f.reconstruction_error(a) / scale < tol,
+            "reconstruction {} (scale {scale})",
+            f.reconstruction_error(a)
+        );
+        assert!(orthogonality_defect(&f.u) < tol, "U not orthogonal");
+        assert!(orthogonality_defect(&f.vt.transpose()) < tol, "V not orthogonal");
+    }
+
+    #[test]
+    fn known_diagonal() {
+        let a = Matrix::diag(&[3.0, 1.0, 2.0]);
+        let f = svd(&a);
+        assert!((f.s[0] - 3.0).abs() < 1e-12);
+        assert!((f.s[1] - 2.0).abs() < 1e-12);
+        assert!((f.s[2] - 1.0).abs() < 1e-12);
+        assert_valid_svd(&a, &f, 1e-10);
+    }
+
+    #[test]
+    fn known_2x2() {
+        // A = [[3,0],[4,5]] has singular values sqrt(45)±... known: s1=3*sqrt(5), s2=sqrt(5)
+        let a = Matrix::from_rows(&[&[3.0, 0.0], &[4.0, 5.0]]);
+        let f = svd(&a);
+        assert!((f.s[0] - 3.0 * 5.0f64.sqrt()).abs() < 1e-10, "{}", f.s[0]);
+        assert!((f.s[1] - 5.0f64.sqrt()).abs() < 1e-10, "{}", f.s[1]);
+        assert_valid_svd(&a, &f, 1e-10);
+    }
+
+    #[test]
+    fn golub_reinsch_random_shapes() {
+        check("svd valid on random", 25, |rng: &mut Rng| {
+            let m = rng.usize_range(1, 60);
+            let n = rng.usize_range(1, 60);
+            let a = Matrix::randn(m, n, rng);
+            let f = svd(&a);
+            assert_valid_svd(&a, &f, 1e-9);
+        });
+    }
+
+    #[test]
+    fn jacobi_random_shapes() {
+        check("jacobi svd valid", 15, |rng: &mut Rng| {
+            let m = rng.usize_range(1, 40);
+            let n = rng.usize_range(1, 40);
+            let a = Matrix::randn(m, n, rng);
+            let f = svd_jacobi(&a);
+            assert_valid_svd(&a, &f, 1e-9);
+        });
+    }
+
+    #[test]
+    fn engines_agree_on_singular_values() {
+        check("GR sigma == Jacobi sigma", 15, |rng: &mut Rng| {
+            let m = rng.usize_range(2, 40);
+            let n = rng.usize_range(2, 40);
+            let a = Matrix::randn(m, n, rng);
+            let f1 = svd(&a);
+            let f2 = svd_jacobi(&a);
+            let scale = f1.s[0].max(1e-12);
+            for i in 0..f1.s.len() {
+                assert!(
+                    (f1.s[i] - f2.s[i]).abs() / scale < 1e-9,
+                    "sigma[{i}]: {} vs {}",
+                    f1.s[i],
+                    f2.s[i]
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn low_rank_matrix_detected() {
+        let mut rng = Rng::seed_from_u64(20);
+        // rank-3 matrix
+        let b = Matrix::randn(30, 3, &mut rng);
+        let c = Matrix::randn(3, 20, &mut rng);
+        let a = matmul(&b, &c);
+        let f = svd(&a);
+        for i in 3..f.s.len() {
+            assert!(f.s[i] < 1e-9 * f.s[0], "sigma[{i}]={} should vanish", f.s[i]);
+        }
+        assert_valid_svd(&a, &f, 1e-9);
+    }
+
+    #[test]
+    fn truncate_is_best_approximation() {
+        let mut rng = Rng::seed_from_u64(21);
+        let a = Matrix::randn(25, 15, &mut rng);
+        let f = svd(&a);
+        let tail: f64 = f.s[5..].iter().map(|x| x * x).sum::<f64>().sqrt();
+        let f5 = f.clone().truncate(5);
+        assert_eq!(f5.rank(), 5);
+        // Eckart–Young: truncated error equals the tail norm
+        let err = f5.reconstruction_error(&a);
+        assert!((err - tail).abs() < 1e-8, "err {err} tail {tail}");
+    }
+
+    #[test]
+    fn zero_and_degenerate() {
+        let a = Matrix::zeros(6, 4);
+        let f = svd(&a);
+        assert!(f.s.iter().all(|&x| x == 0.0));
+        let one = Matrix::from_rows(&[&[7.0]]);
+        let f = svd(&one);
+        assert!((f.s[0] - 7.0).abs() < 1e-12);
+        // single column
+        let col = Matrix::from_rows(&[&[3.0], &[4.0]]);
+        let f = svd(&col);
+        assert!((f.s[0] - 5.0).abs() < 1e-12);
+        assert_valid_svd(&col, &f, 1e-12);
+    }
+
+    #[test]
+    fn wide_matrix_via_transpose() {
+        let mut rng = Rng::seed_from_u64(22);
+        let a = Matrix::randn(10, 30, &mut rng);
+        let f = svd(&a);
+        assert_valid_svd(&a, &f, 1e-9);
+    }
+
+    #[test]
+    fn ill_conditioned_spectrum() {
+        // Construct A with known exponentially decaying spectrum via QR bases.
+        let mut rng = Rng::seed_from_u64(23);
+        let qu = crate::dense::qr::orthonormalize(&Matrix::randn(40, 10, &mut rng));
+        let qv = crate::dense::qr::orthonormalize(&Matrix::randn(30, 10, &mut rng));
+        let sig: Vec<f64> = (0..10).map(|i| 10f64.powi(-(i as i32))).collect();
+        let a = matmul(&qu.scale_cols(&sig), &qv.transpose());
+        let f = svd(&a);
+        for i in 0..10 {
+            assert!(
+                (f.s[i] - sig[i]).abs() / sig[i] < 1e-6,
+                "sigma[{i}] {} vs {}",
+                f.s[i],
+                sig[i]
+            );
+        }
+    }
+}

@@ -1,0 +1,34 @@
+//! Library error type.
+
+/// Errors surfaced by the fastpi library.
+#[derive(Debug, thiserror::Error)]
+pub enum Error {
+    #[error("dimension mismatch: {0}")]
+    Dim(String),
+    #[error("numerical failure: {0}")]
+    Numerical(String),
+    #[error("invalid argument: {0}")]
+    Invalid(String),
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+    #[error("artifact error: {0}")]
+    Artifact(String),
+    #[error("xla runtime error: {0}")]
+    Xla(String),
+}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(format!("{e:?}"))
+    }
+}
+
+/// Construct a dimension-mismatch error with file/line context.
+#[macro_export]
+macro_rules! dim_err {
+    ($($arg:tt)*) => {
+        $crate::error::Error::Dim(format!($($arg)*))
+    };
+}

@@ -1,0 +1,202 @@
+//! Bipartite network derived from a feature matrix (paper Definition 1).
+//!
+//! Rows of `A` are *instance* nodes (V_T) and columns are *feature* nodes
+//! (V_F); every non-zero `a_ij` is an edge (i, j). The reordering algorithm
+//! removes nodes iteratively, so the graph supports an "alive" mask instead
+//! of physically deleting adjacency.
+
+use crate::sparse::Csr;
+
+/// A node in the bipartite graph: either an instance (row) or feature (col).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum NodeId {
+    Instance(usize),
+    Feature(usize),
+}
+
+/// Adjacency of the bipartite graph with O(1) degree queries under deletion.
+#[derive(Debug, Clone)]
+pub struct Bipartite {
+    /// instance -> feature adjacency (CSR of A's pattern)
+    inst_adj: Vec<Vec<usize>>,
+    /// feature -> instance adjacency
+    feat_adj: Vec<Vec<usize>>,
+    /// alive masks
+    inst_alive: Vec<bool>,
+    feat_alive: Vec<bool>,
+    /// live degrees (decremented on neighbor removal)
+    inst_deg: Vec<usize>,
+    feat_deg: Vec<usize>,
+    live_insts: usize,
+    live_feats: usize,
+}
+
+impl Bipartite {
+    /// Build from the sparsity pattern of `a`.
+    pub fn from_csr(a: &Csr) -> Self {
+        let (m, n) = a.shape();
+        let mut inst_adj: Vec<Vec<usize>> = vec![Vec::new(); m];
+        let mut feat_adj: Vec<Vec<usize>> = vec![Vec::new(); n];
+        for i in 0..m {
+            let (js, _) = a.row(i);
+            inst_adj[i].extend_from_slice(js);
+            for &j in js {
+                feat_adj[j].push(i);
+            }
+        }
+        let inst_deg: Vec<usize> = inst_adj.iter().map(|v| v.len()).collect();
+        let feat_deg: Vec<usize> = feat_adj.iter().map(|v| v.len()).collect();
+        Bipartite {
+            inst_adj,
+            feat_adj,
+            inst_alive: vec![true; m],
+            feat_alive: vec![true; n],
+            inst_deg,
+            feat_deg,
+            live_insts: m,
+            live_feats: n,
+        }
+    }
+
+    pub fn num_instances(&self) -> usize {
+        self.inst_adj.len()
+    }
+    pub fn num_features(&self) -> usize {
+        self.feat_adj.len()
+    }
+    pub fn live_instances(&self) -> usize {
+        self.live_insts
+    }
+    pub fn live_features(&self) -> usize {
+        self.live_feats
+    }
+
+    pub fn is_alive(&self, node: NodeId) -> bool {
+        match node {
+            NodeId::Instance(i) => self.inst_alive[i],
+            NodeId::Feature(j) => self.feat_alive[j],
+        }
+    }
+
+    /// Live degree of a node.
+    pub fn degree(&self, node: NodeId) -> usize {
+        match node {
+            NodeId::Instance(i) => self.inst_deg[i],
+            NodeId::Feature(j) => self.feat_deg[j],
+        }
+    }
+
+    /// Live instance degrees (index = row id; dead nodes report 0).
+    pub fn instance_degrees(&self) -> &[usize] {
+        &self.inst_deg
+    }
+    pub fn feature_degrees(&self) -> &[usize] {
+        &self.feat_deg
+    }
+
+    /// Iterate live feature neighbors of instance i.
+    pub fn instance_neighbors(&self, i: usize) -> impl Iterator<Item = usize> + '_ {
+        self.inst_adj[i].iter().copied().filter(|&j| self.feat_alive[j])
+    }
+
+    /// Iterate live instance neighbors of feature j.
+    pub fn feature_neighbors(&self, j: usize) -> impl Iterator<Item = usize> + '_ {
+        self.feat_adj[j].iter().copied().filter(|&i| self.inst_alive[i])
+    }
+
+    /// Remove a node: mark dead and decrement live neighbor degrees.
+    pub fn remove(&mut self, node: NodeId) {
+        match node {
+            NodeId::Instance(i) => {
+                if !self.inst_alive[i] {
+                    return;
+                }
+                self.inst_alive[i] = false;
+                self.live_insts -= 1;
+                self.inst_deg[i] = 0;
+                for idx in 0..self.inst_adj[i].len() {
+                    let j = self.inst_adj[i][idx];
+                    if self.feat_alive[j] {
+                        self.feat_deg[j] -= 1;
+                    }
+                }
+            }
+            NodeId::Feature(j) => {
+                if !self.feat_alive[j] {
+                    return;
+                }
+                self.feat_alive[j] = false;
+                self.live_feats -= 1;
+                self.feat_deg[j] = 0;
+                for idx in 0..self.feat_adj[j].len() {
+                    let i = self.feat_adj[j][idx];
+                    if self.inst_alive[i] {
+                        self.inst_deg[i] -= 1;
+                    }
+                }
+            }
+        }
+    }
+
+    /// Live instance ids.
+    pub fn live_instance_ids(&self) -> Vec<usize> {
+        (0..self.num_instances()).filter(|&i| self.inst_alive[i]).collect()
+    }
+
+    /// Live feature ids.
+    pub fn live_feature_ids(&self) -> Vec<usize> {
+        (0..self.num_features()).filter(|&j| self.feat_alive[j]).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::Coo;
+
+    fn tiny() -> Bipartite {
+        // A: 3 instances x 2 features
+        // edges: (0,0), (1,0), (1,1), (2,1)
+        let mut coo = Coo::new(3, 2);
+        coo.push(0, 0, 1.0);
+        coo.push(1, 0, 1.0);
+        coo.push(1, 1, 1.0);
+        coo.push(2, 1, 1.0);
+        Bipartite::from_csr(&Csr::from_coo(&coo))
+    }
+
+    #[test]
+    fn degrees_from_pattern() {
+        let g = tiny();
+        assert_eq!(g.degree(NodeId::Instance(1)), 2);
+        assert_eq!(g.degree(NodeId::Feature(0)), 2);
+        assert_eq!(g.degree(NodeId::Feature(1)), 2);
+        assert_eq!(g.live_instances(), 3);
+        assert_eq!(g.live_features(), 2);
+    }
+
+    #[test]
+    fn removal_updates_neighbors() {
+        let mut g = tiny();
+        g.remove(NodeId::Feature(0));
+        assert!(!g.is_alive(NodeId::Feature(0)));
+        assert_eq!(g.degree(NodeId::Instance(0)), 0);
+        assert_eq!(g.degree(NodeId::Instance(1)), 1);
+        assert_eq!(g.live_features(), 1);
+        // idempotent
+        g.remove(NodeId::Feature(0));
+        assert_eq!(g.live_features(), 1);
+        // neighbor iteration skips dead
+        let nb: Vec<usize> = g.instance_neighbors(1).collect();
+        assert_eq!(nb, vec![1]);
+    }
+
+    #[test]
+    fn remove_instance_side() {
+        let mut g = tiny();
+        g.remove(NodeId::Instance(1));
+        assert_eq!(g.degree(NodeId::Feature(0)), 1);
+        assert_eq!(g.degree(NodeId::Feature(1)), 1);
+        assert_eq!(g.live_instance_ids(), vec![0, 2]);
+    }
+}

@@ -1,0 +1,154 @@
+//! Connected components of the (live part of the) bipartite graph via BFS —
+//! line 4 of Algorithm 2.
+
+use super::bipartite::Bipartite;
+
+/// Connected components over live nodes. Components are indexed 0..count;
+/// each lists its instance rows and feature cols.
+#[derive(Debug, Clone)]
+pub struct Components {
+    /// per component: (instance ids, feature ids)
+    pub comps: Vec<(Vec<usize>, Vec<usize>)>,
+    /// index into `comps` of the giant component (by total node count);
+    /// None when there are no live nodes.
+    pub giant: Option<usize>,
+}
+
+impl Components {
+    /// Total number of components.
+    pub fn count(&self) -> usize {
+        self.comps.len()
+    }
+
+    /// Components other than the giant one, in discovery order.
+    pub fn non_giant(&self) -> impl Iterator<Item = (usize, &(Vec<usize>, Vec<usize>))> {
+        let giant = self.giant;
+        self.comps
+            .iter()
+            .enumerate()
+            .filter(move |(i, _)| Some(*i) != giant)
+    }
+}
+
+/// BFS over live nodes of `g`, treating instance and feature nodes as one
+/// vertex set. O(|V| + |E|).
+pub fn connected_components(g: &Bipartite) -> Components {
+    let m = g.num_instances();
+    let n = g.num_features();
+    let mut inst_comp = vec![usize::MAX; m];
+    let mut feat_comp = vec![usize::MAX; n];
+    let mut comps: Vec<(Vec<usize>, Vec<usize>)> = Vec::new();
+    let mut queue: std::collections::VecDeque<(bool, usize)> = Default::default();
+
+    // Seed BFS from every unvisited live node (instances, then features so
+    // isolated features also form components).
+    for start in 0..m + n {
+        let (is_inst, id) = if start < m { (true, start) } else { (false, start - m) };
+        let alive = if is_inst {
+            g.is_alive(super::NodeId::Instance(id))
+        } else {
+            g.is_alive(super::NodeId::Feature(id))
+        };
+        if !alive {
+            continue;
+        }
+        let seen = if is_inst { inst_comp[id] != usize::MAX } else { feat_comp[id] != usize::MAX };
+        if seen {
+            continue;
+        }
+        let c = comps.len();
+        comps.push((Vec::new(), Vec::new()));
+        queue.push_back((is_inst, id));
+        if is_inst {
+            inst_comp[id] = c;
+        } else {
+            feat_comp[id] = c;
+        }
+        while let Some((inst, v)) = queue.pop_front() {
+            if inst {
+                comps[c].0.push(v);
+                for j in g.instance_neighbors(v) {
+                    if feat_comp[j] == usize::MAX {
+                        feat_comp[j] = c;
+                        queue.push_back((false, j));
+                    }
+                }
+            } else {
+                comps[c].1.push(v);
+                for i in g.feature_neighbors(v) {
+                    if inst_comp[i] == usize::MAX {
+                        inst_comp[i] = c;
+                        queue.push_back((true, i));
+                    }
+                }
+            }
+        }
+    }
+
+    let giant = comps
+        .iter()
+        .enumerate()
+        .max_by_key(|(_, (is, fs))| is.len() + fs.len())
+        .map(|(i, _)| i);
+    Components { comps, giant }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::{Coo, Csr};
+
+    fn graph_from_edges(m: usize, n: usize, edges: &[(usize, usize)]) -> Bipartite {
+        let mut coo = Coo::new(m, n);
+        for &(i, j) in edges {
+            coo.push(i, j, 1.0);
+        }
+        Bipartite::from_csr(&Csr::from_coo(&coo))
+    }
+
+    #[test]
+    fn single_component() {
+        let g = graph_from_edges(3, 2, &[(0, 0), (1, 0), (1, 1), (2, 1)]);
+        let c = connected_components(&g);
+        assert_eq!(c.count(), 1);
+        assert_eq!(c.giant, Some(0));
+        assert_eq!(c.comps[0].0.len(), 3);
+        assert_eq!(c.comps[0].1.len(), 2);
+    }
+
+    #[test]
+    fn two_components_and_isolated() {
+        // comp A: rows {0,1} + col {0}; comp B: row {2} + col {1};
+        // isolated: row 3 (degree 0), col 2 (degree 0)
+        let g = graph_from_edges(4, 3, &[(0, 0), (1, 0), (2, 1)]);
+        let c = connected_components(&g);
+        assert_eq!(c.count(), 4);
+        let giant = c.giant.unwrap();
+        assert_eq!(c.comps[giant].0.len() + c.comps[giant].1.len(), 3);
+        // all nodes covered exactly once
+        let insts: usize = c.comps.iter().map(|(i, _)| i.len()).sum();
+        let feats: usize = c.comps.iter().map(|(_, f)| f.len()).sum();
+        assert_eq!(insts, 4);
+        assert_eq!(feats, 3);
+    }
+
+    #[test]
+    fn respects_removed_nodes() {
+        let mut g = graph_from_edges(3, 2, &[(0, 0), (1, 0), (1, 1), (2, 1)]);
+        // removing the bridging instance splits the graph
+        g.remove(super::super::NodeId::Instance(1));
+        let c = connected_components(&g);
+        assert_eq!(c.count(), 2);
+        let sizes: Vec<usize> =
+            c.comps.iter().map(|(i, f)| i.len() + f.len()).collect();
+        assert_eq!(sizes, vec![2, 2]);
+    }
+
+    #[test]
+    fn empty_graph() {
+        let g = graph_from_edges(0, 0, &[]);
+        let c = connected_components(&g);
+        assert_eq!(c.count(), 0);
+        assert_eq!(c.giant, None);
+    }
+}

@@ -1,0 +1,121 @@
+//! Degree statistics — the paper's Figure 1 (log-log degree distributions)
+//! and the skewness evidence that motivates FastPI.
+
+/// Summary statistics of a degree sequence.
+#[derive(Debug, Clone)]
+pub struct DegreeStats {
+    pub count: usize,
+    pub min: usize,
+    pub max: usize,
+    pub mean: f64,
+    pub median: usize,
+    /// Gini coefficient of the degree mass — 0 uniform, → 1 extreme skew.
+    pub gini: f64,
+    /// fraction of edges covered by the top 1% highest-degree nodes
+    pub top1pct_edge_share: f64,
+}
+
+impl DegreeStats {
+    pub fn from_degrees(degrees: &[usize]) -> DegreeStats {
+        if degrees.is_empty() {
+            return DegreeStats {
+                count: 0,
+                min: 0,
+                max: 0,
+                mean: 0.0,
+                median: 0,
+                gini: 0.0,
+                top1pct_edge_share: 0.0,
+            };
+        }
+        let mut d: Vec<usize> = degrees.to_vec();
+        d.sort_unstable();
+        let n = d.len();
+        let total: usize = d.iter().sum();
+        let mean = total as f64 / n as f64;
+        // Gini from the sorted sequence
+        let gini = if total == 0 {
+            0.0
+        } else {
+            let weighted: f64 =
+                d.iter().enumerate().map(|(i, &x)| (2.0 * (i as f64 + 1.0) - n as f64 - 1.0) * x as f64).sum();
+            weighted / (n as f64 * total as f64)
+        };
+        let top = (n as f64 * 0.01).ceil() as usize;
+        let top_edges: usize = d[n - top.max(1)..].iter().sum();
+        DegreeStats {
+            count: n,
+            min: d[0],
+            max: d[n - 1],
+            mean,
+            median: d[n / 2],
+            gini,
+            top1pct_edge_share: if total == 0 { 0.0 } else { top_edges as f64 / total as f64 },
+        }
+    }
+}
+
+/// Log-binned degree histogram: (bin lower edge, bin upper edge, count).
+/// Bins grow geometrically by factor 2 starting at degree 1; degree-0 nodes
+/// are reported in a leading (0,0,count) bin. This is the series Figure 1
+/// plots on log-log axes.
+pub fn log_binned_histogram(degrees: &[usize]) -> Vec<(usize, usize, usize)> {
+    let max = degrees.iter().copied().max().unwrap_or(0);
+    let zero = degrees.iter().filter(|&&d| d == 0).count();
+    let mut bins: Vec<(usize, usize, usize)> = Vec::new();
+    if zero > 0 {
+        bins.push((0, 0, zero));
+    }
+    let mut lo = 1usize;
+    while lo <= max {
+        let hi = lo * 2 - 1;
+        let count = degrees.iter().filter(|&&d| d >= lo && d <= hi).count();
+        if count > 0 {
+            bins.push((lo, hi, count));
+        }
+        lo *= 2;
+    }
+    bins
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_uniform_vs_skewed() {
+        let uniform = vec![5usize; 100];
+        let su = DegreeStats::from_degrees(&uniform);
+        assert!((su.gini).abs() < 1e-9);
+        assert_eq!(su.median, 5);
+        assert_eq!(su.max, 5);
+
+        // skewed: one hub with 1000 edges, 99 nodes with 1
+        let mut skewed = vec![1usize; 99];
+        skewed.push(1000);
+        let ss = DegreeStats::from_degrees(&skewed);
+        assert!(ss.gini > 0.8, "gini {}", ss.gini);
+        assert!(ss.top1pct_edge_share > 0.9);
+        assert_eq!(ss.median, 1);
+    }
+
+    #[test]
+    fn histogram_covers_all_nodes() {
+        let degrees = vec![0, 1, 1, 2, 3, 4, 8, 9, 100];
+        let bins = log_binned_histogram(&degrees);
+        let total: usize = bins.iter().map(|b| b.2).sum();
+        assert_eq!(total, degrees.len());
+        // bin edges double
+        assert_eq!(bins[0], (0, 0, 1));
+        assert_eq!(bins[1], (1, 1, 2));
+        assert_eq!(bins[2], (2, 3, 2));
+        assert_eq!(bins[3], (4, 7, 1));
+    }
+
+    #[test]
+    fn empty_degrees() {
+        let s = DegreeStats::from_degrees(&[]);
+        assert_eq!(s.count, 0);
+        assert!(log_binned_histogram(&[]).is_empty());
+    }
+}

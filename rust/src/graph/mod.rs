@@ -1,0 +1,11 @@
+//! Bipartite-graph view of a sparse feature matrix (paper Definition 1) and
+//! the graph algorithms Algorithm 2 needs: degree statistics and BFS
+//! connected components over the union of instance and feature nodes.
+
+pub mod bipartite;
+pub mod components;
+pub mod degree;
+
+pub use bipartite::{Bipartite, NodeId};
+pub use components::{connected_components, Components};
+pub use degree::{log_binned_histogram, DegreeStats};

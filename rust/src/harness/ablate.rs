@@ -1,0 +1,152 @@
+//! Ablations of FastPI's design choices (DESIGN.md §6): the reordering
+//! itself, the per-block SVD of A11, the hub ratio k, and the inner SVD
+//! engine of the incremental updates.
+
+use crate::data::load_dataset;
+use crate::dense::svd_truncated;
+use crate::error::Result;
+use crate::pinv::{fastpi_svd, FastPiConfig};
+use crate::reorder::{reorder, ReorderConfig};
+use crate::svdlr::{block_diag_svd, InnerSvd};
+use crate::util::rng::Rng;
+use std::time::Instant;
+
+/// (a) Reordering on/off: FastPI vs the same inner engine applied to the
+/// whole matrix without any reorder/split. Returns (fastpi_secs, flat_secs,
+/// fastpi_err, flat_err) on the densified matrix.
+pub fn ablate_reorder(
+    dataset: &str,
+    scale: f64,
+    alpha: f64,
+    seed: u64,
+) -> Result<(f64, f64, f64, f64)> {
+    let ds = load_dataset(dataset, scale, seed, None)?;
+    let dense = ds.a.to_dense();
+    let r = ((alpha * ds.a.cols() as f64).ceil() as usize).max(1);
+
+    let mut rng = Rng::seed_from_u64(seed);
+    let t = Instant::now();
+    let cfg = FastPiConfig { alpha, k: ds.k, ..Default::default() };
+    let fast = fastpi_svd(&ds.a, &cfg, &mut rng)?;
+    let fast_secs = t.elapsed().as_secs_f64();
+    let fast_err = fast.svd.reconstruction_error(&dense);
+
+    let mut rng = Rng::seed_from_u64(seed);
+    let t = Instant::now();
+    let flat = InnerSvd::Auto.run(&dense, r, &mut rng);
+    let flat_secs = t.elapsed().as_secs_f64();
+    let flat_err = flat.reconstruction_error(&dense);
+
+    Ok((fast_secs, flat_secs, fast_err, flat_err))
+}
+
+/// (b) Block-diagonal SVD vs one monolithic dense SVD of A11.
+/// Returns (block_secs, mono_secs, block_err, mono_err) measured on A11.
+pub fn ablate_block_svd(
+    dataset: &str,
+    scale: f64,
+    alpha: f64,
+    seed: u64,
+) -> Result<(f64, f64, f64, f64)> {
+    let ds = load_dataset(dataset, scale, seed, None)?;
+    let r = reorder(&ds.a, &ReorderConfig { k: ds.k, max_iters: 1000 });
+    let b = r.apply(&ds.a);
+
+    let t = Instant::now();
+    let f_block = block_diag_svd(&b, &r.blocks, r.m1, r.n1, alpha);
+    let block_secs = t.elapsed().as_secs_f64();
+
+    let a11 = b.block_dense(0, 0, r.m1, r.n1);
+    let target = ((alpha * r.n1 as f64).ceil() as usize).clamp(1, r.m1.min(r.n1).max(1));
+    let t = Instant::now();
+    let f_mono = svd_truncated(&a11, target);
+    let mono_secs = t.elapsed().as_secs_f64();
+
+    let block_err = f_block.reconstruction_error(&a11);
+    let mono_err = f_mono.reconstruction_error(&a11);
+    Ok((block_secs, mono_secs, block_err, mono_err))
+}
+
+/// (c) Hub-ratio sweep: k → (secs, m2, n2, blocks, iters).
+pub fn ablate_hub_ratio(
+    dataset: &str,
+    scale: f64,
+    alpha: f64,
+    ks: &[f64],
+    seed: u64,
+) -> Result<Vec<(f64, f64, usize, usize, usize, usize)>> {
+    let ds = load_dataset(dataset, scale, seed, None)?;
+    let mut out = Vec::new();
+    for &k in ks {
+        let mut rng = Rng::seed_from_u64(seed);
+        let cfg = FastPiConfig { alpha, k, ..Default::default() };
+        let t = Instant::now();
+        let f = fastpi_svd(&ds.a, &cfg, &mut rng)?;
+        let secs = t.elapsed().as_secs_f64();
+        let r = &f.reordering;
+        out.push((k, secs, r.m2, r.n2, r.blocks.len(), r.iterations()));
+    }
+    Ok(out)
+}
+
+/// (d) Inner-engine choice at a given α: Dense vs FrPca vs Auto.
+/// Returns (engine name, secs, reconstruction error).
+pub fn ablate_inner_engine(
+    dataset: &str,
+    scale: f64,
+    alpha: f64,
+    seed: u64,
+) -> Result<Vec<(&'static str, f64, f64)>> {
+    let ds = load_dataset(dataset, scale, seed, None)?;
+    let dense = ds.a.to_dense();
+    let mut out = Vec::new();
+    for (name, inner) in
+        [("dense", InnerSvd::Dense), ("frpca", InnerSvd::FrPca), ("auto", InnerSvd::Auto)]
+    {
+        let mut rng = Rng::seed_from_u64(seed);
+        let cfg = FastPiConfig { alpha, k: ds.k, inner, ..Default::default() };
+        let t = Instant::now();
+        let f = fastpi_svd(&ds.a, &cfg, &mut rng)?;
+        out.push((name, t.elapsed().as_secs_f64(), f.svd.reconstruction_error(&dense)));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reorder_ablation_errors_comparable() {
+        let (fs, ss, fe, se) = ablate_reorder("bibtex", 0.03, 0.5, 1).unwrap();
+        assert!(fs > 0.0 && ss > 0.0);
+        // both produce rank-r approximations of similar quality
+        assert!((fe - se).abs() < 0.5 * se.max(fe).max(1e-9), "err {fe} vs {se}");
+    }
+
+    #[test]
+    fn block_svd_matches_monolithic_quality() {
+        let (bs, ms, be, me) = ablate_block_svd("rcv", 0.03, 1.0, 1).unwrap();
+        assert!(bs > 0.0 && ms > 0.0);
+        // at α=1 both are (near-)exact on A11
+        assert!(be < 1e-6 + me * 1.05, "block err {be} vs mono {me}");
+    }
+
+    #[test]
+    fn hub_ratio_sweep_shapes() {
+        let rows = ablate_hub_ratio("bibtex", 0.03, 0.3, &[0.01, 0.05], 1).unwrap();
+        assert_eq!(rows.len(), 2);
+        // larger k ⇒ fewer iterations
+        assert!(rows[1].5 <= rows[0].5, "iters {} vs {}", rows[1].5, rows[0].5);
+    }
+
+    #[test]
+    fn inner_engines_all_valid() {
+        let rows = ablate_inner_engine("bibtex", 0.03, 0.2, 1).unwrap();
+        assert_eq!(rows.len(), 3);
+        let errs: Vec<f64> = rows.iter().map(|r| r.2).collect();
+        let lo = errs.iter().cloned().fold(f64::INFINITY, f64::min);
+        let hi = errs.iter().cloned().fold(0.0f64, f64::max);
+        assert!(hi < lo * 1.25 + 1e-9, "inner engines diverge: {rows:?}");
+    }
+}

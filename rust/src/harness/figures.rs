@@ -1,0 +1,186 @@
+//! Figure 1 (degree distributions) and Figure 3 (reordering progress +
+//! block structure) harnesses, with text renderings (log-binned series and
+//! an ASCII spy plot).
+
+use crate::data::load_dataset;
+use crate::error::Result;
+use crate::graph::{log_binned_histogram, DegreeStats};
+use crate::reorder::{reorder, ReorderConfig, Reordering};
+use crate::sparse::Csr;
+
+/// Figure 1: degree distribution evidence for one dataset.
+#[derive(Debug)]
+pub struct Fig1 {
+    pub dataset: String,
+    pub instance_stats: DegreeStats,
+    pub feature_stats: DegreeStats,
+    /// log-binned histograms: (lo, hi, count)
+    pub instance_hist: Vec<(usize, usize, usize)>,
+    pub feature_hist: Vec<(usize, usize, usize)>,
+}
+
+pub fn fig1(dataset: &str, scale: f64, seed: u64) -> Result<Fig1> {
+    let ds = load_dataset(dataset, scale, seed, None)?;
+    let rd = ds.a.row_degrees();
+    let cd = ds.a.col_degrees();
+    Ok(Fig1 {
+        dataset: dataset.to_string(),
+        instance_stats: DegreeStats::from_degrees(&rd),
+        feature_stats: DegreeStats::from_degrees(&cd),
+        instance_hist: log_binned_histogram(&rd),
+        feature_hist: log_binned_histogram(&cd),
+    })
+}
+
+pub fn render_fig1(f: &Fig1) -> String {
+    let mut out = format!("== Figure 1: degree distributions — {} ==\n", f.dataset);
+    let fmt_stats = |name: &str, s: &DegreeStats| {
+        format!(
+            "{name}: count={} max={} mean={:.2} median={} gini={:.3} top1%edges={:.2}\n",
+            s.count, s.max, s.mean, s.median, s.gini, s.top1pct_edge_share
+        )
+    };
+    out.push_str(&fmt_stats("instances", &f.instance_stats));
+    out.push_str(&fmt_stats("features ", &f.feature_stats));
+    for (name, hist) in [("instance", &f.instance_hist), ("feature", &f.feature_hist)] {
+        out.push_str(&format!("{name} degree histogram (log-binned):\n"));
+        for &(lo, hi, count) in hist {
+            let bar = "#".repeat(((count as f64 + 1.0).log2() as usize).min(60));
+            out.push_str(&format!("  [{lo:>6},{hi:>6}] {count:>7} {bar}\n"));
+        }
+    }
+    out
+}
+
+/// Figure 3: reordering progress of one dataset.
+#[derive(Debug)]
+pub struct Fig3 {
+    pub dataset: String,
+    pub reordering: Reordering,
+    /// nnz density of A11 / A12+A21 / A22 regions after reordering
+    pub nnz_a11: usize,
+    pub nnz_off: usize,
+    pub nnz_a22: usize,
+    pub spy: String,
+}
+
+pub fn fig3(dataset: &str, scale: f64, seed: u64) -> Result<Fig3> {
+    let ds = load_dataset(dataset, scale, seed, None)?;
+    let r = reorder(&ds.a, &ReorderConfig { k: ds.k, max_iters: 1000 });
+    let b = r.apply(&ds.a);
+    let (m1, n1, m2, n2) = (r.m1, r.n1, r.m2, r.n2);
+    let nnz_a11 = b.nnz_in_region(0, 0, m1, n1);
+    let nnz_a22 = b.nnz_in_region(m1, n1, m2, n2);
+    let nnz_off = b.nnz() - nnz_a11 - nnz_a22;
+    let spy = spy_plot(&b, 48, 24);
+    Ok(Fig3 { dataset: dataset.to_string(), reordering: r, nnz_a11, nnz_off, nnz_a22, spy })
+}
+
+pub fn render_fig3(f: &Fig3) -> String {
+    let r = &f.reordering;
+    let mut out = format!(
+        "== Figure 3: reordering — {} ==\nm1={} n1={} m2={} n2={} blocks={} iters={}\n",
+        f.dataset,
+        r.m1,
+        r.n1,
+        r.m2,
+        r.n2,
+        r.blocks.len(),
+        r.iterations()
+    );
+    out.push_str("iter  m_hub n_hub  spokes(i/f)  comps   GCC(i/f)\n");
+    for t in &r.trace {
+        out.push_str(&format!(
+            "{:>4} {:>6} {:>5} {:>6}/{:<6} {:>6} {:>7}/{:<7}\n",
+            t.iter, t.m_hub, t.n_hub, t.spoke_insts, t.spoke_feats, t.num_spoke_comps,
+            t.gcc_insts, t.gcc_feats
+        ));
+    }
+    let total = (f.nnz_a11 + f.nnz_off + f.nnz_a22).max(1);
+    out.push_str(&format!(
+        "nnz split: A11 {} ({:.1}%)  off-diag {} ({:.1}%)  A22 {} ({:.1}%)\n",
+        f.nnz_a11,
+        100.0 * f.nnz_a11 as f64 / total as f64,
+        f.nnz_off,
+        100.0 * f.nnz_off as f64 / total as f64,
+        f.nnz_a22,
+        100.0 * f.nnz_a22 as f64 / total as f64
+    ));
+    out.push_str("spy plot (reordered; darker = denser):\n");
+    out.push_str(&f.spy);
+    out
+}
+
+/// ASCII density plot of a sparse matrix on a `w`×`h` character grid.
+pub fn spy_plot(a: &Csr, w: usize, h: usize) -> String {
+    let (m, n) = a.shape();
+    if m == 0 || n == 0 {
+        return String::from("(empty)\n");
+    }
+    let mut counts = vec![0usize; w * h];
+    for i in 0..m {
+        let gy = (i * h / m).min(h - 1);
+        let (js, _) = a.row(i);
+        for &j in js {
+            let gx = (j * w / n).min(w - 1);
+            counts[gy * w + gx] += 1;
+        }
+    }
+    let max = counts.iter().copied().max().unwrap_or(0).max(1);
+    let glyphs = [' ', '.', ':', '+', '*', '#', '@'];
+    let mut out = String::with_capacity((w + 3) * h);
+    for row in counts.chunks(w) {
+        out.push('|');
+        for &c in row {
+            let level = if c == 0 {
+                0
+            } else {
+                1 + ((c as f64).ln() / (max as f64).ln().max(1e-9) * (glyphs.len() - 2) as f64)
+                    .round() as usize
+            };
+            out.push(glyphs[level.min(glyphs.len() - 1)]);
+        }
+        out.push_str("|\n");
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig1_reports_skew() {
+        let f = fig1("rcv", 0.03, 1).unwrap();
+        assert!(f.feature_stats.gini > 0.2, "gini {}", f.feature_stats.gini);
+        let total: usize = f.feature_hist.iter().map(|b| b.2).sum();
+        assert_eq!(total, f.feature_stats.count);
+        let text = render_fig1(&f);
+        assert!(text.contains("degree histogram"));
+    }
+
+    #[test]
+    fn fig3_concentrates_mass() {
+        let f = fig3("rcv", 0.03, 1).unwrap();
+        let total = f.nnz_a11 + f.nnz_off + f.nnz_a22;
+        assert!(total > 0);
+        // A22 occupies a small fraction of the area but a large nnz share
+        let r = &f.reordering;
+        let area_frac = (r.m2 * r.n2) as f64
+            / ((r.m1 + r.m2) * (r.n1 + r.n2)) as f64;
+        let nnz_frac = f.nnz_a22 as f64 / total as f64;
+        assert!(
+            nnz_frac > area_frac,
+            "A22 nnz share {nnz_frac:.3} should exceed its area share {area_frac:.3}"
+        );
+        assert!(render_fig3(&f).contains("spy plot"));
+    }
+
+    #[test]
+    fn spy_plot_dimensions() {
+        let f = fig3("bibtex", 0.03, 2).unwrap();
+        let lines: Vec<&str> = f.spy.lines().collect();
+        assert_eq!(lines.len(), 24);
+        assert!(lines.iter().all(|l| l.len() == 50)); // 48 + 2 borders
+    }
+}

@@ -1,0 +1,20 @@
+//! Experiment harnesses — one runner per paper table/figure (DESIGN.md §6).
+//! Shared by the `fastpi` CLI and the `benches/` targets, so every number in
+//! EXPERIMENTS.md is regenerable from two entry points.
+
+pub mod ablate;
+pub mod figures;
+pub mod scaling;
+pub mod sweep;
+pub mod table3;
+
+pub use sweep::{SweepConfig, SweepRow};
+
+/// Default datasets for experiment sweeps.
+pub const DEFAULT_DATASETS: [&str; 4] = ["amazon", "rcv", "eurlex", "bibtex"];
+
+/// Default α grid (the paper sweeps 0.01 … 1.0).
+pub const DEFAULT_ALPHAS: [f64; 7] = [0.01, 0.05, 0.1, 0.2, 0.4, 0.7, 1.0];
+
+/// Default scale for CI-speed runs (full-size = 1.0; see DESIGN.md §5).
+pub const DEFAULT_SCALE: f64 = 0.1;

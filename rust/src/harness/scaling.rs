@@ -1,0 +1,87 @@
+//! Table 2 / Lemma 1 — empirical complexity scaling. Measures FastPI
+//! wall-clock as one problem dimension grows with the others fixed, and
+//! fits the log-log slope: time ∝ m^a at fixed rank (Lemma 1 predicts the
+//! dominant term mr², i.e. a ≈ 1), and time ∝ r^b at fixed m (b ≈ 2).
+
+use crate::coordinator::{PinvJob, PipelineCoordinator};
+use crate::data::{generate, SynthConfig};
+use crate::error::Result;
+use crate::pinv::Method;
+use crate::util::rng::Rng;
+
+/// One scaling measurement.
+#[derive(Debug, Clone)]
+pub struct ScalePoint {
+    pub axis: &'static str,
+    pub value: usize,
+    pub secs: f64,
+}
+
+/// Sweep m (rows) at fixed n and α.
+pub fn sweep_m(ms: &[usize], n: usize, alpha: f64, seed: u64) -> Result<Vec<ScalePoint>> {
+    let coord = PipelineCoordinator::new();
+    let mut out = Vec::new();
+    for &m in ms {
+        let cfg = SynthConfig { m, n, labels: 16, nnz: 6 * m, ..Default::default() };
+        let mut rng = Rng::seed_from_u64(seed);
+        let (a, _y) = generate(&cfg, &mut rng);
+        let job = PinvJob { method: Method::FastPi, alpha, k: 0.01, seed };
+        let r = coord.run(&a, &job)?;
+        out.push(ScalePoint { axis: "m", value: m, secs: r.svd_secs });
+    }
+    Ok(out)
+}
+
+/// Sweep α (hence rank r = ⌈αn⌉) at fixed matrix size.
+pub fn sweep_alpha(alphas: &[f64], m: usize, n: usize, seed: u64) -> Result<Vec<ScalePoint>> {
+    let coord = PipelineCoordinator::new();
+    let cfg = SynthConfig { m, n, labels: 16, nnz: 6 * m, ..Default::default() };
+    let mut rng = Rng::seed_from_u64(seed);
+    let (a, _y) = generate(&cfg, &mut rng);
+    let mut out = Vec::new();
+    for &alpha in alphas {
+        let job = PinvJob { method: Method::FastPi, alpha, k: 0.01, seed };
+        let r = coord.run(&a, &job)?;
+        let rank = ((alpha * n as f64).ceil()) as usize;
+        out.push(ScalePoint { axis: "r", value: rank, secs: r.svd_secs });
+    }
+    Ok(out)
+}
+
+/// Least-squares slope of log(secs) vs log(value).
+pub fn loglog_slope(points: &[ScalePoint]) -> f64 {
+    let n = points.len() as f64;
+    assert!(n >= 2.0);
+    let xs: Vec<f64> = points.iter().map(|p| (p.value as f64).ln()).collect();
+    let ys: Vec<f64> = points.iter().map(|p| p.secs.max(1e-9).ln()).collect();
+    let mx = xs.iter().sum::<f64>() / n;
+    let my = ys.iter().sum::<f64>() / n;
+    let cov: f64 = xs.iter().zip(&ys).map(|(x, y)| (x - mx) * (y - my)).sum();
+    let var: f64 = xs.iter().map(|x| (x - mx) * (x - mx)).sum();
+    cov / var.max(1e-12)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn slope_fit_exact_on_synthetic() {
+        // secs = value^2 exactly ⇒ slope 2
+        let pts: Vec<ScalePoint> = [10usize, 20, 40, 80]
+            .iter()
+            .map(|&v| ScalePoint { axis: "r", value: v, secs: (v * v) as f64 })
+            .collect();
+        assert!((loglog_slope(&pts) - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn sweeps_run() {
+        let pm = sweep_m(&[200, 400], 60, 0.3, 1).unwrap();
+        assert_eq!(pm.len(), 2);
+        assert!(pm.iter().all(|p| p.secs > 0.0));
+        let pa = sweep_alpha(&[0.2, 0.6], 300, 60, 1).unwrap();
+        assert_eq!(pa.len(), 2);
+        assert!(pa[0].value < pa[1].value);
+    }
+}

@@ -1,0 +1,144 @@
+//! The core sweep runner behind Figures 4, 5, and 6: for each
+//! (dataset × α × method) cell it computes the low-rank SVD (timed — the
+//! Fig-6 metric), and optionally the reconstruction error (Fig 4) and the
+//! multi-label regression metrics (Fig 5).
+
+use crate::coordinator::{PinvJob, PipelineCoordinator};
+use crate::data::{load_dataset, Dataset};
+use crate::error::Result;
+use crate::pinv::Method;
+use crate::regress::{precision_at_k, train_test_split, MultiLabelModel};
+use crate::util::rng::Rng;
+
+/// What to compute per cell.
+#[derive(Debug, Clone)]
+pub struct SweepConfig {
+    pub datasets: Vec<String>,
+    pub alphas: Vec<f64>,
+    pub methods: Vec<Method>,
+    pub scale: f64,
+    pub seed: u64,
+    /// compute ‖A − UΣVᵀ‖_F (densifies A once per dataset)
+    pub reconstruction: bool,
+    /// run the 90/10 regression and report P@k
+    pub regression: bool,
+}
+
+impl Default for SweepConfig {
+    fn default() -> Self {
+        SweepConfig {
+            datasets: super::DEFAULT_DATASETS.iter().map(|s| s.to_string()).collect(),
+            alphas: super::DEFAULT_ALPHAS.to_vec(),
+            methods: Method::PAPER_SET.to_vec(),
+            scale: super::DEFAULT_SCALE,
+            seed: 42,
+            reconstruction: false,
+            regression: false,
+        }
+    }
+}
+
+impl SweepConfig {
+    /// Honour FASTPI_BENCH_FAST: fewer datasets and α points for smoke runs.
+    pub fn apply_fast_env(mut self) -> Self {
+        if std::env::var("FASTPI_BENCH_FAST").is_ok() {
+            self.datasets.truncate(2);
+            self.alphas = vec![0.1, 0.4, 1.0];
+            self.scale = self.scale.min(0.05);
+        }
+        self
+    }
+}
+
+/// One sweep cell result.
+#[derive(Debug, Clone)]
+pub struct SweepRow {
+    pub dataset: String,
+    pub method: &'static str,
+    pub alpha: f64,
+    pub rank: usize,
+    pub svd_secs: f64,
+    pub recon_error: Option<f64>,
+    pub p_at_1: Option<f64>,
+    pub p_at_3: Option<f64>,
+    pub p_at_5: Option<f64>,
+}
+
+/// Run the sweep; `emit` is called after every cell (for live table output).
+pub fn run_sweep(cfg: &SweepConfig, mut emit: impl FnMut(&SweepRow)) -> Result<Vec<SweepRow>> {
+    let coord = PipelineCoordinator::new();
+    let mut rows = Vec::new();
+    for ds_name in &cfg.datasets {
+        let ds: Dataset = load_dataset(ds_name, cfg.scale, cfg.seed, None)?;
+        // one split per dataset, shared across methods/alphas so Fig-5
+        // differences come from the pseudoinverse, not the split
+        let mut split_rng = Rng::seed_from_u64(cfg.seed ^ 0x5117);
+        let split = train_test_split(&ds.a, &ds.y, 0.1, &mut split_rng);
+        let a_eval = if cfg.regression { &split.a_train } else { &ds.a };
+        let dense = if cfg.reconstruction { Some(a_eval.to_dense()) } else { None };
+
+        for &alpha in &cfg.alphas {
+            for &method in &cfg.methods {
+                let job = PinvJob { method, alpha, k: ds.k, seed: cfg.seed };
+                let report = coord.run(a_eval, &job)?;
+                let recon_error =
+                    dense.as_ref().map(|d| report.svd.reconstruction_error(d));
+                let (mut p1, mut p3, mut p5) = (None, None, None);
+                if cfg.regression {
+                    let (model, _) = MultiLabelModel::train(&report.pinv, &split.y_train);
+                    let scores = model.predict(&split.a_test);
+                    p1 = Some(precision_at_k(&scores, &split.y_test, 1));
+                    p3 = Some(precision_at_k(&scores, &split.y_test, 3));
+                    p5 = Some(precision_at_k(&scores, &split.y_test, 5));
+                }
+                let row = SweepRow {
+                    dataset: ds_name.clone(),
+                    method: method.name(),
+                    alpha,
+                    rank: report.rank,
+                    svd_secs: report.svd_secs,
+                    recon_error,
+                    p_at_1: p1,
+                    p_at_3: p3,
+                    p_at_5: p5,
+                };
+                emit(&row);
+                rows.push(row);
+            }
+        }
+    }
+    Ok(rows)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tiny_sweep_produces_grid() {
+        let cfg = SweepConfig {
+            datasets: vec!["bibtex".into()],
+            alphas: vec![0.2, 0.5],
+            methods: vec![Method::FastPi, Method::RandPi],
+            scale: 0.03,
+            seed: 7,
+            reconstruction: true,
+            regression: true,
+        };
+        let mut seen = 0;
+        let rows = run_sweep(&cfg, |_| seen += 1).unwrap();
+        assert_eq!(rows.len(), 4);
+        assert_eq!(seen, 4);
+        for r in &rows {
+            assert!(r.svd_secs > 0.0);
+            assert!(r.recon_error.unwrap() >= 0.0);
+            assert!(r.p_at_3.unwrap() >= 0.0 && r.p_at_3.unwrap() <= 1.0);
+            assert!(r.rank > 0);
+        }
+        // same alpha ⇒ similar error across methods (Figure 4's claim)
+        let e_fast = rows[0].recon_error.unwrap();
+        let e_rand = rows[1].recon_error.unwrap();
+        assert!((e_fast - e_rand).abs() < 0.35 * e_rand.max(e_fast).max(1e-9),
+            "fast {e_fast} vs rand {e_rand}");
+    }
+}

@@ -1,0 +1,34 @@
+//! # FastPI — fast and accurate pseudoinverse of sparse matrices
+//!
+//! A production reproduction of *Jung & Sael, "Fast and Accurate
+//! Pseudoinverse with Sparse Matrix Reordering and Incremental Approach"*
+//! (Machine Learning, 2020), built as a three-layer rust + JAX + Pallas
+//! system:
+//!
+//! * **Layer 3 (this crate)** — the full FastPI pipeline: bipartite
+//!   hub-and-spoke matrix reordering, block-diagonal SVD, incremental
+//!   low-rank SVD updates, pseudoinverse construction, the multi-label
+//!   regression application, all baselines (RandPI / KrylovPI / frPCA),
+//!   synthetic dataset generators, a pipeline coordinator, and a scoring
+//!   server. Python never runs on any execution path.
+//! * **Layer 2/1 (python/, build-time only)** — JAX entry points over a
+//!   Pallas tiled-GEMM kernel, AOT-lowered to HLO text that
+//!   [`runtime`] loads through PJRT (`xla` crate) for artifact-backed GEMM.
+//!
+//! See DESIGN.md for the architecture and EXPERIMENTS.md for the
+//! paper-vs-measured results.
+
+pub mod cli;
+pub mod coordinator;
+pub mod data;
+pub mod dense;
+pub mod error;
+pub mod graph;
+pub mod harness;
+pub mod pinv;
+pub mod regress;
+pub mod reorder;
+pub mod runtime;
+pub mod sparse;
+pub mod svdlr;
+pub mod util;

@@ -1,0 +1,8 @@
+//! FastPI command-line interface — leader entrypoint.
+//!
+//! Subcommands map 1:1 to the paper's experiments (see DESIGN.md §6) plus
+//! operational commands (`pinv`, `serve`, `datagen`, `selftest`).
+
+fn main() {
+    fastpi::cli::main();
+}

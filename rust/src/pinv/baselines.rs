@@ -1,0 +1,104 @@
+//! Uniform access to all pseudoinverse methods — the experiment harnesses
+//! sweep over these.
+
+use super::fastpi::FastPiEngine;
+use crate::dense::Svd;
+use crate::error::Result;
+use crate::sparse::Csr;
+use crate::svdlr::{DenseEngine, FrPcaEngine, KrylovEngine, LowRankEngine, RandomizedEngine};
+use crate::util::rng::Rng;
+
+/// The methods compared in the paper's evaluation (plus the dense oracle).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Method {
+    FastPi,
+    RandPi,
+    KrylovPi,
+    FrPca,
+    Dense,
+}
+
+impl Method {
+    pub const PAPER_SET: [Method; 4] =
+        [Method::FastPi, Method::RandPi, Method::KrylovPi, Method::FrPca];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Method::FastPi => "FastPI",
+            Method::RandPi => "RandPI",
+            Method::KrylovPi => "KrylovPI",
+            Method::FrPca => "frPCA",
+            Method::Dense => "DenseSVD",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Method> {
+        match s.to_ascii_lowercase().as_str() {
+            "fastpi" => Some(Method::FastPi),
+            "randpi" => Some(Method::RandPi),
+            "krylovpi" | "krylov" => Some(Method::KrylovPi),
+            "frpca" => Some(Method::FrPca),
+            "dense" | "densesvd" => Some(Method::Dense),
+            _ => None,
+        }
+    }
+
+    pub fn engine(&self) -> Box<dyn LowRankEngine> {
+        match self {
+            Method::FastPi => Box::new(FastPiEngine::default()),
+            Method::RandPi => Box::new(RandomizedEngine::default()),
+            Method::KrylovPi => Box::new(KrylovEngine::default()),
+            Method::FrPca => Box::new(FrPcaEngine::default()),
+            Method::Dense => Box::new(DenseEngine),
+        }
+    }
+}
+
+/// Compute the rank-⌈α·n⌉ SVD of `a` with the given method; returns the
+/// factorization and the wall-clock seconds it took (the Figure-6 metric).
+pub fn low_rank_svd(method: Method, a: &Csr, alpha: f64, seed: u64) -> Result<(Svd, f64)> {
+    let n = a.cols();
+    let rank = ((alpha * n as f64).ceil() as usize).clamp(1, a.rows().min(n));
+    let engine = method.engine();
+    let mut rng = Rng::seed_from_u64(seed);
+    let t = std::time::Instant::now();
+    let f = engine.factorize(a, rank, &mut rng)?;
+    Ok((f, t.elapsed().as_secs_f64()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::svdlr::testutil::random_sparse;
+
+    #[test]
+    fn names_roundtrip() {
+        for m in Method::PAPER_SET {
+            assert_eq!(Method::from_name(m.name()), Some(m));
+        }
+        assert_eq!(Method::from_name("nope"), None);
+    }
+
+    #[test]
+    fn all_methods_factorize() {
+        let mut rng = Rng::seed_from_u64(1);
+        let a = random_sparse(&mut rng, 40, 25, 250);
+        for m in [Method::FastPi, Method::RandPi, Method::KrylovPi, Method::FrPca, Method::Dense] {
+            let (f, secs) = low_rank_svd(m, &a, 0.3, 42).unwrap();
+            let expect_rank = (0.3f64 * 25.0).ceil() as usize;
+            assert_eq!(f.rank(), expect_rank, "{}", m.name());
+            assert!(secs >= 0.0);
+            // sane reconstruction for every method
+            let err = f.reconstruction_error(&a.to_dense());
+            assert!(err < a.fro_norm(), "{} error {err}", m.name());
+        }
+    }
+
+    #[test]
+    fn alpha_one_gives_full_rank() {
+        let mut rng = Rng::seed_from_u64(2);
+        let a = random_sparse(&mut rng, 30, 12, 100);
+        let (f, _) = low_rank_svd(Method::Dense, &a, 1.0, 0).unwrap();
+        assert_eq!(f.rank(), 12);
+    }
+}

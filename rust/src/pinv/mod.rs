@@ -1,0 +1,183 @@
+//! Pseudoinverse construction and the FastPI pipeline (Algorithm 1).
+
+pub mod baselines;
+pub mod fastpi;
+
+pub use baselines::{low_rank_svd, Method};
+pub use fastpi::{fastpi_svd, FastPiConfig, FastPiOutput};
+
+use crate::dense::{matmul, Matrix, Svd};
+use crate::sparse::Csr;
+
+/// Factored Moore–Penrose pseudoinverse `A† = V Σ† Uᵀ` (Problem 1).
+///
+/// Kept in factored form: applying it to a matrix/vector is
+/// O((m+n)r·width) instead of materializing the n×m dense inverse.
+#[derive(Debug, Clone)]
+pub struct Pinv {
+    /// V (n×r)
+    pub v: Matrix,
+    /// reciprocal singular values with rank cutoff applied (σ < tol ↦ 0)
+    pub s_inv: Vec<f64>,
+    /// Uᵀ (r×m)
+    pub ut: Matrix,
+}
+
+impl Pinv {
+    /// Build from a (possibly truncated) SVD. Singular values below
+    /// `rcond · σ_max` are treated as zero (standard pinv cutoff).
+    pub fn from_svd(f: &Svd) -> Pinv {
+        Self::from_svd_rcond(f, 1e-12)
+    }
+
+    /// Build with an explicit relative cutoff.
+    pub fn from_svd_rcond(f: &Svd, rcond: f64) -> Pinv {
+        let smax = f.s.first().copied().unwrap_or(0.0);
+        let tol = smax * rcond;
+        let s_inv: Vec<f64> =
+            f.s.iter().map(|&x| if x > tol && x > 0.0 { 1.0 / x } else { 0.0 }).collect();
+        Pinv { v: f.vt.transpose(), s_inv, ut: f.u.transpose() }
+    }
+
+    pub fn rank(&self) -> usize {
+        self.s_inv.iter().filter(|&&x| x != 0.0).count()
+    }
+
+    /// Rows of A (m) and columns of A (n) this pseudoinverse corresponds to.
+    pub fn input_shape(&self) -> (usize, usize) {
+        (self.ut.cols(), self.v.rows())
+    }
+
+    /// Apply to a dense matrix: X = A†·Y = V·(Σ†·(Uᵀ·Y)).
+    pub fn apply(&self, y: &Matrix) -> Matrix {
+        let uty = matmul(&self.ut, y); // r×w
+        let scaled = uty.scale_rows(&self.s_inv);
+        matmul(&self.v, &scaled) // n×w
+    }
+
+    /// Apply to a sparse matrix (e.g. a sparse label matrix Y):
+    /// computes Uᵀ·Y sparse-side, then proceeds dense.
+    pub fn apply_sparse(&self, y: &Csr) -> Matrix {
+        // Uᵀ·Y = (Yᵀ·U)ᵀ
+        let u = self.ut.transpose();
+        let uty = y.spmm_t(&u).transpose(); // r×L
+        let scaled = uty.scale_rows(&self.s_inv);
+        matmul(&self.v, &scaled)
+    }
+
+    /// Apply to a single vector.
+    pub fn apply_vec(&self, y: &[f64]) -> Vec<f64> {
+        let uty = self.ut.matvec(y);
+        let scaled: Vec<f64> = uty.iter().zip(&self.s_inv).map(|(x, s)| x * s).collect();
+        self.v.matvec(&scaled)
+    }
+
+    /// Materialize the dense n×m pseudoinverse (tests / tiny matrices only).
+    pub fn to_dense(&self) -> Matrix {
+        matmul(&self.v.scale_cols(&self.s_inv), &self.ut)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dense::svd;
+    use crate::util::propcheck::check;
+    use crate::util::rng::Rng;
+
+    /// Verify the four Moore–Penrose conditions on dense matrices.
+    fn check_moore_penrose(a: &Matrix, pinv: &Matrix, tol: f64) {
+        let ap = matmul(a, pinv); // m×m
+        let pa = matmul(pinv, a); // n×n
+        // 1) A A† A = A
+        assert!(matmul(&ap, a).max_abs_diff(a) < tol, "MP1");
+        // 2) A† A A† = A†
+        assert!(matmul(&pa, pinv).max_abs_diff(pinv) < tol, "MP2");
+        // 3) (A A†)ᵀ = A A†
+        assert!(ap.transpose().max_abs_diff(&ap) < tol, "MP3");
+        // 4) (A† A)ᵀ = A† A
+        assert!(pa.transpose().max_abs_diff(&pa) < tol, "MP4");
+    }
+
+    #[test]
+    fn moore_penrose_conditions_full_rank() {
+        check("pinv satisfies Moore-Penrose", 15, |rng: &mut Rng| {
+            let n = rng.usize_range(1, 12);
+            let m = n + rng.usize_range(0, 10);
+            let a = Matrix::randn(m, n, rng);
+            let p = Pinv::from_svd(&svd(&a)).to_dense();
+            check_moore_penrose(&a, &p, 1e-7);
+        });
+    }
+
+    #[test]
+    fn moore_penrose_conditions_rank_deficient() {
+        check("pinv MP on rank-deficient", 10, |rng: &mut Rng| {
+            let r = rng.usize_range(1, 5);
+            let m = r + rng.usize_range(2, 12);
+            let n = r + rng.usize_range(1, 8);
+            let b = Matrix::randn(m, r, rng);
+            let c = Matrix::randn(r, n, rng);
+            let a = matmul(&b, &c);
+            let p = Pinv::from_svd(&svd(&a)).to_dense();
+            check_moore_penrose(&a, &p, 1e-6);
+        });
+    }
+
+    #[test]
+    fn least_squares_solution() {
+        // Z = A†y minimizes ||Az - y||; for consistent systems it solves exactly.
+        let mut rng = Rng::seed_from_u64(3);
+        let a = Matrix::randn(20, 8, &mut rng);
+        let z0 = rng.normal_vec(8);
+        let y = a.matvec(&z0);
+        let p = Pinv::from_svd(&svd(&a));
+        let z = p.apply_vec(&y);
+        for i in 0..8 {
+            assert!((z[i] - z0[i]).abs() < 1e-8, "z[{i}]");
+        }
+    }
+
+    #[test]
+    fn apply_variants_agree() {
+        let mut rng = Rng::seed_from_u64(4);
+        let a = Matrix::randn(15, 6, &mut rng);
+        let p = Pinv::from_svd(&svd(&a));
+        let y = Matrix::randn(15, 4, &mut rng);
+        let dense_apply = p.apply(&y);
+        let explicit = matmul(&p.to_dense(), &y);
+        assert!(dense_apply.max_abs_diff(&explicit) < 1e-10);
+        // sparse path
+        let mut coo = crate::sparse::Coo::new(15, 4);
+        for i in 0..15 {
+            for j in 0..4 {
+                if y[(i, j)] > 0.5 {
+                    coo.push(i, j, y[(i, j)]);
+                }
+            }
+        }
+        let ys = Csr::from_coo(&coo);
+        let sparse_apply = p.apply_sparse(&ys);
+        let explicit2 = matmul(&p.to_dense(), &ys.to_dense());
+        assert!(sparse_apply.max_abs_diff(&explicit2) < 1e-10);
+        // vector path
+        let yv = y.col(0);
+        let zv = p.apply_vec(&yv);
+        for i in 0..6 {
+            assert!((zv[i] - dense_apply[(i, 0)]).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn cutoff_zeroes_tiny_sigmas() {
+        let f = Svd {
+            u: Matrix::eye(3),
+            s: vec![1.0, 1e-20, 0.0],
+            vt: Matrix::eye(3),
+        };
+        let p = Pinv::from_svd(&f);
+        assert_eq!(p.rank(), 1);
+        assert_eq!(p.s_inv[1], 0.0);
+        assert_eq!(p.s_inv[2], 0.0);
+    }
+}

@@ -1,0 +1,140 @@
+//! Ranking metrics for multi-label prediction: P@k (the paper's Figure-5
+//! metric) and nDCG@k.
+
+use crate::dense::Matrix;
+use crate::sparse::Csr;
+
+/// Indices of the k largest entries of `scores`, descending (ties by index).
+pub fn top_k_indices(scores: &[f64], k: usize) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..scores.len()).collect();
+    let k = k.min(scores.len());
+    idx.sort_by(|&a, &b| scores[b].partial_cmp(&scores[a]).unwrap().then(a.cmp(&b)));
+    idx.truncate(k);
+    idx
+}
+
+/// Mean precision@k: P@k = (1/k) Σ_{l ∈ rank_k(ŷ)} y_l averaged over rows.
+/// `scores` is (instances × labels) dense; `y_true` is the binary sparse
+/// ground truth of the same shape.
+pub fn precision_at_k(scores: &Matrix, y_true: &Csr, k: usize) -> f64 {
+    assert_eq!(scores.shape(), y_true.shape(), "score/label shape mismatch");
+    assert!(k > 0);
+    let m = scores.rows();
+    if m == 0 {
+        return 0.0;
+    }
+    let mut total = 0.0;
+    for i in 0..m {
+        let (js, _) = y_true.row(i);
+        let top = top_k_indices(scores.row(i), k);
+        let hits = top.iter().filter(|t| js.contains(t)).count();
+        total += hits as f64 / k as f64;
+    }
+    total / m as f64
+}
+
+/// Mean nDCG@k with binary relevance.
+pub fn ndcg_at_k(scores: &Matrix, y_true: &Csr, k: usize) -> f64 {
+    assert_eq!(scores.shape(), y_true.shape());
+    assert!(k > 0);
+    let m = scores.rows();
+    if m == 0 {
+        return 0.0;
+    }
+    let mut total = 0.0;
+    let mut counted = 0usize;
+    for i in 0..m {
+        let (js, _) = y_true.row(i);
+        if js.is_empty() {
+            continue; // nDCG undefined with no relevant labels
+        }
+        let top = top_k_indices(scores.row(i), k);
+        let dcg: f64 = top
+            .iter()
+            .enumerate()
+            .filter(|(_, t)| js.contains(t))
+            .map(|(rank, _)| 1.0 / ((rank as f64 + 2.0).log2()))
+            .sum();
+        let ideal: f64 =
+            (0..js.len().min(k)).map(|rank| 1.0 / ((rank as f64 + 2.0).log2())).sum();
+        total += dcg / ideal;
+        counted += 1;
+    }
+    if counted == 0 {
+        0.0
+    } else {
+        total / counted as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::Coo;
+
+    fn labels(rows: &[&[usize]], l: usize) -> Csr {
+        let mut coo = Coo::new(rows.len(), l);
+        for (i, r) in rows.iter().enumerate() {
+            for &j in *r {
+                coo.push(i, j, 1.0);
+            }
+        }
+        Csr::from_coo(&coo)
+    }
+
+    #[test]
+    fn top_k_basic() {
+        assert_eq!(top_k_indices(&[0.1, 0.9, 0.5], 2), vec![1, 2]);
+        assert_eq!(top_k_indices(&[1.0, 1.0], 1), vec![0]); // tie → lower index
+        assert_eq!(top_k_indices(&[0.3], 5), vec![0]);
+    }
+
+    #[test]
+    fn perfect_and_zero_precision() {
+        let scores = Matrix::from_rows(&[&[0.9, 0.8, 0.1, 0.0]]);
+        let y_hit = labels(&[&[0, 1]], 4);
+        assert_eq!(precision_at_k(&scores, &y_hit, 2), 1.0);
+        let y_miss = labels(&[&[2, 3]], 4);
+        assert_eq!(precision_at_k(&scores, &y_miss, 2), 0.0);
+    }
+
+    #[test]
+    fn partial_precision_averaged() {
+        let scores = Matrix::from_rows(&[&[0.9, 0.8, 0.1], &[0.1, 0.2, 0.9]]);
+        // row 0: top2 = {0,1}, true = {0} -> 0.5; row 1: top2 = {2,1}, true = {1,2} -> 1.0
+        let y = labels(&[&[0], &[1, 2]], 3);
+        let p = precision_at_k(&scores, &y, 2);
+        assert!((p - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn p_at_k_in_unit_interval() {
+        use crate::util::propcheck::check;
+        check("P@k bounded", 15, |rng| {
+            let (m, l) = (rng.usize_range(1, 20), rng.usize_range(2, 15));
+            let scores = Matrix::randn(m, l, rng);
+            let mut coo = Coo::new(m, l);
+            for i in 0..m {
+                if rng.f64() < 0.8 {
+                    coo.push(i, rng.usize_below(l), 1.0);
+                }
+            }
+            let y = Csr::from_coo(&coo);
+            for k in 1..=3 {
+                let p = precision_at_k(&scores, &y, k);
+                assert!((0.0..=1.0).contains(&p));
+                let nd = ndcg_at_k(&scores, &y, k);
+                assert!((0.0..=1.0 + 1e-12).contains(&nd));
+            }
+        });
+    }
+
+    #[test]
+    fn ndcg_rank_sensitivity() {
+        // correct label at position 1 beats position 2
+        let s1 = Matrix::from_rows(&[&[0.9, 0.5, 0.1]]);
+        let s2 = Matrix::from_rows(&[&[0.5, 0.9, 0.1]]);
+        let y = labels(&[&[0]], 3);
+        assert!(ndcg_at_k(&s1, &y, 3) > ndcg_at_k(&s2, &y, 3));
+    }
+}

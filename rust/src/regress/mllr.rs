@@ -1,0 +1,125 @@
+//! Multi-label linear regression model: Z = A†·Y (Application 1).
+
+use crate::dense::Matrix;
+use crate::pinv::Pinv;
+use crate::sparse::Csr;
+
+/// Trained multi-label linear model: scores for a feature vector `a` are
+/// `ŷ = Zᵀ·a`.
+#[derive(Debug, Clone)]
+pub struct MultiLabelModel {
+    /// parameter matrix Z (n×L)
+    pub z: Matrix,
+}
+
+/// Training summary.
+#[derive(Debug, Clone)]
+pub struct TrainReport {
+    pub n_features: usize,
+    pub n_labels: usize,
+    pub rank: usize,
+    pub train_secs: f64,
+}
+
+impl MultiLabelModel {
+    /// Closed-form training: Z = A†·Y via the factored pseudoinverse.
+    pub fn train(pinv: &Pinv, y_train: &Csr) -> (MultiLabelModel, TrainReport) {
+        let t = std::time::Instant::now();
+        let z = pinv.apply_sparse(y_train);
+        let report = TrainReport {
+            n_features: z.rows(),
+            n_labels: z.cols(),
+            rank: pinv.rank(),
+            train_secs: t.elapsed().as_secs_f64(),
+        };
+        (MultiLabelModel { z }, report)
+    }
+
+    /// Score a batch of instances: S = A_test · Z (rows = instances).
+    pub fn predict(&self, a_test: &Csr) -> Matrix {
+        assert_eq!(a_test.cols(), self.z.rows(), "feature dim mismatch");
+        a_test.spmm(&self.z)
+    }
+
+    /// Score a single sparse feature vector given as (indices, values).
+    pub fn predict_one(&self, indices: &[usize], values: &[f64]) -> Vec<f64> {
+        let l = self.z.cols();
+        let mut out = vec![0.0; l];
+        for (&j, &v) in indices.iter().zip(values) {
+            assert!(j < self.z.rows(), "feature index {j} out of range");
+            let zrow = self.z.row(j);
+            for c in 0..l {
+                out[c] += v * zrow[c];
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dense::svd;
+    use crate::sparse::Coo;
+    use crate::util::rng::Rng;
+
+    /// Exactly solvable system: Y = A·Z0 with A full column rank ⇒
+    /// training recovers Z0 and predictions are exact.
+    #[test]
+    fn recovers_exact_linear_labels() {
+        let mut rng = Rng::seed_from_u64(1);
+        let a_dense = Matrix::randn(30, 8, &mut rng);
+        let z0 = Matrix::randn(8, 5, &mut rng);
+        let y_dense = crate::dense::matmul(&a_dense, &z0);
+
+        let mut acoo = Coo::new(30, 8);
+        for i in 0..30 {
+            for j in 0..8 {
+                acoo.push(i, j, a_dense[(i, j)]);
+            }
+        }
+        let a = Csr::from_coo(&acoo);
+        let mut ycoo = Coo::new(30, 5);
+        for i in 0..30 {
+            for j in 0..5 {
+                if y_dense[(i, j)].abs() > 1e-12 {
+                    ycoo.push(i, j, y_dense[(i, j)]);
+                }
+            }
+        }
+        let y = Csr::from_coo(&ycoo);
+
+        let p = Pinv::from_svd(&svd(&a_dense));
+        let (model, report) = MultiLabelModel::train(&p, &y);
+        assert_eq!(report.n_features, 8);
+        assert_eq!(report.n_labels, 5);
+        assert!(model.z.max_abs_diff(&z0) < 1e-8, "Z recovery");
+
+        let scores = model.predict(&a);
+        assert!(scores.max_abs_diff(&y_dense) < 1e-7, "prediction");
+    }
+
+    #[test]
+    fn predict_one_matches_batch() {
+        let mut rng = Rng::seed_from_u64(2);
+        let z = Matrix::randn(6, 4, &mut rng);
+        let model = MultiLabelModel { z };
+        let mut coo = Coo::new(3, 6);
+        coo.push(0, 1, 2.0);
+        coo.push(0, 4, -1.0);
+        coo.push(2, 0, 3.0);
+        let a = Csr::from_coo(&coo);
+        let batch = model.predict(&a);
+        let (js, vs) = a.row(0);
+        let one = model.predict_one(js, vs);
+        for c in 0..4 {
+            assert!((one[c] - batch[(0, c)]).abs() < 1e-12);
+        }
+        // empty row scores zero
+        let empty = model.predict_one(&[], &[]);
+        assert!(empty.iter().all(|&x| x == 0.0));
+        for c in 0..4 {
+            assert_eq!(batch[(1, c)], 0.0);
+        }
+    }
+}

@@ -1,0 +1,10 @@
+//! Multi-label linear regression — the paper's Application 1 and the
+//! accuracy experiment (Figure 5).
+
+pub mod metrics;
+pub mod mllr;
+pub mod split;
+
+pub use metrics::{ndcg_at_k, precision_at_k};
+pub use mllr::{MultiLabelModel, TrainReport};
+pub use split::{train_test_split, Split};

@@ -1,0 +1,106 @@
+//! Row-wise train/test split of (feature, label) matrix pairs.
+
+use crate::sparse::{Coo, Csr};
+use crate::util::rng::Rng;
+
+/// A train/test split of a multi-label dataset.
+#[derive(Debug, Clone)]
+pub struct Split {
+    pub a_train: Csr,
+    pub y_train: Csr,
+    pub a_test: Csr,
+    pub y_test: Csr,
+    /// original row ids of the test rows
+    pub test_rows: Vec<usize>,
+}
+
+/// Split rows into train/test with `test_fraction` held out (paper: 10%).
+pub fn train_test_split(a: &Csr, y: &Csr, test_fraction: f64, rng: &mut Rng) -> Split {
+    assert_eq!(a.rows(), y.rows(), "feature/label row mismatch");
+    assert!((0.0..1.0).contains(&test_fraction));
+    let m = a.rows();
+    let mut order = rng.permutation(m);
+    let n_test = ((m as f64) * test_fraction).round() as usize;
+    let mut test_rows: Vec<usize> = order.drain(..n_test).collect();
+    // ascending so test_rows[i] is the original id of a_test row i
+    test_rows.sort_unstable();
+    let mut is_test = vec![false; m];
+    for &i in &test_rows {
+        is_test[i] = true;
+    }
+
+    let take = |mat: &Csr, test: bool| -> Csr {
+        let keep: Vec<usize> = (0..m).filter(|&i| is_test[i] == test).collect();
+        let mut coo = Coo::new(keep.len(), mat.cols());
+        for (new_i, &old_i) in keep.iter().enumerate() {
+            let (js, vs) = mat.row(old_i);
+            for (&j, &v) in js.iter().zip(vs) {
+                coo.push(new_i, j, v);
+            }
+        }
+        Csr::from_coo(&coo)
+    };
+
+    Split {
+        a_train: take(a, false),
+        y_train: take(y, false),
+        a_test: take(a, true),
+        y_test: take(y, true),
+        test_rows,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::check;
+
+    fn random_pair(rng: &mut Rng, m: usize, n: usize, l: usize) -> (Csr, Csr) {
+        let mut a = Coo::new(m, n);
+        let mut y = Coo::new(m, l);
+        for i in 0..m {
+            a.push(i, rng.usize_below(n), 1.0);
+            y.push(i, rng.usize_below(l), 1.0);
+        }
+        (Csr::from_coo(&a), Csr::from_coo(&y))
+    }
+
+    #[test]
+    fn split_sizes_and_alignment() {
+        check("split sizes", 10, |rng| {
+            let m = rng.usize_range(10, 100);
+            let (a, y) = random_pair(rng, m, 8, 5);
+            let s = train_test_split(&a, &y, 0.1, rng);
+            let n_test = ((m as f64) * 0.1).round() as usize;
+            assert_eq!(s.a_test.rows(), n_test);
+            assert_eq!(s.y_test.rows(), n_test);
+            assert_eq!(s.a_train.rows(), m - n_test);
+            assert_eq!(s.a_train.rows(), s.y_train.rows());
+            // nnz conserved
+            assert_eq!(s.a_train.nnz() + s.a_test.nnz(), a.nnz());
+            assert_eq!(s.y_train.nnz() + s.y_test.nnz(), y.nnz());
+        });
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let (a, y) = random_pair(&mut Rng::seed_from_u64(1), 50, 8, 5);
+        let s1 = train_test_split(&a, &y, 0.2, &mut Rng::seed_from_u64(9));
+        let s2 = train_test_split(&a, &y, 0.2, &mut Rng::seed_from_u64(9));
+        assert_eq!(s1.test_rows, s2.test_rows);
+        assert_eq!(s1.a_train, s2.a_train);
+    }
+
+    #[test]
+    fn rows_preserved_exactly() {
+        let (a, y) = random_pair(&mut Rng::seed_from_u64(2), 30, 6, 4);
+        let s = train_test_split(&a, &y, 0.3, &mut Rng::seed_from_u64(3));
+        let ad = a.to_dense();
+        for (new_i, &old_i) in s.test_rows.iter().enumerate() {
+            let (js, vs) = s.a_test.row(new_i);
+            for (&j, &v) in js.iter().zip(vs) {
+                assert_eq!(ad[(old_i, j)], v);
+            }
+        }
+    }
+}

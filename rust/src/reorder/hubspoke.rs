@@ -1,0 +1,396 @@
+//! Hub-and-spoke matrix reordering — Algorithm 2 of the paper.
+//!
+//! Iteratively removes the top-k fraction of highest-degree ("hub")
+//! instance and feature nodes, assigns the resulting small disconnected
+//! components ("spokes") the lowest ids and the hubs the highest, and
+//! recurses on the giant connected component (GCC). The reordered matrix
+//! concentrates its non-zeros bottom-right, leaving a large sparse
+//! rectangular block-diagonal submatrix A11 top-left.
+
+use crate::graph::{connected_components, Bipartite, NodeId};
+use crate::sparse::Csr;
+
+/// Reordering parameters.
+#[derive(Debug, Clone)]
+pub struct ReorderConfig {
+    /// hub selection ratio 0 < k < 1 (paper uses 0.01)
+    pub k: f64,
+    /// safety cap on iterations (paper's loop terminates naturally)
+    pub max_iters: usize,
+}
+
+impl Default for ReorderConfig {
+    fn default() -> Self {
+        ReorderConfig { k: 0.01, max_iters: 1000 }
+    }
+}
+
+/// A rectangular diagonal block of A11 (one spoke component).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BlockInfo {
+    pub row_start: usize,
+    pub row_len: usize,
+    pub col_start: usize,
+    pub col_len: usize,
+}
+
+impl BlockInfo {
+    pub fn is_empty(&self) -> bool {
+        self.row_len == 0 || self.col_len == 0
+    }
+}
+
+/// Per-iteration diagnostics (Figure 2/3 evidence).
+#[derive(Debug, Clone)]
+pub struct IterTrace {
+    pub iter: usize,
+    pub m_hub: usize,
+    pub n_hub: usize,
+    /// spoke nodes shed this iteration
+    pub spoke_insts: usize,
+    pub spoke_feats: usize,
+    /// number of non-giant components this iteration
+    pub num_spoke_comps: usize,
+    /// GCC size after removal
+    pub gcc_insts: usize,
+    pub gcc_feats: usize,
+}
+
+/// Result of Algorithm 2: permutations, the 4-way split sizes, the diagonal
+/// block inventory of A11, and the iteration trace.
+#[derive(Debug, Clone)]
+pub struct Reordering {
+    /// row_perm[old_row] = new_row
+    pub row_perm: Vec<usize>,
+    /// col_perm[old_col] = new_col
+    pub col_perm: Vec<usize>,
+    /// spoke (A11) extent: rows 0..m1, cols 0..n1
+    pub m1: usize,
+    pub n1: usize,
+    /// hub extent: m2 = m - m1 rows, n2 = n - n1 cols (includes the final
+    /// GCC remnant, which is dense-ish and treated as part of the hub block)
+    pub m2: usize,
+    pub n2: usize,
+    /// diagonal blocks of A11, in increasing (row_start, col_start)
+    pub blocks: Vec<BlockInfo>,
+    pub trace: Vec<IterTrace>,
+}
+
+impl Reordering {
+    /// Number of reordering iterations performed (T in Lemma 1).
+    pub fn iterations(&self) -> usize {
+        self.trace.len()
+    }
+
+    /// Apply the permutations to the matrix: returns P_r · A · P_cᵀ.
+    pub fn apply(&self, a: &Csr) -> Csr {
+        a.permute(&self.row_perm, &self.col_perm)
+    }
+}
+
+/// Run Algorithm 2 on the bipartite view of `a` (paper Definition 1).
+pub fn reorder(a: &Csr, cfg: &ReorderConfig) -> Reordering {
+    assert!(cfg.k > 0.0 && cfg.k < 1.0, "hub ratio k must be in (0,1)");
+    let (m, n) = a.shape();
+    let mut g = Bipartite::from_csr(a);
+
+    const UNSET: usize = usize::MAX;
+    let mut row_perm = vec![UNSET; m];
+    let mut col_perm = vec![UNSET; n];
+    // spokes fill from the front, hubs from the back
+    let mut next_low_row = 0usize;
+    let mut next_low_col = 0usize;
+    let mut next_high_row = m; // exclusive
+    let mut next_high_col = n;
+    let mut blocks: Vec<BlockInfo> = Vec::new();
+    let mut trace: Vec<IterTrace> = Vec::new();
+
+    for iter in 0..cfg.max_iters {
+        let live_i = g.live_instances();
+        let live_f = g.live_features();
+        if live_i == 0 && live_f == 0 {
+            break;
+        }
+        let m_hub = ((cfg.k * live_i as f64).ceil() as usize).max(1).min(live_i);
+        let n_hub = ((cfg.k * live_f as f64).ceil() as usize).max(1).min(live_f);
+
+        // --- line 2: select hubs by degree (desc), ties by id for determinism
+        let hub_insts = top_k_by_degree(g.live_instance_ids(), g.instance_degrees(), m_hub);
+        let hub_feats = top_k_by_degree(g.live_feature_ids(), g.feature_degrees(), n_hub);
+
+        // --- line 3: hubs take the highest remaining ids
+        // (highest degree gets the highest id, concentrating mass at the corner)
+        for &i in &hub_insts {
+            next_high_row -= 1;
+            row_perm[i] = next_high_row;
+        }
+        for &j in &hub_feats {
+            next_high_col -= 1;
+            col_perm[j] = next_high_col;
+        }
+        for &i in &hub_insts {
+            g.remove(NodeId::Instance(i));
+        }
+        for &j in &hub_feats {
+            g.remove(NodeId::Feature(j));
+        }
+
+        // --- line 4: BFS components; non-giant components become spokes with
+        // the lowest remaining ids; each spoke component is one diagonal
+        // block of A11.
+        let comps = connected_components(&g);
+        let mut spoke_insts = 0usize;
+        let mut spoke_feats = 0usize;
+        let mut num_spoke_comps = 0usize;
+        for (_, (insts, feats)) in comps.non_giant() {
+            let block = BlockInfo {
+                row_start: next_low_row,
+                row_len: insts.len(),
+                col_start: next_low_col,
+                col_len: feats.len(),
+            };
+            for &i in insts {
+                row_perm[i] = next_low_row;
+                next_low_row += 1;
+                g.remove(NodeId::Instance(i));
+            }
+            for &j in feats {
+                col_perm[j] = next_low_col;
+                next_low_col += 1;
+                g.remove(NodeId::Feature(j));
+            }
+            blocks.push(block);
+            spoke_insts += block.row_len;
+            spoke_feats += block.col_len;
+            num_spoke_comps += 1;
+        }
+
+        // --- line 5/6: recurse on the GCC; stop when it is small enough
+        let (gcc_i, gcc_f) = match comps.giant {
+            Some(gi) => (comps.comps[gi].0.len(), comps.comps[gi].1.len()),
+            None => (0, 0),
+        };
+        trace.push(IterTrace {
+            iter,
+            m_hub,
+            n_hub,
+            spoke_insts,
+            spoke_feats,
+            num_spoke_comps,
+            gcc_insts: gcc_i,
+            gcc_feats: gcc_f,
+        });
+        if gcc_i == 0 && gcc_f == 0 {
+            break;
+        }
+        if gcc_i < m_hub || gcc_f < n_hub {
+            // terminal GCC remnant: dense-ish — assign into the hub region
+            // (middle ids, adjacent to the hubs), lowest degree first so the
+            // highest-degree nodes sit nearest the bottom-right corner.
+            let mut rem_i = g.live_instance_ids();
+            let mut rem_f = g.live_feature_ids();
+            let ideg = g.instance_degrees();
+            let fdeg = g.feature_degrees();
+            rem_i.sort_by_key(|&i| (ideg[i], i));
+            rem_f.sort_by_key(|&j| (fdeg[j], j));
+            // fill the middle range top-down so ordering matches degree asc
+            for &i in rem_i.iter().rev() {
+                next_high_row -= 1;
+                row_perm[i] = next_high_row;
+            }
+            for &j in rem_f.iter().rev() {
+                next_high_col -= 1;
+                col_perm[j] = next_high_col;
+            }
+            break;
+        }
+    }
+
+    // Any still-unassigned nodes (max_iters hit) go to the hub region.
+    for i in 0..m {
+        if row_perm[i] == UNSET {
+            next_high_row -= 1;
+            row_perm[i] = next_high_row;
+        }
+    }
+    for j in 0..n {
+        if col_perm[j] == UNSET {
+            next_high_col -= 1;
+            col_perm[j] = next_high_col;
+        }
+    }
+    debug_assert_eq!(next_low_row, next_high_row);
+    debug_assert_eq!(next_low_col, next_high_col);
+
+    let m1 = next_low_row;
+    let n1 = next_low_col;
+    Reordering { row_perm, col_perm, m1, n1, m2: m - m1, n2: n - n1, blocks, trace }
+}
+
+/// Top-k live node ids by (degree desc, id asc).
+fn top_k_by_degree(mut ids: Vec<usize>, degrees: &[usize], k: usize) -> Vec<usize> {
+    ids.sort_by(|&a, &b| degrees[b].cmp(&degrees[a]).then(a.cmp(&b)));
+    ids.truncate(k);
+    ids
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::reorder::permutation;
+    use crate::sparse::Coo;
+    use crate::util::propcheck::check;
+    use crate::util::rng::Rng;
+
+    /// Random skewed bipartite matrix for property tests.
+    fn skewed_matrix(rng: &mut Rng, m: usize, n: usize, nnz: usize) -> Csr {
+        let wi: Vec<f64> = (0..m).map(|_| rng.power_law(2.0, m as f64)).collect();
+        let wf: Vec<f64> = (0..n).map(|_| rng.power_law(2.0, n as f64)).collect();
+        let cum = |w: &[f64]| {
+            let mut c = Vec::with_capacity(w.len());
+            let mut s = 0.0;
+            for &x in w {
+                s += x;
+                c.push(s);
+            }
+            c
+        };
+        let (ci, cf) = (cum(&wi), cum(&wf));
+        let mut coo = Coo::new(m, n);
+        for _ in 0..nnz {
+            coo.push(rng.sample_cumulative(&ci), rng.sample_cumulative(&cf), 1.0);
+        }
+        Csr::from_coo(&coo)
+    }
+
+    #[test]
+    fn permutations_are_valid() {
+        check("reorder perms valid", 10, |rng| {
+            let (m, n) = (rng.usize_range(5, 80), rng.usize_range(5, 60));
+            let nnz = rng.usize_range(1, 4 * (m + n));
+            let a = skewed_matrix(rng, m, n, nnz);
+            let r = reorder(&a, &ReorderConfig { k: 0.05, max_iters: 100 });
+            permutation::validate(&r.row_perm).unwrap();
+            permutation::validate(&r.col_perm).unwrap();
+            assert_eq!(r.m1 + r.m2, m);
+            assert_eq!(r.n1 + r.n2, n);
+        });
+    }
+
+    #[test]
+    fn reorder_preserves_matrix() {
+        check("reorder preserves entries", 10, |rng| {
+            let (m, n) = (rng.usize_range(5, 50), rng.usize_range(5, 50));
+            let a = skewed_matrix(rng, m, n, 120);
+            let r = reorder(&a, &ReorderConfig::default());
+            let b = r.apply(&a);
+            assert_eq!(b.nnz(), a.nnz());
+            assert!((b.fro_norm() - a.fro_norm()).abs() < 1e-12);
+            let ad = a.to_dense();
+            let bd = b.to_dense();
+            for i in 0..m {
+                for j in 0..n {
+                    assert_eq!(bd[(r.row_perm[i], r.col_perm[j])], ad[(i, j)]);
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn blocks_tile_a11_and_cover_its_nnz() {
+        check("A11 block-diagonal structure", 10, |rng| {
+            let (m, n) = (rng.usize_range(10, 80), rng.usize_range(10, 60));
+            let a = skewed_matrix(rng, m, n, 150);
+            let r = reorder(&a, &ReorderConfig { k: 0.05, max_iters: 100 });
+            let b = r.apply(&a);
+
+            // blocks tile [0,m1) x [0,n1): contiguous, disjoint, in order
+            let mut row_cursor = 0usize;
+            let mut col_cursor = 0usize;
+            for blk in &r.blocks {
+                assert_eq!(blk.row_start, row_cursor);
+                assert_eq!(blk.col_start, col_cursor);
+                row_cursor += blk.row_len;
+                col_cursor += blk.col_len;
+            }
+            assert_eq!(row_cursor, r.m1);
+            assert_eq!(col_cursor, r.n1);
+
+            // every nnz of A11 lies inside some diagonal block
+            let nnz_a11 = b.nnz_in_region(0, 0, r.m1, r.n1);
+            let nnz_blocks: usize = r
+                .blocks
+                .iter()
+                .map(|blk| b.nnz_in_region(blk.row_start, blk.col_start, blk.row_len, blk.col_len))
+                .sum();
+            assert_eq!(nnz_a11, nnz_blocks, "off-block nnz inside A11");
+        });
+    }
+
+    #[test]
+    fn hubs_concentrate_nnz_bottom_right() {
+        let mut rng = Rng::seed_from_u64(77);
+        let a = skewed_matrix(&mut rng, 400, 300, 2500);
+        let r = reorder(&a, &ReorderConfig::default());
+        let b = r.apply(&a);
+        // The A11 region must be far sparser than the matrix average:
+        // density(A11) << density(A) — that is the entire point of FastPI.
+        let area_a11 = (r.m1 * r.n1).max(1);
+        let dens_a11 = b.nnz_in_region(0, 0, r.m1, r.n1) as f64 / area_a11 as f64;
+        let dens_all = a.nnz() as f64 / (400.0 * 300.0);
+        assert!(
+            dens_a11 < dens_all,
+            "A11 density {dens_a11} should be below matrix density {dens_all}"
+        );
+        // and the hub corner (A22) must be denser than average
+        let area_a22 = (r.m2 * r.n2).max(1);
+        let dens_a22 = b.nnz_in_region(r.m1, r.n1, r.m2, r.n2) as f64 / area_a22 as f64;
+        assert!(dens_a22 > dens_all, "A22 density {dens_a22} vs {dens_all}");
+    }
+
+    #[test]
+    fn trace_records_iterations() {
+        let mut rng = Rng::seed_from_u64(78);
+        let a = skewed_matrix(&mut rng, 200, 150, 1200);
+        let r = reorder(&a, &ReorderConfig::default());
+        assert!(!r.trace.is_empty());
+        for (t, tr) in r.trace.iter().enumerate() {
+            assert_eq!(tr.iter, t);
+            assert!(tr.m_hub >= 1 && tr.n_hub >= 1);
+        }
+        // GCC shrinks monotonically
+        for w in r.trace.windows(2) {
+            assert!(w[1].gcc_insts + w[1].gcc_feats <= w[0].gcc_insts + w[0].gcc_feats);
+        }
+    }
+
+    #[test]
+    fn diagonal_matrix_fully_shatters() {
+        // A diagonal matrix has no giant component: everything becomes spokes
+        // after the first hub removal round.
+        let mut coo = Coo::new(10, 10);
+        for i in 0..10 {
+            coo.push(i, i, 1.0);
+        }
+        let a = Csr::from_coo(&coo);
+        let r = reorder(&a, &ReorderConfig { k: 0.1, max_iters: 10 });
+        // all mass in A11 + small hub remainder
+        assert!(r.m1 >= 8, "m1 = {}", r.m1);
+        let b = r.apply(&a);
+        assert_eq!(b.nnz(), 10);
+    }
+
+    #[test]
+    fn empty_and_tiny_matrices() {
+        let a = Csr::zeros(3, 3);
+        let r = reorder(&a, &ReorderConfig::default());
+        permutation::validate(&r.row_perm).unwrap();
+        assert_eq!(r.m1 + r.m2, 3);
+
+        let mut coo = Coo::new(1, 1);
+        coo.push(0, 0, 5.0);
+        let a = Csr::from_coo(&coo);
+        let r = reorder(&a, &ReorderConfig::default());
+        assert_eq!(r.apply(&a).nnz(), 1);
+    }
+}

@@ -1,0 +1,6 @@
+//! Matrix reordering (Algorithm 2) and permutation utilities.
+
+pub mod hubspoke;
+pub mod permutation;
+
+pub use hubspoke::{reorder, BlockInfo, IterTrace, ReorderConfig, Reordering};

@@ -1,0 +1,78 @@
+//! Permutation-array helpers. Convention throughout the crate:
+//! `perm[old] = new` (a permutation maps an old index to its new position).
+
+use crate::error::{Error, Result};
+
+/// Check that `perm` is a valid permutation of 0..n.
+pub fn validate(perm: &[usize]) -> Result<()> {
+    let n = perm.len();
+    let mut seen = vec![false; n];
+    for &p in perm {
+        if p >= n {
+            return Err(Error::Invalid(format!("permutation value {p} out of range {n}")));
+        }
+        if seen[p] {
+            return Err(Error::Invalid(format!("duplicate permutation value {p}")));
+        }
+        seen[p] = true;
+    }
+    Ok(())
+}
+
+/// Inverse permutation: if `perm[old] = new` then `inv[new] = old`.
+pub fn invert(perm: &[usize]) -> Vec<usize> {
+    let mut inv = vec![0usize; perm.len()];
+    for (old, &new) in perm.iter().enumerate() {
+        inv[new] = old;
+    }
+    inv
+}
+
+/// Identity permutation.
+pub fn identity(n: usize) -> Vec<usize> {
+    (0..n).collect()
+}
+
+/// Apply to a dense vector: out[perm[i]] = v[i].
+pub fn apply<T: Clone + Default>(perm: &[usize], v: &[T]) -> Vec<T> {
+    assert_eq!(perm.len(), v.len());
+    let mut out = vec![T::default(); v.len()];
+    for (old, &new) in perm.iter().enumerate() {
+        out[new] = v[old].clone();
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::check;
+
+    #[test]
+    fn validate_accepts_good_rejects_bad() {
+        assert!(validate(&[2, 0, 1]).is_ok());
+        assert!(validate(&[0, 0, 1]).is_err());
+        assert!(validate(&[0, 3]).is_err());
+        assert!(validate(&[]).is_ok());
+    }
+
+    #[test]
+    fn invert_roundtrip() {
+        check("perm inverse roundtrip", 20, |rng| {
+            let n = rng.usize_range(1, 50);
+            let p = rng.permutation(n);
+            let inv = invert(&p);
+            for i in 0..n {
+                assert_eq!(inv[p[i]], i);
+                assert_eq!(p[inv[i]], i);
+            }
+        });
+    }
+
+    #[test]
+    fn apply_moves_values() {
+        let p = vec![2usize, 0, 1];
+        let v = vec![10, 20, 30];
+        assert_eq!(apply(&p, &v), vec![20, 30, 10]);
+    }
+}

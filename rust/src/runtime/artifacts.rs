@@ -1,0 +1,170 @@
+//! Artifact manifest: pure-data view of `artifacts/manifest.txt` (written by
+//! python/compile/aot.py). Compilation/execution happens on the executor
+//! thread ([`crate::runtime::client`]); this type is Send+Sync.
+//!
+//! Manifest line format: `kind name filename shape0;shape1`, e.g.
+//! `matmul matmul_256x256x256 matmul_256x256x256.hlo.txt 256x256;256x256`
+
+use crate::error::{Error, Result};
+use std::path::{Path, PathBuf};
+
+/// Artifact families the runtime understands.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ArtifactKind {
+    Matmul,
+    PowIter,
+    Score,
+}
+
+impl ArtifactKind {
+    pub fn parse(s: &str) -> Option<ArtifactKind> {
+        match s {
+            "matmul" => Some(ArtifactKind::Matmul),
+            "powiter" => Some(ArtifactKind::PowIter),
+            "score" => Some(ArtifactKind::Score),
+            _ => None,
+        }
+    }
+}
+
+/// One manifest entry.
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub kind: ArtifactKind,
+    pub name: String,
+    pub path: PathBuf,
+    /// operand shapes, e.g. [[256,256],[256,256]]
+    pub shapes: Vec<Vec<usize>>,
+}
+
+impl ArtifactSpec {
+    /// For matmul/score artifacts: (M, K, N) of the padded GEMM.
+    pub fn gemm_dims(&self) -> Option<(usize, usize, usize)> {
+        if self.shapes.len() != 2 || self.shapes[0].len() != 2 || self.shapes[1].len() != 2 {
+            return None;
+        }
+        let (m, k) = (self.shapes[0][0], self.shapes[0][1]);
+        let (k2, n) = (self.shapes[1][0], self.shapes[1][1]);
+        if k != k2 {
+            return None;
+        }
+        Some((m, k, n))
+    }
+}
+
+/// Parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    dir: PathBuf,
+    specs: Vec<ArtifactSpec>,
+}
+
+impl Manifest {
+    /// Parse the manifest under `dir`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let manifest = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&manifest)
+            .map_err(|e| Error::Artifact(format!("cannot read {}: {e}", manifest.display())))?;
+        let mut specs = Vec::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let parts: Vec<&str> = line.split_whitespace().collect();
+            if parts.len() != 4 {
+                return Err(Error::Artifact(format!(
+                    "manifest line {} malformed: `{line}`",
+                    lineno + 1
+                )));
+            }
+            let kind = ArtifactKind::parse(parts[0])
+                .ok_or_else(|| Error::Artifact(format!("unknown artifact kind `{}`", parts[0])))?;
+            let shapes: Vec<Vec<usize>> = parts[3]
+                .split(';')
+                .map(|s| {
+                    s.split('x')
+                        .map(|d| {
+                            d.parse::<usize>()
+                                .map_err(|_| Error::Artifact(format!("bad shape `{s}`")))
+                        })
+                        .collect::<Result<Vec<usize>>>()
+                })
+                .collect::<Result<_>>()?;
+            specs.push(ArtifactSpec {
+                kind,
+                name: parts[1].to_string(),
+                path: dir.join(parts[2]),
+                shapes,
+            });
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), specs })
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    pub fn specs(&self) -> &[ArtifactSpec] {
+        &self.specs
+    }
+
+    pub fn find(&self, name: &str) -> Option<&ArtifactSpec> {
+        self.specs.iter().find(|s| s.name == name)
+    }
+
+    /// All specs of a kind, sorted by padded FLOP cost (smallest first) so
+    /// dispatch picks the cheapest bucket that fits.
+    pub fn by_kind(&self, kind: ArtifactKind) -> Vec<&ArtifactSpec> {
+        let mut v: Vec<&ArtifactSpec> = self.specs.iter().filter(|s| s.kind == kind).collect();
+        v.sort_by_key(|s| s.shapes.iter().map(|sh| sh.iter().product::<usize>()).sum::<usize>());
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_parses() {
+        let Ok(m) = Manifest::load(Path::new("artifacts")) else {
+            eprintln!("skipping: artifacts/ not built");
+            return;
+        };
+        assert!(m.specs().len() >= 5);
+        let mm = m.by_kind(ArtifactKind::Matmul);
+        assert!(!mm.is_empty());
+        for w in mm.windows(2) {
+            let c0: usize = w[0].shapes.iter().map(|s| s.iter().product::<usize>()).sum();
+            let c1: usize = w[1].shapes.iter().map(|s| s.iter().product::<usize>()).sum();
+            assert!(c0 <= c1);
+        }
+        let spec = m.find("matmul_128x128x128").expect("128 bucket");
+        assert_eq!(spec.gemm_dims(), Some((128, 128, 128)));
+        assert!(m.find("nonexistent").is_none());
+    }
+
+    #[test]
+    fn malformed_manifest_rejected() {
+        let dir = std::env::temp_dir().join("fastpi_bad_manifest");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.txt"), "matmul only_three_fields x\n").unwrap();
+        assert!(Manifest::load(&dir).is_err());
+        std::fs::write(dir.join("manifest.txt"), "badkind a b 1x1;1x1\n").unwrap();
+        assert!(Manifest::load(&dir).is_err());
+        std::fs::write(dir.join("manifest.txt"), "matmul a b 1xZ;1x1\n").unwrap();
+        assert!(Manifest::load(&dir).is_err());
+    }
+
+    #[test]
+    fn gemm_dims_validation() {
+        let spec = ArtifactSpec {
+            kind: ArtifactKind::Matmul,
+            name: "x".into(),
+            path: "x".into(),
+            shapes: vec![vec![4, 5], vec![6, 7]], // inner mismatch
+        };
+        assert_eq!(spec.gemm_dims(), None);
+    }
+}

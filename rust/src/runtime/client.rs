@@ -1,0 +1,169 @@
+//! XLA executor thread.
+//!
+//! The `xla` crate's PJRT handles are `Rc`-based (not `Send`), so the client
+//! and every compiled executable live on ONE dedicated executor thread; the
+//! rest of the system talks to it through a job channel. This mirrors the
+//! single-device executor loop of serving systems (one engine thread, many
+//! request threads) and keeps PJRT usage sound under the coordinator's
+//! thread pool.
+
+use super::artifacts::Manifest;
+use crate::error::{Error, Result};
+use once_cell::sync::OnceCell;
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::mpsc;
+use std::sync::Mutex;
+
+/// A GEMM-shaped execution request: artifact name + owned f32 operands.
+struct Job {
+    name: String,
+    operands: Vec<(Vec<f32>, Vec<usize>)>,
+    reply: mpsc::Sender<Result<Vec<f32>>>,
+}
+
+/// Handle to the executor thread. Cloneable and thread-safe.
+pub struct XlaExecutor {
+    tx: Mutex<mpsc::Sender<Job>>,
+    manifest: Manifest,
+}
+
+impl XlaExecutor {
+    /// Spawn an executor for the artifact directory. Fails fast if the
+    /// manifest is unreadable; PJRT initialization happens on the thread.
+    pub fn spawn(dir: PathBuf) -> Result<XlaExecutor> {
+        let manifest = Manifest::load(&dir)?;
+        let thread_manifest = manifest.clone();
+        let (tx, rx) = mpsc::channel::<Job>();
+        std::thread::Builder::new()
+            .name("xla-executor".into())
+            .spawn(move || executor_loop(thread_manifest, rx))
+            .map_err(Error::Io)?;
+        Ok(XlaExecutor { tx: Mutex::new(tx), manifest })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Execute an artifact with exact-shape f32 operands; blocks for the
+    /// result. (Padding to bucket shapes is the dispatcher's job.)
+    pub fn execute_f32(
+        &self,
+        name: &str,
+        operands: Vec<(Vec<f32>, Vec<usize>)>,
+    ) -> Result<Vec<f32>> {
+        let (reply, rx) = mpsc::channel();
+        {
+            let tx = self.tx.lock().unwrap();
+            tx.send(Job { name: name.to_string(), operands, reply })
+                .map_err(|_| Error::Xla("executor thread gone".into()))?;
+        }
+        rx.recv().map_err(|_| Error::Xla("executor dropped reply".into()))?
+    }
+}
+
+/// The executor thread: owns the PJRT client and the executable cache.
+fn executor_loop(manifest: Manifest, rx: mpsc::Receiver<Job>) {
+    let client = match xla::PjRtClient::cpu() {
+        Ok(c) => c,
+        Err(e) => {
+            // fail every job with the init error
+            let msg = format!("PJRT CPU client init failed: {e:?}");
+            while let Ok(job) = rx.recv() {
+                let _ = job.reply.send(Err(Error::Xla(msg.clone())));
+            }
+            return;
+        }
+    };
+    let mut cache: HashMap<String, xla::PjRtLoadedExecutable> = HashMap::new();
+
+    while let Ok(job) = rx.recv() {
+        let result = run_job(&client, &manifest, &mut cache, &job);
+        let _ = job.reply.send(result);
+    }
+}
+
+fn run_job(
+    client: &xla::PjRtClient,
+    manifest: &Manifest,
+    cache: &mut HashMap<String, xla::PjRtLoadedExecutable>,
+    job: &Job,
+) -> Result<Vec<f32>> {
+    if !cache.contains_key(&job.name) {
+        let spec = manifest
+            .find(&job.name)
+            .ok_or_else(|| Error::Artifact(format!("artifact `{}` not in manifest", job.name)))?;
+        let path = spec
+            .path
+            .to_str()
+            .ok_or_else(|| Error::Artifact("non-utf8 artifact path".into()))?;
+        let proto = xla::HloModuleProto::from_text_file(path)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp)?;
+        cache.insert(job.name.clone(), exe);
+    }
+    let exe = cache.get(&job.name).unwrap();
+    let mut literals = Vec::with_capacity(job.operands.len());
+    for (data, shape) in &job.operands {
+        let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+        literals.push(xla::Literal::vec1(data).reshape(&dims)?);
+    }
+    let result = exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+    // aot.py lowers with return_tuple=True → unwrap the 1-tuple
+    let out = result.to_tuple1()?;
+    Ok(out.to_vec::<f32>()?)
+}
+
+static GLOBAL: OnceCell<Option<XlaExecutor>> = OnceCell::new();
+
+/// Process-wide executor over the conventional artifact directory
+/// (`artifacts/` or `$FASTPI_ARTIFACTS`); None if artifacts aren't built.
+pub fn global_executor() -> Option<&'static XlaExecutor> {
+    GLOBAL
+        .get_or_init(|| {
+            let dir = std::env::var("FASTPI_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+            XlaExecutor::spawn(PathBuf::from(dir)).ok()
+        })
+        .as_ref()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn executes_artifact_from_any_thread() {
+        let Some(exec) = global_executor() else {
+            eprintln!("skipping: artifacts/ not built");
+            return;
+        };
+        let n = 128usize;
+        let mut a = vec![0f32; n * n];
+        for i in 0..n {
+            a[i * n + i] = 3.0;
+        }
+        let b = vec![1f32; n * n];
+        // call from a worker thread to prove the handle is thread-safe
+        let out = std::thread::scope(|s| {
+            s.spawn(|| {
+                exec.execute_f32(
+                    "matmul_128x128x128",
+                    vec![(a.clone(), vec![n, n]), (b.clone(), vec![n, n])],
+                )
+            })
+            .join()
+            .unwrap()
+        })
+        .expect("execute");
+        assert!(out.iter().all(|&v| (v - 3.0).abs() < 1e-5));
+    }
+
+    #[test]
+    fn unknown_artifact_errors() {
+        let Some(exec) = global_executor() else {
+            return;
+        };
+        assert!(exec.execute_f32("matmul_9x9x9", vec![]).is_err());
+    }
+}

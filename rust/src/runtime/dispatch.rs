@@ -1,0 +1,204 @@
+//! Shape-bucketed GEMM dispatch: route dense products either to an AOT
+//! Pallas/XLA artifact (zero-padded to the nearest bucket, executed on the
+//! XLA executor thread) or to the native rust GEMM, by policy + cost
+//! heuristics. Counters record who served what, so experiments can report
+//! the split (EXPERIMENTS.md §Perf).
+
+use super::artifacts::ArtifactKind;
+use super::client::{global_executor, XlaExecutor};
+use crate::dense::{gemm, Matrix};
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Dispatch policy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExecMode {
+    /// artifact when a bucket fits and padding waste is acceptable, else native
+    Auto,
+    /// never touch PJRT (pure-rust baseline)
+    NativeOnly,
+    /// always use an artifact; panic if nothing fits (tests/ablations)
+    ArtifactOnly,
+}
+
+/// Call counters.
+#[derive(Debug, Default)]
+pub struct GemmStats {
+    pub native_calls: AtomicUsize,
+    pub artifact_calls: AtomicUsize,
+    pub padded_flops: AtomicUsize,
+    pub real_flops: AtomicUsize,
+}
+
+impl GemmStats {
+    pub fn summary(&self) -> String {
+        format!(
+            "gemm dispatch: {} artifact / {} native calls; padded/real flops {:.2}",
+            self.artifact_calls.load(Ordering::Relaxed),
+            self.native_calls.load(Ordering::Relaxed),
+            self.padded_flops.load(Ordering::Relaxed) as f64
+                / self.real_flops.load(Ordering::Relaxed).max(1) as f64,
+        )
+    }
+}
+
+/// The dispatcher. Routes through the process-wide executor when available.
+pub struct GemmDispatcher {
+    executor: Option<&'static XlaExecutor>,
+    pub mode: ExecMode,
+    pub stats: GemmStats,
+    /// max padded/real flop blow-up tolerated in Auto mode
+    pub max_padding_waste: f64,
+}
+
+impl GemmDispatcher {
+    /// Build with the given policy; NativeOnly never touches the executor.
+    pub fn new(mode: ExecMode) -> Self {
+        let executor = if mode == ExecMode::NativeOnly { None } else { global_executor() };
+        GemmDispatcher { executor, mode, stats: GemmStats::default(), max_padding_waste: 4.0 }
+    }
+
+    pub fn has_artifacts(&self) -> bool {
+        self.executor.is_some()
+    }
+
+    /// C = A·B with policy-based backend choice. Falls back to native on any
+    /// artifact failure (except in ArtifactOnly mode, which is for tests).
+    pub fn matmul(&self, a: &Matrix, b: &Matrix) -> Matrix {
+        let (m, k) = a.shape();
+        let n = b.cols();
+        assert_eq!(k, b.rows(), "dispatch matmul shape");
+        match self.mode {
+            ExecMode::NativeOnly => self.native(a, b),
+            ExecMode::ArtifactOnly => self
+                .try_artifact(a, b, f64::INFINITY)
+                .unwrap_or_else(|| panic!("no artifact serves {m}x{k}x{n}")),
+            ExecMode::Auto => self
+                .try_artifact(a, b, self.max_padding_waste)
+                .unwrap_or_else(|| self.native(a, b)),
+        }
+    }
+
+    fn native(&self, a: &Matrix, b: &Matrix) -> Matrix {
+        self.stats.native_calls.fetch_add(1, Ordering::Relaxed);
+        gemm::matmul(a, b)
+    }
+
+    /// Attempt artifact execution; None if no bucket fits within the waste
+    /// budget or the runtime errors.
+    fn try_artifact(&self, a: &Matrix, b: &Matrix, max_waste: f64) -> Option<Matrix> {
+        let exec = self.executor?;
+        let (m, k) = a.shape();
+        let n = b.cols();
+        if m == 0 || k == 0 || n == 0 {
+            return None;
+        }
+        let real = (2 * m * k * n) as f64;
+        // smallest bucket that fits all three dims within the waste budget
+        let (name, (bm, bk, bn)) = exec
+            .manifest()
+            .by_kind(ArtifactKind::Matmul)
+            .into_iter()
+            .filter_map(|s| s.gemm_dims().map(|d| (s.name.clone(), d)))
+            .find(|(_, (bm, bk, bn))| {
+                *bm >= m && *bk >= k && *bn >= n && (2 * bm * bk * bn) as f64 / real <= max_waste
+            })?;
+
+        // zero-pad operands into f32 bucket buffers
+        let a32 = pad_f32(a, bm, bk);
+        let b32 = pad_f32(b, bk, bn);
+        let out = exec
+            .execute_f32(&name, vec![(a32, vec![bm, bk]), (b32, vec![bk, bn])])
+            .ok()?;
+        self.stats.artifact_calls.fetch_add(1, Ordering::Relaxed);
+        self.stats.real_flops.fetch_add(real as usize, Ordering::Relaxed);
+        self.stats.padded_flops.fetch_add(2 * bm * bk * bn, Ordering::Relaxed);
+
+        // slice the m×n corner back out, widening to f64
+        let mut c = Matrix::zeros(m, n);
+        for i in 0..m {
+            let src = &out[i * bn..i * bn + n];
+            let dst = c.row_mut(i);
+            for (d, s) in dst.iter_mut().zip(src) {
+                *d = *s as f64;
+            }
+        }
+        Some(c)
+    }
+}
+
+/// Row-major zero-padded f32 copy of a matrix.
+pub fn pad_f32(a: &Matrix, rows: usize, cols: usize) -> Vec<f32> {
+    assert!(rows >= a.rows() && cols >= a.cols());
+    let mut out = vec![0f32; rows * cols];
+    for i in 0..a.rows() {
+        let src = a.row(i);
+        let dst = &mut out[i * cols..i * cols + a.cols()];
+        for (d, s) in dst.iter_mut().zip(src) {
+            *d = *s as f32;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn native_mode_counts() {
+        let d = GemmDispatcher::new(ExecMode::NativeOnly);
+        let mut rng = Rng::seed_from_u64(1);
+        let a = Matrix::randn(10, 8, &mut rng);
+        let b = Matrix::randn(8, 6, &mut rng);
+        let c = d.matmul(&a, &b);
+        assert!(c.max_abs_diff(&a.matmul_naive(&b)) < 1e-10);
+        assert_eq!(d.stats.native_calls.load(Ordering::Relaxed), 1);
+        assert_eq!(d.stats.artifact_calls.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn artifact_path_matches_native_within_f32() {
+        let d = GemmDispatcher::new(ExecMode::Auto);
+        if !d.has_artifacts() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let d = GemmDispatcher::new(ExecMode::ArtifactOnly);
+        let mut rng = Rng::seed_from_u64(3);
+        // 100x90x80 pads into the 128 bucket
+        let a = Matrix::randn(100, 90, &mut rng);
+        let b = Matrix::randn(90, 80, &mut rng);
+        let c_art = d.matmul(&a, &b);
+        let c_nat = gemm::matmul(&a, &b);
+        // f32 roundtrip tolerance, scaled by the ~sqrt(k) accumulation error
+        assert!(c_art.max_abs_diff(&c_nat) < 1e-3, "diff {}", c_art.max_abs_diff(&c_nat));
+        assert_eq!(d.stats.artifact_calls.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn auto_waste_budget_respected() {
+        let mut d = GemmDispatcher::new(ExecMode::Auto);
+        d.max_padding_waste = 1.5;
+        let mut rng = Rng::seed_from_u64(4);
+        // tiny product: padding to 128³ wastes astronomically -> native
+        let a = Matrix::randn(4, 4, &mut rng);
+        let b = Matrix::randn(4, 4, &mut rng);
+        let _ = d.matmul(&a, &b);
+        assert_eq!(d.stats.native_calls.load(Ordering::Relaxed), 1);
+        assert_eq!(d.stats.artifact_calls.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn pad_f32_layout() {
+        let a = Matrix::from_rows(&[&[1.0, 2.0], &[3.0, 4.0]]);
+        let p = pad_f32(&a, 3, 4);
+        assert_eq!(p.len(), 12);
+        assert_eq!(p[0], 1.0);
+        assert_eq!(p[1], 2.0);
+        assert_eq!(p[2], 0.0);
+        assert_eq!(p[4], 3.0);
+        assert_eq!(p[5], 4.0);
+        assert_eq!(p[8], 0.0);
+    }
+}

@@ -1,0 +1,15 @@
+//! PJRT runtime bridge — loads the AOT HLO artifacts produced by
+//! `python/compile/aot.py` and executes them from the rust hot path.
+//!
+//! Python is build-time only: after `make artifacts` the rust binary is
+//! self-contained. Everything here degrades gracefully — if the artifact
+//! directory is missing the dispatcher falls back to the native GEMM, and
+//! the policy/counters record which backend served each call.
+
+pub mod artifacts;
+pub mod client;
+pub mod dispatch;
+
+pub use artifacts::{ArtifactKind, ArtifactSpec, Manifest};
+pub use client::{global_executor, XlaExecutor};
+pub use dispatch::{ExecMode, GemmDispatcher, GemmStats};

@@ -1,0 +1,107 @@
+//! Coordinate-format sparse matrix (construction format).
+
+use crate::error::{Error, Result};
+
+/// COO triplet matrix. The natural construction format; convert to
+/// [`crate::sparse::Csr`] for compute.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Coo {
+    pub rows: usize,
+    pub cols: usize,
+    pub entries: Vec<(usize, usize, f64)>,
+}
+
+impl Coo {
+    pub fn new(rows: usize, cols: usize) -> Self {
+        Coo { rows, cols, entries: Vec::new() }
+    }
+
+    pub fn with_capacity(rows: usize, cols: usize, cap: usize) -> Self {
+        Coo { rows, cols, entries: Vec::with_capacity(cap) }
+    }
+
+    /// Append an entry (no dedup here; see [`Coo::sum_duplicates`]).
+    #[inline]
+    pub fn push(&mut self, i: usize, j: usize, v: f64) {
+        debug_assert!(i < self.rows && j < self.cols, "entry ({i},{j}) out of {}x{}", self.rows, self.cols);
+        self.entries.push((i, j, v));
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// Sparsity per the paper: sp(A) = 1 − |A| / (m·n).
+    pub fn sparsity(&self) -> f64 {
+        if self.rows == 0 || self.cols == 0 {
+            return 1.0;
+        }
+        1.0 - self.nnz() as f64 / (self.rows as f64 * self.cols as f64)
+    }
+
+    /// Sort by (row, col) and sum duplicate coordinates.
+    pub fn sum_duplicates(&mut self) {
+        self.entries.sort_unstable_by_key(|&(i, j, _)| (i, j));
+        let mut out: Vec<(usize, usize, f64)> = Vec::with_capacity(self.entries.len());
+        for &(i, j, v) in &self.entries {
+            match out.last_mut() {
+                Some(last) if last.0 == i && last.1 == j => last.2 += v,
+                _ => out.push((i, j, v)),
+            }
+        }
+        self.entries = out;
+    }
+
+    /// Validate all coordinates are in range.
+    pub fn validate(&self) -> Result<()> {
+        for &(i, j, _) in &self.entries {
+            if i >= self.rows || j >= self.cols {
+                return Err(Error::Invalid(format!(
+                    "coo entry ({i},{j}) out of bounds {}x{}",
+                    self.rows, self.cols
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    /// Dense copy (test/small use only).
+    pub fn to_dense(&self) -> crate::dense::Matrix {
+        let mut m = crate::dense::Matrix::zeros(self.rows, self.cols);
+        for &(i, j, v) in &self.entries {
+            m[(i, j)] += v;
+        }
+        m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn push_and_stats() {
+        let mut c = Coo::new(3, 4);
+        c.push(0, 0, 1.0);
+        c.push(2, 3, 2.0);
+        assert_eq!(c.nnz(), 2);
+        assert!((c.sparsity() - (1.0 - 2.0 / 12.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sum_duplicates_merges() {
+        let mut c = Coo::new(2, 2);
+        c.push(1, 1, 1.0);
+        c.push(0, 0, 2.0);
+        c.push(1, 1, 3.0);
+        c.sum_duplicates();
+        assert_eq!(c.nnz(), 2);
+        assert_eq!(c.entries, vec![(0, 0, 2.0), (1, 1, 4.0)]);
+    }
+
+    #[test]
+    fn validate_catches_out_of_range() {
+        let c = Coo { rows: 2, cols: 2, entries: vec![(5, 0, 1.0)] };
+        assert!(c.validate().is_err());
+    }
+}

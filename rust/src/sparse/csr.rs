@@ -1,0 +1,427 @@
+//! Compressed sparse row matrix — the compute format.
+
+use super::coo::Coo;
+use crate::dense::Matrix;
+use crate::util::parallel;
+
+/// CSR sparse matrix.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Csr {
+    rows: usize,
+    cols: usize,
+    /// row pointers, length rows+1
+    indptr: Vec<usize>,
+    /// column indices, length nnz, sorted within each row
+    indices: Vec<usize>,
+    /// values, length nnz
+    values: Vec<f64>,
+}
+
+impl Csr {
+    /// Build from COO (duplicates summed, rows sorted).
+    pub fn from_coo(coo: &Coo) -> Csr {
+        let mut c = coo.clone();
+        c.sum_duplicates();
+        let mut indptr = vec![0usize; c.rows + 1];
+        for &(i, _, _) in &c.entries {
+            indptr[i + 1] += 1;
+        }
+        for i in 0..c.rows {
+            indptr[i + 1] += indptr[i];
+        }
+        let nnz = c.entries.len();
+        let mut indices = Vec::with_capacity(nnz);
+        let mut values = Vec::with_capacity(nnz);
+        for &(_, j, v) in &c.entries {
+            indices.push(j);
+            values.push(v);
+        }
+        Csr { rows: c.rows, cols: c.cols, indptr, indices, values }
+    }
+
+    /// Build directly from raw CSR arrays (must be valid: sorted cols per row).
+    pub fn from_raw(
+        rows: usize,
+        cols: usize,
+        indptr: Vec<usize>,
+        indices: Vec<usize>,
+        values: Vec<f64>,
+    ) -> Csr {
+        assert_eq!(indptr.len(), rows + 1);
+        assert_eq!(indices.len(), values.len());
+        assert_eq!(*indptr.last().unwrap(), indices.len());
+        Csr { rows, cols, indptr, indices, values }
+    }
+
+    /// Empty matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Csr {
+        Csr { rows, cols, indptr: vec![0; rows + 1], indices: vec![], values: vec![] }
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+    #[inline]
+    pub fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+    #[inline]
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    pub fn indptr(&self) -> &[usize] {
+        &self.indptr
+    }
+    pub fn indices(&self) -> &[usize] {
+        &self.indices
+    }
+    pub fn values(&self) -> &[f64] {
+        &self.values
+    }
+
+    /// Sparsity sp(A) = 1 − |A|/(mn) per the paper.
+    pub fn sparsity(&self) -> f64 {
+        if self.rows == 0 || self.cols == 0 {
+            return 1.0;
+        }
+        1.0 - self.nnz() as f64 / (self.rows as f64 * self.cols as f64)
+    }
+
+    /// (column indices, values) of row i.
+    #[inline]
+    pub fn row(&self, i: usize) -> (&[usize], &[f64]) {
+        let (a, b) = (self.indptr[i], self.indptr[i + 1]);
+        (&self.indices[a..b], &self.values[a..b])
+    }
+
+    /// Number of nonzeros in row i.
+    #[inline]
+    pub fn row_nnz(&self, i: usize) -> usize {
+        self.indptr[i + 1] - self.indptr[i]
+    }
+
+    /// Per-row nonzero counts (instance-node degrees in the bipartite view).
+    pub fn row_degrees(&self) -> Vec<usize> {
+        (0..self.rows).map(|i| self.row_nnz(i)).collect()
+    }
+
+    /// Per-column nonzero counts (feature-node degrees).
+    pub fn col_degrees(&self) -> Vec<usize> {
+        let mut d = vec![0usize; self.cols];
+        for &j in &self.indices {
+            d[j] += 1;
+        }
+        d
+    }
+
+    /// Transposed copy (CSR of Aᵀ — equivalently the CSC view of A).
+    pub fn transpose(&self) -> Csr {
+        let mut indptr = vec![0usize; self.cols + 1];
+        for &j in &self.indices {
+            indptr[j + 1] += 1;
+        }
+        for j in 0..self.cols {
+            indptr[j + 1] += indptr[j];
+        }
+        let mut indices = vec![0usize; self.nnz()];
+        let mut values = vec![0.0f64; self.nnz()];
+        let mut next = indptr.clone();
+        for i in 0..self.rows {
+            let (js, vs) = self.row(i);
+            for (j, v) in js.iter().zip(vs) {
+                let pos = next[*j];
+                indices[pos] = i;
+                values[pos] = *v;
+                next[*j] += 1;
+            }
+        }
+        Csr { rows: self.cols, cols: self.rows, indptr, indices, values }
+    }
+
+    /// Dense copy.
+    pub fn to_dense(&self) -> Matrix {
+        let mut m = Matrix::zeros(self.rows, self.cols);
+        for i in 0..self.rows {
+            let (js, vs) = self.row(i);
+            let row = m.row_mut(i);
+            for (j, v) in js.iter().zip(vs) {
+                row[*j] = *v;
+            }
+        }
+        m
+    }
+
+    /// COO copy.
+    pub fn to_coo(&self) -> Coo {
+        let mut c = Coo::with_capacity(self.rows, self.cols, self.nnz());
+        for i in 0..self.rows {
+            let (js, vs) = self.row(i);
+            for (j, v) in js.iter().zip(vs) {
+                c.push(i, *j, *v);
+            }
+        }
+        c
+    }
+
+    /// Frobenius norm.
+    pub fn fro_norm(&self) -> f64 {
+        self.values.iter().map(|v| v * v).sum::<f64>().sqrt()
+    }
+
+    /// Sparse · dense-vector: y = A x.
+    pub fn spmv(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.cols);
+        (0..self.rows)
+            .map(|i| {
+                let (js, vs) = self.row(i);
+                js.iter().zip(vs).map(|(&j, &v)| v * x[j]).sum()
+            })
+            .collect()
+    }
+
+    /// Transposed sparse · vector: y = Aᵀ x.
+    pub fn spmv_t(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.rows);
+        let mut y = vec![0.0; self.cols];
+        for i in 0..self.rows {
+            let xi = x[i];
+            if xi != 0.0 {
+                let (js, vs) = self.row(i);
+                for (&j, &v) in js.iter().zip(vs) {
+                    y[j] += v * xi;
+                }
+            }
+        }
+        y
+    }
+
+    /// Sparse × dense: C = A · B, parallel over row blocks.
+    pub fn spmm(&self, b: &Matrix) -> Matrix {
+        assert_eq!(self.cols, b.rows(), "spmm: {}x{} · {}x{}", self.rows, self.cols, b.rows(), b.cols());
+        let n = b.cols();
+        let mut c = Matrix::zeros(self.rows, n);
+        let c_ptr = SyncPtr(c.data_mut().as_mut_ptr());
+        let cp = &c_ptr;
+        parallel::for_each_chunk(self.rows, 64, move |range| {
+            for i in range {
+                // SAFETY: each row of C is written by exactly one worker.
+                let crow = unsafe { std::slice::from_raw_parts_mut(cp.0.add(i * n), n) };
+                let (js, vs) = self.row(i);
+                for (&j, &v) in js.iter().zip(vs) {
+                    let brow = b.row(j);
+                    for (cj, bj) in crow.iter_mut().zip(brow) {
+                        *cj += v * bj;
+                    }
+                }
+            }
+        });
+        c
+    }
+
+    /// Transposed sparse × dense: C = Aᵀ · B (A stays CSR; we transpose once).
+    pub fn spmm_t(&self, b: &Matrix) -> Matrix {
+        assert_eq!(self.rows, b.rows(), "spmm_t shape");
+        self.transpose().spmm(b)
+    }
+
+    /// Dense × sparse: C = B · A computed as (Aᵀ · Bᵀ)ᵀ.
+    pub fn rspmm(&self, b: &Matrix) -> Matrix {
+        assert_eq!(b.cols(), self.rows, "rspmm shape");
+        self.spmm_t(&b.transpose()).transpose()
+    }
+
+    /// Permuted copy: B[pr[i], pc[j]] = A[i, j]. `row_perm[i]` gives the NEW
+    /// index of old row i (and likewise for columns).
+    pub fn permute(&self, row_perm: &[usize], col_perm: &[usize]) -> Csr {
+        assert_eq!(row_perm.len(), self.rows);
+        assert_eq!(col_perm.len(), self.cols);
+        let mut coo = Coo::with_capacity(self.rows, self.cols, self.nnz());
+        for i in 0..self.rows {
+            let (js, vs) = self.row(i);
+            for (&j, &v) in js.iter().zip(vs) {
+                coo.push(row_perm[i], col_perm[j], v);
+            }
+        }
+        Csr::from_coo(&coo)
+    }
+
+    /// Extract the sub-block rows r0..r0+nr, cols c0..c0+nc as CSR.
+    pub fn block(&self, r0: usize, c0: usize, nr: usize, nc: usize) -> Csr {
+        assert!(r0 + nr <= self.rows && c0 + nc <= self.cols);
+        let mut coo = Coo::new(nr, nc);
+        for i in 0..nr {
+            let (js, vs) = self.row(r0 + i);
+            for (&j, &v) in js.iter().zip(vs) {
+                if j >= c0 && j < c0 + nc {
+                    coo.push(i, j - c0, v);
+                }
+            }
+        }
+        Csr::from_coo(&coo)
+    }
+
+    /// Dense copy of a sub-block (used to densify small reordered blocks).
+    pub fn block_dense(&self, r0: usize, c0: usize, nr: usize, nc: usize) -> Matrix {
+        assert!(r0 + nr <= self.rows && c0 + nc <= self.cols);
+        let mut m = Matrix::zeros(nr, nc);
+        for i in 0..nr {
+            let (js, vs) = self.row(r0 + i);
+            let row = m.row_mut(i);
+            for (&j, &v) in js.iter().zip(vs) {
+                if j >= c0 && j < c0 + nc {
+                    row[j - c0] = v;
+                }
+            }
+        }
+        m
+    }
+
+    /// nnz inside a rectangular region (diagnostics for Fig. 3).
+    pub fn nnz_in_region(&self, r0: usize, c0: usize, nr: usize, nc: usize) -> usize {
+        let mut count = 0;
+        for i in r0..(r0 + nr).min(self.rows) {
+            let (js, _) = self.row(i);
+            count += js.iter().filter(|&&j| j >= c0 && j < c0 + nc).count();
+        }
+        count
+    }
+}
+
+struct SyncPtr(*mut f64);
+unsafe impl Sync for SyncPtr {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::check;
+    use crate::util::rng::Rng;
+
+    fn random_coo(rng: &mut Rng, rows: usize, cols: usize, nnz: usize) -> Coo {
+        let mut c = Coo::new(rows, cols);
+        for _ in 0..nnz {
+            c.push(rng.usize_below(rows), rng.usize_below(cols), rng.normal());
+        }
+        c
+    }
+
+    #[test]
+    fn coo_roundtrip() {
+        check("csr <-> coo roundtrip", 20, |rng| {
+            let (m, n) = (rng.usize_range(1, 40), rng.usize_range(1, 40));
+            let nnz = rng.usize_range(0, 200);
+            let coo = random_coo(rng, m, n, nnz);
+            let csr = Csr::from_coo(&coo);
+            // duplicate coordinates are summed in different orders -> f64 rounding
+            assert!(csr.to_dense().max_abs_diff(&coo.to_dense()) < 1e-12);
+            let rt = Csr::from_coo(&csr.to_coo());
+            assert_eq!(rt, csr);
+        });
+    }
+
+    #[test]
+    fn transpose_involution() {
+        check("transpose twice = identity", 15, |rng| {
+            let (m, n) = (rng.usize_range(1, 30), rng.usize_range(1, 30));
+            let coo = random_coo(rng, m, n, 80);
+            let csr = Csr::from_coo(&coo);
+            assert_eq!(csr.transpose().transpose(), csr);
+            assert_eq!(csr.transpose().to_dense(), csr.to_dense().transpose());
+        });
+    }
+
+    #[test]
+    fn degrees() {
+        let mut coo = Coo::new(3, 4);
+        coo.push(0, 1, 1.0);
+        coo.push(0, 2, 1.0);
+        coo.push(2, 1, 1.0);
+        let csr = Csr::from_coo(&coo);
+        assert_eq!(csr.row_degrees(), vec![2, 0, 1]);
+        assert_eq!(csr.col_degrees(), vec![0, 2, 1, 0]);
+    }
+
+    #[test]
+    fn spmv_matches_dense() {
+        check("spmv == dense matvec", 15, |rng| {
+            let (m, n) = (rng.usize_range(1, 30), rng.usize_range(1, 30));
+            let csr = Csr::from_coo(&random_coo(rng, m, n, 60));
+            let d = csr.to_dense();
+            let x = rng.normal_vec(n);
+            let y1 = csr.spmv(&x);
+            let y2 = d.matvec(&x);
+            for i in 0..m {
+                assert!((y1[i] - y2[i]).abs() < 1e-12);
+            }
+            let z = rng.normal_vec(m);
+            let t1 = csr.spmv_t(&z);
+            let t2 = d.matvec_t(&z);
+            for j in 0..n {
+                assert!((t1[j] - t2[j]).abs() < 1e-12);
+            }
+        });
+    }
+
+    #[test]
+    fn spmm_matches_dense() {
+        check("spmm == dense matmul", 15, |rng| {
+            let (m, k, n) = (rng.usize_range(1, 30), rng.usize_range(1, 30), rng.usize_range(1, 15));
+            let csr = Csr::from_coo(&random_coo(rng, m, k, 70));
+            let b = Matrix::randn(k, n, rng);
+            let c = csr.spmm(&b);
+            let c0 = csr.to_dense().matmul_naive(&b);
+            assert!(c.max_abs_diff(&c0) < 1e-12);
+
+            let b2 = Matrix::randn(m, n, rng);
+            let ct = csr.spmm_t(&b2);
+            let ct0 = csr.to_dense().transpose().matmul_naive(&b2);
+            assert!(ct.max_abs_diff(&ct0) < 1e-12);
+
+            let b3 = Matrix::randn(n, m, rng);
+            let cr = csr.rspmm(&b3);
+            let cr0 = b3.matmul_naive(&csr.to_dense());
+            assert!(cr.max_abs_diff(&cr0) < 1e-12);
+        });
+    }
+
+    #[test]
+    fn permute_preserves_entries() {
+        check("permute preserves entries", 15, |rng| {
+            let (m, n) = (rng.usize_range(1, 25), rng.usize_range(1, 25));
+            let csr = Csr::from_coo(&random_coo(rng, m, n, 50));
+            let pr = rng.permutation(m);
+            let pc = rng.permutation(n);
+            let p = csr.permute(&pr, &pc);
+            assert_eq!(p.nnz(), csr.nnz());
+            let d = csr.to_dense();
+            let pd = p.to_dense();
+            for i in 0..m {
+                for j in 0..n {
+                    assert_eq!(pd[(pr[i], pc[j])], d[(i, j)]);
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn block_extraction() {
+        let mut coo = Coo::new(4, 4);
+        for i in 0..4 {
+            coo.push(i, i, (i + 1) as f64);
+        }
+        let csr = Csr::from_coo(&coo);
+        let b = csr.block(1, 1, 2, 2);
+        assert_eq!(b.shape(), (2, 2));
+        assert_eq!(b.nnz(), 2);
+        assert_eq!(b.to_dense()[(0, 0)], 2.0);
+        let bd = csr.block_dense(1, 1, 2, 2);
+        assert_eq!(bd.max_abs_diff(&b.to_dense()), 0.0);
+        assert_eq!(csr.nnz_in_region(0, 0, 2, 2), 2);
+        assert_eq!(csr.nnz_in_region(2, 0, 2, 2), 0);
+    }
+}

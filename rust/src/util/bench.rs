@@ -1,0 +1,228 @@
+//! Wall-clock benchmarking harness (no `criterion` in the offline
+//! environment). Provides warmup + repeated timing with robust statistics,
+//! and a table/CSV reporter shared by all `benches/*.rs` targets.
+
+use std::time::{Duration, Instant};
+
+/// Statistics over a set of timed iterations.
+#[derive(Debug, Clone)]
+pub struct Stats {
+    pub iters: usize,
+    pub mean_s: f64,
+    pub std_s: f64,
+    pub min_s: f64,
+    pub p50_s: f64,
+    pub p95_s: f64,
+    pub max_s: f64,
+}
+
+impl Stats {
+    pub fn from_samples(mut xs: Vec<f64>) -> Stats {
+        assert!(!xs.is_empty());
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = xs.len();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        let pct = |p: f64| xs[(((n - 1) as f64) * p).round() as usize];
+        Stats {
+            iters: n,
+            mean_s: mean,
+            std_s: var.sqrt(),
+            min_s: xs[0],
+            p50_s: pct(0.5),
+            p95_s: pct(0.95),
+            max_s: xs[n - 1],
+        }
+    }
+}
+
+/// Benchmark runner configuration.
+#[derive(Debug, Clone)]
+pub struct BenchConfig {
+    pub warmup_iters: usize,
+    pub measure_iters: usize,
+    /// stop adding iterations once total measured time exceeds this budget
+    pub time_budget: Duration,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        BenchConfig {
+            warmup_iters: 1,
+            measure_iters: 5,
+            time_budget: Duration::from_secs(30),
+        }
+    }
+}
+
+impl BenchConfig {
+    /// Quick config for CI-ish runs, respecting FASTPI_BENCH_FAST env.
+    pub fn from_env() -> Self {
+        let mut c = BenchConfig::default();
+        if std::env::var("FASTPI_BENCH_FAST").is_ok() {
+            c.warmup_iters = 0;
+            c.measure_iters = 2;
+            c.time_budget = Duration::from_secs(5);
+        }
+        c
+    }
+}
+
+/// Time `f` under the config; returns stats over the measured runs.
+pub fn run<T>(cfg: &BenchConfig, mut f: impl FnMut() -> T) -> Stats {
+    for _ in 0..cfg.warmup_iters {
+        std::hint::black_box(f());
+    }
+    let mut samples = Vec::with_capacity(cfg.measure_iters);
+    let budget_start = Instant::now();
+    for i in 0..cfg.measure_iters {
+        let t = Instant::now();
+        std::hint::black_box(f());
+        samples.push(t.elapsed().as_secs_f64());
+        if i >= 1 && budget_start.elapsed() > cfg.time_budget {
+            break;
+        }
+    }
+    Stats::from_samples(samples)
+}
+
+/// A collected result row for the reporter.
+#[derive(Debug, Clone)]
+pub struct Row {
+    pub keys: Vec<(String, String)>,
+    pub values: Vec<(String, f64)>,
+}
+
+/// Table + CSV reporter. Benches construct one, add rows, then `finish()`
+/// prints an aligned table and writes `target/bench_results/<name>.csv`.
+pub struct Reporter {
+    name: String,
+    rows: Vec<Row>,
+}
+
+impl Reporter {
+    pub fn new(name: &str) -> Self {
+        Reporter { name: name.to_string(), rows: Vec::new() }
+    }
+
+    pub fn add(&mut self, keys: &[(&str, String)], values: &[(&str, f64)]) {
+        self.rows.push(Row {
+            keys: keys.iter().map(|(k, v)| (k.to_string(), v.clone())).collect(),
+            values: values.iter().map(|(k, v)| (k.to_string(), *v)).collect(),
+        });
+        // incremental echo so long benches show progress
+        let r = self.rows.last().unwrap();
+        let k: Vec<String> = r.keys.iter().map(|(k, v)| format!("{k}={v}")).collect();
+        let v: Vec<String> = r.values.iter().map(|(k, x)| format!("{k}={x:.6}")).collect();
+        println!("[{}] {} | {}", self.name, k.join(" "), v.join(" "));
+    }
+
+    /// Render aligned table text.
+    pub fn table(&self) -> String {
+        if self.rows.is_empty() {
+            return format!("[{}] no rows\n", self.name);
+        }
+        // header from the widest row (rows may carry heterogeneous values)
+        let widest = self
+            .rows
+            .iter()
+            .max_by_key(|r| r.keys.len() + r.values.len())
+            .unwrap();
+        let mut cols: Vec<String> = Vec::new();
+        for (k, _) in &widest.keys {
+            cols.push(k.clone());
+        }
+        for (k, _) in &widest.values {
+            cols.push(k.clone());
+        }
+        let mut grid: Vec<Vec<String>> = vec![cols.clone()];
+        for r in &self.rows {
+            let mut row: Vec<String> = r.keys.iter().map(|(_, v)| v.clone()).collect();
+            row.extend(r.values.iter().map(|(_, v)| format!("{v:.6}")));
+            grid.push(row);
+        }
+        let ncols = grid.iter().map(|r| r.len()).max().unwrap_or(0);
+        let widths: Vec<usize> = (0..ncols)
+            .map(|c| grid.iter().map(|r| r.get(c).map_or(0, |s| s.len())).max().unwrap_or(0))
+            .collect();
+        let mut out = format!("== {} ==\n", self.name);
+        for (ri, row) in grid.iter().enumerate() {
+            let line: Vec<String> = row
+                .iter()
+                .enumerate()
+                .map(|(c, s)| format!("{s:>w$}", w = widths.get(c).copied().unwrap_or(0)))
+                .collect();
+            out.push_str(&line.join("  "));
+            out.push('\n');
+            if ri == 0 {
+                out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (widths.len() - 1)));
+                out.push('\n');
+            }
+        }
+        out
+    }
+
+    /// Print the table and write CSV under `target/bench_results/`.
+    pub fn finish(&self) {
+        print!("{}", self.table());
+        let dir = std::path::Path::new("target/bench_results");
+        let _ = std::fs::create_dir_all(dir);
+        let mut csv = String::new();
+        if let Some(first) = self.rows.first() {
+            let mut hdr: Vec<String> = first.keys.iter().map(|(k, _)| k.clone()).collect();
+            hdr.extend(first.values.iter().map(|(k, _)| k.clone()));
+            csv.push_str(&hdr.join(","));
+            csv.push('\n');
+            for r in &self.rows {
+                let mut row: Vec<String> = r.keys.iter().map(|(_, v)| v.clone()).collect();
+                row.extend(r.values.iter().map(|(_, v)| format!("{v}")));
+                csv.push_str(&row.join(","));
+                csv.push('\n');
+            }
+        }
+        let path = dir.join(format!("{}.csv", self.name));
+        if let Err(e) = std::fs::write(&path, csv) {
+            eprintln!("warning: could not write {}: {e}", path.display());
+        } else {
+            println!("wrote {}", path.display());
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_basic() {
+        let s = Stats::from_samples(vec![1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(s.iters, 5);
+        assert!((s.mean_s - 3.0).abs() < 1e-12);
+        assert_eq!(s.min_s, 1.0);
+        assert_eq!(s.max_s, 5.0);
+        assert_eq!(s.p50_s, 3.0);
+    }
+
+    #[test]
+    fn run_measures() {
+        let cfg = BenchConfig { warmup_iters: 0, measure_iters: 3, time_budget: Duration::from_secs(10) };
+        let mut n = 0u64;
+        let s = run(&cfg, || {
+            n += 1;
+            std::thread::sleep(Duration::from_millis(1));
+        });
+        assert_eq!(s.iters, 3);
+        assert!(s.mean_s >= 0.001);
+    }
+
+    #[test]
+    fn reporter_renders() {
+        let mut r = Reporter::new("unit");
+        r.add(&[("dataset", "bibtex".into()), ("alpha", "0.1".into())], &[("secs", 1.5)]);
+        r.add(&[("dataset", "rcv".into()), ("alpha", "0.2".into())], &[("secs", 2.5)]);
+        let t = r.table();
+        assert!(t.contains("dataset"));
+        assert!(t.contains("bibtex"));
+        assert!(t.contains("2.5"));
+    }
+}

@@ -1,0 +1,10 @@
+//! In-tree utility substrates (PRNG, parallelism, CLI, benching, property
+//! testing, timing). These replace crates.io dependencies that are not
+//! available in the offline build environment — see DESIGN.md §5.
+
+pub mod args;
+pub mod bench;
+pub mod parallel;
+pub mod propcheck;
+pub mod rng;
+pub mod timer;

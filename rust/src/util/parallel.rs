@@ -1,0 +1,138 @@
+//! Data-parallel primitives built on `std::thread::scope`.
+//!
+//! The environment has no `rayon`, so we provide the two shapes the library
+//! needs: an index-space parallel-for with atomic work stealing, and a
+//! parallel map over items. Thread count comes from [`num_threads`], settable
+//! once per process (CLI `--threads`, env `FASTPI_THREADS`, default = cores).
+
+use once_cell::sync::OnceCell;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+static NUM_THREADS: OnceCell<usize> = OnceCell::new();
+
+/// Set the global worker count. First caller wins; returns false if already set.
+pub fn set_num_threads(n: usize) -> bool {
+    NUM_THREADS.set(n.max(1)).is_ok()
+}
+
+/// Worker count: explicit setting > `FASTPI_THREADS` env > available cores.
+pub fn num_threads() -> usize {
+    *NUM_THREADS.get_or_init(|| {
+        if let Ok(v) = std::env::var("FASTPI_THREADS") {
+            if let Ok(n) = v.parse::<usize>() {
+                return n.max(1);
+            }
+        }
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    })
+}
+
+/// Parallel for over `0..n` in chunks of `chunk` indices, work-stolen off a
+/// shared atomic counter. `f` must be `Sync` (called concurrently).
+///
+/// Runs inline when `n` is small or only one thread is configured, so it is
+/// safe to use unconditionally in numeric kernels.
+pub fn for_each_chunk<F>(n: usize, chunk: usize, f: F)
+where
+    F: Fn(std::ops::Range<usize>) + Sync,
+{
+    let chunk = chunk.max(1);
+    let threads = num_threads().min(n.div_ceil(chunk)).max(1);
+    if threads == 1 || n == 0 {
+        let mut i = 0;
+        while i < n {
+            f(i..(i + chunk).min(n));
+            i += chunk;
+        }
+        return;
+    }
+    let counter = AtomicUsize::new(0);
+    std::thread::scope(|s| {
+        for _ in 0..threads {
+            s.spawn(|| loop {
+                let start = counter.fetch_add(chunk, Ordering::Relaxed);
+                if start >= n {
+                    break;
+                }
+                f(start..(start + chunk).min(n));
+            });
+        }
+    });
+}
+
+/// Parallel for over single indices (chunk size 1) — for coarse jobs like
+/// per-block SVDs where each iteration is substantial.
+pub fn for_each_index<F>(n: usize, f: F)
+where
+    F: Fn(usize) + Sync,
+{
+    for_each_chunk(n, 1, |r| {
+        for i in r {
+            f(i)
+        }
+    });
+}
+
+/// Parallel map: applies `f` to every item of `items`, preserving order.
+pub fn map<T: Sync, U: Send, F>(items: &[T], f: F) -> Vec<U>
+where
+    F: Fn(&T) -> U + Sync,
+{
+    let n = items.len();
+    let mut out: Vec<Option<U>> = (0..n).map(|_| None).collect();
+    {
+        let slots = SyncSlots(out.as_mut_ptr());
+        let slots_ref = &slots;
+        for_each_index(n, move |i| {
+            let v = f(&items[i]);
+            // SAFETY: each index i is visited exactly once across all workers
+            // (atomic counter hand-out), so writes are disjoint.
+            unsafe { std::ptr::write(slots_ref.0.add(i), Some(v)) };
+        });
+    }
+    out.into_iter().map(|o| o.expect("slot filled")).collect()
+}
+
+/// Wrapper making a raw pointer Sync for the disjoint-write pattern above.
+struct SyncSlots<U>(*mut Option<U>);
+unsafe impl<U: Send> Sync for SyncSlots<U> {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn for_each_index_visits_each_once() {
+        let hits: Vec<AtomicUsize> = (0..1000).map(|_| AtomicUsize::new(0)).collect();
+        for_each_index(1000, |i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn for_each_chunk_covers_range_exactly() {
+        let total = AtomicU64::new(0);
+        for_each_chunk(1003, 64, |r| {
+            let s: u64 = r.map(|i| i as u64).sum();
+            total.fetch_add(s, Ordering::Relaxed);
+        });
+        let expect: u64 = (0..1003u64).sum();
+        assert_eq!(total.load(Ordering::Relaxed), expect);
+    }
+
+    #[test]
+    fn map_preserves_order() {
+        let items: Vec<usize> = (0..257).collect();
+        let out = map(&items, |&x| x * 3);
+        assert_eq!(out, (0..257).map(|x| x * 3).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn zero_items_ok() {
+        for_each_index(0, |_| panic!("should not run"));
+        let out: Vec<u8> = map(&[] as &[u8], |x| *x);
+        assert!(out.is_empty());
+    }
+}

@@ -1,0 +1,106 @@
+//! Stage timing for the coordinator and experiment harnesses.
+
+use std::collections::BTreeMap;
+use std::time::{Duration, Instant};
+
+/// Simple stopwatch.
+#[derive(Debug)]
+pub struct Stopwatch(Instant);
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Stopwatch(Instant::now())
+    }
+    pub fn elapsed(&self) -> Duration {
+        self.0.elapsed()
+    }
+    pub fn secs(&self) -> f64 {
+        self.elapsed().as_secs_f64()
+    }
+}
+
+/// Accumulates named stage durations (insertion-ordered by name).
+#[derive(Debug, Default, Clone)]
+pub struct StageTimes {
+    stages: BTreeMap<String, Duration>,
+    order: Vec<String>,
+}
+
+impl StageTimes {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Time `f` under `name`, accumulating across calls.
+    pub fn time<T>(&mut self, name: &str, f: impl FnOnce() -> T) -> T {
+        let t = Instant::now();
+        let out = f();
+        self.add(name, t.elapsed());
+        out
+    }
+
+    pub fn add(&mut self, name: &str, d: Duration) {
+        if !self.stages.contains_key(name) {
+            self.order.push(name.to_string());
+        }
+        *self.stages.entry(name.to_string()).or_default() += d;
+    }
+
+    pub fn get(&self, name: &str) -> Duration {
+        self.stages.get(name).copied().unwrap_or_default()
+    }
+
+    pub fn total(&self) -> Duration {
+        self.stages.values().sum()
+    }
+
+    /// Stages in first-recorded order with seconds.
+    pub fn rows(&self) -> Vec<(String, f64)> {
+        self.order
+            .iter()
+            .map(|n| (n.clone(), self.stages[n].as_secs_f64()))
+            .collect()
+    }
+
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        for (name, secs) in self.rows() {
+            s.push_str(&format!("  {name:<28} {secs:>10.4}s\n"));
+        }
+        s.push_str(&format!("  {:<28} {:>10.4}s\n", "TOTAL", self.total().as_secs_f64()));
+        s
+    }
+
+    pub fn merge(&mut self, other: &StageTimes) {
+        for (name, secs) in other.rows() {
+            self.add(&name, Duration::from_secs_f64(secs));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accumulates_and_orders() {
+        let mut st = StageTimes::new();
+        st.add("b", Duration::from_millis(10));
+        st.add("a", Duration::from_millis(5));
+        st.add("b", Duration::from_millis(10));
+        let rows = st.rows();
+        assert_eq!(rows[0].0, "b");
+        assert_eq!(rows[1].0, "a");
+        assert!((rows[0].1 - 0.020).abs() < 1e-9);
+        assert!((st.total().as_secs_f64() - 0.025).abs() < 1e-9);
+    }
+
+    #[test]
+    fn time_returns_value() {
+        let mut st = StageTimes::new();
+        let v = st.time("work", || 41 + 1);
+        assert_eq!(v, 42);
+        assert!(st.get("work") > Duration::ZERO || st.get("work") == Duration::ZERO);
+        assert_eq!(st.rows().len(), 1);
+    }
+}

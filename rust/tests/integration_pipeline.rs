@@ -1,0 +1,137 @@
+//! Integration: the full FastPI pipeline against ground truth, across
+//! modules (data → reorder → svdlr → pinv → regress → coordinator).
+
+use fastpi::coordinator::{PinvJob, PipelineCoordinator};
+use fastpi::data::{generate, load_dataset, SynthConfig};
+use fastpi::dense::{svd as dense_svd, Matrix};
+use fastpi::pinv::{fastpi_svd, FastPiConfig, Method, Pinv};
+use fastpi::regress::{precision_at_k, train_test_split, MultiLabelModel};
+use fastpi::util::rng::Rng;
+
+/// FastPI at α=1 must reproduce the exact pseudoinverse on a real
+/// (generated) dataset, end to end through the coordinator.
+#[test]
+fn fastpi_full_rank_equals_exact_pinv() {
+    let ds = load_dataset("bibtex", 0.04, 11, None).unwrap();
+    let coord = PipelineCoordinator::new();
+    let job = PinvJob { method: Method::FastPi, alpha: 1.0, k: ds.k, seed: 3 };
+    let report = coord.run(&ds.a, &job).unwrap();
+
+    let exact = Pinv::from_svd(&dense_svd(&ds.a.to_dense()));
+    let diff = report.pinv.to_dense().max_abs_diff(&exact.to_dense());
+    assert!(diff < 1e-5, "pinv mismatch {diff}");
+}
+
+/// All four methods agree on regression quality at moderate rank — the
+/// Figure-5 "no accuracy loss" claim, cross-module.
+#[test]
+fn methods_agree_on_p_at_3() {
+    let cfg = SynthConfig { m: 600, n: 120, labels: 40, nnz: 5000, ..Default::default() };
+    let mut rng = Rng::seed_from_u64(21);
+    let (a, y) = generate(&cfg, &mut rng);
+    let split = train_test_split(&a, &y, 0.1, &mut Rng::seed_from_u64(9));
+
+    let mut p3s = Vec::new();
+    for method in Method::PAPER_SET {
+        let coord = PipelineCoordinator::new();
+        let job = PinvJob { method, alpha: 0.5, k: 0.02, seed: 5 };
+        let report = coord.run(&split.a_train, &job).unwrap();
+        let (model, _) = MultiLabelModel::train(&report.pinv, &split.y_train);
+        let scores = model.predict(&split.a_test);
+        p3s.push((method.name(), precision_at_k(&scores, &split.y_test, 3)));
+    }
+    let vals: Vec<f64> = p3s.iter().map(|(_, p)| *p).collect();
+    let lo = vals.iter().cloned().fold(f64::INFINITY, f64::min);
+    let hi = vals.iter().cloned().fold(0.0f64, f64::max);
+    assert!(lo > 0.1, "accuracy above chance: {p3s:?}");
+    assert!(hi - lo < 0.1, "methods should agree on P@3: {p3s:?}");
+}
+
+/// The under/overfit inverted-U of Figure 5: P@3 at a middle α beats the
+/// extreme low-α setting (underfitting) on a learnable dataset.
+#[test]
+fn accuracy_improves_with_rank_until_saturation() {
+    let ds = load_dataset("bibtex", 0.06, 13, None).unwrap();
+    let coord = PipelineCoordinator::new();
+    let mut p3_by_alpha = Vec::new();
+    for alpha in [0.02, 0.5] {
+        let job = PinvJob { method: Method::FastPi, alpha, k: ds.k, seed: 7 };
+        let (_, metrics) = coord.run_regression(&ds, &job, 0.1).unwrap();
+        p3_by_alpha.push((alpha, metrics.p_at_3));
+    }
+    assert!(
+        p3_by_alpha[1].1 > p3_by_alpha[0].1,
+        "mid-rank should beat tiny rank: {p3_by_alpha:?}"
+    );
+}
+
+/// Reordering + block SVD + incremental updates preserve the spectrum:
+/// FastPI's singular values match the dense oracle at full rank.
+#[test]
+fn spectrum_preserved_end_to_end() {
+    let ds = load_dataset("rcv", 0.03, 17, None).unwrap();
+    let mut rng = Rng::seed_from_u64(1);
+    let cfg = FastPiConfig { alpha: 1.0, k: ds.k, ..Default::default() };
+    let out = fastpi_svd(&ds.a, &cfg, &mut rng).unwrap();
+    let exact = dense_svd(&ds.a.to_dense());
+    let r = out.svd.rank().min(exact.s.len());
+    for i in 0..r {
+        assert!(
+            (out.svd.s[i] - exact.s[i]).abs() < 1e-6 * (1.0 + exact.s[0]),
+            "sigma[{i}]: {} vs {}",
+            out.svd.s[i],
+            exact.s[i]
+        );
+    }
+}
+
+/// Dataset cache: regenerating with the same (name, scale, seed) must give
+/// byte-identical matrices even across cache hits/misses.
+#[test]
+fn dataset_reproducibility() {
+    let dir = std::env::temp_dir().join("fastpi_integration_cache");
+    let _ = std::fs::remove_dir_all(&dir);
+    let d1 = load_dataset("eurlex", 0.02, 3, Some(&dir)).unwrap();
+    let d2 = load_dataset("eurlex", 0.02, 3, Some(&dir)).unwrap(); // cache hit
+    let _ = std::fs::remove_dir_all(&dir);
+    let d3 = load_dataset("eurlex", 0.02, 3, Some(&dir)).unwrap(); // regenerate
+    assert_eq!(d1.a, d2.a);
+    assert_eq!(d1.a, d3.a);
+    assert_eq!(d1.y, d3.y);
+}
+
+/// Thread-count invariance: the parallel block fan-out must not change
+/// results (FASTPI_THREADS is inherited; we compare two in-process runs).
+#[test]
+fn results_independent_of_parallel_schedule() {
+    let ds = load_dataset("bibtex", 0.05, 29, None).unwrap();
+    let mut rng1 = Rng::seed_from_u64(2);
+    let mut rng2 = Rng::seed_from_u64(2);
+    let cfg = FastPiConfig { alpha: 0.4, k: ds.k, ..Default::default() };
+    let o1 = fastpi_svd(&ds.a, &cfg, &mut rng1).unwrap();
+    let o2 = fastpi_svd(&ds.a, &cfg, &mut rng2).unwrap();
+    assert_eq!(o1.svd.s, o2.svd.s);
+    assert_eq!(o1.svd.u.max_abs_diff(&o2.svd.u), 0.0);
+}
+
+/// Least-squares optimality: Z = A†Y minimizes ‖AZ−Y‖_F — perturbing Z
+/// can only increase the residual (checked on a dense-solvable size).
+#[test]
+fn pinv_solution_is_least_squares_optimal() {
+    let cfg = SynthConfig { m: 200, n: 40, labels: 10, nnz: 1500, ..Default::default() };
+    let mut rng = Rng::seed_from_u64(31);
+    let (a, y) = generate(&cfg, &mut rng);
+    let out = fastpi_svd(&a, &FastPiConfig { alpha: 1.0, k: 0.02, ..Default::default() }, &mut rng)
+        .unwrap();
+    let z = out.pinv().apply_sparse(&y);
+    let ad = a.to_dense();
+    let yd = y.to_dense();
+    let resid = fastpi::dense::matmul(&ad, &z).sub(&yd).fro_norm();
+    for trial in 0..5 {
+        let mut rng2 = Rng::seed_from_u64(trial);
+        let noise = Matrix::randn(z.rows(), z.cols(), &mut rng2);
+        let z2 = z.axpy(1e-3, &noise);
+        let resid2 = fastpi::dense::matmul(&ad, &z2).sub(&yd).fro_norm();
+        assert!(resid2 >= resid - 1e-9, "perturbation reduced residual");
+    }
+}

@@ -1,0 +1,115 @@
+//! Integration: the PJRT artifact runtime against the native substrate, and
+//! the serving path end to end (L3 ⇄ L1 composition).
+
+use fastpi::dense::{gemm, Matrix};
+use fastpi::runtime::{global_executor, ExecMode, GemmDispatcher};
+use fastpi::util::rng::Rng;
+
+fn artifacts_built() -> bool {
+    global_executor().is_some()
+}
+
+/// Every matmul bucket must agree with the native GEMM within f32
+/// round-off, including padded (non-bucket) operand shapes.
+#[test]
+fn artifact_gemm_matches_native_across_shapes() {
+    if !artifacts_built() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let d = GemmDispatcher::new(ExecMode::ArtifactOnly);
+    let mut rng = Rng::seed_from_u64(5);
+    for (m, k, n) in [(128, 128, 128), (100, 50, 120), (256, 256, 256), (300, 200, 250), (1000, 250, 200)] {
+        let a = Matrix::randn(m, k, &mut rng);
+        let b = Matrix::randn(k, n, &mut rng);
+        let c_art = d.matmul(&a, &b);
+        let c_nat = gemm::matmul(&a, &b);
+        let scale = c_nat.max_abs().max(1.0);
+        assert!(
+            c_art.max_abs_diff(&c_nat) / scale < 1e-4,
+            "{m}x{k}x{n}: diff {}",
+            c_art.max_abs_diff(&c_nat)
+        );
+    }
+}
+
+/// The powiter artifact (fused A·(Aᵀ·B) subspace iteration) matches the
+/// composed native computation.
+#[test]
+fn powiter_artifact_matches_native() {
+    let Some(exec) = global_executor() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    if exec.manifest().find("powiter_512x256x64").is_none() {
+        eprintln!("skipping: powiter bucket not in manifest");
+        return;
+    }
+    let (m, n, r) = (512usize, 256usize, 64usize);
+    let mut rng = Rng::seed_from_u64(6);
+    let a = Matrix::randn(m, n, &mut rng);
+    let b = Matrix::randn(m, r, &mut rng);
+    let a32: Vec<f32> = a.data().iter().map(|&x| x as f32).collect();
+    let b32: Vec<f32> = b.data().iter().map(|&x| x as f32).collect();
+    let out = exec
+        .execute_f32("powiter_512x256x64", vec![(a32, vec![m, n]), (b32, vec![m, r])])
+        .expect("powiter");
+    let want = gemm::matmul(&a, &gemm::matmul_tn(&a, &b));
+    let mut worst = 0.0f64;
+    for i in 0..m {
+        for j in 0..r {
+            worst = worst.max((out[i * r + j] as f64 - want[(i, j)]).abs());
+        }
+    }
+    let scale = want.max_abs().max(1.0);
+    assert!(worst / scale < 1e-3, "powiter diff {worst}");
+}
+
+/// Auto mode serves large products from artifacts and small ones natively.
+#[test]
+fn auto_mode_routes_sensibly() {
+    if !artifacts_built() {
+        return;
+    }
+    let d = GemmDispatcher::new(ExecMode::Auto);
+    let mut rng = Rng::seed_from_u64(7);
+    // exact bucket hit -> artifact
+    let a = Matrix::randn(128, 128, &mut rng);
+    let b = Matrix::randn(128, 128, &mut rng);
+    let _ = d.matmul(&a, &b);
+    // far off any bucket -> native
+    let a2 = Matrix::randn(3, 3, &mut rng);
+    let b2 = Matrix::randn(3, 3, &mut rng);
+    let _ = d.matmul(&a2, &b2);
+    use std::sync::atomic::Ordering;
+    assert!(d.stats.artifact_calls.load(Ordering::Relaxed) >= 1);
+    assert!(d.stats.native_calls.load(Ordering::Relaxed) >= 1);
+}
+
+/// Score artifact end-to-end: the serving scorer bucket computes X·Z.
+#[test]
+fn score_artifact_matches_model() {
+    let Some(exec) = global_executor() else {
+        return;
+    };
+    if exec.manifest().find("score_64x512x256").is_none() {
+        return;
+    }
+    let (b, n, l) = (64usize, 512usize, 256usize);
+    let mut rng = Rng::seed_from_u64(8);
+    let x = Matrix::randn(b, n, &mut rng);
+    let z = Matrix::randn(n, l, &mut rng);
+    let x32: Vec<f32> = x.data().iter().map(|&v| v as f32).collect();
+    let z32: Vec<f32> = z.data().iter().map(|&v| v as f32).collect();
+    let out = exec
+        .execute_f32("score_64x512x256", vec![(x32, vec![b, n]), (z32, vec![n, l])])
+        .expect("score");
+    let want = gemm::matmul(&x, &z);
+    let mut worst = 0.0f64;
+    for i in 0..b {
+        for j in 0..l {
+            worst = worst.max((out[i * l + j] as f64 - want[(i, j)]).abs());
+        }
+    }
+    assert!(worst / want.max_abs().max(1.0) < 1e-3, "score diff {worst}");
+}

@@ -1,0 +1,77 @@
+//! Integration: train on a dataset, serve over TCP, validate responses
+//! against offline predictions — the full request path.
+
+use fastpi::coordinator::{score_request, PinvJob, PipelineCoordinator, ScoreServer, ServerConfig};
+use fastpi::data::load_dataset;
+use fastpi::pinv::Method;
+use fastpi::regress::metrics::top_k_indices;
+use fastpi::regress::MultiLabelModel;
+use std::time::Duration;
+
+#[test]
+fn served_scores_match_offline_predictions() {
+    let ds = load_dataset("bibtex", 0.04, 23, None).unwrap();
+    let coord = PipelineCoordinator::new();
+    let job = PinvJob { method: Method::FastPi, alpha: 0.5, k: ds.k, seed: 1 };
+    let report = coord.run(&ds.a, &job).unwrap();
+    let (model, _) = MultiLabelModel::train(&report.pinv, &ds.y);
+    let offline = model.predict(&ds.a);
+
+    let server = ScoreServer::start(
+        model,
+        ServerConfig { max_batch: 16, max_wait: Duration::from_millis(1), queue_capacity: 256 },
+    )
+    .unwrap();
+    let addr = server.addr;
+
+    for row in [0usize, 7, 42].iter().copied().filter(|&r| r < ds.a.rows()) {
+        let (js, vs) = ds.a.row(row);
+        let feats: Vec<(usize, f64)> = js.iter().zip(vs).map(|(&j, &v)| (j, v)).collect();
+        let got = score_request(addr, &feats, 3).unwrap();
+        let want = top_k_indices(offline.row(row), 3);
+        let got_labels: Vec<usize> = got.iter().map(|(l, _)| *l).collect();
+        assert_eq!(got_labels, want, "row {row}");
+        for (label, score) in &got {
+            assert!((score - offline[(row, *label)]).abs() < 1e-5);
+        }
+    }
+    server.shutdown();
+}
+
+#[test]
+fn server_survives_malformed_and_concurrent_load() {
+    let ds = load_dataset("bibtex", 0.03, 31, None).unwrap();
+    let coord = PipelineCoordinator::new();
+    let job = PinvJob { method: Method::FastPi, alpha: 0.3, k: ds.k, seed: 2 };
+    let report = coord.run(&ds.a, &job).unwrap();
+    let (model, _) = MultiLabelModel::train(&report.pinv, &ds.y);
+    let server = ScoreServer::start(model, ServerConfig::default()).unwrap();
+    let addr = server.addr;
+
+    std::thread::scope(|s| {
+        // good clients
+        for t in 0..8 {
+            s.spawn(move || {
+                for i in 0..10 {
+                    let feats = vec![((t * 13 + i) % 50, 1.0f64)];
+                    let r = score_request(addr, &feats, 2).unwrap();
+                    assert_eq!(r.len(), 2);
+                }
+            });
+        }
+        // rude client: garbage then a good request on a fresh connection
+        s.spawn(move || {
+            use std::io::{BufRead, BufReader, Write};
+            let mut stream = std::net::TcpStream::connect(addr).unwrap();
+            writeln!(stream, "SCORE notanumber x").unwrap();
+            let mut line = String::new();
+            BufReader::new(stream.try_clone().unwrap()).read_line(&mut line).unwrap();
+            assert!(line.starts_with("ERR"));
+            let r = score_request(addr, &[(1, 1.0)], 1).unwrap();
+            assert_eq!(r.len(), 1);
+        });
+    });
+    let served = server.stats.served.load(std::sync::atomic::Ordering::Relaxed);
+    assert_eq!(served, 8 * 10 + 1);
+    server.shutdown();
+}
