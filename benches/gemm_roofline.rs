@@ -1,10 +1,13 @@
-//! Bench: GEMM roofline — the L3 hot path (native blocked GEMM) and the
-//! AOT Pallas artifact path, in GFLOP/s across sizes. Feeds EXPERIMENTS.md
-//! §Perf.
+//! Bench: GEMM roofline — the L3 hot path (native blocked GEMM) at one
+//! worker vs the full pool, the panel-reduced Gram kernel, and the AOT
+//! Pallas artifact path, in GFLOP/s across sizes. Feeds EXPERIMENTS.md
+//! §Perf and the worker-pool speedup gate (≥ 2× at 4 threads on the
+//! default shapes).
 //! Run: cargo bench --bench gemm_roofline
+//! (FASTPI_THREADS=4 pins the pool width for the scaling comparison.)
 
 use fastpi::dense::{gemm, Matrix};
-use fastpi::runtime::{ExecMode, GemmDispatcher};
+use fastpi::runtime::{pool, with_thread_cap, ExecMode, GemmDispatcher};
 use fastpi::util::bench::{run, BenchConfig, Reporter};
 use fastpi::util::rng::Rng;
 
@@ -12,15 +15,56 @@ fn main() {
     let cfg = BenchConfig::from_env();
     let mut rep = Reporter::new("gemm_roofline");
     let mut rng = Rng::seed_from_u64(7);
+    let threads = pool::runtime().threads();
     let sizes = [64usize, 128, 256, 512, 1024];
     for &s in &sizes {
         let a = Matrix::randn(s, s, &mut rng);
         let b = Matrix::randn(s, s, &mut rng);
-        let stats = run(&cfg, || gemm::matmul(&a, &b));
-        let gflops = gemm::gemm_flops(s, s, s) / stats.min_s / 1e9;
+        // single-thread baseline vs the full pool, same kernel
+        let serial = run(&cfg, || with_thread_cap(1, || gemm::matmul(&a, &b)));
+        let parallel = run(&cfg, || gemm::matmul(&a, &b));
+        let labels = [("threads=1".to_string(), &serial), (format!("threads={threads}"), &parallel)];
+        for (label, stats) in labels {
+            let gflops = gemm::gemm_flops(s, s, s) / stats.min_s / 1e9;
+            rep.add(
+                &[
+                    ("backend", "native".into()),
+                    ("config", label.clone()),
+                    ("size", s.to_string()),
+                ],
+                &[("secs", stats.min_s), ("gflops", gflops)],
+            );
+        }
         rep.add(
-            &[("backend", "native".into()), ("size", s.to_string())],
-            &[("secs", stats.min_s), ("gflops", gflops)],
+            &[("backend", "native".into()), ("config", "speedup".into()), ("size", s.to_string())],
+            &[("x", serial.min_s / parallel.min_s)],
+        );
+    }
+    // tall-skinny Gram products (the incremental-update shape): panel
+    // reduction vs the serial-shaped transpose GEMM
+    for &(m, w) in &[(20_000usize, 32usize), (50_000, 64)] {
+        let a = Matrix::randn(m, w, &mut rng);
+        let serial = run(&cfg, || with_thread_cap(1, || gemm::gram_tn(&a)));
+        let parallel = run(&cfg, || gemm::gram_tn(&a));
+        let flops = gemm::gemm_flops(w, w, m);
+        let labels = [("threads=1".to_string(), &serial), (format!("threads={threads}"), &parallel)];
+        for (label, stats) in labels {
+            rep.add(
+                &[
+                    ("backend", "gram_tn".into()),
+                    ("config", label.clone()),
+                    ("size", format!("{m}x{w}")),
+                ],
+                &[("secs", stats.min_s), ("gflops", flops / stats.min_s / 1e9)],
+            );
+        }
+        rep.add(
+            &[
+                ("backend", "gram_tn".into()),
+                ("config", "speedup".into()),
+                ("size", format!("{m}x{w}")),
+            ],
+            &[("x", serial.min_s / parallel.min_s)],
         );
     }
     // artifact path (if built): exact bucket sizes, no padding waste

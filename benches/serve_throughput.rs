@@ -1,6 +1,8 @@
 //! Bench: scoring-server throughput and latency vs client concurrency —
-//! the request-path performance of the L3 coordinator (batching ablation:
-//! max_batch 1 vs 64).
+//! the request-path performance of the L3 coordinator. Two ablations:
+//! dynamic batching (max_batch 1 vs 64) and worker-pool width for the
+//! batch-scoring GEMM (threads 1 vs 4 at max_batch 64 — the ≥ 2× pool
+//! speedup gate on the serve path).
 //! Run: cargo bench --bench serve_throughput
 
 use fastpi::coordinator::{score_request, PinvJob, PipelineCoordinator, ScoreServer, ServerConfig};
@@ -22,7 +24,16 @@ fn main() {
     let (model, _) = MultiLabelModel::train(&report.pinv, &ds.y);
 
     let mut rep = Reporter::new("serve_throughput");
-    for (label, max_batch) in [("batch=1", 1usize), ("batch=64", 64)] {
+    // (label, max_batch, scoring threads; 0 = full pool)
+    let configs = [
+        ("batch=1", 1usize, 0usize),
+        ("batch=64/threads=1", 64, 1),
+        ("batch=64/threads=4", 64, 4),
+        ("batch=64", 64, 0),
+    ];
+    let mut rps_t1 = 0.0f64;
+    let mut rps_t4 = 0.0f64;
+    for (label, max_batch, threads) in configs {
         for clients in [1usize, 8, 32] {
             let server = ScoreServer::start(
                 model.clone(),
@@ -30,6 +41,7 @@ fn main() {
                     max_batch,
                     max_wait: Duration::from_micros(500),
                     queue_capacity: 1 << 14,
+                    threads,
                 },
             )
             .expect("server");
@@ -58,10 +70,18 @@ fn main() {
             let wall = t0.elapsed().as_secs_f64();
             let mut sorted = lats.clone();
             sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let rps = lats.len() as f64 / wall;
+            if clients == 32 {
+                match threads {
+                    1 => rps_t1 = rps,
+                    4 => rps_t4 = rps,
+                    _ => {}
+                }
+            }
             rep.add(
                 &[("policy", label.into()), ("clients", clients.to_string())],
                 &[
-                    ("throughput_rps", lats.len() as f64 / wall),
+                    ("throughput_rps", rps),
                     ("p50_ms", sorted[sorted.len() / 2] * 1e3),
                     ("p95_ms", sorted[(sorted.len() as f64 * 0.95) as usize] * 1e3),
                     ("avg_batch", server.stats.avg_batch()),
@@ -69,6 +89,12 @@ fn main() {
             );
             server.shutdown();
         }
+    }
+    if rps_t1 > 0.0 {
+        println!(
+            "pool speedup (batch=64, 32 clients): threads=4 vs threads=1 = {:.2}x",
+            rps_t4 / rps_t1
+        );
     }
     rep.finish();
 }

@@ -18,7 +18,7 @@ use fastpi::util::args::Args;
 use fastpi::util::rng::Rng;
 use std::time::Instant;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     let args = Args::from_env();
     let scale: f64 = args.parse_or("scale", 0.25);
     let alpha: f64 = args.parse_or("alpha", 0.5);
@@ -55,7 +55,12 @@ fn main() -> anyhow::Result<()> {
     // --- 4. serve it: batched scoring server + client load
     let server = ScoreServer::start(
         model,
-        ServerConfig { max_batch: 32, max_wait: std::time::Duration::from_millis(1), queue_capacity: 4096 },
+        ServerConfig {
+            max_batch: 32,
+            max_wait: std::time::Duration::from_millis(1),
+            queue_capacity: 4096,
+            ..Default::default()
+        },
     )?;
     let addr = server.addr;
     println!("scoring server up on {addr}");

@@ -8,7 +8,7 @@ use fastpi::pinv::{fastpi_svd, FastPiConfig};
 use fastpi::sparse::{Coo, Csr};
 use fastpi::util::rng::Rng;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     // 1. Build a sparse, skewed feature matrix (2000 × 400, ~12k nnz).
     let mut rng = Rng::seed_from_u64(7);
     let (m, n) = (2000usize, 400usize);

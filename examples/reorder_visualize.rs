@@ -7,7 +7,7 @@
 use fastpi::harness::figures;
 use fastpi::util::args::Args;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     let args = Args::from_env();
     let dataset = args.str_or("dataset", "amazon");
     let scale: f64 = args.parse_or("scale", 0.1);

@@ -13,7 +13,7 @@ use fastpi::util::args::Args;
 use std::sync::atomic::Ordering;
 use std::time::{Duration, Instant};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     let args = Args::from_env();
     let scale: f64 = args.parse_or("scale", 0.1);
     let n_requests: usize = args.parse_or("requests", 2000);
@@ -33,6 +33,7 @@ fn main() -> anyhow::Result<()> {
                 max_batch: 64,
                 max_wait: Duration::from_micros(500),
                 queue_capacity: 8192,
+                ..Default::default()
             },
         )?;
         let addr = server.addr;

@@ -9,7 +9,7 @@ use fastpi::dense::qr::orthogonality_defect;
 use fastpi::pinv::{low_rank_svd, Method};
 use fastpi::util::args::Args;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     let args = Args::from_env();
     let dataset = args.str_or("dataset", "rcv");
     let alpha: f64 = args.parse_or("alpha", 0.3);

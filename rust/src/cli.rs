@@ -42,7 +42,9 @@ pub fn main() {
     let args = Args::from_env();
     if let Some(t) = args.get("threads") {
         if let Ok(n) = t.parse::<usize>() {
-            crate::util::parallel::set_num_threads(n);
+            // fix the shared worker pool's width before the first parallel
+            // region spins it up (first configuration wins)
+            crate::runtime::pool::configure_threads(n);
         }
     }
     let cmd = args.positional().first().map(|s| s.as_str()).unwrap_or("help");
@@ -272,8 +274,11 @@ fn cmd_serve(args: &Args) -> crate::error::Result<()> {
     println!("computing pseudoinverse for {name} (scale {scale})...");
     let report = PipelineCoordinator::new().run(&ds.a, &job)?;
     let (model, _) = MultiLabelModel::train(&report.pinv, &ds.y);
-    let server = ScoreServer::start(model, ServerConfig::default())
-        .map_err(crate::error::Error::Io)?;
+    let server_cfg = ServerConfig {
+        threads: args.parse_or("threads", 0usize),
+        ..Default::default()
+    };
+    let server = ScoreServer::start(model, server_cfg).map_err(crate::error::Error::Io)?;
     println!("scoring server on {} — protocol: SCORE <topk> j:v,...  (Ctrl-C to stop)", server.addr);
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));

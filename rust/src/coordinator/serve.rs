@@ -23,8 +23,8 @@ use crate::sparse::{Coo, Csr};
 use std::collections::VecDeque;
 use std::io::{BufRead, BufReader, BufWriter, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
 use std::time::Duration;
 
 /// Server tuning knobs.
@@ -33,6 +33,12 @@ pub struct ServerConfig {
     pub max_batch: usize,
     pub max_wait: Duration,
     pub queue_capacity: usize,
+    /// Worker-pool width for the batch-scoring GEMM. 0 = use the full
+    /// process-wide pool. Non-zero both requests that global width (first
+    /// configuration in the process wins, see `runtime/README.md`) and caps
+    /// the batcher's scoring pass to that many participants — so a server
+    /// can be pinned narrower than the shared pool it runs on.
+    pub threads: usize,
 }
 
 impl Default for ServerConfig {
@@ -41,6 +47,7 @@ impl Default for ServerConfig {
             max_batch: 64,
             max_wait: Duration::from_millis(2),
             queue_capacity: 1024,
+            threads: 0,
         }
     }
 }
@@ -51,31 +58,77 @@ pub struct ServerStats {
     pub served: AtomicUsize,
     pub batches: AtomicUsize,
     pub rejected: AtomicUsize,
+    /// Coherent (served, batches) snapshot, packed 32/32 into one word and
+    /// stored by the batcher after both counters are bumped. `avg_batch`
+    /// reads this single atomic, so it never mixes a post-batch `served`
+    /// with a pre-batch `batches` (the two independent Relaxed loads it
+    /// used to do could). The halves wrap at 2³², so the average is
+    /// approximate beyond ~4.3 billion requests — acceptable for a
+    /// monitoring counter.
+    packed: AtomicU64,
 }
 
 impl ServerStats {
+    /// Record one scored batch; called only from the batcher thread.
+    fn record_batch(&self, batch_len: usize) {
+        let served = self.served.fetch_add(batch_len, Ordering::Relaxed) + batch_len;
+        let batches = self.batches.fetch_add(1, Ordering::Relaxed) + 1;
+        let packed = ((batches as u64 & 0xFFFF_FFFF) << 32) | (served as u64 & 0xFFFF_FFFF);
+        self.packed.store(packed, Ordering::Relaxed);
+    }
+
+    /// Mean requests per batch, computed from one coherent snapshot.
     pub fn avg_batch(&self) -> f64 {
-        let b = self.batches.load(Ordering::Relaxed);
-        if b == 0 {
+        let packed = self.packed.load(Ordering::Relaxed);
+        let batches = packed >> 32;
+        let served = packed & 0xFFFF_FFFF;
+        if batches == 0 {
             0.0
         } else {
-            self.served.load(Ordering::Relaxed) as f64 / b as f64
+            served as f64 / batches as f64
         }
     }
 }
+
+/// What the batcher sends back per request: `None` means the scoring pass
+/// itself failed (a panic was contained) and the client gets an error line.
+type BatchReply = Option<Vec<(usize, f64)>>;
 
 /// One queued request.
 struct Pending {
     indices: Vec<usize>,
     values: Vec<f64>,
     topk: usize,
-    reply: std::sync::mpsc::Sender<Vec<(usize, f64)>>,
+    reply: std::sync::mpsc::Sender<BatchReply>,
 }
 
 struct Queue {
     deque: Mutex<VecDeque<Pending>>,
     cv: Condvar,
     capacity: usize,
+}
+
+impl Queue {
+    /// Lock the queue, recovering from poisoning: a panicking thread that
+    /// held the lock leaves the deque structurally intact (push/pop are not
+    /// interruptible mid-write in safe code), and dropping the whole queue
+    /// because one worker died is exactly the cascade this server must not
+    /// have — degraded service (`ERR overloaded`) beats no service.
+    fn lock(&self) -> MutexGuard<'_, VecDeque<Pending>> {
+        self.deque.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// `Condvar::wait_timeout` with the same poison recovery.
+    fn wait_timeout<'a>(
+        &self,
+        guard: MutexGuard<'a, VecDeque<Pending>>,
+        dur: Duration,
+    ) -> MutexGuard<'a, VecDeque<Pending>> {
+        match self.cv.wait_timeout(guard, dur) {
+            Ok((g, _timeout)) => g,
+            Err(poisoned) => poisoned.into_inner().0,
+        }
+    }
 }
 
 /// A running scoring server; dropping does NOT stop it — call `shutdown`.
@@ -90,6 +143,11 @@ pub struct ScoreServer {
 impl ScoreServer {
     /// Start serving `model` on 127.0.0.1 (ephemeral port).
     pub fn start(model: MultiLabelModel, cfg: ServerConfig) -> std::io::Result<ScoreServer> {
+        if cfg.threads > 0 {
+            // request the pool width before the first scoring GEMM spins
+            // the runtime up; a no-op if the runtime is already running
+            crate::runtime::pool::configure_threads(cfg.threads);
+        }
         let listener = TcpListener::bind("127.0.0.1:0")?;
         let addr = listener.local_addr()?;
         listener.set_nonblocking(true)?;
@@ -173,12 +231,10 @@ fn batcher_loop(
         // collect a batch
         let mut batch: Vec<Pending> = Vec::new();
         {
-            let mut dq = queue.deque.lock().unwrap();
+            let mut dq = queue.lock();
             // wait for the first request
             while dq.is_empty() && !stop.load(Ordering::Relaxed) {
-                let (guard, _timeout) =
-                    queue.cv.wait_timeout(dq, Duration::from_millis(20)).unwrap();
-                dq = guard;
+                dq = queue.wait_timeout(dq, Duration::from_millis(20));
             }
             if stop.load(Ordering::Relaxed) {
                 return;
@@ -194,7 +250,7 @@ fn batcher_loop(
         // brief straggler wait if underfull
         if batch.len() < cfg.max_batch && !cfg.max_wait.is_zero() {
             std::thread::sleep(cfg.max_wait);
-            let mut dq = queue.deque.lock().unwrap();
+            let mut dq = queue.lock();
             while batch.len() < cfg.max_batch {
                 match dq.pop_front() {
                     Some(p) => batch.push(p),
@@ -206,25 +262,46 @@ fn batcher_loop(
             continue;
         }
 
-        // batch the sparse feature rows and score in one GEMM
-        let mut coo = Coo::new(batch.len(), n_features);
-        for (i, p) in batch.iter().enumerate() {
-            for (&j, &v) in p.indices.iter().zip(&p.values) {
-                if j < n_features {
-                    coo.push(i, j, v);
+        // Batch the sparse feature rows and score in one sparse×dense GEMM
+        // (`spmm` splits the batch rows across the shared worker pool, so a
+        // large batch does not serialize on one core). A panic anywhere in
+        // the scoring pass is contained to this batch: affected clients get
+        // an error line and the batcher keeps serving.
+        let cap = if cfg.threads > 0 { cfg.threads } else { usize::MAX };
+        let replies = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            crate::runtime::pool::with_thread_cap(cap, || {
+                let mut coo = Coo::new(batch.len(), n_features);
+                for (i, p) in batch.iter().enumerate() {
+                    for (&j, &v) in p.indices.iter().zip(&p.values) {
+                        if j < n_features {
+                            coo.push(i, j, v);
+                        }
+                    }
+                }
+                let a = Csr::from_coo(&coo);
+                let scores = model.predict(&a);
+                batch
+                    .iter()
+                    .enumerate()
+                    .map(|(i, p)| {
+                        let row = scores.row(i);
+                        top_k_indices(row, p.topk).into_iter().map(|l| (l, row[l])).collect()
+                    })
+                    .collect::<Vec<Vec<(usize, f64)>>>()
+            })
+        }));
+        match replies {
+            Ok(outs) => {
+                stats.record_batch(batch.len());
+                for (p, out) in batch.into_iter().zip(outs) {
+                    let _ = p.reply.send(Some(out));
                 }
             }
-        }
-        let a = Csr::from_coo(&coo);
-        let scores = model.predict(&a);
-
-        stats.batches.fetch_add(1, Ordering::Relaxed);
-        stats.served.fetch_add(batch.len(), Ordering::Relaxed);
-        for (i, p) in batch.into_iter().enumerate() {
-            let row = scores.row(i);
-            let top = top_k_indices(row, p.topk);
-            let out: Vec<(usize, f64)> = top.into_iter().map(|l| (l, row[l])).collect();
-            let _ = p.reply.send(out);
+            Err(_) => {
+                for p in batch {
+                    let _ = p.reply.send(None);
+                }
+            }
         }
     }
 }
@@ -283,7 +360,7 @@ fn handle_conn(
             Some((topk, indices, values)) => {
                 let (tx, rx) = std::sync::mpsc::channel();
                 let accepted = {
-                    let mut dq = queue.deque.lock().unwrap();
+                    let mut dq = queue.lock();
                     if dq.len() >= queue.capacity {
                         false
                     } else {
@@ -299,11 +376,12 @@ fn handle_conn(
                 }
                 queue.cv.notify_one();
                 match rx.recv_timeout(Duration::from_secs(30)) {
-                    Ok(result) => {
+                    Ok(Some(result)) => {
                         let body: Vec<String> =
                             result.iter().map(|(l, s)| format!("{l}:{s:.6}")).collect();
                         writeln!(writer, "OK {}", body.join(","))?;
                     }
+                    Ok(None) => writeln!(writer, "ERR internal")?,
                     Err(_) => writeln!(writer, "ERR timeout")?,
                 }
                 writer.flush()?;
@@ -330,7 +408,12 @@ fn parse_score(msg: &str) -> Option<(usize, Vec<usize>, Vec<f64>)> {
         for tok in feats.split(',').filter(|t| !t.is_empty()) {
             let (j, v) = tok.split_once(':')?;
             indices.push(j.parse().ok()?);
-            values.push(v.parse().ok()?);
+            let v: f64 = v.parse().ok()?;
+            // NaN/inf would poison the whole batch's score ordering
+            if !v.is_finite() {
+                return None;
+            }
+            values.push(v);
         }
     }
     Some((topk, indices, values))
@@ -387,6 +470,9 @@ mod tests {
         assert!(parse_score("SCORE 0 1:1").is_none());
         assert!(parse_score("NOPE").is_none());
         assert!(parse_score("SCORE x 1:1").is_none());
+        // non-finite values are rejected before they can poison a batch
+        assert!(parse_score("SCORE 1 0:NaN").is_none());
+        assert!(parse_score("SCORE 1 0:inf").is_none());
         // empty feature list is legal
         let (k, idx, _) = parse_score("SCORE 2 ").unwrap();
         assert_eq!(k, 2);
@@ -420,7 +506,12 @@ mod tests {
     #[test]
     fn concurrent_clients_batch() {
         let m = model(30, 12);
-        let cfg = ServerConfig { max_batch: 8, max_wait: Duration::from_millis(5), queue_capacity: 64 };
+        let cfg = ServerConfig {
+            max_batch: 8,
+            max_wait: Duration::from_millis(5),
+            queue_capacity: 64,
+            ..Default::default()
+        };
         let server = ScoreServer::start(m, cfg).unwrap();
         let addr = server.addr;
 
@@ -438,6 +529,18 @@ mod tests {
         assert_eq!(served, 16);
         assert!(batches <= 16);
         server.shutdown();
+    }
+
+    #[test]
+    fn avg_batch_snapshot_is_coherent() {
+        let stats = ServerStats::default();
+        assert_eq!(stats.avg_batch(), 0.0);
+        stats.record_batch(10);
+        stats.record_batch(6);
+        assert!((stats.avg_batch() - 8.0).abs() < 1e-12);
+        // raw counters agree with the packed snapshot once quiescent
+        assert_eq!(stats.served.load(Ordering::Relaxed), 16);
+        assert_eq!(stats.batches.load(Ordering::Relaxed), 2);
     }
 
     #[test]

@@ -7,7 +7,7 @@
 //! cache-friendly and parallel. Falls back to Householder when AᵀA is not
 //! numerically SPD (rank deficiency / extreme conditioning).
 
-use super::gemm::{matmul, matmul_tn};
+use super::gemm::gram_tn;
 use super::matrix::Matrix;
 use super::qr::qr_thin;
 
@@ -70,13 +70,13 @@ pub fn cholqr_orthonormalize(a: &Matrix) -> Matrix {
     if n == 0 || m < n {
         return qr_thin_q(a);
     }
-    let gram = matmul_tn(a, a);
+    let gram = gram_tn(a); // parallel over the long m dimension
     let Some(l) = cholesky(&gram) else {
         return qr_thin_q(a);
     };
     let q1 = trsm_right_lt(a, &l);
     // second pass (CholQR2)
-    let gram2 = matmul_tn(&q1, &q1);
+    let gram2 = gram_tn(&q1);
     let Some(l2) = cholesky(&gram2) else {
         return qr_thin_q(&q1);
     };
@@ -96,13 +96,14 @@ fn qr_thin_q(a: &Matrix) -> Matrix {
 /// Verify reconstruction for tests: ‖Q·(QᵀA) − A‖ small when colspace kept.
 #[cfg(test)]
 fn projection_error(a: &Matrix, q: &Matrix) -> f64 {
-    let qta = matmul_tn(q, a);
-    matmul(q, &qta).sub(a).fro_norm() / a.fro_norm().max(1e-300)
+    let qta = super::gemm::matmul_tn(q, a);
+    super::gemm::matmul(q, &qta).sub(a).fro_norm() / a.fro_norm().max(1e-300)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::dense::gemm::{matmul, matmul_tn};
     use crate::dense::qr::orthogonality_defect;
     use crate::util::propcheck::check;
     use crate::util::rng::Rng;
@@ -114,7 +115,7 @@ mod tests {
             let b = Matrix::randn(n + 3, n, rng);
             let a = matmul_tn(&b, &b); // SPD
             let l = cholesky(&a).expect("SPD");
-            let rec = super::matmul(&l, &l.transpose());
+            let rec = matmul(&l, &l.transpose());
             assert!(rec.max_abs_diff(&a) < 1e-9 * (1.0 + a.max_abs()));
         });
     }

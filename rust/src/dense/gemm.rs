@@ -8,7 +8,7 @@
 //! worker pool. See EXPERIMENTS.md §Perf for the measured roofline.
 
 use super::matrix::Matrix;
-use crate::util::parallel;
+use crate::runtime::pool;
 
 /// Cache blocking parameters (tuned in the perf pass; see EXPERIMENTS.md §Perf).
 const MC: usize = 64; // rows of A per macro-block (parallel grain)
@@ -56,17 +56,16 @@ pub fn gemm_into(alpha: f64, a: &Matrix, b: &Matrix, beta: f64, c: &mut Matrix) 
 
     let a_data = a.data();
     let b_data = b.data();
-    // Parallelize over row macro-blocks; each block owns disjoint C rows.
+    // Parallelize over MC-row panels on the shared worker pool; each panel
+    // owns disjoint C rows, and every row is reduced in fixed k-order, so
+    // the result is bitwise-identical at any thread count.
     let c_ptr = CPtr(c.data_mut().as_mut_ptr());
     let c_ptr = &c_ptr; // capture the Sync wrapper, not the raw field
-    let blocks = m.div_ceil(MC);
-    parallel::for_each_index(blocks, |bi| {
-        let i0 = bi * MC;
-        let i1 = (i0 + MC).min(m);
+    pool::runtime().pool().par_chunks(m, MC, |rows| {
         for k0 in (0..k).step_by(KC) {
             let k1 = (k0 + KC).min(k);
-            for i in i0..i1 {
-                // SAFETY: rows [i0, i1) are exclusively owned by this task.
+            for i in rows.clone() {
+                // SAFETY: this row panel is exclusively owned by this task.
                 let crow =
                     unsafe { std::slice::from_raw_parts_mut(c_ptr.0.add(i * n), n) };
                 let arow = &a_data[i * k..(i + 1) * k];
@@ -88,6 +87,57 @@ pub fn gemm_into(alpha: f64, a: &Matrix, b: &Matrix, beta: f64, c: &mut Matrix) 
 /// Raw pointer wrapper: workers write disjoint row ranges of C.
 struct CPtr(*mut f64);
 unsafe impl Sync for CPtr {}
+
+/// Gram product `C = AᵀA` (w×w symmetric) for a tall A (m×w, m ≫ w).
+///
+/// `matmul_tn(a, a)` parallelizes over the w rows of C, which collapses to
+/// a single serial task for the tall-skinny Gram shapes the SVD engines
+/// produce (w is small, m is huge). This kernel instead splits the m
+/// dimension into fixed 256-row panels, accumulates one upper-triangular
+/// partial per panel on the worker pool, and reduces the partials in panel
+/// order. The panel structure is independent of the worker count, so the
+/// result is bitwise-identical at any `--threads` setting.
+pub fn gram_tn(a: &Matrix) -> Matrix {
+    const PANEL: usize = 256;
+    let (m, w) = a.shape();
+    let mut c = Matrix::zeros(w, w);
+    if m == 0 || w == 0 {
+        return c;
+    }
+    let a_data = a.data();
+    let starts: Vec<usize> = (0..m).step_by(PANEL).collect();
+    let partial = |&i0: &usize| -> Vec<f64> {
+        let i1 = (i0 + PANEL).min(m);
+        let mut p = vec![0.0f64; w * w];
+        for i in i0..i1 {
+            let row = &a_data[i * w..(i + 1) * w];
+            for (pi, &aip) in row.iter().enumerate() {
+                if aip != 0.0 {
+                    let dst = &mut p[pi * w..(pi + 1) * w];
+                    // upper triangle only; mirrored after the reduction
+                    for q in pi..w {
+                        dst[q] += aip * row[q];
+                    }
+                }
+            }
+        }
+        p
+    };
+    let partials: Vec<Vec<f64>> = pool::runtime().pool().par_map(&starts, partial);
+    // reduce in panel order (deterministic), then mirror the upper triangle
+    let cd = c.data_mut();
+    for p in &partials {
+        for (ci, pi) in cd.iter_mut().zip(p) {
+            *ci += pi;
+        }
+    }
+    for pi in 0..w {
+        for q in pi + 1..w {
+            cd[q * w + pi] = cd[pi * w + q];
+        }
+    }
+    c
+}
 
 /// Flop count of a GEMM (for roofline reporting): 2·m·n·k.
 pub fn gemm_flops(m: usize, n: usize, k: usize) -> f64 {
@@ -161,6 +211,39 @@ mod tests {
         let c = matmul(&a, &b);
         let c0 = a.matmul_naive(&b);
         assert!(c.max_abs_diff(&c0) < 1e-9);
+    }
+
+    #[test]
+    fn gram_tn_matches_matmul_tn() {
+        check("gram_tn == AᵀA", 12, |rng: &mut Rng| {
+            let m = rng.usize_range(1, 700);
+            let w = rng.usize_range(1, 24);
+            let a = Matrix::randn(m, w, rng);
+            let g = gram_tn(&a);
+            let g0 = matmul_tn(&a, &a);
+            assert!(g.max_abs_diff(&g0) < 1e-9 * (1.0 + g0.max_abs()), "m={m} w={w}");
+            // exactly symmetric by construction
+            assert_eq!(g, g.transpose());
+        });
+    }
+
+    #[test]
+    fn gram_tn_bitwise_invariant_across_thread_caps() {
+        let mut rng = Rng::seed_from_u64(12);
+        let a = Matrix::randn(1030, 17, &mut rng);
+        let serial = crate::runtime::pool::with_thread_cap(1, || gram_tn(&a));
+        let parallel = gram_tn(&a);
+        assert_eq!(serial, parallel, "panel reduction must not depend on thread count");
+    }
+
+    #[test]
+    fn matmul_bitwise_invariant_across_thread_caps() {
+        let mut rng = Rng::seed_from_u64(13);
+        let a = Matrix::randn(300, 120, &mut rng);
+        let b = Matrix::randn(120, 40, &mut rng);
+        let serial = crate::runtime::pool::with_thread_cap(1, || matmul(&a, &b));
+        let parallel = matmul(&a, &b);
+        assert_eq!(serial, parallel, "row-panel GEMM must not depend on thread count");
     }
 
     #[test]

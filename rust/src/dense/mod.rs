@@ -10,7 +10,7 @@ pub mod qr;
 pub mod svd;
 
 pub use cholesky::{cholesky, cholqr_orthonormalize};
-pub use gemm::{gemm_into, matmul, matmul_nt, matmul_tn};
+pub use gemm::{gemm_into, gram_tn, matmul, matmul_nt, matmul_tn};
 pub use gramsvd::{fast_svd_truncated, jacobi_eigh, svd_gram_truncated};
 pub use lu::{lu_factor, Lu};
 pub use matrix::Matrix;

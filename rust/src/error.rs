@@ -1,29 +1,55 @@
 //! Library error type.
+//!
+//! Hand-rolled `Display`/`Error` impls — the offline build environment has
+//! no `thiserror` (DESIGN.md §5).
 
 /// Errors surfaced by the fastpi library.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum Error {
-    #[error("dimension mismatch: {0}")]
     Dim(String),
-    #[error("numerical failure: {0}")]
     Numerical(String),
-    #[error("invalid argument: {0}")]
     Invalid(String),
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
-    #[error("artifact error: {0}")]
+    Io(std::io::Error),
     Artifact(String),
-    #[error("xla runtime error: {0}")]
     Xla(String),
 }
 
-pub type Result<T> = std::result::Result<T, Error>;
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Error::Dim(s) => write!(f, "dimension mismatch: {s}"),
+            Error::Numerical(s) => write!(f, "numerical failure: {s}"),
+            Error::Invalid(s) => write!(f, "invalid argument: {s}"),
+            Error::Io(e) => write!(f, "io error: {e}"),
+            Error::Artifact(s) => write!(f, "artifact error: {s}"),
+            Error::Xla(s) => write!(f, "xla runtime error: {s}"),
+        }
+    }
+}
 
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
+}
+
+#[cfg(feature = "xla")]
 impl From<xla::Error> for Error {
     fn from(e: xla::Error) -> Self {
         Error::Xla(format!("{e:?}"))
     }
 }
+
+pub type Result<T> = std::result::Result<T, Error>;
 
 /// Construct a dimension-mismatch error with file/line context.
 #[macro_export]

@@ -68,6 +68,13 @@ pub fn fastpi_svd(a: &Csr, cfg: &FastPiConfig, rng: &mut Rng) -> Result<FastPiOu
     let (m1, n1) = (reordering.m1, reordering.n1);
     let (m2, n2) = (reordering.m2, reordering.n2);
 
+    // Degenerate: a matrix with no rows or no columns has the unique empty
+    // SVD (and the rank-target clamp below would be ill-formed, min > max).
+    if m == 0 || n == 0 {
+        let svd = Svd { u: Matrix::zeros(m, 0), s: vec![], vt: Matrix::zeros(0, n) };
+        return Ok(FastPiOutput { svd, reordering, times });
+    }
+
     // --- line 2: SVD of the block-diagonal A11 (Eq. 1)
     let mut f = times.time("block_svd(A11)", || {
         block_diag_svd(&b, &reordering.blocks, m1, n1, cfg.alpha)
@@ -88,10 +95,20 @@ pub fn fastpi_svd(a: &Csr, cfg: &FastPiConfig, rng: &mut Rng) -> Result<FastPiOu
     if n2 > 0 {
         let t = b.block(0, n1, m, n2);
         if n1 == 0 || f.rank() == 0 {
-            // degenerate: nothing shattered (A11 empty) — the "incremental"
-            // SVD is just the SVD of T itself
+            // degenerate: nothing shattered (A11 empty, or every spoke
+            // block was structurally zero) — the "incremental" SVD is just
+            // the SVD of T itself. That SVD only spans the n2 hub columns;
+            // when n1 > 0 the leading spoke columns are all-zero here (a
+            // rank-0 left part), so Vᵀ is re-embedded with zero columns in
+            // the 0..n1 range to restore the full n-column coordinate
+            // system that the unpermute step below requires.
             let t_dense = t.to_dense();
             f = times.time("update_cols(T)", || cfg.inner.run(&t_dense, r_target, rng));
+            if n1 > 0 {
+                let mut vt = Matrix::zeros(f.rank(), n);
+                vt.set_submatrix(0, n1, &f.vt);
+                f = Svd { u: f.u, s: f.s, vt };
+            }
         } else {
             f = times.time("update_cols(T)", || update_cols(&f, &t, r_target, cfg.inner, rng));
         }
@@ -276,6 +293,72 @@ mod tests {
         let a = skewed(&mut rng, 40, 20, 200);
         let f = FastPiEngine::default().factorize(&a, 10, &mut rng).unwrap();
         assert_eq!(f.rank(), 10);
+    }
+
+    #[test]
+    fn bitwise_identical_across_thread_counts() {
+        // The worker pool distributes dynamically but every output element
+        // has one owner and a fixed reduction order, so the full pipeline —
+        // reorder → parallel block SVDs → incremental updates (pool GEMMs +
+        // panel-reduced Gram products) — must produce bitwise-identical
+        // factors at 1 and 4 threads. The rng is owned by the caller and
+        // never shared across workers, so it advances identically too.
+        let a = {
+            let mut rng = Rng::seed_from_u64(77);
+            skewed(&mut rng, 120, 60, 700)
+        };
+        let cfg = FastPiConfig { alpha: 0.4, k: 0.05, ..Default::default() };
+        let serial = crate::runtime::pool::with_thread_cap(1, || {
+            fastpi_svd(&a, &cfg, &mut Rng::seed_from_u64(5)).unwrap()
+        });
+        let parallel = crate::runtime::pool::with_thread_cap(4, || {
+            fastpi_svd(&a, &cfg, &mut Rng::seed_from_u64(5)).unwrap()
+        });
+        assert_eq!(serial.svd.s, parallel.svd.s, "singular values drifted");
+        assert_eq!(serial.svd.u, parallel.svd.u, "U drifted");
+        assert_eq!(serial.svd.vt, parallel.svd.vt, "Vᵀ drifted");
+    }
+
+    #[test]
+    fn zero_a11_blocks_still_produce_full_coordinates() {
+        // Degree-zero rows and columns become structurally-zero spoke
+        // blocks after reordering (n1 > 0 with every A11 block skipped).
+        // The pipeline must still return factors in the full m×n coordinate
+        // system and reconstruct the matrix exactly at α = 1.
+        let mut coo = Coo::new(6, 5);
+        // dense hub: rows 0..4 × cols 0..3 fully populated
+        for i in 0..4 {
+            for j in 0..3 {
+                coo.push(i, j, 1.0 + (i * 3 + j) as f64);
+            }
+        }
+        // isolated instance rows 4,5 and isolated feature cols 3,4 carry no
+        // entries at all — they become zero spoke blocks after reordering
+        let a = Csr::from_coo(&coo);
+        let mut rng = Rng::seed_from_u64(13);
+        let cfg = FastPiConfig { alpha: 1.0, k: 0.3, inner: InnerSvd::Dense, ..Default::default() };
+        let out = fastpi_svd(&a, &cfg, &mut rng).unwrap();
+        assert_eq!(out.svd.u.rows(), 6);
+        assert_eq!(out.svd.vt.cols(), 5);
+        let dense = a.to_dense();
+        assert!(
+            out.svd.reconstruction_error(&dense) < 1e-9 * dense.fro_norm().max(1.0),
+            "err {}",
+            out.svd.reconstruction_error(&dense)
+        );
+    }
+
+    #[test]
+    fn empty_matrix_degenerates_cleanly() {
+        let a = Csr::zeros(0, 7);
+        let mut rng = Rng::seed_from_u64(1);
+        let out = fastpi_svd(&a, &FastPiConfig::default(), &mut rng).unwrap();
+        assert_eq!(out.svd.rank(), 0);
+        assert_eq!(out.svd.vt.cols(), 7);
+        let b = Csr::zeros(4, 0);
+        let out = fastpi_svd(&b, &FastPiConfig::default(), &mut rng).unwrap();
+        assert_eq!(out.svd.rank(), 0);
+        assert_eq!(out.svd.u.rows(), 4);
     }
 
     #[test]

@@ -6,40 +6,54 @@
 //! single-device executor loop of serving systems (one engine thread, many
 //! request threads) and keeps PJRT usage sound under the coordinator's
 //! thread pool.
+//!
+//! The `xla` crate is not vendored in the offline build environment, so the
+//! whole PJRT path is gated behind the `xla` cargo feature. Without it this
+//! module compiles a stub: [`global_executor`] returns `None` and every
+//! dispatcher falls back to the native GEMM (see `dispatch.rs`).
 
 use super::artifacts::Manifest;
 use crate::error::{Error, Result};
-use once_cell::sync::OnceCell;
-use std::collections::HashMap;
 use std::path::PathBuf;
-use std::sync::mpsc;
-use std::sync::Mutex;
+use std::sync::OnceLock;
 
 /// A GEMM-shaped execution request: artifact name + owned f32 operands.
+#[cfg_attr(not(feature = "xla"), allow(dead_code))]
 struct Job {
     name: String,
     operands: Vec<(Vec<f32>, Vec<usize>)>,
-    reply: mpsc::Sender<Result<Vec<f32>>>,
+    reply: std::sync::mpsc::Sender<Result<Vec<f32>>>,
 }
 
 /// Handle to the executor thread. Cloneable and thread-safe.
 pub struct XlaExecutor {
-    tx: Mutex<mpsc::Sender<Job>>,
+    #[cfg(feature = "xla")]
+    tx: std::sync::Mutex<std::sync::mpsc::Sender<Job>>,
     manifest: Manifest,
 }
 
 impl XlaExecutor {
     /// Spawn an executor for the artifact directory. Fails fast if the
     /// manifest is unreadable; PJRT initialization happens on the thread.
+    #[cfg(feature = "xla")]
     pub fn spawn(dir: PathBuf) -> Result<XlaExecutor> {
         let manifest = Manifest::load(&dir)?;
         let thread_manifest = manifest.clone();
-        let (tx, rx) = mpsc::channel::<Job>();
+        let (tx, rx) = std::sync::mpsc::channel::<Job>();
         std::thread::Builder::new()
             .name("xla-executor".into())
-            .spawn(move || executor_loop(thread_manifest, rx))
+            .spawn(move || imp::executor_loop(thread_manifest, rx))
             .map_err(Error::Io)?;
-        Ok(XlaExecutor { tx: Mutex::new(tx), manifest })
+        Ok(XlaExecutor { tx: std::sync::Mutex::new(tx), manifest })
+    }
+
+    /// Stub: the binary was built without the `xla` feature, so there is no
+    /// PJRT runtime to spawn. The manifest is still validated so callers get
+    /// a useful error order (missing dir vs missing runtime).
+    #[cfg(not(feature = "xla"))]
+    pub fn spawn(dir: PathBuf) -> Result<XlaExecutor> {
+        let _manifest = Manifest::load(&dir)?;
+        Err(Error::Xla("built without the `xla` feature — artifact execution unavailable".into()))
     }
 
     pub fn manifest(&self) -> &Manifest {
@@ -48,77 +62,97 @@ impl XlaExecutor {
 
     /// Execute an artifact with exact-shape f32 operands; blocks for the
     /// result. (Padding to bucket shapes is the dispatcher's job.)
+    #[cfg(feature = "xla")]
     pub fn execute_f32(
         &self,
         name: &str,
         operands: Vec<(Vec<f32>, Vec<usize>)>,
     ) -> Result<Vec<f32>> {
-        let (reply, rx) = mpsc::channel();
+        let (reply, rx) = std::sync::mpsc::channel();
         {
-            let tx = self.tx.lock().unwrap();
+            let tx = self.tx.lock().unwrap_or_else(|e| e.into_inner());
             tx.send(Job { name: name.to_string(), operands, reply })
                 .map_err(|_| Error::Xla("executor thread gone".into()))?;
         }
         rx.recv().map_err(|_| Error::Xla("executor dropped reply".into()))?
     }
+
+    /// Stub: unreachable in practice (spawn never succeeds without the
+    /// feature), kept so callers compile unchanged.
+    #[cfg(not(feature = "xla"))]
+    pub fn execute_f32(
+        &self,
+        _name: &str,
+        _operands: Vec<(Vec<f32>, Vec<usize>)>,
+    ) -> Result<Vec<f32>> {
+        Err(Error::Xla("built without the `xla` feature".into()))
+    }
 }
 
-/// The executor thread: owns the PJRT client and the executable cache.
-fn executor_loop(manifest: Manifest, rx: mpsc::Receiver<Job>) {
-    let client = match xla::PjRtClient::cpu() {
-        Ok(c) => c,
-        Err(e) => {
-            // fail every job with the init error
-            let msg = format!("PJRT CPU client init failed: {e:?}");
-            while let Ok(job) = rx.recv() {
-                let _ = job.reply.send(Err(Error::Xla(msg.clone())));
+#[cfg(feature = "xla")]
+mod imp {
+    use super::*;
+    use std::collections::HashMap;
+    use std::sync::mpsc;
+
+    /// The executor thread: owns the PJRT client and the executable cache.
+    pub(super) fn executor_loop(manifest: Manifest, rx: mpsc::Receiver<Job>) {
+        let client = match xla::PjRtClient::cpu() {
+            Ok(c) => c,
+            Err(e) => {
+                // fail every job with the init error
+                let msg = format!("PJRT CPU client init failed: {e:?}");
+                while let Ok(job) = rx.recv() {
+                    let _ = job.reply.send(Err(Error::Xla(msg.clone())));
+                }
+                return;
             }
-            return;
+        };
+        let mut cache: HashMap<String, xla::PjRtLoadedExecutable> = HashMap::new();
+
+        while let Ok(job) = rx.recv() {
+            let result = run_job(&client, &manifest, &mut cache, &job);
+            let _ = job.reply.send(result);
         }
-    };
-    let mut cache: HashMap<String, xla::PjRtLoadedExecutable> = HashMap::new();
+    }
 
-    while let Ok(job) = rx.recv() {
-        let result = run_job(&client, &manifest, &mut cache, &job);
-        let _ = job.reply.send(result);
+    fn run_job(
+        client: &xla::PjRtClient,
+        manifest: &Manifest,
+        cache: &mut HashMap<String, xla::PjRtLoadedExecutable>,
+        job: &Job,
+    ) -> Result<Vec<f32>> {
+        if !cache.contains_key(&job.name) {
+            let spec = manifest
+                .find(&job.name)
+                .ok_or_else(|| Error::Artifact(format!("artifact `{}` not in manifest", job.name)))?;
+            let path = spec
+                .path
+                .to_str()
+                .ok_or_else(|| Error::Artifact("non-utf8 artifact path".into()))?;
+            let proto = xla::HloModuleProto::from_text_file(path)?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client.compile(&comp)?;
+            cache.insert(job.name.clone(), exe);
+        }
+        let exe = cache.get(&job.name).unwrap();
+        let mut literals = Vec::with_capacity(job.operands.len());
+        for (data, shape) in &job.operands {
+            let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+            literals.push(xla::Literal::vec1(data).reshape(&dims)?);
+        }
+        let result = exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True → unwrap the 1-tuple
+        let out = result.to_tuple1()?;
+        Ok(out.to_vec::<f32>()?)
     }
 }
 
-fn run_job(
-    client: &xla::PjRtClient,
-    manifest: &Manifest,
-    cache: &mut HashMap<String, xla::PjRtLoadedExecutable>,
-    job: &Job,
-) -> Result<Vec<f32>> {
-    if !cache.contains_key(&job.name) {
-        let spec = manifest
-            .find(&job.name)
-            .ok_or_else(|| Error::Artifact(format!("artifact `{}` not in manifest", job.name)))?;
-        let path = spec
-            .path
-            .to_str()
-            .ok_or_else(|| Error::Artifact("non-utf8 artifact path".into()))?;
-        let proto = xla::HloModuleProto::from_text_file(path)?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = client.compile(&comp)?;
-        cache.insert(job.name.clone(), exe);
-    }
-    let exe = cache.get(&job.name).unwrap();
-    let mut literals = Vec::with_capacity(job.operands.len());
-    for (data, shape) in &job.operands {
-        let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
-        literals.push(xla::Literal::vec1(data).reshape(&dims)?);
-    }
-    let result = exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
-    // aot.py lowers with return_tuple=True → unwrap the 1-tuple
-    let out = result.to_tuple1()?;
-    Ok(out.to_vec::<f32>()?)
-}
-
-static GLOBAL: OnceCell<Option<XlaExecutor>> = OnceCell::new();
+static GLOBAL: OnceLock<Option<XlaExecutor>> = OnceLock::new();
 
 /// Process-wide executor over the conventional artifact directory
-/// (`artifacts/` or `$FASTPI_ARTIFACTS`); None if artifacts aren't built.
+/// (`artifacts/` or `$FASTPI_ARTIFACTS`); None if artifacts aren't built or
+/// the binary was compiled without the `xla` feature.
 pub fn global_executor() -> Option<&'static XlaExecutor> {
     GLOBAL
         .get_or_init(|| {

@@ -1,4 +1,6 @@
-//! PJRT runtime bridge — loads the AOT HLO artifacts produced by
+//! Process runtime: the shared worker pool every parallel kernel dispatches
+//! onto ([`pool`], see `runtime/README.md` for the threading model), plus
+//! the PJRT bridge that loads the AOT HLO artifacts produced by
 //! `python/compile/aot.py` and executes them from the rust hot path.
 //!
 //! Python is build-time only: after `make artifacts` the rust binary is
@@ -9,7 +11,9 @@
 pub mod artifacts;
 pub mod client;
 pub mod dispatch;
+pub mod pool;
 
 pub use artifacts::{ArtifactKind, ArtifactSpec, Manifest};
 pub use client::{global_executor, XlaExecutor};
 pub use dispatch::{ExecMode, GemmDispatcher, GemmStats};
+pub use pool::{configure_threads, runtime, with_thread_cap, Pool, Runtime};

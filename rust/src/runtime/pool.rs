@@ -1,0 +1,548 @@
+//! Process-wide worker-pool runtime.
+//!
+//! Every parallel region in the library — the blocked GEMM row-panels, the
+//! Gram-trick panel reduction, the per-component block SVDs, sparse×dense
+//! scoring products on the serve path — dispatches onto ONE shared pool of
+//! long-lived `std::thread` workers owned by the process-wide [`Runtime`]
+//! handle. This replaces the previous spawn-per-call `std::thread::scope`
+//! scheme: thread creation is paid once at startup, so small hot-path
+//! products (the serving GEMMs) parallelize without a per-call spawn tax,
+//! and offline factorization and online scoring share the same workers
+//! instead of oversubscribing the machine.
+//!
+//! # Execution model
+//!
+//! [`Pool::scope`] publishes one type-erased job; the calling thread runs a
+//! share of it itself (caller-runs, so `threads = 1` never touches a worker
+//! thread) while up to `threads - 1` pool workers claim the rest. The
+//! closure receives a participant index and is expected to pull work off a
+//! shared atomic counter — [`Pool::par_chunks`] and [`Pool::par_map`] wrap
+//! exactly that pattern. `scope` returns only after every participant has
+//! finished, so borrowing stack data in the closure is sound.
+//!
+//! # Nesting and re-entrancy
+//!
+//! Nested parallel regions are rejected: a `scope` issued from inside a
+//! pool task (or while the pool is busy with another caller's job) runs the
+//! job inline on the calling thread instead of deadlocking on the single
+//! job slot. Numeric results are unaffected — tasks partition index space
+//! identically regardless of who executes them.
+//!
+//! # Determinism
+//!
+//! Work distribution is dynamic (atomic work stealing) but every output
+//! element is owned by exactly one task and computed with a fixed reduction
+//! order, so results are bitwise-identical for every thread count — see
+//! `runtime/README.md` for the full contract and the per-kernel notes.
+//!
+//! # Panics
+//!
+//! A panic inside a worker task is caught on the worker, the remaining
+//! participants finish, and the first panic payload is re-raised on the
+//! calling thread. Workers and the pool survive: the next `scope` runs
+//! normally. Pool mutexes are never held across user code, so they cannot
+//! be poisoned by a panicking task.
+
+use std::cell::Cell;
+use std::ops::Range;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Condvar, Mutex, MutexGuard, OnceLock};
+
+/// Type-erased job body: called once per participant with its index.
+type Task = dyn Fn(usize) + Sync;
+
+/// The single job slot shared between the caller and the workers.
+struct JobSlot {
+    /// Erased pointer to the active job closure. Only valid while the
+    /// publishing `scope` call is blocked waiting for `pending == 0`.
+    task: Option<*const Task>,
+    /// Bumped once per published job; workers detect new work by epoch.
+    epoch: u64,
+    /// Worker claims still available for the current job.
+    unclaimed: usize,
+    /// Next participant index to hand to a claiming worker (caller = 0).
+    next_idx: usize,
+    /// Worker claims not yet finished (scope waits for 0).
+    pending: usize,
+    /// First panic payload raised by a participant of the current job.
+    panic: Option<Box<dyn std::any::Any + Send>>,
+    /// A caller is currently between publish and completion.
+    active: bool,
+    shutdown: bool,
+}
+
+// SAFETY: the raw task pointer is only dereferenced while the publishing
+// scope() is blocked (it outlives every dereference), and access to the
+// slot itself is serialized by the owning Mutex.
+unsafe impl Send for JobSlot {}
+
+struct Shared {
+    slot: Mutex<JobSlot>,
+    /// Workers wait here for a new epoch.
+    start: Condvar,
+    /// The publishing caller waits here for `pending == 0`.
+    done: Condvar,
+}
+
+impl Shared {
+    /// Pool mutexes are never held across user code, so poisoning can only
+    /// come from a panic in the pool's own bookkeeping; recover regardless.
+    fn lock(&self) -> MutexGuard<'_, JobSlot> {
+        self.slot.lock().unwrap_or_else(|e| e.into_inner())
+    }
+}
+
+thread_local! {
+    /// True on pool worker threads and inside a caller-runs task: parallel
+    /// regions entered from such a context run inline (nested-scope
+    /// rejection).
+    static IN_POOL_TASK: Cell<bool> = const { Cell::new(false) };
+    /// Per-thread cap on participants for benchmarking single- vs
+    /// multi-thread kernels in one process (see [`with_thread_cap`]).
+    static THREAD_CAP: Cell<usize> = const { Cell::new(usize::MAX) };
+}
+
+/// A pool of `threads - 1` long-lived workers plus the calling thread.
+pub struct Pool {
+    shared: &'static Shared,
+    threads: usize,
+    /// Worker join handles; None for the never-dropped global pool.
+    handles: Vec<std::thread::JoinHandle<()>>,
+    /// Whether Drop should shut the workers down (false for the global).
+    owns_workers: bool,
+}
+
+impl Pool {
+    /// Build a pool that executes jobs on `threads` threads total (the
+    /// caller plus `threads - 1` spawned workers). `threads = 1` spawns
+    /// nothing and always runs inline.
+    pub fn new(threads: usize) -> Pool {
+        Self::build(threads, true)
+    }
+
+    fn build(threads: usize, owns_workers: bool) -> Pool {
+        let threads = threads.max(1);
+        // The Shared block must outlive the worker threads. Workers of an
+        // owned pool are joined in Drop; the global pool's workers live for
+        // the process. Leaking one small allocation per pool keeps the
+        // lifetime story simple and is free for the two pools a process
+        // actually creates (the global one, plus short-lived test pools).
+        let shared: &'static Shared = Box::leak(Box::new(Shared {
+            slot: Mutex::new(JobSlot {
+                task: None,
+                epoch: 0,
+                unclaimed: 0,
+                next_idx: 1,
+                pending: 0,
+                panic: None,
+                active: false,
+                shutdown: false,
+            }),
+            start: Condvar::new(),
+            done: Condvar::new(),
+        }));
+        let mut handles = Vec::new();
+        for w in 0..threads.saturating_sub(1) {
+            let builder = std::thread::Builder::new().name(format!("fastpi-worker-{w}"));
+            handles.push(
+                builder.spawn(move || worker_loop(shared)).expect("spawn pool worker"),
+            );
+        }
+        Pool { shared, threads, handles, owns_workers }
+    }
+
+    /// Total threads a full-width job runs on (caller included).
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Run `f` once per participant (indices `0..participants`, the caller
+    /// being index 0), blocking until all participants finish. The
+    /// participant count is `threads()` clamped by [`with_thread_cap`].
+    ///
+    /// `f` must distribute work internally (shared atomic counter); see
+    /// [`Pool::par_chunks`] / [`Pool::par_map`] for the canonical wrappers.
+    pub fn scope<F>(&self, f: F)
+    where
+        F: Fn(usize) + Sync,
+    {
+        let participants = self.threads.min(THREAD_CAP.with(|c| c.get())).max(1);
+        if participants == 1 || IN_POOL_TASK.with(|c| c.get()) {
+            // single-threaded, or nested inside another pool task: inline
+            f(0);
+            return;
+        }
+
+        let workers = participants - 1;
+        // SAFETY: scope() blocks below until every claimed share finished
+        // (`pending == 0`), so the closure strictly outlives all uses of
+        // this lifetime-erased reference.
+        let task_ptr: *const Task =
+            unsafe { std::mem::transmute::<&Task, &'static Task>(&f as &Task) };
+        {
+            let mut slot = self.shared.lock();
+            if slot.active {
+                // the pool is busy with another caller's job — run inline
+                // rather than queueing behind it (keeps serve-path latency
+                // bounded and makes nesting impossible to deadlock)
+                drop(slot);
+                f(0);
+                return;
+            }
+            slot.active = true;
+            slot.task = Some(task_ptr);
+            slot.epoch = slot.epoch.wrapping_add(1);
+            slot.unclaimed = workers;
+            slot.next_idx = 1;
+            slot.pending = workers;
+            slot.panic = None;
+            self.shared.start.notify_all();
+        }
+
+        // caller-runs its own share, flagged so nested regions inline
+        let caller_result = IN_POOL_TASK.with(|c| {
+            c.set(true);
+            let r = catch_unwind(AssertUnwindSafe(|| f(0)));
+            c.set(false);
+            r
+        });
+
+        // wait for every claimed worker share to finish, then retire the job
+        let panic_payload = {
+            let mut slot = self.shared.lock();
+            while slot.pending > 0 {
+                slot = self.shared.done.wait(slot).unwrap_or_else(|e| e.into_inner());
+            }
+            slot.task = None;
+            slot.unclaimed = 0;
+            slot.active = false;
+            slot.panic.take()
+        };
+
+        // propagate the first worker panic, else the caller's own
+        if let Some(p) = panic_payload {
+            resume_unwind(p);
+        }
+        if let Err(p) = caller_result {
+            resume_unwind(p);
+        }
+    }
+
+    /// Parallel for over `0..n` in chunks of `chunk` indices, work-stolen
+    /// off a shared atomic counter. Falls back to a serial loop when the
+    /// pool is single-threaded, capped, or the range is a single chunk.
+    pub fn par_chunks<F>(&self, n: usize, chunk: usize, f: F)
+    where
+        F: Fn(Range<usize>) + Sync,
+    {
+        let chunk = chunk.max(1);
+        if n == 0 {
+            return;
+        }
+        if n <= chunk {
+            f(0..n);
+            return;
+        }
+        let counter = AtomicUsize::new(0);
+        self.scope(|_| loop {
+            let start = counter.fetch_add(chunk, Ordering::Relaxed);
+            if start >= n {
+                break;
+            }
+            f(start..(start + chunk).min(n));
+        });
+    }
+
+    /// Parallel for over single indices — for coarse jobs like per-block
+    /// SVDs where each iteration is substantial.
+    pub fn par_for<F>(&self, n: usize, f: F)
+    where
+        F: Fn(usize) + Sync,
+    {
+        self.par_chunks(n, 1, |r| {
+            for i in r {
+                f(i)
+            }
+        });
+    }
+
+    /// Parallel map preserving input order.
+    pub fn par_map<T, U, F>(&self, items: &[T], f: F) -> Vec<U>
+    where
+        T: Sync,
+        U: Send,
+        F: Fn(&T) -> U + Sync,
+    {
+        let n = items.len();
+        let mut out: Vec<Option<U>> = (0..n).map(|_| None).collect();
+        {
+            let slots = SyncSlots(out.as_mut_ptr());
+            let slots_ref = &slots;
+            self.par_for(n, move |i| {
+                let v = f(&items[i]);
+                // SAFETY: each index is handed out exactly once (atomic
+                // counter), so writes target disjoint slots.
+                unsafe { std::ptr::write(slots_ref.0.add(i), Some(v)) };
+            });
+        }
+        out.into_iter().map(|o| o.expect("slot filled")).collect()
+    }
+}
+
+impl Drop for Pool {
+    fn drop(&mut self) {
+        if !self.owns_workers {
+            return;
+        }
+        {
+            let mut slot = self.shared.lock();
+            slot.shutdown = true;
+            self.shared.start.notify_all();
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Wrapper making a raw pointer Sync for the disjoint-write pattern above.
+struct SyncSlots<U>(*mut Option<U>);
+unsafe impl<U: Send> Sync for SyncSlots<U> {}
+
+fn worker_loop(shared: &'static Shared) {
+    IN_POOL_TASK.with(|c| c.set(true));
+    let mut seen_epoch = 0u64;
+    loop {
+        // wait for a new job epoch (or shutdown), claiming a share if any
+        let claim: Option<(*const Task, usize)> = {
+            let mut slot = shared.lock();
+            loop {
+                if slot.shutdown {
+                    return;
+                }
+                if slot.epoch != seen_epoch {
+                    seen_epoch = slot.epoch;
+                    if slot.unclaimed > 0 {
+                        slot.unclaimed -= 1;
+                        // participant indices: caller = 0, workers from 1 up
+                        let idx = slot.next_idx;
+                        slot.next_idx += 1;
+                        break Some((slot.task.expect("task published with epoch"), idx));
+                    }
+                    // all shares claimed — skip this epoch
+                    break None;
+                }
+                slot = shared.start.wait(slot).unwrap_or_else(|e| e.into_inner());
+            }
+        };
+        let Some((task_ptr, idx)) = claim else { continue };
+
+        // SAFETY: the publishing scope() blocks until `pending` returns to
+        // zero, which happens strictly after this call returns.
+        let task = unsafe { &*task_ptr };
+        let result = catch_unwind(AssertUnwindSafe(|| task(idx)));
+
+        let mut slot = shared.lock();
+        if let Err(p) = result {
+            if slot.panic.is_none() {
+                slot.panic = Some(p);
+            }
+        }
+        slot.pending -= 1;
+        if slot.pending == 0 {
+            shared.done.notify_all();
+        }
+    }
+}
+
+/// Run `f` with parallel regions on this thread capped to `threads`
+/// participants (1 = force serial). Used by the benches to measure
+/// single- vs multi-thread kernels in one process; the cap is restored on
+/// exit even if `f` panics.
+pub fn with_thread_cap<R>(threads: usize, f: impl FnOnce() -> R) -> R {
+    struct Restore(usize);
+    impl Drop for Restore {
+        fn drop(&mut self) {
+            THREAD_CAP.with(|c| c.set(self.0));
+        }
+    }
+    let prev = THREAD_CAP.with(|c| c.get());
+    let _restore = Restore(prev);
+    THREAD_CAP.with(|c| c.set(threads.max(1)));
+    f()
+}
+
+// ---------------------------------------------------------------------------
+// Process-wide runtime handle
+// ---------------------------------------------------------------------------
+
+/// The process-wide runtime: owns the shared pool. Obtained via
+/// [`runtime()`]; thread count is fixed at first use (CLI `--threads`,
+/// `ServerConfig::threads`, or `FASTPI_THREADS`, else available cores).
+pub struct Runtime {
+    pool: Pool,
+}
+
+impl Runtime {
+    pub fn pool(&self) -> &Pool {
+        &self.pool
+    }
+
+    pub fn threads(&self) -> usize {
+        self.pool.threads()
+    }
+}
+
+static RUNTIME: OnceLock<Runtime> = OnceLock::new();
+
+/// Fix the global runtime's worker count by initializing it at width `n`
+/// right now. Returns true if this call built the pool (the request won);
+/// false if the runtime was already running — at whatever width the first
+/// user gave it. The `OnceLock` serializes racing first users, so there is
+/// no window where a `true` return can be contradicted by a concurrent
+/// default-width initialization.
+pub fn configure_threads(n: usize) -> bool {
+    let n = n.max(1);
+    let mut built_here = false;
+    RUNTIME.get_or_init(|| {
+        built_here = true;
+        // the global pool's workers live for the whole process
+        Runtime { pool: Pool::build(n, false) }
+    });
+    built_here
+}
+
+/// The process-wide runtime handle, initializing the pool on first use
+/// (`FASTPI_THREADS` env, else available cores — unless
+/// [`configure_threads`] already fixed a width).
+pub fn runtime() -> &'static Runtime {
+    RUNTIME.get_or_init(|| {
+        let threads = std::env::var("FASTPI_THREADS")
+            .ok()
+            .and_then(|v| v.parse::<usize>().ok())
+            .map(|n| n.max(1))
+            .unwrap_or_else(|| {
+                std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+            });
+        // the global pool's workers live for the whole process
+        Runtime { pool: Pool::build(threads, false) }
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn par_for_visits_each_index_once() {
+        let pool = Pool::new(4);
+        let hits: Vec<AtomicUsize> = (0..1000).map(|_| AtomicUsize::new(0)).collect();
+        pool.par_for(1000, |i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn par_chunks_covers_range_exactly() {
+        let pool = Pool::new(3);
+        let total = AtomicU64::new(0);
+        pool.par_chunks(1003, 64, |r| {
+            let s: u64 = r.map(|i| i as u64).sum();
+            total.fetch_add(s, Ordering::Relaxed);
+        });
+        assert_eq!(total.load(Ordering::Relaxed), (0..1003u64).sum::<u64>());
+    }
+
+    #[test]
+    fn par_map_preserves_order() {
+        let pool = Pool::new(4);
+        let items: Vec<usize> = (0..257).collect();
+        let out = pool.par_map(&items, |&x| x * 3);
+        assert_eq!(out, (0..257).map(|x| x * 3).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn work_is_actually_distributed() {
+        // with 4 threads and coarse tasks, more than one thread must
+        // participate (each task parks briefly so the counter can't be
+        // drained by one worker before the others wake)
+        let pool = Pool::new(4);
+        let ids = Mutex::new(std::collections::HashSet::new());
+        pool.par_for(64, |_| {
+            std::thread::sleep(std::time::Duration::from_millis(2));
+            ids.lock().unwrap().insert(std::thread::current().id());
+        });
+        assert!(ids.lock().unwrap().len() > 1, "only one thread ran the job");
+    }
+
+    #[test]
+    fn panic_in_worker_is_contained_and_pool_survives() {
+        let pool = Pool::new(4);
+        let r = catch_unwind(AssertUnwindSafe(|| {
+            pool.par_for(100, |i| {
+                if i == 57 {
+                    panic!("boom at {i}");
+                }
+            });
+        }));
+        assert!(r.is_err(), "panic must propagate to the caller");
+        // the pool still works afterwards
+        let count = AtomicUsize::new(0);
+        pool.par_for(100, |_| {
+            count.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(count.load(Ordering::Relaxed), 100);
+    }
+
+    #[test]
+    fn nested_scope_runs_inline_not_deadlocked() {
+        let pool = Pool::new(4);
+        let outer_hits = AtomicUsize::new(0);
+        let inner_hits = AtomicUsize::new(0);
+        pool.par_for(8, |_| {
+            outer_hits.fetch_add(1, Ordering::Relaxed);
+            // nested region from inside a pool task: must complete (inline)
+            pool.par_for(16, |_| {
+                inner_hits.fetch_add(1, Ordering::Relaxed);
+            });
+        });
+        assert_eq!(outer_hits.load(Ordering::Relaxed), 8);
+        assert_eq!(inner_hits.load(Ordering::Relaxed), 8 * 16);
+    }
+
+    #[test]
+    fn thread_cap_forces_serial() {
+        let pool = Pool::new(4);
+        let main_id = std::thread::current().id();
+        with_thread_cap(1, || {
+            pool.par_for(32, |_| {
+                assert_eq!(std::thread::current().id(), main_id, "cap=1 must stay inline");
+            });
+        });
+        // cap restored afterwards
+        assert_eq!(THREAD_CAP.with(|c| c.get()), usize::MAX);
+    }
+
+    #[test]
+    fn single_thread_pool_runs_inline() {
+        let pool = Pool::new(1);
+        let main_id = std::thread::current().id();
+        pool.par_for(16, |_| {
+            assert_eq!(std::thread::current().id(), main_id);
+        });
+    }
+
+    #[test]
+    fn global_runtime_is_usable() {
+        let rt = runtime();
+        assert!(rt.threads() >= 1);
+        let sum = AtomicU64::new(0);
+        rt.pool().par_chunks(100, 7, |r| {
+            sum.fetch_add(r.len() as u64, Ordering::Relaxed);
+        });
+        assert_eq!(sum.load(Ordering::Relaxed), 100);
+    }
+}

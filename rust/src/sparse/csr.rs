@@ -2,7 +2,7 @@
 
 use super::coo::Coo;
 use crate::dense::Matrix;
-use crate::util::parallel;
+use crate::runtime::pool;
 
 /// CSR sparse matrix.
 #[derive(Debug, Clone, PartialEq)]
@@ -208,7 +208,14 @@ impl Csr {
         let mut c = Matrix::zeros(self.rows, n);
         let c_ptr = SyncPtr(c.data_mut().as_mut_ptr());
         let cp = &c_ptr;
-        parallel::for_each_chunk(self.rows, 64, move |range| {
+        // Row blocks dispatch onto the shared worker pool. This is also the
+        // serving-path scoring GEMM (batched ŷ = Zᵀa), where `rows` is one
+        // dynamic batch (often ≤ 64), so the chunk adapts to the pool width
+        // instead of handing the whole batch to one worker. Chunking only
+        // partitions row ownership — each C row is still reduced in fixed
+        // column order — so results stay bitwise-identical at any width.
+        let chunk = self.rows.div_ceil(4 * pool::runtime().threads()).clamp(1, 64);
+        pool::runtime().pool().par_chunks(self.rows, chunk, move |range| {
             for i in range {
                 // SAFETY: each row of C is written by exactly one worker.
                 let crow = unsafe { std::slice::from_raw_parts_mut(cp.0.add(i * n), n) };

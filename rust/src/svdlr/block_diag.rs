@@ -7,8 +7,8 @@
 
 use crate::dense::{svd_truncated, Matrix, Svd};
 use crate::reorder::BlockInfo;
+use crate::runtime::pool;
 use crate::sparse::Csr;
-use crate::util::parallel;
 
 /// Rank-truncated SVD of the block-diagonal A11 region of the *reordered*
 /// matrix `b`. `alpha` is the target rank ratio; block i gets target rank
@@ -19,8 +19,11 @@ use crate::util::parallel;
 /// the full A11 coordinate system (U: m1×s, Vᵀ: s×n1).
 pub fn block_diag_svd(b: &Csr, blocks: &[BlockInfo], m1: usize, n1: usize, alpha: f64) -> Svd {
     assert!(alpha > 0.0 && alpha <= 1.0, "alpha in (0,1]");
-    // Per-block SVDs in parallel (each independent — Idea 2 of the paper).
-    let results: Vec<Option<(BlockInfo, Svd)>> = parallel::map(blocks, |blk| {
+    // Per-block SVDs fan out across the shared worker pool (each block is
+    // independent by construction — Idea 2 of the paper). `par_map`
+    // preserves block order, so assembly below is deterministic for any
+    // thread count.
+    let results: Vec<Option<(BlockInfo, Svd)>> = pool::runtime().pool().par_map(blocks, |blk| {
         if blk.is_empty() {
             return None;
         }

@@ -14,9 +14,16 @@ pub struct Args {
 }
 
 /// Parse error with the offending token.
-#[derive(Debug, thiserror::Error)]
-#[error("bad argument `{0}`: {1}")]
+#[derive(Debug)]
 pub struct ArgError(pub String, pub String);
+
+impl std::fmt::Display for ArgError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "bad argument `{}`: {}", self.0, self.1)
+    }
+}
+
+impl std::error::Error for ArgError {}
 
 impl Args {
     /// Parse a token stream. A `--key` consumes the following token as its

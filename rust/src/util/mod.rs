@@ -1,10 +1,10 @@
-//! In-tree utility substrates (PRNG, parallelism, CLI, benching, property
-//! testing, timing). These replace crates.io dependencies that are not
-//! available in the offline build environment — see DESIGN.md §5.
+//! In-tree utility substrates (PRNG, CLI, benching, property testing,
+//! timing). These replace crates.io dependencies that are not available in
+//! the offline build environment — see DESIGN.md §5. Parallelism lives in
+//! [`crate::runtime::pool`] (the shared worker-pool runtime).
 
 pub mod args;
 pub mod bench;
-pub mod parallel;
 pub mod propcheck;
 pub mod rng;
 pub mod timer;

@@ -19,7 +19,12 @@ fn served_scores_match_offline_predictions() {
 
     let server = ScoreServer::start(
         model,
-        ServerConfig { max_batch: 16, max_wait: Duration::from_millis(1), queue_capacity: 256 },
+        ServerConfig {
+            max_batch: 16,
+            max_wait: Duration::from_millis(1),
+            queue_capacity: 256,
+            ..Default::default()
+        },
     )
     .unwrap();
     let addr = server.addr;
