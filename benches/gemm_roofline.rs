@@ -2,7 +2,9 @@
 //! worker vs the full pool, the panel-reduced Gram kernel, and the AOT
 //! Pallas artifact path, in GFLOP/s across sizes. Feeds EXPERIMENTS.md
 //! §Perf and the worker-pool speedup gate (≥ 2× at 4 threads on the
-//! default shapes).
+//! default shapes). Results land in `target/bench_results/` as both CSV
+//! and `BENCH_gemm_roofline.json` (name/config/throughput) for the
+//! cross-PR perf trajectory.
 //! Run: cargo bench --bench gemm_roofline
 //! (FASTPI_THREADS=4 pins the pool width for the scaling comparison.)
 

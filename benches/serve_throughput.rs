@@ -1,15 +1,24 @@
 //! Bench: scoring-server throughput and latency vs client concurrency —
-//! the request-path performance of the L3 coordinator. Two ablations:
-//! dynamic batching (max_batch 1 vs 64) and worker-pool width for the
+//! the request-path performance of the L3 coordinator. Three ablations:
+//! dynamic batching (max_batch 1 vs 64), worker-pool width for the
 //! batch-scoring GEMM (threads 1 vs 4 at max_batch 64 — the ≥ 2× pool
-//! speedup gate on the serve path).
+//! speedup gate on the serve path), and model hot-swap under load (clients
+//! hammering SCORE while LEARN folds publish new model versions and
+//! RELOADs swap them in — the zero-downtime claim as a measurement: every
+//! request must still answer OK). Results land in `target/bench_results/`
+//! as both CSV and
+//! `BENCH_serve_throughput.json` for the cross-PR perf trajectory.
 //! Run: cargo bench --bench serve_throughput
 
-use fastpi::coordinator::{score_request, PinvJob, PipelineCoordinator, ScoreServer, ServerConfig};
+use fastpi::coordinator::{
+    score_request, text_request, PinvJob, PipelineCoordinator, ScoreServer, ServerConfig,
+};
 use fastpi::data::load_dataset;
+use fastpi::model::{ModelStore, OnlineUpdater, UpdaterConfig};
 use fastpi::pinv::Method;
 use fastpi::regress::MultiLabelModel;
 use fastpi::util::bench::Reporter;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::time::{Duration, Instant};
 
 fn main() {
@@ -95,6 +104,109 @@ fn main() {
             "pool speedup (batch=64, 32 clients): threads=4 vs threads=1 = {:.2}x",
             rps_t4 / rps_t1
         );
+    }
+
+    // hot-swap under load: a swapper thread alternates LEARN folds (which
+    // publish a genuinely new model version) with RELOADs while 8 clients
+    // keep scoring; every reply must be OK (a dropped batch or ERR would
+    // panic the client thread and fail the run), so this measures the
+    // zero-downtime claim across *real* model changes, not just Arc swaps
+    {
+        let dir = std::env::temp_dir().join("fastpi_bench_hotswap_store");
+        let _ = std::fs::remove_dir_all(&dir);
+        let store = ModelStore::open(&dir).expect("store");
+        let (artifact, _) = coord.train_model(&ds, &job, ds.a.rows()).expect("artifact");
+        let version = store.publish(&artifact).expect("publish");
+        let updater = OnlineUpdater::new(artifact, UpdaterConfig::default());
+        let server = ScoreServer::start_lifecycle(
+            updater,
+            Some(store),
+            version,
+            ServerConfig {
+                max_batch: 64,
+                max_wait: Duration::from_micros(500),
+                queue_capacity: 1 << 14,
+                threads: 0,
+            },
+        )
+        .expect("server");
+        let addr = server.addr;
+        let clients = 8usize;
+        let stop_swapping = AtomicBool::new(false);
+        // `LEARN` line for a dataset row: folds it into the live model and
+        // publishes a new version (learn_batch defaults to 1)
+        let learn_line = |row: usize| {
+            let (js, vs) = ds.a.row(row);
+            let feats: Vec<String> = js.iter().zip(vs).map(|(&j, &v)| format!("{j}:{v}")).collect();
+            let (ls, _) = ds.y.row(row);
+            let labels = if ls.is_empty() {
+                "-".to_string()
+            } else {
+                ls.iter().map(|l| l.to_string()).collect::<Vec<_>>().join(",")
+            };
+            format!("LEARN {labels} {}", feats.join(","))
+        };
+        let t0 = Instant::now();
+        let (lats, swaps): (Vec<f64>, u64) = std::thread::scope(|s| {
+            let swapper = s.spawn(|| {
+                let mut n = 0u64;
+                while !stop_swapping.load(Ordering::Relaxed) {
+                    // cap the folds so a long run doesn't fill the temp
+                    // store; swaps keep happening via RELOAD either way
+                    let line = if n % 2 == 1 && n < 32 {
+                        learn_line((n as usize * 37) % ds.a.rows())
+                    } else {
+                        "RELOAD".to_string()
+                    };
+                    let reply = text_request(addr, &line).expect("swap io");
+                    assert!(reply.starts_with("OK version="), "hot swap failed: {reply}");
+                    n += 1;
+                    std::thread::sleep(Duration::from_millis(2));
+                }
+                n
+            });
+            let mut hs = Vec::new();
+            for c in 0..clients {
+                let a = &ds.a;
+                hs.push(s.spawn(move || {
+                    let mut out = Vec::new();
+                    for i in 0..n_requests / clients {
+                        let row = (c * 997 + i * 13) % a.rows();
+                        let (js, vs) = a.row(row);
+                        let feats: Vec<(usize, f64)> =
+                            js.iter().zip(vs).map(|(&j, &v)| (j, v)).collect();
+                        let t = Instant::now();
+                        score_request(addr, &feats, 5).expect("req under swap");
+                        out.push(t.elapsed().as_secs_f64());
+                    }
+                    out
+                }));
+            }
+            let lats: Vec<f64> = hs.into_iter().flat_map(|h| h.join().unwrap()).collect();
+            stop_swapping.store(true, Ordering::Relaxed);
+            (lats, swapper.join().unwrap())
+        });
+        let wall = t0.elapsed().as_secs_f64();
+        let mut sorted = lats.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        rep.add(
+            &[("policy", "hotswap/reload".into()), ("clients", clients.to_string())],
+            &[
+                ("throughput_rps", lats.len() as f64 / wall),
+                ("p50_ms", sorted[sorted.len() / 2] * 1e3),
+                ("p95_ms", sorted[(sorted.len() as f64 * 0.95) as usize] * 1e3),
+                ("swaps", swaps as f64),
+            ],
+        );
+        println!(
+            "hot swap under load: {} requests all OK across {} swaps (LEARN folds + RELOADs)",
+            lats.len(),
+            swaps
+        );
+        server.shutdown();
+        // each LEARN fold published a ~10MB version file — don't strand
+        // them in the OS temp dir
+        let _ = std::fs::remove_dir_all(&dir);
     }
     rep.finish();
 }

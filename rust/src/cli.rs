@@ -23,19 +23,35 @@ EXPERIMENTS (paper artifact regenerators):
 
 OPERATIONS:
   pinv       compute a pseudoinverse on a dataset and report stages
-  serve      start the scoring server on a trained model
+  train      fit a model and publish it to a versioned model store
+  serve      start the scoring server (--model-dir serves the store's
+             latest version instead of retraining)
+  update     fold new rows into the stored model (paper Eq. 2) and
+             publish a new version; reports incremental-vs-recompute time
+  lifecycle-check  headless train->serve->LEARN->RELOAD smoke (CI)
   datagen    generate + cache a dataset, print stats
   selftest   quick end-to-end smoke test
 
 COMMON OPTIONS:
   --datasets a,b     datasets (default amazon,rcv,eurlex,bibtex)
-  --dataset name     single dataset (fig1/fig3/pinv/serve)
+  --dataset name     single dataset (fig1/fig3/pinv/train/serve)
   --alphas 0.1,0.5   target rank ratios
   --alpha 0.3        single ratio
   --scale 0.1        dataset scale factor (1.0 = full Table 3 size)
   --methods a,b      fastpi,randpi,krylovpi,frpca,dense
   --seed 42          RNG seed
   --threads N        worker threads
+
+LIFECYCLE OPTIONS:
+  --model-dir DIR      model store (default target/models/<dataset>)
+  --holdout 0.2        train: fraction of rows held out for updates
+  --batch 64           update: held-out rows to fold per invocation
+  --rows A.mtx         update: fold rows from a MatrixMarket file instead
+  --labels Y.mtx       update: label rows matching --rows
+  --learn-batch 1      serve: LEARN examples buffered per fold
+  --resolve-rows N     flag a full re-solve after N folded rows (0=never)
+  --resolve-drift 0.05 flag a full re-solve past accumulated drift
+  --gc N               update: keep only the newest N store versions
 ";
 
 pub fn main() {
@@ -58,7 +74,10 @@ pub fn main() {
         "scaling" => cmd_scaling(&args),
         "ablate" => cmd_ablate(&args),
         "pinv" => cmd_pinv(&args),
+        "train" => cmd_train(&args),
         "serve" => cmd_serve(&args),
+        "update" => cmd_update(&args),
+        "lifecycle-check" => cmd_lifecycle_check(&args),
         "datagen" => cmd_datagen(&args),
         "selftest" => cmd_selftest(&args),
         _ => {
@@ -257,32 +276,265 @@ fn cmd_pinv(args: &Args) -> crate::error::Result<()> {
     Ok(())
 }
 
-fn cmd_serve(args: &Args) -> crate::error::Result<()> {
-    use crate::coordinator::{PinvJob, PipelineCoordinator, ScoreServer, ServerConfig};
+/// Resolve the model store directory: `--model-dir` or the per-dataset
+/// default.
+fn model_dir_arg(args: &Args, dataset: &str) -> std::path::PathBuf {
+    match args.get("model-dir") {
+        Some(d) => d.into(),
+        None => format!("target/models/{dataset}").into(),
+    }
+}
+
+fn updater_cfg_arg(args: &Args) -> crate::model::UpdaterConfig {
+    crate::model::UpdaterConfig {
+        learn_batch: args.parse_or("learn-batch", 1usize),
+        resolve_rows: args.parse_or("resolve-rows", 0usize),
+        resolve_drift: args.parse_or("resolve-drift", 0.05),
+        ..Default::default()
+    }
+}
+
+fn cmd_train(args: &Args) -> crate::error::Result<()> {
+    use crate::coordinator::{PinvJob, PipelineCoordinator};
     use crate::data::load_dataset;
-    use crate::regress::MultiLabelModel;
+    use crate::model::ModelStore;
     let name = args.str_or("dataset", "bibtex");
     let scale = args.parse_or("scale", harness::DEFAULT_SCALE);
     let seed = args.parse_or("seed", 42);
+    let holdout: f64 = args.parse_or("holdout", 0.2);
     let ds = load_dataset(&name, scale, seed, None)?;
-    let job = PinvJob {
-        method: Method::FastPi,
-        alpha: args.parse_or("alpha", 0.5),
-        k: ds.k,
-        seed,
-    };
-    println!("computing pseudoinverse for {name} (scale {scale})...");
-    let report = PipelineCoordinator::new().run(&ds.a, &job)?;
-    let (model, _) = MultiLabelModel::train(&report.pinv, &ds.y);
+    let job = PinvJob { method: Method::FastPi, alpha: args.parse_or("alpha", 0.5), k: ds.k, seed };
+    let total = ds.a.rows();
+    let train_rows =
+        ((total as f64) * (1.0 - holdout.clamp(0.0, 0.95))).ceil().max(1.0) as usize;
+    println!(
+        "training on {name} (scale {scale}): {train_rows}/{total} rows, {} held out for updates",
+        total - train_rows.min(total)
+    );
+    let t = std::time::Instant::now();
+    let (artifact, report) = PipelineCoordinator::new().train_model(&ds, &job, train_rows)?;
+    let store = ModelStore::open(&model_dir_arg(args, &name))?;
+    let version = store.publish(&artifact)?;
+    println!(
+        "published v{version} to {} (rank={} train_secs={:.3})",
+        store.dir().display(),
+        report.rank,
+        t.elapsed().as_secs_f64()
+    );
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> crate::error::Result<()> {
+    use crate::coordinator::{PinvJob, PipelineCoordinator, ScoreServer, ServerConfig};
+    use crate::data::load_dataset;
+    use crate::model::{ModelStore, OnlineUpdater};
     let server_cfg = ServerConfig {
         threads: args.parse_or("threads", 0usize),
         ..Default::default()
     };
-    let server = ScoreServer::start(model, server_cfg).map_err(crate::error::Error::Io)?;
-    println!("scoring server on {} — protocol: SCORE <topk> j:v,...  (Ctrl-C to stop)", server.addr);
+    let server = if let Some(dir) = args.get("model-dir") {
+        // lifecycle path: serve the store's latest version, no retraining
+        let store = ModelStore::open(std::path::Path::new(dir))?;
+        let Some((version, artifact)) = store.load_latest()? else {
+            return Err(crate::error::Error::Invalid(format!(
+                "no model versions in {dir} — run `fastpi train --model-dir {dir}` first"
+            )));
+        };
+        let (m, n, l) = artifact.shape();
+        println!(
+            "serving v{version} from {dir}: {} rows folded, rank={}, {n} features, {l} labels",
+            m,
+            artifact.rank()
+        );
+        let updater = OnlineUpdater::new(artifact, updater_cfg_arg(args));
+        ScoreServer::start_lifecycle(updater, Some(store), version, server_cfg)
+            .map_err(crate::error::Error::Io)?
+    } else {
+        // no store: train in-process and serve with an in-memory lifecycle
+        let name = args.str_or("dataset", "bibtex");
+        let scale = args.parse_or("scale", harness::DEFAULT_SCALE);
+        let seed = args.parse_or("seed", 42);
+        let ds = load_dataset(&name, scale, seed, None)?;
+        let job =
+            PinvJob { method: Method::FastPi, alpha: args.parse_or("alpha", 0.5), k: ds.k, seed };
+        println!("computing pseudoinverse for {name} (scale {scale})...");
+        let rows = ds.a.rows();
+        let (artifact, _) = PipelineCoordinator::new().train_model(&ds, &job, rows)?;
+        let updater = OnlineUpdater::new(artifact, updater_cfg_arg(args));
+        ScoreServer::start_lifecycle(updater, None, 0, server_cfg)
+            .map_err(crate::error::Error::Io)?
+    };
+    println!(
+        "scoring server on {} — verbs: SCORE <topk> j:v,... | LEARN <labels|-> j:v,... | VERSION | RELOAD | STATS  (Ctrl-C to stop)",
+        server.addr
+    );
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));
     }
+}
+
+fn cmd_update(args: &Args) -> crate::error::Result<()> {
+    use crate::coordinator::{PinvJob, PipelineCoordinator};
+    use crate::data::load_dataset;
+    use crate::model::{ModelStore, OnlineUpdater};
+    use crate::sparse::{io as sio, Csr};
+    let dir = model_dir_arg(args, &args.str_or("dataset", "bibtex"));
+    let store = ModelStore::open(&dir)?;
+    let Some((version, artifact)) = store.load_latest()? else {
+        return Err(crate::error::Error::Invalid(format!(
+            "no model versions in {} — run `fastpi train` first",
+            dir.display()
+        )));
+    };
+    let meta = artifact.meta.clone();
+    let (_, _, l) = artifact.shape();
+    let mut updater = OnlineUpdater::new(artifact, updater_cfg_arg(args));
+
+    // new rows: an explicit MatrixMarket file (folds without moving the
+    // dataset cursor), or the dataset's held-out stream starting at the
+    // stored cursor (dataset is loaded once and reused for the recompute
+    // comparison below)
+    let mut loaded_ds = None;
+    let rep = if let Some(rows_path) = args.get("rows") {
+        let a = sio::read_matrix_market(std::path::Path::new(rows_path))?;
+        let y = match args.get("labels") {
+            Some(p) => sio::read_matrix_market(std::path::Path::new(p))?,
+            None => Csr::zeros(a.rows(), l),
+        };
+        updater.apply_block(&a, &y)?
+    } else {
+        if meta.dataset.is_empty() {
+            return Err(crate::error::Error::Invalid(
+                "model has no dataset identity — pass --rows/--labels files".into(),
+            ));
+        }
+        let ds = loaded_ds.insert(load_dataset(&meta.dataset, meta.scale, meta.seed, None)?);
+        let start = meta.dataset_rows as usize;
+        if start >= ds.a.rows() {
+            println!(
+                "v{version}: all {} rows of {} already folded — nothing to update",
+                ds.a.rows(),
+                meta.dataset
+            );
+            return Ok(());
+        }
+        let take = args.parse_or("batch", 64usize).min(ds.a.rows() - start);
+        let a_new = ds.a.block(start, 0, take, ds.a.cols());
+        let y_new = ds.y.block(start, 0, take, ds.y.cols());
+        updater.apply_dataset_block(&a_new, &y_new)?
+    };
+    let new_version = store.publish(updater.artifact())?;
+    println!(
+        "v{version} -> v{new_version}: folded {} rows in {:.3}s (rank={} drift={:.3e} total_drift={:.3e})",
+        rep.rows, rep.secs, rep.rank, rep.drift_inc, rep.drift_total
+    );
+
+    // the paper's speed claim as a serving-lifecycle metric: the same rows
+    // via a full FastPI recompute on the accumulated dataset prefix
+    if let (Some(ds), false) = (&loaded_ds, args.flag("no-compare")) {
+        let new_meta = &updater.artifact().meta;
+        let upto = (new_meta.dataset_rows as usize).min(ds.a.rows());
+        let job = PinvJob { method: Method::FastPi, alpha: meta.alpha, k: meta.k, seed: meta.seed };
+        let t = std::time::Instant::now();
+        let (resolved, _) = PipelineCoordinator::new().train_model(ds, &job, upto)?;
+        let recompute_secs = t.elapsed().as_secs_f64();
+        println!(
+            "incremental={:.3}s full-recompute={:.3}s speedup={:.1}x",
+            rep.secs,
+            recompute_secs,
+            recompute_secs / rep.secs.max(1e-9)
+        );
+        if rep.needs_resolve || args.flag("resolve") {
+            if new_meta.rows_trained > new_meta.dataset_rows {
+                println!(
+                    "note: re-solve covers the {upto}-row dataset prefix; {} ad-hoc learned rows are not in it",
+                    new_meta.rows_trained - new_meta.dataset_rows
+                );
+            }
+            let rv = store.publish(&resolved)?;
+            println!(
+                "re-solve threshold crossed — published full re-solve as v{rv} (drift reset)"
+            );
+        }
+    } else if rep.needs_resolve {
+        println!(
+            "re-solve threshold crossed (drift={:.3e}, rows_since_solve={}) — retrain with `fastpi train`",
+            rep.drift_total,
+            updater.artifact().meta.rows_since_solve
+        );
+    }
+    if let Some(keep) = args.get("gc") {
+        // deleting versions on a malformed argument would be destructive
+        let keep: usize = keep.parse().map_err(|_| {
+            crate::error::Error::Invalid(format!("bad --gc value `{keep}` (want a count)"))
+        })?;
+        let removed = store.gc(keep)?;
+        println!("gc: removed {removed} old versions (kept newest {keep})");
+    }
+    Ok(())
+}
+
+/// Headless end-to-end smoke of the model lifecycle: serve the store's
+/// latest version and drive SCORE/LEARN/RELOAD/VERSION/STATS over TCP,
+/// asserting the save→load→update→swap loop behaves. Exits non-zero on any
+/// mismatch, so CI can gate on it after a separate `train` process — the
+/// restart between the two is the point.
+fn cmd_lifecycle_check(args: &Args) -> crate::error::Result<()> {
+    use crate::coordinator::{text_request, ScoreServer, ServerConfig};
+    use crate::error::Error;
+    use crate::model::{ModelStore, OnlineUpdater};
+    let dir = model_dir_arg(args, &args.str_or("dataset", "bibtex"));
+    let store = ModelStore::open(&dir)?;
+    let Some((version, artifact)) = store.load_latest()? else {
+        return Err(Error::Invalid(format!(
+            "no model versions in {} — run `fastpi train` first",
+            dir.display()
+        )));
+    };
+    let (_, n, _) = artifact.shape();
+    let updater = OnlineUpdater::new(artifact, updater_cfg_arg(args));
+    let server = ScoreServer::start_lifecycle(updater, Some(store), version, ServerConfig::default())
+        .map_err(Error::Io)?;
+    let addr = server.addr;
+
+    let check = |what: &str, got: &str, want_prefix: &str| -> crate::error::Result<()> {
+        if got.starts_with(want_prefix) {
+            println!("  {what}: {got}");
+            Ok(())
+        } else {
+            Err(Error::Invalid(format!("{what}: expected `{want_prefix}...`, got `{got}`")))
+        }
+    };
+    let req = |line: &str| text_request(addr, line).map_err(Error::Io);
+
+    check("PING", &req("PING")?, "PONG")?;
+    check("VERSION", &req("VERSION")?, &format!("VERSION id={version} "))?;
+    let feats = format!("0:1.0,{}:0.5", n.saturating_sub(1));
+    let score1 = req(&format!("SCORE 3 {feats}"))?;
+    check("SCORE", &score1, "OK ")?;
+    check("RELOAD", &req("RELOAD")?, &format!("OK version={version}"))?;
+    let score2 = req(&format!("SCORE 3 {feats}"))?;
+    if score1 != score2 {
+        return Err(Error::Invalid(format!(
+            "SCORE changed across RELOAD of the same version: `{score1}` vs `{score2}`"
+        )));
+    }
+    println!("  SCORE after RELOAD: identical reply");
+    check("LEARN", &req(&format!("LEARN 0 {feats}"))?, "OK version=")?;
+    // learn_batch defaults to 1, so the fold + hot swap already happened
+    check("VERSION after LEARN", &req("VERSION")?, &format!("VERSION id={} ", version + 1))?;
+    let score3 = req(&format!("SCORE 3 {feats}"))?;
+    check("SCORE after swap", &score3, "OK ")?;
+    let stats = req("STATS")?;
+    check("STATS", &stats, "STATS served=")?;
+    for field in ["rejected=", "queue_depth=", "swaps=", "learned="] {
+        if !stats.contains(field) {
+            return Err(Error::Invalid(format!("STATS missing `{field}`: {stats}")));
+        }
+    }
+    server.shutdown();
+    println!("lifecycle-check OK: v{version} served, reloaded, learned into v{}", version + 1);
+    Ok(())
 }
 
 fn cmd_datagen(args: &Args) -> crate::error::Result<()> {

@@ -1,9 +1,10 @@
 //! Layer-3 coordination: the pipeline orchestrator that runs pseudoinverse
 //! jobs end-to-end, and the scoring server that serves the trained
-//! multi-label model over TCP with dynamic batching.
+//! multi-label model over TCP with dynamic batching and zero-downtime
+//! model hot-swap (see `crate::model` for the lifecycle subsystem).
 
 pub mod pipeline;
 pub mod serve;
 
 pub use pipeline::{PinvJob, PinvReport, PipelineCoordinator};
-pub use serve::{score_request, ScoreServer, ServerConfig, ServerStats};
+pub use serve::{score_request, text_request, ScoreServer, ServerConfig, ServerStats};

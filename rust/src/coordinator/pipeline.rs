@@ -5,6 +5,7 @@
 
 use crate::data::{load_dataset, Dataset};
 use crate::error::Result;
+use crate::model::{ModelArtifact, ModelMeta};
 use crate::pinv::{fastpi_svd, low_rank_svd, FastPiConfig, Method, Pinv};
 use crate::regress::{ndcg_at_k, precision_at_k, train_test_split, MultiLabelModel, Split};
 use crate::sparse::Csr;
@@ -119,6 +120,37 @@ impl PipelineCoordinator {
         let ds = load_dataset(name, scale, job.seed, None)?;
         self.run(&ds.a, job)
     }
+
+    /// Train a persistable model on the first `train_rows` rows of a
+    /// dataset (the remainder is the held-out stream the `update` command
+    /// and `LEARN` verb fold in later). Packages the factorization, the
+    /// pseudoinverse diagonal, the projected labels C = UᵀY, and the
+    /// trained Z into a [`ModelArtifact`] ready for `ModelStore::publish`.
+    pub fn train_model(
+        &self,
+        ds: &Dataset,
+        job: &PinvJob,
+        train_rows: usize,
+    ) -> Result<(ModelArtifact, PinvReport)> {
+        let rows = train_rows.min(ds.a.rows());
+        let a_train = ds.a.block(0, 0, rows, ds.a.cols());
+        let y_train = ds.y.block(0, 0, rows, ds.y.cols());
+        let report = self.run(&a_train, job)?;
+        let meta = ModelMeta {
+            dataset: ds.name.clone(),
+            scale: ds.scale,
+            alpha: job.alpha,
+            k: job.k,
+            seed: job.seed,
+            rows_trained: rows as u64,
+            dataset_rows: rows as u64,
+            rows_since_solve: 0,
+            updates_applied: 0,
+            drift: 0.0,
+        };
+        let artifact = ModelArtifact::from_training(meta, report.svd.clone(), &y_train);
+        Ok((artifact, report))
+    }
 }
 
 /// Figure-5 style metrics.
@@ -174,6 +206,23 @@ mod tests {
         assert!(m.p_at_1 > 0.2, "P@1 {} barely above chance", m.p_at_1);
         assert!(m.p_at_3 <= 1.0 && m.p_at_1 <= 1.0);
         assert!(m.ndcg_at_5 > 0.0);
+    }
+
+    #[test]
+    fn train_model_packages_prefix_and_matches_one_shot_training() {
+        let ds = small_dataset();
+        let coord = PipelineCoordinator::new();
+        let job = PinvJob { method: Method::FastPi, alpha: 0.5, k: 0.05, seed: 4 };
+        let train_rows = 240; // hold out the last 60 rows for updates
+        let (artifact, report) = coord.train_model(&ds, &job, train_rows).unwrap();
+        assert_eq!(artifact.shape(), (240, 60, 25));
+        assert_eq!(artifact.meta.rows_trained, 240);
+        assert_eq!(artifact.meta.dataset, "unit");
+        assert_eq!(artifact.rank(), report.rank);
+        // packaged Z is bitwise what MultiLabelModel::train would produce
+        let y_train = ds.y.block(0, 0, 240, ds.y.cols());
+        let (oracle, _) = MultiLabelModel::train(&report.pinv, &y_train);
+        assert_eq!(artifact.z.max_abs_diff(&oracle.z), 0.0);
     }
 
     #[test]

@@ -8,15 +8,44 @@
 //! fans the top-k results back out. Pure rust end to end — python never
 //! runs here.
 //!
+//! The model lives in a swap slot ([`ModelSlot`]) the batcher re-reads once
+//! per batch, so the lifecycle verbs below replace the served model *between
+//! two batches* with zero downtime: in-flight requests score against the
+//! version that was live when their batch was drained, and no batch is ever
+//! dropped by a swap. `LEARN` folds new labeled examples into the live
+//! factorization through [`crate::model::OnlineUpdater`] (paper Eq. 2) and
+//! publishes the result to the model store when one is attached.
+//!
 //! Protocol (line-oriented text):
 //! ```text
 //! -> SCORE <topk> j1:v1,j2:v2,...
 //! <- OK label:score,label:score,...
+//! -> LEARN <l1,l2,...|-> j1:v1,j2:v2,...   (labels; "-" = none)
+//! <- OK version=... pending=...           (pending=0 means a fold+swap ran;
+//!                                          `unpublished=1` flags a fold that
+//!                                          is live in memory but could not
+//!                                          be persisted — it is served under
+//!                                          a transient id ≥ 2⁶³, stays folded
+//!                                          in, and the next successful
+//!                                          publish persists it; a RELOAD
+//!                                          before that reverts to the
+//!                                          store's latest and discards it)
+//! -> VERSION         <- VERSION id=... rank=... features=... labels=... updates=... pending=...
+//! -> RELOAD          <- OK version=...    (re-serve the store's latest)
 //! -> PING            <- PONG
-//! -> STATS           <- STATS served=... batches=... avg_batch=...
+//! -> STATS           <- STATS served=... batches=... rejected=... avg_batch=... queue_depth=... swaps=... learned=...
 //! -> QUIT            (closes the connection)
 //! ```
+//!
+//! `STATS` fields: `served`/`batches`/`avg_batch` count scored requests,
+//! `rejected` counts requests refused with `ERR overloaded`, `queue_depth`
+//! is the live backlog (watch it climb *before* rejections start),
+//! `swaps` counts model hot-swaps (LEARN folds + RELOADs), and `learned`
+//! counts accepted LEARN examples. `LEARN`/`RELOAD` answer `ERR learning
+//! disabled` / `ERR no model store` on a server started without the
+//! corresponding lifecycle pieces.
 
+use crate::model::{ModelStore, OnlineUpdater};
 use crate::regress::metrics::top_k_indices;
 use crate::regress::MultiLabelModel;
 use crate::sparse::{Coo, Csr};
@@ -58,6 +87,10 @@ pub struct ServerStats {
     pub served: AtomicUsize,
     pub batches: AtomicUsize,
     pub rejected: AtomicUsize,
+    /// model hot-swaps (LEARN folds + RELOADs) since start
+    pub swaps: AtomicUsize,
+    /// LEARN examples accepted (buffered or folded) since start
+    pub learned: AtomicUsize,
     /// Coherent (served, batches) snapshot, packed 32/32 into one word and
     /// stored by the batcher after both counters are bumped. `avg_batch`
     /// reads this single atomic, so it never mixes a post-batch `served`
@@ -87,6 +120,72 @@ impl ServerStats {
         } else {
             served as f64 / batches as f64
         }
+    }
+}
+
+/// Marks version ids of folds that are live in memory but not persisted
+/// (a `LEARN` whose store publish failed). Store ids never have the top
+/// bit set, so a transient id can never collide with — or later be reused
+/// by — a successfully published version. The low bits come from a
+/// process-wide monotone counter, so two distinct unpublished models never
+/// share an id either (even across a RELOAD revert in between).
+const TRANSIENT_VERSION_BIT: u64 = 1 << 63;
+static TRANSIENT_VERSION_SEQ: AtomicU64 = AtomicU64::new(0);
+
+fn next_transient_version() -> u64 {
+    TRANSIENT_VERSION_BIT | (TRANSIENT_VERSION_SEQ.fetch_add(1, Ordering::Relaxed) + 1)
+}
+
+/// The served model plus its lifecycle identity.
+#[derive(Debug)]
+pub struct ServingModel {
+    /// store version id (0 = never published)
+    pub version: u64,
+    /// factorization rank behind this model
+    pub rank: usize,
+    pub model: MultiLabelModel,
+}
+
+/// Single-slot model holder. Swapping is one short-held lock around an
+/// `Arc` exchange — readers (the batcher, VERSION) clone the `Arc` and
+/// score outside the lock, so a swap never stalls the scoring GEMM and the
+/// GEMM never stalls a swap.
+#[derive(Debug)]
+pub struct ModelSlot {
+    current: Mutex<Arc<ServingModel>>,
+}
+
+impl ModelSlot {
+    fn new(m: ServingModel) -> ModelSlot {
+        ModelSlot { current: Mutex::new(Arc::new(m)) }
+    }
+
+    /// Current model (cheap: one lock + `Arc` clone).
+    pub fn get(&self) -> Arc<ServingModel> {
+        self.current.lock().unwrap_or_else(|e| e.into_inner()).clone()
+    }
+
+    /// Publish a new model to readers.
+    pub fn swap(&self, m: Arc<ServingModel>) {
+        *self.current.lock().unwrap_or_else(|e| e.into_inner()) = m;
+    }
+}
+
+/// Lifecycle state shared by connection threads: the updater that folds
+/// LEARN examples, and the store LEARN publishes to / RELOAD reads from.
+/// Lock order (deadlock-free by construction): `updater` before the slot's
+/// internal lock; the batcher only ever touches the slot.
+struct Lifecycle {
+    updater: Mutex<OnlineUpdater>,
+    store: Option<ModelStore>,
+}
+
+impl Lifecycle {
+    /// Poison-recovering updater lock: a panic inside a fold leaves the
+    /// previous artifact intact (the artifact is only replaced after the
+    /// fold fully succeeds), so the lock stays usable.
+    fn updater(&self) -> MutexGuard<'_, OnlineUpdater> {
+        self.updater.lock().unwrap_or_else(|e| e.into_inner())
     }
 }
 
@@ -135,14 +234,41 @@ impl Queue {
 pub struct ScoreServer {
     pub addr: std::net::SocketAddr,
     pub stats: Arc<ServerStats>,
+    slot: Arc<ModelSlot>,
     stop: Arc<AtomicBool>,
     accept_handle: Option<std::thread::JoinHandle<()>>,
     batch_handle: Option<std::thread::JoinHandle<()>>,
 }
 
 impl ScoreServer {
-    /// Start serving `model` on 127.0.0.1 (ephemeral port).
+    /// Start serving `model` on 127.0.0.1 (ephemeral port). No lifecycle:
+    /// `LEARN` and `RELOAD` answer with errors; `SCORE`/`VERSION`/`STATS`
+    /// work as always.
     pub fn start(model: MultiLabelModel, cfg: ServerConfig) -> std::io::Result<ScoreServer> {
+        let serving = ServingModel { version: 0, rank: 0, model };
+        Self::start_inner(serving, None, cfg)
+    }
+
+    /// Start serving the updater's live model with the full lifecycle:
+    /// `LEARN` folds examples and hot-swaps (publishing to `store` when
+    /// present), `RELOAD` re-serves the store's latest version.
+    pub fn start_lifecycle(
+        updater: OnlineUpdater,
+        store: Option<ModelStore>,
+        version: u64,
+        cfg: ServerConfig,
+    ) -> std::io::Result<ScoreServer> {
+        let art = updater.artifact();
+        let serving = ServingModel { version, rank: art.rank(), model: art.model() };
+        let lifecycle = Lifecycle { updater: Mutex::new(updater), store };
+        Self::start_inner(serving, Some(Arc::new(lifecycle)), cfg)
+    }
+
+    fn start_inner(
+        serving: ServingModel,
+        lifecycle: Option<Arc<Lifecycle>>,
+        cfg: ServerConfig,
+    ) -> std::io::Result<ScoreServer> {
         if cfg.threads > 0 {
             // request the pool width before the first scoring GEMM spins
             // the runtime up; a no-op if the runtime is already running
@@ -153,6 +279,7 @@ impl ScoreServer {
         listener.set_nonblocking(true)?;
         let stop = Arc::new(AtomicBool::new(false));
         let stats = Arc::new(ServerStats::default());
+        let slot = Arc::new(ModelSlot::new(serving));
         let queue = Arc::new(Queue {
             deque: Mutex::new(VecDeque::new()),
             cv: Condvar::new(),
@@ -164,14 +291,16 @@ impl ScoreServer {
         let b_stop = stop.clone();
         let b_stats = stats.clone();
         let b_cfg = cfg.clone();
+        let b_slot = slot.clone();
         let batch_handle = std::thread::Builder::new()
             .name("score-batcher".into())
-            .spawn(move || batcher_loop(model, b_queue, b_stop, b_stats, b_cfg))?;
+            .spawn(move || batcher_loop(b_slot, b_queue, b_stop, b_stats, b_cfg))?;
 
         // accept loop
         let a_stop = stop.clone();
         let a_stats = stats.clone();
         let a_queue = queue.clone();
+        let a_slot = slot.clone();
         let accept_handle = std::thread::Builder::new().name("score-accept".into()).spawn(
             move || {
                 let mut conns: Vec<std::thread::JoinHandle<()>> = Vec::new();
@@ -181,8 +310,10 @@ impl ScoreServer {
                             let q = a_queue.clone();
                             let st = a_stats.clone();
                             let stop2 = a_stop.clone();
+                            let sl = a_slot.clone();
+                            let lc = lifecycle.clone();
                             conns.push(std::thread::spawn(move || {
-                                let _ = handle_conn(stream, q, st, stop2);
+                                let _ = handle_conn(stream, q, st, stop2, sl, lc);
                             }));
                         }
                         Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
@@ -200,10 +331,16 @@ impl ScoreServer {
         Ok(ScoreServer {
             addr,
             stats,
+            slot,
             stop,
             accept_handle: Some(accept_handle),
             batch_handle: Some(batch_handle),
         })
+    }
+
+    /// Version id of the model currently being served.
+    pub fn current_version(&self) -> u64 {
+        self.slot.get().version
     }
 
     /// Stop the server and join its threads.
@@ -220,13 +357,12 @@ impl ScoreServer {
 }
 
 fn batcher_loop(
-    model: MultiLabelModel,
+    slot: Arc<ModelSlot>,
     queue: Arc<Queue>,
     stop: Arc<AtomicBool>,
     stats: Arc<ServerStats>,
     cfg: ServerConfig,
 ) {
-    let n_features = model.z.rows();
     while !stop.load(Ordering::Relaxed) {
         // collect a batch
         let mut batch: Vec<Pending> = Vec::new();
@@ -261,6 +397,13 @@ fn batcher_loop(
         if batch.is_empty() {
             continue;
         }
+
+        // Pin the model for this whole batch: the slot is read exactly once
+        // per batch, so a concurrent hot swap takes effect at the next batch
+        // boundary and can never mix two versions inside one scoring pass.
+        let serving = slot.get();
+        let model = &serving.model;
+        let n_features = model.z.rows();
 
         // Batch the sparse feature rows and score in one sparse×dense GEMM
         // (`spmm` splits the batch rows across the shared worker pool, so a
@@ -311,6 +454,8 @@ fn handle_conn(
     queue: Arc<Queue>,
     stats: Arc<ServerStats>,
     stop: Arc<AtomicBool>,
+    slot: Arc<ModelSlot>,
+    lifecycle: Option<Arc<Lifecycle>>,
 ) -> std::io::Result<()> {
     stream.set_read_timeout(Some(Duration::from_millis(200)))?;
     let mut reader = BufReader::new(stream.try_clone()?);
@@ -345,14 +490,50 @@ fn handle_conn(
             continue;
         }
         if msg == "STATS" {
+            let queue_depth = queue.lock().len();
             writeln!(
                 writer,
-                "STATS served={} batches={} rejected={} avg_batch={:.2}",
+                "STATS served={} batches={} rejected={} avg_batch={:.2} queue_depth={} swaps={} learned={}",
                 stats.served.load(Ordering::Relaxed),
                 stats.batches.load(Ordering::Relaxed),
                 stats.rejected.load(Ordering::Relaxed),
                 stats.avg_batch(),
+                queue_depth,
+                stats.swaps.load(Ordering::Relaxed),
+                stats.learned.load(Ordering::Relaxed),
             )?;
+            writer.flush()?;
+            continue;
+        }
+        if msg == "VERSION" {
+            let serving = slot.get();
+            let (updates, pending) = match &lifecycle {
+                Some(lc) => {
+                    let up = lc.updater();
+                    (up.artifact().meta.updates_applied, up.pending_len())
+                }
+                None => (0, 0),
+            };
+            writeln!(
+                writer,
+                "VERSION id={} rank={} features={} labels={} updates={} pending={}",
+                serving.version,
+                serving.rank,
+                serving.model.z.rows(),
+                serving.model.z.cols(),
+                updates,
+                pending,
+            )?;
+            writer.flush()?;
+            continue;
+        }
+        if msg == "RELOAD" {
+            writeln!(writer, "{}", handle_reload(&lifecycle, &slot, &stats))?;
+            writer.flush()?;
+            continue;
+        }
+        if let Some(rest) = msg.strip_prefix("LEARN ") {
+            writeln!(writer, "{}", handle_learn(rest, &lifecycle, &slot, &stats))?;
             writer.flush()?;
             continue;
         }
@@ -394,6 +575,91 @@ fn handle_conn(
     }
 }
 
+/// Handle RELOAD: re-serve the store's latest published version.
+fn handle_reload(
+    lifecycle: &Option<Arc<Lifecycle>>,
+    slot: &ModelSlot,
+    stats: &ServerStats,
+) -> String {
+    let Some(lc) = lifecycle else {
+        return "ERR no model store".into();
+    };
+    let Some(store) = &lc.store else {
+        return "ERR no model store".into();
+    };
+    match store.load_latest() {
+        Ok(Some((id, art))) => {
+            let serving = ServingModel { version: id, rank: art.rank(), model: art.model() };
+            // lock order: updater, then slot (matches handle_learn)
+            let mut up = lc.updater();
+            up.replace_artifact(art);
+            slot.swap(Arc::new(serving));
+            drop(up);
+            stats.swaps.fetch_add(1, Ordering::Relaxed);
+            format!("OK version={id}")
+        }
+        Ok(None) => "ERR empty store".into(),
+        Err(e) => format!("ERR reload failed: {e}"),
+    }
+}
+
+/// Handle one LEARN line (already stripped of the verb).
+fn handle_learn(
+    rest: &str,
+    lifecycle: &Option<Arc<Lifecycle>>,
+    slot: &ModelSlot,
+    stats: &ServerStats,
+) -> String {
+    let Some(lc) = lifecycle else {
+        return "ERR learning disabled".into();
+    };
+    let Some((labels, features)) = parse_learn(rest) else {
+        return "ERR bad request".into();
+    };
+    let mut up = lc.updater();
+    match up.push_example(features, labels) {
+        Ok(None) => {
+            stats.learned.fetch_add(1, Ordering::Relaxed);
+            format!("OK version={} pending={}", slot.get().version, up.pending_len())
+        }
+        Ok(Some(report)) => {
+            stats.learned.fetch_add(1, Ordering::Relaxed);
+            let art = up.artifact();
+            // The fold already happened, so the slot MUST follow the
+            // updater even if the store publish fails — otherwise the
+            // served model and the updater diverge, and an `ERR` reply
+            // would invite a client retry that double-folds the example.
+            // A failed publish is reported in-band via `unpublished=1`;
+            // the fold stays live in memory and the next successful
+            // publish persists it (folds are cumulative). The transient
+            // id lives in the top-bit space so a later real publish can
+            // never hand the same id to a different model.
+            let (version, unpublished) = match &lc.store {
+                Some(store) => match store.publish(art) {
+                    Ok(v) => (v, false),
+                    Err(_) => (next_transient_version(), true),
+                },
+                // no store: in-memory version bump so swaps stay observable
+                None => (slot.get().version + 1, false),
+            };
+            let serving = ServingModel { version, rank: art.rank(), model: art.model() };
+            slot.swap(Arc::new(serving));
+            stats.swaps.fetch_add(1, Ordering::Relaxed);
+            let mut reply = format!(
+                "OK version={version} pending=0 rows={} drift={:.3e} resolve={}",
+                report.rows,
+                report.drift_total,
+                report.needs_resolve as u8
+            );
+            if unpublished {
+                reply.push_str(" unpublished=1");
+            }
+            reply
+        }
+        Err(e) => format!("ERR {e}"),
+    }
+}
+
 /// Parse `SCORE <topk> j:v,j:v,...` (feature list may be empty).
 fn parse_score(msg: &str) -> Option<(usize, Vec<usize>, Vec<f64>)> {
     let rest = msg.strip_prefix("SCORE ")?;
@@ -405,18 +671,46 @@ fn parse_score(msg: &str) -> Option<(usize, Vec<usize>, Vec<f64>)> {
     let mut indices = Vec::new();
     let mut values = Vec::new();
     if let Some(feats) = parts.next() {
-        for tok in feats.split(',').filter(|t| !t.is_empty()) {
-            let (j, v) = tok.split_once(':')?;
-            indices.push(j.parse().ok()?);
-            let v: f64 = v.parse().ok()?;
-            // NaN/inf would poison the whole batch's score ordering
-            if !v.is_finite() {
-                return None;
-            }
-            values.push(v);
-        }
+        let (i, v) = parse_features(feats)?;
+        indices = i;
+        values = v;
     }
     Some((topk, indices, values))
+}
+
+/// Parse `<l1,l2,...|-> j:v,...` (the LEARN operands). The label token is
+/// required ("-" for an unlabeled example); the feature list may be empty.
+fn parse_learn(rest: &str) -> Option<(Vec<usize>, Vec<(usize, f64)>)> {
+    let mut parts = rest.splitn(2, ' ');
+    let label_tok = parts.next()?;
+    let mut labels = Vec::new();
+    if label_tok != "-" {
+        for tok in label_tok.split(',').filter(|t| !t.is_empty()) {
+            labels.push(tok.parse().ok()?);
+        }
+    }
+    let (indices, values) = match parts.next() {
+        Some(feats) => parse_features(feats)?,
+        None => (Vec::new(), Vec::new()),
+    };
+    Some((labels, indices.into_iter().zip(values).collect()))
+}
+
+/// Parse a `j:v,j:v,...` feature list (empty input is legal).
+fn parse_features(feats: &str) -> Option<(Vec<usize>, Vec<f64>)> {
+    let mut indices = Vec::new();
+    let mut values = Vec::new();
+    for tok in feats.split(',').filter(|t| !t.is_empty()) {
+        let (j, v) = tok.split_once(':')?;
+        indices.push(j.parse().ok()?);
+        let v: f64 = v.parse().ok()?;
+        // NaN/inf would poison the whole batch's score ordering
+        if !v.is_finite() {
+            return None;
+        }
+        values.push(v);
+    }
+    Some((indices, values))
 }
 
 /// Blocking client helper: one SCORE round-trip.
@@ -425,15 +719,8 @@ pub fn score_request(
     features: &[(usize, f64)],
     topk: usize,
 ) -> std::io::Result<Vec<(usize, f64)>> {
-    let stream = TcpStream::connect(addr)?;
-    let mut reader = BufReader::new(stream.try_clone()?);
-    let mut writer = BufWriter::new(stream);
     let body: Vec<String> = features.iter().map(|(j, v)| format!("{j}:{v}")).collect();
-    writeln!(writer, "SCORE {} {}", topk, body.join(","))?;
-    writer.flush()?;
-    let mut line = String::new();
-    reader.read_line(&mut line)?;
-    let line = line.trim();
+    let line = text_request(addr, &format!("SCORE {} {}", topk, body.join(",")))?;
     let rest = line.strip_prefix("OK ").ok_or_else(|| {
         std::io::Error::new(std::io::ErrorKind::InvalidData, format!("server said: {line}"))
     })?;
@@ -448,6 +735,20 @@ pub fn score_request(
         ));
     }
     Ok(out)
+}
+
+/// Blocking client helper: send one protocol line, return the reply line
+/// (trailing newline stripped). Used by the lifecycle verbs, the CLI smoke
+/// check, and the benches.
+pub fn text_request(addr: std::net::SocketAddr, line: &str) -> std::io::Result<String> {
+    let stream = TcpStream::connect(addr)?;
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut writer = BufWriter::new(stream);
+    writeln!(writer, "{line}")?;
+    writer.flush()?;
+    let mut reply = String::new();
+    reader.read_line(&mut reply)?;
+    Ok(reply.trim_end().to_string())
 }
 
 #[cfg(test)]
@@ -477,6 +778,23 @@ mod tests {
         let (k, idx, _) = parse_score("SCORE 2 ").unwrap();
         assert_eq!(k, 2);
         assert!(idx.is_empty());
+    }
+
+    #[test]
+    fn parse_learn_lines() {
+        let (labels, feats) = parse_learn("1,4 0:0.5,3:-2.0").unwrap();
+        assert_eq!(labels, vec![1, 4]);
+        assert_eq!(feats, vec![(0, 0.5), (3, -2.0)]);
+        // unlabeled example
+        let (labels, feats) = parse_learn("- 2:1.0").unwrap();
+        assert!(labels.is_empty());
+        assert_eq!(feats, vec![(2, 1.0)]);
+        // featureless example
+        let (labels, feats) = parse_learn("3").unwrap();
+        assert_eq!(labels, vec![3]);
+        assert!(feats.is_empty());
+        assert!(parse_learn("notalabel 0:1").is_none());
+        assert!(parse_learn("1 0:NaN").is_none());
     }
 
     #[test]
@@ -547,24 +865,51 @@ mod tests {
     fn ping_and_stats() {
         let m = model(5, 4);
         let server = ScoreServer::start(m, ServerConfig::default()).unwrap();
-        let stream = TcpStream::connect(server.addr).unwrap();
-        let mut reader = BufReader::new(stream.try_clone().unwrap());
-        let mut writer = BufWriter::new(stream);
-        writeln!(writer, "PING").unwrap();
-        writer.flush().unwrap();
-        let mut line = String::new();
-        reader.read_line(&mut line).unwrap();
-        assert_eq!(line.trim(), "PONG");
-        writeln!(writer, "STATS").unwrap();
-        writer.flush().unwrap();
-        line.clear();
-        reader.read_line(&mut line).unwrap();
-        assert!(line.starts_with("STATS served="), "{line}");
-        writeln!(writer, "garbage").unwrap();
-        writer.flush().unwrap();
-        line.clear();
-        reader.read_line(&mut line).unwrap();
-        assert!(line.starts_with("ERR"), "{line}");
+        assert_eq!(text_request(server.addr, "PING").unwrap(), "PONG");
+        let stats = text_request(server.addr, "STATS").unwrap();
+        assert!(stats.starts_with("STATS served="), "{stats}");
+        assert!(stats.contains(" rejected="), "{stats}");
+        assert!(stats.contains(" queue_depth="), "{stats}");
+        assert!(stats.contains(" swaps="), "{stats}");
+        let err = text_request(server.addr, "garbage").unwrap();
+        assert!(err.starts_with("ERR"), "{err}");
+        server.shutdown();
+    }
+
+    #[test]
+    fn version_verb_and_lifecycle_errors_without_store() {
+        let m = model(6, 3);
+        let server = ScoreServer::start(m, ServerConfig::default()).unwrap();
+        let v = text_request(server.addr, "VERSION").unwrap();
+        assert_eq!(v, "VERSION id=0 rank=0 features=6 labels=3 updates=0 pending=0");
+        assert_eq!(server.current_version(), 0);
+        let r = text_request(server.addr, "RELOAD").unwrap();
+        assert!(r.starts_with("ERR"), "{r}");
+        let l = text_request(server.addr, "LEARN 1 0:1.0").unwrap();
+        assert!(l.starts_with("ERR"), "{l}");
+        server.shutdown();
+    }
+
+    #[test]
+    fn model_slot_swaps_between_batches() {
+        // serve z1, swap in z2 through the slot, and check both answers
+        let m1 = model(4, 3);
+        let server = ScoreServer::start(m1, ServerConfig::default()).unwrap();
+        let before = score_request(server.addr, &[(0, 1.0)], 1).unwrap();
+        let mut rng = Rng::seed_from_u64(99);
+        let z2 = Matrix::randn(4, 3, &mut rng);
+        server.slot.swap(Arc::new(ServingModel {
+            version: 7,
+            rank: 0,
+            model: MultiLabelModel { z: z2.clone() },
+        }));
+        assert_eq!(server.current_version(), 7);
+        let after = score_request(server.addr, &[(0, 1.0)], 1).unwrap();
+        let best = top_k_indices(z2.row(0), 1)[0];
+        assert_eq!(after[0].0, best);
+        assert!((after[0].1 - z2[(0, best)]).abs() < 1e-5);
+        // the pre-swap answer reflected the old model, not the new one
+        assert!(before[0].0 != after[0].0 || (before[0].1 - after[0].1).abs() > 1e-12);
         server.shutdown();
     }
 }

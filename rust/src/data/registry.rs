@@ -92,23 +92,13 @@ pub fn load_dataset(name: &str, scale: f64, seed: u64, cache: Option<&Path>) -> 
     }
 
     let cfg = spec.scaled(scale);
-    let mut rng = Rng::seed_from_u64(seed ^ fxhash(name));
+    let mut rng = Rng::seed_from_u64(seed ^ crate::util::hash::fnv1a(name.as_bytes()));
     let (a, y) = generate(&cfg, &mut rng);
     if std::fs::create_dir_all(&cache_dir).is_ok() {
         let _ = sio::write_binary(&a_path, &a);
         let _ = sio::write_binary(&y_path, &y);
     }
     Ok(Dataset { name: name.to_string(), scale, a, y, k: spec.k })
-}
-
-/// Tiny string hash so each dataset gets an independent stream per seed.
-fn fxhash(s: &str) -> u64 {
-    let mut h = 0xcbf29ce484222325u64;
-    for b in s.bytes() {
-        h ^= b as u64;
-        h = h.wrapping_mul(0x100000001b3);
-    }
-    h
 }
 
 #[cfg(test)]

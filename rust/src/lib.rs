@@ -9,8 +9,10 @@
 //!   hub-and-spoke matrix reordering, block-diagonal SVD, incremental
 //!   low-rank SVD updates, pseudoinverse construction, the multi-label
 //!   regression application, all baselines (RandPI / KrylovPI / frPCA),
-//!   synthetic dataset generators, a pipeline coordinator, and a scoring
-//!   server. Python never runs on any execution path.
+//!   synthetic dataset generators, a pipeline coordinator, a scoring
+//!   server, and a model lifecycle subsystem (versioned on-disk store,
+//!   online incremental updates, zero-downtime hot swap). Python never runs
+//!   on any execution path.
 //! * **Layer 2/1 (python/, build-time only)** — JAX entry points over a
 //!   Pallas tiled-GEMM kernel, AOT-lowered to HLO text that
 //!   [`runtime`] loads through PJRT (`xla` crate) for artifact-backed GEMM.
@@ -25,6 +27,7 @@ pub mod dense;
 pub mod error;
 pub mod graph;
 pub mod harness;
+pub mod model;
 pub mod pinv;
 pub mod regress;
 pub mod reorder;

@@ -1,0 +1,428 @@
+//! The `FPIM` on-disk model format.
+//!
+//! A trained model is the full serving + lifecycle state: the low-rank SVD
+//! factors `U/Σ/Vᵀ` (original coordinates), the pseudoinverse diagonal
+//! `Σ⁺` (reciprocal singular values with the rcond cutoff applied — together
+//! with `U/Vᵀ` this *is* the factored `A† = VΣ⁺Uᵀ`), the projected label
+//! matrix `C = UᵀY` that incremental updates fold forward, the trained
+//! coefficients `Z = A†Y`, and the metadata needed to resume the lifecycle
+//! (dataset identity, α, hub ratio k, seed, row cursor, drift counters).
+//!
+//! Layout (all integers and floats little-endian, following the
+//! `sparse/io.rs::write_binary` idiom):
+//!
+//! ```text
+//! magic    "FPIM"                     4 bytes
+//! version  u32                        format version (currently 1)
+//! length   u64                        payload byte count
+//! checksum u64                        FNV-1a over the payload bytes
+//! payload:
+//!   dataset   u64 len + utf-8 bytes
+//!   scale alpha k                     f64 ×3
+//!   seed rows_trained dataset_rows rows_since_solve updates_applied   u64 ×5
+//!   drift                             f64
+//!   m n labels rank                   u64 ×4
+//!   U         m·rank f64 (row-major)
+//!   sigma     rank f64
+//!   Vᵀ        rank·n f64 (row-major)
+//!   sigma⁺    rank f64
+//!   C         rank·labels f64 (row-major)
+//!   Z         n·labels f64 (row-major)
+//! ```
+//!
+//! `f64::to_le_bytes`/`from_le_bytes` are lossless, so a save→load
+//! round-trip is bitwise-identical — the property the hot-swap serving path
+//! relies on (`RELOAD` of the same version must not change a single score).
+
+use crate::dense::{matmul, Matrix, Svd};
+use crate::error::{Error, Result};
+use crate::regress::MultiLabelModel;
+use crate::sparse::Csr;
+use std::io::{BufWriter, Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 4] = b"FPIM";
+const FORMAT_VERSION: u32 = 1;
+/// Relative singular-value cutoff used when (re)building Σ⁺.
+pub const PINV_RCOND: f64 = 1e-12;
+
+/// Lifecycle metadata carried with every model.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelMeta {
+    /// registry dataset the model was trained on ("" when trained from files)
+    pub dataset: String,
+    pub scale: f64,
+    /// target rank ratio α the factorization was computed at
+    pub alpha: f64,
+    /// hub selection ratio for FastPI's reordering
+    pub k: f64,
+    pub seed: u64,
+    /// total rows folded into the factorization (training prefix + every
+    /// update, whatever its source) — always equals U's row count
+    pub rows_trained: u64,
+    /// rows consumed *from the registry dataset* — the cursor the `update`
+    /// command resumes from. Ad-hoc `LEARN` examples and `--rows` files
+    /// advance `rows_trained` but not this, so they never skip held-out
+    /// dataset rows.
+    pub dataset_rows: u64,
+    /// rows folded in since the last full FastPI solve
+    pub rows_since_solve: u64,
+    /// incremental batches applied since the last full solve
+    pub updates_applied: u64,
+    /// accumulated relative truncation drift since the last full solve
+    pub drift: f64,
+}
+
+/// A complete trained model: factors, pseudoinverse diagonal, projected
+/// labels, coefficients, and lifecycle metadata.
+#[derive(Debug, Clone)]
+pub struct ModelArtifact {
+    pub meta: ModelMeta,
+    /// rank-r SVD of the (implicit) accumulated feature matrix A (m×n)
+    pub svd: Svd,
+    /// Σ⁺ diagonal: reciprocal singular values with the rcond cutoff
+    pub s_inv: Vec<f64>,
+    /// projected labels C = UᵀY (r×L) — the state incremental updates carry
+    pub c: Matrix,
+    /// trained coefficients Z = A†Y = VΣ⁺C (n×L)
+    pub z: Matrix,
+}
+
+/// Σ⁺ diagonal from singular values (the `Pinv::from_svd_rcond` cutoff).
+pub fn pinv_diagonal(s: &[f64], rcond: f64) -> Vec<f64> {
+    let smax = s.first().copied().unwrap_or(0.0);
+    let tol = smax * rcond;
+    s.iter().map(|&x| if x > tol && x > 0.0 { 1.0 / x } else { 0.0 }).collect()
+}
+
+impl ModelArtifact {
+    /// Package a freshly computed factorization and its training labels.
+    ///
+    /// Computes C = UᵀY and Z = VΣ⁺C through the exact operations
+    /// `MultiLabelModel::train` performs, so the packaged Z is
+    /// bitwise-identical to the one-shot training path.
+    pub fn from_training(meta: ModelMeta, svd: Svd, y_train: &Csr) -> ModelArtifact {
+        assert_eq!(y_train.rows(), svd.u.rows(), "label rows must match U rows");
+        let s_inv = pinv_diagonal(&svd.s, PINV_RCOND);
+        // C = UᵀY, computed sparse-side as (YᵀU)ᵀ like Pinv::apply_sparse
+        let c = y_train.spmm_t(&svd.u).transpose();
+        let z = matmul(&svd.vt.transpose(), &c.scale_rows(&s_inv));
+        ModelArtifact { meta, svd, s_inv, c, z }
+    }
+
+    /// The serving-side view of this model.
+    pub fn model(&self) -> MultiLabelModel {
+        MultiLabelModel { z: self.z.clone() }
+    }
+
+    pub fn rank(&self) -> usize {
+        self.svd.rank()
+    }
+
+    /// (rows seen, features, labels).
+    pub fn shape(&self) -> (usize, usize, usize) {
+        (self.svd.u.rows(), self.svd.vt.cols(), self.z.cols())
+    }
+}
+
+use crate::util::hash::fnv1a;
+
+fn push_u64(buf: &mut Vec<u8>, x: u64) {
+    buf.extend_from_slice(&x.to_le_bytes());
+}
+
+fn push_f64(buf: &mut Vec<u8>, x: f64) {
+    buf.extend_from_slice(&x.to_le_bytes());
+}
+
+fn push_f64s(buf: &mut Vec<u8>, xs: &[f64]) {
+    buf.reserve(xs.len() * 8);
+    for &x in xs {
+        buf.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+/// Sequential payload reader with bounds checking.
+struct Cursor<'a> {
+    buf: &'a [u8],
+    off: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.off + n > self.buf.len() {
+            return Err(Error::Invalid("FPIM payload truncated".into()));
+        }
+        let s = &self.buf[self.off..self.off + n];
+        self.off += n;
+        Ok(s)
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f64s(&mut self, n: usize) -> Result<Vec<f64>> {
+        let raw = self.take(n * 8)?;
+        Ok(raw.chunks_exact(8).map(|c| f64::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+}
+
+/// Serialize a model to its payload bytes (header excluded).
+fn encode_payload(a: &ModelArtifact) -> Vec<u8> {
+    let (m, n, labels) = a.shape();
+    let rank = a.rank();
+    let mut p = Vec::new();
+    push_u64(&mut p, a.meta.dataset.len() as u64);
+    p.extend_from_slice(a.meta.dataset.as_bytes());
+    push_f64(&mut p, a.meta.scale);
+    push_f64(&mut p, a.meta.alpha);
+    push_f64(&mut p, a.meta.k);
+    push_u64(&mut p, a.meta.seed);
+    push_u64(&mut p, a.meta.rows_trained);
+    push_u64(&mut p, a.meta.dataset_rows);
+    push_u64(&mut p, a.meta.rows_since_solve);
+    push_u64(&mut p, a.meta.updates_applied);
+    push_f64(&mut p, a.meta.drift);
+    for d in [m, n, labels, rank] {
+        push_u64(&mut p, d as u64);
+    }
+    push_f64s(&mut p, a.svd.u.data());
+    push_f64s(&mut p, &a.svd.s);
+    push_f64s(&mut p, a.svd.vt.data());
+    push_f64s(&mut p, &a.s_inv);
+    push_f64s(&mut p, a.c.data());
+    push_f64s(&mut p, a.z.data());
+    p
+}
+
+/// Write a model file (not atomic — the store handles temp-file + rename).
+pub fn write_model(path: &Path, a: &ModelArtifact) -> Result<()> {
+    let payload = encode_payload(a);
+    let f = std::fs::File::create(path)?;
+    let mut w = BufWriter::new(f);
+    w.write_all(MAGIC)?;
+    w.write_all(&FORMAT_VERSION.to_le_bytes())?;
+    w.write_all(&(payload.len() as u64).to_le_bytes())?;
+    w.write_all(&fnv1a(&payload).to_le_bytes())?;
+    w.write_all(&payload)?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Read and validate a model file (magic, format version, length, checksum).
+pub fn read_model(path: &Path) -> Result<ModelArtifact> {
+    let mut f = std::fs::File::open(path)?;
+    let mut buf = Vec::new();
+    f.read_to_end(&mut buf)?;
+    if buf.len() < 24 || &buf[..4] != MAGIC {
+        return Err(Error::Invalid(format!("{}: not an FPIM model", path.display())));
+    }
+    let version = u32::from_le_bytes(buf[4..8].try_into().unwrap());
+    if version != FORMAT_VERSION {
+        return Err(Error::Invalid(format!(
+            "{}: FPIM format version {version} (this build reads {FORMAT_VERSION})",
+            path.display()
+        )));
+    }
+    let len = u64::from_le_bytes(buf[8..16].try_into().unwrap()) as usize;
+    let checksum = u64::from_le_bytes(buf[16..24].try_into().unwrap());
+    let payload = &buf[24..];
+    if payload.len() != len {
+        return Err(Error::Invalid(format!(
+            "{}: FPIM length mismatch ({} vs {len})",
+            path.display(),
+            payload.len()
+        )));
+    }
+    if fnv1a(payload) != checksum {
+        return Err(Error::Invalid(format!("{}: FPIM checksum mismatch", path.display())));
+    }
+
+    let mut cur = Cursor { buf: payload, off: 0 };
+    let ds_len = cur.u64()? as usize;
+    let dataset = String::from_utf8(cur.take(ds_len)?.to_vec())
+        .map_err(|_| Error::Invalid("FPIM dataset name is not utf-8".into()))?;
+    let scale = cur.f64()?;
+    let alpha = cur.f64()?;
+    let k = cur.f64()?;
+    let seed = cur.u64()?;
+    let rows_trained = cur.u64()?;
+    let dataset_rows = cur.u64()?;
+    let rows_since_solve = cur.u64()?;
+    let updates_applied = cur.u64()?;
+    let drift = cur.f64()?;
+    let m = cur.u64()? as usize;
+    let n = cur.u64()? as usize;
+    let labels = cur.u64()? as usize;
+    let rank = cur.u64()? as usize;
+    // dimensions are untrusted input: checked arithmetic so oversized
+    // values are rejected instead of wrapping past the size check
+    let expect = m
+        .checked_mul(rank)
+        .and_then(|x| x.checked_add(rank))
+        .and_then(|x| rank.checked_mul(n).and_then(|y| x.checked_add(y)))
+        .and_then(|x| x.checked_add(rank))
+        .and_then(|x| rank.checked_mul(labels).and_then(|y| x.checked_add(y)))
+        .and_then(|x| n.checked_mul(labels).and_then(|y| x.checked_add(y)))
+        .and_then(|x| x.checked_mul(8))
+        .ok_or_else(|| {
+            Error::Invalid(format!("{}: FPIM dimensions overflow", path.display()))
+        })?;
+    if cur.buf.len() - cur.off != expect {
+        return Err(Error::Invalid(format!(
+            "{}: FPIM body mismatch: {} bytes left, {expect} expected",
+            path.display(),
+            cur.buf.len() - cur.off,
+        )));
+    }
+    let u = Matrix::from_vec(m, rank, cur.f64s(m * rank)?);
+    let s = cur.f64s(rank)?;
+    let vt = Matrix::from_vec(rank, n, cur.f64s(rank * n)?);
+    let s_inv = cur.f64s(rank)?;
+    let c = Matrix::from_vec(rank, labels, cur.f64s(rank * labels)?);
+    let z = Matrix::from_vec(n, labels, cur.f64s(n * labels)?);
+    Ok(ModelArtifact {
+        meta: ModelMeta {
+            dataset,
+            scale,
+            alpha,
+            k,
+            seed,
+            rows_trained,
+            dataset_rows,
+            rows_since_solve,
+            updates_applied,
+            drift,
+        },
+        svd: Svd { u, s, vt },
+        s_inv,
+        c,
+        z,
+    })
+}
+
+#[cfg(test)]
+pub(crate) mod testutil {
+    use super::*;
+    use crate::sparse::{Coo, Csr};
+    use crate::util::rng::Rng;
+
+    /// Small random artifact for format/store/updater tests.
+    pub fn sample_artifact(seed: u64, m: usize, n: usize, labels: usize, rank: usize) -> ModelArtifact {
+        let mut rng = Rng::seed_from_u64(seed);
+        let a = Matrix::randn(m, n, &mut rng);
+        let svd = crate::dense::svd(&a).truncate(rank);
+        let mut coo = Coo::new(m, labels);
+        for i in 0..m {
+            coo.push(i, rng.usize_below(labels), 1.0);
+        }
+        let y = Csr::from_coo(&coo);
+        let meta = ModelMeta {
+            dataset: "unit".into(),
+            scale: 0.5,
+            alpha: rank as f64 / n as f64,
+            k: 0.01,
+            seed,
+            rows_trained: m as u64,
+            dataset_rows: m as u64,
+            rows_since_solve: 0,
+            updates_applied: 0,
+            drift: 0.0,
+        };
+        ModelArtifact::from_training(meta, svd, &y)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::testutil::sample_artifact;
+    use super::*;
+    use crate::pinv::Pinv;
+    use crate::sparse::Coo;
+    use crate::util::rng::Rng;
+
+    fn tmpdir(name: &str) -> std::path::PathBuf {
+        let d = std::env::temp_dir().join(format!("fastpi_model_{name}"));
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn roundtrip_is_bitwise_identical() {
+        let a = sample_artifact(11, 20, 8, 5, 4);
+        let path = tmpdir("fmt_rt").join("m.fpim");
+        write_model(&path, &a).unwrap();
+        let b = read_model(&path).unwrap();
+        assert_eq!(a.meta, b.meta);
+        assert_eq!(a.svd.u.data(), b.svd.u.data());
+        assert_eq!(a.svd.s, b.svd.s);
+        assert_eq!(a.svd.vt.data(), b.svd.vt.data());
+        assert_eq!(a.s_inv, b.s_inv);
+        assert_eq!(a.c.data(), b.c.data());
+        assert_eq!(a.z.data(), b.z.data());
+        assert_eq!(a.shape(), b.shape());
+    }
+
+    #[test]
+    fn packaged_z_matches_one_shot_training() {
+        let mut rng = Rng::seed_from_u64(3);
+        let a = Matrix::randn(25, 7, &mut rng);
+        let svd = crate::dense::svd(&a);
+        let mut coo = Coo::new(25, 6);
+        for i in 0..25 {
+            coo.push(i, i % 6, 1.0);
+        }
+        let y = crate::sparse::Csr::from_coo(&coo);
+        let meta = ModelMeta {
+            dataset: String::new(),
+            scale: 1.0,
+            alpha: 1.0,
+            k: 0.01,
+            seed: 3,
+            rows_trained: 25,
+            dataset_rows: 25,
+            rows_since_solve: 0,
+            updates_applied: 0,
+            drift: 0.0,
+        };
+        let art = ModelArtifact::from_training(meta, svd.clone(), &y);
+        let (model, _) = MultiLabelModel::train(&Pinv::from_svd(&svd), &y);
+        assert_eq!(art.z.data(), model.z.data(), "Z must be bitwise-identical to train()");
+    }
+
+    #[test]
+    fn rejects_corruption_and_wrong_version() {
+        let a = sample_artifact(12, 10, 5, 4, 3);
+        let dir = tmpdir("fmt_bad");
+        let path = dir.join("m.fpim");
+        write_model(&path, &a).unwrap();
+
+        // flip one payload byte → checksum must catch it
+        let mut bytes = std::fs::read(&path).unwrap();
+        let last = bytes.len() - 1;
+        bytes[last] ^= 0x40;
+        let bad = dir.join("corrupt.fpim");
+        std::fs::write(&bad, &bytes).unwrap();
+        assert!(read_model(&bad).is_err(), "corruption must be detected");
+
+        // wrong format version
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes[4] = 99;
+        std::fs::write(&bad, &bytes).unwrap();
+        assert!(read_model(&bad).is_err(), "future version must be rejected");
+
+        // truncation
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&bad, &bytes[..bytes.len() / 2]).unwrap();
+        assert!(read_model(&bad).is_err(), "truncation must be detected");
+
+        // garbage
+        std::fs::write(&bad, b"definitely not a model").unwrap();
+        assert!(read_model(&bad).is_err());
+    }
+}

@@ -1,0 +1,26 @@
+//! Model lifecycle subsystem: persistence, versioning, and online updates.
+//!
+//! Three layers (see `README.md` in this directory for the full flow):
+//!
+//! * [`format`] — the zero-dependency `FPIM` binary model format: SVD
+//!   factors, pseudoinverse diagonal, projected labels `C = UᵀY`, trained
+//!   coefficients `Z`, and lifecycle metadata, checksummed and
+//!   bitwise-round-trippable.
+//! * [`store`] — a directory-backed versioned store with a `MANIFEST`
+//!   pointer, monotonically increasing version ids, atomic publish via
+//!   temp-file + rename, and GC of old versions.
+//! * [`updater`] — the online incremental updater that folds new labeled
+//!   rows into the live factorization (paper Eq. 2), retrains `Z` in closed
+//!   form, and tracks truncation drift against a full re-solve threshold.
+//!
+//! The serving side (`coordinator/serve.rs`) holds the current model in a
+//! swap slot the batcher re-reads every batch, so a newly published version
+//! goes live between two batches with zero downtime.
+
+pub mod format;
+pub mod store;
+pub mod updater;
+
+pub use format::{read_model, write_model, ModelArtifact, ModelMeta};
+pub use store::ModelStore;
+pub use updater::{OnlineUpdater, UpdateReport, UpdaterConfig};

@@ -1,0 +1,294 @@
+//! Directory-backed versioned model store.
+//!
+//! Layout:
+//!
+//! ```text
+//! <dir>/
+//!   MANIFEST          text: "latest=<id>\n" — the published pointer
+//!   v000001.fpim      immutable model versions (monotonically increasing)
+//!   v000002.fpim
+//! ```
+//!
+//! Publishing is atomic: the model is written to a hidden temp file in the
+//! same directory, `rename(2)`d to its final `vNNNNNN.fpim` name, and only
+//! then is the MANIFEST pointer swapped (also via temp-file + rename). A
+//! reader that races a publish sees either the old latest or the new one,
+//! never a half-written file. Version ids never regress, even across
+//! process restarts and `gc` — the next id is one past the maximum of the
+//! MANIFEST pointer and every version file present.
+
+use super::format::{read_model, write_model, ModelArtifact};
+use crate::error::{Error, Result};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+const MANIFEST: &str = "MANIFEST";
+/// Per-process temp-file disambiguator (two threads publishing to the same
+/// directory must not share a temp name).
+static TMP_SEQ: AtomicU64 = AtomicU64::new(0);
+
+/// Handle to a model directory.
+#[derive(Debug)]
+pub struct ModelStore {
+    dir: PathBuf,
+}
+
+impl ModelStore {
+    /// Open (creating if needed) a store directory.
+    pub fn open(dir: &Path) -> Result<ModelStore> {
+        std::fs::create_dir_all(dir)?;
+        Ok(ModelStore { dir: dir.to_path_buf() })
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    fn version_path(&self, id: u64) -> PathBuf {
+        self.dir.join(format!("v{id:06}.fpim"))
+    }
+
+    /// Version ids present on disk, ascending.
+    pub fn versions(&self) -> Result<Vec<u64>> {
+        let mut ids = Vec::new();
+        for entry in std::fs::read_dir(&self.dir)? {
+            let name = entry?.file_name();
+            let name = name.to_string_lossy();
+            if let Some(id) = name.strip_prefix('v').and_then(|r| r.strip_suffix(".fpim")) {
+                if let Ok(id) = id.parse::<u64>() {
+                    ids.push(id);
+                }
+            }
+        }
+        ids.sort_unstable();
+        Ok(ids)
+    }
+
+    /// The MANIFEST pointer, if present and parseable.
+    fn manifest_version(&self) -> Option<u64> {
+        let text = std::fs::read_to_string(self.dir.join(MANIFEST)).ok()?;
+        text.lines().find_map(|l| l.trim().strip_prefix("latest=")?.parse().ok())
+    }
+
+    /// The published latest version id, if any. Prefers the MANIFEST
+    /// pointer; falls back to the newest version file (recovering from a
+    /// crash between the version rename and the MANIFEST swap).
+    pub fn latest_version(&self) -> Result<Option<u64>> {
+        let from_files = self.versions()?.last().copied();
+        if let Some(id) = self.manifest_version() {
+            if self.version_path(id).exists() {
+                // a crash after publishing vN+1 but before the MANIFEST
+                // swap leaves the pointer one behind; the newer complete
+                // file wins
+                return Ok(Some(from_files.unwrap_or(id).max(id)));
+            }
+        }
+        Ok(from_files)
+    }
+
+    /// Load a specific version.
+    pub fn load(&self, id: u64) -> Result<ModelArtifact> {
+        read_model(&self.version_path(id))
+    }
+
+    /// Load the latest published version, if any. If the newest version
+    /// file is unreadable (a concurrent publish has reserved the id but
+    /// not yet renamed the payload into place), falls back to the MANIFEST
+    /// pointer, which only ever names fully published versions.
+    pub fn load_latest(&self) -> Result<Option<(u64, ModelArtifact)>> {
+        let Some(id) = self.latest_version()? else {
+            return Ok(None);
+        };
+        match self.load(id) {
+            Ok(a) => Ok(Some((id, a))),
+            Err(e) => match self.manifest_version() {
+                Some(mid) if mid < id => Ok(Some((mid, self.load(mid)?))),
+                _ => Err(e),
+            },
+        }
+    }
+
+    /// Atomically publish a new version; returns its id.
+    ///
+    /// Safe against concurrent publishers (e.g. a serving process folding
+    /// `LEARN` examples while an operator runs `fastpi update` on the same
+    /// directory): the version id is *reserved* by exclusively creating
+    /// the destination file (`create_new`), so two racing publishers get
+    /// distinct ids instead of the second silently renaming over the
+    /// first. The payload then replaces the reservation via `rename(2)`,
+    /// and only after that does the MANIFEST pointer move.
+    pub fn publish(&self, artifact: &ModelArtifact) -> Result<u64> {
+        let tmp = self.dir.join(format!(
+            ".tmp-{}-{}",
+            std::process::id(),
+            TMP_SEQ.fetch_add(1, Ordering::Relaxed)
+        ));
+        write_model(&tmp, artifact)?;
+        let mut id = match self.latest_version() {
+            Ok(v) => v.unwrap_or(0) + 1,
+            Err(e) => {
+                let _ = std::fs::remove_file(&tmp);
+                return Err(e);
+            }
+        };
+        loop {
+            match std::fs::OpenOptions::new()
+                .write(true)
+                .create_new(true)
+                .open(self.version_path(id))
+            {
+                Ok(_) => break,
+                Err(e) if e.kind() == std::io::ErrorKind::AlreadyExists => id += 1,
+                Err(e) => {
+                    let _ = std::fs::remove_file(&tmp);
+                    return Err(Error::Io(e));
+                }
+            }
+        }
+        std::fs::rename(&tmp, self.version_path(id)).map_err(|e| {
+            let _ = std::fs::remove_file(&tmp);
+            let _ = std::fs::remove_file(self.version_path(id));
+            Error::Io(e)
+        })?;
+        self.write_manifest(id)?;
+        Ok(id)
+    }
+
+    fn write_manifest(&self, id: u64) -> Result<()> {
+        let tmp = self.dir.join(format!(
+            ".tmp-manifest-{}-{}",
+            std::process::id(),
+            TMP_SEQ.fetch_add(1, Ordering::Relaxed)
+        ));
+        std::fs::write(&tmp, format!("latest={id}\n"))?;
+        std::fs::rename(&tmp, self.dir.join(MANIFEST))?;
+        Ok(())
+    }
+
+    /// Delete all but the newest `keep` versions. The MANIFEST-pointed
+    /// version is never deleted: the newest scanned id can be a concurrent
+    /// publisher's not-yet-complete reservation, and deleting the pointed
+    /// version under it would leave the store with no readable model if
+    /// that publisher dies. Returns how many files were removed.
+    pub fn gc(&self, keep: usize) -> Result<usize> {
+        let ids = self.versions()?;
+        let keep = keep.max(1);
+        if ids.len() <= keep {
+            return Ok(0);
+        }
+        let pinned = self.manifest_version();
+        let mut removed = 0;
+        for &id in &ids[..ids.len() - keep] {
+            if Some(id) == pinned {
+                continue;
+            }
+            std::fs::remove_file(self.version_path(id))?;
+            removed += 1;
+        }
+        Ok(removed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::format::testutil::sample_artifact;
+    use super::*;
+
+    fn fresh_dir(name: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("fastpi_store_{name}"));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    #[test]
+    fn publish_load_latest_roundtrip() {
+        let dir = fresh_dir("rt");
+        let store = ModelStore::open(&dir).unwrap();
+        assert!(store.load_latest().unwrap().is_none());
+
+        let a1 = sample_artifact(1, 12, 6, 4, 3);
+        let v1 = store.publish(&a1).unwrap();
+        assert_eq!(v1, 1);
+        let (id, got) = store.load_latest().unwrap().unwrap();
+        assert_eq!(id, 1);
+        assert_eq!(got.z.data(), a1.z.data());
+
+        let a2 = sample_artifact(2, 12, 6, 4, 3);
+        let v2 = store.publish(&a2).unwrap();
+        assert_eq!(v2, 2);
+        let (id, got) = store.load_latest().unwrap().unwrap();
+        assert_eq!(id, 2);
+        assert_eq!(got.z.data(), a2.z.data());
+        // older version stays addressable
+        assert_eq!(store.load(1).unwrap().z.data(), a1.z.data());
+    }
+
+    #[test]
+    fn version_ids_survive_reopen_and_never_regress() {
+        let dir = fresh_dir("mono");
+        {
+            let store = ModelStore::open(&dir).unwrap();
+            store.publish(&sample_artifact(1, 10, 5, 4, 2)).unwrap();
+            store.publish(&sample_artifact(2, 10, 5, 4, 2)).unwrap();
+        }
+        let store = ModelStore::open(&dir).unwrap();
+        assert_eq!(store.latest_version().unwrap(), Some(2));
+        assert_eq!(store.publish(&sample_artifact(3, 10, 5, 4, 2)).unwrap(), 3);
+        assert_eq!(store.versions().unwrap(), vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn gc_keeps_newest() {
+        let dir = fresh_dir("gc");
+        let store = ModelStore::open(&dir).unwrap();
+        for s in 0..5 {
+            store.publish(&sample_artifact(s, 10, 5, 4, 2)).unwrap();
+        }
+        let removed = store.gc(2).unwrap();
+        assert_eq!(removed, 3);
+        assert_eq!(store.versions().unwrap(), vec![4, 5]);
+        assert_eq!(store.latest_version().unwrap(), Some(5));
+        // gc(0) still keeps the latest
+        let removed = store.gc(0).unwrap();
+        assert_eq!(removed, 1);
+        assert_eq!(store.versions().unwrap(), vec![5]);
+        // ids keep increasing after gc
+        assert_eq!(store.publish(&sample_artifact(9, 10, 5, 4, 2)).unwrap(), 6);
+    }
+
+    #[test]
+    fn publish_never_clobbers_a_reserved_id() {
+        let dir = fresh_dir("reserve");
+        let store = ModelStore::open(&dir).unwrap();
+        store.publish(&sample_artifact(1, 10, 5, 4, 2)).unwrap();
+        // simulate a concurrent publisher that has reserved v2 but not yet
+        // renamed its payload into place
+        std::fs::write(dir.join("v000002.fpim"), b"").unwrap();
+        let id = store.publish(&sample_artifact(2, 10, 5, 4, 2)).unwrap();
+        assert_eq!(id, 3, "racing publisher must take the next id, not replace v2");
+        assert_eq!(store.load_latest().unwrap().unwrap().0, 3);
+        // a reader that scans the reservation as newest falls back to the
+        // MANIFEST pointer instead of erroring
+        std::fs::remove_file(dir.join("v000003.fpim")).unwrap();
+        std::fs::write(dir.join("MANIFEST"), "latest=1\n").unwrap();
+        let (id, _) = store.load_latest().unwrap().unwrap();
+        assert_eq!(id, 1, "unreadable newest file must fall back to the manifest");
+    }
+
+    #[test]
+    fn recovers_when_manifest_lags_or_is_missing() {
+        let dir = fresh_dir("recover");
+        let store = ModelStore::open(&dir).unwrap();
+        store.publish(&sample_artifact(1, 10, 5, 4, 2)).unwrap();
+        store.publish(&sample_artifact(2, 10, 5, 4, 2)).unwrap();
+        // crash scenario 1: MANIFEST deleted → newest file wins
+        std::fs::remove_file(dir.join("MANIFEST")).unwrap();
+        assert_eq!(store.latest_version().unwrap(), Some(2));
+        // crash scenario 2: MANIFEST points one behind → newer file wins
+        std::fs::write(dir.join("MANIFEST"), "latest=1\n").unwrap();
+        assert_eq!(store.latest_version().unwrap(), Some(2));
+        // stale pointer to a GC'd file → existing files win
+        std::fs::write(dir.join("MANIFEST"), "latest=7\n").unwrap();
+        assert_eq!(store.latest_version().unwrap(), Some(2));
+    }
+}

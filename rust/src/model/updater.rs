@@ -1,0 +1,447 @@
+//! Online incremental model updates — the serving-lifecycle form of the
+//! paper's Eq. (2).
+//!
+//! The updater owns the live [`ModelArtifact`] and folds batches of new
+//! `(feature_row, label_row)` examples into it:
+//!
+//! 1. the feature rows are folded into the factorization with
+//!    [`update_rows_detailed`] (one small SVD + one GEMM, the paper's
+//!    incremental machinery — all GEMMs route through the shared worker
+//!    pool, see `runtime/README.md`);
+//! 2. the projected label matrix `C = UᵀY` is carried across the basis
+//!    change as `C ← Ũ_topᵀC + Ũ_botᵀY_new` — an exact identity, so the
+//!    model never needs to revisit old labels;
+//! 3. `Σ⁺` is refreshed with the rcond cutoff and the coefficients are
+//!    retrained in closed form: `Z = VΣ⁺C`.
+//!
+//! Every truncated fold discards a little spectral mass. The updater
+//! accumulates that *relative truncation drift* (plus a row counter) and
+//! reports when the configured threshold is crossed, signalling that a full
+//! FastPI re-solve should replace the incrementally maintained model.
+
+use super::format::{pinv_diagonal, ModelArtifact, PINV_RCOND};
+use crate::dense::{matmul, matmul_tn};
+use crate::error::{Error, Result};
+use crate::sparse::{Coo, Csr};
+use crate::svdlr::incremental::update_rows_detailed;
+use crate::svdlr::InnerSvd;
+use crate::util::rng::Rng;
+
+/// Updater tuning knobs.
+#[derive(Debug, Clone)]
+pub struct UpdaterConfig {
+    /// inner SVD engine for the incremental folds
+    pub inner: InnerSvd,
+    /// fold buffered `LEARN` examples once this many are pending
+    pub learn_batch: usize,
+    /// flag a full re-solve after this many rows folded in (0 = never)
+    pub resolve_rows: usize,
+    /// flag a full re-solve once accumulated drift exceeds this (0 = never)
+    pub resolve_drift: f64,
+}
+
+impl Default for UpdaterConfig {
+    fn default() -> Self {
+        UpdaterConfig {
+            inner: InnerSvd::Auto,
+            learn_batch: 1,
+            resolve_rows: 0,
+            resolve_drift: 0.05,
+        }
+    }
+}
+
+/// What one incremental fold did.
+#[derive(Debug, Clone)]
+pub struct UpdateReport {
+    /// rows folded in by this batch
+    pub rows: usize,
+    /// model rank after the fold
+    pub rank: usize,
+    /// drift contributed by this fold
+    pub drift_inc: f64,
+    /// accumulated drift since the last full solve
+    pub drift_total: f64,
+    /// wall-clock of the fold (SVD + C carry + Z retrain)
+    pub secs: f64,
+    /// true once a configured re-solve threshold is crossed
+    pub needs_resolve: bool,
+}
+
+/// One buffered `LEARN` example.
+#[derive(Debug, Clone)]
+struct PendingExample {
+    features: Vec<(usize, f64)>,
+    labels: Vec<usize>,
+}
+
+/// Owns the live model and folds new examples into it.
+#[derive(Debug)]
+pub struct OnlineUpdater {
+    artifact: ModelArtifact,
+    cfg: UpdaterConfig,
+    pending: Vec<PendingExample>,
+}
+
+impl OnlineUpdater {
+    pub fn new(artifact: ModelArtifact, cfg: UpdaterConfig) -> OnlineUpdater {
+        OnlineUpdater { artifact, cfg, pending: Vec::new() }
+    }
+
+    /// The live model state.
+    pub fn artifact(&self) -> &ModelArtifact {
+        &self.artifact
+    }
+
+    /// Replace the live model (e.g. after an external publish + `RELOAD`).
+    /// Buffered examples are kept — they fold into the new model.
+    pub fn replace_artifact(&mut self, artifact: ModelArtifact) {
+        self.artifact = artifact;
+    }
+
+    /// Examples buffered but not yet folded.
+    pub fn pending_len(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// True once a configured re-solve threshold has been crossed.
+    pub fn needs_resolve(&self) -> bool {
+        let m = &self.artifact.meta;
+        (self.cfg.resolve_rows > 0 && m.rows_since_solve >= self.cfg.resolve_rows as u64)
+            || (self.cfg.resolve_drift > 0.0 && m.drift >= self.cfg.resolve_drift)
+    }
+
+    /// Buffer one labeled example; folds the buffer once `learn_batch`
+    /// examples are pending. Index validation happens here so a bad example
+    /// is rejected before it can poison a batch.
+    pub fn push_example(
+        &mut self,
+        features: Vec<(usize, f64)>,
+        labels: Vec<usize>,
+    ) -> Result<Option<UpdateReport>> {
+        let (_, n, l) = self.artifact.shape();
+        if let Some(&(j, _)) = features.iter().find(|&&(j, _)| j >= n) {
+            return Err(Error::Invalid(format!("feature index {j} out of range (n={n})")));
+        }
+        if let Some(&lbl) = labels.iter().find(|&&lbl| lbl >= l) {
+            return Err(Error::Invalid(format!("label index {lbl} out of range (L={l})")));
+        }
+        self.pending.push(PendingExample { features, labels });
+        if self.pending.len() >= self.cfg.learn_batch.max(1) {
+            return self.flush().map(Some);
+        }
+        Ok(None)
+    }
+
+    /// Fold all buffered examples now (no-op report when none are pending).
+    pub fn flush(&mut self) -> Result<UpdateReport> {
+        if self.pending.is_empty() {
+            return Ok(self.noop_report());
+        }
+        let (_, n, l) = self.artifact.shape();
+        let pending = std::mem::take(&mut self.pending);
+        let mut a_coo = Coo::new(pending.len(), n);
+        let mut y_coo = Coo::new(pending.len(), l);
+        for (i, ex) in pending.iter().enumerate() {
+            for &(j, v) in &ex.features {
+                a_coo.push(i, j, v);
+            }
+            for &lbl in &ex.labels {
+                y_coo.push(i, lbl, 1.0);
+            }
+        }
+        self.apply_block(&Csr::from_coo(&a_coo), &Csr::from_coo(&y_coo))
+    }
+
+    /// [`Self::apply_block`] for rows that came from the registry
+    /// dataset's held-out stream: also advances the dataset row cursor, so
+    /// the next `update` resumes after them. Ad-hoc folds (LEARN examples,
+    /// `--rows` files) must use `apply_block` and leave the cursor alone.
+    pub fn apply_dataset_block(&mut self, a_new: &Csr, y_new: &Csr) -> Result<UpdateReport> {
+        let rep = self.apply_block(a_new, y_new)?;
+        self.artifact.meta.dataset_rows += rep.rows as u64;
+        Ok(rep)
+    }
+
+    /// Fold one block of new rows: `A ← [A; A_new]`, `Y ← [Y; Y_new]`.
+    pub fn apply_block(&mut self, a_new: &Csr, y_new: &Csr) -> Result<UpdateReport> {
+        let (_, n, l) = self.artifact.shape();
+        if a_new.cols() != n {
+            return Err(Error::Dim(format!("update block has {} cols, model has {n}", a_new.cols())));
+        }
+        if y_new.cols() != l {
+            return Err(Error::Dim(format!("label block has {} cols, model has {l}", y_new.cols())));
+        }
+        if a_new.rows() != y_new.rows() {
+            return Err(Error::Dim(format!(
+                "feature/label row mismatch: {} vs {}",
+                a_new.rows(),
+                y_new.rows()
+            )));
+        }
+        if a_new.rows() == 0 {
+            return Ok(self.noop_report());
+        }
+
+        let t = std::time::Instant::now();
+        let art = &self.artifact;
+        // deterministic per-fold stream: the same fold sequence reproduces
+        // bit-identically whether applied online (LEARN) or offline (update)
+        let mut rng = Rng::seed_from_u64(
+            art.meta.seed ^ art.meta.updates_applied.wrapping_mul(0x9E37_79B9_7F4A_7C15),
+        );
+        let target = if art.rank() > 0 {
+            art.rank()
+        } else {
+            ((art.meta.alpha * n as f64).ceil() as usize).clamp(1, n.max(1))
+        };
+
+        let old_energy: f64 = art.svd.s.iter().map(|s| s * s).sum();
+        let block_energy = a_new.fro_norm().powi(2);
+
+        // Eq. (2) fold, keeping the inner mixing factors for the C carry
+        let det = update_rows_detailed(&art.svd, a_new, target, self.cfg.inner, &mut rng);
+        // C ← Ũ_topᵀ·C + Ũ_botᵀ·Y_new (exact basis-change identity)
+        let c = matmul_tn(&det.u_small_top, &art.c)
+            .axpy(1.0, &y_new.spmm_t(&det.u_small_bot).transpose());
+        let s_inv = pinv_diagonal(&det.svd.s, PINV_RCOND);
+        // closed-form retrain: Z = VΣ⁺C
+        let z = matmul(&det.svd.vt.transpose(), &c.scale_rows(&s_inv));
+
+        let new_energy: f64 = det.svd.s.iter().map(|s| s * s).sum();
+        let total = old_energy + block_energy;
+        let drift_inc = if total > 0.0 { ((total - new_energy).max(0.0) / total).sqrt() } else { 0.0 };
+
+        let rows = a_new.rows();
+        let art = &mut self.artifact;
+        art.svd = det.svd;
+        art.s_inv = s_inv;
+        art.c = c;
+        art.z = z;
+        art.meta.rows_trained += rows as u64;
+        art.meta.rows_since_solve += rows as u64;
+        art.meta.updates_applied += 1;
+        art.meta.drift += drift_inc;
+
+        Ok(UpdateReport {
+            rows,
+            rank: self.artifact.rank(),
+            drift_inc,
+            drift_total: self.artifact.meta.drift,
+            secs: t.elapsed().as_secs_f64(),
+            needs_resolve: self.needs_resolve(),
+        })
+    }
+
+    fn noop_report(&self) -> UpdateReport {
+        UpdateReport {
+            rows: 0,
+            rank: self.artifact.rank(),
+            drift_inc: 0.0,
+            drift_total: self.artifact.meta.drift,
+            secs: 0.0,
+            needs_resolve: self.needs_resolve(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::format::testutil::sample_artifact;
+    use super::super::format::{ModelArtifact, ModelMeta};
+    use super::*;
+    use crate::dense::svd;
+    use crate::regress::MultiLabelModel;
+
+    fn random_block(rng: &mut Rng, m: usize, n: usize, density: f64) -> Csr {
+        let mut coo = Coo::new(m, n);
+        for i in 0..m {
+            for j in 0..n {
+                if rng.f64() < density {
+                    coo.push(i, j, rng.normal());
+                }
+            }
+        }
+        Csr::from_coo(&coo)
+    }
+
+    fn label_block(rng: &mut Rng, m: usize, l: usize) -> Csr {
+        let mut coo = Coo::new(m, l);
+        for i in 0..m {
+            coo.push(i, rng.usize_below(l), 1.0);
+        }
+        Csr::from_coo(&coo)
+    }
+
+    /// Full-rank artifact over an explicit (A, Y) pair, so tests can append
+    /// rows and compare against from-scratch retraining.
+    fn full_rank_artifact(seed: u64, m: usize, n: usize, l: usize) -> (ModelArtifact, Csr, Csr) {
+        let mut rng = Rng::seed_from_u64(seed);
+        let a = random_block(&mut rng, m, n, 0.6);
+        let y = label_block(&mut rng, m, l);
+        let meta = ModelMeta {
+            dataset: String::new(),
+            scale: 1.0,
+            alpha: 1.0,
+            k: 0.01,
+            seed,
+            rows_trained: m as u64,
+            dataset_rows: 0,
+            rows_since_solve: 0,
+            updates_applied: 0,
+            drift: 0.0,
+        };
+        let art = ModelArtifact::from_training(meta, svd(&a.to_dense()), &y);
+        (art, a, y)
+    }
+
+    #[test]
+    fn incremental_z_matches_full_retrain_at_full_rank() {
+        let (art, a, y) = full_rank_artifact(7, 18, 6, 5);
+        let mut rng = Rng::seed_from_u64(99);
+        let a_new = random_block(&mut rng, 4, 6, 0.6);
+        let y_new = label_block(&mut rng, 4, 5);
+
+        let mut up = OnlineUpdater::new(art, UpdaterConfig { inner: InnerSvd::Dense, ..Default::default() });
+        let rep = up.apply_block(&a_new, &y_new).unwrap();
+        assert_eq!(rep.rows, 4);
+
+        // from-scratch oracle on the stacked data
+        let a_full = a.to_dense().vstack(&a_new.to_dense());
+        let mut y_coo = Coo::new(22, 5);
+        for (block, base) in [(&y, 0usize), (&y_new, 18)] {
+            for r in 0..block.rows() {
+                let (js, vs) = block.row(r);
+                for (&j, &v) in js.iter().zip(vs) {
+                    y_coo.push(r + base, j, v);
+                }
+            }
+        }
+        let y_full = Csr::from_coo(&y_coo);
+        let p = crate::pinv::Pinv::from_svd(&svd(&a_full));
+        let (oracle, _) = MultiLabelModel::train(&p, &y_full);
+        assert!(
+            up.artifact().z.max_abs_diff(&oracle.z) < 1e-7,
+            "incremental Z diverged from retrain: {}",
+            up.artifact().z.max_abs_diff(&oracle.z)
+        );
+        assert_eq!(up.artifact().meta.rows_trained, 22);
+        assert_eq!(up.artifact().meta.updates_applied, 1);
+    }
+
+    #[test]
+    fn carried_projection_stays_exact_under_truncation() {
+        // C-maintenance is an algebraic identity even for truncated models:
+        // after a fold, C must equal U_newᵀ·Y_full to rounding error.
+        let (art, _a, y) = full_rank_artifact(13, 20, 8, 6);
+        let art = {
+            // truncate to rank 4 and rebuild the projected state at that rank
+            let svd4 = art.svd.clone().truncate(4);
+            ModelArtifact::from_training(art.meta.clone(), svd4, &y)
+        };
+        let mut rng = Rng::seed_from_u64(5);
+        let a_new = random_block(&mut rng, 5, 8, 0.5);
+        let y_new = label_block(&mut rng, 5, 6);
+        let mut up = OnlineUpdater::new(art, UpdaterConfig { inner: InnerSvd::Dense, ..Default::default() });
+        up.apply_block(&a_new, &y_new).unwrap();
+
+        let mut y_coo = Coo::new(25, 6);
+        for (block, base) in [(&y, 0usize), (&y_new, 20)] {
+            for r in 0..block.rows() {
+                let (js, vs) = block.row(r);
+                for (&j, &v) in js.iter().zip(vs) {
+                    y_coo.push(r + base, j, v);
+                }
+            }
+        }
+        let y_full = Csr::from_coo(&y_coo);
+        let direct = y_full.spmm_t(&up.artifact().svd.u).transpose();
+        assert!(
+            up.artifact().c.max_abs_diff(&direct) < 1e-8,
+            "carried C drifted from UᵀY: {}",
+            up.artifact().c.max_abs_diff(&direct)
+        );
+    }
+
+    #[test]
+    fn push_example_batches_and_flushes() {
+        let (art, _, _) = full_rank_artifact(21, 15, 5, 4);
+        let cfg = UpdaterConfig { inner: InnerSvd::Dense, learn_batch: 3, ..Default::default() };
+        let mut up = OnlineUpdater::new(art, cfg);
+        assert!(up.push_example(vec![(0, 1.0)], vec![0]).unwrap().is_none());
+        assert!(up.push_example(vec![(1, -1.0)], vec![1]).unwrap().is_none());
+        assert_eq!(up.pending_len(), 2);
+        let rep = up.push_example(vec![(2, 0.5)], vec![2]).unwrap().expect("third example folds");
+        assert_eq!(rep.rows, 3);
+        assert_eq!(up.pending_len(), 0);
+        // flush with one pending
+        assert!(up.push_example(vec![(3, 2.0)], vec![3]).unwrap().is_none());
+        let rep = up.flush().unwrap();
+        assert_eq!(rep.rows, 1);
+        // out-of-range indices are rejected before buffering
+        assert!(up.push_example(vec![(5, 1.0)], vec![0]).is_err());
+        assert!(up.push_example(vec![(0, 1.0)], vec![4]).is_err());
+        assert_eq!(up.pending_len(), 0);
+    }
+
+    #[test]
+    fn deterministic_across_updater_instances() {
+        // The same fold sequence must produce bitwise-identical models —
+        // this is what makes online LEARN comparable to an offline replay.
+        let mk = || {
+            let a = sample_artifact(31, 16, 7, 5, 4);
+            OnlineUpdater::new(a, UpdaterConfig::default())
+        };
+        let mut u1 = mk();
+        let mut u2 = mk();
+        for step in 0..3 {
+            let feats = vec![(step % 7, 1.0 + step as f64), ((step + 2) % 7, -0.5)];
+            let labels = vec![step % 5];
+            u1.push_example(feats.clone(), labels.clone()).unwrap();
+            u2.push_example(feats, labels).unwrap();
+        }
+        assert_eq!(u1.artifact().z.max_abs_diff(&u2.artifact().z), 0.0);
+        assert_eq!(u1.artifact().svd.u.max_abs_diff(&u2.artifact().svd.u), 0.0);
+        assert_eq!(u1.artifact().meta.drift, u2.artifact().meta.drift);
+    }
+
+    #[test]
+    fn drift_accumulates_and_triggers_resolve() {
+        // rank-1 model of an (almost) rank-3 stream: every truncated fold
+        // discards real spectral mass, so drift must grow and trip the gate.
+        let mut rng = Rng::seed_from_u64(17);
+        let a = random_block(&mut rng, 12, 6, 0.8);
+        let y = label_block(&mut rng, 12, 4);
+        let meta = ModelMeta {
+            dataset: String::new(),
+            scale: 1.0,
+            alpha: 1.0 / 6.0,
+            k: 0.01,
+            seed: 17,
+            rows_trained: 12,
+            dataset_rows: 0,
+            rows_since_solve: 0,
+            updates_applied: 0,
+            drift: 0.0,
+        };
+        let art = ModelArtifact::from_training(meta, svd(&a.to_dense()).truncate(1), &y);
+        let cfg = UpdaterConfig {
+            inner: InnerSvd::Dense,
+            resolve_rows: 6,
+            resolve_drift: 0.0, // row-gate only
+            ..Default::default()
+        };
+        let mut up = OnlineUpdater::new(art, cfg);
+        let mut tripped = false;
+        for _ in 0..3 {
+            let a_new = random_block(&mut rng, 2, 6, 0.8);
+            let y_new = label_block(&mut rng, 2, 4);
+            let rep = up.apply_block(&a_new, &y_new).unwrap();
+            assert_eq!(rep.rank, 1, "target rank must stay pinned");
+            tripped = rep.needs_resolve;
+        }
+        assert!(up.artifact().meta.drift > 1e-6, "truncated folds must register drift");
+        assert!(tripped, "row threshold (6) must trip after 3×2 rows");
+        assert_eq!(up.artifact().meta.rows_since_solve, 6);
+    }
+}

@@ -45,6 +45,24 @@ impl InnerSvd {
     }
 }
 
+/// A row update together with the inner mixing factors of the small SVD.
+///
+/// The composed factorization alone is enough for reconstruction, but an
+/// *online* consumer (the model lifecycle's [`crate::model::OnlineUpdater`])
+/// also needs how the new left basis mixes the old one: any quantity kept
+/// projected into the left singular basis, such as the trained-model
+/// projection `C = UᵀY`, is carried across the update as
+/// `C_new = Ũ_topᵀ·C + Ũ_botᵀ·Y_new` without ever revisiting old data.
+#[derive(Debug)]
+pub struct RowUpdate {
+    /// rank-`t` SVD of the stacked `[A11; A21]`
+    pub svd: Svd,
+    /// Ũ_top (s×t): coefficients of the new basis over the old one
+    pub u_small_top: Matrix,
+    /// Ũ_bot (m2×t): coefficients of the new basis over the appended rows
+    pub u_small_bot: Matrix,
+}
+
 /// Equation (2): given `f ≈ SVD(A11)` (U: m1×s, Vᵀ: s×n1) and the hub-row
 /// block `a21` (m2×n1, sparse), return the rank-`target` SVD of
 /// `[A11; A21]` ((m1+m2)×n1).
@@ -54,6 +72,19 @@ impl InnerSvd {
 /// computed blockwise as `[U·Ũ_top; Ũ_bot]` — O(m1·s·target) instead of a
 /// full m×n1 SVD.
 pub fn update_rows(f: &Svd, a21: &Csr, target: usize, inner: InnerSvd, rng: &mut Rng) -> Svd {
+    update_rows_detailed(f, a21, target, inner, rng).svd
+}
+
+/// [`update_rows`] variant that also returns the inner factors Ũ_top/Ũ_bot
+/// (see [`RowUpdate`]). Performs the exact same operations in the same
+/// order, so the composed SVD is bitwise-identical to `update_rows`.
+pub fn update_rows_detailed(
+    f: &Svd,
+    a21: &Csr,
+    target: usize,
+    inner: InnerSvd,
+    rng: &mut Rng,
+) -> RowUpdate {
     let s = f.rank();
     let n1 = f.vt.cols();
     let m2 = a21.rows();
@@ -74,9 +105,14 @@ pub fn update_rows(f: &Svd, a21: &Csr, target: usize, inner: InnerSvd, rng: &mut
     let t = small.rank();
 
     // U_new = [U1·Ũ_top ; Ũ_bot]
-    let u_top = matmul(&f.u, &small.u.top_rows(s)); // m1×t
+    let u_small_top = small.u.top_rows(s);
+    let u_top = matmul(&f.u, &u_small_top); // m1×t
     let u_bot = small.u.submatrix(s, 0, m2, t);
-    Svd { u: u_top.vstack(&u_bot), s: small.s, vt: small.vt }
+    RowUpdate {
+        svd: Svd { u: u_top.vstack(&u_bot), s: small.s, vt: small.vt },
+        u_small_top,
+        u_small_bot: u_bot,
+    }
 }
 
 /// Equation (3): given `f ≈ SVD([A11; A21])` (U: m×s, Vᵀ: s×n1) and the
@@ -218,6 +254,71 @@ mod tests {
         let high = InnerSvd::Auto.run(&a, 20, &mut rng); // 20 > 9 -> dense
         assert_eq!(low.rank(), 2);
         assert_eq!(high.rank(), 20);
+    }
+
+    #[test]
+    fn detailed_update_matches_plain_and_carries_projection() {
+        check("eq2 detailed == plain + projection identity", 8, |rng| {
+            let (m1, m2, n1) = (rng.usize_range(4, 12), rng.usize_range(1, 6), rng.usize_range(3, 9));
+            let a11 = random_csr(rng, m1, n1, 0.6);
+            let a21 = random_csr(rng, m2, n1, 0.6);
+            let f11 = svd(&a11.to_dense());
+            let r = rng.usize_range(1, n1 + 1);
+            let plain = update_rows(&f11, &a21, r, InnerSvd::Dense, &mut rng.split());
+            let det = update_rows_detailed(&f11, &a21, r, InnerSvd::Dense, &mut rng.split());
+            // same seed stream → bitwise-identical composed factors
+            assert_eq!(plain.u.max_abs_diff(&det.svd.u), 0.0);
+            assert_eq!(plain.vt.max_abs_diff(&det.svd.vt), 0.0);
+            assert_eq!(plain.s, det.svd.s);
+            // projection identity: U_newᵀ·[Y; Y2] == Ũ_topᵀ·(UᵀY) + Ũ_botᵀ·Y2
+            let y = Matrix::randn(m1, 4, rng);
+            let y2 = Matrix::randn(m2, 4, rng);
+            let direct = crate::dense::matmul_tn(&det.svd.u, &y.vstack(&y2));
+            let carried = crate::dense::matmul_tn(&det.u_small_top, &crate::dense::matmul_tn(&f11.u, &y))
+                .axpy(1.0, &crate::dense::matmul_tn(&det.u_small_bot, &y2));
+            assert!(direct.max_abs_diff(&carried) < 1e-9, "carried projection drifted");
+        });
+    }
+
+    #[test]
+    fn rank_zero_base_factor() {
+        // A rank-0 base (e.g. a structurally empty A11) must reduce the
+        // "incremental" update to a fresh SVD of the appended block, with U
+        // zero on the old rows.
+        let mut rng = Rng::seed_from_u64(44);
+        let (m1, m2, n1) = (6, 4, 5);
+        let base = Svd { u: Matrix::zeros(m1, 0), s: vec![], vt: Matrix::zeros(0, n1) };
+        let a21 = random_csr(&mut rng, m2, n1, 0.7);
+        let f = update_rows(&base, &a21, n1, InnerSvd::Dense, &mut rng);
+        let stacked = Matrix::zeros(m1, n1).vstack(&a21.to_dense());
+        assert!(f.reconstruction_error(&stacked) < 1e-8 * stacked.fro_norm().max(1.0));
+        // old rows contribute nothing to the left basis
+        assert!(f.u.top_rows(m1).max_abs() < 1e-12);
+        // column variant: rank-0 base folded with T = [A12; A22]
+        let t = random_csr(&mut rng, m1, 3, 0.7);
+        let base_c = Svd { u: Matrix::zeros(m1, 0), s: vec![], vt: Matrix::zeros(0, n1) };
+        let fc = update_cols(&base_c, &t, n1 + 3, InnerSvd::Dense, &mut rng);
+        let joined = Matrix::zeros(m1, n1).hstack(&t.to_dense());
+        assert!(fc.reconstruction_error(&joined) < 1e-8 * joined.fro_norm().max(1.0));
+    }
+
+    #[test]
+    fn target_exceeding_combined_rank_is_clamped() {
+        // Asking for more rank than [A11; A21] can support must clamp to the
+        // feasible maximum and still reconstruct exactly, not panic.
+        let mut rng = Rng::seed_from_u64(45);
+        let a11 = random_csr(&mut rng, 7, 4, 0.6);
+        let a21 = random_csr(&mut rng, 3, 4, 0.6);
+        let f11 = svd(&a11.to_dense());
+        let f = update_rows(&f11, &a21, 1000, InnerSvd::Dense, &mut rng);
+        assert!(f.rank() <= 4, "rank {} exceeds min dimension", f.rank());
+        let stacked = a11.to_dense().vstack(&a21.to_dense());
+        assert!(f.reconstruction_error(&stacked) < 1e-8 * stacked.fro_norm().max(1.0));
+        let t = random_csr(&mut rng, 7, 2, 0.6);
+        let fc = update_cols(&f11, &t, 1000, InnerSvd::Dense, &mut rng);
+        assert!(fc.rank() <= 6, "rank {} exceeds min dimension", fc.rank());
+        let joined = a11.to_dense().hstack(&t.to_dense());
+        assert!(fc.reconstruction_error(&joined) < 1e-8 * joined.fro_norm().max(1.0));
     }
 
     #[test]

@@ -23,7 +23,7 @@ use crate::util::rng::Rng;
 pub use block_diag::block_diag_svd;
 pub use dense_engine::DenseEngine;
 pub use frpca::FrPcaEngine;
-pub use incremental::{update_cols, update_rows, InnerSvd};
+pub use incremental::{update_cols, update_rows, update_rows_detailed, InnerSvd, RowUpdate};
 pub use krylov::KrylovEngine;
 pub use randomized::{randomized_dense_svd, RandomizedEngine};
 

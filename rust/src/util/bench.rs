@@ -162,7 +162,41 @@ impl Reporter {
         out
     }
 
-    /// Print the table and write CSV under `target/bench_results/`.
+    /// Machine-readable summary: one JSON object with the bench name and
+    /// every row's keys (strings) and values (numbers) flattened together.
+    /// This is what the cross-PR perf-trajectory tooling consumes, so the
+    /// schema is deliberately flat and stable.
+    pub fn json(&self) -> String {
+        let mut out = String::from("{");
+        out.push_str(&format!("\"name\":{},\"rows\":[", json_string(&self.name)));
+        for (i, r) in self.rows.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push('{');
+            let mut first = true;
+            for (k, v) in &r.keys {
+                if !first {
+                    out.push(',');
+                }
+                first = false;
+                out.push_str(&format!("{}:{}", json_string(k), json_string(v)));
+            }
+            for (k, v) in &r.values {
+                if !first {
+                    out.push(',');
+                }
+                first = false;
+                out.push_str(&format!("{}:{}", json_string(k), json_number(*v)));
+            }
+            out.push('}');
+        }
+        out.push_str("]}");
+        out
+    }
+
+    /// Print the table; write CSV and a `BENCH_<name>.json` summary under
+    /// `target/bench_results/`.
     pub fn finish(&self) {
         print!("{}", self.table());
         let dir = std::path::Path::new("target/bench_results");
@@ -180,12 +214,44 @@ impl Reporter {
                 csv.push('\n');
             }
         }
-        let path = dir.join(format!("{}.csv", self.name));
-        if let Err(e) = std::fs::write(&path, csv) {
-            eprintln!("warning: could not write {}: {e}", path.display());
-        } else {
-            println!("wrote {}", path.display());
+        for (path, body) in [
+            (dir.join(format!("{}.csv", self.name)), csv),
+            (dir.join(format!("BENCH_{}.json", self.name)), self.json()),
+        ] {
+            if let Err(e) = std::fs::write(&path, body) {
+                eprintln!("warning: could not write {}: {e}", path.display());
+            } else {
+                println!("wrote {}", path.display());
+            }
         }
+    }
+}
+
+/// Minimal JSON string escaping (quotes, backslashes, control chars).
+fn json_string(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+/// JSON has no NaN/Infinity literals; encode them as null.
+fn json_number(x: f64) -> String {
+    if x.is_finite() {
+        format!("{x}")
+    } else {
+        "null".into()
     }
 }
 
@@ -224,5 +290,19 @@ mod tests {
         assert!(t.contains("dataset"));
         assert!(t.contains("bibtex"));
         assert!(t.contains("2.5"));
+    }
+
+    #[test]
+    fn reporter_json_summary() {
+        let mut r = Reporter::new("unit_json");
+        r.add(&[("policy", "batch=64".into())], &[("rps", 100.5), ("bad", f64::NAN)]);
+        let j = r.json();
+        assert_eq!(
+            j,
+            r#"{"name":"unit_json","rows":[{"policy":"batch=64","rps":100.5,"bad":null}]}"#
+        );
+        // escaping
+        assert_eq!(json_string("a\"b\\c\n"), r#""a\"b\\c\n""#);
+        assert_eq!(json_number(f64::INFINITY), "null");
     }
 }

@@ -1,0 +1,28 @@
+//! FNV-1a — the one non-cryptographic byte hash the crate needs, shared by
+//! the dataset registry (per-name RNG streams) and the model format
+//! (payload checksums) so the constants can never silently diverge.
+
+/// 64-bit FNV-1a over a byte slice.
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_vectors() {
+        // standard FNV-1a test vectors
+        assert_eq!(fnv1a(b""), 0xcbf29ce484222325);
+        assert_eq!(fnv1a(b"a"), 0xaf63dc4c8601ec8c);
+        assert_eq!(fnv1a(b"foobar"), 0x85944171f73967e8);
+        // order sensitivity
+        assert_ne!(fnv1a(b"ab"), fnv1a(b"ba"));
+    }
+}

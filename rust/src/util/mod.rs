@@ -5,6 +5,7 @@
 
 pub mod args;
 pub mod bench;
+pub mod hash;
 pub mod propcheck;
 pub mod rng;
 pub mod timer;

@@ -1,0 +1,180 @@
+//! Integration: the model lifecycle round trip — train → publish → load →
+//! serve → RELOAD → LEARN → hot swap under load. Asserts the PR-2
+//! acceptance properties: save/load is bitwise-identical, a RELOAD of the
+//! same version changes no served score, an online LEARN of k rows matches
+//! the same folds replayed offline, and the server answers every request
+//! across hot swaps.
+
+use fastpi::coordinator::{
+    score_request, text_request, PinvJob, PipelineCoordinator, ScoreServer, ServerConfig,
+};
+use fastpi::data::{load_dataset, Dataset};
+use fastpi::model::{ModelStore, OnlineUpdater, UpdaterConfig};
+use fastpi::pinv::Method;
+use std::path::PathBuf;
+
+fn fresh_store(name: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("fastpi_lifecycle_{name}"));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+/// Train on the first `train_rows` rows of a small bibtex and publish v1.
+fn trained_store(name: &str, seed: u64, train_rows: usize) -> (ModelStore, Dataset) {
+    let ds = load_dataset("bibtex", 0.04, seed, None).unwrap();
+    let job = PinvJob { method: Method::FastPi, alpha: 0.5, k: ds.k, seed };
+    let (artifact, _) = PipelineCoordinator::new().train_model(&ds, &job, train_rows).unwrap();
+    let store = ModelStore::open(&fresh_store(name)).unwrap();
+    assert_eq!(store.publish(&artifact).unwrap(), 1);
+    (store, ds)
+}
+
+/// `LEARN` line for one dataset row, plus the equivalent offline example.
+fn learn_example(ds: &Dataset, row: usize) -> (String, Vec<(usize, f64)>, Vec<usize>) {
+    let (js, vs) = ds.a.row(row);
+    let features: Vec<(usize, f64)> = js.iter().zip(vs).map(|(&j, &v)| (j, v)).collect();
+    let feats_tok: Vec<String> = features.iter().map(|(j, v)| format!("{j}:{v}")).collect();
+    let (ls, _) = ds.y.row(row);
+    let labels: Vec<usize> = ls.to_vec();
+    let label_tok = if labels.is_empty() {
+        "-".to_string()
+    } else {
+        labels.iter().map(|l| l.to_string()).collect::<Vec<_>>().join(",")
+    };
+    (format!("LEARN {label_tok} {}", feats_tok.join(",")), features, labels)
+}
+
+#[test]
+fn save_load_roundtrip_is_bitwise_identical() {
+    let (store, _ds) = trained_store("roundtrip", 51, 200);
+    let (v, loaded) = store.load_latest().unwrap().unwrap();
+    assert_eq!(v, 1);
+    // write the loaded model again: the bytes must be identical
+    let again = store.publish(&loaded).unwrap();
+    let b1 = std::fs::read(store.dir().join("v000001.fpim")).unwrap();
+    let b2 = std::fs::read(store.dir().join(format!("v{again:06}.fpim"))).unwrap();
+    assert_eq!(b1, b2, "save→load→save must be byte-stable");
+    // and field-wise: every factor is bit-equal
+    let reloaded = store.load(again).unwrap();
+    assert_eq!(loaded.svd.u.data(), reloaded.svd.u.data());
+    assert_eq!(loaded.svd.s, reloaded.svd.s);
+    assert_eq!(loaded.svd.vt.data(), reloaded.svd.vt.data());
+    assert_eq!(loaded.s_inv, reloaded.s_inv);
+    assert_eq!(loaded.c.data(), reloaded.c.data());
+    assert_eq!(loaded.z.data(), reloaded.z.data());
+    assert_eq!(loaded.meta, reloaded.meta);
+}
+
+#[test]
+fn reload_is_invisible_and_learn_matches_offline_replay() {
+    let (store, ds) = trained_store("learn", 52, 200);
+    let (v1, artifact) = store.load_latest().unwrap().unwrap();
+    let offline_start = artifact.clone();
+
+    let server = ScoreServer::start_lifecycle(
+        OnlineUpdater::new(artifact, UpdaterConfig::default()),
+        Some(store),
+        v1,
+        ServerConfig::default(),
+    )
+    .unwrap();
+    let addr = server.addr;
+
+    // a RELOAD of the same version must not change a single served byte
+    let (js, vs) = ds.a.row(7);
+    let feats: Vec<(usize, f64)> = js.iter().zip(vs).map(|(&j, &v)| (j, v)).collect();
+    let probe: Vec<String> = feats.iter().map(|(j, v)| format!("{j}:{v}")).collect();
+    let probe = format!("SCORE 5 {}", probe.join(","));
+    let before = text_request(addr, &probe).unwrap();
+    assert!(before.starts_with("OK "), "{before}");
+    assert_eq!(text_request(addr, "RELOAD").unwrap(), format!("OK version={v1}"));
+    let after = text_request(addr, &probe).unwrap();
+    assert_eq!(before, after, "RELOAD of the same version changed a served score");
+
+    // fold three held-out rows online...
+    let rows = [200usize, 201, 202];
+    let mut offline = OnlineUpdater::new(offline_start, UpdaterConfig::default());
+    for (i, &row) in rows.iter().enumerate() {
+        let (line, features, labels) = learn_example(&ds, row);
+        let reply = text_request(addr, &line).unwrap();
+        let want_version = v1 + 1 + i as u64;
+        assert!(
+            reply.starts_with(&format!("OK version={want_version} pending=0")),
+            "LEARN {row}: {reply}"
+        );
+        // ...and replay the identical fold offline
+        offline.push_example(features, labels).unwrap().expect("learn_batch=1 folds");
+    }
+
+    // the server published each fold; the latest version must be
+    // bitwise-identical to the offline replay
+    let store = ModelStore::open(&std::env::temp_dir().join("fastpi_lifecycle_learn")).unwrap();
+    let (v_final, online) = store.load_latest().unwrap().unwrap();
+    assert_eq!(v_final, v1 + rows.len() as u64);
+    let replay = offline.artifact();
+    assert_eq!(online.svd.u.data(), replay.svd.u.data(), "U diverged from offline replay");
+    assert_eq!(online.svd.s, replay.svd.s, "Σ diverged from offline replay");
+    assert_eq!(online.svd.vt.data(), replay.svd.vt.data(), "Vᵀ diverged from offline replay");
+    assert_eq!(online.z.data(), replay.z.data(), "Z diverged from offline replay");
+    assert_eq!(online.meta.rows_trained, 203);
+    // LEARN examples must not advance the dataset cursor: a later `update`
+    // still resumes at the first held-out dataset row
+    assert_eq!(online.meta.dataset_rows, 200);
+
+    // the served model follows the fold: a probe scores under the new Z
+    let vline = text_request(addr, "VERSION").unwrap();
+    assert!(vline.starts_with(&format!("VERSION id={v_final} ")), "{vline}");
+    server.shutdown();
+}
+
+#[test]
+fn server_answers_every_request_across_hot_swaps_under_load() {
+    let (store, ds) = trained_store("swapload", 53, 200);
+    let (v1, artifact) = store.load_latest().unwrap().unwrap();
+    let server = ScoreServer::start_lifecycle(
+        OnlineUpdater::new(artifact, UpdaterConfig::default()),
+        Some(store),
+        v1,
+        ServerConfig { max_batch: 16, queue_capacity: 1 << 12, ..Default::default() },
+    )
+    .unwrap();
+    let addr = server.addr;
+
+    let clients = 4usize;
+    let per_client = 40usize;
+    std::thread::scope(|s| {
+        // swapper: interleave RELOADs and LEARN folds while clients score
+        s.spawn(|| {
+            for step in 0..10 {
+                let reply = if step % 2 == 0 {
+                    text_request(addr, "RELOAD").unwrap()
+                } else {
+                    let (line, _, _) = learn_example(&ds, 210 + step);
+                    text_request(addr, &line).unwrap()
+                };
+                assert!(reply.starts_with("OK version="), "swap step {step}: {reply}");
+                std::thread::sleep(std::time::Duration::from_millis(2));
+            }
+        });
+        for c in 0..clients {
+            let a = &ds.a;
+            s.spawn(move || {
+                for i in 0..per_client {
+                    let row = (c * 31 + i) % 200;
+                    let (js, vs) = a.row(row);
+                    let feats: Vec<(usize, f64)> =
+                        js.iter().zip(vs).map(|(&j, &v)| (j, v)).collect();
+                    // any ERR (internal, overloaded, timeout) fails here
+                    let got = score_request(addr, &feats, 3).unwrap();
+                    assert_eq!(got.len(), 3, "client {c} request {i}");
+                }
+            });
+        }
+    });
+
+    let served = server.stats.served.load(std::sync::atomic::Ordering::Relaxed);
+    assert_eq!(served, clients * per_client, "every request must be scored, none dropped");
+    assert!(server.stats.swaps.load(std::sync::atomic::Ordering::Relaxed) >= 10);
+    assert_eq!(server.current_version(), v1 + 5, "5 LEARN folds must have published");
+    server.shutdown();
+}
