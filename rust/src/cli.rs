@@ -25,10 +25,19 @@ OPERATIONS:
   pinv       compute a pseudoinverse on a dataset and report stages
   train      fit a model and publish it to a versioned model store
   serve      start the scoring server (--model-dir serves the store's
-             latest version instead of retraining)
+             latest version instead of retraining; --replica-of ADDR
+             follows a primary as a read-only snapshot-shipped replica)
   update     fold new rows into the stored model (paper Eq. 2) and
              publish a new version; reports incremental-vs-recompute time
+  ship       pull the latest FPIM snapshot from a serving primary into a
+             local store (one-shot, or --watch to keep polling)
+  route      front-end router fanning SCORE across replicas; STATS
+             reports per-replica versions + skew
   lifecycle-check  headless train->serve->LEARN->RELOAD smoke (CI)
+  cluster-check    headless replica fan-out check: primary + N follower
+             processes + router, propagation asserted end to end (CI)
+  bench-diff perf-trajectory gate: diff target/bench_results/BENCH_*.json
+             against the committed bench_baselines/ snapshot
   datagen    generate + cache a dataset, print stats
   selftest   quick end-to-end smoke test
 
@@ -52,6 +61,23 @@ LIFECYCLE OPTIONS:
   --resolve-rows N     flag a full re-solve after N folded rows (0=never)
   --resolve-drift 0.05 flag a full re-solve past accumulated drift
   --gc N               update: keep only the newest N store versions
+
+REPLICATION OPTIONS:
+  --replica-of ADDR    serve: follow this primary (requires --model-dir,
+                       the replica's own local store directory)
+  --from ADDR          ship: the serving primary to pull from
+  --watch              ship: keep polling instead of one-shot
+  --poll-ms 200        replica/ship poll interval
+  --replicas a,b,c     route: replica addresses   (cluster-check: count)
+  --bind 0.0.0.0:7070  serve/route: listen address (default loopback,
+                       ephemeral port)
+
+BENCH-DIFF OPTIONS:
+  --baseline DIR       committed snapshot (default bench_baselines)
+  --current DIR        fresh results (default target/bench_results)
+  --max-regress 0.2    allowed fractional regression per gated key
+  --keys a,b           gated value keys (default throughput_rps,p95_ms,
+                       p99_storm_ms,propagation_p95_ms)
 ";
 
 pub fn main() {
@@ -77,7 +103,11 @@ pub fn main() {
         "train" => cmd_train(&args),
         "serve" => cmd_serve(&args),
         "update" => cmd_update(&args),
+        "ship" => cmd_ship(&args),
+        "route" => cmd_route(&args),
         "lifecycle-check" => cmd_lifecycle_check(&args),
+        "cluster-check" => cmd_cluster_check(&args),
+        "bench-diff" => cmd_bench_diff(&args),
         "datagen" => cmd_datagen(&args),
         "selftest" => cmd_selftest(&args),
         _ => {
@@ -324,15 +354,43 @@ fn cmd_train(args: &Args) -> crate::error::Result<()> {
     Ok(())
 }
 
+/// Resolve `host:port` (hostnames included) to one socket address.
+fn resolve_addr(spec: &str) -> crate::error::Result<std::net::SocketAddr> {
+    use std::net::ToSocketAddrs;
+    spec.to_socket_addrs()
+        .map_err(crate::error::Error::Io)?
+        .next()
+        .ok_or_else(|| crate::error::Error::Invalid(format!("cannot resolve `{spec}`")))
+}
+
 fn cmd_serve(args: &Args) -> crate::error::Result<()> {
-    use crate::coordinator::{PinvJob, PipelineCoordinator, ScoreServer, ServerConfig};
+    use crate::coordinator::{PinvJob, PipelineCoordinator, ReplicaConfig, ScoreServer, ServerConfig};
     use crate::data::load_dataset;
     use crate::model::{ModelStore, OnlineUpdater};
     let server_cfg = ServerConfig {
         threads: args.parse_or("threads", 0usize),
+        bind: args.str_or("bind", "127.0.0.1:0"),
         ..Default::default()
     };
-    let server = if let Some(dir) = args.get("model-dir") {
+    let server = if let Some(primary) = args.get("replica-of") {
+        // follower replica: read-only, pull-synced from the primary
+        let primary = resolve_addr(primary)?;
+        let dir = args.get("model-dir").ok_or_else(|| {
+            crate::error::Error::Invalid(
+                "--replica-of needs --model-dir (the replica's own local store)".into(),
+            )
+        })?;
+        let store = ModelStore::open(std::path::Path::new(dir))?;
+        let poll = std::time::Duration::from_millis(args.parse_or("poll-ms", 200u64));
+        let rc = ReplicaConfig { primary, poll, ..Default::default() };
+        let server = ScoreServer::start_replica(store, rc, server_cfg)?;
+        println!(
+            "replica serving v{} from {dir}, following {primary} (poll {}ms)",
+            server.current_version(),
+            poll.as_millis()
+        );
+        server
+    } else if let Some(dir) = args.get("model-dir") {
         // lifecycle path: serve the store's latest version, no retraining
         let store = ModelStore::open(std::path::Path::new(dir))?;
         let Some((version, artifact)) = store.load_latest()? else {
@@ -365,11 +423,109 @@ fn cmd_serve(args: &Args) -> crate::error::Result<()> {
             .map_err(crate::error::Error::Io)?
     };
     println!(
-        "scoring server on {} — verbs: SCORE <topk> j:v,... | LEARN <labels|-> j:v,... | VERSION | RELOAD | STATS  (Ctrl-C to stop)",
+        "scoring server on {} — verbs: SCORE <topk> j:v,... | LEARN <labels|-> j:v,... | VERSION | RELOAD | SHIP <have> | STATS  (Ctrl-C to stop)",
         server.addr
     );
+    // machine-readable marker (line-buffered, so it flushes even when
+    // piped): cluster-check and deploy scripts parse this to learn the
+    // ephemeral port
+    println!("FASTPI_SERVE_ADDR={}", server.addr);
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+fn cmd_ship(args: &Args) -> crate::error::Result<()> {
+    use crate::model::{ship, ModelStore};
+    let from = args.get("from").ok_or_else(|| {
+        crate::error::Error::Invalid("--from HOST:PORT required (a serving primary)".into())
+    })?;
+    let primary = resolve_addr(from)?;
+    let dir = args.get("model-dir").ok_or_else(|| {
+        crate::error::Error::Invalid("--model-dir required (the local store to ship into)".into())
+    })?;
+    let store = ModelStore::open(std::path::Path::new(dir))?;
+    let watch = args.flag("watch");
+    let poll = std::time::Duration::from_millis(args.parse_or("poll-ms", 1000u64));
+    loop {
+        match ship::sync_once(&store, primary, ship::SHIP_TIMEOUT) {
+            Ok(Some((id, art))) => {
+                let (m, n, l) = art.shape();
+                println!(
+                    "shipped v{id} into {dir} ({m} rows folded, {n} features, {l} labels, rank {})",
+                    art.rank()
+                );
+            }
+            Ok(None) => {
+                if !watch {
+                    println!("up to date at v{}", store.latest_version()?.unwrap_or(0));
+                }
+            }
+            Err(e) if watch => eprintln!("ship: {e} (retrying in {}ms)", poll.as_millis()),
+            Err(e) => return Err(e),
+        }
+        if !watch {
+            return Ok(());
+        }
+        std::thread::sleep(poll);
+    }
+}
+
+fn cmd_route(args: &Args) -> crate::error::Result<()> {
+    use crate::coordinator::{Router, RouterConfig};
+    let spec = args.get("replicas").ok_or_else(|| {
+        crate::error::Error::Invalid("--replicas HOST:PORT,HOST:PORT,... required".into())
+    })?;
+    let mut addrs = Vec::new();
+    for s in spec.split(',').filter(|s| !s.is_empty()) {
+        addrs.push(resolve_addr(s)?);
+    }
+    let cfg = RouterConfig { bind: args.str_or("bind", "127.0.0.1:0"), ..Default::default() };
+    let n_replicas = addrs.len();
+    let router = Router::start(addrs, cfg).map_err(crate::error::Error::Io)?;
+    println!(
+        "router on {} fanning SCORE across {n_replicas} replicas — verbs: SCORE | PING | STATS (versions + skew) | QUIT",
+        router.addr
+    );
+    println!("FASTPI_ROUTE_ADDR={}", router.addr);
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+fn cmd_bench_diff(args: &Args) -> crate::error::Result<()> {
+    use crate::util::bench;
+    let baseline = args.str_or("baseline", "bench_baselines");
+    let current = args.str_or("current", "target/bench_results");
+    let max_regress: f64 = args.parse_or("max-regress", 0.20);
+    let default_keys: Vec<String> =
+        ["throughput_rps", "p95_ms", "p99_storm_ms", "propagation_p95_ms"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+    let keys = args.parse_list("keys", &default_keys);
+    let failures = bench::diff_dirs(
+        std::path::Path::new(&baseline),
+        std::path::Path::new(&current),
+        &keys,
+        max_regress,
+    )?;
+    if failures.is_empty() {
+        println!(
+            "bench-diff OK: {current} within {:.0}% of {baseline} on [{}]",
+            max_regress * 100.0,
+            keys.join(",")
+        );
+        Ok(())
+    } else {
+        for f in &failures {
+            eprintln!("REGRESSION: {f}");
+        }
+        Err(crate::error::Error::Invalid(format!(
+            "{} bench regression(s) vs {baseline} (refresh baselines deliberately by copying \
+             target/bench_results/BENCH_*.json over bench_baselines/ in a reviewed commit)",
+            failures.len()
+        )))
     }
 }
 
@@ -534,6 +690,207 @@ fn cmd_lifecycle_check(args: &Args) -> crate::error::Result<()> {
     }
     server.shutdown();
     println!("lifecycle-check OK: v{version} served, reloaded, learned into v{}", version + 1);
+    Ok(())
+}
+
+/// Headless replica fan-out check: spawn a primary and N follower
+/// *processes* off one trained store, put the in-process router in front
+/// of the followers, and assert the replication acceptance properties —
+/// every replica converges on the primary's version and serves
+/// byte-identical SCORE replies, publishes on the primary propagate until
+/// the router observes skew 0, and not one request is dropped or errored
+/// along the way. The ≥3-OS-process topology is the point: this is the
+/// multi-host story exercised on one machine.
+fn cmd_cluster_check(args: &Args) -> crate::error::Result<()> {
+    use crate::coordinator::{text_request, Router, RouterConfig};
+    use crate::error::Error;
+    use crate::model::ModelStore;
+    use std::io::BufRead;
+    use std::process::{Child, Command, Stdio};
+    use std::time::{Duration, Instant};
+
+    let dir = model_dir_arg(args, &args.str_or("dataset", "bibtex"));
+    let store = ModelStore::open(&dir)?;
+    let Some((v1, artifact)) = store.load_latest()? else {
+        return Err(Error::Invalid(format!(
+            "no model versions in {} — run `fastpi train` first",
+            dir.display()
+        )));
+    };
+    drop(store);
+    let (_, n, l) = artifact.shape();
+    let n_replicas: usize = args.parse_or("replicas", 3usize);
+    let learns: u64 = args.parse_or("learns", 3u64);
+    let routed_requests: usize = args.parse_or("requests", 24usize);
+    let exe = std::env::current_exe().map_err(Error::Io)?;
+
+    // children and their scratch stores die with the check, pass or fail
+    struct Fleet(Vec<Child>, Vec<std::path::PathBuf>);
+    impl Drop for Fleet {
+        fn drop(&mut self) {
+            for c in &mut self.0 {
+                let _ = c.kill();
+                let _ = c.wait();
+            }
+            for d in &self.1 {
+                let _ = std::fs::remove_dir_all(d);
+            }
+        }
+    }
+    let mut fleet = Fleet(Vec::new(), Vec::new());
+
+    let spawn_server =
+        |fleet: &mut Fleet, argv: &[String]| -> crate::error::Result<std::net::SocketAddr> {
+            let mut child = Command::new(&exe)
+                .args(argv)
+                .stdout(Stdio::piped())
+                .stderr(Stdio::inherit())
+                .spawn()
+                .map_err(Error::Io)?;
+            let stdout = child.stdout.take().expect("piped stdout");
+            let (tx, rx) = std::sync::mpsc::channel();
+            // reader thread: forward the addr marker, then keep draining so
+            // the child can never block on a full stdout pipe
+            std::thread::spawn(move || {
+                for line in std::io::BufReader::new(stdout).lines() {
+                    let Ok(line) = line else { break };
+                    if let Some(addr) = line.strip_prefix("FASTPI_SERVE_ADDR=") {
+                        let _ = tx.send(addr.to_string());
+                    }
+                }
+            });
+            fleet.0.push(child);
+            let addr = rx.recv_timeout(Duration::from_secs(120)).map_err(|_| {
+                Error::Invalid("spawned server never reported FASTPI_SERVE_ADDR".into())
+            })?;
+            addr.parse().map_err(|_| Error::Invalid(format!("bad server address `{addr}`")))
+        };
+
+    // one primary process serving the trained store
+    let primary = spawn_server(
+        &mut fleet,
+        &[
+            "serve".into(),
+            "--model-dir".into(),
+            dir.display().to_string(),
+            "--learn-batch".into(),
+            "1".into(),
+        ],
+    )?;
+    println!("primary on {primary} serving v{v1} from {}", dir.display());
+
+    // N follower processes, each with its own empty local store
+    let mut replica_addrs = Vec::new();
+    for i in 0..n_replicas {
+        let rdir =
+            std::env::temp_dir().join(format!("fastpi_cluster_{}_{i}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&rdir);
+        fleet.1.push(rdir.clone());
+        let addr = spawn_server(
+            &mut fleet,
+            &[
+                "serve".into(),
+                "--replica-of".into(),
+                primary.to_string(),
+                "--model-dir".into(),
+                rdir.display().to_string(),
+                "--poll-ms".into(),
+                "25".into(),
+            ],
+        )?;
+        println!("replica {i} on {addr} (store {})", rdir.display());
+        replica_addrs.push(addr);
+    }
+
+    // in-process front-end router over the followers
+    let router =
+        Router::start(replica_addrs.clone(), RouterConfig::default()).map_err(Error::Io)?;
+
+    let req = |addr, line: &str| text_request(addr, line).map_err(Error::Io);
+    let wait_all_at = |want: u64, what: &str| -> crate::error::Result<()> {
+        let deadline = Instant::now() + Duration::from_secs(60);
+        'outer: loop {
+            for &addr in &replica_addrs {
+                let v = req(addr, "VERSION")?;
+                if !v.starts_with(&format!("VERSION id={want} ")) {
+                    if Instant::now() > deadline {
+                        return Err(Error::Invalid(format!(
+                            "{what}: {addr} stuck at `{v}`, want id={want}"
+                        )));
+                    }
+                    std::thread::sleep(Duration::from_millis(20));
+                    continue 'outer;
+                }
+            }
+            return Ok(());
+        }
+    };
+
+    // (a) every replica converges on the primary's version
+    wait_all_at(v1, "initial sync")?;
+    println!("  all {n_replicas} replicas at v{v1}");
+
+    // (b) byte-identical scores at the same version
+    let probe = format!("SCORE 3 0:1.0,{}:0.5", n.saturating_sub(1));
+    let want = req(primary, &probe)?;
+    if !want.starts_with("OK ") {
+        return Err(Error::Invalid(format!("primary SCORE failed: {want}")));
+    }
+    for &addr in &replica_addrs {
+        let got = req(addr, &probe)?;
+        if got != want {
+            return Err(Error::Invalid(format!(
+                "replica {addr} diverged at v{v1}: `{got}` vs `{want}`"
+            )));
+        }
+    }
+    println!("  SCORE byte-identical across primary + {n_replicas} replicas");
+
+    // (c) fan-out through the router: every routed request answers OK
+    for i in 0..routed_requests {
+        let got = req(router.addr, &probe)?;
+        if got != want {
+            return Err(Error::Invalid(format!("routed request {i} got `{got}`")));
+        }
+    }
+
+    // (d) publishes on the primary propagate to the whole fleet
+    for k in 0..learns {
+        let line = format!("LEARN {} {}:1.0", k as usize % l, k as usize % n);
+        let reply = req(primary, &line)?;
+        if !reply.starts_with(&format!("OK version={} ", v1 + k + 1)) {
+            return Err(Error::Invalid(format!("LEARN {k}: {reply}")));
+        }
+    }
+    wait_all_at(v1 + learns, "post-LEARN convergence")?;
+    let stats = req(router.addr, "STATS")?;
+    if !stats.contains(" skew=0") {
+        return Err(Error::Invalid(format!("fleet should be converged: {stats}")));
+    }
+    println!("  {learns} publishes propagated to every replica ({stats})");
+
+    // (e) still byte-identical at the new version, and zero routed errors
+    let want = req(primary, &probe)?;
+    for &addr in &replica_addrs {
+        let got = req(addr, &probe)?;
+        if got != want {
+            return Err(Error::Invalid(format!(
+                "replica {addr} diverged after propagation: `{got}` vs `{want}`"
+            )));
+        }
+    }
+    let errors = router.stats.errors.load(std::sync::atomic::Ordering::Relaxed);
+    let routed = router.stats.routed.load(std::sync::atomic::Ordering::Relaxed);
+    if errors != 0 || routed < routed_requests {
+        return Err(Error::Invalid(format!(
+            "router dropped requests: routed={routed} errors={errors}"
+        )));
+    }
+    router.shutdown();
+    println!(
+        "cluster-check OK: {n_replicas}-replica fleet converged v{v1} -> v{} with zero dropped requests",
+        v1 + learns
+    );
     Ok(())
 }
 

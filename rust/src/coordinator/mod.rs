@@ -1,10 +1,18 @@
 //! Layer-3 coordination: the pipeline orchestrator that runs pseudoinverse
-//! jobs end-to-end, and the scoring server that serves the trained
-//! multi-label model over TCP with dynamic batching and zero-downtime
-//! model hot-swap (see `crate::model` for the lifecycle subsystem).
+//! jobs end-to-end, the scoring server that serves the trained multi-label
+//! model over TCP with dynamic batching and zero-downtime model hot-swap
+//! (see `crate::model` for the lifecycle subsystem), and the replica
+//! fan-out router that spreads `SCORE` traffic across a fleet of
+//! snapshot-shipped followers.
 
 pub mod pipeline;
+mod queue;
+pub mod router;
 pub mod serve;
 
 pub use pipeline::{PinvJob, PinvReport, PipelineCoordinator};
-pub use serve::{score_request, text_request, ScoreServer, ServerConfig, ServerStats};
+pub use router::{Router, RouterConfig, RouterStats};
+pub use serve::{
+    score_request, text_request, text_request_timeout, ReplicaConfig, ScoreServer, ServerConfig,
+    ServerStats,
+};

@@ -1,0 +1,88 @@
+//! Bounded, poison-recovering request queue — the batching discipline
+//! shared by the scoring server's batcher and the fan-out router.
+//!
+//! Poison recovery rationale (from the serve path): a panicking thread
+//! that held the lock leaves the deque structurally intact (push/pop are
+//! not interruptible mid-write in safe code), and dropping the whole
+//! queue because one worker died is exactly the cascade a serving process
+//! must not have — degraded service (`ERR overloaded`) beats no service.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Condvar, Mutex, MutexGuard};
+use std::time::Duration;
+
+pub(crate) struct BoundedQueue<T> {
+    deque: Mutex<VecDeque<T>>,
+    cv: Condvar,
+    capacity: usize,
+}
+
+impl<T> BoundedQueue<T> {
+    pub fn new(capacity: usize) -> Self {
+        BoundedQueue { deque: Mutex::new(VecDeque::new()), cv: Condvar::new(), capacity }
+    }
+
+    /// Backpressure threshold: beyond this depth, producers reject.
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Lock the queue, recovering from poisoning (see module docs).
+    pub fn lock(&self) -> MutexGuard<'_, VecDeque<T>> {
+        self.deque.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// `Condvar::wait_timeout` with the same poison recovery.
+    pub fn wait_timeout<'a>(
+        &self,
+        guard: MutexGuard<'a, VecDeque<T>>,
+        dur: Duration,
+    ) -> MutexGuard<'a, VecDeque<T>> {
+        match self.cv.wait_timeout(guard, dur) {
+            Ok((g, _timeout)) => g,
+            Err(poisoned) => poisoned.into_inner().0,
+        }
+    }
+
+    /// Wake one consumer blocked in [`Self::wait_timeout`].
+    pub fn notify_one(&self) {
+        self.cv.notify_one();
+    }
+
+    /// The batching discipline, shared by the scoring batcher and the
+    /// router's fan-out loop: block (in 20ms poison-safe waits) until at
+    /// least one item or `stop` is set, drain up to `max_batch`, and if
+    /// underfull give stragglers one `max_wait` grace sleep before a final
+    /// drain. Returns an empty batch when `stop` was observed — nothing
+    /// is drained in that case, so no request is silently dropped here.
+    pub fn drain_batch(&self, max_batch: usize, max_wait: Duration, stop: &AtomicBool) -> Vec<T> {
+        let mut batch = Vec::new();
+        {
+            let mut dq = self.lock();
+            while dq.is_empty() && !stop.load(Ordering::Relaxed) {
+                dq = self.wait_timeout(dq, Duration::from_millis(20));
+            }
+            if stop.load(Ordering::Relaxed) {
+                return batch;
+            }
+            while batch.len() < max_batch {
+                match dq.pop_front() {
+                    Some(p) => batch.push(p),
+                    None => break,
+                }
+            }
+        }
+        if batch.len() < max_batch && !max_wait.is_zero() {
+            std::thread::sleep(max_wait);
+            let mut dq = self.lock();
+            while batch.len() < max_batch {
+                match dq.pop_front() {
+                    Some(p) => batch.push(p),
+                    None => break,
+                }
+            }
+        }
+        batch
+    }
+}

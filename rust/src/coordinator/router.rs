@@ -1,0 +1,506 @@
+//! Replica fan-out router — the front end of a replicated serving tier.
+//!
+//! Speaks the same line protocol as [`super::serve`] on the client side and
+//! forwards `SCORE` requests to a fleet of replicas: incoming requests are
+//! collected into batches (same bounded queue + straggler-wait discipline
+//! as the scoring batcher), each batch is split round-robin into one group
+//! per replica, and the groups are sent concurrently on the shared
+//! worker-pool runtime ([`crate::runtime::pool`]) — one pipelined
+//! connection per group, all request lines written before the replies are
+//! read back. A replica that fails mid-group costs exactly that group:
+//! its clients get `ERR upstream`, everyone else's replies are unaffected,
+//! and the next batch rotates onto the survivors again (no removal list —
+//! a recovered replica is simply used again).
+//!
+//! Version skew is the router's observability duty: replica stores mirror
+//! the primary's version ids (see `crate::model::ship`), so `STATS` polls
+//! each replica's `VERSION` live and reports
+//!
+//! ```text
+//! STATS routed=... errors=... rejected=... batches=... replicas=N versions=v1,v2,... skew=S
+//! ```
+//!
+//! where `skew` is max−min over the reachable replicas' ids (`?` marks an
+//! unreachable one). Skew 0 ⇒ every replica serves byte-identical scores.
+//!
+//! Router verbs: `SCORE` (forwarded), `PING`, `STATS`, `QUIT`. Lifecycle
+//! verbs are deliberately not forwarded — `LEARN` belongs on the primary,
+//! and a replica would refuse it anyway.
+//!
+//! Trade-off, stated openly: fan-out groups do blocking socket I/O on the
+//! shared worker pool, so a blackholed replica can occupy a pool worker
+//! for up to `upstream_timeout` per round. In the intended topology the
+//! router is its own process (`fastpi route`) where the pool has nothing
+//! better to do; co-residing the router with scoring servers (as the
+//! tests do for convenience) borrows compute workers for I/O during
+//! upstream stalls. If that ever bites, the fix is a dedicated I/O thread
+//! set — keep the observability probes in mind too (`probe_timeout`).
+
+use super::serve::text_request_timeout;
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Router tuning knobs.
+#[derive(Debug, Clone)]
+pub struct RouterConfig {
+    /// max requests drained into one fan-out round
+    pub max_batch: usize,
+    /// straggler wait when a round is underfull
+    pub max_wait: Duration,
+    /// bounded backlog; beyond it clients get `ERR overloaded`
+    pub queue_capacity: usize,
+    /// per-group socket deadline — a hung replica costs one group one
+    /// timeout, never a wedged router
+    pub upstream_timeout: Duration,
+    /// listen address (`127.0.0.1:0` = loopback, ephemeral)
+    pub bind: String,
+}
+
+impl Default for RouterConfig {
+    fn default() -> Self {
+        RouterConfig {
+            max_batch: 64,
+            max_wait: Duration::from_millis(2),
+            queue_capacity: 1024,
+            upstream_timeout: Duration::from_secs(10),
+            bind: "127.0.0.1:0".into(),
+        }
+    }
+}
+
+/// Live router counters.
+#[derive(Debug, Default)]
+pub struct RouterStats {
+    /// requests whose replica reply was delivered back to the client
+    pub routed: AtomicUsize,
+    /// requests that got no reply: upstream failed (`ERR upstream`) or the
+    /// client gave up waiting before the reply came back
+    pub errors: AtomicUsize,
+    /// requests refused with `ERR overloaded`
+    pub rejected: AtomicUsize,
+    /// fan-out rounds executed
+    pub batches: AtomicUsize,
+}
+
+/// `None` = the upstream replica failed; the client gets `ERR upstream`.
+type ReplySender = std::sync::mpsc::Sender<Option<String>>;
+
+/// One queued request awaiting fan-out.
+struct Pending {
+    line: String,
+    reply: ReplySender,
+}
+
+/// Bounded, poison-recovering request queue (shared with the scoring
+/// server's batcher — see `coordinator/queue.rs`).
+type Queue = super::queue::BoundedQueue<Pending>;
+
+/// A running fan-out router; dropping does NOT stop it — call `shutdown`.
+pub struct Router {
+    pub addr: SocketAddr,
+    pub stats: Arc<RouterStats>,
+    replicas: Arc<Vec<SocketAddr>>,
+    upstream_timeout: Duration,
+    stop: Arc<AtomicBool>,
+    accept_handle: Option<std::thread::JoinHandle<()>>,
+    batch_handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Router {
+    /// Start routing across `replicas` (at least one required).
+    pub fn start(replicas: Vec<SocketAddr>, cfg: RouterConfig) -> std::io::Result<Router> {
+        if replicas.is_empty() {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::InvalidInput,
+                "router needs at least one replica",
+            ));
+        }
+        let listener = TcpListener::bind(cfg.bind.as_str())?;
+        let addr = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stats = Arc::new(RouterStats::default());
+        let replicas = Arc::new(replicas);
+        let queue = Arc::new(Queue::new(cfg.queue_capacity));
+
+        let b_queue = queue.clone();
+        let b_stop = stop.clone();
+        let b_stats = stats.clone();
+        let b_replicas = replicas.clone();
+        let b_cfg = cfg.clone();
+        let batch_handle = std::thread::Builder::new()
+            .name("route-batcher".into())
+            .spawn(move || fanout_loop(b_replicas, b_queue, b_stop, b_stats, b_cfg))?;
+
+        let a_stop = stop.clone();
+        let a_stats = stats.clone();
+        let a_queue = queue.clone();
+        let a_replicas = replicas.clone();
+        let a_timeout = cfg.upstream_timeout;
+        let accept_handle = std::thread::Builder::new().name("route-accept".into()).spawn(
+            move || {
+                let mut conns: Vec<std::thread::JoinHandle<()>> = Vec::new();
+                while !a_stop.load(Ordering::Relaxed) {
+                    match listener.accept() {
+                        Ok((stream, _)) => {
+                            let q = a_queue.clone();
+                            let st = a_stats.clone();
+                            let stop2 = a_stop.clone();
+                            let rs = a_replicas.clone();
+                            conns.push(std::thread::spawn(move || {
+                                let _ = handle_conn(stream, q, st, stop2, rs, a_timeout);
+                            }));
+                            // prune finished handlers (same unbounded-handle
+                            // hazard as the scoring server's accept loop)
+                            conns.retain(|c| !c.is_finished());
+                        }
+                        Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            std::thread::sleep(Duration::from_millis(1));
+                        }
+                        Err(_) => break,
+                    }
+                }
+                for c in conns {
+                    let _ = c.join();
+                }
+            },
+        )?;
+
+        Ok(Router {
+            addr,
+            stats,
+            replicas,
+            upstream_timeout: cfg.upstream_timeout,
+            stop,
+            accept_handle: Some(accept_handle),
+            batch_handle: Some(batch_handle),
+        })
+    }
+
+    /// Each replica's current `VERSION id=`, `None` when unreachable.
+    /// Queried live — this is the fleet's version-skew probe.
+    pub fn replica_versions(&self) -> Vec<Option<u64>> {
+        let t = probe_timeout(self.upstream_timeout);
+        self.replicas.iter().map(|&a| query_version(a, t)).collect()
+    }
+
+    /// max−min over the reachable replicas' version ids (`None` when no
+    /// replica is reachable). 0 means the fleet is fully converged.
+    pub fn version_skew(&self) -> Option<u64> {
+        let ids: Vec<u64> = self.replica_versions().into_iter().flatten().collect();
+        let (min, max) = (ids.iter().min()?, ids.iter().max()?);
+        Some(max - min)
+    }
+
+    /// Stop the router and join its threads.
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.batch_handle.take() {
+            let _ = h.join();
+        }
+        if let Some(h) = self.accept_handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Deadline for observability probes (STATS skew, `replica_versions`).
+/// Capped well below the forwarding timeout: probes run serially per
+/// replica on the caller's thread, and a fleet of blackholed replicas must
+/// degrade a STATS call by seconds, not by `k × upstream_timeout`.
+fn probe_timeout(upstream: Duration) -> Duration {
+    upstream.min(Duration::from_secs(2))
+}
+
+/// One `VERSION` round trip; `None` on any failure.
+fn query_version(addr: SocketAddr, timeout: Duration) -> Option<u64> {
+    let reply = text_request_timeout(addr, "VERSION", timeout).ok()?;
+    reply
+        .strip_prefix("VERSION ")?
+        .split_whitespace()
+        .find_map(|tok| tok.strip_prefix("id=")?.parse().ok())
+}
+
+/// Drain batches off the queue and fan each one out across the replicas.
+fn fanout_loop(
+    replicas: Arc<Vec<SocketAddr>>,
+    queue: Arc<Queue>,
+    stop: Arc<AtomicBool>,
+    stats: Arc<RouterStats>,
+    cfg: RouterConfig,
+) {
+    let mut rotation = 0usize; // rotates so batch-of-1 traffic still spreads
+    while !stop.load(Ordering::Relaxed) {
+        let batch = queue.drain_batch(cfg.max_batch, cfg.max_wait, &stop);
+        if batch.is_empty() {
+            // empty ⇔ the drain observed `stop`
+            if stop.load(Ordering::Relaxed) {
+                return;
+            }
+            continue;
+        }
+
+        // round-robin split: request i → replica (rotation + i) % N
+        let n = replicas.len();
+        let mut lines: Vec<Vec<String>> = vec![Vec::new(); n];
+        let mut senders: Vec<Vec<ReplySender>> = (0..n).map(|_| Vec::new()).collect();
+        for (i, p) in batch.into_iter().enumerate() {
+            let g = (rotation + i) % n;
+            lines[g].push(p.line);
+            senders[g].push(p.reply);
+        }
+        rotation = rotation.wrapping_add(1);
+
+        // fan the groups out concurrently on the shared worker pool; each
+        // group is one pipelined connection to its replica
+        let groups: Vec<(SocketAddr, Vec<String>)> =
+            replicas.iter().copied().zip(lines).collect();
+        let replies: Vec<Vec<Option<String>>> = crate::runtime::pool::runtime()
+            .pool()
+            .par_map(&groups, |(addr, ls)| forward_group(*addr, ls, cfg.upstream_timeout));
+
+        stats.batches.fetch_add(1, Ordering::Relaxed);
+        for (group_replies, group_senders) in replies.into_iter().zip(senders) {
+            for (reply, sender) in group_replies.into_iter().zip(group_senders) {
+                let upstream_ok = reply.is_some();
+                // send fails when the client already gave up (its handler
+                // timed out and dropped the receiver) — that request was
+                // NOT served, so it must not count as routed or the
+                // zero-dropped-request checks would pass a lying fleet
+                let delivered = sender.send(reply).is_ok();
+                if upstream_ok && delivered {
+                    stats.routed.fetch_add(1, Ordering::Relaxed);
+                } else {
+                    stats.errors.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+        }
+    }
+}
+
+/// Forward one group of request lines over a single pipelined connection:
+/// write them all, then read the replies back in order. Any failure fails
+/// the whole group (`None` per request — the replica's per-connection
+/// handler is strictly in-order, so after an error the remaining replies
+/// can no longer be attributed safely).
+fn forward_group(addr: SocketAddr, lines: &[String], timeout: Duration) -> Vec<Option<String>> {
+    if lines.is_empty() {
+        return Vec::new();
+    }
+    let attempt = || -> std::io::Result<Vec<String>> {
+        let stream = TcpStream::connect_timeout(&addr, timeout)?;
+        stream.set_read_timeout(Some(timeout))?;
+        stream.set_write_timeout(Some(timeout))?;
+        let mut reader = BufReader::new(stream.try_clone()?);
+        let mut writer = BufWriter::new(stream);
+        for l in lines {
+            writeln!(writer, "{l}")?;
+        }
+        writer.flush()?;
+        let mut out = Vec::with_capacity(lines.len());
+        for _ in lines {
+            let mut reply = String::new();
+            if reader.read_line(&mut reply)? == 0 {
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::UnexpectedEof,
+                    "replica closed mid-group",
+                ));
+            }
+            out.push(reply.trim_end().to_string());
+        }
+        Ok(out)
+    };
+    match attempt() {
+        Ok(replies) => replies.into_iter().map(Some).collect(),
+        Err(_) => vec![None; lines.len()],
+    }
+}
+
+fn handle_conn(
+    stream: TcpStream,
+    queue: Arc<Queue>,
+    stats: Arc<RouterStats>,
+    stop: Arc<AtomicBool>,
+    replicas: Arc<Vec<SocketAddr>>,
+    upstream_timeout: Duration,
+) -> std::io::Result<()> {
+    stream.set_read_timeout(Some(Duration::from_millis(200)))?;
+    // a client that stops reading must error this thread out, not wedge it
+    stream.set_write_timeout(Some(Duration::from_secs(30)))?;
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut writer = BufWriter::new(stream);
+    let mut line = String::new();
+    loop {
+        line.clear();
+        match reader.read_line(&mut line) {
+            Ok(0) => return Ok(()),
+            Ok(_) => {}
+            Err(ref e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                if stop.load(Ordering::Relaxed) {
+                    return Ok(());
+                }
+                continue;
+            }
+            Err(e) => return Err(e),
+        }
+        let msg = line.trim();
+        if msg.is_empty() {
+            continue;
+        }
+        if msg == "QUIT" {
+            return Ok(());
+        }
+        if msg == "PING" {
+            writeln!(writer, "PONG")?;
+            writer.flush()?;
+            continue;
+        }
+        if msg == "STATS" {
+            let t = probe_timeout(upstream_timeout);
+            let versions: Vec<Option<u64>> =
+                replicas.iter().map(|&a| query_version(a, t)).collect();
+            let known: Vec<u64> = versions.iter().copied().flatten().collect();
+            let skew = match (known.iter().min(), known.iter().max()) {
+                (Some(lo), Some(hi)) => format!("{}", hi - lo),
+                _ => "?".into(),
+            };
+            let versions: Vec<String> = versions
+                .iter()
+                .map(|v| v.map_or_else(|| "?".into(), |id| id.to_string()))
+                .collect();
+            writeln!(
+                writer,
+                "STATS routed={} errors={} rejected={} batches={} replicas={} versions={} skew={skew}",
+                stats.routed.load(Ordering::Relaxed),
+                stats.errors.load(Ordering::Relaxed),
+                stats.rejected.load(Ordering::Relaxed),
+                stats.batches.load(Ordering::Relaxed),
+                replicas.len(),
+                versions.join(","),
+            )?;
+            writer.flush()?;
+            continue;
+        }
+        if msg.starts_with("SCORE ") {
+            let (tx, rx) = std::sync::mpsc::channel();
+            let accepted = {
+                let mut dq = queue.lock();
+                if dq.len() >= queue.capacity() {
+                    false
+                } else {
+                    dq.push_back(Pending { line: msg.to_string(), reply: tx });
+                    true
+                }
+            };
+            if !accepted {
+                stats.rejected.fetch_add(1, Ordering::Relaxed);
+                writeln!(writer, "ERR overloaded")?;
+                writer.flush()?;
+                continue;
+            }
+            queue.notify_one();
+            // reply wait covers queue time + one fan-out round; derive it
+            // from the configured upstream bound so a large
+            // upstream_timeout is never silently undercut by a constant
+            let reply_wait =
+                upstream_timeout.saturating_add(Duration::from_secs(5)).max(Duration::from_secs(30));
+            match rx.recv_timeout(reply_wait) {
+                Ok(Some(reply)) => writeln!(writer, "{reply}")?,
+                Ok(None) => writeln!(writer, "ERR upstream")?,
+                Err(_) => writeln!(writer, "ERR timeout")?,
+            }
+            writer.flush()?;
+            continue;
+        }
+        writeln!(writer, "ERR bad request")?;
+        writer.flush()?;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::serve::{text_request, ScoreServer, ServerConfig};
+    use super::*;
+    use crate::dense::Matrix;
+    use crate::regress::MultiLabelModel;
+    use crate::util::rng::Rng;
+
+    fn backend(seed: u64) -> ScoreServer {
+        let mut rng = Rng::seed_from_u64(seed);
+        let model = MultiLabelModel { z: Matrix::randn(10, 5, &mut rng) };
+        ScoreServer::start(model, ServerConfig::default()).unwrap()
+    }
+
+    #[test]
+    fn routes_scores_across_replicas_and_reports_skew() {
+        // identical model on every "replica" → identical replies whichever
+        // one a request lands on
+        let r1 = backend(7);
+        let r2 = backend(7);
+        let r3 = backend(7);
+        let router =
+            Router::start(vec![r1.addr, r2.addr, r3.addr], RouterConfig::default()).unwrap();
+
+        assert_eq!(text_request(router.addr, "PING").unwrap(), "PONG");
+        let direct = text_request(r1.addr, "SCORE 3 0:1.0,4:-0.5").unwrap();
+        for _ in 0..9 {
+            let via = text_request(router.addr, "SCORE 3 0:1.0,4:-0.5").unwrap();
+            assert_eq!(via, direct, "routed reply must match a direct one");
+        }
+        assert_eq!(router.stats.routed.load(Ordering::Relaxed), 9);
+        assert_eq!(router.stats.errors.load(Ordering::Relaxed), 0);
+
+        let stats = text_request(router.addr, "STATS").unwrap();
+        assert!(stats.contains("replicas=3"), "{stats}");
+        assert!(stats.contains("skew=0"), "{stats}");
+        // all three backends serve version 0 here
+        assert!(stats.contains("versions=0,0,0"), "{stats}");
+        assert_eq!(router.version_skew(), Some(0));
+
+        assert!(text_request(router.addr, "LEARN 0 0:1.0").unwrap().starts_with("ERR"));
+
+        router.shutdown();
+        r1.shutdown();
+        r2.shutdown();
+        r3.shutdown();
+    }
+
+    #[test]
+    fn dead_replica_fails_its_group_not_the_router() {
+        let live = backend(9);
+        // a bound-then-dropped listener gives a connection-refused address
+        let dead_addr = {
+            let l = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+            l.local_addr().unwrap()
+        };
+        let cfg = RouterConfig {
+            upstream_timeout: Duration::from_millis(500),
+            ..Default::default()
+        };
+        let router = Router::start(vec![live.addr, dead_addr], cfg).unwrap();
+        let mut ok = 0;
+        let mut upstream_err = 0;
+        for _ in 0..8 {
+            let reply = text_request(router.addr, "SCORE 2 1:1.0").unwrap();
+            if reply.starts_with("OK ") {
+                ok += 1;
+            } else {
+                assert_eq!(reply, "ERR upstream", "{reply}");
+                upstream_err += 1;
+            }
+        }
+        assert!(ok > 0, "live replica must keep answering");
+        assert!(upstream_err > 0, "dead replica must surface as ERR upstream");
+        let stats = text_request(router.addr, "STATS").unwrap();
+        assert!(stats.contains("versions=0,?"), "{stats}");
+        assert!(stats.contains("skew=0"), "{stats}");
+        router.shutdown();
+        live.shutdown();
+    }
+}

@@ -16,6 +16,27 @@
 //! factorization through [`crate::model::OnlineUpdater`] (paper Eq. 2) and
 //! publishes the result to the model store when one is attached.
 //!
+//! ## Replication
+//!
+//! A server with a store answers `SHIP <have_id>` with its latest `FPIM`
+//! snapshot (verbatim file bytes — see `crate::model::ship` for the wire
+//! format), which is how follower replicas mirror a primary. A server
+//! started with [`ScoreServer::start_replica`] (`serve --replica-of
+//! <addr>`) is such a follower: a sync thread polls the primary every
+//! `--poll-ms`, installs new snapshots into the replica's *local* store
+//! under the primary's version ids, and hot-swaps them into the slot —
+//! the same zero-downtime boundary as `LEARN`/`RELOAD`. Replicas are
+//! read-only (`LEARN`/`RELOAD` answer errors) but do answer `SHIP`, so
+//! fan-out can be chained.
+//!
+//! **Version-skew semantics:** replica stores mirror primary ids, so
+//! `VERSION id=` compares directly across a fleet. A replica's id trails
+//! the primary's by at most one poll interval plus one snapshot transfer;
+//! the fan-out router (`crate::coordinator::router`) reports the live
+//! spread as `skew=` (max − min over reachable replicas) in its `STATS`.
+//! Skew 0 means every replica serves the same bytes — and because
+//! save→load is bitwise-identical, byte-identical scores.
+//!
 //! Protocol (line-oriented text):
 //! ```text
 //! -> SCORE <topk> j1:v1,j2:v2,...
@@ -32,6 +53,7 @@
 //!                                          store's latest and discards it)
 //! -> VERSION         <- VERSION id=... rank=... features=... labels=... updates=... pending=...
 //! -> RELOAD          <- OK version=...    (re-serve the store's latest)
+//! -> SHIP <have>     <- SNAPSHOT version=... bytes=...<raw body> | UNCHANGED version=...
 //! -> PING            <- PONG
 //! -> STATS           <- STATS served=... batches=... rejected=... avg_batch=... queue_depth=... swaps=... learned=...
 //! -> QUIT            (closes the connection)
@@ -45,16 +67,15 @@
 //! disabled` / `ERR no model store` on a server started without the
 //! corresponding lifecycle pieces.
 
-use crate::model::{ModelStore, OnlineUpdater};
+use crate::model::{ship, ModelStore, OnlineUpdater};
 use crate::regress::metrics::top_k_indices;
 use crate::regress::MultiLabelModel;
 use crate::sparse::{Coo, Csr};
-use std::collections::VecDeque;
 use std::io::{BufRead, BufReader, BufWriter, Write};
-use std::net::{TcpListener, TcpStream};
+use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
-use std::sync::{Arc, Condvar, Mutex, MutexGuard};
-use std::time::Duration;
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::time::{Duration, Instant};
 
 /// Server tuning knobs.
 #[derive(Debug, Clone)]
@@ -68,6 +89,10 @@ pub struct ServerConfig {
     /// the batcher's scoring pass to that many participants — so a server
     /// can be pinned narrower than the shared pool it runs on.
     pub threads: usize,
+    /// Listen address. The default ephemeral loopback suits tests and
+    /// single-host stacks; multi-host replica fan-out binds a routable
+    /// address here (`serve --bind 0.0.0.0:7070`).
+    pub bind: String,
 }
 
 impl Default for ServerConfig {
@@ -77,6 +102,30 @@ impl Default for ServerConfig {
             max_wait: Duration::from_millis(2),
             queue_capacity: 1024,
             threads: 0,
+            bind: "127.0.0.1:0".into(),
+        }
+    }
+}
+
+/// How a follower replica tracks its primary.
+#[derive(Debug, Clone)]
+pub struct ReplicaConfig {
+    /// the primary's serving address (any server with a store answers SHIP)
+    pub primary: SocketAddr,
+    /// how often the sync thread polls `SHIP` — the upper bound a replica
+    /// trails the primary by, excluding transfer time
+    pub poll: Duration,
+    /// per-round-trip socket timeout, and the bound on the blocking initial
+    /// sync a cold (empty-store) replica performs before serving
+    pub timeout: Duration,
+}
+
+impl Default for ReplicaConfig {
+    fn default() -> Self {
+        ReplicaConfig {
+            primary: SocketAddr::from(([127, 0, 0, 1], 0)),
+            poll: Duration::from_millis(200),
+            timeout: ship::SHIP_TIMEOUT,
         }
     }
 }
@@ -177,7 +226,7 @@ impl ModelSlot {
 /// internal lock; the batcher only ever touches the slot.
 struct Lifecycle {
     updater: Mutex<OnlineUpdater>,
-    store: Option<ModelStore>,
+    store: Option<Arc<ModelStore>>,
 }
 
 impl Lifecycle {
@@ -201,34 +250,8 @@ struct Pending {
     reply: std::sync::mpsc::Sender<BatchReply>,
 }
 
-struct Queue {
-    deque: Mutex<VecDeque<Pending>>,
-    cv: Condvar,
-    capacity: usize,
-}
-
-impl Queue {
-    /// Lock the queue, recovering from poisoning: a panicking thread that
-    /// held the lock leaves the deque structurally intact (push/pop are not
-    /// interruptible mid-write in safe code), and dropping the whole queue
-    /// because one worker died is exactly the cascade this server must not
-    /// have — degraded service (`ERR overloaded`) beats no service.
-    fn lock(&self) -> MutexGuard<'_, VecDeque<Pending>> {
-        self.deque.lock().unwrap_or_else(|e| e.into_inner())
-    }
-
-    /// `Condvar::wait_timeout` with the same poison recovery.
-    fn wait_timeout<'a>(
-        &self,
-        guard: MutexGuard<'a, VecDeque<Pending>>,
-        dur: Duration,
-    ) -> MutexGuard<'a, VecDeque<Pending>> {
-        match self.cv.wait_timeout(guard, dur) {
-            Ok((g, _timeout)) => g,
-            Err(poisoned) => poisoned.into_inner().0,
-        }
-    }
-}
+/// Bounded, poison-recovering request queue (shared with the router).
+type Queue = super::queue::BoundedQueue<Pending>;
 
 /// A running scoring server; dropping does NOT stop it — call `shutdown`.
 pub struct ScoreServer {
@@ -238,20 +261,22 @@ pub struct ScoreServer {
     stop: Arc<AtomicBool>,
     accept_handle: Option<std::thread::JoinHandle<()>>,
     batch_handle: Option<std::thread::JoinHandle<()>>,
+    sync_handle: Option<std::thread::JoinHandle<()>>,
 }
 
 impl ScoreServer {
-    /// Start serving `model` on 127.0.0.1 (ephemeral port). No lifecycle:
-    /// `LEARN` and `RELOAD` answer with errors; `SCORE`/`VERSION`/`STATS`
-    /// work as always.
+    /// Start serving `model` (default config binds 127.0.0.1, ephemeral
+    /// port). No lifecycle: `LEARN` and `RELOAD` answer with errors;
+    /// `SCORE`/`VERSION`/`STATS` work as always.
     pub fn start(model: MultiLabelModel, cfg: ServerConfig) -> std::io::Result<ScoreServer> {
         let serving = ServingModel { version: 0, rank: 0, model };
-        Self::start_inner(serving, None, cfg)
+        Self::start_inner(serving, None, None, cfg)
     }
 
     /// Start serving the updater's live model with the full lifecycle:
     /// `LEARN` folds examples and hot-swaps (publishing to `store` when
-    /// present), `RELOAD` re-serves the store's latest version.
+    /// present), `RELOAD` re-serves the store's latest version, `SHIP`
+    /// answers follower replicas.
     pub fn start_lifecycle(
         updater: OnlineUpdater,
         store: Option<ModelStore>,
@@ -260,13 +285,62 @@ impl ScoreServer {
     ) -> std::io::Result<ScoreServer> {
         let art = updater.artifact();
         let serving = ServingModel { version, rank: art.rank(), model: art.model() };
-        let lifecycle = Lifecycle { updater: Mutex::new(updater), store };
-        Self::start_inner(serving, Some(Arc::new(lifecycle)), cfg)
+        let lifecycle = Lifecycle { updater: Mutex::new(updater), store: store.map(Arc::new) };
+        Self::start_inner(serving, Some(Arc::new(lifecycle)), None, cfg)
+    }
+
+    /// Start a read-only follower replica: serve the local `store`'s latest
+    /// model while a sync thread pull-replicates new snapshots from
+    /// `replica.primary` (installing them under the primary's version ids)
+    /// and hot-swaps them in. A cold replica (empty local store) blocks
+    /// here until the first snapshot arrives — bounded by
+    /// `replica.timeout` — so a successful return means the replica is
+    /// serving a real model at a known version.
+    pub fn start_replica(
+        store: ModelStore,
+        replica: ReplicaConfig,
+        cfg: ServerConfig,
+    ) -> crate::error::Result<ScoreServer> {
+        let mut current = store.load_latest()?;
+        if current.is_none() {
+            let deadline = Instant::now() + replica.timeout;
+            loop {
+                // per-attempt timeout stays short so a down primary is
+                // retried instead of eating the whole deadline in one call
+                let step = replica.timeout.min(Duration::from_secs(2));
+                match ship::sync_once(&store, replica.primary, step) {
+                    Ok(Some(got)) => {
+                        current = Some(got);
+                        break;
+                    }
+                    Ok(None) => {} // primary reachable but its store is empty
+                    Err(e) if Instant::now() >= deadline => {
+                        return Err(crate::error::Error::Invalid(format!(
+                            "replica: no snapshot from {} within {:?}: {e}",
+                            replica.primary, replica.timeout
+                        )));
+                    }
+                    Err(_) => {}
+                }
+                if Instant::now() >= deadline {
+                    return Err(crate::error::Error::Invalid(format!(
+                        "replica: primary {} has no model to ship (deadline {:?})",
+                        replica.primary, replica.timeout
+                    )));
+                }
+                std::thread::sleep(replica.poll.min(Duration::from_millis(200)));
+            }
+        }
+        let (version, artifact) = current.expect("loop above guarantees a model");
+        let serving = ServingModel { version, rank: artifact.rank(), model: artifact.model() };
+        Self::start_inner(serving, None, Some((Arc::new(store), replica)), cfg)
+            .map_err(crate::error::Error::Io)
     }
 
     fn start_inner(
         serving: ServingModel,
         lifecycle: Option<Arc<Lifecycle>>,
+        replica: Option<(Arc<ModelStore>, ReplicaConfig)>,
         cfg: ServerConfig,
     ) -> std::io::Result<ScoreServer> {
         if cfg.threads > 0 {
@@ -274,17 +348,21 @@ impl ScoreServer {
             // the runtime up; a no-op if the runtime is already running
             crate::runtime::pool::configure_threads(cfg.threads);
         }
-        let listener = TcpListener::bind("127.0.0.1:0")?;
+        let listener = TcpListener::bind(cfg.bind.as_str())?;
         let addr = listener.local_addr()?;
         listener.set_nonblocking(true)?;
         let stop = Arc::new(AtomicBool::new(false));
         let stats = Arc::new(ServerStats::default());
         let slot = Arc::new(ModelSlot::new(serving));
-        let queue = Arc::new(Queue {
-            deque: Mutex::new(VecDeque::new()),
-            cv: Condvar::new(),
-            capacity: cfg.queue_capacity,
-        });
+        let queue = Arc::new(Queue::new(cfg.queue_capacity));
+
+        // the store SHIP serves snapshots from: a replica re-ships its
+        // local mirror (chained fan-out), a primary ships its own store
+        let ship_store: Option<Arc<ModelStore>> = match (&replica, &lifecycle) {
+            (Some((st, _)), _) => Some(st.clone()),
+            (None, Some(lc)) => lc.store.clone(),
+            _ => None,
+        };
 
         // batcher thread
         let b_queue = queue.clone();
@@ -295,6 +373,21 @@ impl ScoreServer {
         let batch_handle = std::thread::Builder::new()
             .name("score-batcher".into())
             .spawn(move || batcher_loop(b_slot, b_queue, b_stop, b_stats, b_cfg))?;
+
+        // replica sync thread: poll the primary, install, hot-swap
+        let sync_handle = match replica {
+            Some((rstore, rc)) => {
+                let s_slot = slot.clone();
+                let s_stats = stats.clone();
+                let s_stop = stop.clone();
+                Some(
+                    std::thread::Builder::new()
+                        .name("replica-sync".into())
+                        .spawn(move || replica_sync_loop(rstore, rc, s_slot, s_stats, s_stop))?,
+                )
+            }
+            None => None,
+        };
 
         // accept loop
         let a_stop = stop.clone();
@@ -312,9 +405,16 @@ impl ScoreServer {
                             let stop2 = a_stop.clone();
                             let sl = a_slot.clone();
                             let lc = lifecycle.clone();
+                            let ss = ship_store.clone();
                             conns.push(std::thread::spawn(move || {
-                                let _ = handle_conn(stream, q, st, stop2, sl, lc);
+                                let _ = handle_conn(stream, q, st, stop2, sl, lc, ss);
                             }));
+                            // prune finished handlers: follower SHIP polls
+                            // open a fresh connection every poll interval,
+                            // and hoarding every exited thread's handle
+                            // until shutdown would leak mappings without
+                            // bound on a long-running primary
+                            conns.retain(|c| !c.is_finished());
                         }
                         Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
                             std::thread::sleep(Duration::from_millis(1));
@@ -335,6 +435,7 @@ impl ScoreServer {
             stop,
             accept_handle: Some(accept_handle),
             batch_handle: Some(batch_handle),
+            sync_handle,
         })
     }
 
@@ -350,8 +451,52 @@ impl ScoreServer {
         if let Some(h) = self.batch_handle.take() {
             let _ = h.join();
         }
+        if let Some(h) = self.sync_handle.take() {
+            let _ = h.join();
+        }
         if let Some(h) = self.accept_handle.take() {
             let _ = h.join();
+        }
+    }
+}
+
+/// Follower sync loop: one `SHIP` round trip per poll interval; a new
+/// snapshot is installed into the local store and hot-swapped into the
+/// slot. Transient failures (primary down, mid-publish, network) are
+/// retried on the next poll — a replica keeps serving its current version
+/// no matter what happens to the primary.
+fn replica_sync_loop(
+    store: Arc<ModelStore>,
+    rc: ReplicaConfig,
+    slot: Arc<ModelSlot>,
+    stats: Arc<ServerStats>,
+    stop: Arc<AtomicBool>,
+) {
+    // Per-IO-op timeout capped short (matching the cold-start loop): the
+    // socket timeout applies per read/write syscall, so a slow-but-flowing
+    // snapshot transfer still completes, while a blackholed primary can
+    // stall one attempt — and therefore shutdown's join of this thread —
+    // by at most ~2s instead of the full rc.timeout.
+    let step = rc.timeout.min(Duration::from_secs(2));
+    while !stop.load(Ordering::Relaxed) {
+        match ship::sync_once(&store, rc.primary, step) {
+            Ok(Some((version, artifact))) => {
+                let serving =
+                    ServingModel { version, rank: artifact.rank(), model: artifact.model() };
+                slot.swap(Arc::new(serving));
+                stats.swaps.fetch_add(1, Ordering::Relaxed);
+            }
+            Ok(None) => {}
+            Err(_) => {} // transient; retry next poll
+        }
+        // sleep in slices so shutdown stays responsive at long intervals
+        let deadline = Instant::now() + rc.poll;
+        while !stop.load(Ordering::Relaxed) {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            std::thread::sleep((deadline - now).min(Duration::from_millis(20)));
         }
     }
 }
@@ -364,37 +509,13 @@ fn batcher_loop(
     cfg: ServerConfig,
 ) {
     while !stop.load(Ordering::Relaxed) {
-        // collect a batch
-        let mut batch: Vec<Pending> = Vec::new();
-        {
-            let mut dq = queue.lock();
-            // wait for the first request
-            while dq.is_empty() && !stop.load(Ordering::Relaxed) {
-                dq = queue.wait_timeout(dq, Duration::from_millis(20));
-            }
+        // collect a batch (shared wait/drain/straggler discipline)
+        let batch = queue.drain_batch(cfg.max_batch, cfg.max_wait, &stop);
+        if batch.is_empty() {
+            // empty ⇔ the drain observed `stop`
             if stop.load(Ordering::Relaxed) {
                 return;
             }
-            // drain what's there (up to max_batch)
-            while batch.len() < cfg.max_batch {
-                match dq.pop_front() {
-                    Some(p) => batch.push(p),
-                    None => break,
-                }
-            }
-        }
-        // brief straggler wait if underfull
-        if batch.len() < cfg.max_batch && !cfg.max_wait.is_zero() {
-            std::thread::sleep(cfg.max_wait);
-            let mut dq = queue.lock();
-            while batch.len() < cfg.max_batch {
-                match dq.pop_front() {
-                    Some(p) => batch.push(p),
-                    None => break,
-                }
-            }
-        }
-        if batch.is_empty() {
             continue;
         }
 
@@ -456,8 +577,13 @@ fn handle_conn(
     stop: Arc<AtomicBool>,
     slot: Arc<ModelSlot>,
     lifecycle: Option<Arc<Lifecycle>>,
+    ship_store: Option<Arc<ModelStore>>,
 ) -> std::io::Result<()> {
     stream.set_read_timeout(Some(Duration::from_millis(200)))?;
+    // Bounded writes too: SHIP streams multi-MB snapshot bodies, and a
+    // receiver that stops reading would otherwise block this thread in
+    // write_all forever — past the stop flag and past shutdown's join.
+    stream.set_write_timeout(Some(REQUEST_TIMEOUT))?;
     let mut reader = BufReader::new(stream.try_clone()?);
     let mut writer = BufWriter::new(stream);
     let mut line = String::new();
@@ -532,6 +658,20 @@ fn handle_conn(
             writer.flush()?;
             continue;
         }
+        if let Some(rest) = msg.strip_prefix("SHIP ") {
+            match (rest.trim().parse::<u64>(), &ship_store) {
+                (Ok(have), Some(store)) => ship::serve_ship(&mut writer, store, have)?,
+                (Ok(_), None) => {
+                    writeln!(writer, "ERR no model store")?;
+                    writer.flush()?;
+                }
+                (Err(_), _) => {
+                    writeln!(writer, "ERR bad request")?;
+                    writer.flush()?;
+                }
+            }
+            continue;
+        }
         if let Some(rest) = msg.strip_prefix("LEARN ") {
             writeln!(writer, "{}", handle_learn(rest, &lifecycle, &slot, &stats))?;
             writer.flush()?;
@@ -542,7 +682,7 @@ fn handle_conn(
                 let (tx, rx) = std::sync::mpsc::channel();
                 let accepted = {
                     let mut dq = queue.lock();
-                    if dq.len() >= queue.capacity {
+                    if dq.len() >= queue.capacity() {
                         false
                     } else {
                         dq.push_back(Pending { indices, values, topk, reply: tx });
@@ -555,7 +695,7 @@ fn handle_conn(
                     writer.flush()?;
                     continue;
                 }
-                queue.cv.notify_one();
+                queue.notify_one();
                 match rx.recv_timeout(Duration::from_secs(30)) {
                     Ok(Some(result)) => {
                         let body: Vec<String> =
@@ -737,17 +877,44 @@ pub fn score_request(
     Ok(out)
 }
 
+/// Default deadline for one [`text_request`] round trip. Matches the
+/// server's own 30 s internal batch-reply timeout, so a client never gives
+/// up on a reply the server still intends to send — but a hung or
+/// half-dead peer can no longer wedge a caller forever (the CI checks
+/// drive whole clusters through this helper).
+pub const REQUEST_TIMEOUT: Duration = Duration::from_secs(30);
+
 /// Blocking client helper: send one protocol line, return the reply line
 /// (trailing newline stripped). Used by the lifecycle verbs, the CLI smoke
-/// check, and the benches.
+/// checks, and the benches. Connect/read/write are bounded by
+/// [`REQUEST_TIMEOUT`]; use [`text_request_timeout`] for a custom bound.
 pub fn text_request(addr: std::net::SocketAddr, line: &str) -> std::io::Result<String> {
-    let stream = TcpStream::connect(addr)?;
+    text_request_timeout(addr, line, REQUEST_TIMEOUT)
+}
+
+/// [`text_request`] with an explicit per-round-trip deadline. A peer that
+/// accepts the connection but never answers yields `TimedOut`/`WouldBlock`
+/// instead of blocking forever; a peer that closes without replying yields
+/// `UnexpectedEof`.
+pub fn text_request_timeout(
+    addr: std::net::SocketAddr,
+    line: &str,
+    timeout: Duration,
+) -> std::io::Result<String> {
+    let stream = TcpStream::connect_timeout(&addr, timeout)?;
+    stream.set_read_timeout(Some(timeout))?;
+    stream.set_write_timeout(Some(timeout))?;
     let mut reader = BufReader::new(stream.try_clone()?);
     let mut writer = BufWriter::new(stream);
     writeln!(writer, "{line}")?;
     writer.flush()?;
     let mut reply = String::new();
-    reader.read_line(&mut reply)?;
+    if reader.read_line(&mut reply)? == 0 {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::UnexpectedEof,
+            "server closed the connection without replying",
+        ));
+    }
     Ok(reply.trim_end().to_string())
 }
 
@@ -888,6 +1055,72 @@ mod tests {
         let l = text_request(server.addr, "LEARN 1 0:1.0").unwrap();
         assert!(l.starts_with("ERR"), "{l}");
         server.shutdown();
+    }
+
+    #[test]
+    fn replica_follows_primary_and_reships() {
+        use crate::model::format::testutil::sample_artifact;
+        use crate::model::UpdaterConfig;
+        let dir_p = std::env::temp_dir().join("fastpi_serve_replica_p");
+        let dir_r = std::env::temp_dir().join("fastpi_serve_replica_r");
+        for d in [&dir_p, &dir_r] {
+            let _ = std::fs::remove_dir_all(d);
+        }
+        let store_p = ModelStore::open(&dir_p).unwrap();
+        let art = sample_artifact(1, 12, 6, 4, 3);
+        assert_eq!(store_p.publish(&art).unwrap(), 1);
+        let primary = ScoreServer::start_lifecycle(
+            OnlineUpdater::new(art, UpdaterConfig::default()),
+            Some(store_p),
+            1,
+            ServerConfig::default(),
+        )
+        .unwrap();
+
+        let rc = ReplicaConfig {
+            primary: primary.addr,
+            poll: Duration::from_millis(10),
+            timeout: Duration::from_secs(10),
+        };
+        let replica = ScoreServer::start_replica(
+            ModelStore::open(&dir_r).unwrap(),
+            rc,
+            ServerConfig::default(),
+        )
+        .unwrap();
+        // cold start synced before serving, at the primary's id
+        assert_eq!(replica.current_version(), 1);
+
+        // same version ⇒ byte-identical scores
+        let probe = "SCORE 2 0:1.0,5:0.5";
+        let p = text_request(primary.addr, probe).unwrap();
+        let r = text_request(replica.addr, probe).unwrap();
+        assert!(p.starts_with("OK "), "{p}");
+        assert_eq!(p, r, "replica must serve byte-identical scores at the same version");
+
+        // replicas are read-only
+        assert!(text_request(replica.addr, "LEARN 0 0:1.0").unwrap().starts_with("ERR"));
+        assert!(text_request(replica.addr, "RELOAD").unwrap().starts_with("ERR"));
+
+        // a publish into the primary's store propagates via polling
+        let art2 = sample_artifact(2, 12, 6, 4, 3);
+        assert_eq!(ModelStore::open(&dir_p).unwrap().publish(&art2).unwrap(), 2);
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while replica.current_version() != 2 {
+            assert!(Instant::now() < deadline, "replica never reached v2");
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        // and the replica re-ships its mirror (chained fan-out)
+        match crate::model::ship::fetch_snapshot(replica.addr, 0, Duration::from_secs(10)).unwrap()
+        {
+            crate::model::ShipReply::Snapshot { version, bytes } => {
+                assert_eq!(version, 2);
+                assert_eq!(bytes, std::fs::read(dir_p.join("v000002.fpim")).unwrap());
+            }
+            other => panic!("expected a snapshot, got {other:?}"),
+        }
+        replica.shutdown();
+        primary.shutdown();
     }
 
     #[test]

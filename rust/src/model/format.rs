@@ -200,6 +200,20 @@ fn encode_payload(a: &ModelArtifact) -> Vec<u8> {
     p
 }
 
+/// Serialize a model to complete `FPIM` file bytes (header + payload) —
+/// exactly what [`write_model`] puts on disk, so snapshot shipping can send
+/// a model from memory and the receiver sees verbatim store bytes.
+pub fn encode_model_bytes(a: &ModelArtifact) -> Vec<u8> {
+    let payload = encode_payload(a);
+    let mut out = Vec::with_capacity(24 + payload.len());
+    out.extend_from_slice(MAGIC);
+    out.extend_from_slice(&FORMAT_VERSION.to_le_bytes());
+    out.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+    out.extend_from_slice(&fnv1a(&payload).to_le_bytes());
+    out.extend_from_slice(&payload);
+    out
+}
+
 /// Write a model file (not atomic — the store handles temp-file + rename).
 pub fn write_model(path: &Path, a: &ModelArtifact) -> Result<()> {
     let payload = encode_payload(a);
@@ -214,19 +228,19 @@ pub fn write_model(path: &Path, a: &ModelArtifact) -> Result<()> {
     Ok(())
 }
 
-/// Read and validate a model file (magic, format version, length, checksum).
-pub fn read_model(path: &Path) -> Result<ModelArtifact> {
-    let mut f = std::fs::File::open(path)?;
-    let mut buf = Vec::new();
-    f.read_to_end(&mut buf)?;
+/// Validate the framing of a complete `FPIM` buffer — magic, format
+/// version, payload length, FNV-1a checksum — without materializing any
+/// matrices, and return the payload slice. This is the cheap integrity
+/// check snapshot shipping runs on both ends (`ctx` names the source for
+/// error messages: a path, "shipped snapshot", ...).
+pub fn validate_bytes<'a>(buf: &'a [u8], ctx: &str) -> Result<&'a [u8]> {
     if buf.len() < 24 || &buf[..4] != MAGIC {
-        return Err(Error::Invalid(format!("{}: not an FPIM model", path.display())));
+        return Err(Error::Invalid(format!("{ctx}: not an FPIM model")));
     }
     let version = u32::from_le_bytes(buf[4..8].try_into().unwrap());
     if version != FORMAT_VERSION {
         return Err(Error::Invalid(format!(
-            "{}: FPIM format version {version} (this build reads {FORMAT_VERSION})",
-            path.display()
+            "{ctx}: FPIM format version {version} (this build reads {FORMAT_VERSION})"
         )));
     }
     let len = u64::from_le_bytes(buf[8..16].try_into().unwrap()) as usize;
@@ -234,14 +248,30 @@ pub fn read_model(path: &Path) -> Result<ModelArtifact> {
     let payload = &buf[24..];
     if payload.len() != len {
         return Err(Error::Invalid(format!(
-            "{}: FPIM length mismatch ({} vs {len})",
-            path.display(),
+            "{ctx}: FPIM length mismatch ({} vs {len})",
             payload.len()
         )));
     }
     if fnv1a(payload) != checksum {
-        return Err(Error::Invalid(format!("{}: FPIM checksum mismatch", path.display())));
+        return Err(Error::Invalid(format!("{ctx}: FPIM checksum mismatch")));
     }
+    Ok(payload)
+}
+
+/// Read and validate a model file (magic, format version, length, checksum).
+pub fn read_model(path: &Path) -> Result<ModelArtifact> {
+    let mut f = std::fs::File::open(path)?;
+    let mut buf = Vec::new();
+    f.read_to_end(&mut buf)?;
+    read_model_bytes(&buf, &path.display().to_string())
+}
+
+/// Parse a complete `FPIM` buffer. Every field of untrusted input is
+/// validated — framing first ([`validate_bytes`]), then the dimension
+/// block with checked arithmetic — so corrupt, truncated, or hostile bytes
+/// return `Err` without panicking or allocating oversized buffers.
+pub fn read_model_bytes(buf: &[u8], ctx: &str) -> Result<ModelArtifact> {
+    let payload = validate_bytes(buf, ctx)?;
 
     let mut cur = Cursor { buf: payload, off: 0 };
     let ds_len = cur.u64()? as usize;
@@ -270,13 +300,10 @@ pub fn read_model(path: &Path) -> Result<ModelArtifact> {
         .and_then(|x| rank.checked_mul(labels).and_then(|y| x.checked_add(y)))
         .and_then(|x| n.checked_mul(labels).and_then(|y| x.checked_add(y)))
         .and_then(|x| x.checked_mul(8))
-        .ok_or_else(|| {
-            Error::Invalid(format!("{}: FPIM dimensions overflow", path.display()))
-        })?;
+        .ok_or_else(|| Error::Invalid(format!("{ctx}: FPIM dimensions overflow")))?;
     if cur.buf.len() - cur.off != expect {
         return Err(Error::Invalid(format!(
-            "{}: FPIM body mismatch: {} bytes left, {expect} expected",
-            path.display(),
+            "{ctx}: FPIM body mismatch: {} bytes left, {expect} expected",
             cur.buf.len() - cur.off,
         )));
     }
@@ -424,5 +451,100 @@ mod tests {
         // garbage
         std::fs::write(&bad, b"definitely not a model").unwrap();
         assert!(read_model(&bad).is_err());
+    }
+
+    #[test]
+    fn encode_bytes_matches_written_file() {
+        let a = sample_artifact(14, 11, 6, 3, 4);
+        let path = tmpdir("fmt_enc").join("m.fpim");
+        write_model(&path, &a).unwrap();
+        let on_disk = std::fs::read(&path).unwrap();
+        assert_eq!(encode_model_bytes(&a), on_disk, "in-memory encoding must equal file bytes");
+        // and the byte-level reader accepts them
+        let b = read_model_bytes(&on_disk, "enc").unwrap();
+        assert_eq!(a.z.data(), b.z.data());
+    }
+
+    // -- property pass over the untrusted read path -------------------------
+    //
+    // The read path consumes bytes that may come off the wire (snapshot
+    // shipping) or from a corrupted disk. These properties pin the PR-2
+    // hardening claims: any truncation or bit-flip of a valid buffer is an
+    // `Err` (never a panic), arbitrary garbage never panics, and hostile
+    // dimension fields are rejected by checked arithmetic before any
+    // allocation can OOM.
+
+    #[test]
+    fn prop_truncations_are_rejected_without_panic() {
+        use crate::util::propcheck::check;
+        let good = encode_model_bytes(&sample_artifact(77, 12, 6, 4, 3));
+        assert!(read_model_bytes(&good, "fuzz").is_ok(), "pristine buffer must parse");
+        check("every strict truncation of a valid FPIM buffer errors", 200, |rng| {
+            let cut = rng.usize_below(good.len()); // 0..len-1: strictly shorter
+            assert!(read_model_bytes(&good[..cut], "trunc").is_err(), "cut at {cut} parsed");
+        });
+    }
+
+    #[test]
+    fn prop_bit_flips_are_rejected_without_panic() {
+        use crate::util::propcheck::check;
+        let good = encode_model_bytes(&sample_artifact(78, 10, 7, 3, 3));
+        check("every single-bit flip of a valid FPIM buffer errors", 300, |rng| {
+            let mut bytes = good.clone();
+            let i = rng.usize_below(bytes.len());
+            let bit = 1u8 << rng.usize_below(8);
+            bytes[i] ^= bit;
+            // header flips break magic/version/length/checksum fields;
+            // payload flips break the FNV-1a checksum — either way: Err
+            assert!(
+                read_model_bytes(&bytes, "flip").is_err(),
+                "flip at byte {i} bit {bit:#04b} still parsed"
+            );
+        });
+    }
+
+    #[test]
+    fn prop_random_garbage_never_panics() {
+        use crate::util::propcheck::check;
+        check("arbitrary byte soup never panics the reader", 200, |rng| {
+            let n = rng.usize_below(4096);
+            let mut b = vec![0u8; n];
+            for x in b.iter_mut() {
+                *x = (rng.next_u64() & 0xFF) as u8;
+            }
+            // magic-prefix some cases so the fuzz reaches past the first check
+            if n >= 4 && rng.f64() < 0.5 {
+                b[..4].copy_from_slice(b"FPIM");
+            }
+            let _ = read_model_bytes(&b, "garbage"); // must return, not panic
+        });
+    }
+
+    #[test]
+    fn hostile_dimensions_are_rejected_before_allocation() {
+        use crate::util::hash::fnv1a;
+        // a well-formed buffer whose checksum is VALID but whose dimension
+        // block claims absurd sizes: the checked-arithmetic guard must
+        // reject it instead of wrapping past the size check (or trying to
+        // allocate m·rank·8 bytes)
+        let art = sample_artifact(79, 9, 5, 3, 2);
+        let ds_len = art.meta.dataset.len();
+        // payload offset of the `m` dim: dataset len field (8) + dataset
+        // bytes + scale/alpha/k (24) + five u64 counters (40) + drift (8)
+        let m_off = 24 + 8 + ds_len + 24 + 40 + 8;
+        for hostile in [u64::MAX, u64::MAX / 8, 1u64 << 61] {
+            let mut bytes = encode_model_bytes(&art);
+            bytes[m_off..m_off + 8].copy_from_slice(&hostile.to_le_bytes());
+            // re-seal the tampered payload so only the dimension guard can
+            // catch it (a stale checksum would mask the real check)
+            let sum = fnv1a(&bytes[24..]);
+            bytes[16..24].copy_from_slice(&sum.to_le_bytes());
+            let err = read_model_bytes(&bytes, "hostile").unwrap_err();
+            let msg = format!("{err}");
+            assert!(
+                msg.contains("overflow") || msg.contains("body mismatch"),
+                "hostile m={hostile} must trip the dimension guard, got: {msg}"
+            );
+        }
     }
 }

@@ -12,15 +12,20 @@
 //! * [`updater`] — the online incremental updater that folds new labeled
 //!   rows into the live factorization (paper Eq. 2), retrains `Z` in closed
 //!   form, and tracks truncation drift against a full re-solve threshold.
+//! * [`ship`] — snapshot shipping: the pull protocol follower replicas use
+//!   to mirror a primary's store over TCP, verbatim `FPIM` bytes with the
+//!   checksum re-verified on receipt.
 //!
 //! The serving side (`coordinator/serve.rs`) holds the current model in a
 //! swap slot the batcher re-reads every batch, so a newly published version
 //! goes live between two batches with zero downtime.
 
 pub mod format;
+pub mod ship;
 pub mod store;
 pub mod updater;
 
 pub use format::{read_model, write_model, ModelArtifact, ModelMeta};
+pub use ship::{fetch_snapshot, sync_once, ShipReply};
 pub use store::ModelStore;
 pub use updater::{OnlineUpdater, UpdateReport, UpdaterConfig};

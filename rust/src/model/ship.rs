@@ -1,0 +1,301 @@
+//! Snapshot shipping — replica fan-out for the model store.
+//!
+//! The incremental-SVD lifecycle makes the *model* the cheap unit to move
+//! between hosts: a replica never needs the raw sparse data, only the
+//! compact `FPIM` factor snapshot (`U/Σ/Vᵀ/Σ⁺/C/Z` + meta, a few MB at
+//! serving rank). This module is the wire half of that: a pull protocol a
+//! follower uses to mirror a primary's [`super::store::ModelStore`], one
+//! version file at a time, bytes verbatim.
+//!
+//! ## Protocol (rides on the scoring server's text protocol)
+//!
+//! ```text
+//! -> SHIP <have_id>
+//! <- SNAPSHOT version=<id> bytes=<n>\n   followed by n raw bytes: the
+//!                                        primary's v<id>.fpim file verbatim
+//! <- UNCHANGED version=<id>              (the primary has nothing newer)
+//! <- ERR <reason>
+//! ```
+//!
+//! The snapshot bytes are the stored `FPIM` file unmodified, so the
+//! receiver re-runs the format's own integrity check — magic, format
+//! version, payload length, FNV-1a checksum ([`format::validate_bytes`]) —
+//! before a single byte lands in its store. A replica store mirrors the
+//! primary's version ids (that is what makes version skew across a fleet
+//! observable via `VERSION`), and its MANIFEST pointer only ever moves
+//! forward.
+//!
+//! Pull, not push: followers poll `SHIP <local latest>` every `--poll-ms`.
+//! A dead follower costs the primary nothing, a new follower needs no
+//! registration, and a follower that missed ten versions catches up in one
+//! round trip (only the latest snapshot matters — versions are whole
+//! models, not deltas). Every socket carries read/write timeouts so a hung
+//! or half-dead peer can never wedge a poller or a CI check.
+//!
+//! **Trust model.** The checksum (and the size cap, and the incremental
+//! body read) defend against *corruption* — torn transfers, bad disks,
+//! bit rot — not against an adversarial primary: like every verb in this
+//! protocol (`LEARN` trusts its clients), `SHIP` assumes primary and
+//! followers belong to one operator. The `version=` id in particular is
+//! primary-asserted; a replica cross-checks it only locally (ids never
+//! regress, and [`super::store::ModelStore::install_snapshot`] rejects an
+//! id it already holds arriving with different bytes). Authenticating the
+//! channel is deployment-layer work (run it over a private network or a
+//! tunnel), not wire-format work.
+
+use super::format::{self, ModelArtifact};
+use super::store::ModelStore;
+use crate::error::{Error, Result};
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::time::Duration;
+
+/// Upper bound on an accepted snapshot. Guards the replica from a corrupt
+/// or hostile `bytes=` header making it allocate unbounded memory before
+/// the checksum can reject the body.
+pub const MAX_SNAPSHOT_BYTES: u64 = 1 << 34; // 16 GiB
+
+/// Default per-round-trip socket timeout for shipping.
+pub const SHIP_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// One `SHIP` round-trip's outcome.
+#[derive(Debug)]
+pub enum ShipReply {
+    /// The primary has nothing newer than the `have` id we sent.
+    Unchanged { version: u64 },
+    /// A new snapshot: the verbatim `FPIM` file bytes for `version`,
+    /// framing-validated (FNV-1a) on receipt.
+    Snapshot { version: u64, bytes: Vec<u8> },
+}
+
+fn bad_header(header: &str) -> Error {
+    Error::Invalid(format!("ship: bad reply header `{header}`"))
+}
+
+/// Ask `primary` for its latest snapshot if newer than `have`. Connect,
+/// read, and write are all bounded by `timeout`; the returned bytes are
+/// checksum-verified but not yet parsed into matrices.
+pub fn fetch_snapshot(primary: SocketAddr, have: u64, timeout: Duration) -> Result<ShipReply> {
+    let stream = TcpStream::connect_timeout(&primary, timeout)?;
+    stream.set_read_timeout(Some(timeout))?;
+    stream.set_write_timeout(Some(timeout))?;
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut writer = stream;
+    writeln!(writer, "SHIP {have}")?;
+
+    let mut header = String::new();
+    if reader.read_line(&mut header)? == 0 {
+        return Err(Error::Invalid("ship: primary closed the connection".into()));
+    }
+    let header = header.trim_end();
+    if let Some(rest) = header.strip_prefix("UNCHANGED version=") {
+        let version = rest.trim().parse().map_err(|_| bad_header(header))?;
+        return Ok(ShipReply::Unchanged { version });
+    }
+    let Some(rest) = header.strip_prefix("SNAPSHOT ") else {
+        return Err(Error::Invalid(format!("ship: primary said `{header}`")));
+    };
+    let (mut version, mut nbytes) = (None, None);
+    for tok in rest.split_whitespace() {
+        if let Some(v) = tok.strip_prefix("version=") {
+            version = v.parse::<u64>().ok();
+        } else if let Some(v) = tok.strip_prefix("bytes=") {
+            nbytes = v.parse::<u64>().ok();
+        }
+    }
+    let (Some(version), Some(nbytes)) = (version, nbytes) else {
+        return Err(bad_header(header));
+    };
+    if nbytes > MAX_SNAPSHOT_BYTES {
+        return Err(Error::Invalid(format!(
+            "ship: snapshot claims {nbytes} bytes (cap {MAX_SNAPSHOT_BYTES})"
+        )));
+    }
+    // Read incrementally (geometric growth as bytes actually arrive)
+    // rather than pre-allocating the header's claim: a corrupt `bytes=`
+    // can then cost at most the data the peer really sends, never an
+    // upfront multi-GiB zeroed allocation.
+    let mut bytes = Vec::new();
+    (&mut reader).take(nbytes).read_to_end(&mut bytes)?;
+    if bytes.len() as u64 != nbytes {
+        return Err(Error::Invalid(format!(
+            "ship: snapshot truncated ({} of {nbytes} bytes)",
+            bytes.len()
+        )));
+    }
+    // FNV-1a verified on receipt, before anything touches the local store
+    format::validate_bytes(&bytes, "shipped snapshot")?;
+    Ok(ShipReply::Snapshot { version, bytes })
+}
+
+/// One pull-sync step: ask `primary` for anything newer than `store`'s
+/// local latest and install it verbatim under the primary's version id.
+/// Returns the newly installed `(id, artifact)`, or `None` when already
+/// current (or the primary's store is still empty).
+pub fn sync_once(
+    store: &ModelStore,
+    primary: SocketAddr,
+    timeout: Duration,
+) -> Result<Option<(u64, ModelArtifact)>> {
+    let have = store.latest_version()?.unwrap_or(0);
+    match fetch_snapshot(primary, have, timeout)? {
+        ShipReply::Unchanged { .. } => Ok(None),
+        ShipReply::Snapshot { version, bytes } => {
+            if version <= have {
+                // a primary serving an older store than ours — never regress
+                return Ok(None);
+            }
+            let artifact = format::read_model_bytes(&bytes, "shipped snapshot")?;
+            store.install_snapshot(version, &bytes)?;
+            Ok(Some((version, artifact)))
+        }
+    }
+}
+
+/// Serve one `SHIP <have>` request (primary side). Writes exactly one
+/// header line, plus the raw snapshot body when the store holds something
+/// newer than `have`. IO errors propagate to the caller (the connection
+/// handler drops the connection); store errors are reported in-band as
+/// `ERR` so a follower can tell a broken store from a broken socket.
+pub fn serve_ship<W: Write>(w: &mut W, store: &ModelStore, have: u64) -> std::io::Result<()> {
+    // Fast path: most polls find nothing new — answer UNCHANGED off the
+    // directory scan alone, without reading (and re-hashing) a multi-MB
+    // version file hundreds of times a second. `latest_version` can name
+    // a racing publisher's incomplete reservation, but such an id is
+    // strictly newer than anything complete, so it never turns a real
+    // "newer snapshot exists" into a false UNCHANGED; the complete-bytes
+    // id is re-checked against `have` after the read below.
+    match store.latest_version() {
+        Ok(Some(id)) if id <= have => {
+            writeln!(w, "UNCHANGED version={id}")?;
+            return w.flush();
+        }
+        Ok(Some(_)) => {}
+        Ok(None) => {
+            writeln!(w, "ERR empty store")?;
+            return w.flush();
+        }
+        Err(e) => {
+            writeln!(w, "ERR ship failed: {e}")?;
+            return w.flush();
+        }
+    }
+    match store.latest_snapshot_bytes() {
+        Ok(Some((id, bytes))) => {
+            if id <= have {
+                // the scanned newest was an in-flight reservation and the
+                // completed latest is what the follower already holds
+                writeln!(w, "UNCHANGED version={id}")?;
+            } else {
+                writeln!(w, "SNAPSHOT version={id} bytes={}", bytes.len())?;
+                w.write_all(&bytes)?;
+            }
+        }
+        Ok(None) => writeln!(w, "ERR empty store")?,
+        Err(e) => writeln!(w, "ERR ship failed: {e}")?,
+    }
+    w.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::format::testutil::sample_artifact;
+    use super::*;
+    use std::net::TcpListener;
+    use std::path::PathBuf;
+
+    fn fresh_dir(name: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("fastpi_ship_{name}"));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    /// A one-shot in-thread primary speaking just the SHIP verb.
+    fn one_shot_primary(store_dir: PathBuf) -> (SocketAddr, std::thread::JoinHandle<()>) {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let handle = std::thread::spawn(move || {
+            let store = ModelStore::open(&store_dir).unwrap();
+            let (stream, _) = listener.accept().unwrap();
+            let mut reader = BufReader::new(stream.try_clone().unwrap());
+            let mut line = String::new();
+            reader.read_line(&mut line).unwrap();
+            let have: u64 = line.trim().strip_prefix("SHIP ").unwrap().parse().unwrap();
+            let mut w = std::io::BufWriter::new(stream);
+            serve_ship(&mut w, &store, have).unwrap();
+        });
+        (addr, handle)
+    }
+
+    #[test]
+    fn ship_roundtrip_is_byte_verbatim() {
+        let src_dir = fresh_dir("rt_src");
+        let dst_dir = fresh_dir("rt_dst");
+        let src = ModelStore::open(&src_dir).unwrap();
+        src.publish(&sample_artifact(5, 12, 6, 4, 3)).unwrap();
+        src.publish(&sample_artifact(6, 12, 6, 4, 3)).unwrap();
+
+        let (addr, h) = one_shot_primary(src_dir.clone());
+        let dst = ModelStore::open(&dst_dir).unwrap();
+        let synced = sync_once(&dst, addr, SHIP_TIMEOUT).unwrap();
+        h.join().unwrap();
+        let (id, art) = synced.expect("snapshot must ship");
+        assert_eq!(id, 2);
+        assert_eq!(art.shape(), (12, 6, 4));
+        // verbatim bytes on both sides
+        let a = std::fs::read(src_dir.join("v000002.fpim")).unwrap();
+        let b = std::fs::read(dst_dir.join("v000002.fpim")).unwrap();
+        assert_eq!(a, b, "shipped snapshot must be the primary's file, byte for byte");
+        assert_eq!(dst.latest_version().unwrap(), Some(2));
+
+        // already current → UNCHANGED, nothing installed
+        let (addr, h) = one_shot_primary(src_dir.clone());
+        assert!(sync_once(&dst, addr, SHIP_TIMEOUT).unwrap().is_none());
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn corrupt_snapshot_is_rejected_on_receipt() {
+        // a "primary" that flips one payload bit in an otherwise valid reply
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let art = sample_artifact(9, 10, 5, 3, 2);
+        let h = std::thread::spawn(move || {
+            let (stream, _) = listener.accept().unwrap();
+            let mut reader = BufReader::new(stream.try_clone().unwrap());
+            let mut line = String::new();
+            reader.read_line(&mut line).unwrap();
+            let mut bytes = format::encode_model_bytes(&art);
+            let last = bytes.len() - 1;
+            bytes[last] ^= 0x10;
+            let mut w = std::io::BufWriter::new(stream);
+            writeln!(w, "SNAPSHOT version=7 bytes={}", bytes.len()).unwrap();
+            w.write_all(&bytes).unwrap();
+            w.flush().unwrap();
+        });
+        let err = fetch_snapshot(addr, 0, SHIP_TIMEOUT).unwrap_err();
+        assert!(format!("{err}").contains("checksum"), "want checksum rejection, got: {err}");
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn oversized_and_garbage_headers_are_rejected() {
+        for reply in [
+            format!("SNAPSHOT version=1 bytes={}\n", MAX_SNAPSHOT_BYTES + 1),
+            "SNAPSHOT version=1\n".to_string(),
+            "WAT 123\n".to_string(),
+        ] {
+            let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+            let addr = listener.local_addr().unwrap();
+            let h = std::thread::spawn(move || {
+                let (mut stream, _) = listener.accept().unwrap();
+                let mut reader = BufReader::new(stream.try_clone().unwrap());
+                let mut line = String::new();
+                reader.read_line(&mut line).unwrap();
+                stream.write_all(reply.as_bytes()).unwrap();
+            });
+            assert!(fetch_snapshot(addr, 0, SHIP_TIMEOUT).is_err());
+            h.join().unwrap();
+        }
+    }
+}

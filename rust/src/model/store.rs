@@ -17,10 +17,17 @@
 //! process restarts and `gc` — the next id is one past the maximum of the
 //! MANIFEST pointer and every version file present.
 
-use super::format::{read_model, write_model, ModelArtifact};
+use super::format::{read_model, validate_bytes, write_model, ModelArtifact};
 use crate::error::{Error, Result};
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
+
+/// How often `load_latest` re-resolves latest→file before giving up. A
+/// reader racing a publisher + `gc` can observe a pointer whose file is
+/// gone one instant later (publish moves MANIFEST forward, gc then removes
+/// the previously pinned version); every such window closes by re-reading,
+/// so a handful of attempts makes `load_latest` total under concurrency.
+const LOAD_RETRIES: usize = 5;
 
 const MANIFEST: &str = "MANIFEST";
 /// Per-process temp-file disambiguator (two threads publishing to the same
@@ -91,21 +98,98 @@ impl ModelStore {
         read_model(&self.version_path(id))
     }
 
-    /// Load the latest published version, if any. If the newest version
-    /// file is unreadable (a concurrent publish has reserved the id but
-    /// not yet renamed the payload into place), falls back to the MANIFEST
-    /// pointer, which only ever names fully published versions.
-    pub fn load_latest(&self) -> Result<Option<(u64, ModelArtifact)>> {
-        let Some(id) = self.latest_version()? else {
-            return Ok(None);
-        };
-        match self.load(id) {
-            Ok(a) => Ok(Some((id, a))),
-            Err(e) => match self.manifest_version() {
-                Some(mid) if mid < id => Ok(Some((mid, self.load(mid)?))),
-                _ => Err(e),
-            },
+    /// Shared latest→value resolution: newest scanned id first, MANIFEST
+    /// pointer as the fallback when that file is unreadable (a racing
+    /// publisher's not-yet-renamed reservation), the whole thing retried a
+    /// few times so a reader racing publish+gc always lands on a complete
+    /// version (see `LOAD_RETRIES`). `load` is the only thing that differs
+    /// between handing back a parsed artifact and verbatim bytes.
+    fn resolve_latest<T>(&self, load: impl Fn(u64) -> Result<T>) -> Result<Option<(u64, T)>> {
+        let mut last_err = None;
+        for _ in 0..LOAD_RETRIES {
+            let Some(id) = self.latest_version()? else {
+                return Ok(None);
+            };
+            match load(id) {
+                Ok(v) => return Ok(Some((id, v))),
+                Err(e) => match self.manifest_version() {
+                    Some(mid) if mid < id => match load(mid) {
+                        Ok(v) => return Ok(Some((mid, v))),
+                        Err(e2) => last_err = Some(e2),
+                    },
+                    _ => last_err = Some(e),
+                },
+            }
+            std::thread::yield_now();
         }
+        Err(last_err.expect("retry loop exits early unless an error was seen"))
+    }
+
+    /// Load the latest published version, if any — complete-model
+    /// guarantee under concurrent publish/gc via [`Self::resolve_latest`].
+    pub fn load_latest(&self) -> Result<Option<(u64, ModelArtifact)>> {
+        self.resolve_latest(|id| self.load(id))
+    }
+
+    /// Verbatim file bytes of the latest published version (validated
+    /// framing), for snapshot shipping — same fallback discipline as
+    /// [`Self::load_latest`].
+    pub fn latest_snapshot_bytes(&self) -> Result<Option<(u64, Vec<u8>)>> {
+        self.resolve_latest(|id| self.read_valid_bytes(id))
+    }
+
+    fn read_valid_bytes(&self, id: u64) -> Result<Vec<u8>> {
+        let path = self.version_path(id);
+        let bytes = std::fs::read(&path)?;
+        validate_bytes(&bytes, &path.display().to_string())?;
+        Ok(bytes)
+    }
+
+    /// Install verbatim snapshot bytes under the *originating* store's
+    /// version id — the replica-side half of snapshot shipping. The replica
+    /// store mirrors the primary's ids (that is what makes version skew
+    /// observable), so nothing else may `publish` into it. Validates the
+    /// framing checksum before any byte lands, installs via temp-file +
+    /// rename, is idempotent for an id already present, and only ever moves
+    /// the MANIFEST pointer forward.
+    pub fn install_snapshot(&self, id: u64, bytes: &[u8]) -> Result<()> {
+        if id == 0 {
+            return Err(Error::Invalid("snapshot version id 0 is reserved".into()));
+        }
+        validate_bytes(bytes, "snapshot")?;
+        let dest = self.version_path(id);
+        if dest.exists() {
+            // idempotent only for the SAME bytes: a version id names one
+            // immutable model, so a primary re-labeling different bytes
+            // with an id we already hold is corruption, not a re-delivery
+            if std::fs::read(&dest)? != bytes {
+                return Err(Error::Invalid(format!(
+                    "snapshot v{id} conflicts with different bytes already installed"
+                )));
+            }
+        } else {
+            let tmp = self.dir.join(format!(
+                ".tmp-ship-{}-{}",
+                std::process::id(),
+                TMP_SEQ.fetch_add(1, Ordering::Relaxed)
+            ));
+            // clean the temp file on every error path — a replica retries
+            // each poll, and stranding one partial file per attempt would
+            // keep a full disk full forever
+            std::fs::write(&tmp, bytes).map_err(|e| {
+                let _ = std::fs::remove_file(&tmp);
+                Error::Io(e)
+            })?;
+            std::fs::rename(&tmp, &dest).map_err(|e| {
+                let _ = std::fs::remove_file(&tmp);
+                Error::Io(e)
+            })?;
+        }
+        match self.manifest_version() {
+            Some(m) if m >= id => {} // never move the pointer backwards
+            _ => self.write_manifest(id)?,
+        }
+        Ok(())
     }
 
     /// Atomically publish a new version; returns its id.
@@ -273,6 +357,123 @@ mod tests {
         std::fs::write(dir.join("MANIFEST"), "latest=1\n").unwrap();
         let (id, _) = store.load_latest().unwrap().unwrap();
         assert_eq!(id, 1, "unreadable newest file must fall back to the manifest");
+    }
+
+    #[test]
+    fn install_snapshot_mirrors_ids_and_is_idempotent() {
+        let src_dir = fresh_dir("ship_src");
+        let dst_dir = fresh_dir("ship_dst");
+        let src = ModelStore::open(&src_dir).unwrap();
+        let dst = ModelStore::open(&dst_dir).unwrap();
+        for s in 0..3 {
+            src.publish(&sample_artifact(s, 10, 5, 4, 2)).unwrap();
+        }
+        let (id, bytes) = src.latest_snapshot_bytes().unwrap().unwrap();
+        assert_eq!(id, 3);
+        dst.install_snapshot(id, &bytes).unwrap();
+        assert_eq!(dst.latest_version().unwrap(), Some(3), "replica mirrors the primary id");
+        // verbatim: the replica's file is byte-identical to the primary's
+        let a = std::fs::read(src_dir.join("v000003.fpim")).unwrap();
+        let b = std::fs::read(dst_dir.join("v000003.fpim")).unwrap();
+        assert_eq!(a, b);
+        // idempotent re-install; and an older snapshot never regresses the pointer
+        dst.install_snapshot(id, &bytes).unwrap();
+        let (_, old) = src.latest_snapshot_bytes().unwrap().unwrap();
+        dst.install_snapshot(3, &old).unwrap();
+        let old2 = src.read_valid_bytes(2).unwrap();
+        dst.install_snapshot(2, &old2).unwrap();
+        assert_eq!(dst.latest_version().unwrap(), Some(3));
+        // corrupt bytes never land
+        let mut bad = bytes.clone();
+        let last = bad.len() - 1;
+        bad[last] ^= 1;
+        assert!(dst.install_snapshot(9, &bad).is_err());
+        assert!(!dst_dir.join("v000009.fpim").exists());
+        // an id we already hold arriving with DIFFERENT bytes is rejected:
+        // a version id names one immutable model
+        let other = src.read_valid_bytes(1).unwrap();
+        assert!(dst.install_snapshot(3, &other).is_err());
+        let b2 = std::fs::read(dst_dir.join("v000003.fpim")).unwrap();
+        assert_eq!(a, b2, "conflicting install must not clobber the existing version");
+    }
+
+    /// The satellite invariants under real thread interleavings: N threads
+    /// publishing while one loops `gc(keep)` and one loops `load_latest` —
+    /// the observed latest id never regresses, every load yields a complete
+    /// model, and the MANIFEST-pinned version survives gc.
+    #[test]
+    fn concurrent_publish_gc_load_keeps_invariants() {
+        use std::sync::atomic::{AtomicBool, Ordering};
+        let dir = fresh_dir("conc");
+        let store = ModelStore::open(&dir).unwrap();
+        store.publish(&sample_artifact(1, 10, 5, 4, 2)).unwrap();
+        let stop = AtomicBool::new(false);
+        let stop = &stop;
+        let publishers = 3u64;
+        let rounds = 6usize;
+        std::thread::scope(|s| {
+            let mut pubs = Vec::new();
+            for t in 0..publishers {
+                let st = ModelStore::open(&dir).unwrap();
+                let art = sample_artifact(t + 2, 10, 5, 4, 2);
+                pubs.push(s.spawn(move || {
+                    let mut got = Vec::new();
+                    for _ in 0..rounds {
+                        got.push(st.publish(&art).unwrap());
+                    }
+                    got
+                }));
+            }
+            let gc_store = ModelStore::open(&dir).unwrap();
+            s.spawn(move || {
+                while !stop.load(Ordering::Relaxed) {
+                    // NotFound races with a concurrent publisher's rename
+                    // are possible; anything else is a real failure
+                    if let Err(e) = gc_store.gc(2) {
+                        if !matches!(&e, crate::error::Error::Io(io) if io.kind() == std::io::ErrorKind::NotFound)
+                        {
+                            panic!("gc failed: {e}");
+                        }
+                    }
+                    std::thread::yield_now();
+                }
+            });
+            let load_store = ModelStore::open(&dir).unwrap();
+            let loader = s.spawn(move || {
+                let mut last = 0u64;
+                let mut loads = 0usize;
+                while !stop.load(Ordering::Relaxed) {
+                    let (id, art) =
+                        load_store.load_latest().unwrap().expect("store is never empty");
+                    assert!(id >= last, "observed latest regressed: {last} -> {id}");
+                    last = id;
+                    // a complete model, never a torn or reserved file
+                    assert_eq!(art.shape(), (10, 5, 4));
+                    assert_eq!(art.rank(), 2);
+                    loads += 1;
+                }
+                loads
+            });
+            // join publishers, then let gc/loader observe the quiesced store
+            // a little longer before stopping them
+            let mut all_ids = Vec::new();
+            for p in pubs {
+                all_ids.extend(p.join().unwrap());
+            }
+            std::thread::sleep(std::time::Duration::from_millis(20));
+            stop.store(true, Ordering::Relaxed);
+            let loads = loader.join().unwrap();
+            assert!(loads > 0, "loader must have observed the store");
+            // every publish got a distinct, monotonically assigned id
+            all_ids.sort_unstable();
+            all_ids.dedup();
+            assert_eq!(all_ids.len(), publishers as usize * rounds, "publish ids must be unique");
+        });
+        // quiesced: MANIFEST-pinned version exists and loads
+        let pinned = store.manifest_version().expect("manifest present");
+        assert!(store.versions().unwrap().contains(&pinned), "pinned version survived gc");
+        let (id, _) = store.load_latest().unwrap().unwrap();
+        assert_eq!(id, 1 + publishers * rounds as u64, "latest is the newest publish");
     }
 
     #[test]

@@ -255,6 +255,352 @@ fn json_number(x: f64) -> String {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Perf-trajectory gate: parse the flat BENCH_*.json schema back in and diff
+// a current run against a committed baseline (`bench_baselines/`), failing
+// on regressions of named keys. The parser is deliberately tiny — it reads
+// only the schema `Reporter::json` writes (strings, finite numbers, null).
+
+/// A parsed `BENCH_<name>.json` document.
+#[derive(Debug, Clone)]
+pub struct BenchDoc {
+    pub name: String,
+    pub rows: Vec<Row>,
+}
+
+/// Minimal JSON value for the flat bench schema.
+#[derive(Debug, Clone)]
+enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(Vec<(String, Json)>),
+}
+
+struct JsonParser<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> JsonParser<'a> {
+    fn err<T>(&self, what: &str) -> Result<T, String> {
+        Err(format!("json: {what} at byte {}", self.i))
+    }
+
+    fn skip_ws(&mut self) {
+        while self.i < self.b.len() && self.b[self.i].is_ascii_whitespace() {
+            self.i += 1;
+        }
+    }
+
+    fn eat(&mut self, c: u8) -> Result<(), String> {
+        self.skip_ws();
+        if self.i < self.b.len() && self.b[self.i] == c {
+            self.i += 1;
+            Ok(())
+        } else {
+            self.err(&format!("expected `{}`", c as char))
+        }
+    }
+
+    fn peek(&mut self) -> Option<u8> {
+        self.skip_ws();
+        self.b.get(self.i).copied()
+    }
+
+    fn value(&mut self) -> Result<Json, String> {
+        match self.peek() {
+            Some(b'{') => self.object(),
+            Some(b'[') => self.array(),
+            Some(b'"') => Ok(Json::Str(self.string()?)),
+            Some(b'n') => self.literal("null", Json::Null),
+            Some(b't') => self.literal("true", Json::Bool(true)),
+            Some(b'f') => self.literal("false", Json::Bool(false)),
+            Some(c) if c == b'-' || c.is_ascii_digit() => self.number(),
+            _ => self.err("expected a value"),
+        }
+    }
+
+    fn literal(&mut self, lit: &str, v: Json) -> Result<Json, String> {
+        self.skip_ws();
+        if self.b[self.i..].starts_with(lit.as_bytes()) {
+            self.i += lit.len();
+            Ok(v)
+        } else {
+            self.err(&format!("expected `{lit}`"))
+        }
+    }
+
+    fn number(&mut self) -> Result<Json, String> {
+        self.skip_ws();
+        let start = self.i;
+        while self.i < self.b.len()
+            && matches!(self.b[self.i], b'0'..=b'9' | b'-' | b'+' | b'.' | b'e' | b'E')
+        {
+            self.i += 1;
+        }
+        std::str::from_utf8(&self.b[start..self.i])
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .map(Json::Num)
+            .ok_or_else(|| format!("json: bad number at byte {start}"))
+    }
+
+    fn string(&mut self) -> Result<String, String> {
+        self.eat(b'"')?;
+        let mut out = String::new();
+        loop {
+            let Some(&c) = self.b.get(self.i) else {
+                return self.err("unterminated string");
+            };
+            self.i += 1;
+            match c {
+                b'"' => return Ok(out),
+                b'\\' => {
+                    let Some(&e) = self.b.get(self.i) else {
+                        return self.err("unterminated escape");
+                    };
+                    self.i += 1;
+                    match e {
+                        b'"' => out.push('"'),
+                        b'\\' => out.push('\\'),
+                        b'/' => out.push('/'),
+                        b'n' => out.push('\n'),
+                        b'r' => out.push('\r'),
+                        b't' => out.push('\t'),
+                        b'u' => {
+                            if self.i + 4 > self.b.len() {
+                                return self.err("short \\u escape");
+                            }
+                            let hex = std::str::from_utf8(&self.b[self.i..self.i + 4])
+                                .map_err(|_| "json: bad \\u escape".to_string())?;
+                            let cp = u32::from_str_radix(hex, 16)
+                                .map_err(|_| "json: bad \\u escape".to_string())?;
+                            out.push(char::from_u32(cp).unwrap_or('\u{FFFD}'));
+                            self.i += 4;
+                        }
+                        _ => return self.err("unknown escape"),
+                    }
+                }
+                _ => {
+                    // non-ASCII continuation bytes pass through untouched
+                    let rest = &self.b[self.i - 1..];
+                    let ch_len = utf8_len(c);
+                    if rest.len() < ch_len {
+                        return self.err("truncated utf-8");
+                    }
+                    out.push_str(
+                        std::str::from_utf8(&rest[..ch_len])
+                            .map_err(|_| "json: bad utf-8".to_string())?,
+                    );
+                    self.i += ch_len - 1;
+                }
+            }
+        }
+    }
+
+    fn array(&mut self) -> Result<Json, String> {
+        self.eat(b'[')?;
+        let mut items = Vec::new();
+        if self.peek() == Some(b']') {
+            self.i += 1;
+            return Ok(Json::Arr(items));
+        }
+        loop {
+            items.push(self.value()?);
+            match self.peek() {
+                Some(b',') => self.i += 1,
+                Some(b']') => {
+                    self.i += 1;
+                    return Ok(Json::Arr(items));
+                }
+                _ => return self.err("expected `,` or `]`"),
+            }
+        }
+    }
+
+    fn object(&mut self) -> Result<Json, String> {
+        self.eat(b'{')?;
+        let mut items = Vec::new();
+        if self.peek() == Some(b'}') {
+            self.i += 1;
+            return Ok(Json::Obj(items));
+        }
+        loop {
+            let k = self.string()?;
+            self.eat(b':')?;
+            let v = self.value()?;
+            items.push((k, v));
+            match self.peek() {
+                Some(b',') => self.i += 1,
+                Some(b'}') => {
+                    self.i += 1;
+                    return Ok(Json::Obj(items));
+                }
+                _ => return self.err("expected `,` or `}`"),
+            }
+        }
+    }
+}
+
+fn utf8_len(first: u8) -> usize {
+    match first {
+        0x00..=0x7F => 1,
+        0xC0..=0xDF => 2,
+        0xE0..=0xEF => 3,
+        _ => 4,
+    }
+}
+
+/// Parse a `BENCH_<name>.json` summary back into rows. String-valued
+/// entries become keys, numbers become values, `null`s (non-finite at
+/// write time) are dropped.
+pub fn parse_bench_json(text: &str) -> Result<BenchDoc, String> {
+    let mut p = JsonParser { b: text.as_bytes(), i: 0 };
+    let Json::Obj(top) = p.value()? else {
+        return Err("json: top level must be an object".into());
+    };
+    let mut name = None;
+    let mut rows = Vec::new();
+    for (k, v) in top {
+        match (k.as_str(), v) {
+            ("name", Json::Str(s)) => name = Some(s),
+            ("rows", Json::Arr(items)) => {
+                for item in items {
+                    let Json::Obj(fields) = item else {
+                        return Err("json: each row must be an object".into());
+                    };
+                    let mut row = Row { keys: Vec::new(), values: Vec::new() };
+                    for (fk, fv) in fields {
+                        match fv {
+                            Json::Str(s) => row.keys.push((fk, s)),
+                            Json::Num(x) => row.values.push((fk, x)),
+                            Json::Null => {}
+                            _ => return Err(format!("json: unexpected value for `{fk}`")),
+                        }
+                    }
+                    rows.push(row);
+                }
+            }
+            _ => {}
+        }
+    }
+    Ok(BenchDoc { name: name.ok_or("json: missing `name`")?, rows })
+}
+
+/// Whether a smaller value of this metric is the good direction.
+/// Latencies, times, drift/error and ratio-style metrics regress upward;
+/// throughputs and speedups regress downward.
+pub fn lower_is_better(key: &str) -> bool {
+    key.ends_with("_ms")
+        || key.ends_with("_s")
+        || key.ends_with("secs")
+        || key.ends_with("ratio")
+        || key.contains("err")
+        || key.contains("drift")
+        || key.contains("skew")
+}
+
+/// Diff `current` against `baseline`, gating only the named keys. For each
+/// baseline row (matched to a current row by its full string-key set),
+/// every gated key must be present and no worse than `max_regress`
+/// (fractional) beyond the baseline value. Returns human-readable failure
+/// lines; empty = gate passed.
+pub fn diff_bench(
+    baseline: &BenchDoc,
+    current: &BenchDoc,
+    gate_keys: &[String],
+    max_regress: f64,
+) -> Vec<String> {
+    let mut failures = Vec::new();
+    let key_id = |r: &Row| {
+        let mut ks: Vec<String> = r.keys.iter().map(|(k, v)| format!("{k}={v}")).collect();
+        ks.sort();
+        ks.join(" ")
+    };
+    for brow in &baseline.rows {
+        let gated: Vec<&(String, f64)> =
+            brow.values.iter().filter(|(k, _)| gate_keys.iter().any(|g| g == k)).collect();
+        if gated.is_empty() {
+            continue;
+        }
+        let id = key_id(brow);
+        let Some(crow) = current.rows.iter().find(|r| key_id(r) == id) else {
+            failures.push(format!("{}[{id}]: row missing from current results", baseline.name));
+            continue;
+        };
+        for (k, base) in gated {
+            let Some((_, cur)) = crow.values.iter().find(|(ck, _)| ck == k) else {
+                failures.push(format!("{}[{id}].{k}: key missing from current row", baseline.name));
+                continue;
+            };
+            let regressed = if lower_is_better(k) {
+                *cur > base * (1.0 + max_regress)
+            } else {
+                *cur < base * (1.0 - max_regress)
+            };
+            if regressed {
+                failures.push(format!(
+                    "{}[{id}].{k}: {cur:.4} vs baseline {base:.4} (allowed {:.0}% {})",
+                    baseline.name,
+                    max_regress * 100.0,
+                    if lower_is_better(k) { "above" } else { "below" },
+                ));
+            }
+        }
+    }
+    failures
+}
+
+/// Diff every `BENCH_*.json` under `baseline_dir` against its counterpart
+/// in `current_dir`. A baseline whose current file is missing is itself a
+/// failure — coverage loss must be loud, not silent.
+pub fn diff_dirs(
+    baseline_dir: &std::path::Path,
+    current_dir: &std::path::Path,
+    gate_keys: &[String],
+    max_regress: f64,
+) -> std::io::Result<Vec<String>> {
+    let mut failures = Vec::new();
+    let mut seen_any = false;
+    let mut entries: Vec<_> = std::fs::read_dir(baseline_dir)?
+        .collect::<std::io::Result<Vec<_>>>()?
+        .into_iter()
+        .map(|e| e.file_name().to_string_lossy().into_owned())
+        .filter(|n| n.starts_with("BENCH_") && n.ends_with(".json"))
+        .collect();
+    entries.sort();
+    for fname in entries {
+        seen_any = true;
+        let base_text = std::fs::read_to_string(baseline_dir.join(&fname))?;
+        let baseline = match parse_bench_json(&base_text) {
+            Ok(d) => d,
+            Err(e) => {
+                failures.push(format!("{fname}: unparseable baseline: {e}"));
+                continue;
+            }
+        };
+        let cur_path = current_dir.join(&fname);
+        let cur_text = match std::fs::read_to_string(&cur_path) {
+            Ok(t) => t,
+            Err(_) => {
+                failures.push(format!("{fname}: no current results at {}", cur_path.display()));
+                continue;
+            }
+        };
+        match parse_bench_json(&cur_text) {
+            Ok(current) => failures.extend(diff_bench(&baseline, &current, gate_keys, max_regress)),
+            Err(e) => failures.push(format!("{fname}: unparseable current results: {e}")),
+        }
+    }
+    if !seen_any {
+        failures.push(format!("no BENCH_*.json baselines in {}", baseline_dir.display()));
+    }
+    Ok(failures)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -290,6 +636,70 @@ mod tests {
         assert!(t.contains("dataset"));
         assert!(t.contains("bibtex"));
         assert!(t.contains("2.5"));
+    }
+
+    #[test]
+    fn json_roundtrips_through_the_parser() {
+        let mut r = Reporter::new("rt \"quoted\"");
+        r.add(
+            &[("policy", "batch=64".into()), ("clients", "32".into())],
+            &[("throughput_rps", 123.5), ("p95_ms", 4.25), ("bad", f64::NAN)],
+        );
+        let doc = parse_bench_json(&r.json()).unwrap();
+        assert_eq!(doc.name, "rt \"quoted\"");
+        assert_eq!(doc.rows.len(), 1);
+        let row = &doc.rows[0];
+        assert_eq!(row.keys, vec![
+            ("policy".to_string(), "batch=64".to_string()),
+            ("clients".to_string(), "32".to_string()),
+        ]);
+        // the NaN was written as null and dropped on re-read
+        assert_eq!(row.values.len(), 2);
+        assert_eq!(row.values[0], ("throughput_rps".to_string(), 123.5));
+        assert!(parse_bench_json("{\"rows\":[]}").is_err(), "missing name must error");
+        assert!(parse_bench_json("not json").is_err());
+    }
+
+    #[test]
+    fn bench_diff_gates_named_keys_in_both_directions() {
+        let mk = |rps: f64, p95: f64| BenchDoc {
+            name: "serve".into(),
+            rows: vec![Row {
+                keys: vec![("policy".into(), "batch=64".into())],
+                values: vec![("throughput_rps".into(), rps), ("p95_ms".into(), p95)],
+            }],
+        };
+        let gates = vec!["throughput_rps".to_string(), "p95_ms".to_string()];
+        let base = mk(100.0, 10.0);
+        // within tolerance both ways
+        assert!(diff_bench(&base, &mk(85.0, 11.5), &gates, 0.20).is_empty());
+        assert!(diff_bench(&base, &mk(500.0, 1.0), &gates, 0.20).is_empty());
+        // throughput regresses downward
+        let f = diff_bench(&base, &mk(70.0, 10.0), &gates, 0.20);
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert!(f[0].contains("throughput_rps"), "{f:?}");
+        // latency regresses upward
+        let f = diff_bench(&base, &mk(100.0, 13.0), &gates, 0.20);
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert!(f[0].contains("p95_ms"), "{f:?}");
+        // ungated keys never fire
+        let f = diff_bench(&base, &mk(100.0, 99.0), &["throughput_rps".to_string()], 0.20);
+        assert!(f.is_empty(), "{f:?}");
+        // a missing row is a loud failure
+        let empty = BenchDoc { name: "serve".into(), rows: vec![] };
+        let f = diff_bench(&base, &empty, &gates, 0.20);
+        assert_eq!(f.len(), 1);
+        assert!(f[0].contains("row missing"), "{f:?}");
+    }
+
+    #[test]
+    fn metric_direction_heuristic() {
+        for k in ["p95_ms", "secs", "mean_s", "jitter_ratio", "recon_err", "drift", "skew"] {
+            assert!(lower_is_better(k), "{k} should regress upward");
+        }
+        for k in ["throughput_rps", "speedup", "swaps", "p@1"] {
+            assert!(!lower_is_better(k), "{k} should regress downward");
+        }
     }
 
     #[test]

@@ -6,12 +6,14 @@
 //! across hot swaps.
 
 use fastpi::coordinator::{
-    score_request, text_request, PinvJob, PipelineCoordinator, ScoreServer, ServerConfig,
+    score_request, text_request, PinvJob, PipelineCoordinator, ReplicaConfig, Router,
+    RouterConfig, ScoreServer, ServerConfig,
 };
 use fastpi::data::{load_dataset, Dataset};
 use fastpi::model::{ModelStore, OnlineUpdater, UpdaterConfig};
 use fastpi::pinv::Method;
 use std::path::PathBuf;
+use std::time::{Duration, Instant};
 
 fn fresh_store(name: &str) -> PathBuf {
     let d = std::env::temp_dir().join(format!("fastpi_lifecycle_{name}"));
@@ -125,6 +127,139 @@ fn reload_is_invisible_and_learn_matches_offline_replay() {
     let vline = text_request(addr, "VERSION").unwrap();
     assert!(vline.starts_with(&format!("VERSION id={v_final} ")), "{vline}");
     server.shutdown();
+}
+
+/// The replica-path differential property (PR-3 acceptance): a 3-replica
+/// cluster loading from one primary store serves byte-identical SCORE
+/// replies at the same version; online `LEARN` on the cluster produces —
+/// bitwise — the model an offline replay of the same rows produces on a
+/// single node, and every publish propagates to all replicas (router skew
+/// observably returns to 0) with zero dropped or errored requests.
+#[test]
+fn replicated_cluster_learn_matches_offline_replay_bitwise() {
+    let (store, ds) = trained_store("cluster", 54, 200);
+    let (v1, artifact) = store.load_latest().unwrap().unwrap();
+    let offline_start = artifact.clone();
+    let primary_dir = store.dir().to_path_buf();
+
+    let primary = ScoreServer::start_lifecycle(
+        OnlineUpdater::new(artifact, UpdaterConfig::default()),
+        Some(store),
+        v1,
+        ServerConfig::default(),
+    )
+    .unwrap();
+
+    // three followers, each with its own empty local store
+    let mut replicas = Vec::new();
+    let mut replica_dirs = Vec::new();
+    for i in 0..3 {
+        let rdir = fresh_store(&format!("cluster_replica_{i}"));
+        replica_dirs.push(rdir.clone());
+        let rc = ReplicaConfig {
+            primary: primary.addr,
+            poll: Duration::from_millis(10),
+            timeout: Duration::from_secs(30),
+        };
+        let replica = ScoreServer::start_replica(
+            ModelStore::open(&rdir).unwrap(),
+            rc,
+            ServerConfig::default(),
+        )
+        .unwrap();
+        // start_replica blocks on the initial sync: already at v1
+        assert_eq!(replica.current_version(), v1, "replica {i} must come up synced");
+        replicas.push(replica);
+    }
+    let router = Router::start(
+        replicas.iter().map(|r| r.addr).collect(),
+        RouterConfig::default(),
+    )
+    .unwrap();
+
+    // byte-identical replies at the same version, direct and routed
+    let (js, vs) = ds.a.row(11);
+    let probe_feats: Vec<String> =
+        js.iter().zip(vs).map(|(&j, &v)| format!("{j}:{v}")).collect();
+    let probe = format!("SCORE 5 {}", probe_feats.join(","));
+    let want = text_request(primary.addr, &probe).unwrap();
+    assert!(want.starts_with("OK "), "{want}");
+    for (i, r) in replicas.iter().enumerate() {
+        assert_eq!(
+            text_request(r.addr, &probe).unwrap(),
+            want,
+            "replica {i} diverged at v{v1}"
+        );
+    }
+    for i in 0..12 {
+        assert_eq!(text_request(router.addr, &probe).unwrap(), want, "routed request {i}");
+    }
+
+    // online LEARN on the cluster's primary + identical offline replay
+    let rows = [200usize, 201, 202];
+    let mut offline = OnlineUpdater::new(offline_start, UpdaterConfig::default());
+    for (i, &row) in rows.iter().enumerate() {
+        let (line, features, labels) = learn_example(&ds, row);
+        let reply = text_request(primary.addr, &line).unwrap();
+        assert!(
+            reply.starts_with(&format!("OK version={} pending=0", v1 + 1 + i as u64)),
+            "LEARN {row}: {reply}"
+        );
+        offline.push_example(features, labels).unwrap().expect("learn_batch=1 folds");
+    }
+    let v_final = v1 + rows.len() as u64;
+
+    // propagation: every replica reaches the final version (skew -> 0)
+    let deadline = Instant::now() + Duration::from_secs(30);
+    for (i, r) in replicas.iter().enumerate() {
+        while r.current_version() != v_final {
+            assert!(Instant::now() < deadline, "replica {i} never reached v{v_final}");
+            std::thread::sleep(Duration::from_millis(5));
+        }
+    }
+    assert_eq!(router.version_skew(), Some(0), "fleet must be fully converged");
+    let stats = text_request(router.addr, "STATS").unwrap();
+    assert!(stats.contains(" skew=0"), "{stats}");
+    assert!(stats.contains("replicas=3"), "{stats}");
+
+    // differential core: the shipped bytes every replica now serves are
+    // the primary's store file verbatim, and that file is bitwise the
+    // offline replay's model
+    let primary_bytes =
+        std::fs::read(primary_dir.join(format!("v{v_final:06}.fpim"))).unwrap();
+    for rdir in &replica_dirs {
+        let replica_bytes =
+            std::fs::read(rdir.join(format!("v{v_final:06}.fpim"))).unwrap();
+        assert_eq!(primary_bytes, replica_bytes, "shipped snapshot must be verbatim");
+    }
+    let (_, online) = ModelStore::open(&primary_dir).unwrap().load_latest().unwrap().unwrap();
+    let replay = offline.artifact();
+    assert_eq!(online.svd.u.data(), replay.svd.u.data(), "U diverged from offline replay");
+    assert_eq!(online.svd.s, replay.svd.s, "Σ diverged from offline replay");
+    assert_eq!(online.svd.vt.data(), replay.svd.vt.data(), "Vᵀ diverged from offline replay");
+    assert_eq!(online.c.data(), replay.c.data(), "C diverged from offline replay");
+    assert_eq!(online.z.data(), replay.z.data(), "Z diverged from offline replay");
+
+    // post-propagation replies still byte-identical across the fleet
+    let want = text_request(primary.addr, &probe).unwrap();
+    for (i, r) in replicas.iter().enumerate() {
+        assert_eq!(
+            text_request(r.addr, &probe).unwrap(),
+            want,
+            "replica {i} diverged at v{v_final}"
+        );
+    }
+
+    // zero dropped or errored requests end to end
+    assert_eq!(router.stats.errors.load(std::sync::atomic::Ordering::Relaxed), 0);
+    assert_eq!(router.stats.rejected.load(std::sync::atomic::Ordering::Relaxed), 0);
+    assert_eq!(router.stats.routed.load(std::sync::atomic::Ordering::Relaxed), 12);
+
+    router.shutdown();
+    for r in replicas {
+        r.shutdown();
+    }
+    primary.shutdown();
 }
 
 #[test]
