@@ -4,7 +4,9 @@
 //! §Perf and the worker-pool speedup gate (≥ 2× at 4 threads on the
 //! default shapes). Results land in `target/bench_results/` as both CSV
 //! and `BENCH_gemm_roofline.json` (name/config/throughput) for the
-//! cross-PR perf trajectory.
+//! cross-PR perf trajectory; the `speedup_x` rows at the biggest shapes
+//! are gated in CI against `bench_baselines/BENCH_gemm_roofline.json`
+//! (floors, not snapshots — they catch the pool collapsing to serial).
 //! Run: cargo bench --bench gemm_roofline
 //! (FASTPI_THREADS=4 pins the pool width for the scaling comparison.)
 
@@ -39,7 +41,7 @@ fn main() {
         }
         rep.add(
             &[("backend", "native".into()), ("config", "speedup".into()), ("size", s.to_string())],
-            &[("x", serial.min_s / parallel.min_s)],
+            &[("speedup_x", serial.min_s / parallel.min_s)],
         );
     }
     // tall-skinny Gram products (the incremental-update shape): panel
@@ -66,7 +68,7 @@ fn main() {
                 ("config", "speedup".into()),
                 ("size", format!("{m}x{w}")),
             ],
-            &[("x", serial.min_s / parallel.min_s)],
+            &[("speedup_x", serial.min_s / parallel.min_s)],
         );
     }
     // artifact path (if built): exact bucket sizes, no padding waste

@@ -311,6 +311,7 @@ fn main() {
                         primary: primary.addr,
                         poll: Duration::from_millis(5),
                         timeout: Duration::from_secs(30),
+                        shard: None,
                     },
                     ServerConfig::default(),
                 )

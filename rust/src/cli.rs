@@ -31,11 +31,19 @@ OPERATIONS:
              publish a new version; reports incremental-vs-recompute time
   ship       pull the latest FPIM snapshot from a serving primary into a
              local store (one-shot, or --watch to keep polling)
+  shard      split the store's latest model into a label-space shard set
+             and publish it (one atomic shard-set version) to --out
   route      front-end router fanning SCORE across replicas; STATS
-             reports per-replica versions + skew
+             reports per-replica versions + skew. --sharded switches to
+             scatter-gather over shard groups (SCORE merged bitwise,
+             LEARN broadcast with unanimous version advance)
   lifecycle-check  headless train->serve->LEARN->RELOAD smoke (CI)
   cluster-check    headless replica fan-out check: primary + N follower
              processes + router, propagation asserted end to end (CI)
+  shard-check      headless sharding check: split a trained model into N
+             shards, serve each as its own OS process, scatter-gather
+             route, and assert bitwise-identical replies vs the
+             unsharded model plus unanimous LEARN advance (CI)
   bench-diff perf-trajectory gate: diff target/bench_results/BENCH_*.json
              against the committed bench_baselines/ snapshot
   datagen    generate + cache a dataset, print stats
@@ -72,12 +80,22 @@ REPLICATION OPTIONS:
   --bind 0.0.0.0:7070  serve/route: listen address (default loopback,
                        ephemeral port)
 
+SHARDING OPTIONS:
+  --shards N           shard/shard-check: how many label-space slices
+  --out DIR            shard: destination store (default <model-dir>-shards)
+  --shard K/N          serve: hold only shard K of an N-shard set (with
+                       --model-dir: serve+LEARN that slice; with
+                       --replica-of: sync only that slice)
+  --sharded            route: scatter-gather mode; --replicas lists one
+                       group per shard IN SHARD ORDER, '+' joining the
+                       interchangeable members of a group (a0+a1,b,c)
+
 BENCH-DIFF OPTIONS:
   --baseline DIR       committed snapshot (default bench_baselines)
   --current DIR        fresh results (default target/bench_results)
   --max-regress 0.2    allowed fractional regression per gated key
   --keys a,b           gated value keys (default throughput_rps,p95_ms,
-                       p99_storm_ms,propagation_p95_ms)
+                       p99_storm_ms,propagation_p95_ms,speedup_x)
 ";
 
 pub fn main() {
@@ -104,9 +122,11 @@ pub fn main() {
         "serve" => cmd_serve(&args),
         "update" => cmd_update(&args),
         "ship" => cmd_ship(&args),
+        "shard" => cmd_shard(&args),
         "route" => cmd_route(&args),
         "lifecycle-check" => cmd_lifecycle_check(&args),
         "cluster-check" => cmd_cluster_check(&args),
+        "shard-check" => cmd_shard_check(&args),
         "bench-diff" => cmd_bench_diff(&args),
         "datagen" => cmd_datagen(&args),
         "selftest" => cmd_selftest(&args),
@@ -363,6 +383,18 @@ fn resolve_addr(spec: &str) -> crate::error::Result<std::net::SocketAddr> {
         .ok_or_else(|| crate::error::Error::Invalid(format!("cannot resolve `{spec}`")))
 }
 
+/// Parse the `--shard K/N` option, if present.
+fn shard_arg(args: &Args) -> crate::error::Result<Option<(u64, u64)>> {
+    match args.get("shard") {
+        None => Ok(None),
+        Some(spec) => crate::model::parse_shard_spec(spec).map(Some).ok_or_else(|| {
+            crate::error::Error::Invalid(format!(
+                "bad --shard `{spec}` (want K/N with K < N and N ≥ 2, e.g. 0/3)"
+            ))
+        }),
+    }
+}
+
 fn cmd_serve(args: &Args) -> crate::error::Result<()> {
     use crate::coordinator::{PinvJob, PipelineCoordinator, ReplicaConfig, ScoreServer, ServerConfig};
     use crate::data::load_dataset;
@@ -372,8 +404,10 @@ fn cmd_serve(args: &Args) -> crate::error::Result<()> {
         bind: args.str_or("bind", "127.0.0.1:0"),
         ..Default::default()
     };
+    let shard = shard_arg(args)?;
     let server = if let Some(primary) = args.get("replica-of") {
-        // follower replica: read-only, pull-synced from the primary
+        // follower replica: read-only, pull-synced from the primary —
+        // only its own label-space slice when --shard is given
         let primary = resolve_addr(primary)?;
         let dir = args.get("model-dir").ok_or_else(|| {
             crate::error::Error::Invalid(
@@ -382,33 +416,61 @@ fn cmd_serve(args: &Args) -> crate::error::Result<()> {
         })?;
         let store = ModelStore::open(std::path::Path::new(dir))?;
         let poll = std::time::Duration::from_millis(args.parse_or("poll-ms", 200u64));
-        let rc = ReplicaConfig { primary, poll, ..Default::default() };
+        let rc = ReplicaConfig { primary, poll, shard, ..Default::default() };
         let server = ScoreServer::start_replica(store, rc, server_cfg)?;
-        println!(
-            "replica serving v{} from {dir}, following {primary} (poll {}ms)",
-            server.current_version(),
-            poll.as_millis()
-        );
+        match shard {
+            Some((k, n)) => println!(
+                "shard-{k}/{n} replica serving v{} from {dir}, following {primary} (poll {}ms)",
+                server.current_version(),
+                poll.as_millis()
+            ),
+            None => println!(
+                "replica serving v{} from {dir}, following {primary} (poll {}ms)",
+                server.current_version(),
+                poll.as_millis()
+            ),
+        }
         server
     } else if let Some(dir) = args.get("model-dir") {
-        // lifecycle path: serve the store's latest version, no retraining
+        // lifecycle path: serve the store's latest version, no retraining;
+        // with --shard K/N, serve (and LEARN-advance) only that slice
         let store = ModelStore::open(std::path::Path::new(dir))?;
-        let Some((version, artifact)) = store.load_latest()? else {
-            return Err(crate::error::Error::Invalid(format!(
-                "no model versions in {dir} — run `fastpi train --model-dir {dir}` first"
-            )));
+        let latest = match shard {
+            Some((k, n)) => store.load_latest_shard(k, n)?,
+            None => store.load_latest()?,
+        };
+        let Some((version, artifact)) = latest else {
+            return Err(crate::error::Error::Invalid(match shard {
+                Some((k, n)) => format!(
+                    "no shard {k}/{n} versions in {dir} — run `fastpi shard --shards {n}` first"
+                ),
+                None => format!(
+                    "no model versions in {dir} — run `fastpi train --model-dir {dir}` first"
+                ),
+            }));
         };
         let (m, n, l) = artifact.shape();
-        println!(
-            "serving v{version} from {dir}: {} rows folded, rank={}, {n} features, {l} labels",
-            m,
-            artifact.rank()
-        );
+        let sh = artifact.meta.shard;
+        match shard {
+            Some(_) => println!(
+                "serving shard {}/{} (labels {}..{} of {}) v{version} from {dir}: {m} rows folded, rank={}, {n} features",
+                sh.index, sh.count, sh.label_lo, sh.label_hi, sh.label_total, artifact.rank()
+            ),
+            None => println!(
+                "serving v{version} from {dir}: {m} rows folded, rank={}, {n} features, {l} labels",
+                artifact.rank()
+            ),
+        }
         let updater = OnlineUpdater::new(artifact, updater_cfg_arg(args));
         ScoreServer::start_lifecycle(updater, Some(store), version, server_cfg)
             .map_err(crate::error::Error::Io)?
     } else {
         // no store: train in-process and serve with an in-memory lifecycle
+        if shard.is_some() {
+            return Err(crate::error::Error::Invalid(
+                "--shard needs --model-dir (a store holding the shard set)".into(),
+            ));
+        }
         let name = args.str_or("dataset", "bibtex");
         let scale = args.parse_or("scale", harness::DEFAULT_SCALE);
         let seed = args.parse_or("seed", 42);
@@ -471,22 +533,92 @@ fn cmd_ship(args: &Args) -> crate::error::Result<()> {
     }
 }
 
+/// Split the store's latest full model into a label-space shard set and
+/// publish it — one atomic shard-set version — into `--out`.
+fn cmd_shard(args: &Args) -> crate::error::Result<()> {
+    use crate::model::{split_artifact, ModelStore};
+    let dir = model_dir_arg(args, &args.str_or("dataset", "bibtex"));
+    let shards: usize = args.parse_or("shards", 3usize);
+    if shards < 2 {
+        return Err(crate::error::Error::Invalid(
+            "--shards must be ≥ 2 (1 shard is the full model — serve it without --shard)".into(),
+        ));
+    }
+    let out = match args.get("out") {
+        Some(o) => std::path::PathBuf::from(o),
+        None => std::path::PathBuf::from(format!("{}-shards", dir.display())),
+    };
+    let store = ModelStore::open(&dir)?;
+    let Some((version, artifact)) = store.load_latest()? else {
+        return Err(crate::error::Error::Invalid(format!(
+            "no model versions in {} — run `fastpi train` first",
+            dir.display()
+        )));
+    };
+    let (m, n, l) = artifact.shape();
+    let set = split_artifact(&artifact, shards)?;
+    let out_store = ModelStore::open(&out)?;
+    let id = out_store.publish_shard_set(&set)?;
+    println!(
+        "split v{version} ({m} rows, {n} features, {l} labels, rank {}) into {shards} shards -> {} v{id}",
+        artifact.rank(),
+        out.display()
+    );
+    for s in &set {
+        let sh = s.meta.shard;
+        println!(
+            "  shard {}/{}: labels {}..{} ({} columns of C/Z, factors shared verbatim)",
+            sh.index,
+            sh.count,
+            sh.label_lo,
+            sh.label_hi,
+            sh.width()
+        );
+    }
+    println!(
+        "serve each slice with `fastpi serve --model-dir {} --shard K/{shards}`",
+        out.display()
+    );
+    Ok(())
+}
+
 fn cmd_route(args: &Args) -> crate::error::Result<()> {
     use crate::coordinator::{Router, RouterConfig};
     let spec = args.get("replicas").ok_or_else(|| {
         crate::error::Error::Invalid("--replicas HOST:PORT,HOST:PORT,... required".into())
     })?;
-    let mut addrs = Vec::new();
-    for s in spec.split(',').filter(|s| !s.is_empty()) {
-        addrs.push(resolve_addr(s)?);
-    }
     let cfg = RouterConfig { bind: args.str_or("bind", "127.0.0.1:0"), ..Default::default() };
-    let n_replicas = addrs.len();
-    let router = Router::start(addrs, cfg).map_err(crate::error::Error::Io)?;
-    println!(
-        "router on {} fanning SCORE across {n_replicas} replicas — verbs: SCORE | PING | STATS (versions + skew) | QUIT",
-        router.addr
-    );
+    let router = if args.flag("sharded") {
+        // scatter-gather: one ','-separated group per shard in shard
+        // order, '+' joining a group's interchangeable members
+        let mut groups = Vec::new();
+        for g in spec.split(',').filter(|s| !s.is_empty()) {
+            let mut members = Vec::new();
+            for s in g.split('+').filter(|s| !s.is_empty()) {
+                members.push(resolve_addr(s)?);
+            }
+            groups.push(members);
+        }
+        let n = groups.len();
+        let router = Router::start_sharded(groups, cfg).map_err(crate::error::Error::Io)?;
+        println!(
+            "scatter-gather router on {} over {n} shard groups — verbs: SCORE (merged bitwise) | LEARN (broadcast, unanimous) | PING | STATS (per-shard versions + skew) | QUIT",
+            router.addr
+        );
+        router
+    } else {
+        let mut addrs = Vec::new();
+        for s in spec.split(',').filter(|s| !s.is_empty()) {
+            addrs.push(resolve_addr(s)?);
+        }
+        let n_replicas = addrs.len();
+        let router = Router::start(addrs, cfg).map_err(crate::error::Error::Io)?;
+        println!(
+            "router on {} fanning SCORE across {n_replicas} replicas — verbs: SCORE | PING | STATS (versions + skew) | QUIT",
+            router.addr
+        );
+        router
+    };
     println!("FASTPI_ROUTE_ADDR={}", router.addr);
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));
@@ -499,7 +631,7 @@ fn cmd_bench_diff(args: &Args) -> crate::error::Result<()> {
     let current = args.str_or("current", "target/bench_results");
     let max_regress: f64 = args.parse_or("max-regress", 0.20);
     let default_keys: Vec<String> =
-        ["throughput_rps", "p95_ms", "p99_storm_ms", "propagation_p95_ms"]
+        ["throughput_rps", "p95_ms", "p99_storm_ms", "propagation_p95_ms", "speedup_x"]
             .iter()
             .map(|s| s.to_string())
             .collect();
@@ -693,6 +825,67 @@ fn cmd_lifecycle_check(args: &Args) -> crate::error::Result<()> {
     Ok(())
 }
 
+/// Child server processes plus scratch stores for the headless cluster
+/// checks; everything dies with the check, pass or fail.
+struct Fleet {
+    exe: std::path::PathBuf,
+    children: Vec<std::process::Child>,
+    scratch: Vec<std::path::PathBuf>,
+}
+
+impl Fleet {
+    fn new() -> crate::error::Result<Fleet> {
+        Ok(Fleet {
+            exe: std::env::current_exe().map_err(crate::error::Error::Io)?,
+            children: Vec::new(),
+            scratch: Vec::new(),
+        })
+    }
+
+    /// Spawn `fastpi <argv>` as a child process and wait for its
+    /// `FASTPI_SERVE_ADDR=` marker.
+    fn spawn_server(&mut self, argv: &[String]) -> crate::error::Result<std::net::SocketAddr> {
+        use crate::error::Error;
+        use std::io::BufRead;
+        use std::process::{Command, Stdio};
+        let mut child = Command::new(&self.exe)
+            .args(argv)
+            .stdout(Stdio::piped())
+            .stderr(Stdio::inherit())
+            .spawn()
+            .map_err(Error::Io)?;
+        let stdout = child.stdout.take().expect("piped stdout");
+        let (tx, rx) = std::sync::mpsc::channel();
+        // reader thread: forward the addr marker, then keep draining so
+        // the child can never block on a full stdout pipe
+        std::thread::spawn(move || {
+            for line in std::io::BufReader::new(stdout).lines() {
+                let Ok(line) = line else { break };
+                if let Some(addr) = line.strip_prefix("FASTPI_SERVE_ADDR=") {
+                    let _ = tx.send(addr.to_string());
+                }
+            }
+        });
+        self.children.push(child);
+        let addr = rx.recv_timeout(std::time::Duration::from_secs(120)).map_err(|_| {
+            Error::Invalid("spawned server never reported FASTPI_SERVE_ADDR".into())
+        })?;
+        addr.parse().map_err(|_| Error::Invalid(format!("bad server address `{addr}`")))
+    }
+}
+
+impl Drop for Fleet {
+    fn drop(&mut self) {
+        for c in &mut self.children {
+            let _ = c.kill();
+            let _ = c.wait();
+        }
+        for d in &self.scratch {
+            let _ = std::fs::remove_dir_all(d);
+        }
+    }
+}
+
 /// Headless replica fan-out check: spawn a primary and N follower
 /// *processes* off one trained store, put the in-process router in front
 /// of the followers, and assert the replication acceptance properties —
@@ -705,8 +898,6 @@ fn cmd_cluster_check(args: &Args) -> crate::error::Result<()> {
     use crate::coordinator::{text_request, Router, RouterConfig};
     use crate::error::Error;
     use crate::model::ModelStore;
-    use std::io::BufRead;
-    use std::process::{Child, Command, Stdio};
     use std::time::{Duration, Instant};
 
     let dir = model_dir_arg(args, &args.str_or("dataset", "bibtex"));
@@ -722,61 +913,16 @@ fn cmd_cluster_check(args: &Args) -> crate::error::Result<()> {
     let n_replicas: usize = args.parse_or("replicas", 3usize);
     let learns: u64 = args.parse_or("learns", 3u64);
     let routed_requests: usize = args.parse_or("requests", 24usize);
-    let exe = std::env::current_exe().map_err(Error::Io)?;
-
-    // children and their scratch stores die with the check, pass or fail
-    struct Fleet(Vec<Child>, Vec<std::path::PathBuf>);
-    impl Drop for Fleet {
-        fn drop(&mut self) {
-            for c in &mut self.0 {
-                let _ = c.kill();
-                let _ = c.wait();
-            }
-            for d in &self.1 {
-                let _ = std::fs::remove_dir_all(d);
-            }
-        }
-    }
-    let mut fleet = Fleet(Vec::new(), Vec::new());
-
-    let spawn_server =
-        |fleet: &mut Fleet, argv: &[String]| -> crate::error::Result<std::net::SocketAddr> {
-            let mut child = Command::new(&exe)
-                .args(argv)
-                .stdout(Stdio::piped())
-                .stderr(Stdio::inherit())
-                .spawn()
-                .map_err(Error::Io)?;
-            let stdout = child.stdout.take().expect("piped stdout");
-            let (tx, rx) = std::sync::mpsc::channel();
-            // reader thread: forward the addr marker, then keep draining so
-            // the child can never block on a full stdout pipe
-            std::thread::spawn(move || {
-                for line in std::io::BufReader::new(stdout).lines() {
-                    let Ok(line) = line else { break };
-                    if let Some(addr) = line.strip_prefix("FASTPI_SERVE_ADDR=") {
-                        let _ = tx.send(addr.to_string());
-                    }
-                }
-            });
-            fleet.0.push(child);
-            let addr = rx.recv_timeout(Duration::from_secs(120)).map_err(|_| {
-                Error::Invalid("spawned server never reported FASTPI_SERVE_ADDR".into())
-            })?;
-            addr.parse().map_err(|_| Error::Invalid(format!("bad server address `{addr}`")))
-        };
+    let mut fleet = Fleet::new()?;
 
     // one primary process serving the trained store
-    let primary = spawn_server(
-        &mut fleet,
-        &[
-            "serve".into(),
-            "--model-dir".into(),
-            dir.display().to_string(),
-            "--learn-batch".into(),
-            "1".into(),
-        ],
-    )?;
+    let primary = fleet.spawn_server(&[
+        "serve".into(),
+        "--model-dir".into(),
+        dir.display().to_string(),
+        "--learn-batch".into(),
+        "1".into(),
+    ])?;
     println!("primary on {primary} serving v{v1} from {}", dir.display());
 
     // N follower processes, each with its own empty local store
@@ -785,19 +931,16 @@ fn cmd_cluster_check(args: &Args) -> crate::error::Result<()> {
         let rdir =
             std::env::temp_dir().join(format!("fastpi_cluster_{}_{i}", std::process::id()));
         let _ = std::fs::remove_dir_all(&rdir);
-        fleet.1.push(rdir.clone());
-        let addr = spawn_server(
-            &mut fleet,
-            &[
-                "serve".into(),
-                "--replica-of".into(),
-                primary.to_string(),
-                "--model-dir".into(),
-                rdir.display().to_string(),
-                "--poll-ms".into(),
-                "25".into(),
-            ],
-        )?;
+        fleet.scratch.push(rdir.clone());
+        let addr = fleet.spawn_server(&[
+            "serve".into(),
+            "--replica-of".into(),
+            primary.to_string(),
+            "--model-dir".into(),
+            rdir.display().to_string(),
+            "--poll-ms".into(),
+            "25".into(),
+        ])?;
         println!("replica {i} on {addr} (store {})", rdir.display());
         replica_addrs.push(addr);
     }
@@ -890,6 +1033,183 @@ fn cmd_cluster_check(args: &Args) -> crate::error::Result<()> {
     println!(
         "cluster-check OK: {n_replicas}-replica fleet converged v{v1} -> v{} with zero dropped requests",
         v1 + learns
+    );
+    Ok(())
+}
+
+/// Headless label-space sharding check — the sharded-equals-unsharded
+/// acceptance property, across real OS processes: split the trained model
+/// into N shards, serve every shard as its own process off one shard
+/// store, serve the unsharded model as a reference process, scatter-gather
+/// route over the shard fleet, and assert (a) every routed SCORE reply is
+/// byte-identical to the reference server's, (b) broadcast LEARNs advance
+/// every shard unanimously with replies byte-identical to the reference
+/// server's, and (c) the reassembled shard set is bitwise the reference
+/// store's model — factors and Z.
+fn cmd_shard_check(args: &Args) -> crate::error::Result<()> {
+    use crate::coordinator::{text_request, Router, RouterConfig};
+    use crate::error::Error;
+    use crate::model::{reassemble, split_artifact, ModelStore};
+
+    let dir = model_dir_arg(args, &args.str_or("dataset", "bibtex"));
+    let shards: usize = args.parse_or("shards", 3usize);
+    let learns: u64 = args.parse_or("learns", 3u64);
+    let source = ModelStore::open(&dir)?;
+    let Some((src_version, artifact)) = source.load_latest()? else {
+        return Err(Error::Invalid(format!(
+            "no model versions in {} — run `fastpi train` first",
+            dir.display()
+        )));
+    };
+    drop(source);
+    let (_, n, l) = artifact.shape();
+
+    // scratch stores: an unsharded reference copy and the shard set, both
+    // at v1 so version advance stays comparable across the two fleets
+    let base = std::env::temp_dir().join(format!("fastpi_shardcheck_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&base);
+    let ref_dir = base.join("ref");
+    let shard_dir = base.join("shards");
+    let mut fleet = Fleet::new()?;
+    fleet.scratch.push(base.clone());
+    let ref_store = ModelStore::open(&ref_dir)?;
+    assert_eq!(ref_store.publish(&artifact)?, 1, "fresh reference store starts at v1");
+    let set = split_artifact(&artifact, shards)?;
+    let shard_store = ModelStore::open(&shard_dir)?;
+    assert_eq!(shard_store.publish_shard_set(&set)?, 1, "fresh shard store starts at v1");
+    println!(
+        "split v{src_version} ({l} labels, rank {}) into {shards} shards under {}",
+        artifact.rank(),
+        base.display()
+    );
+
+    // the unsharded reference process + one process per shard
+    let reference = fleet.spawn_server(&[
+        "serve".into(),
+        "--model-dir".into(),
+        ref_dir.display().to_string(),
+        "--learn-batch".into(),
+        "1".into(),
+    ])?;
+    println!("reference (unsharded) on {reference}");
+    let mut shard_addrs = Vec::new();
+    for k in 0..shards {
+        let addr = fleet.spawn_server(&[
+            "serve".into(),
+            "--model-dir".into(),
+            shard_dir.display().to_string(),
+            "--shard".into(),
+            format!("{k}/{shards}"),
+            "--learn-batch".into(),
+            "1".into(),
+        ])?;
+        println!("shard {k}/{shards} on {addr}");
+        shard_addrs.push(addr);
+    }
+    let router = Router::start_sharded(
+        shard_addrs.iter().map(|&a| vec![a]).collect(),
+        RouterConfig::default(),
+    )
+    .map_err(Error::Io)?;
+
+    let req = |addr, line: &str| text_request(addr, line).map_err(Error::Io);
+    let probes = [
+        format!("SCORE 5 0:1.0,{}:0.5", n.saturating_sub(1)),
+        "SCORE 1 0:1.0".to_string(),
+        format!("SCORE {l} 1:0.25,2:-1.0"), // topk = the whole label space
+        "SCORE 3 ".to_string(),             // empty feature list
+    ];
+
+    // (a) scatter-gather SCORE ≡ unsharded SCORE, byte for byte
+    let mut compared = 0usize;
+    for probe in &probes {
+        let want = req(reference, probe)?;
+        if !want.starts_with("OK ") {
+            return Err(Error::Invalid(format!("reference SCORE failed: {want}")));
+        }
+        let got = req(router.addr, probe)?;
+        if got != want {
+            return Err(Error::Invalid(format!(
+                "sharded reply diverged on `{probe}`:\n  sharded:   {got}\n  unsharded: {want}"
+            )));
+        }
+        compared += 1;
+    }
+    println!("  {compared} scatter-gather SCORE replies byte-identical to the unsharded server");
+
+    // (b) broadcast LEARN: unanimous advance, reply byte-identical to the
+    // unsharded server folding the same example (deterministic folds)
+    for step in 0..learns {
+        let line = format!("LEARN {} {}:1.0", step as usize % l, step as usize % n);
+        let sharded = req(router.addr, &line)?;
+        let unsharded = req(reference, &line)?;
+        let want_version = 2 + step;
+        if sharded != unsharded {
+            return Err(Error::Invalid(format!(
+                "LEARN {step} diverged:\n  sharded:   {sharded}\n  unsharded: {unsharded}"
+            )));
+        }
+        if !sharded.starts_with(&format!("OK version={want_version} ")) {
+            return Err(Error::Invalid(format!("LEARN {step}: {sharded}")));
+        }
+    }
+    let v_final = 1 + learns;
+    for (k, &addr) in shard_addrs.iter().enumerate() {
+        let v = req(addr, "VERSION")?;
+        let want = format!("VERSION id={v_final} ");
+        if !v.starts_with(&want) || !v.ends_with(&format!("shard={k}/{shards}")) {
+            return Err(Error::Invalid(format!(
+                "shard {k} out of step after broadcast LEARN: `{v}` (want id={v_final})"
+            )));
+        }
+    }
+    let stats = req(router.addr, "STATS")?;
+    if !stats.contains(" skew=0") || !stats.contains(&format!("shards={shards}")) {
+        return Err(Error::Invalid(format!("shard fleet should be converged: {stats}")));
+    }
+    println!("  {learns} broadcast LEARNs advanced every shard to v{v_final} unanimously ({stats})");
+
+    // (c) post-LEARN scoring still identical, and the reassembled shard
+    // set is bitwise the unsharded store's model
+    for probe in &probes {
+        let want = req(reference, probe)?;
+        let got = req(router.addr, probe)?;
+        if got != want {
+            return Err(Error::Invalid(format!("post-LEARN divergence on `{probe}`")));
+        }
+    }
+    let (ref_v, reference_model) = ModelStore::open(&ref_dir)?.load_latest()?.unwrap();
+    if ref_v != v_final {
+        return Err(Error::Invalid(format!(
+            "reference store at v{ref_v}, expected v{v_final}"
+        )));
+    }
+    let back = reassemble(&ModelStore::open(&shard_dir)?.load_shard_set(v_final)?)?;
+    for (name, a, b) in [
+        ("U", back.svd.u.data(), reference_model.svd.u.data()),
+        ("Vt", back.svd.vt.data(), reference_model.svd.vt.data()),
+        ("C", back.c.data(), reference_model.c.data()),
+        ("Z", back.z.data(), reference_model.z.data()),
+    ] {
+        if a != b {
+            return Err(Error::Invalid(format!(
+                "reassembled {name} is not bitwise the unsharded model after sharded LEARN"
+            )));
+        }
+    }
+    if back.svd.s != reference_model.svd.s || back.s_inv != reference_model.s_inv {
+        return Err(Error::Invalid(
+            "reassembled Σ/Σ⁺ is not bitwise the unsharded model".into(),
+        ));
+    }
+    let errors = router.stats.errors.load(std::sync::atomic::Ordering::Relaxed);
+    if errors != 0 {
+        return Err(Error::Invalid(format!("router reported {errors} errors")));
+    }
+    router.shutdown();
+    println!(
+        "shard-check OK: {shards}-shard fleet scored bitwise-identically to the unsharded model \
+         and broadcast LEARN kept it in lockstep v1 -> v{v_final} (factors + Z reassemble bitwise)"
     );
     Ok(())
 }

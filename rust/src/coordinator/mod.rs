@@ -1,9 +1,10 @@
 //! Layer-3 coordination: the pipeline orchestrator that runs pseudoinverse
 //! jobs end-to-end, the scoring server that serves the trained multi-label
 //! model over TCP with dynamic batching and zero-downtime model hot-swap
-//! (see `crate::model` for the lifecycle subsystem), and the replica
-//! fan-out router that spreads `SCORE` traffic across a fleet of
-//! snapshot-shipped followers.
+//! (see `crate::model` for the lifecycle subsystem), and the fan-out
+//! router that spreads `SCORE` traffic across a fleet of snapshot-shipped
+//! followers — round-robin over full replicas, or scatter-gather over a
+//! label-space shard set (`crate::model::shard`).
 
 pub mod pipeline;
 mod queue;
@@ -11,7 +12,7 @@ pub mod router;
 pub mod serve;
 
 pub use pipeline::{PinvJob, PinvReport, PipelineCoordinator};
-pub use router::{Router, RouterConfig, RouterStats};
+pub use router::{Router, RouterConfig, RouterMode, RouterStats};
 pub use serve::{
     score_request, text_request, text_request_timeout, ReplicaConfig, ScoreServer, ServerConfig,
     ServerStats,

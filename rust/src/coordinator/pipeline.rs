@@ -147,6 +147,7 @@ impl PipelineCoordinator {
             rows_since_solve: 0,
             updates_applied: 0,
             drift: 0.0,
+            shard: crate::model::ShardRange::full(y_train.cols()),
         };
         let artifact = ModelArtifact::from_training(meta, report.svd.clone(), &y_train);
         Ok((artifact, report))

@@ -1,31 +1,70 @@
-//! Replica fan-out router — the front end of a replicated serving tier.
+//! Replica fan-out router — the front end of a replicated or **sharded**
+//! serving tier.
 //!
-//! Speaks the same line protocol as [`super::serve`] on the client side and
-//! forwards `SCORE` requests to a fleet of replicas: incoming requests are
-//! collected into batches (same bounded queue + straggler-wait discipline
-//! as the scoring batcher), each batch is split round-robin into one group
-//! per replica, and the groups are sent concurrently on the shared
-//! worker-pool runtime ([`crate::runtime::pool`]) — one pipelined
-//! connection per group, all request lines written before the replies are
-//! read back. A replica that fails mid-group costs exactly that group:
-//! its clients get `ERR upstream`, everyone else's replies are unaffected,
-//! and the next batch rotates onto the survivors again (no removal list —
-//! a recovered replica is simply used again).
+//! Speaks the same line protocol as [`super::serve`] on the client side
+//! and runs in one of two modes:
 //!
-//! Version skew is the router's observability duty: replica stores mirror
-//! the primary's version ids (see `crate::model::ship`), so `STATS` polls
-//! each replica's `VERSION` live and reports
+//! ## Replicated mode ([`Router::start`])
+//!
+//! Forwards `SCORE` requests to a fleet of interchangeable replicas:
+//! incoming requests are collected into batches (same bounded queue +
+//! straggler-wait discipline as the scoring batcher), each batch is split
+//! round-robin into one group per replica, and the groups are sent
+//! concurrently on the shared worker-pool runtime
+//! ([`crate::runtime::pool`]) — one pipelined connection per group, all
+//! request lines written before the replies are read back. A replica that
+//! fails mid-group costs exactly that group: its clients get `ERR
+//! upstream`, everyone else's replies are unaffected, and the next batch
+//! rotates onto the survivors again (no removal list — a recovered
+//! replica is simply used again).
+//!
+//! ## Scatter-gather (sharded) mode ([`Router::start_sharded`])
+//!
+//! The fleet is a list of **shard groups**: group `k` holds one or more
+//! interchangeable servers of label-space shard `k` (see
+//! `crate::model::shard`). Every request is *broadcast* — one member per
+//! group, rotated within the group — and the per-shard replies are
+//! stitched back into a full-label-space answer:
+//!
+//! * `SCORE <topk> …` fans to all `N` groups; each shard answers its local
+//!   top-k **in global label ids with exact (shortest round-trip) score
+//!   formatting**, and the router merges the union with the same ordering
+//!   the server itself uses (score descending, ties by label id),
+//!   truncates to `topk`, and re-emits the shard tokens verbatim — so the
+//!   merged reply is byte-for-byte what one unsharded node would have
+//!   said. A request missing ANY shard's reply fails with `ERR upstream`:
+//!   a partial label space would be silently wrong, not degraded.
+//! * `LEARN …` is broadcast to all shards (each folds only its label
+//!   slice; the factor update is deterministic and identical everywhere)
+//!   and the reply is required to be **unanimous** — all shards answering
+//!   the identical `OK version=… ` line, which is also how lockstep
+//!   version advance is enforced. Divergence answers `ERR shard
+//!   divergence …` and shows up in `STATS errors=`.
+//!
+//! ## Observability
+//!
+//! Version skew is the router's observability duty in both modes: stores
+//! mirror the primary's version ids (see `crate::model::ship`), so `STATS`
+//! polls each member's `VERSION` live and reports
 //!
 //! ```text
-//! STATS routed=... errors=... rejected=... batches=... replicas=N versions=v1,v2,... skew=S
+//! STATS routed=... errors=... rejected=... batches=... replicas=M versions=v1,v2,... skew=S [shards=N]
 //! ```
 //!
-//! where `skew` is max−min over the reachable replicas' ids (`?` marks an
-//! unreachable one). Skew 0 ⇒ every replica serves byte-identical scores.
+//! `replicas=` counts fleet MEMBERS and always equals the length of the
+//! `versions=` list; in sharded mode `shards=` carries the group count.
 //!
-//! Router verbs: `SCORE` (forwarded), `PING`, `STATS`, `QUIT`. Lifecycle
-//! verbs are deliberately not forwarded — `LEARN` belongs on the primary,
-//! and a replica would refuse it anyway.
+//! where `skew` is max−min over the reachable members' ids (`?` marks an
+//! unreachable one). Replicated mode: skew 0 ⇒ every replica serves
+//! byte-identical scores. Sharded mode: `versions=` lists EVERY member of
+//! every shard group (group order — the in-group rotation serves traffic
+//! from all of them, so none may hide behind a healthy sibling), and skew
+//! 0 ⇒ the shard set is complete and in lockstep — the precondition for
+//! merged replies equalling an unsharded node's.
+//!
+//! Router verbs: `SCORE` (both modes), `LEARN` (sharded mode only — in
+//! replicated mode it belongs on the primary and a replica would refuse
+//! it anyway), `PING`, `STATS`, `QUIT`.
 //!
 //! Trade-off, stated openly: fan-out groups do blocking socket I/O on the
 //! shared worker pool, so a blackholed replica can occupy a pool worker
@@ -98,11 +137,23 @@ struct Pending {
 /// server's batcher — see `coordinator/queue.rs`).
 type Queue = super::queue::BoundedQueue<Pending>;
 
+/// How the router treats its target groups.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RouterMode {
+    /// every group serves the full model: spread requests round-robin
+    Replicated,
+    /// group `k` serves label-space shard `k`: broadcast and merge
+    Sharded,
+}
+
 /// A running fan-out router; dropping does NOT stop it — call `shutdown`.
 pub struct Router {
     pub addr: SocketAddr,
     pub stats: Arc<RouterStats>,
-    replicas: Arc<Vec<SocketAddr>>,
+    /// target groups: replicated = one single-member group per replica;
+    /// sharded = group `k` holds the interchangeable servers of shard `k`
+    groups: Arc<Vec<Vec<SocketAddr>>>,
+    mode: RouterMode,
     upstream_timeout: Duration,
     stop: Arc<AtomicBool>,
     accept_handle: Option<std::thread::JoinHandle<()>>,
@@ -110,12 +161,31 @@ pub struct Router {
 }
 
 impl Router {
-    /// Start routing across `replicas` (at least one required).
+    /// Start routing across interchangeable `replicas` (at least one).
     pub fn start(replicas: Vec<SocketAddr>, cfg: RouterConfig) -> std::io::Result<Router> {
-        if replicas.is_empty() {
+        let groups = replicas.into_iter().map(|a| vec![a]).collect();
+        Self::start_mode(groups, RouterMode::Replicated, cfg)
+    }
+
+    /// Start in scatter-gather mode over `shard_groups`: `shard_groups[k]`
+    /// lists the servers of shard `k` of a `shard_groups.len()`-shard
+    /// model. Every request hits one member of every group.
+    pub fn start_sharded(
+        shard_groups: Vec<Vec<SocketAddr>>,
+        cfg: RouterConfig,
+    ) -> std::io::Result<Router> {
+        Self::start_mode(shard_groups, RouterMode::Sharded, cfg)
+    }
+
+    fn start_mode(
+        groups: Vec<Vec<SocketAddr>>,
+        mode: RouterMode,
+        cfg: RouterConfig,
+    ) -> std::io::Result<Router> {
+        if groups.is_empty() || groups.iter().any(|g| g.is_empty()) {
             return Err(std::io::Error::new(
                 std::io::ErrorKind::InvalidInput,
-                "router needs at least one replica",
+                "router needs at least one target per group",
             ));
         }
         let listener = TcpListener::bind(cfg.bind.as_str())?;
@@ -123,22 +193,22 @@ impl Router {
         listener.set_nonblocking(true)?;
         let stop = Arc::new(AtomicBool::new(false));
         let stats = Arc::new(RouterStats::default());
-        let replicas = Arc::new(replicas);
+        let groups = Arc::new(groups);
         let queue = Arc::new(Queue::new(cfg.queue_capacity));
 
         let b_queue = queue.clone();
         let b_stop = stop.clone();
         let b_stats = stats.clone();
-        let b_replicas = replicas.clone();
+        let b_groups = groups.clone();
         let b_cfg = cfg.clone();
         let batch_handle = std::thread::Builder::new()
             .name("route-batcher".into())
-            .spawn(move || fanout_loop(b_replicas, b_queue, b_stop, b_stats, b_cfg))?;
+            .spawn(move || fanout_loop(b_groups, mode, b_queue, b_stop, b_stats, b_cfg))?;
 
         let a_stop = stop.clone();
         let a_stats = stats.clone();
         let a_queue = queue.clone();
-        let a_replicas = replicas.clone();
+        let a_groups = groups.clone();
         let a_timeout = cfg.upstream_timeout;
         let accept_handle = std::thread::Builder::new().name("route-accept".into()).spawn(
             move || {
@@ -149,9 +219,9 @@ impl Router {
                             let q = a_queue.clone();
                             let st = a_stats.clone();
                             let stop2 = a_stop.clone();
-                            let rs = a_replicas.clone();
+                            let gs = a_groups.clone();
                             conns.push(std::thread::spawn(move || {
-                                let _ = handle_conn(stream, q, st, stop2, rs, a_timeout);
+                                let _ = handle_conn(stream, q, st, stop2, gs, mode, a_timeout);
                             }));
                             // prune finished handlers (same unbounded-handle
                             // hazard as the scoring server's accept loop)
@@ -172,7 +242,8 @@ impl Router {
         Ok(Router {
             addr,
             stats,
-            replicas,
+            groups,
+            mode,
             upstream_timeout: cfg.upstream_timeout,
             stop,
             accept_handle: Some(accept_handle),
@@ -180,11 +251,20 @@ impl Router {
         })
     }
 
-    /// Each replica's current `VERSION id=`, `None` when unreachable.
-    /// Queried live — this is the fleet's version-skew probe.
+    /// Which fan-out discipline this router runs.
+    pub fn mode(&self) -> RouterMode {
+        self.mode
+    }
+
+    /// Every fleet member's current `VERSION id=` (group order), `None`
+    /// when unreachable. Queried live — this is the fleet's version-skew
+    /// probe, and it covers EVERY member of every group: a stale member
+    /// inside a multi-member shard group serves traffic via the in-group
+    /// rotation, so it must show up here, not hide behind a healthy
+    /// sibling.
     pub fn replica_versions(&self) -> Vec<Option<u64>> {
         let t = probe_timeout(self.upstream_timeout);
-        self.replicas.iter().map(|&a| query_version(a, t)).collect()
+        probe_addrs(&self.groups).map(|a| query_version(a, t)).collect()
     }
 
     /// max−min over the reachable replicas' version ids (`None` when no
@@ -224,9 +304,18 @@ fn query_version(addr: SocketAddr, timeout: Duration) -> Option<u64> {
         .find_map(|tok| tok.strip_prefix("id=")?.parse().ok())
 }
 
-/// Drain batches off the queue and fan each one out across the replicas.
+/// Every member of every group, in group order — the observability probes
+/// talk to ALL of them: fan-out rotates across a group's members, so a
+/// stale member anywhere would otherwise serve traffic while a
+/// first-member-only probe still reported skew=0.
+fn probe_addrs(groups: &[Vec<SocketAddr>]) -> impl Iterator<Item = SocketAddr> + '_ {
+    groups.iter().flat_map(|g| g.iter().copied())
+}
+
+/// Drain batches off the queue and fan each one out across the groups.
 fn fanout_loop(
-    replicas: Arc<Vec<SocketAddr>>,
+    groups: Arc<Vec<Vec<SocketAddr>>>,
+    mode: RouterMode,
     queue: Arc<Queue>,
     stop: Arc<AtomicBool>,
     stats: Arc<RouterStats>,
@@ -242,43 +331,177 @@ fn fanout_loop(
             }
             continue;
         }
-
-        // round-robin split: request i → replica (rotation + i) % N
-        let n = replicas.len();
-        let mut lines: Vec<Vec<String>> = vec![Vec::new(); n];
-        let mut senders: Vec<Vec<ReplySender>> = (0..n).map(|_| Vec::new()).collect();
-        for (i, p) in batch.into_iter().enumerate() {
-            let g = (rotation + i) % n;
-            lines[g].push(p.line);
-            senders[g].push(p.reply);
-        }
-        rotation = rotation.wrapping_add(1);
-
-        // fan the groups out concurrently on the shared worker pool; each
-        // group is one pipelined connection to its replica
-        let groups: Vec<(SocketAddr, Vec<String>)> =
-            replicas.iter().copied().zip(lines).collect();
-        let replies: Vec<Vec<Option<String>>> = crate::runtime::pool::runtime()
-            .pool()
-            .par_map(&groups, |(addr, ls)| forward_group(*addr, ls, cfg.upstream_timeout));
-
-        stats.batches.fetch_add(1, Ordering::Relaxed);
-        for (group_replies, group_senders) in replies.into_iter().zip(senders) {
-            for (reply, sender) in group_replies.into_iter().zip(group_senders) {
-                let upstream_ok = reply.is_some();
-                // send fails when the client already gave up (its handler
-                // timed out and dropped the receiver) — that request was
-                // NOT served, so it must not count as routed or the
-                // zero-dropped-request checks would pass a lying fleet
-                let delivered = sender.send(reply).is_ok();
-                if upstream_ok && delivered {
-                    stats.routed.fetch_add(1, Ordering::Relaxed);
-                } else {
-                    stats.errors.fetch_add(1, Ordering::Relaxed);
-                }
+        match mode {
+            RouterMode::Replicated => {
+                fanout_replicated(&groups, rotation, batch, &stats, &cfg);
+            }
+            RouterMode::Sharded => {
+                fanout_sharded(&groups, rotation, batch, &stats, &cfg);
             }
         }
+        rotation = rotation.wrapping_add(1);
     }
+}
+
+/// Replicated round: split the batch round-robin, one slice per replica.
+fn fanout_replicated(
+    groups: &[Vec<SocketAddr>],
+    rotation: usize,
+    batch: Vec<Pending>,
+    stats: &RouterStats,
+    cfg: &RouterConfig,
+) {
+    // round-robin split: request i → replica (rotation + i) % N
+    let n = groups.len();
+    let mut lines: Vec<Vec<String>> = vec![Vec::new(); n];
+    let mut senders: Vec<Vec<ReplySender>> = (0..n).map(|_| Vec::new()).collect();
+    for (i, p) in batch.into_iter().enumerate() {
+        let g = (rotation + i) % n;
+        lines[g].push(p.line);
+        senders[g].push(p.reply);
+    }
+
+    // fan the groups out concurrently on the shared worker pool; each
+    // group is one pipelined connection to its replica
+    let targets: Vec<(SocketAddr, Vec<String>)> = groups
+        .iter()
+        .map(|g| g[rotation % g.len()])
+        .zip(lines)
+        .collect();
+    let replies: Vec<Vec<Option<String>>> = crate::runtime::pool::runtime()
+        .pool()
+        .par_map(&targets, |(addr, ls)| forward_group(*addr, ls, cfg.upstream_timeout));
+
+    stats.batches.fetch_add(1, Ordering::Relaxed);
+    for (group_replies, group_senders) in replies.into_iter().zip(senders) {
+        for (reply, sender) in group_replies.into_iter().zip(group_senders) {
+            let healthy = reply.is_some();
+            deliver(reply, healthy, sender, stats);
+        }
+    }
+}
+
+/// Scatter-gather round: broadcast the WHOLE batch to one member of every
+/// shard group, then stitch each request's per-shard replies together.
+fn fanout_sharded(
+    groups: &[Vec<SocketAddr>],
+    rotation: usize,
+    batch: Vec<Pending>,
+    stats: &RouterStats,
+    cfg: &RouterConfig,
+) {
+    let all_lines: Vec<String> = batch.iter().map(|p| p.line.clone()).collect();
+    let targets: Vec<SocketAddr> = groups.iter().map(|g| g[rotation % g.len()]).collect();
+    // one pipelined connection per shard, all shards concurrently on the
+    // shared worker pool
+    let per_shard: Vec<Vec<Option<String>>> = crate::runtime::pool::runtime()
+        .pool()
+        .par_map(&targets, |addr| forward_group(*addr, &all_lines, cfg.upstream_timeout));
+
+    stats.batches.fetch_add(1, Ordering::Relaxed);
+    for (i, p) in batch.into_iter().enumerate() {
+        // a request is answerable only if EVERY shard answered: a partial
+        // label space would be silently wrong, not gracefully degraded
+        let shard_replies: Option<Vec<&str>> =
+            per_shard.iter().map(|g| g[i].as_deref()).collect();
+        let (reply, healthy) = match shard_replies {
+            Some(rs) => combine_replies(&p.line, &rs),
+            None => (None, false),
+        };
+        deliver(reply, healthy, p.reply, stats);
+    }
+}
+
+/// Hand one reply (or upstream failure) back to the waiting client,
+/// keeping the routed/errors counters honest: a request counts as routed
+/// only if the fleet answered coherently (`healthy`) AND the client was
+/// still there to receive it.
+fn deliver(reply: Option<String>, healthy: bool, sender: ReplySender, stats: &RouterStats) {
+    // send fails when the client already gave up (its handler timed out
+    // and dropped the receiver) — that request was NOT served, so it must
+    // not count as routed or the zero-dropped-request checks would pass a
+    // lying fleet
+    let delivered = sender.send(reply).is_ok();
+    if healthy && delivered {
+        stats.routed.fetch_add(1, Ordering::Relaxed);
+    } else {
+        stats.errors.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+/// Stitch one request's per-shard replies into `(client reply, healthy)`.
+/// Reply `None` = the client gets `ERR upstream`; `healthy: false` counts
+/// the request under `STATS errors=`.
+///
+/// A byte-unanimous non-`OK` reply (e.g. every shard saying `ERR bad
+/// request` to a malformed line) is the fleet behaving exactly like one
+/// unsharded server — it passes through verbatim and counts as routed,
+/// same as it would in replicated mode. Divergent replies reach the
+/// client as `ERR shard divergence …` but count as errors: the fleet is
+/// out of lockstep and zero-error health checks must fail.
+fn combine_replies(line: &str, shard_replies: &[&str]) -> (Option<String>, bool) {
+    let Some(&first) = shard_replies.first() else {
+        return (None, false);
+    };
+    let unanimous = shard_replies.iter().all(|&r| r == first);
+    if unanimous && !first.starts_with("OK ") {
+        // deterministic server-side rejection, identical everywhere
+        return (Some(first.to_string()), true);
+    }
+    if line.starts_with("SCORE ") {
+        return match merge_score_replies(line, shard_replies) {
+            Some(merged) => (Some(merged), true),
+            None => (None, false),
+        };
+    }
+    // LEARN (and anything else broadcast): require unanimity. Folds are
+    // deterministic and version ids advance per-shard in lockstep, so the
+    // whole reply line — version, rows, drift — must match byte-for-byte;
+    // anything else means a shard fell out of step and must be loud.
+    if unanimous {
+        (Some(first.to_string()), true)
+    } else {
+        let detail = shard_replies
+            .iter()
+            .enumerate()
+            .map(|(k, r)| format!("[{k}] {r}"))
+            .collect::<Vec<_>>()
+            .join(" | ");
+        (Some(format!("ERR shard divergence: {detail}")), false)
+    }
+}
+
+/// Merge per-shard `OK label:score,...` replies into the global top-k.
+///
+/// Each shard already ranks its own labels with the server's comparator
+/// (score descending, ties by ascending label id) and prints scores in
+/// shortest round-trip form, so re-ranking the parsed union with the same
+/// comparator and re-emitting the ORIGINAL tokens reproduces, byte for
+/// byte, the reply one unsharded server would have produced. Any non-OK
+/// or unparseable shard reply fails the whole request (`None` → `ERR
+/// upstream`) — NaN scores included, which an unsharded server would have
+/// turned into `ERR internal` anyway.
+fn merge_score_replies(line: &str, shard_replies: &[&str]) -> Option<String> {
+    let topk: usize = line.strip_prefix("SCORE ")?.split_whitespace().next()?.parse().ok()?;
+    let mut entries: Vec<(usize, f64, &str)> = Vec::new();
+    for reply in shard_replies {
+        let body = reply.strip_prefix("OK ")?;
+        for tok in body.split(',').filter(|t| !t.is_empty()) {
+            let (l, s) = tok.split_once(':')?;
+            let label: usize = l.parse().ok()?;
+            let score: f64 = s.parse().ok()?;
+            if score.is_nan() {
+                return None;
+            }
+            entries.push((label, score, tok));
+        }
+    }
+    // same total order as `top_k_indices`: score desc, then label asc
+    // (partial_cmp is total here — NaN was rejected above)
+    entries.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0)));
+    entries.truncate(topk);
+    let body: Vec<&str> = entries.iter().map(|&(_, _, tok)| tok).collect();
+    Some(format!("OK {}", body.join(",")))
 }
 
 /// Forward one group of request lines over a single pipelined connection:
@@ -324,7 +547,8 @@ fn handle_conn(
     queue: Arc<Queue>,
     stats: Arc<RouterStats>,
     stop: Arc<AtomicBool>,
-    replicas: Arc<Vec<SocketAddr>>,
+    groups: Arc<Vec<Vec<SocketAddr>>>,
+    mode: RouterMode,
     upstream_timeout: Duration,
 ) -> std::io::Result<()> {
     stream.set_read_timeout(Some(Duration::from_millis(200)))?;
@@ -364,7 +588,7 @@ fn handle_conn(
         if msg == "STATS" {
             let t = probe_timeout(upstream_timeout);
             let versions: Vec<Option<u64>> =
-                replicas.iter().map(|&a| query_version(a, t)).collect();
+                probe_addrs(&groups).map(|a| query_version(a, t)).collect();
             let known: Vec<u64> = versions.iter().copied().flatten().collect();
             let skew = match (known.iter().min(), known.iter().max()) {
                 (Some(lo), Some(hi)) => format!("{}", hi - lo),
@@ -374,20 +598,31 @@ fn handle_conn(
                 .iter()
                 .map(|v| v.map_or_else(|| "?".into(), |id| id.to_string()))
                 .collect();
+            let sharded_suffix = match mode {
+                RouterMode::Sharded => format!(" shards={}", groups.len()),
+                RouterMode::Replicated => String::new(),
+            };
+            // replicas= counts MEMBERS, so it always equals the length of
+            // the versions= list (in replicated mode groups are
+            // single-member, so it is also the group count)
+            let members: usize = groups.iter().map(|g| g.len()).sum();
             writeln!(
                 writer,
-                "STATS routed={} errors={} rejected={} batches={} replicas={} versions={} skew={skew}",
+                "STATS routed={} errors={} rejected={} batches={} replicas={members} versions={} skew={skew}{sharded_suffix}",
                 stats.routed.load(Ordering::Relaxed),
                 stats.errors.load(Ordering::Relaxed),
                 stats.rejected.load(Ordering::Relaxed),
                 stats.batches.load(Ordering::Relaxed),
-                replicas.len(),
                 versions.join(","),
             )?;
             writer.flush()?;
             continue;
         }
-        if msg.starts_with("SCORE ") {
+        // sharded mode also forwards LEARN: the broadcast + unanimity
+        // check IS the sharded learning path
+        if msg.starts_with("SCORE ")
+            || (mode == RouterMode::Sharded && msg.starts_with("LEARN "))
+        {
             let (tx, rx) = std::sync::mpsc::channel();
             let accepted = {
                 let mut dq = queue.lock();
@@ -469,6 +704,122 @@ mod tests {
         r1.shutdown();
         r2.shutdown();
         r3.shutdown();
+    }
+
+    #[test]
+    fn merge_reproduces_the_servers_ranking() {
+        // tokens re-emitted verbatim, ordered score desc / label asc, cut
+        // to topk — the exact comparator `top_k_indices` uses
+        let r0 = "OK 0:1.5,2:0.25";
+        let r1 = "OK 4:1.5,3:0.25";
+        let merged = merge_score_replies("SCORE 3 0:1.0", &[r0, r1]).unwrap();
+        assert_eq!(merged, "OK 0:1.5,4:1.5,2:0.25");
+        // topk larger than the union keeps everything
+        let merged = merge_score_replies("SCORE 9 0:1.0", &[r0, r1]).unwrap();
+        assert_eq!(merged, "OK 0:1.5,4:1.5,2:0.25,3:0.25");
+        // exact score strings survive the round trip untouched
+        let exotic = "OK 7:0.30000000000000004";
+        let merged = merge_score_replies("SCORE 2 0:1.0", &[exotic, "OK 1:-2.5e-30"]).unwrap();
+        assert_eq!(merged, "OK 7:0.30000000000000004,1:-2.5e-30");
+        // any shard failing to answer OK fails the merge
+        assert!(merge_score_replies("SCORE 2 0:1.0", &[r0, "ERR overloaded"]).is_none());
+        assert!(merge_score_replies("SCORE 2 0:1.0", &[r0, "OK 1:NaN"]).is_none());
+        // ...and through combine_replies that is an unhealthy upstream
+        // failure, not a routed reply
+        assert_eq!(combine_replies("SCORE 2 0:1.0", &[r0, "ERR overloaded"]), (None, false));
+        // a unanimous deterministic rejection passes through verbatim and
+        // counts as routed — the fleet behaved exactly like one server
+        assert_eq!(
+            combine_replies("SCORE 0 1:1.0", &["ERR bad request", "ERR bad request"]),
+            (Some("ERR bad request".to_string()), true)
+        );
+        // LEARN unanimity
+        let ok = "OK version=3 pending=0 rows=1 drift=1.0e-9 resolve=0";
+        assert_eq!(combine_replies("LEARN 1 0:1.0", &[ok, ok]), (Some(ok.to_string()), true));
+        let (div, healthy) = combine_replies("LEARN 1 0:1.0", &[ok, "OK version=4 pending=0"]);
+        assert!(div.unwrap().starts_with("ERR shard divergence"));
+        assert!(!healthy, "divergence must count under STATS errors=");
+    }
+
+    #[test]
+    fn scatter_gather_matches_single_node_bitwise() {
+        use crate::model::format::testutil::sample_artifact;
+        use crate::model::split_artifact;
+        let art = sample_artifact(71, 18, 10, 11, 5);
+        let set = split_artifact(&art, 3).unwrap();
+        let full = ScoreServer::start(
+            MultiLabelModel { z: art.z.clone() },
+            ServerConfig::default(),
+        )
+        .unwrap();
+        let shards: Vec<ScoreServer> = set
+            .iter()
+            .map(|s| {
+                ScoreServer::start_sharded(
+                    MultiLabelModel { z: s.z.clone() },
+                    s.meta.shard,
+                    ServerConfig::default(),
+                )
+                .unwrap()
+            })
+            .collect();
+        let router = Router::start_sharded(
+            shards.iter().map(|s| vec![s.addr]).collect(),
+            RouterConfig::default(),
+        )
+        .unwrap();
+
+        for probe in [
+            "SCORE 3 0:1.0,9:-0.5",
+            "SCORE 1 2:2.0",
+            "SCORE 11 0:0.25,3:1.0,7:-2.0", // topk = whole label space
+            "SCORE 5 ",                     // empty feature list
+        ] {
+            let want = text_request(full.addr, probe).unwrap();
+            let got = text_request(router.addr, probe).unwrap();
+            assert_eq!(got, want, "scatter-gather must be bitwise the single node: {probe}");
+        }
+        let stats = text_request(router.addr, "STATS").unwrap();
+        assert!(stats.contains("shards=3"), "{stats}");
+        assert!(stats.contains("replicas=3"), "{stats}");
+        assert_eq!(router.stats.errors.load(Ordering::Relaxed), 0);
+
+        router.shutdown();
+        for s in shards {
+            s.shutdown();
+        }
+        full.shutdown();
+    }
+
+    #[test]
+    fn missing_shard_fails_the_request_not_the_router() {
+        use crate::model::format::testutil::sample_artifact;
+        use crate::model::split_artifact;
+        let art = sample_artifact(72, 12, 8, 6, 4);
+        let set = split_artifact(&art, 2).unwrap();
+        let live = ScoreServer::start_sharded(
+            MultiLabelModel { z: set[0].z.clone() },
+            set[0].meta.shard,
+            ServerConfig::default(),
+        )
+        .unwrap();
+        let dead_addr = {
+            let l = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+            l.local_addr().unwrap()
+        };
+        let cfg = RouterConfig {
+            upstream_timeout: Duration::from_millis(500),
+            ..Default::default()
+        };
+        let router = Router::start_sharded(vec![vec![live.addr], vec![dead_addr]], cfg).unwrap();
+        for _ in 0..4 {
+            let reply = text_request(router.addr, "SCORE 2 1:1.0").unwrap();
+            assert_eq!(reply, "ERR upstream", "half a label space must never be served");
+        }
+        assert_eq!(router.stats.routed.load(Ordering::Relaxed), 0);
+        assert!(router.stats.errors.load(Ordering::Relaxed) >= 4);
+        router.shutdown();
+        live.shutdown();
     }
 
     #[test]

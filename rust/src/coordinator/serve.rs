@@ -37,6 +37,32 @@
 //! Skew 0 means every replica serves the same bytes — and because
 //! save→load is bitwise-identical, byte-identical scores.
 //!
+//! ## Label-space sharding
+//!
+//! A server may hold one label-space **shard** of a wider model
+//! (`serve --shard K/N`, see `crate::model::shard`): the full factors plus
+//! the `C`/`Z` columns for global labels `label_lo..label_hi`. Everything
+//! above still applies, with three twists:
+//!
+//! * `SCORE` answers in **global** label ids (local top-k + `label_lo`
+//!   offset). Since per-label scores are bitwise the full model's scores,
+//!   the scatter-gather router can merge shard replies into exactly the
+//!   unsharded reply.
+//! * `LEARN` takes **global** label ids, validates them against the full
+//!   label space, and folds only the slice that lands in this shard's
+//!   range. The factor update depends only on the feature row and the
+//!   deterministic per-fold seed, so a broadcast `LEARN` advances every
+//!   shard's factors identically — each shard publishes its slice under
+//!   the same next version id without coordination (see
+//!   `ModelStore::publish_shard`), and the router checks unanimity.
+//! * `VERSION` reports `shard=K/N`, and `SHIP <have> <k>/<n>` serves the
+//!   shard-qualified snapshot so a shard replica syncs only its slice.
+//!
+//! **Wire format note:** scores are printed with Rust's shortest
+//! round-trip `f64` formatting (not a fixed precision), so a router can
+//! parse, re-rank, and re-emit them without losing a bit — the property
+//! the sharded-equals-unsharded guarantee rests on.
+//!
 //! Protocol (line-oriented text):
 //! ```text
 //! -> SCORE <topk> j1:v1,j2:v2,...
@@ -51,9 +77,10 @@
 //!                                          publish persists it; a RELOAD
 //!                                          before that reverts to the
 //!                                          store's latest and discards it)
-//! -> VERSION         <- VERSION id=... rank=... features=... labels=... updates=... pending=...
+//! -> VERSION         <- VERSION id=... rank=... features=... labels=... updates=... pending=... shard=K/N
 //! -> RELOAD          <- OK version=...    (re-serve the store's latest)
-//! -> SHIP <have>     <- SNAPSHOT version=... bytes=...<raw body> | UNCHANGED version=...
+//! -> SHIP <have> [<k>/<n>]
+//!                    <- SNAPSHOT version=... [shard=<k>/<n>] bytes=...<raw body> | UNCHANGED version=...
 //! -> PING            <- PONG
 //! -> STATS           <- STATS served=... batches=... rejected=... avg_batch=... queue_depth=... swaps=... learned=...
 //! -> QUIT            (closes the connection)
@@ -67,7 +94,7 @@
 //! disabled` / `ERR no model store` on a server started without the
 //! corresponding lifecycle pieces.
 
-use crate::model::{ship, ModelStore, OnlineUpdater};
+use crate::model::{ship, ModelStore, OnlineUpdater, ShardRange};
 use crate::regress::metrics::top_k_indices;
 use crate::regress::MultiLabelModel;
 use crate::sparse::{Coo, Csr};
@@ -118,6 +145,9 @@ pub struct ReplicaConfig {
     /// per-round-trip socket timeout, and the bound on the blocking initial
     /// sync a cold (empty-store) replica performs before serving
     pub timeout: Duration,
+    /// `Some((k, n))` = follow only shard `k` of an `n`-shard set — the
+    /// replica transfers and serves one label-space slice
+    pub shard: ship::ShardSel,
 }
 
 impl Default for ReplicaConfig {
@@ -126,6 +156,7 @@ impl Default for ReplicaConfig {
             primary: SocketAddr::from(([127, 0, 0, 1], 0)),
             poll: Duration::from_millis(200),
             timeout: ship::SHIP_TIMEOUT,
+            shard: None,
         }
     }
 }
@@ -192,6 +223,10 @@ pub struct ServingModel {
     pub version: u64,
     /// factorization rank behind this model
     pub rank: usize,
+    /// which label-space slice this node serves (degenerate for a full
+    /// model) — `SCORE` adds `label_lo` to every local top-k index so
+    /// replies are always in global label ids
+    pub shard: ShardRange,
     pub model: MultiLabelModel,
 }
 
@@ -269,7 +304,21 @@ impl ScoreServer {
     /// port). No lifecycle: `LEARN` and `RELOAD` answer with errors;
     /// `SCORE`/`VERSION`/`STATS` work as always.
     pub fn start(model: MultiLabelModel, cfg: ServerConfig) -> std::io::Result<ScoreServer> {
-        let serving = ServingModel { version: 0, rank: 0, model };
+        let shard = ShardRange::full(model.z.cols());
+        let serving = ServingModel { version: 0, rank: 0, shard, model };
+        Self::start_inner(serving, None, None, cfg)
+    }
+
+    /// [`Self::start`] for one label-space slice of a wider model: scores
+    /// answer with global label ids offset by `shard.label_lo`. Mainly for
+    /// tests and embedding; the lifecycle path picks the shard up from the
+    /// artifact automatically.
+    pub fn start_sharded(
+        model: MultiLabelModel,
+        shard: ShardRange,
+        cfg: ServerConfig,
+    ) -> std::io::Result<ScoreServer> {
+        let serving = ServingModel { version: 0, rank: 0, shard, model };
         Self::start_inner(serving, None, None, cfg)
     }
 
@@ -284,7 +333,8 @@ impl ScoreServer {
         cfg: ServerConfig,
     ) -> std::io::Result<ScoreServer> {
         let art = updater.artifact();
-        let serving = ServingModel { version, rank: art.rank(), model: art.model() };
+        let serving =
+            ServingModel { version, rank: art.rank(), shard: art.meta.shard, model: art.model() };
         let lifecycle = Lifecycle { updater: Mutex::new(updater), store: store.map(Arc::new) };
         Self::start_inner(serving, Some(Arc::new(lifecycle)), None, cfg)
     }
@@ -301,14 +351,17 @@ impl ScoreServer {
         replica: ReplicaConfig,
         cfg: ServerConfig,
     ) -> crate::error::Result<ScoreServer> {
-        let mut current = store.load_latest()?;
+        let mut current = match replica.shard {
+            Some((k, n)) => store.load_latest_shard(k, n)?,
+            None => store.load_latest()?,
+        };
         if current.is_none() {
             let deadline = Instant::now() + replica.timeout;
             loop {
                 // per-attempt timeout stays short so a down primary is
                 // retried instead of eating the whole deadline in one call
                 let step = replica.timeout.min(Duration::from_secs(2));
-                match ship::sync_once(&store, replica.primary, step) {
+                match ship::sync_shard_once(&store, replica.primary, replica.shard, step) {
                     Ok(Some(got)) => {
                         current = Some(got);
                         break;
@@ -332,7 +385,12 @@ impl ScoreServer {
             }
         }
         let (version, artifact) = current.expect("loop above guarantees a model");
-        let serving = ServingModel { version, rank: artifact.rank(), model: artifact.model() };
+        let serving = ServingModel {
+            version,
+            rank: artifact.rank(),
+            shard: artifact.meta.shard,
+            model: artifact.model(),
+        };
         Self::start_inner(serving, None, Some((Arc::new(store), replica)), cfg)
             .map_err(crate::error::Error::Io)
     }
@@ -479,10 +537,14 @@ fn replica_sync_loop(
     // by at most ~2s instead of the full rc.timeout.
     let step = rc.timeout.min(Duration::from_secs(2));
     while !stop.load(Ordering::Relaxed) {
-        match ship::sync_once(&store, rc.primary, step) {
+        match ship::sync_shard_once(&store, rc.primary, rc.shard, step) {
             Ok(Some((version, artifact))) => {
-                let serving =
-                    ServingModel { version, rank: artifact.rank(), model: artifact.model() };
+                let serving = ServingModel {
+                    version,
+                    rank: artifact.rank(),
+                    shard: artifact.meta.shard,
+                    model: artifact.model(),
+                };
                 slot.swap(Arc::new(serving));
                 stats.swaps.fetch_add(1, Ordering::Relaxed);
             }
@@ -532,6 +594,9 @@ fn batcher_loop(
         // the scoring pass is contained to this batch: affected clients get
         // an error line and the batcher keeps serving.
         let cap = if cfg.threads > 0 { cfg.threads } else { usize::MAX };
+        // shard offset: replies carry GLOBAL label ids, so a scatter-gather
+        // merge of shard replies is exactly the full model's reply
+        let label_lo = serving.shard.label_lo as usize;
         let replies = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
             crate::runtime::pool::with_thread_cap(cap, || {
                 let mut coo = Coo::new(batch.len(), n_features);
@@ -549,7 +614,10 @@ fn batcher_loop(
                     .enumerate()
                     .map(|(i, p)| {
                         let row = scores.row(i);
-                        top_k_indices(row, p.topk).into_iter().map(|l| (l, row[l])).collect()
+                        top_k_indices(row, p.topk)
+                            .into_iter()
+                            .map(|l| (label_lo + l, row[l]))
+                            .collect()
                     })
                     .collect::<Vec<Vec<(usize, f64)>>>()
             })
@@ -642,13 +710,15 @@ fn handle_conn(
             };
             writeln!(
                 writer,
-                "VERSION id={} rank={} features={} labels={} updates={} pending={}",
+                "VERSION id={} rank={} features={} labels={} updates={} pending={} shard={}/{}",
                 serving.version,
                 serving.rank,
                 serving.model.z.rows(),
                 serving.model.z.cols(),
                 updates,
                 pending,
+                serving.shard.index,
+                serving.shard.count,
             )?;
             writer.flush()?;
             continue;
@@ -659,13 +729,22 @@ fn handle_conn(
             continue;
         }
         if let Some(rest) = msg.strip_prefix("SHIP ") {
-            match (rest.trim().parse::<u64>(), &ship_store) {
-                (Ok(have), Some(store)) => ship::serve_ship(&mut writer, store, have)?,
-                (Ok(_), None) => {
+            // `SHIP <have>` or `SHIP <have> <k>/<n>`
+            let mut toks = rest.split_whitespace();
+            let have = toks.next().and_then(|t| t.parse::<u64>().ok());
+            let shard_tok = toks.next();
+            let shard = shard_tok.and_then(ship::parse_shard_spec);
+            let well_formed =
+                have.is_some() && (shard_tok.is_none() || shard.is_some()) && toks.next().is_none();
+            match (well_formed, have, &ship_store) {
+                (true, Some(have), Some(store)) => {
+                    ship::serve_ship(&mut writer, store, have, shard)?
+                }
+                (true, Some(_), None) => {
                     writeln!(writer, "ERR no model store")?;
                     writer.flush()?;
                 }
-                (Err(_), _) => {
+                _ => {
                     writeln!(writer, "ERR bad request")?;
                     writer.flush()?;
                 }
@@ -698,8 +777,11 @@ fn handle_conn(
                 queue.notify_one();
                 match rx.recv_timeout(Duration::from_secs(30)) {
                     Ok(Some(result)) => {
+                        // shortest round-trip f64 formatting: a router can
+                        // parse, merge across shards, and re-emit these
+                        // tokens without losing a bit
                         let body: Vec<String> =
-                            result.iter().map(|(l, s)| format!("{l}:{s:.6}")).collect();
+                            result.iter().map(|(l, s)| format!("{l}:{s}")).collect();
                         writeln!(writer, "OK {}", body.join(","))?;
                     }
                     Ok(None) => writeln!(writer, "ERR internal")?,
@@ -715,7 +797,8 @@ fn handle_conn(
     }
 }
 
-/// Handle RELOAD: re-serve the store's latest published version.
+/// Handle RELOAD: re-serve the store's latest published version — of this
+/// node's own slice when it serves a shard.
 fn handle_reload(
     lifecycle: &Option<Arc<Lifecycle>>,
     slot: &ModelSlot,
@@ -727,9 +810,20 @@ fn handle_reload(
     let Some(store) = &lc.store else {
         return "ERR no model store".into();
     };
-    match store.load_latest() {
+    let shard = slot.get().shard;
+    let latest = if shard.is_full() {
+        store.load_latest()
+    } else {
+        store.load_latest_shard(shard.index, shard.count)
+    };
+    match latest {
         Ok(Some((id, art))) => {
-            let serving = ServingModel { version: id, rank: art.rank(), model: art.model() };
+            let serving = ServingModel {
+                version: id,
+                rank: art.rank(),
+                shard: art.meta.shard,
+                model: art.model(),
+            };
             // lock order: updater, then slot (matches handle_learn)
             let mut up = lc.updater();
             up.replace_artifact(art);
@@ -757,7 +851,10 @@ fn handle_learn(
         return "ERR bad request".into();
     };
     let mut up = lc.updater();
-    match up.push_example(features, labels) {
+    // labels arrive in GLOBAL label-space ids; a shard folds only its own
+    // slice (validated against the full space so broadcast LEARNs make the
+    // identical accept/reject decision on every shard)
+    match up.push_example_global(features, labels) {
         Ok(None) => {
             stats.learned.fetch_add(1, Ordering::Relaxed);
             format!("OK version={} pending={}", slot.get().version, up.pending_len())
@@ -775,14 +872,21 @@ fn handle_learn(
             // id lives in the top-bit space so a later real publish can
             // never hand the same id to a different model.
             let (version, unpublished) = match &lc.store {
-                Some(store) => match store.publish(art) {
+                // shard-shaped artifacts publish their slice file; full
+                // models the plain version file
+                Some(store) => match store.publish_artifact(art) {
                     Ok(v) => (v, false),
                     Err(_) => (next_transient_version(), true),
                 },
                 // no store: in-memory version bump so swaps stay observable
                 None => (slot.get().version + 1, false),
             };
-            let serving = ServingModel { version, rank: art.rank(), model: art.model() };
+            let serving = ServingModel {
+                version,
+                rank: art.rank(),
+                shard: art.meta.shard,
+                model: art.model(),
+            };
             slot.swap(Arc::new(serving));
             stats.swaps.fetch_add(1, Ordering::Relaxed);
             let mut reply = format!(
@@ -1048,7 +1152,7 @@ mod tests {
         let m = model(6, 3);
         let server = ScoreServer::start(m, ServerConfig::default()).unwrap();
         let v = text_request(server.addr, "VERSION").unwrap();
-        assert_eq!(v, "VERSION id=0 rank=0 features=6 labels=3 updates=0 pending=0");
+        assert_eq!(v, "VERSION id=0 rank=0 features=6 labels=3 updates=0 pending=0 shard=0/1");
         assert_eq!(server.current_version(), 0);
         let r = text_request(server.addr, "RELOAD").unwrap();
         assert!(r.starts_with("ERR"), "{r}");
@@ -1081,6 +1185,7 @@ mod tests {
             primary: primary.addr,
             poll: Duration::from_millis(10),
             timeout: Duration::from_secs(10),
+            shard: None,
         };
         let replica = ScoreServer::start_replica(
             ModelStore::open(&dir_r).unwrap(),
@@ -1115,12 +1220,51 @@ mod tests {
         {
             crate::model::ShipReply::Snapshot { version, bytes } => {
                 assert_eq!(version, 2);
-                assert_eq!(bytes, std::fs::read(dir_p.join("v000002.fpim")).unwrap());
+                assert_eq!(bytes.bytes(), std::fs::read(dir_p.join("v000002.fpim")).unwrap());
             }
             other => panic!("expected a snapshot, got {other:?}"),
         }
         replica.shutdown();
         primary.shutdown();
+    }
+
+    #[test]
+    fn sharded_server_answers_in_global_label_ids() {
+        use crate::model::split_artifact;
+        let art = crate::model::format::testutil::sample_artifact(41, 16, 6, 9, 4);
+        let set = split_artifact(&art, 3).unwrap();
+        // serve the MIDDLE shard: local labels 0..3 are global 3..6
+        let s1 = &set[1];
+        assert_eq!(s1.meta.shard.label_lo, 3);
+        let full = ScoreServer::start(
+            MultiLabelModel { z: art.z.clone() },
+            ServerConfig::default(),
+        )
+        .unwrap();
+        let shardsrv = ScoreServer::start_sharded(
+            MultiLabelModel { z: s1.z.clone() },
+            s1.meta.shard,
+            ServerConfig::default(),
+        )
+        .unwrap();
+        let probe = "SCORE 3 0:1.0,5:-0.5";
+        let via_shard = text_request(shardsrv.addr, probe).unwrap();
+        let via_full = text_request(full.addr, "SCORE 9 0:1.0,5:-0.5").unwrap();
+        // every token the shard returns appears verbatim (global id AND
+        // exact score formatting) in the full model's all-label ranking
+        let rest = via_shard.strip_prefix("OK ").unwrap();
+        assert_eq!(rest.split(',').count(), 3, "{via_shard}");
+        for tok in rest.split(',') {
+            let (l, _) = tok.split_once(':').unwrap();
+            let l: usize = l.parse().unwrap();
+            assert!((3..6).contains(&l), "shard must answer global ids in 3..6: {tok}");
+            assert!(via_full.contains(tok), "token `{tok}` must match the full model bitwise");
+        }
+        // VERSION advertises the slice
+        let v = text_request(shardsrv.addr, "VERSION").unwrap();
+        assert!(v.ends_with("shard=1/3"), "{v}");
+        shardsrv.shutdown();
+        full.shutdown();
     }
 
     #[test]
@@ -1134,6 +1278,7 @@ mod tests {
         server.slot.swap(Arc::new(ServingModel {
             version: 7,
             rank: 0,
+            shard: ShardRange::full(3),
             model: MultiLabelModel { z: z2.clone() },
         }));
         assert_eq!(server.current_version(), 7);

@@ -11,8 +11,9 @@
 //!   regression application, all baselines (RandPI / KrylovPI / frPCA),
 //!   synthetic dataset generators, a pipeline coordinator, a scoring
 //!   server, and a model lifecycle subsystem (versioned on-disk store,
-//!   online incremental updates, zero-downtime hot swap). Python never runs
-//!   on any execution path.
+//!   online incremental updates, zero-downtime hot swap, snapshot-shipped
+//!   replicas, and label-space sharding with scatter-gather serving).
+//!   Python never runs on any execution path.
 //! * **Layer 2/1 (python/, build-time only)** — JAX entry points over a
 //!   Pallas tiled-GEMM kernel, AOT-lowered to HLO text that
 //!   [`runtime`] loads through PJRT (`xla` crate) for artifact-backed GEMM.

@@ -13,7 +13,7 @@
 //!
 //! ```text
 //! magic    "FPIM"                     4 bytes
-//! version  u32                        format version (currently 1)
+//! version  u32                        format version (currently 2; v1 read)
 //! length   u64                        payload byte count
 //! checksum u64                        FNV-1a over the payload bytes
 //! payload:
@@ -22,6 +22,7 @@
 //!   seed rows_trained dataset_rows rows_since_solve updates_applied   u64 ×5
 //!   drift                             f64
 //!   m n labels rank                   u64 ×4
+//!   shard_index shard_count label_lo label_hi label_total   u64 ×5 (v2 only)
 //!   U         m·rank f64 (row-major)
 //!   sigma     rank f64
 //!   Vᵀ        rank·n f64 (row-major)
@@ -29,6 +30,15 @@
 //!   C         rank·labels f64 (row-major)
 //!   Z         n·labels f64 (row-major)
 //! ```
+//!
+//! The v2 shard block makes the header *shard-aware*: a file may hold one
+//! label-space slice of a wider model (`C`/`Z` columns `label_lo..label_hi`
+//! of a `label_total`-label space, shard `shard_index` of `shard_count`).
+//! A full model is the degenerate 1-shard case (`0/1`, `0..L` of `L`), and
+//! v1 files — which predate the block — read as exactly that, so every
+//! existing file stays readable. The shard fields are untrusted input like
+//! the dimensions: [`ShardRange::validate`] checks them with the same
+//! checked arithmetic before anything is allocated.
 //!
 //! `f64::to_le_bytes`/`from_le_bytes` are lossless, so a save→load
 //! round-trip is bitwise-identical — the property the hot-swap serving path
@@ -42,9 +52,94 @@ use std::io::{BufWriter, Read, Write};
 use std::path::Path;
 
 const MAGIC: &[u8; 4] = b"FPIM";
-const FORMAT_VERSION: u32 = 1;
+/// Current write version. Version 1 (no shard block) is still read.
+const FORMAT_VERSION: u32 = 2;
+const OLDEST_READABLE_VERSION: u32 = 1;
 /// Relative singular-value cutoff used when (re)building Σ⁺.
 pub const PINV_RCOND: f64 = 1e-12;
+
+/// Which label-space slice of a model this artifact holds.
+///
+/// The label axis is the embarrassingly partitionable dimension of the
+/// multi-label pseudoinverse model (one column of `C`/`Z` per label), so a
+/// model can be a *shard set*: `shard_count` files, shard `shard_index`
+/// carrying the contiguous global label range `label_lo..label_hi`
+/// (exclusive) out of `label_total`. A full, unsharded model is the
+/// degenerate 1-shard case — [`ShardRange::full`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ShardRange {
+    /// which shard this is (0-based)
+    pub index: u64,
+    /// how many shards the full model is split into (≥ 1)
+    pub count: u64,
+    /// first global label this shard holds (inclusive)
+    pub label_lo: u64,
+    /// one past the last global label this shard holds (exclusive)
+    pub label_hi: u64,
+    /// width of the full label space the shard set partitions
+    pub label_total: u64,
+}
+
+impl ShardRange {
+    /// The degenerate 1-shard range of a full `labels`-label model.
+    pub fn full(labels: usize) -> ShardRange {
+        ShardRange {
+            index: 0,
+            count: 1,
+            label_lo: 0,
+            label_hi: labels as u64,
+            label_total: labels as u64,
+        }
+    }
+
+    /// True for a full (unsharded) model.
+    pub fn is_full(&self) -> bool {
+        self.count == 1
+    }
+
+    /// Local label count of this slice.
+    pub fn width(&self) -> usize {
+        (self.label_hi - self.label_lo) as usize
+    }
+
+    /// Validate untrusted shard fields against the local label count from
+    /// the dimension block. Checked/branching arithmetic only — a hostile
+    /// but checksum-valid header must `Err`, never panic or wrap.
+    pub fn validate(&self, local_labels: usize, ctx: &str) -> Result<()> {
+        let err = |what: &str| {
+            Err(Error::Invalid(format!(
+                "{ctx}: FPIM shard header invalid ({what}): shard {}/{} labels {}..{} of {}",
+                self.index, self.count, self.label_lo, self.label_hi, self.label_total
+            )))
+        };
+        if self.count == 0 {
+            return err("shard_count is 0");
+        }
+        if self.index >= self.count {
+            return err("shard_index >= shard_count");
+        }
+        if self.label_lo > self.label_hi {
+            return err("inverted label range");
+        }
+        if self.label_hi > self.label_total {
+            return err("label range exceeds label space");
+        }
+        // width fits usize and matches the dimension block's label count
+        let width = self.label_hi - self.label_lo;
+        if u64::try_from(local_labels).ok() != Some(width) {
+            return err("label range width disagrees with the labels dimension");
+        }
+        if self.count == 1 && (self.label_lo != 0 || self.label_hi != self.label_total) {
+            return err("1-shard model must span the full label space");
+        }
+        // (count == 1 stays exempt so a degenerate zero-label full model —
+        // pathological but well-formed — still round-trips)
+        if self.count > 1 && self.count > self.label_total {
+            return err("more shards than labels");
+        }
+        Ok(())
+    }
+}
 
 /// Lifecycle metadata carried with every model.
 #[derive(Debug, Clone, PartialEq)]
@@ -71,6 +166,21 @@ pub struct ModelMeta {
     pub updates_applied: u64,
     /// accumulated relative truncation drift since the last full solve
     pub drift: f64,
+    /// which label-space slice this artifact holds (degenerate 1-shard for
+    /// a full model — the only shape v1 files can express)
+    pub shard: ShardRange,
+}
+
+impl ModelMeta {
+    /// Equality ignoring the shard block — what "same model version" means
+    /// across the members of a shard set (the factor update depends only on
+    /// the feature rows and the seed, so every shard of one version carries
+    /// identical lifecycle counters; only the label slice differs).
+    pub fn same_lineage(&self, other: &ModelMeta) -> bool {
+        let mut a = self.clone();
+        a.shard = other.shard;
+        a == *other
+    }
 }
 
 /// A complete trained model: factors, pseudoinverse diagonal, projected
@@ -191,6 +301,10 @@ fn encode_payload(a: &ModelArtifact) -> Vec<u8> {
     for d in [m, n, labels, rank] {
         push_u64(&mut p, d as u64);
     }
+    let sh = &a.meta.shard;
+    for d in [sh.index, sh.count, sh.label_lo, sh.label_hi, sh.label_total] {
+        push_u64(&mut p, d);
+    }
     push_f64s(&mut p, a.svd.u.data());
     push_f64s(&mut p, &a.svd.s);
     push_f64s(&mut p, a.svd.vt.data());
@@ -238,9 +352,9 @@ pub fn validate_bytes<'a>(buf: &'a [u8], ctx: &str) -> Result<&'a [u8]> {
         return Err(Error::Invalid(format!("{ctx}: not an FPIM model")));
     }
     let version = u32::from_le_bytes(buf[4..8].try_into().unwrap());
-    if version != FORMAT_VERSION {
+    if !(OLDEST_READABLE_VERSION..=FORMAT_VERSION).contains(&version) {
         return Err(Error::Invalid(format!(
-            "{ctx}: FPIM format version {version} (this build reads {FORMAT_VERSION})"
+            "{ctx}: FPIM format version {version} (this build reads {OLDEST_READABLE_VERSION}..={FORMAT_VERSION})"
         )));
     }
     let len = u64::from_le_bytes(buf[8..16].try_into().unwrap()) as usize;
@@ -258,6 +372,45 @@ pub fn validate_bytes<'a>(buf: &'a [u8], ctx: &str) -> Result<&'a [u8]> {
     Ok(payload)
 }
 
+/// Proof-of-validation witness: complete `FPIM` file bytes whose framing
+/// (magic, format version, payload length, FNV-1a checksum) has already
+/// been checked. The only constructor is [`validate_model_bytes`], so a
+/// function taking one of these can skip re-hashing — this is what keeps
+/// the snapshot fetch→parse→install path at exactly one checksum pass per
+/// new version instead of three.
+#[derive(Debug, Clone)]
+pub struct ValidatedModelBytes {
+    bytes: Vec<u8>,
+}
+
+impl ValidatedModelBytes {
+    /// The complete file bytes (header + payload), verbatim.
+    pub fn bytes(&self) -> &[u8] {
+        &self.bytes
+    }
+
+    pub fn len(&self) -> usize {
+        self.bytes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.bytes.is_empty()
+    }
+
+    /// Parse the payload into an artifact WITHOUT re-running the checksum
+    /// (the witness proves it already passed). Dimension and shard fields
+    /// are still checked — they are cheap and allocation-guarding.
+    pub fn parse(&self, ctx: &str) -> Result<ModelArtifact> {
+        parse_payload(&self.bytes, ctx)
+    }
+}
+
+/// Validate framing once and wrap the bytes in the witness type.
+pub fn validate_model_bytes(bytes: Vec<u8>, ctx: &str) -> Result<ValidatedModelBytes> {
+    validate_bytes(&bytes, ctx)?;
+    Ok(ValidatedModelBytes { bytes })
+}
+
 /// Read and validate a model file (magic, format version, length, checksum).
 pub fn read_model(path: &Path) -> Result<ModelArtifact> {
     let mut f = std::fs::File::open(path)?;
@@ -271,7 +424,16 @@ pub fn read_model(path: &Path) -> Result<ModelArtifact> {
 /// block with checked arithmetic — so corrupt, truncated, or hostile bytes
 /// return `Err` without panicking or allocating oversized buffers.
 pub fn read_model_bytes(buf: &[u8], ctx: &str) -> Result<ModelArtifact> {
-    let payload = validate_bytes(buf, ctx)?;
+    validate_bytes(buf, ctx)?;
+    parse_payload(buf, ctx)
+}
+
+/// Parse the payload of a buffer whose framing has already been validated.
+/// Private on purpose: callers go through [`read_model_bytes`] (validates)
+/// or [`ValidatedModelBytes::parse`] (witness proves validation happened).
+fn parse_payload(buf: &[u8], ctx: &str) -> Result<ModelArtifact> {
+    let version = u32::from_le_bytes(buf[4..8].try_into().unwrap());
+    let payload = &buf[24..];
 
     let mut cur = Cursor { buf: payload, off: 0 };
     let ds_len = cur.u64()? as usize;
@@ -290,6 +452,21 @@ pub fn read_model_bytes(buf: &[u8], ctx: &str) -> Result<ModelArtifact> {
     let n = cur.u64()? as usize;
     let labels = cur.u64()? as usize;
     let rank = cur.u64()? as usize;
+    // v1 files predate the shard block and are always full models
+    let shard = if version >= 2 {
+        ShardRange {
+            index: cur.u64()?,
+            count: cur.u64()?,
+            label_lo: cur.u64()?,
+            label_hi: cur.u64()?,
+            label_total: cur.u64()?,
+        }
+    } else {
+        ShardRange::full(labels)
+    };
+    // shard fields are untrusted like the dimensions: reject hostile but
+    // checksum-valid headers before any allocation
+    shard.validate(labels, ctx)?;
     // dimensions are untrusted input: checked arithmetic so oversized
     // values are rejected instead of wrapping past the size check
     let expect = m
@@ -325,6 +502,7 @@ pub fn read_model_bytes(buf: &[u8], ctx: &str) -> Result<ModelArtifact> {
             rows_since_solve,
             updates_applied,
             drift,
+            shard,
         },
         svd: Svd { u, s, vt },
         s_inv,
@@ -360,6 +538,7 @@ pub(crate) mod testutil {
             rows_since_solve: 0,
             updates_applied: 0,
             drift: 0.0,
+            shard: ShardRange::full(labels),
         };
         ModelArtifact::from_training(meta, svd, &y)
     }
@@ -416,6 +595,7 @@ mod tests {
             rows_since_solve: 0,
             updates_applied: 0,
             drift: 0.0,
+            shard: ShardRange::full(6),
         };
         let art = ModelArtifact::from_training(meta, svd.clone(), &y);
         let (model, _) = MultiLabelModel::train(&Pinv::from_svd(&svd), &y);
@@ -546,5 +726,107 @@ mod tests {
                 "hostile m={hostile} must trip the dimension guard, got: {msg}"
             );
         }
+    }
+
+    /// Payload offset of the shard block: right after the `m n labels rank`
+    /// dimension quad (see the layout in the module docs).
+    fn shard_block_off(art: &ModelArtifact) -> usize {
+        24 + 8 + art.meta.dataset.len() + 24 + 40 + 8 + 32
+    }
+
+    #[test]
+    fn v1_files_without_a_shard_block_read_as_full_models() {
+        // synthesize the pre-shard v1 encoding: drop the 40-byte shard
+        // block from a v2 buffer, rewrite version/length, re-seal the
+        // checksum — exactly what an existing on-disk file looks like
+        let art = sample_artifact(81, 10, 6, 5, 3);
+        let v2 = encode_model_bytes(&art);
+        let off = shard_block_off(&art);
+        let mut v1 = Vec::with_capacity(v2.len() - 40);
+        v1.extend_from_slice(&v2[..off]);
+        v1.extend_from_slice(&v2[off + 40..]);
+        v1[4..8].copy_from_slice(&1u32.to_le_bytes());
+        let plen = (v1.len() - 24) as u64;
+        v1[8..16].copy_from_slice(&plen.to_le_bytes());
+        let sum = crate::util::hash::fnv1a(&v1[24..]);
+        v1[16..24].copy_from_slice(&sum.to_le_bytes());
+
+        let b = read_model_bytes(&v1, "v1").unwrap();
+        assert_eq!(b.meta.shard, ShardRange::full(5), "v1 reads as the degenerate 1-shard case");
+        assert_eq!(b.z.data(), art.z.data());
+        assert_eq!(b.svd.u.data(), art.svd.u.data());
+        // everything but the shard block round-trips
+        assert!(b.meta.same_lineage(&art.meta));
+    }
+
+    #[test]
+    fn hostile_shard_headers_are_rejected_without_panic() {
+        use crate::util::hash::fnv1a;
+        let art = sample_artifact(82, 9, 5, 6, 2);
+        let off = shard_block_off(&art);
+        // (index, count, lo, hi, total) variants that must all Err even
+        // though the checksum is re-sealed to be VALID:
+        let l = 6u64; // local labels
+        let hostile: &[[u64; 5]] = &[
+            [3, 2, 0, l, l],                    // shard_index >= shard_count
+            [0, 0, 0, l, l],                    // zero shards
+            [0, 2, 10, 4, 20],                  // inverted label range
+            [0, 2, 0, l, 4],                    // range exceeds label space
+            [0, 2, 0, l + 1, 20],               // width disagrees with dims
+            [0, 1, 1, l + 1, l + 1],            // 1-shard not spanning space
+            [0, 2, u64::MAX - 2, u64::MAX, u64::MAX], // near-overflow range
+            [1, u64::MAX, 0, l, l],             // absurd shard_count
+        ];
+        for fields in hostile {
+            let mut bytes = encode_model_bytes(&art);
+            for (i, f) in fields.iter().enumerate() {
+                bytes[off + 8 * i..off + 8 * (i + 1)].copy_from_slice(&f.to_le_bytes());
+            }
+            let sum = fnv1a(&bytes[24..]);
+            bytes[16..24].copy_from_slice(&sum.to_le_bytes());
+            let err = read_model_bytes(&bytes, "hostile-shard").unwrap_err();
+            assert!(
+                format!("{err}").contains("shard"),
+                "{fields:?} must trip the shard guard, got: {err}"
+            );
+        }
+    }
+
+    #[test]
+    fn prop_random_shard_blocks_never_panic() {
+        use crate::util::hash::fnv1a;
+        use crate::util::propcheck::check;
+        let art = sample_artifact(83, 8, 5, 4, 2);
+        let off = shard_block_off(&art);
+        let good = encode_model_bytes(&art);
+        check("random re-sealed shard blocks parse or Err, never panic", 200, |rng| {
+            let mut bytes = good.clone();
+            for i in 0..5 {
+                let v = match rng.usize_below(3) {
+                    0 => rng.next_u64(),                // full-range garbage
+                    1 => rng.usize_below(12) as u64,    // small plausible
+                    _ => u64::MAX - rng.usize_below(4) as u64, // overflow edge
+                };
+                bytes[off + 8 * i..off + 8 * (i + 1)].copy_from_slice(&v.to_le_bytes());
+            }
+            let sum = fnv1a(&bytes[24..]);
+            bytes[16..24].copy_from_slice(&sum.to_le_bytes());
+            let _ = read_model_bytes(&bytes, "shard-fuzz"); // must return
+        });
+    }
+
+    #[test]
+    fn validated_bytes_witness_parses_without_revalidation() {
+        let art = sample_artifact(84, 10, 5, 4, 3);
+        let bytes = encode_model_bytes(&art);
+        let witness = validate_model_bytes(bytes.clone(), "wit").unwrap();
+        assert_eq!(witness.bytes(), &bytes[..]);
+        let parsed = witness.parse("wit").unwrap();
+        assert_eq!(parsed.z.data(), art.z.data());
+        // corrupt bytes never earn a witness
+        let mut bad = bytes;
+        let last = bad.len() - 1;
+        bad[last] ^= 1;
+        assert!(validate_model_bytes(bad, "wit").is_err());
     }
 }

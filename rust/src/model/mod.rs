@@ -13,19 +13,33 @@
 //!   rows into the live factorization (paper Eq. 2), retrains `Z` in closed
 //!   form, and tracks truncation drift against a full re-solve threshold.
 //! * [`ship`] — snapshot shipping: the pull protocol follower replicas use
-//!   to mirror a primary's store over TCP, verbatim `FPIM` bytes with the
-//!   checksum re-verified on receipt.
+//!   to mirror a primary's store over TCP, verbatim `FPIM` bytes validated
+//!   exactly once on receipt (the [`format::ValidatedModelBytes`] witness).
+//! * [`shard`] — label-space sharding: split one model into a shard set
+//!   (full factors verbatim, contiguous `C`/`Z` column slices) and
+//!   reassemble it bitwise, which is what lets a model wider than one
+//!   node's memory serve from a fleet of slice-holding nodes.
 //!
 //! The serving side (`coordinator/serve.rs`) holds the current model in a
 //! swap slot the batcher re-reads every batch, so a newly published version
-//! goes live between two batches with zero downtime.
+//! goes live between two batches with zero downtime; the scatter-gather
+//! router (`coordinator/router.rs`) stitches per-shard replies back into
+//! full-label-space answers.
 
 pub mod format;
+pub mod shard;
 pub mod ship;
 pub mod store;
 pub mod updater;
 
-pub use format::{read_model, write_model, ModelArtifact, ModelMeta};
-pub use ship::{fetch_snapshot, sync_once, ShipReply};
+pub use format::{
+    read_model, validate_model_bytes, write_model, ModelArtifact, ModelMeta, ShardRange,
+    ValidatedModelBytes,
+};
+pub use shard::{reassemble, split_artifact};
+pub use ship::{
+    fetch_shard_snapshot, fetch_snapshot, parse_shard_spec, sync_once, sync_shard_once, ShardSel,
+    ShipReply,
+};
 pub use store::ModelStore;
 pub use updater::{OnlineUpdater, UpdateReport, UpdaterConfig};

@@ -1,0 +1,344 @@
+//! Label-space model sharding: split one `ModelArtifact` into a shard set
+//! and reassemble a shard set back into one artifact — both **bitwise**.
+//!
+//! The multi-label model `Z = VΣ⁺C` has one column of `C` and `Z` per
+//! label, which makes the label axis embarrassingly partitionable: a shard
+//! keeps the full factors `U/Σ/Vᵀ/Σ⁺` **verbatim** and only a contiguous
+//! column slice of `C` and `Z`. Column slicing copies `f64`s unchanged and
+//! scoring reduces each label column independently (`Csr::spmm` accumulates
+//! per output element in fixed order), so:
+//!
+//! * `split_artifact` → `reassemble` round-trips bitwise, and
+//! * a shard's score for label `j` is bit-for-bit the full model's score
+//!   for `j` — which is what lets the scatter-gather router promise
+//!   sharded `SCORE` ≡ unsharded `SCORE`.
+//!
+//! Sharded online learning stays consistent for the same reason the
+//! incremental pseudoinverse update (paper Eq. 2) works at all: the basis
+//! change depends only on the *feature* rows and the deterministic per-fold
+//! seed, so every shard of a broadcast `LEARN` computes identical new
+//! factors and folds only its own label columns through the C-carry.
+//!
+//! `reassemble` treats its input as untrusted (shard files may come off
+//! disk or the wire): wrong counts, duplicate indices, gaps, overlapping
+//! or non-contiguous ranges, mixed lineages (different lifecycle
+//! counters), and factor mismatches all return `Err` — never panic.
+
+use super::format::{ModelArtifact, ShardRange};
+use crate::dense::Matrix;
+use crate::error::{Error, Result};
+
+/// Split a full model into `shards` label-contiguous slices.
+///
+/// Shard `k` gets global labels `k·L/n .. (k+1)·L/n` (so widths differ by
+/// at most one), a verbatim copy of the factors, and the matching column
+/// slices of `C` and `Z`. The input must be a full (1-shard) model.
+pub fn split_artifact(a: &ModelArtifact, shards: usize) -> Result<Vec<ModelArtifact>> {
+    let (_, _, labels) = a.shape();
+    if !a.meta.shard.is_full() {
+        return Err(Error::Invalid(format!(
+            "cannot re-split shard {}/{} — reassemble first",
+            a.meta.shard.index, a.meta.shard.count
+        )));
+    }
+    if shards == 0 {
+        return Err(Error::Invalid("shard count must be at least 1".into()));
+    }
+    if shards > labels {
+        return Err(Error::Invalid(format!(
+            "cannot split {labels} labels into {shards} shards (more shards than labels)"
+        )));
+    }
+    let rank = a.rank();
+    let n = a.svd.vt.cols();
+    let mut out = Vec::with_capacity(shards);
+    for k in 0..shards {
+        let lo = k * labels / shards;
+        let hi = (k + 1) * labels / shards;
+        let mut meta = a.meta.clone();
+        meta.shard = ShardRange {
+            index: k as u64,
+            count: shards as u64,
+            label_lo: lo as u64,
+            label_hi: hi as u64,
+            label_total: labels as u64,
+        };
+        out.push(ModelArtifact {
+            meta,
+            svd: a.svd.clone(),
+            s_inv: a.s_inv.clone(),
+            c: a.c.submatrix(0, lo, rank, hi - lo),
+            z: a.z.submatrix(0, lo, n, hi - lo),
+        });
+    }
+    Ok(out)
+}
+
+/// Column-concatenate matrices in order (row count shared).
+fn concat_cols(parts: &[&Matrix]) -> Matrix {
+    let rows = parts.first().map_or(0, |m| m.rows());
+    let cols: usize = parts.iter().map(|m| m.cols()).sum();
+    let mut out = Matrix::zeros(rows, cols);
+    let mut at = 0;
+    for p in parts {
+        out.set_submatrix(0, at, p);
+        at += p.cols();
+    }
+    out
+}
+
+/// Reassemble a complete shard set (any order) into the full model.
+///
+/// Every shard must carry the same `shard_count` (equal to the set size),
+/// the indices must be exactly `0..count` with contiguous label ranges
+/// covering `0..label_total`, the lifecycle metadata must agree (a mixed
+/// set — e.g. one shard from version 4 and two from version 5 — is
+/// rejected via the update counters), and the shared factors must be
+/// **bitwise** equal across all members. The reassembled `C`/`Z` are the
+/// column concatenations in label order, so `reassemble(split_artifact(a,
+/// n))` is bitwise `a`.
+pub fn reassemble(shards: &[ModelArtifact]) -> Result<ModelArtifact> {
+    let first = shards
+        .first()
+        .ok_or_else(|| Error::Invalid("reassemble: empty shard set".into()))?;
+    let count = shards.len();
+    // order the set by shard index, rejecting duplicates and strays
+    let mut by_index: Vec<Option<&ModelArtifact>> = vec![None; count];
+    for s in shards {
+        let sh = s.meta.shard;
+        sh.validate(s.z.cols(), "reassemble")?;
+        if sh.count != count as u64 {
+            return Err(Error::Invalid(format!(
+                "reassemble: shard {}/{} handed in as part of a {count}-shard set",
+                sh.index, sh.count
+            )));
+        }
+        let slot = &mut by_index[sh.index as usize]; // index < count by validate()
+        if slot.is_some() {
+            return Err(Error::Invalid(format!(
+                "reassemble: duplicate shard index {}",
+                sh.index
+            )));
+        }
+        *slot = Some(s);
+    }
+    let ordered: Vec<&ModelArtifact> = by_index
+        .into_iter()
+        .map(|s| s.ok_or_else(|| Error::Invalid("reassemble: missing shard index".into())))
+        .collect::<Result<_>>()?;
+
+    // contiguity over the full label space
+    let total = first.meta.shard.label_total;
+    let mut at = 0u64;
+    for s in &ordered {
+        let sh = s.meta.shard;
+        if sh.label_total != total {
+            return Err(Error::Invalid(format!(
+                "reassemble: shard {} spans a {}-label space, set claims {total}",
+                sh.index, sh.label_total
+            )));
+        }
+        if sh.label_lo != at {
+            return Err(Error::Invalid(format!(
+                "reassemble: shard {} covers {}..{}, expected to start at {at} \
+                 (overlapping or gapped ranges)",
+                sh.index, sh.label_lo, sh.label_hi
+            )));
+        }
+        at = sh.label_hi;
+    }
+    if at != total {
+        return Err(Error::Invalid(format!(
+            "reassemble: shard set covers 0..{at} of a {total}-label space"
+        )));
+    }
+
+    // one model version = one lineage + one set of factors, bitwise
+    for s in ordered.iter().skip(1) {
+        if !s.meta.same_lineage(&first.meta) {
+            return Err(Error::Invalid(format!(
+                "reassemble: shard {} is from a different model version \
+                 (updates_applied {} vs {})",
+                s.meta.shard.index, s.meta.updates_applied, first.meta.updates_applied
+            )));
+        }
+        if s.svd.u.shape() != first.svd.u.shape()
+            || s.svd.u.data() != first.svd.u.data()
+            || s.svd.s != first.svd.s
+            || s.svd.vt.shape() != first.svd.vt.shape()
+            || s.svd.vt.data() != first.svd.vt.data()
+            || s.s_inv != first.s_inv
+        {
+            return Err(Error::Invalid(format!(
+                "reassemble: shard {} carries different factors than shard {} \
+                 (mixed versions?)",
+                s.meta.shard.index, first.meta.shard.index
+            )));
+        }
+    }
+
+    let mut meta = first.meta.clone();
+    meta.shard = ShardRange::full(total as usize);
+    Ok(ModelArtifact {
+        meta,
+        svd: first.svd.clone(),
+        s_inv: first.s_inv.clone(),
+        c: concat_cols(&ordered.iter().map(|s| &s.c).collect::<Vec<_>>()),
+        z: concat_cols(&ordered.iter().map(|s| &s.z).collect::<Vec<_>>()),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::format::testutil::sample_artifact;
+    use super::*;
+
+    fn assert_bitwise_eq(a: &ModelArtifact, b: &ModelArtifact) {
+        assert_eq!(a.meta, b.meta);
+        assert_eq!(a.svd.u.data(), b.svd.u.data());
+        assert_eq!(a.svd.s, b.svd.s);
+        assert_eq!(a.svd.vt.data(), b.svd.vt.data());
+        assert_eq!(a.s_inv, b.s_inv);
+        assert_eq!(a.c.data(), b.c.data());
+        assert_eq!(a.z.data(), b.z.data());
+    }
+
+    #[test]
+    fn split_reassemble_roundtrips_bitwise() {
+        // 7 labels / 3 shards: uneven widths (2,3,2)-ish exercise the
+        // integer range arithmetic
+        let art = sample_artifact(91, 14, 6, 7, 4);
+        for shards in [1usize, 2, 3, 7] {
+            let set = split_artifact(&art, shards).unwrap();
+            assert_eq!(set.len(), shards);
+            let mut covered = 0u64;
+            for (k, s) in set.iter().enumerate() {
+                let sh = s.meta.shard;
+                assert_eq!(sh.index, k as u64);
+                assert_eq!(sh.count, shards as u64);
+                assert_eq!(sh.label_lo, covered, "ranges must be contiguous");
+                assert_eq!(sh.label_total, 7);
+                assert_eq!(s.z.cols(), sh.width());
+                assert_eq!(s.c.cols(), sh.width());
+                // factors shared verbatim
+                assert_eq!(s.svd.u.data(), art.svd.u.data());
+                assert_eq!(s.s_inv, art.s_inv);
+                covered = sh.label_hi;
+            }
+            assert_eq!(covered, 7);
+            // reassemble in shuffled order: still bitwise the original
+            let mut shuffled: Vec<ModelArtifact> = set.clone();
+            shuffled.rotate_left(shards / 2);
+            assert_bitwise_eq(&reassemble(&shuffled).unwrap(), &art);
+        }
+    }
+
+    #[test]
+    fn shard_columns_are_the_original_columns() {
+        let art = sample_artifact(92, 10, 5, 6, 3);
+        let set = split_artifact(&art, 3).unwrap();
+        for s in &set {
+            let lo = s.meta.shard.label_lo as usize;
+            for c in 0..s.z.cols() {
+                assert_eq!(s.z.col(c), art.z.col(lo + c), "Z column slice must be verbatim");
+                assert_eq!(s.c.col(c), art.c.col(lo + c), "C column slice must be verbatim");
+            }
+        }
+    }
+
+    #[test]
+    fn split_rejects_degenerate_requests() {
+        let art = sample_artifact(93, 8, 4, 5, 2);
+        assert!(split_artifact(&art, 0).is_err());
+        assert!(split_artifact(&art, 6).is_err(), "more shards than labels");
+        // a slice cannot be re-split
+        let set = split_artifact(&art, 2).unwrap();
+        assert!(split_artifact(&set[0], 2).is_err());
+    }
+
+    #[test]
+    fn reassemble_rejects_hostile_sets() {
+        let art = sample_artifact(94, 9, 5, 6, 3);
+        let set = split_artifact(&art, 3).unwrap();
+
+        // empty / incomplete / duplicated sets
+        assert!(reassemble(&[]).is_err());
+        assert!(reassemble(&set[..2]).is_err(), "missing shard must be rejected");
+        let dup = vec![set[0].clone(), set[0].clone(), set[1].clone()];
+        assert!(reassemble(&dup).is_err(), "duplicate index must be rejected");
+
+        // overlapping / gapped ranges (re-labelled, still internally valid)
+        let mut overlap = set.clone();
+        overlap[1].meta.shard.label_lo = 1;
+        overlap[1].meta.shard.label_hi = 1 + overlap[1].z.cols() as u64;
+        assert!(reassemble(&overlap).is_err(), "overlapping ranges must be rejected");
+
+        // mixed lineage: same shapes, different lifecycle counters
+        let mut mixed = set.clone();
+        mixed[2].meta.updates_applied += 1;
+        assert!(reassemble(&mixed).is_err(), "mixed versions must be rejected");
+
+        // same lineage but different factor bits
+        let mut forged = set.clone();
+        let mut u = forged[1].svd.u.clone();
+        u.data_mut()[0] += 1.0;
+        forged[1].svd.u = u;
+        assert!(reassemble(&forged).is_err(), "factor mismatch must be rejected");
+
+        // a stray shard from a wider set
+        let wider = split_artifact(&art, 2).unwrap();
+        let stray = vec![set[0].clone(), set[1].clone(), wider[1].clone()];
+        assert!(reassemble(&stray).is_err(), "wrong shard_count must be rejected");
+    }
+
+    #[test]
+    fn prop_random_widths_roundtrip() {
+        use crate::util::propcheck::check;
+        check("split→reassemble round-trips at random shapes", 20, |rng| {
+            let labels = 1 + rng.usize_below(9);
+            let art = sample_artifact(rng.next_u64(), 6 + rng.usize_below(6), 4, labels, 2);
+            let shards = 1 + rng.usize_below(labels);
+            let set = split_artifact(&art, shards).unwrap();
+            let back = reassemble(&set).unwrap();
+            assert_eq!(back.z.data(), art.z.data());
+            assert_eq!(back.c.data(), art.c.data());
+            assert_eq!(back.meta, art.meta);
+        });
+    }
+
+    #[test]
+    fn sliced_scoring_concatenates_to_full_scoring_bitwise() {
+        // the property the scatter-gather router relies on: per-label
+        // scores computed against a column slice of Z are bit-for-bit the
+        // full model's scores for those labels
+        use crate::regress::MultiLabelModel;
+        use crate::sparse::{Coo, Csr};
+        use crate::util::rng::Rng;
+        let art = sample_artifact(95, 12, 8, 7, 4);
+        let set = split_artifact(&art, 3).unwrap();
+        let mut rng = Rng::seed_from_u64(9);
+        let mut coo = Coo::new(4, 8);
+        for i in 0..4 {
+            for j in 0..8 {
+                if rng.f64() < 0.5 {
+                    coo.push(i, j, rng.normal());
+                }
+            }
+        }
+        let batch = Csr::from_coo(&coo);
+        let full = MultiLabelModel { z: art.z.clone() }.predict(&batch);
+        for s in &set {
+            let part = MultiLabelModel { z: s.z.clone() }.predict(&batch);
+            let lo = s.meta.shard.label_lo as usize;
+            for i in 0..4 {
+                for c in 0..part.cols() {
+                    assert_eq!(
+                        part[(i, c)].to_bits(),
+                        full[(i, lo + c)].to_bits(),
+                        "shard score must be bitwise the full model's score"
+                    );
+                }
+            }
+        }
+    }
+}

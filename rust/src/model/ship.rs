@@ -10,20 +10,30 @@
 //! ## Protocol (rides on the scoring server's text protocol)
 //!
 //! ```text
-//! -> SHIP <have_id>
+//! -> SHIP <have_id>                      (full model)
+//! -> SHIP <have_id> <k>/<n>              (one label-space shard — see
+//!                                         `model/shard.rs`)
 //! <- SNAPSHOT version=<id> bytes=<n>\n   followed by n raw bytes: the
 //!                                        primary's v<id>.fpim file verbatim
+//! <- SNAPSHOT version=<id> shard=<k>/<n> bytes=<n>\n
+//!                                        the v<id>.s<k>of<n>.fpim slice
 //! <- UNCHANGED version=<id>              (the primary has nothing newer)
 //! <- ERR <reason>
 //! ```
 //!
-//! The snapshot bytes are the stored `FPIM` file unmodified, so the
-//! receiver re-runs the format's own integrity check — magic, format
-//! version, payload length, FNV-1a checksum ([`format::validate_bytes`]) —
-//! before a single byte lands in its store. A replica store mirrors the
-//! primary's version ids (that is what makes version skew across a fleet
-//! observable via `VERSION`), and its MANIFEST pointer only ever moves
-//! forward.
+//! The shard form is what lets a follower that serves one slice of a wide
+//! model sync **only its slice** — a shard replica never transfers or
+//! holds its siblings' label columns, so fleet-wide sync bandwidth per
+//! version stays one model's worth no matter how many shards there are.
+//!
+//! The snapshot bytes are the stored `FPIM` file unmodified, and the
+//! receiver runs the format's integrity check — magic, format version,
+//! payload length, FNV-1a checksum — exactly **once**, at receipt: the
+//! bytes then travel as a [`format::ValidatedModelBytes`] witness through
+//! parse and install, so no later stage re-hashes them. A replica store
+//! mirrors the primary's version ids (that is what makes version skew
+//! across a fleet observable via `VERSION`), and its MANIFEST pointer only
+//! ever moves forward.
 //!
 //! Pull, not push: followers poll `SHIP <local latest>` every `--poll-ms`.
 //! A dead follower costs the primary nothing, a new follower needs no
@@ -43,12 +53,16 @@
 //! channel is deployment-layer work (run it over a private network or a
 //! tunnel), not wire-format work.
 
-use super::format::{self, ModelArtifact};
+use super::format::{self, ModelArtifact, ValidatedModelBytes};
 use super::store::ModelStore;
 use crate::error::{Error, Result};
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{SocketAddr, TcpStream};
 use std::time::Duration;
+
+/// Which slice to ship: `None` = the full model, `Some((k, n))` = shard
+/// `k` of an `n`-shard set.
+pub type ShardSel = Option<(u64, u64)>;
 
 /// Upper bound on an accepted snapshot. Guards the replica from a corrupt
 /// or hostile `bytes=` header making it allocate unbounded memory before
@@ -64,8 +78,9 @@ pub enum ShipReply {
     /// The primary has nothing newer than the `have` id we sent.
     Unchanged { version: u64 },
     /// A new snapshot: the verbatim `FPIM` file bytes for `version`,
-    /// framing-validated (FNV-1a) on receipt.
-    Snapshot { version: u64, bytes: Vec<u8> },
+    /// framing-validated (FNV-1a) exactly once, on receipt — the witness
+    /// type carries that proof to parse/install.
+    Snapshot { version: u64, bytes: ValidatedModelBytes },
 }
 
 fn bad_header(header: &str) -> Error {
@@ -76,12 +91,27 @@ fn bad_header(header: &str) -> Error {
 /// read, and write are all bounded by `timeout`; the returned bytes are
 /// checksum-verified but not yet parsed into matrices.
 pub fn fetch_snapshot(primary: SocketAddr, have: u64, timeout: Duration) -> Result<ShipReply> {
+    fetch_shard_snapshot(primary, have, None, timeout)
+}
+
+/// [`fetch_snapshot`] for one label-space slice: `SHIP <have> <k>/<n>`.
+/// The reply must echo the requested shard (a full-model or wrong-slice
+/// reply is rejected before its bytes can land anywhere).
+pub fn fetch_shard_snapshot(
+    primary: SocketAddr,
+    have: u64,
+    shard: ShardSel,
+    timeout: Duration,
+) -> Result<ShipReply> {
     let stream = TcpStream::connect_timeout(&primary, timeout)?;
     stream.set_read_timeout(Some(timeout))?;
     stream.set_write_timeout(Some(timeout))?;
     let mut reader = BufReader::new(stream.try_clone()?);
     let mut writer = stream;
-    writeln!(writer, "SHIP {have}")?;
+    match shard {
+        Some((k, n)) => writeln!(writer, "SHIP {have} {k}/{n}")?,
+        None => writeln!(writer, "SHIP {have}")?,
+    }
 
     let mut header = String::new();
     if reader.read_line(&mut header)? == 0 {
@@ -95,17 +125,24 @@ pub fn fetch_snapshot(primary: SocketAddr, have: u64, timeout: Duration) -> Resu
     let Some(rest) = header.strip_prefix("SNAPSHOT ") else {
         return Err(Error::Invalid(format!("ship: primary said `{header}`")));
     };
-    let (mut version, mut nbytes) = (None, None);
+    let (mut version, mut nbytes, mut got_shard) = (None, None, None);
     for tok in rest.split_whitespace() {
         if let Some(v) = tok.strip_prefix("version=") {
             version = v.parse::<u64>().ok();
         } else if let Some(v) = tok.strip_prefix("bytes=") {
             nbytes = v.parse::<u64>().ok();
+        } else if let Some(v) = tok.strip_prefix("shard=") {
+            got_shard = parse_shard_spec(v);
         }
     }
     let (Some(version), Some(nbytes)) = (version, nbytes) else {
         return Err(bad_header(header));
     };
+    if got_shard != shard {
+        return Err(Error::Invalid(format!(
+            "ship: asked for shard {shard:?}, primary answered {got_shard:?}"
+        )));
+    }
     if nbytes > MAX_SNAPSHOT_BYTES {
         return Err(Error::Invalid(format!(
             "ship: snapshot claims {nbytes} bytes (cap {MAX_SNAPSHOT_BYTES})"
@@ -123,9 +160,19 @@ pub fn fetch_snapshot(primary: SocketAddr, have: u64, timeout: Duration) -> Resu
             bytes.len()
         )));
     }
-    // FNV-1a verified on receipt, before anything touches the local store
-    format::validate_bytes(&bytes, "shipped snapshot")?;
+    // FNV-1a verified on receipt — the ONLY hash pass this snapshot gets;
+    // parse and install ride the returned witness
+    let bytes = format::validate_model_bytes(bytes, "shipped snapshot")?;
     Ok(ShipReply::Snapshot { version, bytes })
+}
+
+/// Parse a `<k>/<n>` shard spec (used by the wire tokens and the CLI).
+/// `n >= 2`: a 1-shard set is the full model and travels the unsharded
+/// paths (plain filenames, plain `SHIP`) — see `store::publish_shard_set`.
+pub fn parse_shard_spec(s: &str) -> ShardSel {
+    let (k, n) = s.split_once('/')?;
+    let (k, n) = (k.parse().ok()?, n.parse().ok()?);
+    (k < n && n >= 2).then_some((k, n))
 }
 
 /// One pull-sync step: ask `primary` for anything newer than `store`'s
@@ -137,27 +184,68 @@ pub fn sync_once(
     primary: SocketAddr,
     timeout: Duration,
 ) -> Result<Option<(u64, ModelArtifact)>> {
-    let have = store.latest_version()?.unwrap_or(0);
-    match fetch_snapshot(primary, have, timeout)? {
+    sync_shard_once(store, primary, None, timeout)
+}
+
+/// [`sync_once`] for one shard: fetch + install only slice `k` of `n`.
+/// After parsing, the artifact's own shard header must match the slice we
+/// asked for — a primary handing back mislabelled columns is rejected.
+pub fn sync_shard_once(
+    store: &ModelStore,
+    primary: SocketAddr,
+    shard: ShardSel,
+    timeout: Duration,
+) -> Result<Option<(u64, ModelArtifact)>> {
+    let have = match shard {
+        Some((k, n)) => store.shard_versions(k, n)?.last().copied().unwrap_or(0),
+        None => store.latest_version()?.unwrap_or(0),
+    };
+    match fetch_shard_snapshot(primary, have, shard, timeout)? {
         ShipReply::Unchanged { .. } => Ok(None),
         ShipReply::Snapshot { version, bytes } => {
             if version <= have {
                 // a primary serving an older store than ours — never regress
                 return Ok(None);
             }
-            let artifact = format::read_model_bytes(&bytes, "shipped snapshot")?;
-            store.install_snapshot(version, &bytes)?;
+            let artifact = bytes.parse("shipped snapshot")?;
+            let art_shard = artifact.meta.shard;
+            match shard {
+                Some((k, n)) => {
+                    if (art_shard.index, art_shard.count) != (k, n) {
+                        return Err(Error::Invalid(format!(
+                            "ship: snapshot labels itself shard {}/{}, expected {k}/{n}",
+                            art_shard.index, art_shard.count
+                        )));
+                    }
+                    store.install_shard_snapshot(version, k, n, &bytes)?;
+                }
+                None => {
+                    if !art_shard.is_full() {
+                        return Err(Error::Invalid(format!(
+                            "ship: expected a full model, got shard {}/{}",
+                            art_shard.index, art_shard.count
+                        )));
+                    }
+                    store.install_snapshot(version, &bytes)?;
+                }
+            }
             Ok(Some((version, artifact)))
         }
     }
 }
 
-/// Serve one `SHIP <have>` request (primary side). Writes exactly one
-/// header line, plus the raw snapshot body when the store holds something
-/// newer than `have`. IO errors propagate to the caller (the connection
-/// handler drops the connection); store errors are reported in-band as
-/// `ERR` so a follower can tell a broken store from a broken socket.
-pub fn serve_ship<W: Write>(w: &mut W, store: &ModelStore, have: u64) -> std::io::Result<()> {
+/// Serve one `SHIP <have> [<k>/<n>]` request (primary side). Writes exactly
+/// one header line, plus the raw snapshot body when the store holds
+/// something newer than `have`. IO errors propagate to the caller (the
+/// connection handler drops the connection); store errors are reported
+/// in-band as `ERR` so a follower can tell a broken store from a broken
+/// socket.
+pub fn serve_ship<W: Write>(
+    w: &mut W,
+    store: &ModelStore,
+    have: u64,
+    shard: ShardSel,
+) -> std::io::Result<()> {
     // Fast path: most polls find nothing new — answer UNCHANGED off the
     // directory scan alone, without reading (and re-hashing) a multi-MB
     // version file hundreds of times a second. `latest_version` can name
@@ -165,7 +253,11 @@ pub fn serve_ship<W: Write>(w: &mut W, store: &ModelStore, have: u64) -> std::io
     // strictly newer than anything complete, so it never turns a real
     // "newer snapshot exists" into a false UNCHANGED; the complete-bytes
     // id is re-checked against `have` after the read below.
-    match store.latest_version() {
+    let latest = match shard {
+        Some((k, n)) => store.shard_versions(k, n).map(|ids| ids.last().copied()),
+        None => store.latest_version(),
+    };
+    match latest {
         Ok(Some(id)) if id <= have => {
             writeln!(w, "UNCHANGED version={id}")?;
             return w.flush();
@@ -180,15 +272,24 @@ pub fn serve_ship<W: Write>(w: &mut W, store: &ModelStore, have: u64) -> std::io
             return w.flush();
         }
     }
-    match store.latest_snapshot_bytes() {
+    let newest = match shard {
+        Some((k, n)) => store.latest_shard_snapshot_bytes(k, n),
+        None => store.latest_snapshot_bytes(),
+    };
+    match newest {
         Ok(Some((id, bytes))) => {
             if id <= have {
                 // the scanned newest was an in-flight reservation and the
                 // completed latest is what the follower already holds
                 writeln!(w, "UNCHANGED version={id}")?;
             } else {
-                writeln!(w, "SNAPSHOT version={id} bytes={}", bytes.len())?;
-                w.write_all(&bytes)?;
+                match shard {
+                    Some((k, n)) => {
+                        writeln!(w, "SNAPSHOT version={id} shard={k}/{n} bytes={}", bytes.len())?
+                    }
+                    None => writeln!(w, "SNAPSHOT version={id} bytes={}", bytes.len())?,
+                }
+                w.write_all(bytes.bytes())?;
             }
         }
         Ok(None) => writeln!(w, "ERR empty store")?,
@@ -210,7 +311,8 @@ mod tests {
         d
     }
 
-    /// A one-shot in-thread primary speaking just the SHIP verb.
+    /// A one-shot in-thread primary speaking just the SHIP verb (with the
+    /// optional shard spec, like the real server).
     fn one_shot_primary(store_dir: PathBuf) -> (SocketAddr, std::thread::JoinHandle<()>) {
         let listener = TcpListener::bind("127.0.0.1:0").unwrap();
         let addr = listener.local_addr().unwrap();
@@ -220,9 +322,12 @@ mod tests {
             let mut reader = BufReader::new(stream.try_clone().unwrap());
             let mut line = String::new();
             reader.read_line(&mut line).unwrap();
-            let have: u64 = line.trim().strip_prefix("SHIP ").unwrap().parse().unwrap();
+            let rest = line.trim().strip_prefix("SHIP ").unwrap();
+            let mut toks = rest.split_whitespace();
+            let have: u64 = toks.next().unwrap().parse().unwrap();
+            let shard = toks.next().and_then(parse_shard_spec);
             let mut w = std::io::BufWriter::new(stream);
-            serve_ship(&mut w, &store, have).unwrap();
+            serve_ship(&mut w, &store, have, shard).unwrap();
         });
         (addr, handle)
     }
@@ -252,6 +357,50 @@ mod tests {
         let (addr, h) = one_shot_primary(src_dir.clone());
         assert!(sync_once(&dst, addr, SHIP_TIMEOUT).unwrap().is_none());
         h.join().unwrap();
+    }
+
+    #[test]
+    fn shard_ship_syncs_only_the_requested_slice() {
+        use crate::model::shard::split_artifact;
+        let src_dir = fresh_dir("shard_src");
+        let dst_dir = fresh_dir("shard_dst");
+        let src = ModelStore::open(&src_dir).unwrap();
+        let set = split_artifact(&sample_artifact(7, 12, 6, 6, 3), 3).unwrap();
+        src.publish_shard_set(&set).unwrap();
+
+        let (addr, h) = one_shot_primary(src_dir.clone());
+        let dst = ModelStore::open(&dst_dir).unwrap();
+        let synced = sync_shard_once(&dst, addr, Some((1, 3)), SHIP_TIMEOUT).unwrap();
+        h.join().unwrap();
+        let (id, art) = synced.expect("shard snapshot must ship");
+        assert_eq!(id, 1);
+        assert_eq!((art.meta.shard.index, art.meta.shard.count), (1, 3));
+        // verbatim slice, and ONLY that slice, on the follower
+        let a = std::fs::read(src_dir.join("v000001.s1of3.fpim")).unwrap();
+        let b = std::fs::read(dst_dir.join("v000001.s1of3.fpim")).unwrap();
+        assert_eq!(a, b, "shipped shard must be the primary's file, byte for byte");
+        assert!(!dst_dir.join("v000001.s0of3.fpim").exists());
+        assert!(!dst_dir.join("v000001.s2of3.fpim").exists());
+
+        // already current → UNCHANGED
+        let (addr, h) = one_shot_primary(src_dir.clone());
+        assert!(sync_shard_once(&dst, addr, Some((1, 3)), SHIP_TIMEOUT).unwrap().is_none());
+        h.join().unwrap();
+
+        // asking a sharded store for the full model is an in-band error
+        let (addr, h) = one_shot_primary(src_dir.clone());
+        assert!(sync_once(&ModelStore::open(&fresh_dir("shard_dst2")).unwrap(), addr, SHIP_TIMEOUT)
+            .is_err());
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn shard_spec_parsing() {
+        assert_eq!(parse_shard_spec("0/3"), Some((0, 3)));
+        assert_eq!(parse_shard_spec("2/3"), Some((2, 3)));
+        for bad in ["3/3", "4/3", "x/3", "1/0", "0/1", "1", "1/", "/3"] {
+            assert_eq!(parse_shard_spec(bad), None, "{bad}");
+        }
     }
 
     #[test]

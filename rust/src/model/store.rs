@@ -4,9 +4,11 @@
 //!
 //! ```text
 //! <dir>/
-//!   MANIFEST          text: "latest=<id>\n" — the published pointer
-//!   v000001.fpim      immutable model versions (monotonically increasing)
-//!   v000002.fpim
+//!   MANIFEST             text: "latest=<id>\n" — the published pointer
+//!   v000001.fpim         immutable full-model versions
+//!   v000002.s0of3.fpim   ── a sharded version: one file per label-space
+//!   v000002.s1of3.fpim      slice (shard k of n, see `model/shard.rs`);
+//!   v000002.s2of3.fpim      the version is complete when all n exist
 //! ```
 //!
 //! Publishing is atomic: the model is written to a hidden temp file in the
@@ -16,8 +18,26 @@
 //! never a half-written file. Version ids never regress, even across
 //! process restarts and `gc` — the next id is one past the maximum of the
 //! MANIFEST pointer and every version file present.
+//!
+//! **Sharded versions.** A shard set is published as one version id with
+//! `n` shard-qualified files ([`ModelStore::publish_shard_set`]): the id is
+//! claimed via the shape-independent `.claim-v<id>` marker shared with
+//! [`ModelStore::publish`] (different shapes reserve different destination
+//! filenames, so destination `create_new` alone could hand one id to two
+//! different models), shard 0's path is reserved next, shards `1..n` are
+//! then renamed into place, the s0 payload is renamed over its reservation
+//! **last**, and only then does the MANIFEST move — so a reader that can
+//! parse shard 0 can parse the whole set. A shard-serving node advances *its own slice* with
+//! [`ModelStore::publish_shard`], whose id comes from that shard's own file
+//! sequence — broadcast folds are deterministic, so sibling shards assign
+//! the same next id in lockstep without coordination (the router's
+//! unanimous-version check makes any divergence loud). Keep a directory
+//! homogeneous: either full-model history or one shard set's history, not
+//! both (the unsharded `load_latest` has no way to read a sharded id).
 
-use super::format::{read_model, validate_bytes, write_model, ModelArtifact};
+use super::format::{
+    read_model, validate_model_bytes, write_model, ModelArtifact, ValidatedModelBytes,
+};
 use crate::error::{Error, Result};
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -30,6 +50,20 @@ use std::sync::atomic::{AtomicU64, Ordering};
 const LOAD_RETRIES: usize = 5;
 
 const MANIFEST: &str = "MANIFEST";
+
+/// Parse a version filename: `v<id>.fpim` → `(id, None)`,
+/// `v<id>.s<k>of<n>.fpim` → `(id, Some((k, n)))`. Anything else → `None`.
+fn parse_version_file(name: &str) -> Option<(u64, Option<(u64, u64)>)> {
+    let rest = name.strip_prefix('v')?.strip_suffix(".fpim")?;
+    match rest.split_once('.') {
+        None => Some((rest.parse().ok()?, None)),
+        Some((id, shard)) => {
+            let id = id.parse().ok()?;
+            let (k, n) = shard.strip_prefix('s')?.split_once("of")?;
+            Some((id, Some((k.parse().ok()?, n.parse().ok()?))))
+        }
+    }
+}
 /// Per-process temp-file disambiguator (two threads publishing to the same
 /// directory must not share a temp name).
 static TMP_SEQ: AtomicU64 = AtomicU64::new(0);
@@ -55,18 +89,70 @@ impl ModelStore {
         self.dir.join(format!("v{id:06}.fpim"))
     }
 
-    /// Version ids present on disk, ascending.
-    pub fn versions(&self) -> Result<Vec<u64>> {
-        let mut ids = Vec::new();
-        for entry in std::fs::read_dir(&self.dir)? {
-            let name = entry?.file_name();
-            let name = name.to_string_lossy();
-            if let Some(id) = name.strip_prefix('v').and_then(|r| r.strip_suffix(".fpim")) {
-                if let Ok(id) = id.parse::<u64>() {
-                    ids.push(id);
-                }
+    /// Path of shard `k` of an `n`-shard version.
+    fn shard_path(&self, id: u64, k: u64, n: u64) -> PathBuf {
+        self.dir.join(format!("v{id:06}.s{k}of{n}.fpim"))
+    }
+
+    /// Shape-independent id claim marker. A full-model publish and a
+    /// shard-set publish reserve *different destination filenames*, so
+    /// `create_new` on the destination alone cannot stop them (or two set
+    /// publishes with different shard counts) from taking the same id and
+    /// making one version id name two different models. Every
+    /// new-lineage publisher must `create_new` this shared name first;
+    /// the file is empty, ignored by the scans, and removed when `gc`
+    /// removes its version (an orphaned claim just burns an id, which
+    /// monotone ids tolerate). The lockstep [`Self::publish_shard`] path
+    /// deliberately does NOT claim: sibling shards of one broadcast fold
+    /// must all land on the same next id.
+    fn claim_path(&self, id: u64) -> PathBuf {
+        self.dir.join(format!(".claim-v{id:06}"))
+    }
+
+    /// Claim `id` (or the next free one) against concurrent new-lineage
+    /// publishers of every shape. Returns the claimed id.
+    fn claim_version_id(&self, mut id: u64) -> Result<u64> {
+        loop {
+            match std::fs::OpenOptions::new()
+                .write(true)
+                .create_new(true)
+                .open(self.claim_path(id))
+            {
+                Ok(_) => return Ok(id),
+                Err(e) if e.kind() == std::io::ErrorKind::AlreadyExists => id += 1,
+                Err(e) => return Err(Error::Io(e)),
             }
         }
+    }
+
+    /// Every version file on disk as `(id, shard)` — `shard` is `None` for
+    /// a full-model `v<id>.fpim`, `Some((k, n))` for `v<id>.s<k>of<n>.fpim`.
+    fn scan_files(&self) -> Result<Vec<(u64, Option<(u64, u64)>)>> {
+        let mut out = Vec::new();
+        for entry in std::fs::read_dir(&self.dir)? {
+            let name = entry?.file_name();
+            if let Some(parsed) = parse_version_file(&name.to_string_lossy()) {
+                out.push(parsed);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Version ids present on disk (full models and shard sets), ascending.
+    pub fn versions(&self) -> Result<Vec<u64>> {
+        let mut ids: Vec<u64> = self.scan_files()?.into_iter().map(|(id, _)| id).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        Ok(ids)
+    }
+
+    /// Version ids that hold shard `k` of an `n`-shard set, ascending.
+    pub fn shard_versions(&self, k: u64, n: u64) -> Result<Vec<u64>> {
+        let mut ids: Vec<u64> = self
+            .scan_files()?
+            .into_iter()
+            .filter_map(|(id, shard)| (shard == Some((k, n))).then_some(id))
+            .collect();
         ids.sort_unstable();
         Ok(ids)
     }
@@ -131,38 +217,129 @@ impl ModelStore {
         self.resolve_latest(|id| self.load(id))
     }
 
-    /// Verbatim file bytes of the latest published version (validated
-    /// framing), for snapshot shipping — same fallback discipline as
-    /// [`Self::load_latest`].
-    pub fn latest_snapshot_bytes(&self) -> Result<Option<(u64, Vec<u8>)>> {
+    /// Verbatim, framing-validated file bytes of the latest published
+    /// version, for snapshot shipping — same fallback discipline as
+    /// [`Self::load_latest`]. The FNV pass happens here, once; everything
+    /// downstream rides the [`ValidatedModelBytes`] witness.
+    pub fn latest_snapshot_bytes(&self) -> Result<Option<(u64, ValidatedModelBytes)>> {
         self.resolve_latest(|id| self.read_valid_bytes(id))
     }
 
-    fn read_valid_bytes(&self, id: u64) -> Result<Vec<u8>> {
+    fn read_valid_bytes(&self, id: u64) -> Result<ValidatedModelBytes> {
         let path = self.version_path(id);
         let bytes = std::fs::read(&path)?;
-        validate_bytes(&bytes, &path.display().to_string())?;
-        Ok(bytes)
+        validate_model_bytes(bytes, &path.display().to_string())
+    }
+
+    // -- shard-qualified reads ---------------------------------------------
+
+    /// Load shard `k` of the `n`-shard set at version `id`.
+    pub fn load_shard(&self, id: u64, k: u64, n: u64) -> Result<ModelArtifact> {
+        read_model(&self.shard_path(id, k, n))
+    }
+
+    /// Latest version carrying shard `k` of `n`, with the same
+    /// retry-the-race discipline as [`Self::load_latest`]: the newest
+    /// scanned shard file can be a racing publisher's empty reservation,
+    /// in which case the next-newest complete file wins.
+    fn resolve_latest_shard<T>(
+        &self,
+        k: u64,
+        n: u64,
+        load: impl Fn(u64) -> Result<T>,
+    ) -> Result<Option<(u64, T)>> {
+        let mut last_err = None;
+        for _ in 0..LOAD_RETRIES {
+            let ids = self.shard_versions(k, n)?;
+            let Some(&id) = ids.last() else {
+                return Ok(None);
+            };
+            match load(id) {
+                Ok(v) => return Ok(Some((id, v))),
+                Err(e) => match ids.len().checked_sub(2).map(|i| ids[i]) {
+                    Some(prev) => match load(prev) {
+                        Ok(v) => return Ok(Some((prev, v))),
+                        Err(e2) => last_err = Some(e2),
+                    },
+                    None => last_err = Some(e),
+                },
+            }
+            std::thread::yield_now();
+        }
+        Err(last_err.expect("retry loop exits early unless an error was seen"))
+    }
+
+    /// Load the latest version of shard `k` of `n`, if any.
+    pub fn load_latest_shard(&self, k: u64, n: u64) -> Result<Option<(u64, ModelArtifact)>> {
+        self.resolve_latest_shard(k, n, |id| self.load_shard(id, k, n))
+    }
+
+    /// Verbatim, framing-validated bytes of the latest shard-`k` file —
+    /// what `SHIP <have> <k>/<n>` serves.
+    pub fn latest_shard_snapshot_bytes(
+        &self,
+        k: u64,
+        n: u64,
+    ) -> Result<Option<(u64, ValidatedModelBytes)>> {
+        self.resolve_latest_shard(k, n, |id| {
+            let path = self.shard_path(id, k, n);
+            let bytes = std::fs::read(&path)?;
+            validate_model_bytes(bytes, &path.display().to_string())
+        })
+    }
+
+    /// Load every shard file of version `id` (whatever `n` its files
+    /// declare), for [`super::shard::reassemble`]. Errors if `id` has no
+    /// shard files or the files disagree on the set size.
+    pub fn load_shard_set(&self, id: u64) -> Result<Vec<ModelArtifact>> {
+        let mut members: Vec<(u64, u64)> = self
+            .scan_files()?
+            .into_iter()
+            .filter_map(|(fid, shard)| (fid == id).then_some(shard).flatten())
+            .collect();
+        members.sort_unstable();
+        let Some(&(_, n)) = members.first() else {
+            return Err(Error::Invalid(format!("v{id} has no shard files")));
+        };
+        if members.iter().any(|&(_, mn)| mn != n) {
+            return Err(Error::Invalid(format!("v{id} mixes shard-set sizes")));
+        }
+        members.iter().map(|&(k, n)| self.load_shard(id, k, n)).collect()
     }
 
     /// Install verbatim snapshot bytes under the *originating* store's
     /// version id — the replica-side half of snapshot shipping. The replica
     /// store mirrors the primary's ids (that is what makes version skew
-    /// observable), so nothing else may `publish` into it. Validates the
-    /// framing checksum before any byte lands, installs via temp-file +
-    /// rename, is idempotent for an id already present, and only ever moves
-    /// the MANIFEST pointer forward.
-    pub fn install_snapshot(&self, id: u64, bytes: &[u8]) -> Result<()> {
+    /// observable), so nothing else may `publish` into it. Taking the
+    /// [`ValidatedModelBytes`] witness means the framing checksum was
+    /// already verified (exactly once, at receipt) — no re-hash here.
+    /// Installs via temp-file + rename, is idempotent for an id already
+    /// present, and only ever moves the MANIFEST pointer forward.
+    pub fn install_snapshot(&self, id: u64, bytes: &ValidatedModelBytes) -> Result<()> {
+        self.install_bytes(self.version_path(id), id, bytes)
+    }
+
+    /// [`Self::install_snapshot`] for one slice of a sharded version: a
+    /// shard-serving follower mirrors only its own `v<id>.s<k>of<n>.fpim`.
+    pub fn install_shard_snapshot(
+        &self,
+        id: u64,
+        k: u64,
+        n: u64,
+        bytes: &ValidatedModelBytes,
+    ) -> Result<()> {
+        self.install_bytes(self.shard_path(id, k, n), id, bytes)
+    }
+
+    fn install_bytes(&self, dest: PathBuf, id: u64, bytes: &ValidatedModelBytes) -> Result<()> {
         if id == 0 {
             return Err(Error::Invalid("snapshot version id 0 is reserved".into()));
         }
-        validate_bytes(bytes, "snapshot")?;
-        let dest = self.version_path(id);
         if dest.exists() {
             // idempotent only for the SAME bytes: a version id names one
             // immutable model, so a primary re-labeling different bytes
             // with an id we already hold is corruption, not a re-delivery
-            if std::fs::read(&dest)? != bytes {
+            if std::fs::read(&dest)? != bytes.bytes() {
                 return Err(Error::Invalid(format!(
                     "snapshot v{id} conflicts with different bytes already installed"
                 )));
@@ -176,7 +353,7 @@ impl ModelStore {
             // clean the temp file on every error path — a replica retries
             // each poll, and stranding one partial file per attempt would
             // keep a full disk full forever
-            std::fs::write(&tmp, bytes).map_err(|e| {
+            std::fs::write(&tmp, bytes.bytes()).map_err(|e| {
                 let _ = std::fs::remove_file(&tmp);
                 Error::Io(e)
             })?;
@@ -216,6 +393,17 @@ impl ModelStore {
             }
         };
         loop {
+            // shared id claim first (guards against a shard-set publisher
+            // taking the same id under a different filename)...
+            id = match self.claim_version_id(id) {
+                Ok(id) => id,
+                Err(e) => {
+                    let _ = std::fs::remove_file(&tmp);
+                    return Err(e);
+                }
+            };
+            // ...then the destination reservation as before (also guards
+            // against pre-existing unclaimed files)
             match std::fs::OpenOptions::new()
                 .write(true)
                 .create_new(true)
@@ -238,6 +426,143 @@ impl ModelStore {
         Ok(id)
     }
 
+    /// Publish a complete shard set as ONE new version id.
+    ///
+    /// The set is validated first (complete indices, contiguous ranges,
+    /// bitwise-equal factors, one lineage — the [`super::shard::reassemble`]
+    /// checks), so a store can never hold a half-coherent version. Write
+    /// order makes the publish atomic to readers: shard 0's path is
+    /// reserved with `create_new` (claiming the id against racing
+    /// publishers), shards `1..n` rename into place, shard 0's payload
+    /// renames over its reservation *last*, and only then does the
+    /// MANIFEST move — a reader that can parse `s0` can parse them all.
+    pub fn publish_shard_set(&self, shards: &[ModelArtifact]) -> Result<u64> {
+        if shards.len() == 1 {
+            // a 1-shard "set" IS the full model; storing it under s0of1
+            // while its `is_full()` header routes RELOAD/LEARN through the
+            // plain-file paths would split one model across two filename
+            // shapes — refuse the ambiguity at the door
+            return Err(Error::Invalid(
+                "a 1-shard set is the full model — publish it with `publish`".into(),
+            ));
+        }
+        super::shard::reassemble(shards)?; // full coherence check, result dropped
+        let n = shards.len() as u64;
+        let mut ordered: Vec<&ModelArtifact> = shards.iter().collect();
+        ordered.sort_by_key(|s| s.meta.shard.index);
+
+        // claim the id against new-lineage publishers of every shape, then
+        // reserve shard 0's destination (set completeness marker)
+        let mut id = self.latest_version()?.unwrap_or(0) + 1;
+        loop {
+            id = self.claim_version_id(id)?;
+            if self.version_path(id).exists() {
+                // a pre-claim-era full-model file already holds this id
+                id += 1;
+                continue;
+            }
+            match std::fs::OpenOptions::new()
+                .write(true)
+                .create_new(true)
+                .open(self.shard_path(id, 0, n))
+            {
+                Ok(_) => break,
+                Err(e) if e.kind() == std::io::ErrorKind::AlreadyExists => id += 1,
+                Err(e) => return Err(Error::Io(e)),
+            }
+        }
+
+        // shards 1..n first, shard 0's rename completing the set last; on
+        // any failure tear the written files (and the reservation) down
+        let mut written: Vec<PathBuf> = Vec::new();
+        let result = (|| -> Result<()> {
+            for s in ordered.iter().skip(1) {
+                let dest = self.shard_path(id, s.meta.shard.index, n);
+                self.write_via_temp(s, &dest)?;
+                written.push(dest);
+            }
+            self.write_via_temp(ordered[0], &self.shard_path(id, 0, n))
+        })();
+        if let Err(e) = result {
+            for p in &written {
+                let _ = std::fs::remove_file(p);
+            }
+            let _ = std::fs::remove_file(self.shard_path(id, 0, n));
+            return Err(e);
+        }
+        self.write_manifest(id)?;
+        Ok(id)
+    }
+
+    /// Write an artifact to `dest` via temp-file + rename, cleaning the
+    /// temp on every error path.
+    fn write_via_temp(&self, a: &ModelArtifact, dest: &Path) -> Result<()> {
+        let tmp = self.dir.join(format!(
+            ".tmp-shard-{}-{}",
+            std::process::id(),
+            TMP_SEQ.fetch_add(1, Ordering::Relaxed)
+        ));
+        write_model(&tmp, a).map_err(|e| {
+            let _ = std::fs::remove_file(&tmp);
+            e
+        })?;
+        std::fs::rename(&tmp, dest).map_err(|e| {
+            let _ = std::fs::remove_file(&tmp);
+            Error::Io(e)
+        })?;
+        Ok(())
+    }
+
+    /// Publish ONE shard's next version — the shard-serving `LEARN` path.
+    ///
+    /// The id comes from this shard's own file sequence (`max + 1`), not
+    /// the global scan: broadcast folds are deterministic, so sibling
+    /// shard servers sharing a store assign the same next id in lockstep
+    /// without coordination, and the scatter-gather router's
+    /// unanimous-version check catches any shard that falls out of step.
+    /// The MANIFEST only ever moves forward (last sibling wins).
+    pub fn publish_shard(&self, artifact: &ModelArtifact) -> Result<u64> {
+        let sh = artifact.meta.shard;
+        if sh.is_full() {
+            return Err(Error::Invalid(
+                "publish_shard needs a sharded artifact — use publish for full models".into(),
+            ));
+        }
+        let mut id = self.shard_versions(sh.index, sh.count)?.last().copied().unwrap_or(0) + 1;
+        loop {
+            match std::fs::OpenOptions::new()
+                .write(true)
+                .create_new(true)
+                .open(self.shard_path(id, sh.index, sh.count))
+            {
+                Ok(_) => break,
+                Err(e) if e.kind() == std::io::ErrorKind::AlreadyExists => id += 1,
+                Err(e) => return Err(Error::Io(e)),
+            }
+        }
+        let dest = self.shard_path(id, sh.index, sh.count);
+        if let Err(e) = self.write_via_temp(artifact, &dest) {
+            let _ = std::fs::remove_file(&dest);
+            return Err(e);
+        }
+        match self.manifest_version() {
+            Some(m) if m >= id => {} // a sibling shard already moved it
+            _ => self.write_manifest(id)?,
+        }
+        Ok(id)
+    }
+
+    /// Publish through the artifact's own shape: full models go through
+    /// [`Self::publish`], shard slices through [`Self::publish_shard`] —
+    /// what the serving `LEARN` path calls without caring which it holds.
+    pub fn publish_artifact(&self, artifact: &ModelArtifact) -> Result<u64> {
+        if artifact.meta.shard.is_full() {
+            self.publish(artifact)
+        } else {
+            self.publish_shard(artifact)
+        }
+    }
+
     fn write_manifest(&self, id: u64) -> Result<()> {
         let tmp = self.dir.join(format!(
             ".tmp-manifest-{}-{}",
@@ -249,11 +574,12 @@ impl ModelStore {
         Ok(())
     }
 
-    /// Delete all but the newest `keep` versions. The MANIFEST-pointed
-    /// version is never deleted: the newest scanned id can be a concurrent
+    /// Delete all but the newest `keep` versions — a sharded version's
+    /// whole file set counts as one version. The MANIFEST-pointed version
+    /// is never deleted: the newest scanned id can be a concurrent
     /// publisher's not-yet-complete reservation, and deleting the pointed
     /// version under it would leave the store with no readable model if
-    /// that publisher dies. Returns how many files were removed.
+    /// that publisher dies. Returns how many versions were removed.
     pub fn gc(&self, keep: usize) -> Result<usize> {
         let ids = self.versions()?;
         let keep = keep.max(1);
@@ -261,12 +587,24 @@ impl ModelStore {
             return Ok(0);
         }
         let pinned = self.manifest_version();
+        let files = self.scan_files()?;
         let mut removed = 0;
         for &id in &ids[..ids.len() - keep] {
             if Some(id) == pinned {
                 continue;
             }
-            std::fs::remove_file(self.version_path(id))?;
+            for &(fid, shard) in &files {
+                if fid != id {
+                    continue;
+                }
+                match shard {
+                    None => std::fs::remove_file(self.version_path(id))?,
+                    Some((k, n)) => std::fs::remove_file(self.shard_path(id, k, n))?,
+                }
+            }
+            // its id claim goes with it (keeps the claim-file population
+            // bounded by the versions on disk)
+            let _ = std::fs::remove_file(self.claim_path(id));
             removed += 1;
         }
         Ok(removed)
@@ -383,11 +721,11 @@ mod tests {
         let old2 = src.read_valid_bytes(2).unwrap();
         dst.install_snapshot(2, &old2).unwrap();
         assert_eq!(dst.latest_version().unwrap(), Some(3));
-        // corrupt bytes never land
-        let mut bad = bytes.clone();
+        // corrupt bytes can't even earn the witness an install requires
+        let mut bad = bytes.bytes().to_vec();
         let last = bad.len() - 1;
         bad[last] ^= 1;
-        assert!(dst.install_snapshot(9, &bad).is_err());
+        assert!(crate::model::format::validate_model_bytes(bad, "bad").is_err());
         assert!(!dst_dir.join("v000009.fpim").exists());
         // an id we already hold arriving with DIFFERENT bytes is rejected:
         // a version id names one immutable model
@@ -395,6 +733,169 @@ mod tests {
         assert!(dst.install_snapshot(3, &other).is_err());
         let b2 = std::fs::read(dst_dir.join("v000003.fpim")).unwrap();
         assert_eq!(a, b2, "conflicting install must not clobber the existing version");
+    }
+
+    // -- shard-qualified versions ------------------------------------------
+
+    #[test]
+    fn parse_version_filenames() {
+        assert_eq!(parse_version_file("v000001.fpim"), Some((1, None)));
+        assert_eq!(parse_version_file("v000012.s2of3.fpim"), Some((12, Some((2, 3)))));
+        for bad in [
+            "v000001.fpim.tmp",
+            "x000001.fpim",
+            "v1.s2of.fpim",
+            "v1.sof3.fpim",
+            "v1.2of3.fpim",
+            "MANIFEST",
+            ".tmp-shard-1-2",
+        ] {
+            assert_eq!(parse_version_file(bad), None, "{bad}");
+        }
+    }
+
+    #[test]
+    fn publish_shard_set_roundtrips_and_mirrors() {
+        use crate::model::shard::{reassemble, split_artifact};
+        let dir = fresh_dir("shardset");
+        let store = ModelStore::open(&dir).unwrap();
+        let full = sample_artifact(7, 14, 6, 7, 4);
+        let set = split_artifact(&full, 3).unwrap();
+        let id = store.publish_shard_set(&set).unwrap();
+        assert_eq!(id, 1);
+        for k in 0..3u64 {
+            assert!(dir.join(format!("v000001.s{k}of3.fpim")).exists());
+        }
+        assert_eq!(store.versions().unwrap(), vec![1]);
+        assert_eq!(store.latest_version().unwrap(), Some(1));
+        // per-shard loads and the reassembled whole are bitwise the original
+        for k in 0..3u64 {
+            let (v, s) = store.load_latest_shard(k, 3).unwrap().unwrap();
+            assert_eq!(v, 1);
+            assert_eq!(s.z.data(), set[k as usize].z.data());
+        }
+        let back = reassemble(&store.load_shard_set(1).unwrap()).unwrap();
+        assert_eq!(back.z.data(), full.z.data());
+        assert_eq!(back.c.data(), full.c.data());
+        assert_eq!(back.meta, full.meta);
+        // an incoherent set is rejected before anything lands
+        let mut broken = set.clone();
+        broken.pop();
+        assert!(store.publish_shard_set(&broken).is_err());
+        assert_eq!(store.versions().unwrap(), vec![1], "failed publish must leave no files");
+    }
+
+    #[test]
+    fn publish_shard_sequences_per_shard_and_keeps_siblings_in_lockstep() {
+        use crate::model::shard::split_artifact;
+        let dir = fresh_dir("shardseq");
+        let store = ModelStore::open(&dir).unwrap();
+        let set = split_artifact(&sample_artifact(8, 12, 6, 6, 3), 3).unwrap();
+        assert_eq!(store.publish_shard_set(&set).unwrap(), 1);
+        // each "shard server" advances its own slice: all three assign v2
+        for s in &set {
+            let mut next = s.clone();
+            next.meta.updates_applied += 1;
+            assert_eq!(store.publish_shard(&next).unwrap(), 2, "siblings must stay in lockstep");
+        }
+        assert_eq!(store.latest_version().unwrap(), Some(2));
+        for k in 0..3u64 {
+            assert_eq!(store.shard_versions(k, 3).unwrap(), vec![1, 2]);
+            assert_eq!(store.load_latest_shard(k, 3).unwrap().unwrap().0, 2);
+        }
+        // publish_artifact dispatches on shape
+        assert!(store.publish_artifact(&set[0]).is_ok());
+        assert!(store.publish_shard(&sample_artifact(9, 8, 5, 4, 2)).is_err(), "full model");
+    }
+
+    #[test]
+    fn mixed_shape_publishers_never_share_a_version_id() {
+        use crate::model::shard::split_artifact;
+        // a full-model publish and shard-set publishes with DIFFERENT
+        // shard counts reserve different destination filenames, so only
+        // the shared id claim keeps them off the same version id
+        let dir = fresh_dir("claim");
+        let store = ModelStore::open(&dir).unwrap();
+        let full = sample_artifact(21, 12, 6, 6, 3);
+        let v1 = store.publish(&full).unwrap();
+        // simulate the race: another publisher has claimed the next id
+        // but not yet renamed any payload into place
+        std::fs::write(dir.join(format!(".claim-v{:06}", v1 + 1)), b"").unwrap();
+        let v2 = store.publish_shard_set(&split_artifact(&full, 2).unwrap()).unwrap();
+        assert_eq!(v2, v1 + 2, "claimed id must be skipped, not shared");
+        let v3 = store.publish_shard_set(&split_artifact(&full, 3).unwrap()).unwrap();
+        let v4 = store.publish(&full).unwrap();
+        let ids = [v1, v2, v3, v4];
+        let mut dedup = ids.to_vec();
+        dedup.dedup();
+        assert_eq!(dedup.len(), 4, "every publish shape must get a distinct id: {ids:?}");
+        // each id resolves to exactly one shape
+        assert!(store.load(v4).is_ok());
+        assert_eq!(store.load_shard_set(v2).unwrap().len(), 2);
+        assert_eq!(store.load_shard_set(v3).unwrap().len(), 3);
+        // gc removes claim files along with their versions (the manually
+        // planted orphan claim stays — a burned id, by design)
+        store.gc(1).unwrap();
+        let mut claims: Vec<String> = std::fs::read_dir(&dir)
+            .unwrap()
+            .map(|e| e.unwrap().file_name().to_string_lossy().into_owned())
+            .filter(|n| n.starts_with(".claim-v"))
+            .collect();
+        claims.sort();
+        assert_eq!(
+            claims,
+            vec![format!(".claim-v{:06}", v1 + 1), format!(".claim-v{v4:06}")],
+            "gc must prune exactly the dead versions' claims"
+        );
+    }
+
+    #[test]
+    fn gc_removes_whole_shard_sets() {
+        use crate::model::shard::split_artifact;
+        let dir = fresh_dir("shardgc");
+        let store = ModelStore::open(&dir).unwrap();
+        let full = sample_artifact(10, 12, 6, 6, 3);
+        let set = split_artifact(&full, 2).unwrap();
+        for step in 0..4 {
+            let mut bumped = set.clone();
+            for s in &mut bumped {
+                s.meta.updates_applied = step;
+            }
+            store.publish_shard_set(&bumped).unwrap();
+        }
+        assert_eq!(store.versions().unwrap(), vec![1, 2, 3, 4]);
+        let removed = store.gc(2).unwrap();
+        assert_eq!(removed, 2, "two whole versions removed");
+        assert_eq!(store.versions().unwrap(), vec![3, 4]);
+        // no stray files from the removed sets
+        let leftovers = std::fs::read_dir(&dir)
+            .unwrap()
+            .filter_map(|e| parse_version_file(&e.unwrap().file_name().to_string_lossy()))
+            .filter(|&(id, _)| id < 3)
+            .count();
+        assert_eq!(leftovers, 0);
+        assert_eq!(store.load_latest_shard(1, 2).unwrap().unwrap().0, 4);
+    }
+
+    #[test]
+    fn install_shard_snapshot_mirrors_one_slice() {
+        use crate::model::shard::split_artifact;
+        let src_dir = fresh_dir("shardship_src");
+        let dst_dir = fresh_dir("shardship_dst");
+        let src = ModelStore::open(&src_dir).unwrap();
+        let dst = ModelStore::open(&dst_dir).unwrap();
+        let set = split_artifact(&sample_artifact(11, 10, 5, 6, 3), 3).unwrap();
+        src.publish_shard_set(&set).unwrap();
+        let (id, bytes) = src.latest_shard_snapshot_bytes(1, 3).unwrap().unwrap();
+        assert_eq!(id, 1);
+        dst.install_shard_snapshot(id, 1, 3, &bytes).unwrap();
+        assert_eq!(dst.latest_version().unwrap(), Some(1));
+        let a = std::fs::read(src_dir.join("v000001.s1of3.fpim")).unwrap();
+        let b = std::fs::read(dst_dir.join("v000001.s1of3.fpim")).unwrap();
+        assert_eq!(a, b, "mirrored slice must be verbatim");
+        // the follower holds ONLY its slice
+        assert!(dst.load_latest_shard(0, 3).unwrap().is_none());
+        assert_eq!(dst.load_latest_shard(1, 3).unwrap().unwrap().0, 1);
     }
 
     /// The satellite invariants under real thread interleavings: N threads

@@ -133,6 +133,34 @@ impl OnlineUpdater {
         Ok(None)
     }
 
+    /// [`Self::push_example`] with labels given in GLOBAL label-space
+    /// coordinates. For a full model this is the identity; for a shard it
+    /// validates against the FULL label space (`label_total`) and then
+    /// keeps only the labels inside this shard's `label_lo..label_hi`
+    /// range, remapped to local columns. Validating globally is what makes
+    /// a broadcast `LEARN` deterministic across a shard set: every shard
+    /// makes the identical accept/reject decision, so either all of them
+    /// fold (factors advance in lockstep) or none do.
+    pub fn push_example_global(
+        &mut self,
+        features: Vec<(usize, f64)>,
+        labels: Vec<usize>,
+    ) -> Result<Option<UpdateReport>> {
+        let shard = self.artifact.meta.shard;
+        if let Some(&lbl) = labels.iter().find(|&&lbl| lbl as u64 >= shard.label_total) {
+            return Err(Error::Invalid(format!(
+                "label index {lbl} out of range (L={})",
+                shard.label_total
+            )));
+        }
+        let local: Vec<usize> = labels
+            .into_iter()
+            .filter(|&lbl| (shard.label_lo..shard.label_hi).contains(&(lbl as u64)))
+            .map(|lbl| lbl - shard.label_lo as usize)
+            .collect();
+        self.push_example(features, local)
+    }
+
     /// Fold all buffered examples now (no-op report when none are pending).
     pub fn flush(&mut self) -> Result<UpdateReport> {
         if self.pending.is_empty() {
@@ -290,6 +318,7 @@ mod tests {
             rows_since_solve: 0,
             updates_applied: 0,
             drift: 0.0,
+            shard: super::super::format::ShardRange::full(l),
         };
         let art = ModelArtifact::from_training(meta, svd(&a.to_dense()), &y);
         (art, a, y)
@@ -423,6 +452,7 @@ mod tests {
             rows_since_solve: 0,
             updates_applied: 0,
             drift: 0.0,
+            shard: super::super::format::ShardRange::full(4),
         };
         let art = ModelArtifact::from_training(meta, svd(&a.to_dense()).truncate(1), &y);
         let cfg = UpdaterConfig {

@@ -160,6 +160,7 @@ fn replicated_cluster_learn_matches_offline_replay_bitwise() {
             primary: primary.addr,
             poll: Duration::from_millis(10),
             timeout: Duration::from_secs(30),
+            shard: None,
         };
         let replica = ScoreServer::start_replica(
             ModelStore::open(&rdir).unwrap(),

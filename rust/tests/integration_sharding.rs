@@ -1,0 +1,255 @@
+//! Integration: label-space model sharding — the sharded-equals-unsharded
+//! acceptance properties on a real trained model.
+//!
+//! * `split_artifact` → `reassemble` round-trips bitwise on a trained
+//!   artifact (not just the unit-test toys).
+//! * Scatter-gather SCORE through the sharded router is byte-identical to
+//!   the unsharded server's reply — exact scores, exact ordering, exact
+//!   formatting.
+//! * Broadcast LEARN (each shard folding only its label slice) advances
+//!   every shard in lockstep and produces — bitwise — the factors the
+//!   unsharded fold produces, with reassembled C/Z matching too.
+
+use fastpi::coordinator::{
+    text_request, PinvJob, PipelineCoordinator, Router, RouterConfig, ScoreServer, ServerConfig,
+};
+use fastpi::data::{load_dataset, Dataset};
+use fastpi::model::{reassemble, split_artifact, ModelStore, OnlineUpdater, UpdaterConfig};
+use fastpi::pinv::Method;
+use std::path::PathBuf;
+
+fn fresh_dir(name: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("fastpi_sharding_{name}"));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+/// Train a small bibtex model (prefix rows) and return the artifact + data.
+fn trained(seed: u64, train_rows: usize) -> (fastpi::model::ModelArtifact, Dataset) {
+    let ds = load_dataset("bibtex", 0.04, seed, None).unwrap();
+    let job = PinvJob { method: Method::FastPi, alpha: 0.5, k: ds.k, seed };
+    let (artifact, _) = PipelineCoordinator::new().train_model(&ds, &job, train_rows).unwrap();
+    (artifact, ds)
+}
+
+/// `SCORE` probe line for one dataset row's features.
+fn probe_line(ds: &Dataset, row: usize, topk: usize) -> String {
+    let (js, vs) = ds.a.row(row);
+    let feats: Vec<String> = js.iter().zip(vs).map(|(&j, &v)| format!("{j}:{v}")).collect();
+    format!("SCORE {topk} {}", feats.join(","))
+}
+
+/// `LEARN` line for one dataset row (global label ids).
+fn learn_line(ds: &Dataset, row: usize) -> String {
+    let (js, vs) = ds.a.row(row);
+    let feats: Vec<String> = js.iter().zip(vs).map(|(&j, &v)| format!("{j}:{v}")).collect();
+    let (ls, _) = ds.y.row(row);
+    let labels = if ls.is_empty() {
+        "-".to_string()
+    } else {
+        ls.iter().map(|l| l.to_string()).collect::<Vec<_>>().join(",")
+    };
+    format!("LEARN {labels} {}", feats.join(","))
+}
+
+#[test]
+fn split_reassemble_trained_model_is_bitwise() {
+    let (artifact, _) = trained(61, 150);
+    for shards in [2usize, 3, 5] {
+        let set = split_artifact(&artifact, shards).unwrap();
+        let back = reassemble(&set).unwrap();
+        assert_eq!(back.svd.u.data(), artifact.svd.u.data());
+        assert_eq!(back.svd.s, artifact.svd.s);
+        assert_eq!(back.svd.vt.data(), artifact.svd.vt.data());
+        assert_eq!(back.s_inv, artifact.s_inv);
+        assert_eq!(back.c.data(), artifact.c.data());
+        assert_eq!(back.z.data(), artifact.z.data());
+        assert_eq!(back.meta, artifact.meta);
+    }
+}
+
+/// The tentpole acceptance property, in-process: a 3-shard fleet behind
+/// the scatter-gather router is observationally identical — byte for byte
+/// — to one unsharded server, for scoring AND for online learning.
+#[test]
+fn sharded_fleet_is_bitwise_identical_to_unsharded_node() {
+    let (artifact, ds) = trained(62, 200);
+    let labels = artifact.z.cols();
+
+    // unsharded reference: its own store, v1
+    let ref_store = ModelStore::open(&fresh_dir("ref")).unwrap();
+    assert_eq!(ref_store.publish(&artifact).unwrap(), 1);
+    let reference = ScoreServer::start_lifecycle(
+        OnlineUpdater::new(artifact.clone(), UpdaterConfig::default()),
+        Some(ref_store),
+        1,
+        ServerConfig::default(),
+    )
+    .unwrap();
+
+    // 3-shard fleet sharing one shard store, v1
+    let shard_dir = fresh_dir("set");
+    let set = split_artifact(&artifact, 3).unwrap();
+    assert_eq!(
+        ModelStore::open(&shard_dir).unwrap().publish_shard_set(&set).unwrap(),
+        1
+    );
+    let shard_servers: Vec<ScoreServer> = set
+        .iter()
+        .map(|s| {
+            ScoreServer::start_lifecycle(
+                OnlineUpdater::new(s.clone(), UpdaterConfig::default()),
+                Some(ModelStore::open(&shard_dir).unwrap()),
+                1,
+                ServerConfig::default(),
+            )
+            .unwrap()
+        })
+        .collect();
+    let router = Router::start_sharded(
+        shard_servers.iter().map(|s| vec![s.addr]).collect(),
+        RouterConfig::default(),
+    )
+    .unwrap();
+
+    // scatter-gather SCORE ≡ unsharded SCORE, across rows and topk values
+    // (topk = labels exercises the full-label-space merge)
+    for (row, topk) in [(0usize, 5usize), (7, 1), (11, 3), (13, labels)] {
+        let probe = probe_line(&ds, row, topk);
+        let want = text_request(reference.addr, &probe).unwrap();
+        assert!(want.starts_with("OK "), "{want}");
+        let got = text_request(router.addr, &probe).unwrap();
+        assert_eq!(got, want, "row {row} topk {topk} must merge bitwise");
+    }
+
+    // broadcast LEARN: replies unanimous AND byte-identical to the
+    // unsharded server folding the same rows (deterministic folds)
+    for (i, row) in (200..203usize).enumerate() {
+        let line = learn_line(&ds, row);
+        let sharded = text_request(router.addr, &line).unwrap();
+        let unsharded = text_request(reference.addr, &line).unwrap();
+        assert_eq!(sharded, unsharded, "LEARN {row} reply must match bitwise");
+        assert!(
+            sharded.starts_with(&format!("OK version={} pending=0", 2 + i)),
+            "LEARN {row}: {sharded}"
+        );
+    }
+
+    // every shard advanced to v4 (unanimous version advance)
+    for (k, s) in shard_servers.iter().enumerate() {
+        assert_eq!(s.current_version(), 4, "shard {k} fell out of lockstep");
+        let v = text_request(s.addr, "VERSION").unwrap();
+        assert!(v.ends_with(&format!("shard={k}/3")), "{v}");
+    }
+    let stats = text_request(router.addr, "STATS").unwrap();
+    assert!(stats.contains(" skew=0") && stats.contains("shards=3"), "{stats}");
+
+    // post-LEARN scoring still byte-identical
+    for row in [1usize, 9, 17] {
+        let probe = probe_line(&ds, row, 5);
+        assert_eq!(
+            text_request(router.addr, &probe).unwrap(),
+            text_request(reference.addr, &probe).unwrap(),
+            "row {row} diverged after sharded LEARN"
+        );
+    }
+
+    // differential core: the shard stores' v4 set reassembles — bitwise —
+    // into the unsharded store's v4 model (factors AND C/Z)
+    let ref_dir = std::env::temp_dir().join("fastpi_sharding_ref");
+    let (v_ref, unsharded_model) =
+        ModelStore::open(&ref_dir).unwrap().load_latest().unwrap().unwrap();
+    assert_eq!(v_ref, 4);
+    let shard_set = ModelStore::open(&shard_dir).unwrap().load_shard_set(4).unwrap();
+    let back = reassemble(&shard_set).unwrap();
+    assert_eq!(back.svd.u.data(), unsharded_model.svd.u.data(), "U diverged");
+    assert_eq!(back.svd.s, unsharded_model.svd.s, "Σ diverged");
+    assert_eq!(back.svd.vt.data(), unsharded_model.svd.vt.data(), "Vᵀ diverged");
+    assert_eq!(back.s_inv, unsharded_model.s_inv, "Σ⁺ diverged");
+    assert_eq!(back.c.data(), unsharded_model.c.data(), "C diverged");
+    assert_eq!(back.z.data(), unsharded_model.z.data(), "Z diverged");
+
+    // zero errors end to end
+    assert_eq!(router.stats.errors.load(std::sync::atomic::Ordering::Relaxed), 0);
+    assert_eq!(router.stats.rejected.load(std::sync::atomic::Ordering::Relaxed), 0);
+
+    router.shutdown();
+    for s in shard_servers {
+        s.shutdown();
+    }
+    reference.shutdown();
+}
+
+/// A shard replica (`--shard K/N --replica-of`) mirrors ONLY its slice
+/// and serves it at the primary's version ids.
+#[test]
+fn shard_replica_syncs_only_its_slice() {
+    use fastpi::coordinator::ReplicaConfig;
+    use std::time::{Duration, Instant};
+
+    let (artifact, ds) = trained(63, 150);
+    let shard_dir = fresh_dir("replica_primary");
+    let set = split_artifact(&artifact, 3).unwrap();
+    assert_eq!(
+        ModelStore::open(&shard_dir).unwrap().publish_shard_set(&set).unwrap(),
+        1
+    );
+    // the primary for shard 1: a lifecycle server holding that slice
+    let primary = ScoreServer::start_lifecycle(
+        OnlineUpdater::new(set[1].clone(), UpdaterConfig::default()),
+        Some(ModelStore::open(&shard_dir).unwrap()),
+        1,
+        ServerConfig::default(),
+    )
+    .unwrap();
+
+    let replica_dir = fresh_dir("replica_follower");
+    let rc = ReplicaConfig {
+        primary: primary.addr,
+        poll: Duration::from_millis(10),
+        timeout: Duration::from_secs(30),
+        shard: Some((1, 3)),
+    };
+    let replica = ScoreServer::start_replica(
+        ModelStore::open(&replica_dir).unwrap(),
+        rc,
+        ServerConfig::default(),
+    )
+    .unwrap();
+    assert_eq!(replica.current_version(), 1, "cold shard replica must come up synced");
+
+    // the follower's store holds exactly one file: its own slice
+    let files: Vec<String> = std::fs::read_dir(&replica_dir)
+        .unwrap()
+        .map(|e| e.unwrap().file_name().to_string_lossy().into_owned())
+        .filter(|n| n.ends_with(".fpim"))
+        .collect();
+    assert_eq!(files, vec!["v000001.s1of3.fpim".to_string()], "only the slice ships");
+    let a = std::fs::read(shard_dir.join("v000001.s1of3.fpim")).unwrap();
+    let b = std::fs::read(replica_dir.join("v000001.s1of3.fpim")).unwrap();
+    assert_eq!(a, b, "mirrored slice must be verbatim");
+
+    // same slice ⇒ byte-identical replies at the same version
+    let probe = probe_line(&ds, 5, 3);
+    assert_eq!(
+        text_request(replica.addr, &probe).unwrap(),
+        text_request(primary.addr, &probe).unwrap()
+    );
+
+    // a LEARN on the primary advances the slice; the follower converges
+    let reply = text_request(primary.addr, &learn_line(&ds, 150)).unwrap();
+    assert!(reply.starts_with("OK version=2"), "{reply}");
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while replica.current_version() != 2 {
+        assert!(Instant::now() < deadline, "shard replica never reached v2");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    assert_eq!(
+        text_request(replica.addr, &probe).unwrap(),
+        text_request(primary.addr, &probe).unwrap(),
+        "post-LEARN slice must stay byte-identical"
+    );
+
+    replica.shutdown();
+    primary.shutdown();
+}
