@@ -13,11 +13,11 @@
 //! Run: cargo bench --bench serve_throughput
 
 use fastpi::coordinator::{
-    score_request, text_request, PinvJob, PipelineCoordinator, ReplicaConfig, ScoreServer,
-    ServerConfig,
+    score_request, text_request, PinvJob, PipelineCoordinator, ReplicaConfig, Router,
+    RouterConfig, ScoreServer, ServerConfig,
 };
 use fastpi::data::{load_dataset, Dataset};
-use fastpi::model::{ModelStore, OnlineUpdater, UpdaterConfig};
+use fastpi::model::{split_artifact, ModelStore, OnlineUpdater, UpdaterConfig};
 use fastpi::pinv::Method;
 use fastpi::regress::MultiLabelModel;
 use fastpi::sparse::Csr;
@@ -311,7 +311,7 @@ fn main() {
                         primary: primary.addr,
                         poll: Duration::from_millis(5),
                         timeout: Duration::from_secs(30),
-                        shard: None,
+                        ..Default::default()
                     },
                     ServerConfig::default(),
                 )
@@ -387,6 +387,88 @@ fn main() {
         for d in rdirs {
             let _ = std::fs::remove_dir_all(&d);
         }
+    }
+
+    // scatter-gather vs unsharded at EQUAL total label width: the same
+    // trained model served whole by one node and split into 3 shards
+    // behind the scatter-gather router. The delta is the price of the
+    // broadcast + merge hop (per ROADMAP's perf item); the shards also
+    // score narrower C/Z slices each, so wide-label models claw some of
+    // it back. Replies are bitwise-identical either way — this point
+    // measures latency only.
+    {
+        let (artifact, _) = coord.train_model(&ds, &job, ds.a.rows()).expect("artifact");
+        let unsharded = ScoreServer::start(
+            MultiLabelModel { z: artifact.z.clone() },
+            ServerConfig {
+                max_batch: 64,
+                max_wait: Duration::from_micros(500),
+                queue_capacity: 1 << 14,
+                ..Default::default()
+            },
+        )
+        .expect("unsharded");
+        let set = split_artifact(&artifact, 3).expect("split");
+        let shard_servers: Vec<ScoreServer> = set
+            .iter()
+            .map(|s| {
+                ScoreServer::start_sharded(
+                    MultiLabelModel { z: s.z.clone() },
+                    s.meta.shard,
+                    ServerConfig {
+                        max_batch: 64,
+                        max_wait: Duration::from_micros(500),
+                        queue_capacity: 1 << 14,
+                        ..Default::default()
+                    },
+                )
+                .expect("shard server")
+            })
+            .collect();
+        let router = Router::start_sharded(
+            shard_servers.iter().map(|s| vec![s.addr]).collect(),
+            RouterConfig {
+                max_batch: 64,
+                max_wait: Duration::from_micros(500),
+                queue_capacity: 1 << 14,
+                ..Default::default()
+            },
+        )
+        .expect("router");
+
+        let clients = 8usize;
+        let mut gathered = Vec::new();
+        for (policy, addr) in
+            [("scatter_gather/unsharded", unsharded.addr), ("scatter_gather/sharded", router.addr)]
+        {
+            let t0 = Instant::now();
+            let lats = hammer(addr, clients, n_requests, &ds.a);
+            let wall = t0.elapsed().as_secs_f64();
+            let mut sorted = lats.clone();
+            sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let (p50, p95) = (pct(&sorted, 0.5), pct(&sorted, 0.95));
+            rep.add(
+                &[("policy", policy.into()), ("clients", clients.to_string())],
+                &[
+                    ("throughput_rps", lats.len() as f64 / wall),
+                    ("p50_ms", p50 * 1e3),
+                    ("p95_ms", p95 * 1e3),
+                ],
+            );
+            gathered.push((policy, p50, p95));
+        }
+        println!(
+            "scatter-gather latency at equal total width: unsharded p50={:.2}ms p95={:.2}ms vs 3-shard p50={:.2}ms p95={:.2}ms",
+            gathered[0].1 * 1e3,
+            gathered[0].2 * 1e3,
+            gathered[1].1 * 1e3,
+            gathered[1].2 * 1e3
+        );
+        router.shutdown();
+        for s in shard_servers {
+            s.shutdown();
+        }
+        unsharded.shutdown();
     }
     rep.finish();
 }

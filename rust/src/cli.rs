@@ -31,6 +31,10 @@ OPERATIONS:
              publish a new version; reports incremental-vs-recompute time
   ship       pull the latest FPIM snapshot from a serving primary into a
              local store (one-shot, or --watch to keep polling)
+  promote    promote a follower replica to primary: `fastpi promote ADDR`
+             stops its sync loop, verifies its latest local version, bumps
+             the store's promotion epoch (fencing the old primary's stale
+             publishes out of the lineage), and enables LEARN/RELOAD
   shard      split the store's latest model into a label-space shard set
              and publish it (one atomic shard-set version) to --out
   route      front-end router fanning SCORE across replicas; STATS
@@ -44,6 +48,11 @@ OPERATIONS:
              shards, serve each as its own OS process, scatter-gather
              route, and assert bitwise-identical replies vs the
              unsharded model plus unanimous LEARN advance (CI)
+  failover-check   headless resilience check: sharded replica chains
+             (per-shard primary + follower processes) behind the router;
+             kill one member per group mid-load, then promote the dead
+             primary's follower — asserts zero dropped requests, bitwise
+             SCORE vs an unsharded reference, LEARN restored, skew 0 (CI)
   bench-diff perf-trajectory gate: diff target/bench_results/BENCH_*.json
              against the committed bench_baselines/ snapshot
   datagen    generate + cache a dataset, print stats
@@ -72,7 +81,10 @@ LIFECYCLE OPTIONS:
 
 REPLICATION OPTIONS:
   --replica-of ADDR    serve: follow this primary (requires --model-dir,
-                       the replica's own local store directory)
+                       the replica's own local store directory; the
+                       lifecycle flags --learn-batch/--resolve-* set the
+                       config a later `promote` installs — keep them
+                       identical across a shard group's members)
   --from ADDR          ship: the serving primary to pull from
   --watch              ship: keep polling instead of one-shot
   --poll-ms 200        replica/ship poll interval
@@ -122,11 +134,13 @@ pub fn main() {
         "serve" => cmd_serve(&args),
         "update" => cmd_update(&args),
         "ship" => cmd_ship(&args),
+        "promote" => cmd_promote(&args),
         "shard" => cmd_shard(&args),
         "route" => cmd_route(&args),
         "lifecycle-check" => cmd_lifecycle_check(&args),
         "cluster-check" => cmd_cluster_check(&args),
         "shard-check" => cmd_shard_check(&args),
+        "failover-check" => cmd_failover_check(&args),
         "bench-diff" => cmd_bench_diff(&args),
         "datagen" => cmd_datagen(&args),
         "selftest" => cmd_selftest(&args),
@@ -416,7 +430,16 @@ fn cmd_serve(args: &Args) -> crate::error::Result<()> {
         })?;
         let store = ModelStore::open(std::path::Path::new(dir))?;
         let poll = std::time::Duration::from_millis(args.parse_or("poll-ms", 200u64));
-        let rc = ReplicaConfig { primary, poll, shard, ..Default::default() };
+        // the lifecycle knobs ride along so a later PROMOTE installs a
+        // fleet-matching updater (learn_batch etc. must equal the
+        // siblings' or broadcast-LEARN unanimity breaks post-promotion)
+        let rc = ReplicaConfig {
+            primary,
+            poll,
+            shard,
+            updater_cfg: updater_cfg_arg(args),
+            ..Default::default()
+        };
         let server = ScoreServer::start_replica(store, rc, server_cfg)?;
         match shard {
             Some((k, n)) => println!(
@@ -530,6 +553,31 @@ fn cmd_ship(args: &Args) -> crate::error::Result<()> {
             return Ok(());
         }
         std::thread::sleep(poll);
+    }
+}
+
+/// Promote a follower replica to primary over the wire: one `PROMOTE`
+/// round trip. The heavy lifting (sync-loop stop, completeness check,
+/// epoch bump, lifecycle install) happens server-side — see
+/// `coordinator/serve.rs`.
+fn cmd_promote(args: &Args) -> crate::error::Result<()> {
+    use crate::coordinator::text_request;
+    use crate::error::Error;
+    let spec = args
+        .positional()
+        .get(1)
+        .map(String::as_str)
+        .or_else(|| args.get("addr"))
+        .ok_or_else(|| {
+            Error::Invalid("usage: fastpi promote HOST:PORT (a running follower replica)".into())
+        })?;
+    let addr = resolve_addr(spec)?;
+    let reply = text_request(addr, "PROMOTE").map_err(Error::Io)?;
+    if reply.starts_with("OK ") {
+        println!("promoted {addr}: {reply}");
+        Ok(())
+    } else {
+        Err(Error::Invalid(format!("promote {addr} failed: {reply}")))
     }
 }
 
@@ -872,6 +920,16 @@ impl Fleet {
         })?;
         addr.parse().map_err(|_| Error::Invalid(format!("bad server address `{addr}`")))
     }
+
+    /// Kill one child (by spawn order) mid-check — the failure-injection
+    /// half of `failover-check`. SIGKILL + reap, so its ports refuse
+    /// connections immediately.
+    fn kill(&mut self, index: usize) {
+        if let Some(c) = self.children.get_mut(index) {
+            let _ = c.kill();
+            let _ = c.wait();
+        }
+    }
 }
 
 impl Drop for Fleet {
@@ -1210,6 +1268,287 @@ fn cmd_shard_check(args: &Args) -> crate::error::Result<()> {
     println!(
         "shard-check OK: {shards}-shard fleet scored bitwise-identically to the unsharded model \
          and broadcast LEARN kept it in lockstep v1 -> v{v_final} (factors + Z reassemble bitwise)"
+    );
+    Ok(())
+}
+
+/// Headless fleet-resilience check — sharded replica chains under failure
+/// injection, across real OS processes:
+///
+/// 1. the trained model is split into N shards; each shard group gets a
+///    primary process AND a snapshot-shipped follower process, with the
+///    scatter-gather router (multi-member groups) in front, plus an
+///    unsharded reference process for bitwise comparison;
+/// 2. **degraded serving**: under concurrent SCORE load, one member of
+///    every group is killed (group 0 loses its PRIMARY, the others lose
+///    their followers) — every routed reply must still arrive and be
+///    byte-identical to the reference's (health circuits + sibling retry);
+/// 3. **promotion**: group 0's follower is `PROMOTE`d in place — broadcast
+///    LEARN service is restored (replies byte-identical to the reference,
+///    unanimous version advance) and STATS skew over the reachable fleet
+///    returns to 0;
+/// 4. zero routed errors end to end, and STATS `unhealthy=` agrees with
+///    the kill list.
+fn cmd_failover_check(args: &Args) -> crate::error::Result<()> {
+    use crate::coordinator::{text_request, Router, RouterConfig};
+    use crate::error::Error;
+    use crate::model::{split_artifact, ModelStore};
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::time::{Duration, Instant};
+
+    let dir = model_dir_arg(args, &args.str_or("dataset", "bibtex"));
+    let shards: usize = args.parse_or("shards", 2usize);
+    let learns: u64 = args.parse_or("learns", 3u64);
+    let load_threads: usize = args.parse_or("clients", 4usize);
+    let per_thread: usize = args.parse_or("requests", 30usize);
+    let source = ModelStore::open(&dir)?;
+    let Some((src_version, artifact)) = source.load_latest()? else {
+        return Err(Error::Invalid(format!(
+            "no model versions in {} — run `fastpi train` first",
+            dir.display()
+        )));
+    };
+    drop(source);
+    let (_, n, l) = artifact.shape();
+
+    // scratch stores: unsharded reference, the shard set, and one empty
+    // local store per follower — all at comparable version sequences
+    let base = std::env::temp_dir().join(format!("fastpi_failover_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&base);
+    let ref_dir = base.join("ref");
+    let shard_dir = base.join("shards");
+    let mut fleet = Fleet::new()?;
+    fleet.scratch.push(base.clone());
+    assert_eq!(ModelStore::open(&ref_dir)?.publish(&artifact)?, 1);
+    let set = split_artifact(&artifact, shards)?;
+    assert_eq!(ModelStore::open(&shard_dir)?.publish_shard_set(&set)?, 1);
+    println!(
+        "split v{src_version} ({l} labels, rank {}) into {shards} shard groups under {}",
+        artifact.rank(),
+        base.display()
+    );
+
+    // spawn order (== Fleet child indices): reference, shard primaries,
+    // then one follower per shard
+    let reference = fleet.spawn_server(&[
+        "serve".into(),
+        "--model-dir".into(),
+        ref_dir.display().to_string(),
+        "--learn-batch".into(),
+        "1".into(),
+    ])?;
+    println!("reference (unsharded) on {reference}");
+    let mut primary_addrs = Vec::new();
+    for k in 0..shards {
+        let addr = fleet.spawn_server(&[
+            "serve".into(),
+            "--model-dir".into(),
+            shard_dir.display().to_string(),
+            "--shard".into(),
+            format!("{k}/{shards}"),
+            "--learn-batch".into(),
+            "1".into(),
+        ])?;
+        println!("shard {k}/{shards} primary on {addr}");
+        primary_addrs.push(addr);
+    }
+    let mut follower_addrs = Vec::new();
+    for k in 0..shards {
+        let fdir = base.join(format!("follower{k}"));
+        let addr = fleet.spawn_server(&[
+            "serve".into(),
+            "--shard".into(),
+            format!("{k}/{shards}"),
+            "--replica-of".into(),
+            primary_addrs[k].to_string(),
+            "--model-dir".into(),
+            fdir.display().to_string(),
+            "--poll-ms".into(),
+            "25".into(),
+            // fleet-matching lifecycle config for the eventual PROMOTE
+            "--learn-batch".into(),
+            "1".into(),
+        ])?;
+        println!("shard {k}/{shards} follower on {addr}");
+        follower_addrs.push(addr);
+    }
+    let primary_child = |k: usize| 1 + k;
+    let follower_child = |k: usize| 1 + shards + k;
+
+    // multi-member shard groups: [primary_k, follower_k]; the long
+    // cooldown keeps killed members' circuits deterministically open for
+    // the whole check
+    let groups: Vec<Vec<std::net::SocketAddr>> = (0..shards)
+        .map(|k| vec![primary_addrs[k], follower_addrs[k]])
+        .collect();
+    let cfg = RouterConfig {
+        upstream_timeout: Duration::from_secs(5),
+        fail_threshold: 2,
+        health_cooldown: Duration::from_secs(120),
+        ..Default::default()
+    };
+    let router = Router::start_sharded(groups, cfg).map_err(Error::Io)?;
+
+    let req = |addr, line: &str| text_request(addr, line).map_err(Error::Io);
+
+    // every follower serving v1 before the shooting starts
+    let deadline = Instant::now() + Duration::from_secs(60);
+    for &addr in &follower_addrs {
+        loop {
+            let v = req(addr, "VERSION")?;
+            if v.starts_with("VERSION id=1 ") {
+                break;
+            }
+            if Instant::now() > deadline {
+                return Err(Error::Invalid(format!("follower {addr} never synced: {v}")));
+            }
+            std::thread::sleep(Duration::from_millis(20));
+        }
+    }
+
+    // expected replies pinned off the unsharded reference
+    let probes = [
+        format!("SCORE 5 0:1.0,{}:0.5", n.saturating_sub(1)),
+        "SCORE 1 0:1.0".to_string(),
+        format!("SCORE {l} 1:0.25,2:-1.0"),
+        "SCORE 3 ".to_string(),
+    ];
+    let mut want = Vec::new();
+    for probe in &probes {
+        let w = req(reference, probe)?;
+        if !w.starts_with("OK ") {
+            return Err(Error::Invalid(format!("reference SCORE failed: {w}")));
+        }
+        want.push(w);
+    }
+
+    // phase 2 — degraded serving: concurrent load through the router;
+    // mid-load, kill one member per group (group 0: the PRIMARY — its
+    // follower is promoted in phase 3; other groups: the follower)
+    let progress = AtomicUsize::new(0);
+    let router_addr = router.addr;
+    let total = load_threads * per_thread;
+    std::thread::scope(|s| -> crate::error::Result<()> {
+        let mut handles = Vec::new();
+        for t in 0..load_threads {
+            let probes = &probes;
+            let want = &want;
+            let progress = &progress;
+            handles.push(s.spawn(move || -> Result<usize, String> {
+                let mut served = 0usize;
+                for i in 0..per_thread {
+                    let pi = (t + i) % probes.len();
+                    let got = text_request(router_addr, &probes[pi])
+                        .map_err(|e| format!("request io: {e}"))?;
+                    if got != want[pi] {
+                        return Err(format!(
+                            "degraded reply diverged on `{}`:\n  got:  {got}\n  want: {}",
+                            probes[pi], want[pi]
+                        ));
+                    }
+                    served += 1;
+                    progress.fetch_add(1, Ordering::Relaxed);
+                }
+                Ok(served)
+            }));
+        }
+        // let the fleet serve healthy for a moment, then shoot
+        let kill_after = total / 3;
+        let deadline = Instant::now() + Duration::from_secs(120);
+        while progress.load(Ordering::Relaxed) < kill_after {
+            if Instant::now() > deadline {
+                return Err(Error::Invalid("load never reached the kill point".into()));
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        fleet.kill(primary_child(0));
+        for k in 1..shards {
+            fleet.kill(follower_child(k));
+        }
+        println!(
+            "  killed shard-0 primary + {} follower(s) mid-load (after {} requests)",
+            shards - 1,
+            progress.load(Ordering::Relaxed)
+        );
+        let mut served_total = 0usize;
+        for h in handles {
+            match h.join().expect("load thread panicked") {
+                Ok(srv) => served_total += srv,
+                Err(e) => return Err(Error::Invalid(e)),
+            }
+        }
+        if served_total != total {
+            return Err(Error::Invalid(format!(
+                "dropped requests under failure: served {served_total} of {total}"
+            )));
+        }
+        Ok(())
+    })?;
+    let retries = router.stats.retries.load(std::sync::atomic::Ordering::Relaxed);
+    println!(
+        "  {total} routed SCOREs all byte-identical to the reference with one member down per group ({retries} request lines retried onto siblings)"
+    );
+
+    // STATS must agree with the kill list: probe twice (probe failures
+    // feed the same circuits fan-out uses), then read unhealthy=
+    let _ = req(router.addr, "STATS")?;
+    let stats = req(router.addr, "STATS")?;
+    let unhealthy: usize = stats
+        .split_whitespace()
+        .find_map(|tok| tok.strip_prefix("unhealthy=")?.parse().ok())
+        .ok_or_else(|| Error::Invalid(format!("STATS missing unhealthy=: {stats}")))?;
+    if unhealthy != shards {
+        return Err(Error::Invalid(format!(
+            "unhealthy={unhealthy}, expected {shards} (one killed member per group): {stats}"
+        )));
+    }
+
+    // phase 3 — promotion: shard 0's follower takes over its lineage
+    let promote = req(follower_addrs[0], "PROMOTE")?;
+    if promote != "OK version=1 epoch=1" {
+        return Err(Error::Invalid(format!("PROMOTE: {promote}")));
+    }
+    println!("  promoted shard-0 follower ({promote})");
+
+    // LEARN service is restored: broadcast folds through the router,
+    // replies byte-identical to the unsharded reference's
+    for step in 0..learns {
+        let line = format!("LEARN {} {}:1.0", step as usize % l, step as usize % n);
+        let sharded = req(router.addr, &line)?;
+        let unsharded = req(reference, &line)?;
+        if sharded != unsharded {
+            return Err(Error::Invalid(format!(
+                "post-promotion LEARN {step} diverged:\n  sharded:   {sharded}\n  unsharded: {unsharded}"
+            )));
+        }
+        if !sharded.starts_with(&format!("OK version={} ", 2 + step)) {
+            return Err(Error::Invalid(format!("LEARN {step}: {sharded}")));
+        }
+    }
+    let v_final = 1 + learns;
+
+    // skew over the reachable fleet returns to 0 at the new version
+    let stats = req(router.addr, "STATS")?;
+    if !stats.contains(" skew=0") || !stats.contains(&format!("shards={shards}")) {
+        return Err(Error::Invalid(format!("fleet should be converged at v{v_final}: {stats}")));
+    }
+
+    // scoring still byte-identical after the failover + folds
+    for probe in &probes {
+        let w = req(reference, probe)?;
+        let got = req(router.addr, probe)?;
+        if got != w {
+            return Err(Error::Invalid(format!("post-promotion divergence on `{probe}`")));
+        }
+    }
+    let errors = router.stats.errors.load(std::sync::atomic::Ordering::Relaxed);
+    if errors != 0 {
+        return Err(Error::Invalid(format!("router reported {errors} errors")));
+    }
+    router.shutdown();
+    println!(
+        "failover-check OK: one member killed per group served {total} requests with zero \
+         drops, promotion restored LEARN (v1 -> v{v_final}), skew 0 over the surviving fleet"
     );
     Ok(())
 }

@@ -41,20 +41,49 @@
 //!   version advance is enforced. Divergence answers `ERR shard
 //!   divergence …` and shows up in `STATS errors=`.
 //!
+//! ## Health-based member failover
+//!
+//! Every fleet member carries a consecutive-failure circuit
+//! ([`HealthTable`]): `fail_threshold` consecutive failures — fan-out
+//! failures and observability-probe failures feed the SAME counter, so the
+//! `STATS unhealthy=` count and the fan-out skip list can never disagree —
+//! open the circuit for `health_cooldown`. An open member is *skipped* by
+//! member selection (replicated: the round-robin spread; sharded: the
+//! in-group rotation) while any sibling is available; once the cooldown
+//! expires the circuit is half-open and the next selection that lands on
+//! the member doubles as its re-probe (one success closes the circuit, one
+//! more failure re-opens it for another cooldown). When every member of a
+//! group is open, selection falls back to rotating over all of them —
+//! serving a maybe-dead member beats refusing a maybe-alive fleet.
+//!
+//! A request whose forward fails is **retried once** on a healthy sibling
+//! before the client sees `ERR upstream` — in replicated mode the sibling
+//! is another replica, in sharded mode another member of the same shard
+//! group (a shard with no live sibling still fails the request: a partial
+//! label space is never served). Net effect: killing one member per group
+//! is client-invisible while a sibling lives. `STATS retries=` counts the
+//! request lines re-sent this way.
+//!
 //! ## Observability
 //!
 //! Version skew is the router's observability duty in both modes: stores
 //! mirror the primary's version ids (see `crate::model::ship`), so `STATS`
-//! polls each member's `VERSION` live and reports
+//! polls each member live (one pipelined `VERSION` + `STATS` round trip
+//! per member) and reports
 //!
 //! ```text
-//! STATS routed=... errors=... rejected=... batches=... replicas=M versions=v1,v2,... skew=S [shards=N]
+//! STATS routed=... errors=... rejected=... retries=... batches=... replicas=M unhealthy=U versions=v1,v2,... skew=S fleet_served=... fleet_learned=... [shards=N]
 //! ```
 //!
 //! `replicas=` counts fleet MEMBERS and always equals the length of the
-//! `versions=` list; in sharded mode `shards=` carries the group count.
+//! `versions=` list; `unhealthy=` counts members whose circuit is
+//! currently open; `fleet_served=`/`fleet_learned=` sum the reachable
+//! members' own `STATS served=`/`learned=` counters into fleet totals
+//! (cross-shard aggregation — an unreachable member contributes nothing,
+//! which the `versions=` `?` marks make visible); in sharded mode
+//! `shards=` carries the group count.
 //!
-//! where `skew` is max−min over the reachable members' ids (`?` marks an
+//! `skew` is max−min over the reachable members' ids (`?` marks an
 //! unreachable one). Replicated mode: skew 0 ⇒ every replica serves
 //! byte-identical scores. Sharded mode: `versions=` lists EVERY member of
 //! every shard group (group order — the in-group rotation serves traffic
@@ -75,12 +104,11 @@
 //! upstream stalls. If that ever bites, the fix is a dedicated I/O thread
 //! set — keep the observability probes in mind too (`probe_timeout`).
 
-use super::serve::text_request_timeout;
 use std::io::{BufRead, BufReader, BufWriter, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::Arc;
-use std::time::Duration;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
 
 /// Router tuning knobs.
 #[derive(Debug, Clone)]
@@ -94,6 +122,12 @@ pub struct RouterConfig {
     /// per-group socket deadline — a hung replica costs one group one
     /// timeout, never a wedged router
     pub upstream_timeout: Duration,
+    /// consecutive failures (fan-out or observability probe) that open a
+    /// member's circuit
+    pub fail_threshold: u32,
+    /// how long an open circuit keeps its member out of selection before
+    /// the next attempt is allowed through as a half-open re-probe
+    pub health_cooldown: Duration,
     /// listen address (`127.0.0.1:0` = loopback, ephemeral)
     pub bind: String,
 }
@@ -105,6 +139,8 @@ impl Default for RouterConfig {
             max_wait: Duration::from_millis(2),
             queue_capacity: 1024,
             upstream_timeout: Duration::from_secs(10),
+            fail_threshold: 2,
+            health_cooldown: Duration::from_secs(1),
             bind: "127.0.0.1:0".into(),
         }
     }
@@ -120,8 +156,96 @@ pub struct RouterStats {
     pub errors: AtomicUsize,
     /// requests refused with `ERR overloaded`
     pub rejected: AtomicUsize,
+    /// request lines re-sent to a healthy sibling after a member failed
+    pub retries: AtomicUsize,
     /// fan-out rounds executed
     pub batches: AtomicUsize,
+}
+
+/// Per-member consecutive-failure circuit breaker, indexed flat in group
+/// order (the same order `probe_fleet` walks). Fan-out outcomes and
+/// observability-probe outcomes both feed [`HealthTable::record`], so the
+/// skip list and `STATS unhealthy=` agree by construction.
+///
+/// States, encoded by `(consecutive_failures, open_until)`:
+/// * closed — failures below the threshold: always selectable;
+/// * open — threshold reached and the cooldown deadline is in the future:
+///   skipped by selection while a sibling is available;
+/// * half-open — deadline passed: selectable again, and the next recorded
+///   outcome decides (success resets the circuit, one failure re-opens it
+///   for another cooldown — the counter is already at the threshold).
+#[derive(Debug)]
+pub struct HealthTable {
+    members: Vec<Mutex<MemberHealth>>,
+    /// flat index of group `g`'s first member: `idx(g, m) = offsets[g] + m`
+    offsets: Vec<usize>,
+    fail_threshold: u32,
+    cooldown: Duration,
+}
+
+#[derive(Debug, Default)]
+struct MemberHealth {
+    consecutive_failures: u32,
+    open_until: Option<Instant>,
+}
+
+impl HealthTable {
+    fn new(groups: &[Vec<SocketAddr>], fail_threshold: u32, cooldown: Duration) -> HealthTable {
+        let mut offsets = Vec::with_capacity(groups.len());
+        let mut total = 0usize;
+        for g in groups {
+            offsets.push(total);
+            total += g.len();
+        }
+        HealthTable {
+            members: (0..total).map(|_| Mutex::new(MemberHealth::default())).collect(),
+            offsets,
+            // a threshold of 0 would open every circuit before the first
+            // request; clamp to the always-sane 1
+            fail_threshold: fail_threshold.max(1),
+            cooldown,
+        }
+    }
+
+    /// Flat member index of member `m` of group `g`.
+    fn idx(&self, g: usize, m: usize) -> usize {
+        self.offsets[g] + m
+    }
+
+    fn lock(&self, idx: usize) -> std::sync::MutexGuard<'_, MemberHealth> {
+        self.members[idx].lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Feed one observed outcome (fan-out round or observability probe).
+    fn record(&self, idx: usize, ok: bool) {
+        let mut h = self.lock(idx);
+        if ok {
+            h.consecutive_failures = 0;
+            h.open_until = None;
+        } else {
+            h.consecutive_failures = h.consecutive_failures.saturating_add(1);
+            if h.consecutive_failures >= self.fail_threshold {
+                h.open_until = Some(Instant::now() + self.cooldown);
+            }
+        }
+    }
+
+    /// Selectable now? Closed and half-open (cooldown expired) members are;
+    /// open ones are not.
+    fn is_available(&self, idx: usize) -> bool {
+        self.lock(idx).open_until.is_none_or(|t| Instant::now() >= t)
+    }
+
+    /// Members whose circuit is currently open — `STATS unhealthy=`.
+    pub fn unhealthy(&self) -> usize {
+        let now = Instant::now();
+        self.members
+            .iter()
+            .filter(|m| {
+                m.lock().unwrap_or_else(|e| e.into_inner()).open_until.is_some_and(|t| now < t)
+            })
+            .count()
+    }
 }
 
 /// `None` = the upstream replica failed; the client gets `ERR upstream`.
@@ -153,6 +277,7 @@ pub struct Router {
     /// target groups: replicated = one single-member group per replica;
     /// sharded = group `k` holds the interchangeable servers of shard `k`
     groups: Arc<Vec<Vec<SocketAddr>>>,
+    health: Arc<HealthTable>,
     mode: RouterMode,
     upstream_timeout: Duration,
     stop: Arc<AtomicBool>,
@@ -194,21 +319,24 @@ impl Router {
         let stop = Arc::new(AtomicBool::new(false));
         let stats = Arc::new(RouterStats::default());
         let groups = Arc::new(groups);
+        let health = Arc::new(HealthTable::new(&groups, cfg.fail_threshold, cfg.health_cooldown));
         let queue = Arc::new(Queue::new(cfg.queue_capacity));
 
         let b_queue = queue.clone();
         let b_stop = stop.clone();
         let b_stats = stats.clone();
         let b_groups = groups.clone();
+        let b_health = health.clone();
         let b_cfg = cfg.clone();
         let batch_handle = std::thread::Builder::new()
             .name("route-batcher".into())
-            .spawn(move || fanout_loop(b_groups, mode, b_queue, b_stop, b_stats, b_cfg))?;
+            .spawn(move || fanout_loop(b_groups, b_health, mode, b_queue, b_stop, b_stats, b_cfg))?;
 
         let a_stop = stop.clone();
         let a_stats = stats.clone();
         let a_queue = queue.clone();
         let a_groups = groups.clone();
+        let a_health = health.clone();
         let a_timeout = cfg.upstream_timeout;
         let accept_handle = std::thread::Builder::new().name("route-accept".into()).spawn(
             move || {
@@ -220,8 +348,9 @@ impl Router {
                             let st = a_stats.clone();
                             let stop2 = a_stop.clone();
                             let gs = a_groups.clone();
+                            let hl = a_health.clone();
                             conns.push(std::thread::spawn(move || {
-                                let _ = handle_conn(stream, q, st, stop2, gs, mode, a_timeout);
+                                let _ = handle_conn(stream, q, st, stop2, gs, hl, mode, a_timeout);
                             }));
                             // prune finished handlers (same unbounded-handle
                             // hazard as the scoring server's accept loop)
@@ -243,6 +372,7 @@ impl Router {
             addr,
             stats,
             groups,
+            health,
             mode,
             upstream_timeout: cfg.upstream_timeout,
             stop,
@@ -261,10 +391,14 @@ impl Router {
     /// probe, and it covers EVERY member of every group: a stale member
     /// inside a multi-member shard group serves traffic via the in-group
     /// rotation, so it must show up here, not hide behind a healthy
-    /// sibling.
+    /// sibling. Probe outcomes feed the per-member health circuits, so a
+    /// member that stops answering probes is also skipped by fan-out.
     pub fn replica_versions(&self) -> Vec<Option<u64>> {
         let t = probe_timeout(self.upstream_timeout);
-        probe_addrs(&self.groups).map(|a| query_version(a, t)).collect()
+        probe_fleet(&self.groups, &self.health, t)
+            .into_iter()
+            .map(|m| m.and_then(|m| m.version))
+            .collect()
     }
 
     /// max−min over the reachable replicas' version ids (`None` when no
@@ -273,6 +407,12 @@ impl Router {
         let ids: Vec<u64> = self.replica_versions().into_iter().flatten().collect();
         let (min, max) = (ids.iter().min()?, ids.iter().max()?);
         Some(max - min)
+    }
+
+    /// Members whose failure circuit is currently open (skipped by
+    /// fan-out until their cooldown expires) — `STATS unhealthy=`.
+    pub fn unhealthy_members(&self) -> usize {
+        self.health.unhealthy()
     }
 
     /// Stop the router and join its threads.
@@ -295,26 +435,77 @@ fn probe_timeout(upstream: Duration) -> Duration {
     upstream.min(Duration::from_secs(2))
 }
 
-/// One `VERSION` round trip; `None` on any failure.
-fn query_version(addr: SocketAddr, timeout: Duration) -> Option<u64> {
-    let reply = text_request_timeout(addr, "VERSION", timeout).ok()?;
-    reply
-        .strip_prefix("VERSION ")?
-        .split_whitespace()
-        .find_map(|tok| tok.strip_prefix("id=")?.parse().ok())
+/// What one member probe learned.
+#[derive(Debug, Default)]
+struct MemberStatus {
+    /// parsed `VERSION id=` (None on an unparseable reply)
+    version: Option<u64>,
+    /// the member's own `STATS served=` counter
+    served: u64,
+    /// the member's own `STATS learned=` counter
+    learned: u64,
 }
 
-/// Every member of every group, in group order — the observability probes
-/// talk to ALL of them: fan-out rotates across a group's members, so a
-/// stale member anywhere would otherwise serve traffic while a
-/// first-member-only probe still reported skew=0.
-fn probe_addrs(groups: &[Vec<SocketAddr>]) -> impl Iterator<Item = SocketAddr> + '_ {
-    groups.iter().flat_map(|g| g.iter().copied())
+/// One pipelined `VERSION` + `STATS` round trip on a single connection;
+/// `None` when the member is unreachable (connect/read/write failure).
+fn probe_member(addr: SocketAddr, timeout: Duration) -> Option<MemberStatus> {
+    let attempt = || -> std::io::Result<(String, String)> {
+        let stream = TcpStream::connect_timeout(&addr, timeout)?;
+        stream.set_read_timeout(Some(timeout))?;
+        stream.set_write_timeout(Some(timeout))?;
+        let mut reader = BufReader::new(stream.try_clone()?);
+        let mut writer = BufWriter::new(stream);
+        writeln!(writer, "VERSION")?;
+        writeln!(writer, "STATS")?;
+        writer.flush()?;
+        let mut version = String::new();
+        let mut stats = String::new();
+        for buf in [&mut version, &mut stats] {
+            if reader.read_line(buf)? == 0 {
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::UnexpectedEof,
+                    "member closed mid-probe",
+                ));
+            }
+        }
+        Ok((version, stats))
+    };
+    let (version_line, stats_line) = attempt().ok()?;
+    let field = |line: &str, key: &str| -> Option<u64> {
+        line.split_whitespace().find_map(|tok| tok.strip_prefix(key)?.parse().ok())
+    };
+    Some(MemberStatus {
+        version: field(version_line.trim_end(), "id="),
+        served: field(stats_line.trim_end(), "served=").unwrap_or(0),
+        learned: field(stats_line.trim_end(), "learned=").unwrap_or(0),
+    })
+}
+
+/// Probe EVERY member of every group (group order — fan-out rotates across
+/// a group's members, so a stale member anywhere would otherwise serve
+/// traffic while a first-member-only probe still reported skew=0), feeding
+/// each outcome into the member's health circuit.
+fn probe_fleet(
+    groups: &[Vec<SocketAddr>],
+    health: &HealthTable,
+    timeout: Duration,
+) -> Vec<Option<MemberStatus>> {
+    groups
+        .iter()
+        .flat_map(|g| g.iter().copied())
+        .enumerate()
+        .map(|(idx, addr)| {
+            let status = probe_member(addr, timeout);
+            health.record(idx, status.is_some());
+            status
+        })
+        .collect()
 }
 
 /// Drain batches off the queue and fan each one out across the groups.
 fn fanout_loop(
     groups: Arc<Vec<Vec<SocketAddr>>>,
+    health: Arc<HealthTable>,
     mode: RouterMode,
     queue: Arc<Queue>,
     stop: Arc<AtomicBool>,
@@ -333,44 +524,119 @@ fn fanout_loop(
         }
         match mode {
             RouterMode::Replicated => {
-                fanout_replicated(&groups, rotation, batch, &stats, &cfg);
+                fanout_replicated(&groups, &health, rotation, batch, &stats, &cfg);
             }
             RouterMode::Sharded => {
-                fanout_sharded(&groups, rotation, batch, &stats, &cfg);
+                fanout_sharded(&groups, &health, rotation, batch, &stats, &cfg);
             }
         }
         rotation = rotation.wrapping_add(1);
     }
 }
 
-/// Replicated round: split the batch round-robin, one slice per replica.
+/// Pick group `g`'s member for this round: rotate over the members whose
+/// circuit is not open; when ALL are open, rotate over everyone (the
+/// attempt doubles as the half-open re-probe — refusing the whole group
+/// on the strength of stale circuits would turn a recovered group into a
+/// permanently dead one).
+fn choose_member(
+    group: &[SocketAddr],
+    g: usize,
+    health: &HealthTable,
+    rotation: usize,
+) -> (usize, SocketAddr) {
+    let avail: Vec<usize> =
+        (0..group.len()).filter(|&m| health.is_available(health.idx(g, m))).collect();
+    let m = if avail.is_empty() { rotation % group.len() } else { avail[rotation % avail.len()] };
+    (m, group[m])
+}
+
+/// Forward one group of lines to `addr`, recording the outcome on the
+/// member's health circuit (`forward_group` fails all-or-nothing, so the
+/// first reply tells the whole story; an empty slice records nothing).
+fn forward_and_record(
+    addr: SocketAddr,
+    member_idx: usize,
+    lines: &[String],
+    health: &HealthTable,
+    timeout: Duration,
+) -> Vec<Option<String>> {
+    let replies = forward_group(addr, lines, timeout);
+    if !lines.is_empty() {
+        health.record(member_idx, replies.iter().any(Option::is_some));
+    }
+    replies
+}
+
+/// Replicated round: split the batch round-robin across the replicas whose
+/// circuit is not open, then retry each failed slice once on a different
+/// available replica before its clients see `ERR upstream`.
 fn fanout_replicated(
     groups: &[Vec<SocketAddr>],
+    health: &HealthTable,
     rotation: usize,
     batch: Vec<Pending>,
     stats: &RouterStats,
     cfg: &RouterConfig,
 ) {
-    // round-robin split: request i → replica (rotation + i) % N
+    // replicated groups are single-member, so group index = member index;
+    // spread this round over the available replicas only (everyone when
+    // none are available — the attempts double as half-open re-probes)
     let n = groups.len();
-    let mut lines: Vec<Vec<String>> = vec![Vec::new(); n];
-    let mut senders: Vec<Vec<ReplySender>> = (0..n).map(|_| Vec::new()).collect();
+    let avail: Vec<usize> = (0..n).filter(|&g| health.is_available(health.idx(g, 0))).collect();
+    let pool_groups: Vec<usize> = if avail.is_empty() { (0..n).collect() } else { avail };
+    let k = pool_groups.len();
+
+    // round-robin split: request i → pool replica (rotation + i) % k
+    let mut lines: Vec<Vec<String>> = vec![Vec::new(); k];
+    let mut senders: Vec<Vec<ReplySender>> = (0..k).map(|_| Vec::new()).collect();
     for (i, p) in batch.into_iter().enumerate() {
-        let g = (rotation + i) % n;
-        lines[g].push(p.line);
-        senders[g].push(p.reply);
+        let s = (rotation + i) % k;
+        lines[s].push(p.line);
+        senders[s].push(p.reply);
     }
 
-    // fan the groups out concurrently on the shared worker pool; each
-    // group is one pipelined connection to its replica
-    let targets: Vec<(SocketAddr, Vec<String>)> = groups
+    // fan the slices out concurrently on the shared worker pool; each
+    // slice is one pipelined connection to its replica
+    let targets: Vec<(usize, Vec<String>)> = pool_groups.into_iter().zip(lines).collect();
+    let mut replies: Vec<Vec<Option<String>>> =
+        crate::runtime::pool::runtime().pool().par_map(&targets, |(g, ls)| {
+            forward_and_record(groups[*g][0], health.idx(*g, 0), ls, health, cfg.upstream_timeout)
+        });
+
+    // retry round: a slice whose replica failed goes ONCE to a different
+    // available replica (the failure above already fed the circuit, so a
+    // freshly dead replica drops out of selection after fail_threshold
+    // rounds)
+    let retry: Vec<(usize, usize, Vec<String>)> = targets
         .iter()
-        .map(|g| g[rotation % g.len()])
-        .zip(lines)
+        .enumerate()
+        .filter(|(si, (_, ls))| !ls.is_empty() && replies[*si].iter().all(Option::is_none))
+        .filter_map(|(si, (g, ls))| {
+            let others: Vec<usize> = (0..n)
+                .filter(|&g2| g2 != *g && health.is_available(health.idx(g2, 0)))
+                .collect();
+            let g2 = *others.get((rotation + si) % others.len().max(1))?;
+            Some((si, g2, ls.clone()))
+        })
         .collect();
-    let replies: Vec<Vec<Option<String>>> = crate::runtime::pool::runtime()
-        .pool()
-        .par_map(&targets, |(addr, ls)| forward_group(*addr, ls, cfg.upstream_timeout));
+    if !retry.is_empty() {
+        let resent: usize = retry.iter().map(|(_, _, ls)| ls.len()).sum();
+        stats.retries.fetch_add(resent, Ordering::Relaxed);
+        let second: Vec<Vec<Option<String>>> =
+            crate::runtime::pool::runtime().pool().par_map(&retry, |(_, g2, ls)| {
+                forward_and_record(
+                    groups[*g2][0],
+                    health.idx(*g2, 0),
+                    ls,
+                    health,
+                    cfg.upstream_timeout,
+                )
+            });
+        for ((si, _, _), rs) in retry.into_iter().zip(second) {
+            replies[si] = rs;
+        }
+    }
 
     stats.batches.fetch_add(1, Ordering::Relaxed);
     for (group_replies, group_senders) in replies.into_iter().zip(senders) {
@@ -382,21 +648,49 @@ fn fanout_replicated(
 }
 
 /// Scatter-gather round: broadcast the WHOLE batch to one member of every
-/// shard group, then stitch each request's per-shard replies together.
+/// shard group (skipping open circuits, retrying a failed member once on
+/// an available in-group sibling), then stitch each request's per-shard
+/// replies together.
 fn fanout_sharded(
     groups: &[Vec<SocketAddr>],
+    health: &HealthTable,
     rotation: usize,
     batch: Vec<Pending>,
     stats: &RouterStats,
     cfg: &RouterConfig,
 ) {
     let all_lines: Vec<String> = batch.iter().map(|p| p.line.clone()).collect();
-    let targets: Vec<SocketAddr> = groups.iter().map(|g| g[rotation % g.len()]).collect();
+    let targets: Vec<(usize, usize, SocketAddr)> = groups
+        .iter()
+        .enumerate()
+        .map(|(g, grp)| {
+            let (m, addr) = choose_member(grp, g, health, rotation);
+            (g, m, addr)
+        })
+        .collect();
     // one pipelined connection per shard, all shards concurrently on the
-    // shared worker pool
-    let per_shard: Vec<Vec<Option<String>>> = crate::runtime::pool::runtime()
-        .pool()
-        .par_map(&targets, |addr| forward_group(*addr, &all_lines, cfg.upstream_timeout));
+    // shared worker pool; the in-group retry runs inside each shard's slot
+    // so a healthy fleet never waits on a dead member twice
+    let per_shard: Vec<Vec<Option<String>>> =
+        crate::runtime::pool::runtime().pool().par_map(&targets, |&(g, m, addr)| {
+            let t = cfg.upstream_timeout;
+            let replies = forward_and_record(addr, health.idx(g, m), &all_lines, health, t);
+            if all_lines.is_empty() || replies.iter().any(Option::is_some) {
+                return replies;
+            }
+            // retry once on an available sibling of the SAME group — a
+            // shard with no live sibling keeps the failure (a partial
+            // label space is never served)
+            let grp = &groups[g];
+            let siblings: Vec<usize> = (0..grp.len())
+                .filter(|&m2| m2 != m && health.is_available(health.idx(g, m2)))
+                .collect();
+            let Some(&m2) = siblings.get(rotation % siblings.len().max(1)) else {
+                return replies;
+            };
+            stats.retries.fetch_add(all_lines.len(), Ordering::Relaxed);
+            forward_and_record(grp[m2], health.idx(g, m2), &all_lines, health, t)
+        });
 
     stats.batches.fetch_add(1, Ordering::Relaxed);
     for (i, p) in batch.into_iter().enumerate() {
@@ -496,9 +790,10 @@ fn merge_score_replies(line: &str, shard_replies: &[&str]) -> Option<String> {
             entries.push((label, score, tok));
         }
     }
-    // same total order as `top_k_indices`: score desc, then label asc
-    // (partial_cmp is total here — NaN was rejected above)
-    entries.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0)));
+    // same total order as `top_k_indices` (total_cmp, so −0.0 vs 0.0 ties
+    // break exactly the way the unsharded server breaks them): score desc,
+    // then label asc
+    entries.sort_by(|a, b| b.1.total_cmp(&a.1).then(a.0.cmp(&b.0)));
     entries.truncate(topk);
     let body: Vec<&str> = entries.iter().map(|&(_, _, tok)| tok).collect();
     Some(format!("OK {}", body.join(",")))
@@ -542,12 +837,14 @@ fn forward_group(addr: SocketAddr, lines: &[String], timeout: Duration) -> Vec<O
     }
 }
 
+#[allow(clippy::too_many_arguments)]
 fn handle_conn(
     stream: TcpStream,
     queue: Arc<Queue>,
     stats: Arc<RouterStats>,
     stop: Arc<AtomicBool>,
     groups: Arc<Vec<Vec<SocketAddr>>>,
+    health: Arc<HealthTable>,
     mode: RouterMode,
     upstream_timeout: Duration,
 ) -> std::io::Result<()> {
@@ -587,16 +884,24 @@ fn handle_conn(
         }
         if msg == "STATS" {
             let t = probe_timeout(upstream_timeout);
-            let versions: Vec<Option<u64>> =
-                probe_addrs(&groups).map(|a| query_version(a, t)).collect();
-            let known: Vec<u64> = versions.iter().copied().flatten().collect();
+            let probes = probe_fleet(&groups, &health, t);
+            let known: Vec<u64> =
+                probes.iter().filter_map(|m| m.as_ref().and_then(|m| m.version)).collect();
             let skew = match (known.iter().min(), known.iter().max()) {
                 (Some(lo), Some(hi)) => format!("{}", hi - lo),
                 _ => "?".into(),
             };
-            let versions: Vec<String> = versions
+            // cross-shard aggregation: the reachable members' own served/
+            // learned counters summed into fleet totals
+            let fleet_served: u64 = probes.iter().flatten().map(|m| m.served).sum();
+            let fleet_learned: u64 = probes.iter().flatten().map(|m| m.learned).sum();
+            let versions: Vec<String> = probes
                 .iter()
-                .map(|v| v.map_or_else(|| "?".into(), |id| id.to_string()))
+                .map(|m| {
+                    m.as_ref()
+                        .and_then(|m| m.version)
+                        .map_or_else(|| "?".into(), |id| id.to_string())
+                })
                 .collect();
             let sharded_suffix = match mode {
                 RouterMode::Sharded => format!(" shards={}", groups.len()),
@@ -608,11 +913,13 @@ fn handle_conn(
             let members: usize = groups.iter().map(|g| g.len()).sum();
             writeln!(
                 writer,
-                "STATS routed={} errors={} rejected={} batches={} replicas={members} versions={} skew={skew}{sharded_suffix}",
+                "STATS routed={} errors={} rejected={} retries={} batches={} replicas={members} unhealthy={} versions={} skew={skew} fleet_served={fleet_served} fleet_learned={fleet_learned}{sharded_suffix}",
                 stats.routed.load(Ordering::Relaxed),
                 stats.errors.load(Ordering::Relaxed),
                 stats.rejected.load(Ordering::Relaxed),
+                stats.retries.load(Ordering::Relaxed),
                 stats.batches.load(Ordering::Relaxed),
+                health.unhealthy(),
                 versions.join(","),
             )?;
             writer.flush()?;
@@ -696,7 +1003,15 @@ mod tests {
         assert!(stats.contains("skew=0"), "{stats}");
         // all three backends serve version 0 here
         assert!(stats.contains("versions=0,0,0"), "{stats}");
+        // a healthy fleet: no open circuits, no sibling retries, and the
+        // fleet totals sum the members' own counters (9 routed + the one
+        // direct probe against r1 above)
+        assert!(stats.contains("unhealthy=0"), "{stats}");
+        assert!(stats.contains("retries=0"), "{stats}");
+        assert!(stats.contains("fleet_served=10"), "{stats}");
+        assert!(stats.contains("fleet_learned=0"), "{stats}");
         assert_eq!(router.version_skew(), Some(0));
+        assert_eq!(router.unhealthy_members(), 0);
 
         assert!(text_request(router.addr, "LEARN 0 0:1.0").unwrap().starts_with("ERR"));
 
@@ -823,7 +1138,7 @@ mod tests {
     }
 
     #[test]
-    fn dead_replica_fails_its_group_not_the_router() {
+    fn dead_replica_is_routed_around_with_zero_client_errors() {
         let live = backend(9);
         // a bound-then-dropped listener gives a connection-refused address
         let dead_addr = {
@@ -832,26 +1147,125 @@ mod tests {
         };
         let cfg = RouterConfig {
             upstream_timeout: Duration::from_millis(500),
+            // long cooldown so the opened circuit cannot flap back to
+            // half-open under a slow test runner
+            health_cooldown: Duration::from_secs(60),
             ..Default::default()
         };
         let router = Router::start(vec![live.addr, dead_addr], cfg).unwrap();
-        let mut ok = 0;
-        let mut upstream_err = 0;
-        for _ in 0..8 {
+        let direct = text_request(live.addr, "SCORE 2 1:1.0").unwrap();
+        for i in 0..8 {
+            // every request answers OK: the ones that land on the dead
+            // replica are retried on the live sibling, and once the dead
+            // one's circuit opens the spread skips it entirely
             let reply = text_request(router.addr, "SCORE 2 1:1.0").unwrap();
-            if reply.starts_with("OK ") {
-                ok += 1;
-            } else {
-                assert_eq!(reply, "ERR upstream", "{reply}");
-                upstream_err += 1;
-            }
+            assert_eq!(reply, direct, "request {i} must be served by the live replica");
         }
-        assert!(ok > 0, "live replica must keep answering");
-        assert!(upstream_err > 0, "dead replica must surface as ERR upstream");
+        assert_eq!(router.stats.errors.load(Ordering::Relaxed), 0);
+        assert_eq!(router.stats.routed.load(Ordering::Relaxed), 8);
+        assert!(
+            router.stats.retries.load(Ordering::Relaxed) > 0,
+            "some requests must have been retried off the dead replica"
+        );
+        // the dead member's circuit is open (fan-out failures fed it), and
+        // STATS says so while still listing it in versions=
+        assert_eq!(router.unhealthy_members(), 1);
         let stats = text_request(router.addr, "STATS").unwrap();
         assert!(stats.contains("versions=0,?"), "{stats}");
         assert!(stats.contains("skew=0"), "{stats}");
+        assert!(stats.contains("unhealthy=1"), "{stats}");
+        assert!(stats.contains("errors=0"), "{stats}");
         router.shutdown();
         live.shutdown();
+    }
+
+    #[test]
+    fn probe_dead_member_is_skipped_by_fanout() {
+        // the satellite contract: observability probes feed the SAME
+        // health state fan-out uses, so a member that only probes (never
+        // saw traffic) still lands on the skip list
+        let live = backend(11);
+        let dead_addr = {
+            let l = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+            l.local_addr().unwrap()
+        };
+        let cfg = RouterConfig {
+            upstream_timeout: Duration::from_millis(500),
+            fail_threshold: 2,
+            health_cooldown: Duration::from_secs(60),
+            ..Default::default()
+        };
+        let router = Router::start(vec![live.addr, dead_addr], cfg).unwrap();
+        // two probe rounds (>= fail_threshold) open the dead circuit
+        // before ANY request has flowed
+        for _ in 0..2 {
+            let stats = text_request(router.addr, "STATS").unwrap();
+            assert!(stats.contains("versions=0,?"), "{stats}");
+        }
+        assert_eq!(router.unhealthy_members(), 1, "probe failures alone must open the circuit");
+        // fan-out now skips the dead member outright: every request lands
+        // on the live replica on the FIRST try (no retries needed)
+        let direct = text_request(live.addr, "SCORE 2 1:1.0").unwrap();
+        for _ in 0..6 {
+            assert_eq!(text_request(router.addr, "SCORE 2 1:1.0").unwrap(), direct);
+        }
+        assert_eq!(router.stats.errors.load(Ordering::Relaxed), 0);
+        assert_eq!(
+            router.stats.retries.load(Ordering::Relaxed),
+            0,
+            "a probe-dead member must be skipped, not discovered again by failing traffic"
+        );
+        router.shutdown();
+        live.shutdown();
+    }
+
+    #[test]
+    fn sharded_group_fails_over_to_its_sibling() {
+        use crate::model::format::testutil::sample_artifact;
+        use crate::model::split_artifact;
+        let art = sample_artifact(73, 14, 8, 8, 4);
+        let set = split_artifact(&art, 2).unwrap();
+        let full = ScoreServer::start(
+            MultiLabelModel { z: art.z.clone() },
+            ServerConfig::default(),
+        )
+        .unwrap();
+        // shard 0: one live member + one dead sibling; shard 1: live only
+        let mk = |k: usize| {
+            ScoreServer::start_sharded(
+                MultiLabelModel { z: set[k].z.clone() },
+                set[k].meta.shard,
+                ServerConfig::default(),
+            )
+            .unwrap()
+        };
+        let (s0, s1) = (mk(0), mk(1));
+        let dead_addr = {
+            let l = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+            l.local_addr().unwrap()
+        };
+        let cfg = RouterConfig {
+            upstream_timeout: Duration::from_millis(500),
+            health_cooldown: Duration::from_secs(60),
+            ..Default::default()
+        };
+        let router =
+            Router::start_sharded(vec![vec![dead_addr, s0.addr], vec![s1.addr]], cfg).unwrap();
+        let probe = "SCORE 3 0:1.0,7:-0.5";
+        let want = text_request(full.addr, probe).unwrap();
+        for i in 0..6 {
+            // whenever the rotation picks the dead member, the in-group
+            // retry lands on its live sibling — the merged reply stays
+            // bitwise the unsharded server's throughout
+            let got = text_request(router.addr, probe).unwrap();
+            assert_eq!(got, want, "request {i} must fail over inside the group");
+        }
+        assert_eq!(router.stats.errors.load(Ordering::Relaxed), 0);
+        assert!(router.stats.retries.load(Ordering::Relaxed) > 0, "sibling retry must have run");
+        assert_eq!(router.unhealthy_members(), 1);
+        router.shutdown();
+        s0.shutdown();
+        s1.shutdown();
+        full.shutdown();
     }
 }

@@ -29,6 +29,24 @@
 //! read-only (`LEARN`/`RELOAD` answer errors) but do answer `SHIP`, so
 //! fan-out can be chained.
 //!
+//! ## Failover: `PROMOTE`
+//!
+//! When a primary dies, any follower replica can be promoted in place
+//! (`fastpi promote ADDR`, wire verb `PROMOTE`): the replica verifies its
+//! latest local version is complete (a full parse + checksum pass), stops
+//! its sync loop, **bumps the store's promotion epoch**
+//! (`ModelStore::bump_epoch`), and installs a live lifecycle — from that
+//! reply on it answers `LEARN`/`RELOAD` as the new primary and keeps
+//! answering `SHIP`, so chained followers continue syncing (now from the
+//! new lineage, adopting the new epoch). Its store already mirrors the old
+//! primary's version ids, so the version sequence continues seamlessly.
+//! The epoch is the fence that makes this safe: a resurrected old primary
+//! still ships the pre-promotion epoch, and every store in the promoted
+//! lineage refuses lower-epoch snapshots (see `model/ship.rs`), so its
+//! stale publishes can never re-enter the fleet. `PROMOTE` on a server
+//! that was never a replica answers `ERR not a replica`; promoting an
+//! already-promoted replica is idempotent (`already=1`).
+//!
 //! **Version-skew semantics:** replica stores mirror primary ids, so
 //! `VERSION id=` compares directly across a fleet. A replica's id trails
 //! the primary's by at most one poll interval plus one snapshot transfer;
@@ -77,10 +95,11 @@
 //!                                          publish persists it; a RELOAD
 //!                                          before that reverts to the
 //!                                          store's latest and discards it)
-//! -> VERSION         <- VERSION id=... rank=... features=... labels=... updates=... pending=... shard=K/N
+//! -> VERSION         <- VERSION id=... rank=... features=... labels=... updates=... pending=... epoch=... shard=K/N
 //! -> RELOAD          <- OK version=...    (re-serve the store's latest)
+//! -> PROMOTE         <- OK version=... epoch=...   (follower → primary; see above)
 //! -> SHIP <have> [<k>/<n>]
-//!                    <- SNAPSHOT version=... [shard=<k>/<n>] bytes=...<raw body> | UNCHANGED version=...
+//!                    <- SNAPSHOT version=... [shard=<k>/<n>] epoch=... bytes=...<raw body> | UNCHANGED version=...
 //! -> PING            <- PONG
 //! -> STATS           <- STATS served=... batches=... rejected=... avg_batch=... queue_depth=... swaps=... learned=...
 //! -> QUIT            (closes the connection)
@@ -94,7 +113,7 @@
 //! disabled` / `ERR no model store` on a server started without the
 //! corresponding lifecycle pieces.
 
-use crate::model::{ship, ModelStore, OnlineUpdater, ShardRange};
+use crate::model::{ship, ModelStore, OnlineUpdater, ShardRange, UpdaterConfig};
 use crate::regress::metrics::top_k_indices;
 use crate::regress::MultiLabelModel;
 use crate::sparse::{Coo, Csr};
@@ -148,6 +167,11 @@ pub struct ReplicaConfig {
     /// `Some((k, n))` = follow only shard `k` of an `n`-shard set — the
     /// replica transfers and serves one label-space slice
     pub shard: ship::ShardSel,
+    /// the lifecycle configuration a `PROMOTE` installs. Must match the
+    /// rest of the fleet: a promoted shard member whose `learn_batch` or
+    /// re-solve thresholds differ from its siblings' would answer
+    /// broadcast LEARNs differently and break reply unanimity for good.
+    pub updater_cfg: UpdaterConfig,
 }
 
 impl Default for ReplicaConfig {
@@ -157,6 +181,7 @@ impl Default for ReplicaConfig {
             poll: Duration::from_millis(200),
             timeout: ship::SHIP_TIMEOUT,
             shard: None,
+            updater_cfg: UpdaterConfig::default(),
         }
     }
 }
@@ -171,34 +196,51 @@ pub struct ServerStats {
     pub swaps: AtomicUsize,
     /// LEARN examples accepted (buffered or folded) since start
     pub learned: AtomicUsize,
-    /// Coherent (served, batches) snapshot, packed 32/32 into one word and
-    /// stored by the batcher after both counters are bumped. `avg_batch`
-    /// reads this single atomic, so it never mixes a post-batch `served`
-    /// with a pre-batch `batches` (the two independent Relaxed loads it
-    /// used to do could). The halves wrap at 2³², so the average is
-    /// approximate beyond ~4.3 billion requests — acceptable for a
-    /// monitoring counter.
-    packed: AtomicU64,
+    /// Coherent full-width (served, batches) snapshot for `avg_batch`,
+    /// published by the batcher after both counters are bumped so a reader
+    /// never mixes a post-batch `served` with a pre-batch `batches`.
+    ///
+    /// Coherence story (a single-writer seqlock over two u64 atomics): the
+    /// batcher thread is the ONLY writer of `record_batch`; it bumps
+    /// `snap_seq` to an odd value, stores both counters, then bumps it
+    /// even again. Readers retry while the sequence is odd or changed
+    /// under them. The counters are full u64s — the old packed-32/32 word
+    /// wrapped both halves at 2³², which made `avg_batch` drift wrong on
+    /// any server past ~4.3 billion served requests. All accesses use
+    /// `SeqCst`: once per batch and per STATS line, the cost is noise, and
+    /// it keeps the ordering argument trivial.
+    snap_seq: AtomicU64,
+    snap_served: AtomicU64,
+    snap_batches: AtomicU64,
 }
 
 impl ServerStats {
-    /// Record one scored batch; called only from the batcher thread.
+    /// Record one scored batch. Single-writer: only the batcher thread
+    /// calls this (the seqlock's coherence depends on it).
     fn record_batch(&self, batch_len: usize) {
         let served = self.served.fetch_add(batch_len, Ordering::Relaxed) + batch_len;
         let batches = self.batches.fetch_add(1, Ordering::Relaxed) + 1;
-        let packed = ((batches as u64 & 0xFFFF_FFFF) << 32) | (served as u64 & 0xFFFF_FFFF);
-        self.packed.store(packed, Ordering::Relaxed);
+        let seq = self.snap_seq.load(Ordering::SeqCst);
+        self.snap_seq.store(seq + 1, Ordering::SeqCst); // odd: write in progress
+        self.snap_served.store(served as u64, Ordering::SeqCst);
+        self.snap_batches.store(batches as u64, Ordering::SeqCst);
+        self.snap_seq.store(seq + 2, Ordering::SeqCst); // even: coherent again
     }
 
     /// Mean requests per batch, computed from one coherent snapshot.
     pub fn avg_batch(&self) -> f64 {
-        let packed = self.packed.load(Ordering::Relaxed);
-        let batches = packed >> 32;
-        let served = packed & 0xFFFF_FFFF;
-        if batches == 0 {
-            0.0
-        } else {
-            served as f64 / batches as f64
+        loop {
+            let s1 = self.snap_seq.load(Ordering::SeqCst);
+            if s1 & 1 == 1 {
+                std::hint::spin_loop();
+                continue; // writer mid-publish
+            }
+            let served = self.snap_served.load(Ordering::SeqCst);
+            let batches = self.snap_batches.load(Ordering::SeqCst);
+            if self.snap_seq.load(Ordering::SeqCst) != s1 {
+                continue; // a publish raced us; re-read
+            }
+            return if batches == 0 { 0.0 } else { served as f64 / batches as f64 };
         }
     }
 }
@@ -270,6 +312,63 @@ impl Lifecycle {
     /// fold fully succeeds), so the lock stays usable.
     fn updater(&self) -> MutexGuard<'_, OnlineUpdater> {
         self.updater.lock().unwrap_or_else(|e| e.into_inner())
+    }
+}
+
+/// The server's mutable role. A primary starts with a lifecycle; a
+/// follower replica starts without one and `PROMOTE` installs it in place
+/// — connection handlers re-read the slot per request, so the role flips
+/// between two requests with zero downtime, exactly like a model swap.
+/// Lock order (cycle-free because this lock is always outermost): the
+/// `lifecycle` slot lock is taken before — never after — the updater or
+/// model-slot locks; request handlers clone the `Arc` out and release it
+/// before locking anything else, and promotion holds it across the
+/// verify/install sequence so two `PROMOTE`s serialize.
+struct Role {
+    /// `None` on a not-yet-promoted follower; handlers that need
+    /// LEARN/RELOAD clone the `Arc` out per request
+    lifecycle: Mutex<Option<Arc<Lifecycle>>>,
+    /// the store SHIP serves snapshots from: a replica re-ships its local
+    /// mirror (chained fan-out), a primary ships its own store
+    ship_store: Option<Arc<ModelStore>>,
+    /// present iff this server was started as a follower replica
+    replica: Option<ReplicaCtl>,
+}
+
+/// Follower-side control surface `PROMOTE` flips.
+struct ReplicaCtl {
+    /// the sync loop polls while this is true; cleared by promotion
+    syncing: AtomicBool,
+    /// which label-space slice this follower mirrors
+    shard: ship::ShardSel,
+    /// lifecycle configuration installed on promotion (fleet-matching —
+    /// see [`ReplicaConfig::updater_cfg`])
+    updater_cfg: UpdaterConfig,
+    /// held by the sync loop around each sync+install+swap iteration;
+    /// `PROMOTE` acquires it after clearing `syncing`, so once it holds
+    /// the gate no in-flight sync can install or swap anything further —
+    /// the promotion's final store read is genuinely final
+    sync_gate: Mutex<()>,
+    /// serializes concurrent `PROMOTE`s without stalling the per-request
+    /// `role.lifecycle()` reads (promotion does store I/O; holding the
+    /// lifecycle slot lock across it would block VERSION long enough for
+    /// the router's 2s probes to mark this member dead mid-takeover)
+    promoting: Mutex<()>,
+}
+
+impl Role {
+    fn lifecycle(&self) -> Option<Arc<Lifecycle>> {
+        self.lifecycle.lock().unwrap_or_else(|e| e.into_inner()).clone()
+    }
+
+    /// True while the replica sync loop should keep polling its primary.
+    fn sync_active(&self) -> bool {
+        self.replica.as_ref().is_some_and(|r| r.syncing.load(Ordering::Relaxed))
+    }
+
+    /// The store's promotion epoch (0 without a store — nothing to fence).
+    fn epoch(&self) -> u64 {
+        self.ship_store.as_ref().and_then(|s| s.epoch().ok()).unwrap_or(0)
     }
 }
 
@@ -421,6 +520,17 @@ impl ScoreServer {
             (None, Some(lc)) => lc.store.clone(),
             _ => None,
         };
+        let role = Arc::new(Role {
+            lifecycle: Mutex::new(lifecycle),
+            ship_store,
+            replica: replica.as_ref().map(|(_, rc)| ReplicaCtl {
+                syncing: AtomicBool::new(true),
+                shard: rc.shard,
+                updater_cfg: rc.updater_cfg.clone(),
+                sync_gate: Mutex::new(()),
+                promoting: Mutex::new(()),
+            }),
+        });
 
         // batcher thread
         let b_queue = queue.clone();
@@ -432,17 +542,17 @@ impl ScoreServer {
             .name("score-batcher".into())
             .spawn(move || batcher_loop(b_slot, b_queue, b_stop, b_stats, b_cfg))?;
 
-        // replica sync thread: poll the primary, install, hot-swap
+        // replica sync thread: poll the primary, install, hot-swap —
+        // until shutdown or a PROMOTE retires the follower role
         let sync_handle = match replica {
             Some((rstore, rc)) => {
                 let s_slot = slot.clone();
                 let s_stats = stats.clone();
                 let s_stop = stop.clone();
-                Some(
-                    std::thread::Builder::new()
-                        .name("replica-sync".into())
-                        .spawn(move || replica_sync_loop(rstore, rc, s_slot, s_stats, s_stop))?,
-                )
+                let s_role = role.clone();
+                Some(std::thread::Builder::new().name("replica-sync".into()).spawn(move || {
+                    replica_sync_loop(rstore, rc, s_slot, s_stats, s_stop, s_role)
+                })?)
             }
             None => None,
         };
@@ -452,6 +562,7 @@ impl ScoreServer {
         let a_stats = stats.clone();
         let a_queue = queue.clone();
         let a_slot = slot.clone();
+        let a_role = role.clone();
         let accept_handle = std::thread::Builder::new().name("score-accept".into()).spawn(
             move || {
                 let mut conns: Vec<std::thread::JoinHandle<()>> = Vec::new();
@@ -462,10 +573,9 @@ impl ScoreServer {
                             let st = a_stats.clone();
                             let stop2 = a_stop.clone();
                             let sl = a_slot.clone();
-                            let lc = lifecycle.clone();
-                            let ss = ship_store.clone();
+                            let rl = a_role.clone();
                             conns.push(std::thread::spawn(move || {
-                                let _ = handle_conn(stream, q, st, stop2, sl, lc, ss);
+                                let _ = handle_conn(stream, q, st, stop2, sl, rl);
                             }));
                             // prune finished handlers: follower SHIP polls
                             // open a fresh connection every poll interval,
@@ -522,13 +632,16 @@ impl ScoreServer {
 /// snapshot is installed into the local store and hot-swapped into the
 /// slot. Transient failures (primary down, mid-publish, network) are
 /// retried on the next poll — a replica keeps serving its current version
-/// no matter what happens to the primary.
+/// no matter what happens to the primary. The loop also exits when
+/// `PROMOTE` clears the role's sync flag: a promoted replica stops
+/// following its (dead) old primary and owns the lineage itself.
 fn replica_sync_loop(
     store: Arc<ModelStore>,
     rc: ReplicaConfig,
     slot: Arc<ModelSlot>,
     stats: Arc<ServerStats>,
     stop: Arc<AtomicBool>,
+    role: Arc<Role>,
 ) {
     // Per-IO-op timeout capped short (matching the cold-start loop): the
     // socket timeout applies per read/write syscall, so a slow-but-flowing
@@ -536,24 +649,35 @@ fn replica_sync_loop(
     // stall one attempt — and therefore shutdown's join of this thread —
     // by at most ~2s instead of the full rc.timeout.
     let step = rc.timeout.min(Duration::from_secs(2));
-    while !stop.load(Ordering::Relaxed) {
-        match ship::sync_shard_once(&store, rc.primary, rc.shard, step) {
-            Ok(Some((version, artifact))) => {
-                let serving = ServingModel {
-                    version,
-                    rank: artifact.rank(),
-                    shard: artifact.meta.shard,
-                    model: artifact.model(),
-                };
-                slot.swap(Arc::new(serving));
-                stats.swaps.fetch_add(1, Ordering::Relaxed);
+    while !stop.load(Ordering::Relaxed) && role.sync_active() {
+        {
+            // the gate brackets exactly one sync+install+swap, so a
+            // PROMOTE that cleared `syncing` and then acquired the gate
+            // is guaranteed no further install/swap happens behind it
+            let Some(rep) = role.replica.as_ref() else { return };
+            let _gate = rep.sync_gate.lock().unwrap_or_else(|e| e.into_inner());
+            if stop.load(Ordering::Relaxed) || !role.sync_active() {
+                return;
             }
-            Ok(None) => {}
-            Err(_) => {} // transient; retry next poll
+            match ship::sync_shard_once(&store, rc.primary, rc.shard, step) {
+                Ok(Some((version, artifact))) => {
+                    let serving = ServingModel {
+                        version,
+                        rank: artifact.rank(),
+                        shard: artifact.meta.shard,
+                        model: artifact.model(),
+                    };
+                    slot.swap(Arc::new(serving));
+                    stats.swaps.fetch_add(1, Ordering::Relaxed);
+                }
+                Ok(None) => {}
+                Err(_) => {} // transient; retry next poll
+            }
         }
-        // sleep in slices so shutdown stays responsive at long intervals
+        // sleep in slices so shutdown (and promotion) stays responsive at
+        // long poll intervals
         let deadline = Instant::now() + rc.poll;
-        while !stop.load(Ordering::Relaxed) {
+        while !stop.load(Ordering::Relaxed) && role.sync_active() {
             let now = Instant::now();
             if now >= deadline {
                 break;
@@ -644,8 +768,7 @@ fn handle_conn(
     stats: Arc<ServerStats>,
     stop: Arc<AtomicBool>,
     slot: Arc<ModelSlot>,
-    lifecycle: Option<Arc<Lifecycle>>,
-    ship_store: Option<Arc<ModelStore>>,
+    role: Arc<Role>,
 ) -> std::io::Result<()> {
     stream.set_read_timeout(Some(Duration::from_millis(200)))?;
     // Bounded writes too: SHIP streams multi-MB snapshot bodies, and a
@@ -701,7 +824,7 @@ fn handle_conn(
         }
         if msg == "VERSION" {
             let serving = slot.get();
-            let (updates, pending) = match &lifecycle {
+            let (updates, pending) = match role.lifecycle() {
                 Some(lc) => {
                     let up = lc.updater();
                     (up.artifact().meta.updates_applied, up.pending_len())
@@ -710,13 +833,14 @@ fn handle_conn(
             };
             writeln!(
                 writer,
-                "VERSION id={} rank={} features={} labels={} updates={} pending={} shard={}/{}",
+                "VERSION id={} rank={} features={} labels={} updates={} pending={} epoch={} shard={}/{}",
                 serving.version,
                 serving.rank,
                 serving.model.z.rows(),
                 serving.model.z.cols(),
                 updates,
                 pending,
+                role.epoch(),
                 serving.shard.index,
                 serving.shard.count,
             )?;
@@ -724,7 +848,12 @@ fn handle_conn(
             continue;
         }
         if msg == "RELOAD" {
-            writeln!(writer, "{}", handle_reload(&lifecycle, &slot, &stats))?;
+            writeln!(writer, "{}", handle_reload(&role.lifecycle(), &slot, &stats))?;
+            writer.flush()?;
+            continue;
+        }
+        if msg == "PROMOTE" {
+            writeln!(writer, "{}", handle_promote(&role, &slot, &stats))?;
             writer.flush()?;
             continue;
         }
@@ -736,7 +865,7 @@ fn handle_conn(
             let shard = shard_tok.and_then(ship::parse_shard_spec);
             let well_formed =
                 have.is_some() && (shard_tok.is_none() || shard.is_some()) && toks.next().is_none();
-            match (well_formed, have, &ship_store) {
+            match (well_formed, have, &role.ship_store) {
                 (true, Some(have), Some(store)) => {
                     ship::serve_ship(&mut writer, store, have, shard)?
                 }
@@ -752,7 +881,7 @@ fn handle_conn(
             continue;
         }
         if let Some(rest) = msg.strip_prefix("LEARN ") {
-            writeln!(writer, "{}", handle_learn(rest, &lifecycle, &slot, &stats))?;
+            writeln!(writer, "{}", handle_learn(rest, &role.lifecycle(), &slot, &stats))?;
             writer.flush()?;
             continue;
         }
@@ -776,6 +905,16 @@ fn handle_conn(
                 }
                 queue.notify_one();
                 match rx.recv_timeout(Duration::from_secs(30)) {
+                    // NaN scores (a degenerate model, not bad input — the
+                    // parser already rejects non-finite features) answer
+                    // ERR internal: `top_k_indices` ranks them totally
+                    // instead of panicking now, but a NaN token on the
+                    // wire would not round-trip through the scatter-gather
+                    // merge, and the pre-total_cmp behavior for this case
+                    // was ERR internal too
+                    Ok(Some(result)) if result.iter().any(|(_, s)| s.is_nan()) => {
+                        writeln!(writer, "ERR internal")?
+                    }
                     Ok(Some(result)) => {
                         // shortest round-trip f64 formatting: a router can
                         // parse, merge across shards, and re-emit these
@@ -795,6 +934,84 @@ fn handle_conn(
             }
         }
     }
+}
+
+/// Handle PROMOTE: turn a follower replica into the primary of its
+/// lineage, in place.
+///
+/// Order matters: (1) a preflight load verifies the latest local version
+/// is COMPLETE — a full parse, which re-walks the framing checksum, dims,
+/// and shard header — before anything is torn down, so a replica with a
+/// broken store refuses promotion and just keeps following; (2) stop the
+/// sync loop AND wait out any in-flight sync iteration (the sync gate),
+/// so nothing can install or swap behind the promotion; (3) re-load the
+/// now-final latest — a sync that landed between (1) and (2) is thereby
+/// kept, not dropped, and the slot can never regress; (4) bump the
+/// store's promotion epoch — from here on every snapshot this node ships
+/// carries the new epoch and every store in the lineage refuses the old
+/// primary's stale ones; (5) install the live lifecycle (with the
+/// fleet-matching [`ReplicaConfig::updater_cfg`]) and swap the verified
+/// artifact in. The store I/O all happens under the dedicated promotion
+/// lock, never the lifecycle slot lock, so concurrent VERSION/LEARN
+/// handlers — and the router's 2s health probes — stay fast throughout.
+fn handle_promote(role: &Role, slot: &ModelSlot, stats: &ServerStats) -> String {
+    let Some(rep) = &role.replica else {
+        return "ERR not a replica".into();
+    };
+    let Some(store) = &role.ship_store else {
+        // unreachable by construction (start_replica always wires a store)
+        return "ERR no model store".into();
+    };
+    let _promotion = rep.promoting.lock().unwrap_or_else(|e| e.into_inner());
+    if role.lifecycle().is_some() {
+        return format!(
+            "OK version={} epoch={} already=1",
+            slot.get().version,
+            store.epoch().unwrap_or(0)
+        );
+    }
+    let load = || match rep.shard {
+        Some((k, n)) => store.load_latest_shard(k, n),
+        None => store.load_latest(),
+    };
+    // (1) preflight: a broken/empty store refuses promotion while the
+    // follower keeps following
+    match load() {
+        Ok(Some(_)) => {}
+        Ok(None) => return "ERR promote: empty store".into(),
+        Err(e) => return format!("ERR promote: {e}"),
+    }
+    // (2) stop the sync loop and wait out an in-flight iteration
+    rep.syncing.store(false, Ordering::Relaxed);
+    let _quiesced = rep.sync_gate.lock().unwrap_or_else(|e| e.into_inner());
+    // (3) the final follower state (the store read moments ago, so a
+    // failure here is a genuine I/O fault; sync is already stopped, and
+    // retrying PROMOTE re-runs this load)
+    let (version, artifact) = match load() {
+        Ok(Some(v)) => v,
+        Ok(None) => return "ERR promote: empty store".into(),
+        Err(e) => return format!("ERR promote: {e} (sync stopped; retry PROMOTE)"),
+    };
+    // (4) fence the old primary's lineage out
+    let epoch = match store.bump_epoch() {
+        Ok(e) => e,
+        Err(e) => return format!("ERR promote: {e} (sync stopped; retry PROMOTE)"),
+    };
+    // (5) go live as the primary
+    let serving = ServingModel {
+        version,
+        rank: artifact.rank(),
+        shard: artifact.meta.shard,
+        model: artifact.model(),
+    };
+    let updater = OnlineUpdater::new(artifact, rep.updater_cfg.clone());
+    *role.lifecycle.lock().unwrap_or_else(|e| e.into_inner()) = Some(Arc::new(Lifecycle {
+        updater: Mutex::new(updater),
+        store: Some(store.clone()),
+    }));
+    slot.swap(Arc::new(serving));
+    stats.swaps.fetch_add(1, Ordering::Relaxed);
+    format!("OK version={version} epoch={epoch}")
 }
 
 /// Handle RELOAD: re-serve the store's latest published version — of this
@@ -1127,9 +1344,29 @@ mod tests {
         stats.record_batch(10);
         stats.record_batch(6);
         assert!((stats.avg_batch() - 8.0).abs() < 1e-12);
-        // raw counters agree with the packed snapshot once quiescent
+        // raw counters agree with the snapshot once quiescent
         assert_eq!(stats.served.load(Ordering::Relaxed), 16);
         assert_eq!(stats.batches.load(Ordering::Relaxed), 2);
+    }
+
+    #[test]
+    fn avg_batch_survives_the_u32_boundary() {
+        // the old packed-32/32 snapshot wrapped both halves at 2^32; a
+        // long-lived server crossing ~4.3 billion served requests then
+        // reported a garbage average. Seed the counters just below the
+        // boundary and cross it.
+        let stats = ServerStats::default();
+        let start = u32::MAX as usize - 2;
+        stats.served.store(start, Ordering::Relaxed);
+        stats.batches.store(1, Ordering::Relaxed);
+        stats.record_batch(8); // served crosses 2^32
+        let want = (start + 8) as f64 / 2.0;
+        assert!(
+            (stats.avg_batch() - want).abs() < 1e-6,
+            "avg_batch wrapped at the 2^32 boundary: got {}, want {want}",
+            stats.avg_batch()
+        );
+        assert_eq!(stats.served.load(Ordering::Relaxed), start + 8);
     }
 
     #[test]
@@ -1152,7 +1389,10 @@ mod tests {
         let m = model(6, 3);
         let server = ScoreServer::start(m, ServerConfig::default()).unwrap();
         let v = text_request(server.addr, "VERSION").unwrap();
-        assert_eq!(v, "VERSION id=0 rank=0 features=6 labels=3 updates=0 pending=0 shard=0/1");
+        assert_eq!(
+            v,
+            "VERSION id=0 rank=0 features=6 labels=3 updates=0 pending=0 epoch=0 shard=0/1"
+        );
         assert_eq!(server.current_version(), 0);
         let r = text_request(server.addr, "RELOAD").unwrap();
         assert!(r.starts_with("ERR"), "{r}");
@@ -1185,7 +1425,7 @@ mod tests {
             primary: primary.addr,
             poll: Duration::from_millis(10),
             timeout: Duration::from_secs(10),
-            shard: None,
+            ..Default::default()
         };
         let replica = ScoreServer::start_replica(
             ModelStore::open(&dir_r).unwrap(),
@@ -1218,7 +1458,7 @@ mod tests {
         // and the replica re-ships its mirror (chained fan-out)
         match crate::model::ship::fetch_snapshot(replica.addr, 0, Duration::from_secs(10)).unwrap()
         {
-            crate::model::ShipReply::Snapshot { version, bytes } => {
+            crate::model::ShipReply::Snapshot { version, bytes, .. } => {
                 assert_eq!(version, 2);
                 assert_eq!(bytes.bytes(), std::fs::read(dir_p.join("v000002.fpim")).unwrap());
             }
@@ -1226,6 +1466,77 @@ mod tests {
         }
         replica.shutdown();
         primary.shutdown();
+    }
+
+    #[test]
+    fn promote_turns_a_replica_into_a_learning_primary() {
+        use crate::model::format::testutil::sample_artifact;
+        use crate::model::UpdaterConfig;
+        let dir_p = std::env::temp_dir().join("fastpi_serve_promote_p");
+        let dir_r = std::env::temp_dir().join("fastpi_serve_promote_r");
+        for d in [&dir_p, &dir_r] {
+            let _ = std::fs::remove_dir_all(d);
+        }
+        let store_p = ModelStore::open(&dir_p).unwrap();
+        let art = sample_artifact(5, 12, 6, 4, 3);
+        assert_eq!(store_p.publish(&art).unwrap(), 1);
+        let primary = ScoreServer::start_lifecycle(
+            OnlineUpdater::new(art, UpdaterConfig::default()),
+            Some(store_p),
+            1,
+            ServerConfig::default(),
+        )
+        .unwrap();
+        // a primary is not promotable — it already owns its lineage
+        assert_eq!(text_request(primary.addr, "PROMOTE").unwrap(), "ERR not a replica");
+
+        let rc = ReplicaConfig {
+            primary: primary.addr,
+            poll: Duration::from_millis(10),
+            timeout: Duration::from_secs(10),
+            ..Default::default()
+        };
+        let replica = ScoreServer::start_replica(
+            ModelStore::open(&dir_r).unwrap(),
+            rc,
+            ServerConfig::default(),
+        )
+        .unwrap();
+        assert_eq!(replica.current_version(), 1);
+        // read-only before promotion
+        assert!(text_request(replica.addr, "LEARN 0 0:1.0").unwrap().starts_with("ERR"));
+
+        // the primary dies; the follower takes over in place
+        primary.shutdown();
+        let reply = text_request(replica.addr, "PROMOTE").unwrap();
+        assert_eq!(reply, "OK version=1 epoch=1", "promotion must verify v1 and fence epoch 1");
+        // idempotent re-promote
+        let again = text_request(replica.addr, "PROMOTE").unwrap();
+        assert!(again.starts_with("OK version=1 epoch=1 already=1"), "{again}");
+        // VERSION advertises the new epoch
+        let v = text_request(replica.addr, "VERSION").unwrap();
+        assert!(v.contains(" epoch=1 "), "{v}");
+
+        // the promoted node now LEARNs, publishing into its own store
+        // under the continued version sequence
+        let l = text_request(replica.addr, "LEARN 0 0:1.0,5:-0.5").unwrap();
+        assert!(l.starts_with("OK version=2 pending=0"), "{l}");
+        assert_eq!(replica.current_version(), 2);
+        assert!(dir_r.join("v000002.fpim").exists(), "fold must publish locally");
+        // RELOAD works too — it is a primary in every observable way
+        assert_eq!(text_request(replica.addr, "RELOAD").unwrap(), "OK version=2");
+
+        // and it still SHIPs, now stamping the promoted epoch, so chained
+        // followers adopt the fence
+        let dir_f = std::env::temp_dir().join("fastpi_serve_promote_f");
+        let _ = std::fs::remove_dir_all(&dir_f);
+        let follower = ModelStore::open(&dir_f).unwrap();
+        let synced =
+            crate::model::ship::sync_once(&follower, replica.addr, Duration::from_secs(10))
+                .unwrap();
+        assert_eq!(synced.unwrap().0, 2);
+        assert_eq!(follower.epoch().unwrap(), 1, "chained follower must adopt the epoch");
+        replica.shutdown();
     }
 
     #[test]

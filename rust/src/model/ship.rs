@@ -13,13 +13,23 @@
 //! -> SHIP <have_id>                      (full model)
 //! -> SHIP <have_id> <k>/<n>              (one label-space shard — see
 //!                                         `model/shard.rs`)
-//! <- SNAPSHOT version=<id> bytes=<n>\n   followed by n raw bytes: the
+//! <- SNAPSHOT version=<id> epoch=<e> bytes=<n>\n
+//!                                        followed by n raw bytes: the
 //!                                        primary's v<id>.fpim file verbatim
-//! <- SNAPSHOT version=<id> shard=<k>/<n> bytes=<n>\n
+//! <- SNAPSHOT version=<id> shard=<k>/<n> epoch=<e> bytes=<n>\n
 //!                                        the v<id>.s<k>of<n>.fpim slice
 //! <- UNCHANGED version=<id>              (the primary has nothing newer)
 //! <- ERR <reason>
 //! ```
+//!
+//! `epoch=` is the **promotion fence** (see `ModelStore::epoch`): a
+//! snapshot stamped with an epoch LOWER than the receiving store's is
+//! refused before its bytes can land — that is what keeps a resurrected
+//! old primary (still at the pre-promotion epoch, possibly with diverged
+//! newer version ids) from pushing stale publishes into a promoted
+//! lineage. A snapshot with a *newer* epoch is installed and the receiving
+//! store adopts the epoch, which walks the fence down replica chains. An
+//! absent token reads as epoch 0 (pre-fence primaries).
 //!
 //! The shard form is what lets a follower that serves one slice of a wide
 //! model sync **only its slice** — a shard replica never transfers or
@@ -79,8 +89,9 @@ pub enum ShipReply {
     Unchanged { version: u64 },
     /// A new snapshot: the verbatim `FPIM` file bytes for `version`,
     /// framing-validated (FNV-1a) exactly once, on receipt — the witness
-    /// type carries that proof to parse/install.
-    Snapshot { version: u64, bytes: ValidatedModelBytes },
+    /// type carries that proof to parse/install. `epoch` is the shipping
+    /// store's promotion epoch (0 when the primary never advertised one).
+    Snapshot { version: u64, epoch: u64, bytes: ValidatedModelBytes },
 }
 
 fn bad_header(header: &str) -> Error {
@@ -125,7 +136,7 @@ pub fn fetch_shard_snapshot(
     let Some(rest) = header.strip_prefix("SNAPSHOT ") else {
         return Err(Error::Invalid(format!("ship: primary said `{header}`")));
     };
-    let (mut version, mut nbytes, mut got_shard) = (None, None, None);
+    let (mut version, mut nbytes, mut got_shard, mut epoch) = (None, None, None, 0u64);
     for tok in rest.split_whitespace() {
         if let Some(v) = tok.strip_prefix("version=") {
             version = v.parse::<u64>().ok();
@@ -133,6 +144,8 @@ pub fn fetch_shard_snapshot(
             nbytes = v.parse::<u64>().ok();
         } else if let Some(v) = tok.strip_prefix("shard=") {
             got_shard = parse_shard_spec(v);
+        } else if let Some(v) = tok.strip_prefix("epoch=") {
+            epoch = v.parse::<u64>().map_err(|_| bad_header(header))?;
         }
     }
     let (Some(version), Some(nbytes)) = (version, nbytes) else {
@@ -163,7 +176,7 @@ pub fn fetch_shard_snapshot(
     // FNV-1a verified on receipt — the ONLY hash pass this snapshot gets;
     // parse and install ride the returned witness
     let bytes = format::validate_model_bytes(bytes, "shipped snapshot")?;
-    Ok(ShipReply::Snapshot { version, bytes })
+    Ok(ShipReply::Snapshot { version, epoch, bytes })
 }
 
 /// Parse a `<k>/<n>` shard spec (used by the wire tokens and the CLI).
@@ -202,32 +215,49 @@ pub fn sync_shard_once(
     };
     match fetch_shard_snapshot(primary, have, shard, timeout)? {
         ShipReply::Unchanged { .. } => Ok(None),
-        ShipReply::Snapshot { version, bytes } => {
+        ShipReply::Snapshot { version, epoch, bytes } => {
             if version <= have {
                 // a primary serving an older store than ours — never regress
                 return Ok(None);
             }
+            // the promotion fence: a primary whose epoch trails ours is a
+            // resurrected pre-promotion node — its publishes are stale by
+            // definition and must not land, whatever their version ids say
+            let local_epoch = store.epoch()?;
+            if epoch < local_epoch {
+                return Err(Error::Invalid(format!(
+                    "ship: refusing snapshot v{version} from stale-epoch primary \
+                     (primary epoch {epoch} < local epoch {local_epoch})"
+                )));
+            }
             let artifact = bytes.parse("shipped snapshot")?;
             let art_shard = artifact.meta.shard;
             match shard {
-                Some((k, n)) => {
-                    if (art_shard.index, art_shard.count) != (k, n) {
-                        return Err(Error::Invalid(format!(
-                            "ship: snapshot labels itself shard {}/{}, expected {k}/{n}",
-                            art_shard.index, art_shard.count
-                        )));
-                    }
-                    store.install_shard_snapshot(version, k, n, &bytes)?;
+                Some((k, n)) if (art_shard.index, art_shard.count) != (k, n) => {
+                    return Err(Error::Invalid(format!(
+                        "ship: snapshot labels itself shard {}/{}, expected {k}/{n}",
+                        art_shard.index, art_shard.count
+                    )));
                 }
-                None => {
-                    if !art_shard.is_full() {
-                        return Err(Error::Invalid(format!(
-                            "ship: expected a full model, got shard {}/{}",
-                            art_shard.index, art_shard.count
-                        )));
-                    }
-                    store.install_snapshot(version, &bytes)?;
+                None if !art_shard.is_full() => {
+                    return Err(Error::Invalid(format!(
+                        "ship: expected a full model, got shard {}/{}",
+                        art_shard.index, art_shard.count
+                    )));
                 }
+                _ => {}
+            }
+            // Adopt a promoted primary's newer epoch BEFORE the bytes land
+            // (no-op otherwise): adopting early is conservative — a crash
+            // between the two leaves the store fencing slightly ahead of
+            // its bytes, which only tightens the guard. The reverse order
+            // would leave a crash window where promoted-lineage bytes sit
+            // under the OLD epoch and a resurrected pre-promotion primary
+            // could slip its diverged publishes past the fence.
+            store.set_epoch(epoch)?;
+            match shard {
+                Some((k, n)) => store.install_shard_snapshot(version, k, n, &bytes)?,
+                None => store.install_snapshot(version, &bytes)?,
             }
             Ok(Some((version, artifact)))
         }
@@ -283,11 +313,24 @@ pub fn serve_ship<W: Write>(
                 // completed latest is what the follower already holds
                 writeln!(w, "UNCHANGED version={id}")?;
             } else {
-                match shard {
-                    Some((k, n)) => {
-                        writeln!(w, "SNAPSHOT version={id} shard={k}/{n} bytes={}", bytes.len())?
+                // stamp the store's promotion epoch so receivers can fence
+                // out a resurrected pre-promotion primary
+                let epoch = match store.epoch() {
+                    Ok(e) => e,
+                    Err(e) => {
+                        writeln!(w, "ERR ship failed: {e}")?;
+                        return w.flush();
                     }
-                    None => writeln!(w, "SNAPSHOT version={id} bytes={}", bytes.len())?,
+                };
+                match shard {
+                    Some((k, n)) => writeln!(
+                        w,
+                        "SNAPSHOT version={id} shard={k}/{n} epoch={epoch} bytes={}",
+                        bytes.len()
+                    )?,
+                    None => {
+                        writeln!(w, "SNAPSHOT version={id} epoch={epoch} bytes={}", bytes.len())?
+                    }
                 }
                 w.write_all(bytes.bytes())?;
             }
@@ -401,6 +444,40 @@ mod tests {
         for bad in ["3/3", "4/3", "x/3", "1/0", "0/1", "1", "1/", "/3"] {
             assert_eq!(parse_shard_spec(bad), None, "{bad}");
         }
+    }
+
+    #[test]
+    fn stale_epoch_snapshot_is_refused_and_newer_epoch_is_adopted() {
+        let src_dir = fresh_dir("epoch_src");
+        let dst_dir = fresh_dir("epoch_dst");
+        let src = ModelStore::open(&src_dir).unwrap();
+        src.publish(&sample_artifact(3, 12, 6, 4, 3)).unwrap();
+
+        // the receiving store was promoted (epoch 2); the "primary" is a
+        // resurrected pre-promotion node still at epoch 0 with a NEWER
+        // version id — exactly the diverged-old-primary shape
+        let dst = ModelStore::open(&dst_dir).unwrap();
+        dst.bump_epoch().unwrap();
+        dst.bump_epoch().unwrap();
+        let (addr, h) = one_shot_primary(src_dir.clone());
+        let err = sync_once(&dst, addr, SHIP_TIMEOUT).unwrap_err();
+        h.join().unwrap();
+        assert!(
+            format!("{err}").contains("epoch"),
+            "stale-epoch publish must be refused by the fence, got: {err}"
+        );
+        assert!(!dst_dir.join("v000001.fpim").exists(), "refused bytes must not land");
+
+        // the other direction: a follower of a PROMOTED primary installs
+        // the snapshot and adopts the higher epoch (fence walks the chain)
+        src.set_epoch(7).unwrap();
+        let (addr, h) = one_shot_primary(src_dir.clone());
+        let follower_dir = fresh_dir("epoch_follower");
+        let follower = ModelStore::open(&follower_dir).unwrap();
+        let synced = sync_once(&follower, addr, SHIP_TIMEOUT).unwrap();
+        h.join().unwrap();
+        assert_eq!(synced.unwrap().0, 1);
+        assert_eq!(follower.epoch().unwrap(), 7, "follower must adopt the primary's epoch");
     }
 
     #[test]

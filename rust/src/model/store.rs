@@ -51,6 +51,9 @@ const LOAD_RETRIES: usize = 5;
 
 const MANIFEST: &str = "MANIFEST";
 
+/// Store-side promotion fence (see [`ModelStore::epoch`]).
+const EPOCH: &str = "EPOCH";
+
 /// Parse a version filename: `v<id>.fpim` → `(id, None)`,
 /// `v<id>.s<k>of<n>.fpim` → `(id, Some((k, n)))`. Anything else → `None`.
 fn parse_version_file(name: &str) -> Option<(u64, Option<(u64, u64)>)> {
@@ -563,6 +566,59 @@ impl ModelStore {
         }
     }
 
+    // -- promotion epoch ---------------------------------------------------
+
+    /// The store's promotion epoch: 0 for a store that has never been
+    /// promoted, bumped by one each time a follower replica holding this
+    /// store is promoted to primary ([`Self::bump_epoch`]).
+    ///
+    /// The epoch is the failover fence: snapshot shipping stamps it on
+    /// every `SNAPSHOT` reply, and a receiving store REFUSES a snapshot
+    /// whose epoch is lower than its own (see `model/ship.rs`) — so a
+    /// resurrected old primary, still at the pre-promotion epoch, cannot
+    /// push its stale (possibly diverged) publishes into the promoted
+    /// lineage. A follower of a *newer*-epoch primary adopts that epoch on
+    /// install, which is how the fence propagates down replica chains.
+    pub fn epoch(&self) -> Result<u64> {
+        match std::fs::read_to_string(self.dir.join(EPOCH)) {
+            Ok(text) => Ok(text
+                .lines()
+                .find_map(|l| l.trim().strip_prefix("epoch=")?.parse().ok())
+                .unwrap_or(0)),
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => Ok(0),
+            Err(e) => Err(Error::Io(e)),
+        }
+    }
+
+    /// Adopt `epoch` if it is ahead of the local one (no-op otherwise —
+    /// the fence, like the MANIFEST pointer, only ever moves forward).
+    pub fn set_epoch(&self, epoch: u64) -> Result<()> {
+        if epoch <= self.epoch()? {
+            return Ok(());
+        }
+        let tmp = self.dir.join(format!(
+            ".tmp-epoch-{}-{}",
+            std::process::id(),
+            TMP_SEQ.fetch_add(1, Ordering::Relaxed)
+        ));
+        std::fs::write(&tmp, format!("epoch={epoch}\n")).map_err(|e| {
+            let _ = std::fs::remove_file(&tmp);
+            Error::Io(e)
+        })?;
+        std::fs::rename(&tmp, self.dir.join(EPOCH)).map_err(|e| {
+            let _ = std::fs::remove_file(&tmp);
+            Error::Io(e)
+        })?;
+        Ok(())
+    }
+
+    /// Advance the epoch by one (a promotion) and return the new value.
+    pub fn bump_epoch(&self) -> Result<u64> {
+        let next = self.epoch()? + 1;
+        self.set_epoch(next)?;
+        Ok(next)
+    }
+
     fn write_manifest(&self, id: u64) -> Result<()> {
         let tmp = self.dir.join(format!(
             ".tmp-manifest-{}-{}",
@@ -975,6 +1031,29 @@ mod tests {
         assert!(store.versions().unwrap().contains(&pinned), "pinned version survived gc");
         let (id, _) = store.load_latest().unwrap().unwrap();
         assert_eq!(id, 1 + publishers * rounds as u64, "latest is the newest publish");
+    }
+
+    #[test]
+    fn epoch_starts_at_zero_bumps_and_never_regresses() {
+        let dir = fresh_dir("epoch");
+        let store = ModelStore::open(&dir).unwrap();
+        assert_eq!(store.epoch().unwrap(), 0, "fresh store is epoch 0");
+        assert_eq!(store.bump_epoch().unwrap(), 1);
+        assert_eq!(store.epoch().unwrap(), 1);
+        // adopting a newer epoch (a follower of a promoted primary) works
+        store.set_epoch(5).unwrap();
+        assert_eq!(store.epoch().unwrap(), 5);
+        // ...but an older one is a silent no-op: the fence never regresses
+        store.set_epoch(2).unwrap();
+        assert_eq!(store.epoch().unwrap(), 5);
+        // survives reopen, and gc never touches the EPOCH file
+        let store = ModelStore::open(&dir).unwrap();
+        assert_eq!(store.epoch().unwrap(), 5);
+        store.publish(&sample_artifact(1, 10, 5, 4, 2)).unwrap();
+        store.publish(&sample_artifact(2, 10, 5, 4, 2)).unwrap();
+        store.gc(1).unwrap();
+        assert_eq!(store.epoch().unwrap(), 5);
+        assert_eq!(store.bump_epoch().unwrap(), 6);
     }
 
     #[test]

@@ -5,10 +5,15 @@ use crate::dense::Matrix;
 use crate::sparse::Csr;
 
 /// Indices of the k largest entries of `scores`, descending (ties by index).
+///
+/// Ranking uses `f64::total_cmp`, so a NaN score (a degenerate model can
+/// produce one even though the serving path rejects non-finite *inputs*)
+/// ranks deterministically instead of panicking the whole metric/batch:
+/// IEEE total order puts positive NaN above +∞ and negative NaN below −∞.
 pub fn top_k_indices(scores: &[f64], k: usize) -> Vec<usize> {
     let mut idx: Vec<usize> = (0..scores.len()).collect();
     let k = k.min(scores.len());
-    idx.sort_by(|&a, &b| scores[b].partial_cmp(&scores[a]).unwrap().then(a.cmp(&b)));
+    idx.sort_by(|&a, &b| scores[b].total_cmp(&scores[a]).then(a.cmp(&b)));
     idx.truncate(k);
     idx
 }
@@ -87,6 +92,28 @@ mod tests {
         assert_eq!(top_k_indices(&[0.1, 0.9, 0.5], 2), vec![1, 2]);
         assert_eq!(top_k_indices(&[1.0, 1.0], 1), vec![0]); // tie → lower index
         assert_eq!(top_k_indices(&[0.3], 5), vec![0]);
+    }
+
+    #[test]
+    fn nan_scores_rank_deterministically_instead_of_panicking() {
+        // regression: partial_cmp().unwrap() panicked metric computation on
+        // a single NaN score. total_cmp ranks it: +NaN above everything,
+        // -NaN below everything, everything else unchanged.
+        let scores = [0.5, f64::NAN, 0.9, -f64::NAN];
+        let top = top_k_indices(&scores, 4);
+        assert_eq!(top, vec![1, 2, 0, 3]);
+        assert_eq!(top_k_indices(&scores, 2), vec![1, 2]);
+
+        // ...and the row-level metrics stay total on NaN-bearing scores
+        let m = Matrix::from_rows(&[&[f64::NAN, 0.5, 0.1], &[0.2, 0.8, -f64::NAN]]);
+        let y = labels(&[&[1], &[1]], 3);
+        let p = precision_at_k(&m, &y, 1);
+        assert!((0.0..=1.0).contains(&p), "P@1 must stay bounded: {p}");
+        // row 0: +NaN outranks the true label → miss; row 1: −NaN sinks to
+        // the bottom and label 1 wins → hit
+        assert!((p - 0.5).abs() < 1e-12, "{p}");
+        let nd = ndcg_at_k(&m, &y, 2);
+        assert!(nd.is_finite() && (0.0..=1.0 + 1e-12).contains(&nd), "{nd}");
     }
 
     #[test]

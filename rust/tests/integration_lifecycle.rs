@@ -160,7 +160,7 @@ fn replicated_cluster_learn_matches_offline_replay_bitwise() {
             primary: primary.addr,
             poll: Duration::from_millis(10),
             timeout: Duration::from_secs(30),
-            shard: None,
+            ..Default::default()
         };
         let replica = ScoreServer::start_replica(
             ModelStore::open(&rdir).unwrap(),
@@ -261,6 +261,119 @@ fn replicated_cluster_learn_matches_offline_replay_bitwise() {
         r.shutdown();
     }
     primary.shutdown();
+}
+
+/// Failover differential property: folds applied on the OLD primary before
+/// it dies, plus folds applied on the PROMOTED follower after takeover,
+/// produce — bitwise — the model an offline replay of all the rows
+/// produces on one node. Promotion is lineage-preserving, not just
+/// service-preserving. The epoch fence then keeps a resurrected old
+/// primary's diverged publishes out of the promoted lineage.
+#[test]
+fn promotion_preserves_the_lineage_bitwise_and_fences_the_old_primary() {
+    let (store, ds) = trained_store("promote", 55, 200);
+    let (v1, artifact) = store.load_latest().unwrap().unwrap();
+    let offline_start = artifact.clone();
+    let primary_dir = store.dir().to_path_buf();
+
+    let primary = ScoreServer::start_lifecycle(
+        OnlineUpdater::new(artifact, UpdaterConfig::default()),
+        Some(store),
+        v1,
+        ServerConfig::default(),
+    )
+    .unwrap();
+    let rdir = fresh_store("promote_replica");
+    let replica = ScoreServer::start_replica(
+        ModelStore::open(&rdir).unwrap(),
+        ReplicaConfig {
+            primary: primary.addr,
+            poll: Duration::from_millis(10),
+            timeout: Duration::from_secs(30),
+            ..Default::default()
+        },
+        ServerConfig::default(),
+    )
+    .unwrap();
+
+    let mut offline = OnlineUpdater::new(offline_start, UpdaterConfig::default());
+    // fold two rows on the old primary and let the follower catch up
+    for (i, row) in [200usize, 201].into_iter().enumerate() {
+        let (line, features, labels) = learn_example(&ds, row);
+        let reply = text_request(primary.addr, &line).unwrap();
+        assert!(reply.starts_with(&format!("OK version={} ", v1 + 1 + i as u64)), "{reply}");
+        offline.push_example(features, labels).unwrap().expect("learn_batch=1 folds");
+    }
+    let deadline = Instant::now() + Duration::from_secs(30);
+    while replica.current_version() != v1 + 2 {
+        assert!(Instant::now() < deadline, "follower never caught up to v3");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+
+    // the primary dies; promote the follower in place
+    primary.shutdown();
+    let reply = text_request(replica.addr, "PROMOTE").unwrap();
+    assert_eq!(reply, format!("OK version={} epoch=1", v1 + 2));
+
+    // fold two more rows on the NEW primary — same lineage, continued ids
+    for (i, row) in [202usize, 203].into_iter().enumerate() {
+        let (line, features, labels) = learn_example(&ds, row);
+        let reply = text_request(replica.addr, &line).unwrap();
+        assert!(
+            reply.starts_with(&format!("OK version={} pending=0", v1 + 3 + i as u64)),
+            "post-promotion LEARN {row}: {reply}"
+        );
+        offline.push_example(features, labels).unwrap().expect("learn_batch=1 folds");
+    }
+    let v_final = v1 + 4;
+    assert_eq!(replica.current_version(), v_final);
+
+    // bitwise: the promoted node's latest published model ≡ one node
+    // folding all four rows without any failover in between
+    let (v, online) = ModelStore::open(&rdir).unwrap().load_latest().unwrap().unwrap();
+    assert_eq!(v, v_final);
+    let replay = offline.artifact();
+    assert_eq!(online.svd.u.data(), replay.svd.u.data(), "U diverged across promotion");
+    assert_eq!(online.svd.s, replay.svd.s, "Σ diverged across promotion");
+    assert_eq!(online.svd.vt.data(), replay.svd.vt.data(), "Vᵀ diverged across promotion");
+    assert_eq!(online.c.data(), replay.c.data(), "C diverged across promotion");
+    assert_eq!(online.z.data(), replay.z.data(), "Z diverged across promotion");
+
+    // the resurrected old primary diverges (it never saw rows 202/203 and
+    // folds a different one), then tries to ship: the epoch fence refuses
+    // its stale publishes — version ids alone would NOT have (both
+    // lineages are past v3 by now)
+    let (pv, part) = ModelStore::open(&primary_dir).unwrap().load_latest().unwrap().unwrap();
+    assert_eq!(pv, v1 + 2, "old store stopped at the pre-crash version");
+    let resurrected = ScoreServer::start_lifecycle(
+        OnlineUpdater::new(part, UpdaterConfig::default()),
+        Some(ModelStore::open(&primary_dir).unwrap()),
+        pv,
+        ServerConfig::default(),
+    )
+    .unwrap();
+    for row in [250usize, 251, 252] {
+        let (line, _, _) = learn_example(&ds, row);
+        let reply = text_request(resurrected.addr, &line).unwrap();
+        assert!(reply.starts_with("OK version="), "{reply}");
+    }
+    // the diverged old lineage is now at v5 — NEWER than the promoted
+    // node's v5 by id, but epoch 0 < 1: the pull must be refused
+    let promoted_store = ModelStore::open(&rdir).unwrap();
+    let err = fastpi::model::sync_once(&promoted_store, resurrected.addr, Duration::from_secs(10))
+        .unwrap_err();
+    assert!(
+        format!("{err}").contains("epoch"),
+        "stale-epoch primary must be fenced out, got: {err}"
+    );
+    assert_eq!(
+        promoted_store.load_latest().unwrap().unwrap().1.z.data(),
+        online.z.data(),
+        "the promoted lineage must be untouched by the refused pull"
+    );
+
+    resurrected.shutdown();
+    replica.shutdown();
 }
 
 #[test]

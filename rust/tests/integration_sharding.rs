@@ -143,6 +143,11 @@ fn sharded_fleet_is_bitwise_identical_to_unsharded_node() {
     }
     let stats = text_request(router.addr, "STATS").unwrap();
     assert!(stats.contains(" skew=0") && stats.contains("shards=3"), "{stats}");
+    // cross-shard STATS aggregation: fleet totals sum the members' own
+    // counters. 4 routed SCOREs so far, each scored by every shard → 12;
+    // 3 broadcast LEARNs, each folded by every shard → 9.
+    assert!(stats.contains("fleet_served=12"), "{stats}");
+    assert!(stats.contains("fleet_learned=9"), "{stats}");
 
     // post-LEARN scoring still byte-identical
     for row in [1usize, 9, 17] {
@@ -180,6 +185,90 @@ fn sharded_fleet_is_bitwise_identical_to_unsharded_node() {
     reference.shutdown();
 }
 
+/// Fleet resilience, in-process: every shard group holds TWO
+/// interchangeable members; killing one member per group mid-traffic must
+/// be client-invisible — zero errors, every reply still bitwise the
+/// unsharded server's — and the router's health state must name the dead.
+#[test]
+fn killing_one_member_per_group_serves_degraded_without_errors() {
+    use std::time::Duration;
+
+    let (artifact, ds) = trained(64, 150);
+    let reference = ScoreServer::start(
+        fastpi::regress::MultiLabelModel { z: artifact.z.clone() },
+        ServerConfig::default(),
+    )
+    .unwrap();
+    let set = split_artifact(&artifact, 3).unwrap();
+    let member = |k: usize| {
+        ScoreServer::start_sharded(
+            fastpi::regress::MultiLabelModel { z: set[k].z.clone() },
+            set[k].meta.shard,
+            ServerConfig::default(),
+        )
+        .unwrap()
+    };
+    let keepers: Vec<ScoreServer> = (0..3).map(member).collect();
+    let victims: Vec<ScoreServer> = (0..3).map(member).collect();
+    let router = Router::start_sharded(
+        keepers.iter().zip(&victims).map(|(a, b)| vec![a.addr, b.addr]).collect(),
+        RouterConfig {
+            upstream_timeout: Duration::from_secs(2),
+            fail_threshold: 2,
+            // long cooldown: the dead members' circuits stay deterministically
+            // open for the whole test
+            health_cooldown: Duration::from_secs(120),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+
+    let probes: Vec<String> = [0usize, 3, 7, 11].iter().map(|&r| probe_line(&ds, r, 5)).collect();
+    let want: Vec<String> =
+        probes.iter().map(|p| text_request(reference.addr, p).unwrap()).collect();
+    for w in &want {
+        assert!(w.starts_with("OK "), "{w}");
+    }
+
+    // healthy phase
+    for (p, w) in probes.iter().zip(&want) {
+        assert_eq!(&text_request(router.addr, p).unwrap(), w);
+    }
+
+    // kill one member per group, then keep hammering: in-group retry +
+    // open circuits must keep every reply identical, with zero errors
+    for v in victims {
+        v.shutdown();
+    }
+    for round in 0..8 {
+        for (p, w) in probes.iter().zip(&want) {
+            let got = text_request(router.addr, p).unwrap();
+            assert_eq!(&got, w, "round {round} diverged while degraded");
+        }
+    }
+    assert_eq!(router.stats.errors.load(std::sync::atomic::Ordering::Relaxed), 0);
+    assert_eq!(router.stats.rejected.load(std::sync::atomic::Ordering::Relaxed), 0);
+    assert_eq!(
+        router.stats.routed.load(std::sync::atomic::Ordering::Relaxed),
+        probes.len() * 9,
+        "every request must have been answered"
+    );
+
+    // the health circuits name exactly the killed members (probe rounds
+    // feed the same state, so two STATS calls make it deterministic)
+    let _ = text_request(router.addr, "STATS").unwrap();
+    let stats = text_request(router.addr, "STATS").unwrap();
+    assert!(stats.contains("unhealthy=3"), "{stats}");
+    assert!(stats.contains("errors=0"), "{stats}");
+    assert_eq!(router.unhealthy_members(), 3);
+
+    router.shutdown();
+    for k in keepers {
+        k.shutdown();
+    }
+    reference.shutdown();
+}
+
 /// A shard replica (`--shard K/N --replica-of`) mirrors ONLY its slice
 /// and serves it at the primary's version ids.
 #[test]
@@ -209,6 +298,7 @@ fn shard_replica_syncs_only_its_slice() {
         poll: Duration::from_millis(10),
         timeout: Duration::from_secs(30),
         shard: Some((1, 3)),
+        ..Default::default()
     };
     let replica = ScoreServer::start_replica(
         ModelStore::open(&replica_dir).unwrap(),
