@@ -120,7 +120,7 @@ fn main() {
             let lats = hammer(server.addr, clients, n_requests, &ds.a);
             let wall = t0.elapsed().as_secs_f64();
             let mut sorted = lats.clone();
-            sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            sorted.sort_by(|a, b| a.total_cmp(b));
             let rps = lats.len() as f64 / wall;
             if clients == 32 {
                 match threads {
@@ -184,7 +184,7 @@ fn main() {
         let steady = hammer(addr, clients, n_requests, &ds.a);
         let steady_wall = t0.elapsed().as_secs_f64();
         let mut steady_sorted = steady.clone();
-        steady_sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        steady_sorted.sort_by(|a, b| a.total_cmp(b));
         rep.add(
             &[("policy", "hotswap/steady".into()), ("clients", clients.to_string())],
             &[
@@ -223,7 +223,7 @@ fn main() {
         });
         let storm_wall = t0.elapsed().as_secs_f64();
         let mut storm_sorted = storm.clone();
-        storm_sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        storm_sorted.sort_by(|a, b| a.total_cmp(b));
         rep.add(
             &[("policy", "hotswap/storm".into()), ("clients", clients.to_string())],
             &[
@@ -365,7 +365,7 @@ fn main() {
             props
         });
         let mut sorted = props.clone();
-        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        sorted.sort_by(|a, b| a.total_cmp(b));
         rep.add(
             &[("policy", "replica_propagation".into()), ("clients", n_replicas.to_string())],
             &[
@@ -445,7 +445,7 @@ fn main() {
             let lats = hammer(addr, clients, n_requests, &ds.a);
             let wall = t0.elapsed().as_secs_f64();
             let mut sorted = lats.clone();
-            sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            sorted.sort_by(|a, b| a.total_cmp(b));
             let (p50, p95) = (pct(&sorted, 0.5), pct(&sorted, 0.95));
             rep.add(
                 &[("policy", policy.into()), ("clients", clients.to_string())],

@@ -94,7 +94,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     });
 
     let mut lats: Vec<f64> = lat_and_hits.iter().map(|(l, _)| *l).collect();
-    lats.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    lats.sort_by(|a, b| a.total_cmp(b));
     let total: f64 = lats.iter().sum();
     let served = lats.len();
     let hit_rate = lat_and_hits.iter().filter(|(_, h)| *h).count() as f64 / served as f64;

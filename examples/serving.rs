@@ -60,7 +60,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         });
         let wall = t_all.elapsed().as_secs_f64();
         let mut sorted = lats.clone();
-        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        sorted.sort_by(|a, b| a.total_cmp(b));
         let served = server.stats.served.load(Ordering::Relaxed);
         let batches = server.stats.batches.load(Ordering::Relaxed).max(1);
         println!(

@@ -1,0 +1,103 @@
+//! `float-cmp-unwrap`: `partial_cmp(..).unwrap()` / `.expect(..)` panics
+//! on NaN. This is the PR-5 bug class (`regress/metrics.rs` ranked NaN
+//! scores by panicking); `f64::total_cmp` gives the IEEE-754 total order
+//! (-NaN < -inf < ... < -0.0 < +0.0 < ... < +inf < +NaN) and cannot fail,
+//! so it is required everywhere — test code included, because benches and
+//! tests feed the same comparators.
+
+use super::{skip_group, Finding, SourceFile};
+
+pub(crate) fn check(f: &SourceFile) -> Vec<Finding> {
+    let toks = f.code();
+    let mut out = Vec::new();
+    let mut i = 0;
+    while i < toks.len() {
+        if toks[i].is_ident("partial_cmp")
+            && i + 1 < toks.len()
+            && toks[i + 1].is_punct('(')
+        {
+            if let Some(j) = skip_group(&toks, i + 1, '(', ')') {
+                if j + 2 < toks.len()
+                    && toks[j].is_punct('.')
+                    && (toks[j + 1].is_ident("unwrap") || toks[j + 1].is_ident("expect"))
+                    && toks[j + 2].is_punct('(')
+                {
+                    out.push(Finding {
+                        file: f.path.clone(),
+                        line: toks[i].line,
+                        col: toks[i].col,
+                        lint: "float-cmp-unwrap",
+                        message: format!(
+                            "`partial_cmp(..).{}(..)` panics on NaN — use `total_cmp` \
+                             (IEEE total order)",
+                            toks[j + 1].text
+                        ),
+                        fix: "rewrite `a.partial_cmp(&b).unwrap()` as `a.total_cmp(&b)`"
+                            .to_string(),
+                    });
+                }
+            }
+        }
+        i += 1;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::analyze::analyze_sources;
+
+    fn run(src: &str) -> crate::analyze::Report {
+        analyze_sources(&[("rust/src/dense/x.rs".to_string(), src.to_string())])
+    }
+
+    #[test]
+    fn fires_on_unwrap_and_expect() {
+        let src = "fn f(xs: &mut [f64]) {\n\
+                   xs.sort_by(|a, b| a.partial_cmp(b).unwrap());\n\
+                   xs.sort_by(|a, b| a.partial_cmp(b).expect(\"nan\"));\n\
+                   }\n";
+        let r = run(src);
+        assert_eq!(r.findings.len(), 2, "{:?}", r.findings);
+        assert!(r.findings.iter().all(|f| f.lint == "float-cmp-unwrap"));
+        assert_eq!(r.findings[0].line, 2);
+        assert_eq!(r.findings[1].line, 3);
+    }
+
+    #[test]
+    fn fires_even_in_test_code() {
+        let src = "#[cfg(test)]\nmod tests {\n\
+                   fn f(a: f64, b: f64) -> bool { a.partial_cmp(&b).unwrap().is_eq() }\n\
+                   }\n";
+        let r = run(src);
+        assert_eq!(r.findings.len(), 1);
+    }
+
+    #[test]
+    fn total_cmp_and_bare_partial_cmp_are_clean() {
+        let src = "fn f(xs: &mut [f64]) { xs.sort_by(|a, b| a.total_cmp(b)); }\n\
+                   fn g(a: f64, b: f64) -> Option<std::cmp::Ordering> { a.partial_cmp(&b) }\n\
+                   fn h(a: f64, b: f64) -> std::cmp::Ordering {\n\
+                   a.partial_cmp(&b).unwrap_or(std::cmp::Ordering::Equal)\n\
+                   }\n";
+        let r = run(src);
+        assert!(r.findings.is_empty(), "{:?}", r.findings);
+    }
+
+    #[test]
+    fn mention_in_string_or_comment_is_clean() {
+        let src = "// partial_cmp(..).unwrap() is the bug class\n\
+                   const S: &str = \"partial_cmp(x).unwrap()\";\n";
+        let r = run(src);
+        assert!(r.findings.is_empty(), "{:?}", r.findings);
+    }
+
+    #[test]
+    fn reasoned_allow_silences() {
+        let src = "// analyze::allow(float-cmp-unwrap): fixture input is finite by assert above\n\
+                   fn f(a: f64, b: f64) -> bool { a.partial_cmp(&b).unwrap().is_eq() }\n";
+        let r = run(src);
+        assert!(r.findings.is_empty(), "{:?}", r.findings);
+        assert_eq!(r.suppressed, 1);
+    }
+}

@@ -1,0 +1,547 @@
+//! Minimal Rust tokenizer for `fastpi analyze`.
+//!
+//! The analyzer needs exactly enough lexical structure to tell code from
+//! comments and string contents: every lint matches token sequences, so a
+//! `partial_cmp` inside a string literal or a `{` inside a comment must
+//! never be mistaken for the real thing. The grammar covered:
+//!
+//! * line comments (`//`, and the doc forms `///` and `//!`)
+//! * block comments with nesting (`/* /* */ */`, doc forms `/** */`, `/*! */`)
+//! * string literals with escapes, byte strings (`b"..."`), and raw
+//!   strings with any number of hashes (`r#"..."#`, `br##"..."##`)
+//! * char literals vs lifetimes (`'a'` vs `'a`), including escape forms
+//! * identifiers/keywords, raw identifiers (`r#match`)
+//! * numeric literals (decimal, float with exponent, `0x`/`0o`/`0b`)
+//! * everything else as single-character punctuation tokens
+//!
+//! This is NOT a full lexer (no multi-char operator tokens, no literal
+//! suffix validation) — lints that care about `::` or `->` match the
+//! consecutive single-char punctuation tokens instead.
+
+/// Token class. `Comment { doc }` distinguishes `///`+`//!` (and the block
+/// equivalents) from plain comments: suppression markers live in plain
+/// comments, protocol tables live in doc comments.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum TokKind {
+    Ident,
+    Lifetime,
+    CharLit,
+    StrLit,
+    NumLit,
+    Punct,
+    Comment { doc: bool },
+}
+
+/// One token with its 1-based source position.
+#[derive(Debug, Clone)]
+pub struct Token {
+    pub kind: TokKind,
+    /// Ident/NumLit/Lifetime: the spelling. StrLit: the inner content
+    /// (quotes and raw-string hashes stripped, escapes left undecoded).
+    /// Comment: the text after the comment marker. Punct: one character.
+    pub text: String,
+    pub line: usize,
+    pub col: usize,
+}
+
+impl Token {
+    pub fn is_ident(&self, s: &str) -> bool {
+        self.kind == TokKind::Ident && self.text == s
+    }
+
+    pub fn is_punct(&self, c: char) -> bool {
+        self.kind == TokKind::Punct && self.text.chars().next() == Some(c) && self.text.len() == c.len_utf8()
+    }
+
+    pub fn is_comment(&self) -> bool {
+        matches!(self.kind, TokKind::Comment { .. })
+    }
+
+    pub fn is_doc_comment(&self) -> bool {
+        matches!(self.kind, TokKind::Comment { doc: true })
+    }
+}
+
+/// Tokenize `src`. Never fails: unterminated constructs run to EOF.
+pub fn lex(src: &str) -> Vec<Token> {
+    Lexer::new(src).run()
+}
+
+struct Lexer {
+    chars: Vec<char>,
+    i: usize,
+    line: usize,
+    col: usize,
+    out: Vec<Token>,
+}
+
+fn is_ident_start(c: char) -> bool {
+    c.is_alphabetic() || c == '_'
+}
+
+fn is_ident_continue(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+impl Lexer {
+    fn new(src: &str) -> Lexer {
+        Lexer { chars: src.chars().collect(), i: 0, line: 1, col: 1, out: Vec::new() }
+    }
+
+    fn peek(&self, k: usize) -> Option<char> {
+        self.chars.get(self.i + k).copied()
+    }
+
+    fn bump(&mut self) -> Option<char> {
+        let c = self.chars.get(self.i).copied()?;
+        self.i += 1;
+        if c == '\n' {
+            self.line += 1;
+            self.col = 1;
+        } else {
+            self.col += 1;
+        }
+        Some(c)
+    }
+
+    fn emit(&mut self, kind: TokKind, text: String, line: usize, col: usize) {
+        self.out.push(Token { kind, text, line, col });
+    }
+
+    fn run(mut self) -> Vec<Token> {
+        while let Some(c) = self.peek(0) {
+            let (line, col) = (self.line, self.col);
+            if c.is_whitespace() {
+                self.bump();
+            } else if c == '/' && self.peek(1) == Some('/') {
+                self.line_comment(line, col);
+            } else if c == '/' && self.peek(1) == Some('*') {
+                self.block_comment(line, col);
+            } else if c == '"' {
+                self.string(line, col);
+            } else if c == '\'' {
+                self.char_or_lifetime(line, col);
+            } else if is_ident_start(c) {
+                self.ident_or_prefixed(line, col);
+            } else if c.is_ascii_digit() {
+                self.number(line, col);
+            } else {
+                self.bump();
+                self.emit(TokKind::Punct, c.to_string(), line, col);
+            }
+        }
+        self.out
+    }
+
+    fn line_comment(&mut self, line: usize, col: usize) {
+        self.bump();
+        self.bump();
+        // `///` and `//!` are doc comments; strip the marker character
+        let doc = matches!(self.peek(0), Some('/') | Some('!'));
+        if doc {
+            self.bump();
+        }
+        let mut text = String::new();
+        while let Some(c) = self.peek(0) {
+            if c == '\n' {
+                break;
+            }
+            text.push(c);
+            self.bump();
+        }
+        self.emit(TokKind::Comment { doc }, text, line, col);
+    }
+
+    fn block_comment(&mut self, line: usize, col: usize) {
+        self.bump();
+        self.bump();
+        // `/**` and `/*!` are doc comments, but `/**/` is an empty plain one
+        let doc = match (self.peek(0), self.peek(1)) {
+            (Some('*'), Some('/')) => false,
+            (Some('*'), _) | (Some('!'), _) => true,
+            _ => false,
+        };
+        let mut depth = 1usize;
+        let mut text = String::new();
+        while let Some(c) = self.peek(0) {
+            if c == '/' && self.peek(1) == Some('*') {
+                depth += 1;
+                self.bump();
+                self.bump();
+                text.push_str("/*");
+            } else if c == '*' && self.peek(1) == Some('/') {
+                depth -= 1;
+                self.bump();
+                self.bump();
+                if depth == 0 {
+                    break;
+                }
+                text.push_str("*/");
+            } else {
+                text.push(c);
+                self.bump();
+            }
+        }
+        self.emit(TokKind::Comment { doc }, text, line, col);
+    }
+
+    /// Normal (escaped) string body; the opening quote is not yet consumed.
+    fn string(&mut self, line: usize, col: usize) {
+        self.bump();
+        let mut text = String::new();
+        while let Some(c) = self.bump() {
+            if c == '\\' {
+                text.push(c);
+                if let Some(e) = self.bump() {
+                    text.push(e);
+                }
+            } else if c == '"' {
+                break;
+            } else {
+                text.push(c);
+            }
+        }
+        self.emit(TokKind::StrLit, text, line, col);
+    }
+
+    /// Raw string body after `r`/`br` and `hashes` `#`s; the opening quote
+    /// is not yet consumed.
+    fn raw_string(&mut self, hashes: usize, line: usize, col: usize) {
+        self.bump();
+        let mut text = String::new();
+        'outer: while let Some(c) = self.bump() {
+            if c == '"' {
+                let mut k = 0;
+                while k < hashes {
+                    if self.peek(k) != Some('#') {
+                        text.push('"');
+                        for _ in 0..k {
+                            text.push('#');
+                            self.bump();
+                        }
+                        continue 'outer;
+                    }
+                    k += 1;
+                }
+                for _ in 0..hashes {
+                    self.bump();
+                }
+                break;
+            }
+            text.push(c);
+        }
+        self.emit(TokKind::StrLit, text, line, col);
+    }
+
+    fn char_or_lifetime(&mut self, line: usize, col: usize) {
+        self.bump(); // the opening '
+        match self.peek(0) {
+            Some('\\') => {
+                // escaped char literal: consume through the closing quote
+                let mut text = String::new();
+                while let Some(c) = self.bump() {
+                    if c == '\'' {
+                        break;
+                    }
+                    text.push(c);
+                    if c == '\\' {
+                        if let Some(e) = self.bump() {
+                            text.push(e);
+                        }
+                    }
+                }
+                self.emit(TokKind::CharLit, text, line, col);
+            }
+            Some(c) if is_ident_start(c) => {
+                // `'a'` is a char literal, `'a` (no closing quote) a lifetime
+                let mut name = String::new();
+                while let Some(c) = self.peek(0) {
+                    if !is_ident_continue(c) {
+                        break;
+                    }
+                    name.push(c);
+                    self.bump();
+                }
+                if self.peek(0) == Some('\'') && name.chars().count() == 1 {
+                    self.bump();
+                    self.emit(TokKind::CharLit, name, line, col);
+                } else {
+                    self.emit(TokKind::Lifetime, name, line, col);
+                }
+            }
+            Some(c) => {
+                // a non-identifier char literal like `' '` or `'%'`
+                self.bump();
+                if self.peek(0) == Some('\'') {
+                    self.bump();
+                }
+                self.emit(TokKind::CharLit, c.to_string(), line, col);
+            }
+            None => self.emit(TokKind::Punct, "'".to_string(), line, col),
+        }
+    }
+
+    fn ident_or_prefixed(&mut self, line: usize, col: usize) {
+        let mut name = String::new();
+        while let Some(c) = self.peek(0) {
+            if !is_ident_continue(c) {
+                break;
+            }
+            name.push(c);
+            self.bump();
+        }
+        match name.as_str() {
+            // possible string-literal prefixes
+            "r" | "br" => match self.peek(0) {
+                Some('"') => self.raw_string(0, line, col),
+                Some('#') => {
+                    let mut hashes = 0;
+                    while self.peek(0) == Some('#') {
+                        hashes += 1;
+                        self.bump();
+                    }
+                    if self.peek(0) == Some('"') {
+                        self.raw_string(hashes, line, col);
+                    } else {
+                        // raw identifier `r#match`: emit the inner ident
+                        let mut raw = String::new();
+                        while let Some(c) = self.peek(0) {
+                            if !is_ident_continue(c) {
+                                break;
+                            }
+                            raw.push(c);
+                            self.bump();
+                        }
+                        self.emit(TokKind::Ident, raw, line, col);
+                    }
+                }
+                _ => self.emit(TokKind::Ident, name, line, col),
+            },
+            "b" => match self.peek(0) {
+                Some('"') => self.string(line, col),
+                Some('\'') => self.char_or_lifetime(line, col),
+                _ => self.emit(TokKind::Ident, name, line, col),
+            },
+            _ => self.emit(TokKind::Ident, name, line, col),
+        }
+    }
+
+    fn number(&mut self, line: usize, col: usize) {
+        let mut text = String::new();
+        let radix_prefix = self.peek(0) == Some('0')
+            && matches!(self.peek(1), Some('x') | Some('o') | Some('b'));
+        if radix_prefix {
+            text.push(self.bump().unwrap_or('0'));
+            text.push(self.bump().unwrap_or('x'));
+            while let Some(c) = self.peek(0) {
+                if c.is_ascii_hexdigit() || c == '_' {
+                    text.push(c);
+                    self.bump();
+                } else {
+                    break;
+                }
+            }
+        } else {
+            while let Some(c) = self.peek(0) {
+                if c.is_ascii_digit() || c == '_' {
+                    text.push(c);
+                    self.bump();
+                } else {
+                    break;
+                }
+            }
+            // fractional part — only if a digit follows the dot, so range
+            // expressions (`0..n`) and method calls (`1.max(x)`) survive
+            if self.peek(0) == Some('.') && self.peek(1).is_some_and(|c| c.is_ascii_digit()) {
+                text.push('.');
+                self.bump();
+                while let Some(c) = self.peek(0) {
+                    if c.is_ascii_digit() || c == '_' {
+                        text.push(c);
+                        self.bump();
+                    } else {
+                        break;
+                    }
+                }
+            }
+            // exponent
+            if matches!(self.peek(0), Some('e') | Some('E')) {
+                let sign = matches!(self.peek(1), Some('+') | Some('-'));
+                let digit_at = if sign { 2 } else { 1 };
+                if self.peek(digit_at).is_some_and(|c| c.is_ascii_digit()) {
+                    text.push(self.bump().unwrap_or('e'));
+                    if sign {
+                        text.push(self.bump().unwrap_or('+'));
+                    }
+                    while let Some(c) = self.peek(0) {
+                        if c.is_ascii_digit() || c == '_' {
+                            text.push(c);
+                            self.bump();
+                        } else {
+                            break;
+                        }
+                    }
+                }
+            }
+        }
+        // type suffix (`1.0f64`, `7usize`)
+        while let Some(c) = self.peek(0) {
+            if is_ident_continue(c) {
+                text.push(c);
+                self.bump();
+            } else {
+                break;
+            }
+        }
+        self.emit(TokKind::NumLit, text, line, col);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn kinds(src: &str) -> Vec<(TokKind, String)> {
+        lex(src).into_iter().map(|t| (t.kind, t.text)).collect()
+    }
+
+    #[test]
+    fn idents_numbers_punct() {
+        let toks = kinds("let x = 42 + y_2;");
+        assert_eq!(
+            toks,
+            vec![
+                (TokKind::Ident, "let".to_string()),
+                (TokKind::Ident, "x".to_string()),
+                (TokKind::Punct, "=".to_string()),
+                (TokKind::NumLit, "42".to_string()),
+                (TokKind::Punct, "+".to_string()),
+                (TokKind::Ident, "y_2".to_string()),
+                (TokKind::Punct, ";".to_string()),
+            ]
+        );
+    }
+
+    #[test]
+    fn line_and_doc_comments() {
+        let toks = lex("// plain\n/// doc\n//! inner\nx");
+        assert_eq!(toks[0].kind, TokKind::Comment { doc: false });
+        assert_eq!(toks[0].text, " plain");
+        assert_eq!(toks[1].kind, TokKind::Comment { doc: true });
+        assert_eq!(toks[1].text, " doc");
+        assert_eq!(toks[2].kind, TokKind::Comment { doc: true });
+        assert_eq!(toks[2].text, " inner");
+        assert!(toks[3].is_ident("x"));
+    }
+
+    #[test]
+    fn nested_block_comments() {
+        let toks = lex("a /* outer /* inner */ still outer */ b");
+        assert!(toks[0].is_ident("a"));
+        assert_eq!(toks[1].kind, TokKind::Comment { doc: false });
+        assert!(toks[1].text.contains("inner"));
+        assert!(toks[1].text.contains("still outer"));
+        assert!(toks[2].is_ident("b"));
+    }
+
+    #[test]
+    fn code_inside_strings_is_not_tokenized() {
+        // `//` and `/*` inside a string must not start a comment, and
+        // braces inside strings must not appear as punctuation
+        let toks = lex(r#"let s = "// not a comment /* nor this */ {brace}"; y"#);
+        let strs: Vec<&Token> = toks.iter().filter(|t| t.kind == TokKind::StrLit).collect();
+        assert_eq!(strs.len(), 1);
+        assert!(strs[0].text.contains("not a comment"));
+        assert!(!toks.iter().any(|t| t.is_comment()));
+        assert!(toks.iter().any(|t| t.is_ident("y")));
+        assert!(!toks.iter().any(|t| t.is_punct('{')));
+    }
+
+    #[test]
+    fn escaped_quotes_in_strings() {
+        let toks = lex(r#""a \" b" c"#);
+        assert_eq!(toks[0].kind, TokKind::StrLit);
+        assert_eq!(toks[0].text, "a \\\" b");
+        assert!(toks[1].is_ident("c"));
+    }
+
+    #[test]
+    fn raw_strings_with_hashes() {
+        let toks = lex(r###"let s = r#"inner "quoted" text"#; t"###);
+        let strs: Vec<&Token> = toks.iter().filter(|t| t.kind == TokKind::StrLit).collect();
+        assert_eq!(strs.len(), 1);
+        assert_eq!(strs[0].text, r#"inner "quoted" text"#);
+        assert!(toks.iter().any(|t| t.is_ident("t")));
+    }
+
+    #[test]
+    fn byte_strings_and_byte_chars() {
+        let toks = lex(r#"b"FPIM" b'\n' b_ident"#);
+        assert_eq!(toks[0].kind, TokKind::StrLit);
+        assert_eq!(toks[0].text, "FPIM");
+        assert_eq!(toks[1].kind, TokKind::CharLit);
+        assert!(toks[2].is_ident("b_ident"));
+    }
+
+    #[test]
+    fn char_vs_lifetime_disambiguation() {
+        let toks = lex("'a' 'x &'static str '_ ' '");
+        assert_eq!(toks[0].kind, TokKind::CharLit);
+        assert_eq!(toks[0].text, "a");
+        assert_eq!(toks[1].kind, TokKind::Lifetime);
+        assert_eq!(toks[1].text, "x");
+        assert_eq!(toks[3].kind, TokKind::Lifetime);
+        assert_eq!(toks[3].text, "static");
+        assert!(toks[4].is_ident("str"));
+        assert_eq!(toks[5].kind, TokKind::Lifetime);
+        assert_eq!(toks[5].text, "_");
+        // `' '` — a space char literal
+        assert_eq!(toks[6].kind, TokKind::CharLit);
+        assert_eq!(toks[6].text, " ");
+    }
+
+    #[test]
+    fn escaped_char_literals() {
+        let toks = lex(r"'\'' '\u{1F600}' '\\'");
+        assert!(toks.iter().all(|t| t.kind == TokKind::CharLit));
+        assert_eq!(toks.len(), 3);
+    }
+
+    #[test]
+    fn numeric_forms() {
+        let toks = kinds("1.5e-3 0x1F 0..n 7usize x.0");
+        assert_eq!(toks[0], (TokKind::NumLit, "1.5e-3".to_string()));
+        assert_eq!(toks[1], (TokKind::NumLit, "0x1F".to_string()));
+        // `0..n` must lex as number, dot, dot, ident
+        assert_eq!(toks[2], (TokKind::NumLit, "0".to_string()));
+        assert_eq!(toks[3], (TokKind::Punct, ".".to_string()));
+        assert_eq!(toks[4], (TokKind::Punct, ".".to_string()));
+        assert_eq!(toks[5], (TokKind::Ident, "n".to_string()));
+        assert_eq!(toks[6], (TokKind::NumLit, "7usize".to_string()));
+        // tuple field access
+        assert_eq!(toks[7], (TokKind::Ident, "x".to_string()));
+        assert_eq!(toks[9], (TokKind::NumLit, "0".to_string()));
+    }
+
+    #[test]
+    fn raw_identifiers() {
+        let toks = lex("r#match r#type");
+        assert!(toks[0].is_ident("match"));
+        assert!(toks[1].is_ident("type"));
+    }
+
+    #[test]
+    fn positions_are_tracked() {
+        let toks = lex("a\n  b");
+        assert_eq!((toks[0].line, toks[0].col), (1, 1));
+        assert_eq!((toks[1].line, toks[1].col), (2, 3));
+    }
+
+    #[test]
+    fn multiline_string_tracks_lines() {
+        let toks = lex("\"one\ntwo\" after");
+        assert_eq!(toks[0].kind, TokKind::StrLit);
+        let after = toks.iter().find(|t| t.is_ident("after")).expect("after token");
+        assert_eq!(after.line, 2);
+    }
+}

@@ -1,0 +1,574 @@
+//! `lock-order`: extract every acquisition of a *named* lock, track which
+//! locks are held across each acquisition, and fail on cycles in the
+//! crate-wide held→acquired graph (the classic AB/BA deadlock shape).
+//!
+//! The analysis is intraprocedural and name-based — exactly as strong as
+//! the codebase's own locking discipline, which routes every mutex through
+//! a small set of named fields and helpers:
+//!
+//! * **Guard-returning acquisitions** (`<recv>.lock()`, `Lifecycle::
+//!   updater()`) are *held* when they are the tail of a `let` initializer
+//!   (modulo the guard-preserving adapters `unwrap_or_else` / `unwrap` /
+//!   `expect`), and released at the end of the enclosing block or at an
+//!   explicit `drop(binding)`. A `.lock()` used as a temporary
+//!   (`queue.lock().len()`) acquires and releases within the statement.
+//! * **Transient helpers** (`ModelSlot::get/swap`, `BoundedQueue::
+//!   drain_batch`, `HealthTable::record/is_available/unhealthy`,
+//!   `Role::lifecycle()`) lock internally and release before returning:
+//!   they are edge *targets* but never held.
+//!
+//! Receivers are resolved by field/binding name; `self.lock()` resolves
+//! through the enclosing `impl` block. Unknown receivers (`stdin.lock()`)
+//! are ignored. Test code is skipped: tests may lock in odd orders against
+//! servers that are not running their other half.
+
+use super::{skip_group, Finding, SourceFile, Token};
+use std::collections::{BTreeMap, BTreeSet};
+
+/// `<recv>.lock()` receivers → canonical lock name.
+const GUARD_RECV: &[(&str, &str)] = &[
+    ("lifecycle", "Role.lifecycle"),
+    ("sync_gate", "ReplicaCtl.sync_gate"),
+    ("promoting", "ReplicaCtl.promoting"),
+    ("current", "ModelSlot.current"),
+    ("updater", "Lifecycle.updater"),
+    ("deque", "BoundedQueue.deque"),
+    ("queue", "BoundedQueue.deque"),
+    ("members", "HealthTable.members"),
+    ("shared", "Pool.slot"),
+    ("slot", "Pool.slot"),
+    ("tx", "Client.tx"),
+];
+
+/// `self.lock()` inside `impl <Type>` → canonical lock name.
+const SELF_IMPL: &[(&str, &str)] = &[
+    ("BoundedQueue", "BoundedQueue.deque"),
+    ("HealthTable", "HealthTable.members"),
+    ("Shared", "Pool.slot"),
+];
+
+/// Guard-returning helper methods (any receiver).
+const GUARD_METHODS: &[(&str, &str)] = &[("updater", "Lifecycle.updater")];
+
+/// (receiver, method) pairs that acquire-and-release internally.
+const TRANSIENT: &[(&str, &str, &str)] = &[
+    ("slot", "get", "ModelSlot.current"),
+    ("slot", "swap", "ModelSlot.current"),
+    ("queue", "drain_batch", "BoundedQueue.deque"),
+    ("health", "record", "HealthTable.members"),
+    ("health", "is_available", "HealthTable.members"),
+    ("health", "unhealthy", "HealthTable.members"),
+    ("role", "lifecycle", "Role.lifecycle"),
+];
+
+struct Held {
+    lock: &'static str,
+    binding: Option<String>,
+    depth: usize,
+}
+
+struct Edge {
+    file: String,
+    line: usize,
+    col: usize,
+}
+
+pub(crate) fn check(files: &[SourceFile]) -> Vec<Finding> {
+    // held→acquired edges, first site wins (BTreeMap for stable output)
+    let mut edges: BTreeMap<(&'static str, &'static str), Edge> = BTreeMap::new();
+    for f in files {
+        scan_file(f, &mut edges);
+    }
+    find_cycles(&edges)
+}
+
+fn scan_file(f: &SourceFile, edges: &mut BTreeMap<(&'static str, &'static str), Edge>) {
+    let toks = f.code();
+    let impls = impl_ranges(&toks);
+    let mut held: Vec<Held> = Vec::new();
+    let mut depth = 0usize;
+    let mut i = 0;
+    while i < toks.len() {
+        let t = toks[i];
+        if t.is_punct('{') {
+            depth += 1;
+        } else if t.is_punct('}') {
+            depth = depth.saturating_sub(1);
+            held.retain(|h| h.depth <= depth);
+        } else if t.is_ident("drop")
+            && i + 3 < toks.len()
+            && toks[i + 1].is_punct('(')
+            && toks[i + 3].is_punct(')')
+        {
+            let dropped = &toks[i + 2].text;
+            held.retain(|h| h.binding.as_deref() != Some(dropped.as_str()));
+        } else if !f.in_test(t.line) {
+            if let Some((lock, guard)) = acquisition(&toks, i, &impls) {
+                let site = toks[i + 1];
+                for h in &held {
+                    // a second acquisition of the same lock is a self-
+                    // deadlock (std mutexes are not reentrant): record it
+                    // as a self-edge so it surfaces as a 1-cycle
+                    edges.entry((h.lock, lock)).or_insert_with(|| Edge {
+                        file: f.path.clone(),
+                        line: site.line,
+                        col: site.col,
+                    });
+                }
+                if guard {
+                    if let Some(binding) = held_binding(&toks, i) {
+                        held.push(Held { lock, binding: Some(binding), depth });
+                    }
+                }
+            }
+        }
+        i += 1;
+    }
+}
+
+/// If `toks[i]` is the `.` of a recognized lock acquisition, return the
+/// canonical lock name and whether it returns a guard.
+fn acquisition(
+    toks: &[&Token],
+    i: usize,
+    impls: &[(String, usize, usize)],
+) -> Option<(&'static str, bool)> {
+    if !(toks[i].is_punct('.') && i + 2 < toks.len() && toks[i + 2].is_punct('(')) {
+        return None;
+    }
+    let method = toks[i + 1].text.as_str();
+    let recv = receiver_ident(toks, i);
+    if method == "lock" {
+        let recv = recv?;
+        if recv == "self" {
+            let ty = enclosing_impl(impls, i)?;
+            return SELF_IMPL
+                .iter()
+                .find(|(t, _)| *t == ty)
+                .map(|&(_, lock)| (lock, true));
+        }
+        return GUARD_RECV.iter().find(|(r, _)| *r == recv).map(|&(_, lock)| (lock, true));
+    }
+    if let Some(&(_, lock)) = GUARD_METHODS.iter().find(|(m, _)| *m == method) {
+        return Some((lock, true));
+    }
+    if let Some(recv) = recv {
+        if let Some(&(_, _, lock)) =
+            TRANSIENT.iter().find(|(r, m, _)| *r == recv && *m == method)
+        {
+            return Some((lock, false));
+        }
+    }
+    None
+}
+
+/// The identifier the method is called on: `a.b.lock()` → `b`,
+/// `a.b[i].lock()` → `b`, `make().lock()` → None.
+fn receiver_ident(toks: &[&Token], dot_idx: usize) -> Option<String> {
+    if dot_idx == 0 {
+        return None;
+    }
+    let mut k = dot_idx - 1;
+    if toks[k].is_punct(']') {
+        // walk back over the index expression to the matching `[`
+        let mut d = 0i32;
+        loop {
+            if toks[k].is_punct(']') {
+                d += 1;
+            } else if toks[k].is_punct('[') {
+                d -= 1;
+                if d == 0 {
+                    break;
+                }
+            }
+            if k == 0 {
+                return None;
+            }
+            k -= 1;
+        }
+        if k == 0 {
+            return None;
+        }
+        k -= 1;
+    }
+    if toks[k].kind == super::TokKind::Ident {
+        Some(toks[k].text.clone())
+    } else {
+        None
+    }
+}
+
+/// Is the acquisition at `dot_idx` the tail of a `let` statement's
+/// initializer? Returns the binding name if so. Guard-preserving adapters
+/// (`.unwrap_or_else(..)`, `.unwrap()`, `.expect(..)`) may follow.
+fn held_binding(toks: &[&Token], dot_idx: usize) -> Option<String> {
+    // statement start: the token after the nearest `;`, `{` or `}`
+    let mut s = dot_idx;
+    while s > 0 {
+        let t = toks[s - 1];
+        if t.is_punct(';') || t.is_punct('{') || t.is_punct('}') {
+            break;
+        }
+        s -= 1;
+    }
+    if !toks[s].is_ident("let") {
+        return None;
+    }
+    let mut b = s + 1;
+    if b < toks.len() && toks[b].is_ident("mut") {
+        b += 1;
+    }
+    if b >= toks.len() || toks[b].kind != super::TokKind::Ident {
+        return None;
+    }
+    let binding = toks[b].text.clone();
+    // tail check: skip the call's parens, then any adapter chain, then `;`
+    let mut j = skip_group(toks, dot_idx + 2, '(', ')')?;
+    loop {
+        if j < toks.len() && toks[j].is_punct('?') {
+            j += 1;
+            continue;
+        }
+        if j + 2 < toks.len()
+            && toks[j].is_punct('.')
+            && toks[j + 2].is_punct('(')
+            && matches!(toks[j + 1].text.as_str(), "unwrap_or_else" | "unwrap" | "expect")
+        {
+            j = skip_group(toks, j + 2, '(', ')')?;
+            continue;
+        }
+        break;
+    }
+    if j < toks.len() && toks[j].is_punct(';') {
+        Some(binding)
+    } else {
+        None
+    }
+}
+
+/// `impl` blocks as (type name, first token index, last token index).
+fn impl_ranges(toks: &[&Token]) -> Vec<(String, usize, usize)> {
+    let mut out = Vec::new();
+    let mut i = 0;
+    while i < toks.len() {
+        if !toks[i].is_ident("impl") {
+            i += 1;
+            continue;
+        }
+        // scan the header up to `{`, remembering the last path ident —
+        // reset at `for` so `impl Trait for Type` resolves to Type
+        let mut ty: Option<String> = None;
+        let mut j = i + 1;
+        let mut angle = 0i32;
+        while j < toks.len() && !toks[j].is_punct('{') && !toks[j].is_punct(';') {
+            let t = toks[j];
+            if t.is_punct('<') {
+                angle += 1;
+            } else if t.is_punct('>') {
+                angle -= 1;
+            } else if angle == 0 && t.kind == super::TokKind::Ident {
+                if t.text == "for" {
+                    ty = None;
+                } else if t.text != "where" {
+                    ty = Some(t.text.clone());
+                }
+            }
+            j += 1;
+        }
+        if j >= toks.len() || toks[j].is_punct(';') {
+            i = j + 1;
+            continue;
+        }
+        let end = skip_group(toks, j, '{', '}').unwrap_or(toks.len());
+        if let Some(ty) = ty {
+            out.push((ty, j, end - 1));
+        }
+        i = j + 1; // nested impls don't occur; rescan inside is harmless
+    }
+    out
+}
+
+fn enclosing_impl(impls: &[(String, usize, usize)], tok_idx: usize) -> Option<&str> {
+    impls
+        .iter()
+        .filter(|(_, s, e)| *s <= tok_idx && tok_idx <= *e)
+        .min_by_key(|(_, s, e)| e - s)
+        .map(|(ty, _, _)| ty.as_str())
+}
+
+/// DFS cycle detection over the edge set; one finding per distinct cycle,
+/// anchored at the back edge's acquisition site.
+fn find_cycles(edges: &BTreeMap<(&'static str, &'static str), Edge>) -> Vec<Finding> {
+    let mut adj: BTreeMap<&str, Vec<&str>> = BTreeMap::new();
+    for &(from, to) in edges.keys() {
+        adj.entry(from).or_default().push(to);
+        adj.entry(to).or_default();
+    }
+    let mut color: BTreeMap<&str, u8> = adj.keys().map(|&n| (n, 0u8)).collect();
+    let mut findings = Vec::new();
+    let mut seen_cycles: BTreeSet<Vec<String>> = BTreeSet::new();
+    let nodes: Vec<&str> = adj.keys().copied().collect();
+    for start in nodes {
+        if color[start] != 0 {
+            continue;
+        }
+        let mut path: Vec<&str> = Vec::new();
+        dfs(start, &adj, &mut color, &mut path, edges, &mut seen_cycles, &mut findings);
+    }
+    findings
+}
+
+#[allow(clippy::too_many_arguments)]
+fn dfs<'a>(
+    node: &'a str,
+    adj: &BTreeMap<&'a str, Vec<&'a str>>,
+    color: &mut BTreeMap<&'a str, u8>,
+    path: &mut Vec<&'a str>,
+    edges: &BTreeMap<(&'static str, &'static str), Edge>,
+    seen_cycles: &mut BTreeSet<Vec<String>>,
+    findings: &mut Vec<Finding>,
+) {
+    color.insert(node, 1);
+    path.push(node);
+    for &next in adj.get(node).map(|v| v.as_slice()).unwrap_or(&[]) {
+        if color.get(next) == Some(&1) {
+            // back edge node→next closes a cycle next → ... → node → next
+            let pos = path.iter().position(|&n| n == next).unwrap_or(0);
+            let cycle: Vec<&str> = path[pos..].to_vec();
+            // canonicalize rotation so each cycle is reported once
+            let min_at = cycle
+                .iter()
+                .enumerate()
+                .min_by_key(|(_, n)| **n)
+                .map(|(k, _)| k)
+                .unwrap_or(0);
+            let mut canon: Vec<String> =
+                cycle.iter().cycle().skip(min_at).take(cycle.len()).map(|s| s.to_string()).collect();
+            canon.push(canon[0].clone());
+            if seen_cycles.insert(canon.clone()) {
+                let site = edges
+                    .iter()
+                    .find(|((a, b), _)| *a == node && *b == next)
+                    .map(|(_, e)| e);
+                let chain = canon.join(" -> ");
+                let detail: Vec<String> = cycle
+                    .iter()
+                    .enumerate()
+                    .map(|(k, &a)| {
+                        let b = cycle[(k + 1) % cycle.len()];
+                        match edges.get(&(lookup(a), lookup(b))) {
+                            Some(e) => format!("{a} -> {b} at {}:{}", e.file, e.line),
+                            None => format!("{a} -> {b}"),
+                        }
+                    })
+                    .collect();
+                findings.push(Finding {
+                    file: site.map(|e| e.file.clone()).unwrap_or_default(),
+                    line: site.map(|e| e.line).unwrap_or(0),
+                    col: site.map(|e| e.col).unwrap_or(0),
+                    lint: "lock-order",
+                    message: format!("lock-order cycle {chain} ({})", detail.join("; ")),
+                    fix: "acquire these locks in one global order everywhere (or drop the \
+                          first guard before taking the second)"
+                        .to_string(),
+                });
+            }
+        } else if color.get(next) == Some(&0) {
+            dfs(next, adj, color, path, edges, seen_cycles, findings);
+        }
+    }
+    path.pop();
+    color.insert(node, 2);
+}
+
+/// Map a node name back to its `'static` key (node names originate from
+/// the constant tables, so the lookup always succeeds for real nodes).
+fn lookup(name: &str) -> &'static str {
+    GUARD_RECV
+        .iter()
+        .map(|&(_, l)| l)
+        .chain(SELF_IMPL.iter().map(|&(_, l)| l))
+        .chain(GUARD_METHODS.iter().map(|&(_, l)| l))
+        .chain(TRANSIENT.iter().map(|&(_, _, l)| l))
+        .find(|&l| l == name)
+        .unwrap_or("?")
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::analyze::analyze_sources;
+
+    fn run(src: &str) -> crate::analyze::Report {
+        analyze_sources(&[("rust/src/coordinator/fixture.rs".to_string(), src.to_string())])
+    }
+
+    #[test]
+    fn ab_ba_cycle_is_detected() {
+        let src = "fn a(rep: &ReplicaCtl) {\n\
+                   let _g = rep.sync_gate.lock();\n\
+                   let _p = rep.promoting.lock();\n\
+                   }\n\
+                   fn b(rep: &ReplicaCtl) {\n\
+                   let _p = rep.promoting.lock();\n\
+                   let _g = rep.sync_gate.lock();\n\
+                   }\n";
+        let r = run(src);
+        assert_eq!(r.findings.len(), 1, "{:?}", r.findings);
+        assert_eq!(r.findings[0].lint, "lock-order");
+        assert!(r.findings[0].message.contains("ReplicaCtl.promoting"));
+        assert!(r.findings[0].message.contains("ReplicaCtl.sync_gate"));
+    }
+
+    #[test]
+    fn consistent_order_is_clean() {
+        let src = "fn a(rep: &ReplicaCtl) {\n\
+                   let _p = rep.promoting.lock();\n\
+                   let _g = rep.sync_gate.lock();\n\
+                   }\n\
+                   fn b(rep: &ReplicaCtl) {\n\
+                   let _p = rep.promoting.lock();\n\
+                   let _g = rep.sync_gate.lock();\n\
+                   }\n";
+        let r = run(src);
+        assert!(r.findings.is_empty(), "{:?}", r.findings);
+    }
+
+    #[test]
+    fn temporaries_do_not_hold() {
+        // `queue.lock().len()` releases within the statement, so the later
+        // promoting→queue order in `b` cannot complete a cycle
+        let src = "fn a(queue: &Q, rep: &ReplicaCtl) {\n\
+                   let depth = queue.lock().len();\n\
+                   let _p = rep.promoting.lock();\n\
+                   let _ = depth;\n\
+                   }\n\
+                   fn b(queue: &Q, rep: &ReplicaCtl) {\n\
+                   let _p = rep.promoting.lock();\n\
+                   let _d = queue.lock();\n\
+                   }\n";
+        let r = run(src);
+        assert!(r.findings.is_empty(), "{:?}", r.findings);
+    }
+
+    #[test]
+    fn drop_releases_before_next_acquisition() {
+        let src = "fn a(rep: &ReplicaCtl) {\n\
+                   let g = rep.sync_gate.lock();\n\
+                   drop(g);\n\
+                   let _p = rep.promoting.lock();\n\
+                   }\n\
+                   fn b(rep: &ReplicaCtl) {\n\
+                   let _p = rep.promoting.lock();\n\
+                   let _g = rep.sync_gate.lock();\n\
+                   }\n";
+        let r = run(src);
+        assert!(r.findings.is_empty(), "{:?}", r.findings);
+    }
+
+    #[test]
+    fn block_scope_releases_guards() {
+        let src = "fn a(rep: &ReplicaCtl) {\n\
+                   {\n\
+                   let _g = rep.sync_gate.lock();\n\
+                   }\n\
+                   let _p = rep.promoting.lock();\n\
+                   }\n\
+                   fn b(rep: &ReplicaCtl) {\n\
+                   let _p = rep.promoting.lock();\n\
+                   let _g = rep.sync_gate.lock();\n\
+                   }\n";
+        let r = run(src);
+        assert!(r.findings.is_empty(), "{:?}", r.findings);
+    }
+
+    #[test]
+    fn transient_helpers_are_edges_but_never_held() {
+        // updater → ModelSlot (real edge, held updater guard) plus a
+        // later slot.get() with nothing held: acyclic, clean
+        let src = "fn a(lc: &Lifecycle, slot: &ModelSlot) {\n\
+                   let mut up = lc.updater();\n\
+                   slot.swap(m);\n\
+                   drop(up);\n\
+                   let v = slot.get();\n\
+                   let _ = v;\n\
+                   }\n";
+        let r = run(src);
+        assert!(r.findings.is_empty(), "{:?}", r.findings);
+    }
+
+    #[test]
+    fn self_deadlock_is_a_one_cycle() {
+        let src = "fn a(rep: &ReplicaCtl) {\n\
+                   let _g = rep.sync_gate.lock();\n\
+                   let _h = rep.sync_gate.lock();\n\
+                   }\n";
+        let r = run(src);
+        assert_eq!(r.findings.len(), 1, "{:?}", r.findings);
+        assert!(r.findings[0].message.contains("sync_gate -> ReplicaCtl.sync_gate"));
+    }
+
+    #[test]
+    fn poison_recovery_adapter_still_counts_as_held() {
+        let src = "fn a(rep: &ReplicaCtl) {\n\
+                   let _g = rep.sync_gate.lock().unwrap_or_else(|e| e.into_inner());\n\
+                   let _p = rep.promoting.lock();\n\
+                   }\n\
+                   fn b(rep: &ReplicaCtl) {\n\
+                   let _p = rep.promoting.lock();\n\
+                   let _g = rep.sync_gate.lock();\n\
+                   }\n";
+        let r = run(src);
+        assert_eq!(r.findings.len(), 1, "{:?}", r.findings);
+    }
+
+    #[test]
+    fn self_lock_resolves_through_impl_block() {
+        let src = "impl BoundedQueue {\n\
+                   fn a(&self, rep: &ReplicaCtl) {\n\
+                   let _d = self.lock();\n\
+                   let _p = rep.promoting.lock();\n\
+                   }\n\
+                   }\n\
+                   fn b(queue: &Q, rep: &ReplicaCtl) {\n\
+                   let _p = rep.promoting.lock();\n\
+                   let _d = queue.lock();\n\
+                   }\n";
+        let r = run(src);
+        assert_eq!(r.findings.len(), 1, "{:?}", r.findings);
+        assert!(r.findings[0].message.contains("BoundedQueue.deque"));
+    }
+
+    #[test]
+    fn test_code_is_skipped() {
+        let src = "#[cfg(test)]\n\
+                   mod tests {\n\
+                   fn a(rep: &ReplicaCtl) {\n\
+                   let _g = rep.sync_gate.lock();\n\
+                   let _p = rep.promoting.lock();\n\
+                   }\n\
+                   fn b(rep: &ReplicaCtl) {\n\
+                   let _p = rep.promoting.lock();\n\
+                   let _g = rep.sync_gate.lock();\n\
+                   }\n\
+                   }\n";
+        let r = run(src);
+        assert!(r.findings.is_empty(), "{:?}", r.findings);
+    }
+
+    #[test]
+    fn reasoned_allow_silences_the_cycle() {
+        let src = "fn a(rep: &ReplicaCtl) {\n\
+                   let _g = rep.sync_gate.lock();\n\
+                   // analyze::allow(lock-order): fixture cycle for the suppression test\n\
+                   let _p = rep.promoting.lock();\n\
+                   }\n\
+                   fn b(rep: &ReplicaCtl) {\n\
+                   let _p = rep.promoting.lock();\n\
+                   // analyze::allow(lock-order): fixture cycle for the suppression test\n\
+                   let _g = rep.sync_gate.lock();\n\
+                   }\n";
+        let r = run(src);
+        assert!(r.findings.is_empty(), "{:?}", r.findings);
+        assert_eq!(r.suppressed, 1);
+    }
+}

@@ -1,0 +1,303 @@
+//! In-tree static analysis (`fastpi analyze`) for the two contracts the
+//! compiler cannot check: bitwise determinism of the numeric kernels and
+//! no-panic/no-deadlock liveness of the serving tier.
+//!
+//! The pass is deliberately zero-dependency (no syn/proc-macro — the build
+//! environment is offline): [`lexer`] tokenizes each `.rs` file with full
+//! comment/string/char-literal awareness, and each lint matches token
+//! sequences. Findings are keyed `file:line:lint-id` and suppressed
+//! in-source with a reasoned marker on the finding's line or the line
+//! above:
+//!
+//! ```text
+//! // analyze::allow(<lint-id>): <reason>
+//! ```
+//!
+//! A marker without a reason (or with an unknown lint id) is itself a
+//! finding (`bad-allow`), so suppressions are always justified in-tree.
+//! See `rust/src/analyze/README.md` for the lint catalogue and policy.
+
+pub mod lexer;
+
+mod float_cmp;
+mod lock_order;
+mod nondet;
+mod panic_server;
+mod stats_keys;
+mod suppress;
+
+pub use lexer::{lex, TokKind, Token};
+
+/// Every lint id the analyzer can emit (used to validate allow markers).
+pub const LINT_IDS: &[&str] = &[
+    "bad-allow",
+    "float-cmp-unwrap",
+    "panic-in-server",
+    "lock-order",
+    "nondet-kernel",
+    "stats-key-drift",
+];
+
+/// The serving-tier files held to the no-panic + protocol-table contracts.
+pub(crate) const SERVER_FILES: &[&str] =
+    &["coordinator/serve.rs", "coordinator/router.rs", "model/ship.rs"];
+
+pub(crate) fn is_server_file(path: &str) -> bool {
+    SERVER_FILES.iter().any(|s| path.ends_with(s))
+}
+
+/// One analyzed source file: its token stream plus the line ranges covered
+/// by `#[cfg(test)]` / `#[test]` items (most lints skip test code).
+pub struct SourceFile {
+    pub path: String,
+    pub tokens: Vec<Token>,
+    pub test_ranges: Vec<(usize, usize)>,
+}
+
+impl SourceFile {
+    pub fn parse(path: &str, src: &str) -> SourceFile {
+        let tokens = lexer::lex(src);
+        let test_ranges = test_ranges(&tokens);
+        SourceFile { path: path.replace('\\', "/"), tokens, test_ranges }
+    }
+
+    /// Is `line` inside a `#[cfg(test)]`-gated or `#[test]`-attributed item?
+    pub fn in_test(&self, line: usize) -> bool {
+        self.test_ranges.iter().any(|&(lo, hi)| lo <= line && line <= hi)
+    }
+
+    /// The non-comment tokens, in order (what most lints match on).
+    pub fn code(&self) -> Vec<&Token> {
+        self.tokens.iter().filter(|t| !t.is_comment()).collect()
+    }
+}
+
+/// One lint violation. Ordered by (file, line, col, lint) for stable output.
+#[derive(Debug, Clone)]
+pub struct Finding {
+    pub file: String,
+    pub line: usize,
+    pub col: usize,
+    pub lint: &'static str,
+    pub message: String,
+    /// A concrete suggested remediation (shown by `--fix-list`).
+    pub fix: String,
+}
+
+/// Result of an analysis run.
+pub struct Report {
+    /// Unsuppressed findings, sorted.
+    pub findings: Vec<Finding>,
+    /// Findings silenced by `analyze::allow` markers.
+    pub suppressed: usize,
+    /// Number of files scanned.
+    pub files: usize,
+}
+
+/// Analyze in-memory sources (used by the fixture tests and `analyze_paths`).
+pub fn analyze_sources(sources: &[(String, String)]) -> Report {
+    let files: Vec<SourceFile> =
+        sources.iter().map(|(p, s)| SourceFile::parse(p, s)).collect();
+    let mut findings: Vec<Finding> = Vec::new();
+    let mut allows: Vec<(String, suppress::Allow)> = Vec::new();
+    for f in &files {
+        let (file_allows, bad) = suppress::collect(f);
+        findings.extend(bad);
+        allows.extend(file_allows.into_iter().map(|a| (f.path.clone(), a)));
+        findings.extend(float_cmp::check(f));
+        findings.extend(panic_server::check(f));
+        findings.extend(nondet::check(f));
+    }
+    findings.extend(lock_order::check(&files));
+    findings.extend(stats_keys::check(&files));
+
+    let mut suppressed = 0usize;
+    findings.retain(|fi| {
+        let hit = allows.iter().any(|(path, a)| {
+            path == &fi.file && a.lint == fi.lint && (a.line == fi.line || a.line + 1 == fi.line)
+        });
+        if hit {
+            suppressed += 1;
+        }
+        !hit
+    });
+    findings.sort_by(|a, b| {
+        (&a.file, a.line, a.col, a.lint).cmp(&(&b.file, b.line, b.col, b.lint))
+    });
+    Report { findings, suppressed, files: files.len() }
+}
+
+/// Walk `roots` for `.rs` files (skipping `target/` and dotted entries),
+/// read them, and run every lint.
+pub fn analyze_paths(roots: &[std::path::PathBuf]) -> std::io::Result<Report> {
+    let mut paths: Vec<std::path::PathBuf> = Vec::new();
+    for root in roots {
+        collect_rs_files(root, &mut paths)?;
+    }
+    paths.sort();
+    paths.dedup();
+    let mut sources = Vec::with_capacity(paths.len());
+    for p in &paths {
+        sources.push((p.display().to_string(), std::fs::read_to_string(p)?));
+    }
+    Ok(analyze_sources(&sources))
+}
+
+fn collect_rs_files(
+    path: &std::path::Path,
+    out: &mut Vec<std::path::PathBuf>,
+) -> std::io::Result<()> {
+    let name = path.file_name().and_then(|n| n.to_str()).unwrap_or("");
+    if name.starts_with('.') && name != "." && name != ".." {
+        return Ok(());
+    }
+    if path.is_dir() {
+        if name == "target" {
+            return Ok(());
+        }
+        let mut entries: Vec<std::path::PathBuf> =
+            std::fs::read_dir(path)?.filter_map(|e| e.ok().map(|e| e.path())).collect();
+        entries.sort();
+        for e in entries {
+            collect_rs_files(&e, out)?;
+        }
+    } else if name.ends_with(".rs") {
+        out.push(path.to_path_buf());
+    }
+    Ok(())
+}
+
+/// Compute the line ranges of items marked `#[test]`, `#[cfg(test)]`, or
+/// any attribute whose arguments mention `test` (e.g. `#[cfg(all(test, ..))]`
+/// — but NOT `#[cfg(not(test))]`). The marked item extends to its closing
+/// brace, or to `;` for braceless items.
+fn test_ranges(tokens: &[Token]) -> Vec<(usize, usize)> {
+    let toks: Vec<&Token> = tokens.iter().filter(|t| !t.is_comment()).collect();
+    let mut out = Vec::new();
+    let mut i = 0;
+    while i < toks.len() {
+        if toks[i].is_punct('#') && i + 1 < toks.len() && toks[i + 1].is_punct('[') {
+            let start_line = toks[i].line;
+            let Some(mut j) = skip_group(&toks, i + 1, '[', ']') else { break };
+            let attr = &toks[i + 2..j - 1];
+            let is_test = attr.iter().any(|t| t.is_ident("test"))
+                && !attr.iter().any(|t| t.is_ident("not"));
+            if !is_test {
+                i = j;
+                continue;
+            }
+            // skip any further attributes on the same item
+            while j + 1 < toks.len() && toks[j].is_punct('#') && toks[j + 1].is_punct('[') {
+                match skip_group(&toks, j + 1, '[', ']') {
+                    Some(nj) => j = nj,
+                    None => break,
+                }
+            }
+            // consume the item: first `;` at depth 0 or the matching `}`
+            let mut depth = 0i32;
+            let mut end_line = start_line;
+            while j < toks.len() {
+                let t = toks[j];
+                end_line = t.line;
+                if t.is_punct('{') {
+                    depth += 1;
+                } else if t.is_punct('}') {
+                    depth -= 1;
+                    if depth == 0 {
+                        break;
+                    }
+                } else if t.is_punct(';') && depth == 0 {
+                    break;
+                }
+                j += 1;
+            }
+            out.push((start_line, end_line));
+            i = j + 1;
+        } else {
+            i += 1;
+        }
+    }
+    out
+}
+
+/// Given `toks[open_idx]` == `open`, return the index just past the
+/// matching `close` (tracking nesting). None if unbalanced.
+pub(crate) fn skip_group(
+    toks: &[&Token],
+    open_idx: usize,
+    open: char,
+    close: char,
+) -> Option<usize> {
+    let mut depth = 0i32;
+    let mut j = open_idx;
+    while j < toks.len() {
+        if toks[j].is_punct(open) {
+            depth += 1;
+        } else if toks[j].is_punct(close) {
+            depth -= 1;
+            if depth == 0 {
+                return Some(j + 1);
+            }
+        }
+        j += 1;
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn test_ranges_cover_cfg_test_mod() {
+        let src = "fn live() {}\n\
+                   #[cfg(test)]\n\
+                   mod tests {\n\
+                       fn helper() {}\n\
+                   }\n\
+                   fn also_live() {}\n";
+        let f = SourceFile::parse("x.rs", src);
+        assert!(!f.in_test(1));
+        assert!(f.in_test(2));
+        assert!(f.in_test(4));
+        assert!(!f.in_test(6));
+    }
+
+    #[test]
+    fn test_attribute_marks_single_fn() {
+        let src = "#[test]\nfn t() {\n    body();\n}\nfn live() {}\n";
+        let f = SourceFile::parse("x.rs", src);
+        assert!(f.in_test(3));
+        assert!(!f.in_test(5));
+    }
+
+    #[test]
+    fn cfg_not_test_is_live_code() {
+        let src = "#[cfg(not(test))]\nfn live() {\n    body();\n}\n";
+        let f = SourceFile::parse("x.rs", src);
+        assert!(!f.in_test(3));
+    }
+
+    #[test]
+    fn stacked_attributes_extend_to_item_end() {
+        let src = "#[test]\n#[ignore]\nfn t() {\n    body();\n}\n";
+        let f = SourceFile::parse("x.rs", src);
+        assert!(f.in_test(4));
+    }
+
+    #[test]
+    fn braces_in_strings_do_not_confuse_item_extent() {
+        let src = "#[cfg(test)]\nmod tests {\n    const S: &str = \"}\";\n    fn t() {}\n}\nfn live() {}\n";
+        let f = SourceFile::parse("x.rs", src);
+        assert!(f.in_test(4));
+        assert!(!f.in_test(6));
+    }
+
+    #[test]
+    fn walker_and_driver_smoke() {
+        // analyze_sources on an empty set is clean
+        let r = analyze_sources(&[]);
+        assert!(r.findings.is_empty());
+        assert_eq!(r.files, 0);
+    }
+}

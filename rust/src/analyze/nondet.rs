@@ -1,0 +1,108 @@
+//! `nondet-kernel`: the deterministic kernels (`dense/`, `svdlr/`,
+//! `sparse/`, `reorder/`, and the incremental updater `model/updater.rs`)
+//! carry the paper's bitwise reproducibility contract: online LEARN ≡
+//! offline replay, sharded ≡ unsharded, and thread-count invariance.
+//! Anything whose observable behavior depends on hash seeds, wall clocks,
+//! or thread identity is banned there: `HashMap`/`HashSet` (randomized
+//! iteration order), `Instant::now()` / `SystemTime` (timing), and
+//! `thread::current()` / `ThreadId` (identity-dependent branching).
+//! Timing that feeds *reports only* may be allow-marked with that reason.
+
+use super::{Finding, SourceFile};
+
+const KERNEL_DIRS: &[&str] = &["/dense/", "/svdlr/", "/sparse/", "/reorder/"];
+
+fn in_scope(path: &str) -> bool {
+    KERNEL_DIRS.iter().any(|d| path.contains(d)) || path.ends_with("model/updater.rs")
+}
+
+pub(crate) fn check(f: &SourceFile) -> Vec<Finding> {
+    if !in_scope(&f.path) {
+        return Vec::new();
+    }
+    let toks = f.code();
+    let mut out = Vec::new();
+    let mut push = |line: usize, col: usize, what: &str, why: &str| {
+        out.push(Finding {
+            file: f.path.clone(),
+            line,
+            col,
+            lint: "nondet-kernel",
+            message: format!("`{what}` in a deterministic kernel — {why}"),
+            fix: "use BTreeMap/BTreeSet or index-sorted Vecs; keep timing and thread \
+                  identity out of numerics (allow-mark report-only timing with that reason)"
+                .to_string(),
+        });
+    };
+    for i in 0..toks.len() {
+        let t = toks[i];
+        if f.in_test(t.line) {
+            continue;
+        }
+        if t.is_ident("HashMap") || t.is_ident("HashSet") {
+            push(t.line, t.col, &t.text, "iteration order is nondeterministic");
+        } else if t.is_ident("SystemTime") {
+            push(t.line, t.col, "SystemTime", "wall-clock reads are nondeterministic");
+        } else if t.is_ident("ThreadId") {
+            push(t.line, t.col, "ThreadId", "thread identity breaks thread-count invariance");
+        } else if t.is_ident("Instant")
+            && i + 3 < toks.len()
+            && toks[i + 1].is_punct(':')
+            && toks[i + 2].is_punct(':')
+            && toks[i + 3].is_ident("now")
+        {
+            push(t.line, t.col, "Instant::now()", "timing must never influence numerics");
+        } else if t.is_ident("thread")
+            && i + 3 < toks.len()
+            && toks[i + 1].is_punct(':')
+            && toks[i + 2].is_punct(':')
+            && toks[i + 3].is_ident("current")
+        {
+            push(t.line, t.col, "thread::current()", "thread identity breaks invariance");
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::analyze::analyze_sources;
+
+    fn run_at(path: &str, src: &str) -> crate::analyze::Report {
+        analyze_sources(&[(path.to_string(), src.to_string())])
+    }
+
+    #[test]
+    fn fires_on_hash_collections_and_clocks_in_kernel_dirs() {
+        let src = "use std::collections::{HashMap, HashSet};\n\
+                   fn t() { let _ = std::time::Instant::now(); }\n\
+                   fn s() { let _ = std::time::SystemTime::now(); }\n\
+                   fn i() { let _ = std::thread::current(); }\n";
+        let r = run_at("rust/src/dense/x.rs", src);
+        assert_eq!(r.findings.len(), 5, "{:?}", r.findings);
+        assert!(r.findings.iter().all(|f| f.lint == "nondet-kernel"));
+    }
+
+    #[test]
+    fn non_kernel_paths_and_test_code_are_exempt() {
+        let src = "use std::collections::HashMap;\n";
+        assert!(run_at("rust/src/data/synth.rs", src).findings.is_empty());
+        assert!(run_at("rust/src/coordinator/serve.rs", src).findings.is_empty());
+        let test_src = "#[cfg(test)]\nmod tests {\n\
+                        fn t() { let _ = std::time::Instant::now(); }\n\
+                        }\n";
+        assert!(run_at("rust/src/svdlr/x.rs", test_src).findings.is_empty());
+    }
+
+    #[test]
+    fn updater_is_in_scope_and_allow_works() {
+        let src = "fn t() { let _ = std::time::Instant::now(); }\n";
+        let r = run_at("rust/src/model/updater.rs", src);
+        assert_eq!(r.findings.len(), 1);
+        let allowed = "// analyze::allow(nondet-kernel): timing feeds the report only\n\
+                       fn t() { let _ = std::time::Instant::now(); }\n";
+        let r = run_at("rust/src/model/updater.rs", allowed);
+        assert!(r.findings.is_empty(), "{:?}", r.findings);
+        assert_eq!(r.suppressed, 1);
+    }
+}

@@ -1,0 +1,106 @@
+//! `panic-in-server`: the serving tier (`coordinator/serve.rs`,
+//! `coordinator/router.rs`, `model/ship.rs`) must never panic in non-test
+//! code. The per-batch `catch_unwind` in the batcher is defense in depth,
+//! not control flow: a panicking connection handler kills its thread and a
+//! panicking sync loop silently stops replication. Poisoned-lock recovery
+//! already uses `unwrap_or_else(|e| e.into_inner())`; errors must become
+//! `ERR ...` replies or `Result` returns.
+
+use super::{is_server_file, Finding, SourceFile};
+
+const PANIC_MACROS: &[&str] = &["panic", "unreachable", "todo", "unimplemented"];
+
+pub(crate) fn check(f: &SourceFile) -> Vec<Finding> {
+    if !is_server_file(&f.path) {
+        return Vec::new();
+    }
+    let toks = f.code();
+    let mut out = Vec::new();
+    let mut push = |line: usize, col: usize, what: String| {
+        out.push(Finding {
+            file: f.path.clone(),
+            line,
+            col,
+            lint: "panic-in-server",
+            message: format!("`{what}` can panic the serving tier"),
+            fix: "return an `ERR ...` reply or a `Result`; recover poisoned locks with \
+                  `unwrap_or_else(|e| e.into_inner())`; allow-mark only with an airtight \
+                  invariant written as the reason"
+                .to_string(),
+        });
+    };
+    for i in 0..toks.len() {
+        let t = toks[i];
+        if f.in_test(t.line) {
+            continue;
+        }
+        // `.unwrap()` / `.expect(..)` method calls — the exact idents only,
+        // so `unwrap_or_else` / `unwrap_or_default` never match
+        if i + 2 < toks.len()
+            && t.is_punct('.')
+            && (toks[i + 1].is_ident("unwrap") || toks[i + 1].is_ident("expect"))
+            && toks[i + 2].is_punct('(')
+        {
+            push(toks[i + 1].line, toks[i + 1].col, format!("{}()", toks[i + 1].text));
+        }
+        // panic-family macros
+        if i + 1 < toks.len()
+            && PANIC_MACROS.iter().any(|m| t.is_ident(m))
+            && toks[i + 1].is_punct('!')
+        {
+            push(t.line, t.col, format!("{}!", t.text));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::analyze::analyze_sources;
+
+    fn run_at(path: &str, src: &str) -> crate::analyze::Report {
+        analyze_sources(&[(path.to_string(), src.to_string())])
+    }
+
+    #[test]
+    fn fires_on_unwrap_expect_and_macros_in_server_files() {
+        let src = "fn f(x: Option<u32>) -> u32 { x.unwrap() }\n\
+                   fn g(x: Option<u32>) -> u32 { x.expect(\"always\") }\n\
+                   fn h() { panic!(\"boom\"); }\n\
+                   fn k(n: u32) { if n > 3 { unreachable!() } }\n";
+        let r = run_at("rust/src/coordinator/serve.rs", src);
+        let lines: Vec<usize> = r.findings.iter().map(|f| f.line).collect();
+        assert_eq!(lines, vec![1, 2, 3, 4], "{:?}", r.findings);
+        assert!(r.findings.iter().all(|f| f.lint == "panic-in-server"));
+    }
+
+    #[test]
+    fn recovery_and_non_server_files_are_clean() {
+        let src = "fn f(m: &std::sync::Mutex<u32>) -> u32 {\n\
+                   *m.lock().unwrap_or_else(|e| e.into_inner())\n\
+                   }\n";
+        assert!(run_at("rust/src/coordinator/router.rs", src).findings.is_empty());
+        let panicky = "fn f(x: Option<u32>) -> u32 { x.unwrap() }\n";
+        assert!(run_at("rust/src/dense/svd.rs", panicky).findings.is_empty());
+    }
+
+    #[test]
+    fn test_code_in_server_files_is_exempt() {
+        let src = "fn live() {}\n\
+                   #[cfg(test)]\n\
+                   mod tests {\n\
+                   fn f(x: Option<u32>) -> u32 { x.unwrap() }\n\
+                   }\n";
+        let r = run_at("rust/src/model/ship.rs", src);
+        assert!(r.findings.is_empty(), "{:?}", r.findings);
+    }
+
+    #[test]
+    fn reasoned_allow_silences() {
+        let src = "// analyze::allow(panic-in-server): index bounded by the loop above\n\
+                   fn f(x: Option<u32>) -> u32 { x.unwrap() }\n";
+        let r = run_at("rust/src/coordinator/serve.rs", src);
+        assert!(r.findings.is_empty(), "{:?}", r.findings);
+        assert_eq!(r.suppressed, 1);
+    }
+}

@@ -1,0 +1,221 @@
+//! `stats-key-drift`: the text protocol's `key=value` replies (STATS,
+//! VERSION, SNAPSHOT, LEARN acks) are parsed by operators, benches, and
+//! the replica sync client. A key that is emitted but documented nowhere
+//! — or documented but no longer emitted — is silent protocol drift.
+//!
+//! Both directions are checked across the serving tier
+//! (`coordinator/serve.rs`, `coordinator/router.rs`, `model/ship.rs`):
+//!
+//! 1. **emitted ⊆ acknowledged** — every key formatted into a reply
+//!    (a string literal containing `key=` immediately followed by a `{`
+//!    format argument or a digit, outside test code) must appear in a doc
+//!    comment protocol table somewhere, in a parser probe (a literal
+//!    ending in `key=`, as used with `strip_prefix`), or in non-server /
+//!    test code that reads it back.
+//! 2. **documented ⊆ emitted ∪ parsed** — every key named in a server
+//!    file's doc comments must still be emitted or parsed somewhere in
+//!    the serving tier; stale doc rows are flagged at the doc line.
+//!
+//! Keys are `[a-z_][a-z0-9_]*` and must not be preceded by an identifier
+//! or `-` character, so `--learn-batch=16`-style flag text never counts.
+
+use super::{is_server_file, Finding, SourceFile, TokKind};
+use std::collections::{BTreeMap, BTreeSet};
+
+pub(crate) fn check(files: &[SourceFile]) -> Vec<Finding> {
+    // key → first emission site (file, line, col)
+    let mut emitted: BTreeMap<String, (String, usize, usize)> = BTreeMap::new();
+    // keys named in parser probes (literals ending in `key=`)
+    let mut parsed: BTreeSet<String> = BTreeSet::new();
+    // keys acknowledged anywhere: docs, probes, non-server or test literals
+    let mut acknowledged: BTreeSet<String> = BTreeSet::new();
+    // keys named in server-file doc tables, with the doc line
+    let mut doc_keys: Vec<(String, String, usize, usize)> = Vec::new();
+
+    for f in files {
+        let server = is_server_file(&f.path);
+        for t in &f.tokens {
+            match &t.kind {
+                TokKind::Comment { doc: true } => {
+                    for (k, line_off) in keys_in(&t.text, false) {
+                        acknowledged.insert(k.clone());
+                        if server {
+                            doc_keys.push((k, f.path.clone(), t.line + line_off, t.col));
+                        }
+                    }
+                }
+                TokKind::StrLit => {
+                    if server && !f.in_test(t.line) {
+                        if t.text.ends_with('=') {
+                            // parser probe: `line.strip_prefix("version=")`
+                            for (k, _) in keys_in(&t.text, false) {
+                                parsed.insert(k.clone());
+                                acknowledged.insert(k);
+                            }
+                        } else {
+                            for (k, line_off) in keys_in(&t.text, true) {
+                                emitted.entry(k).or_insert_with(|| {
+                                    (f.path.clone(), t.line + line_off, t.col)
+                                });
+                            }
+                        }
+                    } else {
+                        for (k, _) in keys_in(&t.text, false) {
+                            acknowledged.insert(k);
+                        }
+                    }
+                }
+                _ => {}
+            }
+        }
+    }
+
+    let mut out = Vec::new();
+    for (k, (file, line, col)) in &emitted {
+        if !acknowledged.contains(k) {
+            out.push(Finding {
+                file: file.clone(),
+                line: *line,
+                col: *col,
+                lint: "stats-key-drift",
+                message: format!(
+                    "reply key `{k}=` is emitted but appears in no protocol doc table \
+                     or parser"
+                ),
+                fix: format!(
+                    "add `{k}=` to the module-doc protocol table (or parse it where the \
+                     reply is consumed)"
+                ),
+            });
+        }
+    }
+    for (k, file, line, col) in &doc_keys {
+        if !emitted.contains_key(k) && !parsed.contains(k) {
+            out.push(Finding {
+                file: file.clone(),
+                line: *line,
+                col: *col,
+                lint: "stats-key-drift",
+                message: format!(
+                    "protocol doc names `{k}=` but the serving tier never emits or \
+                     parses it"
+                ),
+                fix: format!("emit or parse `{k}=` again, or delete the stale doc row"),
+            });
+        }
+    }
+    out
+}
+
+/// Extract `key=` tokens from one literal or doc-comment body.
+///
+/// A key is `[a-z_][a-z0-9_]*` directly before `=`, not preceded by an
+/// identifier or `-` character. With `strict`, the `=` must be followed
+/// by `{` (a format argument) or an ASCII digit — the emission shapes —
+/// so prose like `key=value` in error text never registers as emitted.
+/// Returns each key with the number of newlines before it in the text.
+fn keys_in(text: &str, strict: bool) -> Vec<(String, usize)> {
+    let b = text.as_bytes();
+    let mut out = Vec::new();
+    let mut line_off = 0usize;
+    let mut i = 0;
+    while i < b.len() {
+        if b[i] == b'\n' {
+            line_off += 1;
+        } else if b[i] == b'=' {
+            let key_char = |c: u8| c.is_ascii_lowercase() || c.is_ascii_digit() || c == b'_';
+            let mut j = i;
+            while j > 0 && key_char(b[j - 1]) {
+                j -= 1;
+            }
+            let starts_ok = j < i && (b[j].is_ascii_lowercase() || b[j] == b'_');
+            let boundary_ok = j == 0
+                || !(b[j - 1].is_ascii_alphanumeric() || b[j - 1] == b'_' || b[j - 1] == b'-');
+            let follower_ok = !strict
+                || matches!(b.get(i + 1), Some(c) if *c == b'{' || c.is_ascii_digit());
+            if starts_ok && boundary_ok && follower_ok {
+                out.push((String::from_utf8_lossy(&b[j..i]).into_owned(), line_off));
+            }
+        }
+        i += 1;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::analyze::analyze_sources;
+
+    #[test]
+    fn undocumented_emitted_key_fires() {
+        let src = "//! Protocol: `<- OK version=3`\n\
+                   fn reply(v: u64, b: u64) -> String {\n\
+                   format!(\"OK version={v} bogus={b}\\n\")\n\
+                   }\n";
+        let r = analyze_sources(&[("rust/src/coordinator/serve.rs".to_string(), src.to_string())]);
+        assert_eq!(r.findings.len(), 1, "{:?}", r.findings);
+        assert_eq!(r.findings[0].lint, "stats-key-drift");
+        assert!(r.findings[0].message.contains("`bogus=`"), "{}", r.findings[0].message);
+        assert_eq!(r.findings[0].line, 3);
+    }
+
+    #[test]
+    fn documented_but_never_emitted_fires_at_the_doc_line() {
+        let src = "//! Protocol: `<- OK version=3 ghost=1`\n\
+                   fn reply(v: u64) -> String { format!(\"OK version={v}\\n\") }\n";
+        let r = analyze_sources(&[("rust/src/coordinator/serve.rs".to_string(), src.to_string())]);
+        assert_eq!(r.findings.len(), 1, "{:?}", r.findings);
+        assert!(r.findings[0].message.contains("`ghost=`"), "{}", r.findings[0].message);
+        assert_eq!(r.findings[0].line, 1);
+    }
+
+    #[test]
+    fn parser_probes_acknowledge_both_directions() {
+        // `bytes=` is emitted in ship.rs and parsed (strip_prefix probe)
+        // in serve.rs; `rows=` is documented and parsed but emitted
+        // nowhere — the probe keeps both directions quiet
+        let ship = "fn hdr(n: usize) -> String { format!(\"SNAPSHOT bytes={n}\\n\") }\n";
+        let serve = "//! Sync wire: `-> LEARN rows=...`, `<- SNAPSHOT bytes=...`\n\
+                     fn parse(line: &str) -> Option<(&str, &str)> {\n\
+                     line.strip_prefix(\"bytes=\").map(|r| (\"b\", r))\n\
+                     .or_else(|| line.strip_prefix(\"rows=\").map(|r| (\"r\", r)))\n\
+                     }\n";
+        let r = analyze_sources(&[
+            ("rust/src/model/ship.rs".to_string(), ship.to_string()),
+            ("rust/src/coordinator/serve.rs".to_string(), serve.to_string()),
+        ]);
+        assert!(r.findings.is_empty(), "{:?}", r.findings);
+    }
+
+    #[test]
+    fn non_server_files_and_flag_text_are_exempt() {
+        let kernel = "fn f(b: u64) -> String { format!(\"bogus={b}\") }\n";
+        let r = analyze_sources(&[("rust/src/dense/x.rs".to_string(), kernel.to_string())]);
+        assert!(r.findings.is_empty(), "{:?}", r.findings);
+        // `--learn-batch=16` in a doc never registers as a protocol key
+        let server = "//! Start with `--learn-batch=16`.\n\
+                      fn live() {}\n";
+        let r = analyze_sources(&[("rust/src/coordinator/serve.rs".to_string(), server.to_string())]);
+        assert!(r.findings.is_empty(), "{:?}", r.findings);
+    }
+
+    #[test]
+    fn test_literals_acknowledge_emission() {
+        let src = "fn reply(n: u64) -> String { format!(\"OK depth={n}\\n\") }\n\
+                   #[cfg(test)]\n\
+                   mod tests {\n\
+                   fn probe(r: &str) -> bool { r.contains(\"depth=\") }\n\
+                   }\n";
+        let r = analyze_sources(&[("rust/src/coordinator/router.rs".to_string(), src.to_string())]);
+        assert!(r.findings.is_empty(), "{:?}", r.findings);
+    }
+
+    #[test]
+    fn reasoned_allow_silences_drift() {
+        let src = "// analyze::allow(stats-key-drift): experimental key, doc lands with the client\n\
+                   fn reply(b: u64) -> String { format!(\"OK bogus={b}\\n\") }\n";
+        let r = analyze_sources(&[("rust/src/coordinator/serve.rs".to_string(), src.to_string())]);
+        assert!(r.findings.is_empty(), "{:?}", r.findings);
+        assert_eq!(r.suppressed, 1);
+    }
+}

@@ -1,0 +1,136 @@
+//! Suppression markers: `// analyze::allow(<lint-id>): <reason>`.
+//!
+//! A marker silences findings of the named lint on its own line or on the
+//! line directly below — so it works both as a trailing comment and as a
+//! comment line above the flagged statement. Markers are only recognized
+//! in plain (non-doc) comments: doc comments may freely *describe* the
+//! syntax without creating live suppressions.
+//!
+//! The reason is not optional. A marker with no reason, an empty reason,
+//! or an unknown lint id is itself reported (`bad-allow`), so every
+//! suppression in the tree carries a written justification.
+
+use super::{Finding, SourceFile, LINT_IDS};
+
+/// One recognized suppression marker.
+pub(crate) struct Allow {
+    pub lint: String,
+    pub line: usize,
+}
+
+const MARKER: &str = "analyze::allow";
+
+/// Extract the markers (and marker-syntax findings) from one file.
+pub(crate) fn collect(f: &SourceFile) -> (Vec<Allow>, Vec<Finding>) {
+    let mut allows = Vec::new();
+    let mut findings = Vec::new();
+    for t in &f.tokens {
+        if t.is_doc_comment() || !t.is_comment() {
+            continue;
+        }
+        let Some(pos) = t.text.find(MARKER) else { continue };
+        let rest = t.text[pos + MARKER.len()..].trim_start();
+        let bad = |msg: String| Finding {
+            file: f.path.clone(),
+            line: t.line,
+            col: t.col,
+            lint: "bad-allow",
+            message: msg,
+            fix: "write `// analyze::allow(<lint-id>): <reason>` with a real justification"
+                .to_string(),
+        };
+        let Some(inner) = rest.strip_prefix('(') else {
+            findings.push(bad("malformed allow marker: expected `(<lint-id>)`".to_string()));
+            continue;
+        };
+        let Some(close) = inner.find(')') else {
+            findings.push(bad("malformed allow marker: unclosed `(`".to_string()));
+            continue;
+        };
+        let lint = inner[..close].trim().to_string();
+        let tail = inner[close + 1..].trim_start();
+        if !LINT_IDS.contains(&lint.as_str()) {
+            findings.push(bad(format!("allow marker names unknown lint `{lint}`")));
+            continue;
+        }
+        // the marker suppresses even when the reason is missing — but the
+        // missing reason is its own finding, so the tree still fails CI
+        allows.push(Allow { lint: lint.clone(), line: t.line });
+        let reason = tail.strip_prefix(':').map(str::trim).unwrap_or("");
+        if reason.is_empty() {
+            findings.push(bad(format!(
+                "allow marker for `{lint}` has no reason — suppressions must be justified"
+            )));
+        }
+    }
+    (allows, findings)
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::analyze::analyze_sources;
+
+    fn run(src: &str) -> crate::analyze::Report {
+        analyze_sources(&[("rust/src/some/file.rs".to_string(), src.to_string())])
+    }
+
+    #[test]
+    fn reasoned_marker_suppresses_finding() {
+        let src = "// analyze::allow(float-cmp-unwrap): inputs are NaN-free by construction\n\
+                   fn f(a: f64, b: f64) -> bool { a.partial_cmp(&b).unwrap().is_eq() }\n";
+        let r = run(src);
+        assert!(r.findings.is_empty(), "{:?}", r.findings);
+        assert_eq!(r.suppressed, 1);
+    }
+
+    #[test]
+    fn trailing_marker_on_same_line_works() {
+        let src = "fn f(a: f64, b: f64) -> bool { a.partial_cmp(&b).unwrap().is_eq() } \
+                   // analyze::allow(float-cmp-unwrap): test fixture\n";
+        let r = run(src);
+        assert!(r.findings.is_empty(), "{:?}", r.findings);
+        assert_eq!(r.suppressed, 1);
+    }
+
+    #[test]
+    fn bare_marker_is_a_finding_but_still_suppresses() {
+        let src = "// analyze::allow(float-cmp-unwrap)\n\
+                   fn f(a: f64, b: f64) -> bool { a.partial_cmp(&b).unwrap().is_eq() }\n";
+        let r = run(src);
+        assert_eq!(r.findings.len(), 1, "{:?}", r.findings);
+        assert_eq!(r.findings[0].lint, "bad-allow");
+        assert_eq!(r.suppressed, 1);
+    }
+
+    #[test]
+    fn unknown_lint_id_is_a_finding_and_does_not_suppress() {
+        let src = "// analyze::allow(made-up-lint): whatever\n\
+                   fn f(a: f64, b: f64) -> bool { a.partial_cmp(&b).unwrap().is_eq() }\n";
+        let r = run(src);
+        let lints: Vec<&str> = r.findings.iter().map(|f| f.lint).collect();
+        assert!(lints.contains(&"bad-allow"), "{lints:?}");
+        assert!(lints.contains(&"float-cmp-unwrap"), "{lints:?}");
+    }
+
+    #[test]
+    fn marker_in_doc_comment_is_ignored() {
+        // doc comments may describe the syntax without suppressing anything
+        let src = "/// like `// analyze::allow(float-cmp-unwrap)` but documented\n\
+                   fn f(a: f64, b: f64) -> bool { a.partial_cmp(&b).unwrap().is_eq() }\n";
+        let r = run(src);
+        let lints: Vec<&str> = r.findings.iter().map(|f| f.lint).collect();
+        assert_eq!(lints, vec!["float-cmp-unwrap"]);
+        assert_eq!(r.suppressed, 0);
+    }
+
+    #[test]
+    fn marker_does_not_leak_past_the_next_line() {
+        let src = "// analyze::allow(float-cmp-unwrap): only covers line 2\n\
+                   fn ok() {}\n\
+                   fn f(a: f64, b: f64) -> bool { a.partial_cmp(&b).unwrap().is_eq() }\n";
+        let r = run(src);
+        assert_eq!(r.findings.len(), 1);
+        assert_eq!(r.findings[0].lint, "float-cmp-unwrap");
+        assert_eq!(r.findings[0].line, 3);
+    }
+}

@@ -55,6 +55,13 @@ OPERATIONS:
              SCORE vs an unsharded reference, LEARN restored, skew 0 (CI)
   bench-diff perf-trajectory gate: diff target/bench_results/BENCH_*.json
              against the committed bench_baselines/ snapshot
+  analyze    in-tree static analysis: determinism + liveness invariant
+             lints (float-cmp-unwrap, panic-in-server, lock-order,
+             nondet-kernel, stats-key-drift) over rust/src, rust/tests,
+             benches, examples — or explicit PATHS. Nonzero exit on any
+             unsuppressed finding (CI gate). --list emits one
+             machine-readable `path:line:col lint message` per finding;
+             --fix-list appends the suggested fix
   datagen    generate + cache a dataset, print stats
   selftest   quick end-to-end smoke test
 
@@ -142,6 +149,7 @@ pub fn main() {
         "shard-check" => cmd_shard_check(&args),
         "failover-check" => cmd_failover_check(&args),
         "bench-diff" => cmd_bench_diff(&args),
+        "analyze" => cmd_analyze(&args),
         "datagen" => cmd_datagen(&args),
         "selftest" => cmd_selftest(&args),
         _ => {
@@ -1566,6 +1574,48 @@ fn cmd_datagen(args: &Args) -> crate::error::Result<()> {
         println!("{name}: m={m} n={n} L={l} |A|={nnz} sp(A)={spa:.4} sp(Y)={spy:.4}");
     }
     Ok(())
+}
+
+/// `fastpi analyze [--list] [--fix-list] [PATHS...]` — the in-tree
+/// invariant linter (see `crate::analyze` for the lint catalogue).
+fn cmd_analyze(args: &Args) -> crate::error::Result<()> {
+    let positional = args.positional();
+    let roots: Vec<std::path::PathBuf> = if positional.len() > 1 {
+        positional[1..].iter().map(std::path::PathBuf::from).collect()
+    } else {
+        // default scan scope: everything that ships behavior
+        ["rust/src", "rust/tests", "benches", "examples"]
+            .iter()
+            .map(std::path::PathBuf::from)
+            .filter(|p| p.is_dir())
+            .collect()
+    };
+    let report = crate::analyze::analyze_paths(&roots)?;
+    let machine = args.flag("list") || args.flag("fix-list");
+    for f in &report.findings {
+        if machine {
+            let mut line = format!("{}:{}:{} {} {}", f.file, f.line, f.col, f.lint, f.message);
+            if args.flag("fix-list") {
+                line.push_str(&format!(" [fix: {}]", f.fix));
+            }
+            println!("{line}");
+        } else {
+            println!("{}:{}:{} [{}] {}", f.file, f.line, f.col, f.lint, f.message);
+            println!("    fix: {}", f.fix);
+        }
+    }
+    if report.findings.is_empty() {
+        println!(
+            "analyze: clean — {} files scanned, {} suppressed finding(s)",
+            report.files, report.suppressed
+        );
+        Ok(())
+    } else {
+        Err(crate::error::Error::Invalid(format!(
+            "analyze: {} unsuppressed finding(s)",
+            report.findings.len()
+        )))
+    }
 }
 
 fn cmd_selftest(args: &Args) -> crate::error::Result<()> {

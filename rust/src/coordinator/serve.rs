@@ -86,7 +86,11 @@
 //! -> SCORE <topk> j1:v1,j2:v2,...
 //! <- OK label:score,label:score,...
 //! -> LEARN <l1,l2,...|-> j1:v1,j2:v2,...   (labels; "-" = none)
-//! <- OK version=... pending=...           (pending=0 means a fold+swap ran;
+//! <- OK version=... pending=...           (pending=0 means a fold+swap ran
+//!                                          and appends rows=... drift=...
+//!                                          resolve=... — rows folded so far,
+//!                                          accumulated drift estimate, and
+//!                                          whether a full re-solve is flagged;
 //!                                          `unpublished=1` flags a fold that
 //!                                          is live in memory but could not
 //!                                          be persisted — it is served under
@@ -483,7 +487,14 @@ impl ScoreServer {
                 std::thread::sleep(replica.poll.min(Duration::from_millis(200)));
             }
         }
-        let (version, artifact) = current.expect("loop above guarantees a model");
+        // the poll loop above either sets `current` or returns Err on
+        // deadline, but a panic here would kill the replica bootstrap
+        // thread silently — fail as a reply-able error instead
+        let Some((version, artifact)) = current else {
+            return Err(crate::error::Error::Invalid(
+                "replica bootstrap: poll loop ended with no model".into(),
+            ));
+        };
         let serving = ServingModel {
             version,
             rank: artifact.rank(),

@@ -123,7 +123,7 @@ fn gen_labels(cfg: &SynthConfig, a: &Csr, rng: &mut Rng) -> Csr {
         }
         let t = rng.usize_range(1, cfg.max_labels_per_inst + 1);
         let mut scored: Vec<(usize, f64)> = acc.iter().map(|(&k, &v)| (k, v)).collect();
-        scored.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0)));
+        rank_labels_desc(&mut scored);
         let mut assigned: HashSet<usize> = HashSet::new();
         for &(label, _) in scored.iter().take(t) {
             let final_label = if rng.f64() < cfg.label_noise {
@@ -142,6 +142,14 @@ fn gen_labels(cfg: &SynthConfig, a: &Csr, rng: &mut Rng) -> Csr {
         }
     }
     Csr::from_coo(&coo)
+}
+
+/// Rank `(label, score)` pairs best-score-first, ties broken by label id.
+/// `total_cmp` so a NaN score (a poisoned feature weight propagating
+/// through the accumulator) still orders deterministically instead of
+/// panicking the generator.
+fn rank_labels_desc(scored: &mut [(usize, f64)]) {
+    scored.sort_by(|a, b| b.1.total_cmp(&a.1).then(a.0.cmp(&b.0)));
 }
 
 #[cfg(test)]
@@ -170,6 +178,17 @@ mod tests {
         assert!(col_stats.gini > 0.3, "col gini {}", col_stats.gini);
         assert!(col_stats.top1pct_edge_share > 0.05, "top1% {}", col_stats.top1pct_edge_share);
         assert!(col_stats.max > 10 * col_stats.median.max(1), "max {} median {}", col_stats.max, col_stats.median);
+    }
+
+    #[test]
+    fn label_ranking_survives_nan_scores() {
+        // regression: partial_cmp().unwrap() panicked on a NaN score
+        let mut scored = vec![(3, 1.0), (1, f64::NAN), (2, 2.0), (0, 1.0)];
+        rank_labels_desc(&mut scored);
+        let labels: Vec<usize> = scored.iter().map(|&(l, _)| l).collect();
+        // NaN is the maximum of the IEEE total order, so it ranks first;
+        // the finite tail stays score-descending with id tiebreaks
+        assert_eq!(labels, vec![1, 2, 0, 3]);
     }
 
     #[test]

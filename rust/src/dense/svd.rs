@@ -498,7 +498,9 @@ pub fn svd_jacobi(a: &Matrix) -> Svd {
     let norms: Vec<f64> = (0..n)
         .map(|j| w.row(j).iter().map(|x| x * x).sum::<f64>().sqrt())
         .collect();
-    order.sort_by(|&a, &b| norms[b].partial_cmp(&norms[a]).unwrap());
+    // total_cmp: a NaN column norm (NaN/inf input) must order
+    // deterministically and surface as a NaN sigma, not a sort panic
+    order.sort_by(|&a, &b| norms[b].total_cmp(&norms[a]));
 
     let mut u = Matrix::zeros(m, n);
     let mut s = Vec::with_capacity(n);
@@ -524,6 +526,21 @@ mod tests {
     use crate::dense::qr::orthogonality_defect;
     use crate::util::propcheck::check;
     use crate::util::rng::Rng;
+
+    #[test]
+    fn svd_jacobi_survives_nan_input() {
+        // regression: the singular-value ordering sort panicked on NaN via
+        // partial_cmp().unwrap(); the sweep cap bounds the work, so NaN
+        // input must return NaN sigmas, not panic
+        let mut a = Matrix::zeros(2, 2);
+        a[(0, 0)] = f64::NAN;
+        a[(0, 1)] = 1.0;
+        a[(1, 0)] = f64::NAN;
+        a[(1, 1)] = 1.0;
+        let f = svd_jacobi(&a);
+        assert_eq!(f.s.len(), 2);
+        assert!(f.s.iter().any(|x| x.is_nan()));
+    }
 
     fn assert_valid_svd(a: &Matrix, f: &Svd, tol: f64) {
         let (m, n) = a.shape();

@@ -21,6 +21,7 @@
 //! See DESIGN.md for the architecture and EXPERIMENTS.md for the
 //! paper-vs-measured results.
 
+pub mod analyze;
 pub mod cli;
 pub mod coordinator;
 pub mod data;

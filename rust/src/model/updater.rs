@@ -211,6 +211,7 @@ impl OnlineUpdater {
             return Ok(self.noop_report());
         }
 
+        // analyze::allow(nondet-kernel): report-only timing; the fold is seeded, bit-deterministic
         let t = std::time::Instant::now();
         let art = &self.artifact;
         // deterministic per-fold stream: the same fold sequence reproduces

@@ -19,7 +19,9 @@ pub struct Stats {
 impl Stats {
     pub fn from_samples(mut xs: Vec<f64>) -> Stats {
         assert!(!xs.is_empty());
-        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        // total_cmp: a NaN sample (e.g. a zero-duration rate division)
+        // sorts last instead of panicking the whole bench run
+        xs.sort_by(|a, b| a.total_cmp(b));
         let n = xs.len();
         let mean = xs.iter().sum::<f64>() / n as f64;
         let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
@@ -613,6 +615,17 @@ mod tests {
         assert_eq!(s.min_s, 1.0);
         assert_eq!(s.max_s, 5.0);
         assert_eq!(s.p50_s, 3.0);
+    }
+
+    #[test]
+    fn stats_survive_nan_samples() {
+        // regression: partial_cmp().unwrap() panicked the sort on any NaN
+        // sample; under total order NaN sorts after every finite value
+        let s = Stats::from_samples(vec![2.0, f64::NAN, 1.0]);
+        assert_eq!(s.iters, 3);
+        assert_eq!(s.min_s, 1.0);
+        assert_eq!(s.p50_s, 2.0);
+        assert!(s.max_s.is_nan());
     }
 
     #[test]

@@ -131,8 +131,9 @@ impl Rng {
     pub fn sample_cumulative(&mut self, cum: &[f64]) -> usize {
         let total = *cum.last().expect("empty cumulative weights");
         let x = self.f64() * total;
-        // first index with cum[idx] > x
-        match cum.binary_search_by(|c| c.partial_cmp(&x).unwrap()) {
+        // first index with cum[idx] > x; total_cmp so a NaN weight (which
+        // makes every cum tail NaN) degrades to an in-range pick, not a panic
+        match cum.binary_search_by(|c| c.total_cmp(&x)) {
             Ok(i) => (i + 1).min(cum.len() - 1),
             Err(i) => i.min(cum.len() - 1),
         }
@@ -228,7 +229,7 @@ mod tests {
         assert!(xs.iter().all(|&x| (1.0..=1000.0).contains(&x)));
         // median should be small (heavy skew): for gamma=2, median = 2 (approx)
         let mut s = xs.clone();
-        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        s.sort_by(|a, b| a.total_cmp(b));
         assert!(s[n / 2] < 3.0, "median {}", s[n / 2]);
         // but max should be large
         assert!(*s.last().unwrap() > 100.0);
@@ -245,5 +246,17 @@ mod tests {
         assert_eq!(counts[1], 0);
         let ratio = counts[2] as f64 / counts[0] as f64;
         assert!((ratio - 3.0).abs() < 0.3, "ratio {ratio}");
+    }
+
+    #[test]
+    fn sample_cumulative_survives_nan_weights() {
+        // regression: a NaN in the cumulative table made binary_search_by
+        // panic through partial_cmp().unwrap(); total_cmp keeps the draw
+        // in range instead
+        let mut r = Rng::seed_from_u64(17);
+        let cum = [1.0, f64::NAN, 4.0];
+        for _ in 0..1000 {
+            assert!(r.sample_cumulative(&cum) < cum.len());
+        }
     }
 }
