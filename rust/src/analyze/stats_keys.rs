@@ -211,6 +211,49 @@ mod tests {
     }
 
     #[test]
+    fn events_journal_keys_reconcile_with_the_doc_table() {
+        // the EVENTS drain shape: `seq=<s> t_ns=<t> kind=<k> member=<i>`
+        let documented = "//! Events wire: `<- seq=0 t_ns=12 kind=circuit_open member=1`\n\
+                          fn event(s: u64, t: u64, k: &str, i: usize) -> String {\n\
+                          format!(\"seq={s} t_ns={t} kind={k} member={i}\\n\")\n\
+                          }\n";
+        let r = analyze_sources(&[(
+            "rust/src/coordinator/router.rs".to_string(),
+            documented.to_string(),
+        )]);
+        assert!(r.findings.is_empty(), "{:?}", r.findings);
+        // drop `member=` from the doc table: the emission fires at its line
+        let undocumented = "//! Events wire: `<- seq=0 t_ns=12 kind=circuit_open`\n\
+                            fn event(s: u64, t: u64, k: &str, i: usize) -> String {\n\
+                            format!(\"seq={s} t_ns={t} kind={k} member={i}\\n\")\n\
+                            }\n";
+        let r = analyze_sources(&[(
+            "rust/src/coordinator/router.rs".to_string(),
+            undocumented.to_string(),
+        )]);
+        assert_eq!(r.findings.len(), 1, "{:?}", r.findings);
+        assert!(r.findings[0].message.contains("`member=`"), "{}", r.findings[0].message);
+        assert_eq!(r.findings[0].line, 3);
+    }
+
+    #[test]
+    fn metrics_framing_key_reconciles_and_stale_doc_fires() {
+        // the `OK lines=<n>` multi-line framing header: emitted + doc'd
+        let live = "//! Framing: `<- OK lines=42` then that many body lines\n\
+                    fn hdr(n: usize) -> String { format!(\"OK lines={n}\\n\") }\n";
+        let r = analyze_sources(&[("rust/src/coordinator/serve.rs".to_string(), live.to_string())]);
+        assert!(r.findings.is_empty(), "{:?}", r.findings);
+        // the doc row outliving the verb fires at the doc line
+        let stale = "//! Framing: `<- OK lines=42` then that many body lines\n\
+                     fn hdr() -> String { \"PONG\\n\".to_string() }\n";
+        let r =
+            analyze_sources(&[("rust/src/coordinator/serve.rs".to_string(), stale.to_string())]);
+        assert_eq!(r.findings.len(), 1, "{:?}", r.findings);
+        assert!(r.findings[0].message.contains("`lines=`"), "{}", r.findings[0].message);
+        assert_eq!(r.findings[0].line, 1);
+    }
+
+    #[test]
     fn reasoned_allow_silences_drift() {
         let src = "// analyze::allow(stats-key-drift): experimental key, doc lands with the client\n\
                    fn reply(b: u64) -> String { format!(\"OK bogus={b}\\n\") }\n";

@@ -53,6 +53,10 @@ OPERATIONS:
              kill one member per group mid-load, then promote the dead
              primary's follower — asserts zero dropped requests, bitwise
              SCORE vs an unsharded reference, LEARN restored, skew 0 (CI)
+  metrics    dump a server or router METRICS snapshot: `fastpi metrics
+             HOST:PORT` (routers answer with the fleet-merged view)
+  events     drain a server or router EVENTS journal: `fastpi events
+             HOST:PORT [N]` (N = max events, default all)
   bench-diff perf-trajectory gate: diff target/bench_results/BENCH_*.json
              against the committed bench_baselines/ snapshot
   analyze    in-tree static analysis: determinism + liveness invariant
@@ -113,8 +117,8 @@ BENCH-DIFF OPTIONS:
   --baseline DIR       committed snapshot (default bench_baselines)
   --current DIR        fresh results (default target/bench_results)
   --max-regress 0.2    allowed fractional regression per gated key
-  --keys a,b           gated value keys (default throughput_rps,p95_ms,
-                       p99_storm_ms,propagation_p95_ms,speedup_x)
+  --keys a,b           gated value keys (default throughput_rps,p50_ms,
+                       p95_ms,p99_storm_ms,propagation_p95_ms,speedup_x)
 ";
 
 pub fn main() {
@@ -144,6 +148,8 @@ pub fn main() {
         "promote" => cmd_promote(&args),
         "shard" => cmd_shard(&args),
         "route" => cmd_route(&args),
+        "metrics" => cmd_metrics(&args),
+        "events" => cmd_events(&args),
         "lifecycle-check" => cmd_lifecycle_check(&args),
         "cluster-check" => cmd_cluster_check(&args),
         "shard-check" => cmd_shard_check(&args),
@@ -681,13 +687,46 @@ fn cmd_route(args: &Args) -> crate::error::Result<()> {
     }
 }
 
+fn cmd_metrics(args: &Args) -> crate::error::Result<()> {
+    use crate::coordinator::multiline_request;
+    use crate::error::Error;
+    let Some(target) = args.positional().get(1) else {
+        return Err(Error::Invalid("usage: fastpi metrics HOST:PORT".into()));
+    };
+    let addr = resolve_addr(target)?;
+    let body = multiline_request(addr, "METRICS").map_err(Error::Io)?;
+    print!("{body}");
+    Ok(())
+}
+
+fn cmd_events(args: &Args) -> crate::error::Result<()> {
+    use crate::coordinator::multiline_request;
+    use crate::error::Error;
+    let Some(target) = args.positional().get(1) else {
+        return Err(Error::Invalid("usage: fastpi events HOST:PORT [N]".into()));
+    };
+    let addr = resolve_addr(target)?;
+    let line = match args.positional().get(2) {
+        Some(n) => {
+            let n: usize = n.parse().map_err(|_| {
+                Error::Invalid(format!("event count must be a number, got '{n}'"))
+            })?;
+            format!("EVENTS {n}")
+        }
+        None => "EVENTS".to_string(),
+    };
+    let body = multiline_request(addr, &line).map_err(Error::Io)?;
+    print!("{body}");
+    Ok(())
+}
+
 fn cmd_bench_diff(args: &Args) -> crate::error::Result<()> {
     use crate::util::bench;
     let baseline = args.str_or("baseline", "bench_baselines");
     let current = args.str_or("current", "target/bench_results");
     let max_regress: f64 = args.parse_or("max-regress", 0.20);
     let default_keys: Vec<String> =
-        ["throughput_rps", "p95_ms", "p99_storm_ms", "propagation_p95_ms", "speedup_x"]
+        ["throughput_rps", "p50_ms", "p95_ms", "p99_storm_ms", "propagation_p95_ms", "speedup_x"]
             .iter()
             .map(|s| s.to_string())
             .collect();
@@ -824,9 +863,10 @@ fn cmd_update(args: &Args) -> crate::error::Result<()> {
 /// mismatch, so CI can gate on it after a separate `train` process — the
 /// restart between the two is the point.
 fn cmd_lifecycle_check(args: &Args) -> crate::error::Result<()> {
-    use crate::coordinator::{text_request, ScoreServer, ServerConfig};
+    use crate::coordinator::{multiline_request, text_request, ScoreServer, ServerConfig};
     use crate::error::Error;
     use crate::model::{ModelStore, OnlineUpdater};
+    use crate::obs::registry::parse_scalars;
     let dir = model_dir_arg(args, &args.str_or("dataset", "bibtex"));
     let store = ModelStore::open(&dir)?;
     let Some((version, artifact)) = store.load_latest()? else {
@@ -876,6 +916,66 @@ fn cmd_lifecycle_check(args: &Args) -> crate::error::Result<()> {
             return Err(Error::Invalid(format!("STATS missing `{field}`: {stats}")));
         }
     }
+
+    // METRICS must parse, count the gemm work actually done, and stay
+    // monotone on every cumulative family between snapshots.
+    let gemm_key = "fastpi_stage_ns_count{stage=\"gemm\"}";
+    let find = |scalars: &[(String, f64)], key: &str| -> crate::error::Result<f64> {
+        scalars
+            .iter()
+            .find(|(k, _)| k == key)
+            .map(|&(_, v)| v)
+            .ok_or_else(|| Error::Invalid(format!("METRICS missing `{key}`")))
+    };
+    let metrics1 = multiline_request(addr, "METRICS").map_err(Error::Io)?;
+    let scalars1 = parse_scalars(&metrics1).map_err(Error::Invalid)?;
+    let gemm1 = find(&scalars1, gemm_key)?;
+    for _ in 0..8 {
+        let r = req(&format!("SCORE 3 {feats}"))?;
+        if !r.starts_with("OK ") {
+            return Err(Error::Invalid(format!("SCORE during METRICS check failed: {r}")));
+        }
+    }
+    let metrics2 = multiline_request(addr, "METRICS").map_err(Error::Io)?;
+    let scalars2 = parse_scalars(&metrics2).map_err(Error::Invalid)?;
+    let gemm2 = find(&scalars2, gemm_key)?;
+    if gemm2 < gemm1 + 8.0 {
+        return Err(Error::Invalid(format!(
+            "gemm span count did not advance with traffic: {gemm1} -> {gemm2} after 8 SCOREs"
+        )));
+    }
+    for (k, v1) in &scalars1 {
+        let base = k.split('{').next().unwrap_or(k);
+        let cumulative = k.contains("_bucket{")
+            || base.ends_with("_total")
+            || base.ends_with("_count")
+            || base.ends_with("_sum")
+            || base.ends_with("_total_ns");
+        if !cumulative {
+            continue;
+        }
+        let v2 = find(&scalars2, k)?;
+        if v2 < *v1 {
+            return Err(Error::Invalid(format!(
+                "cumulative series `{k}` went backwards between METRICS snapshots: {v1} -> {v2}"
+            )));
+        }
+    }
+    println!("  METRICS: {} series, gemm count {gemm1} -> {gemm2}, all monotone", scalars2.len());
+
+    // EVENTS must carry the lifecycle we just drove, then drain.
+    let events = multiline_request(addr, "EVENTS").map_err(Error::Io)?;
+    for kind in ["kind=learn", "kind=swap"] {
+        if !events.contains(kind) {
+            return Err(Error::Invalid(format!("EVENTS missing `{kind}`:\n{events}")));
+        }
+    }
+    let drained = multiline_request(addr, "EVENTS").map_err(Error::Io)?;
+    if !drained.is_empty() {
+        return Err(Error::Invalid(format!("EVENTS did not drain: second read got\n{drained}")));
+    }
+    println!("  EVENTS: learn + swap recorded, journal drained");
+
     server.shutdown();
     println!("lifecycle-check OK: v{version} served, reloaded, learned into v{}", version + 1);
     Ok(())
@@ -961,9 +1061,10 @@ impl Drop for Fleet {
 /// along the way. The ≥3-OS-process topology is the point: this is the
 /// multi-host story exercised on one machine.
 fn cmd_cluster_check(args: &Args) -> crate::error::Result<()> {
-    use crate::coordinator::{text_request, Router, RouterConfig};
+    use crate::coordinator::{multiline_request, text_request, Router, RouterConfig};
     use crate::error::Error;
     use crate::model::ModelStore;
+    use crate::obs::registry::parse_scalars;
     use std::time::{Duration, Instant};
 
     let dir = model_dir_arg(args, &args.str_or("dataset", "bibtex"));
@@ -1095,6 +1196,42 @@ fn cmd_cluster_check(args: &Args) -> crate::error::Result<()> {
             "router dropped requests: routed={routed} errors={errors}"
         )));
     }
+
+    // (f) the router's merged METRICS equals the sum of the members'
+    // — the fleet view is an exact merge, not a sample. The router's
+    // view is fetched FIRST so member-local traffic between the two
+    // reads can only push member counts above the merged snapshot,
+    // never below.
+    let merged = multiline_request(router.addr, "METRICS").map_err(Error::Io)?;
+    let merged_scalars = parse_scalars(&merged).map_err(Error::Invalid)?;
+    let gemm_key = "fastpi_stage_ns_count{stage=\"gemm\"}";
+    let merged_gemm = merged_scalars
+        .iter()
+        .find(|(k, _)| k == gemm_key)
+        .map(|&(_, v)| v)
+        .ok_or_else(|| Error::Invalid(format!("router METRICS missing `{gemm_key}`")))?;
+    let mut member_gemm = 0.0;
+    for &addr in &replica_addrs {
+        let body = multiline_request(addr, "METRICS").map_err(Error::Io)?;
+        let scalars = parse_scalars(&body).map_err(Error::Invalid)?;
+        member_gemm += scalars
+            .iter()
+            .find(|(k, _)| k == gemm_key)
+            .map(|&(_, v)| v)
+            .ok_or_else(|| {
+                Error::Invalid(format!("replica {addr} METRICS missing `{gemm_key}`"))
+            })?;
+    }
+    if merged_gemm > member_gemm || merged_gemm < routed_requests as f64 {
+        return Err(Error::Invalid(format!(
+            "merged METRICS inconsistent: router sees gemm count {merged_gemm}, \
+             members sum to {member_gemm}, routed {routed_requests}"
+        )));
+    }
+    println!(
+        "  METRICS merge consistent: router gemm count {merged_gemm} <= member sum {member_gemm}"
+    );
+
     router.shutdown();
     println!(
         "cluster-check OK: {n_replicas}-replica fleet converged v{v1} -> v{} with zero dropped requests",

@@ -14,6 +14,6 @@ pub mod serve;
 pub use pipeline::{PinvJob, PinvReport, PipelineCoordinator};
 pub use router::{Router, RouterConfig, RouterMode, RouterStats};
 pub use serve::{
-    score_request, text_request, text_request_timeout, ReplicaConfig, ScoreServer, ServerConfig,
-    ServerStats,
+    multiline_request, multiline_request_timeout, score_request, text_request,
+    text_request_timeout, ReplicaConfig, ScoreServer, ServerConfig, ServerStats,
 };

@@ -93,7 +93,24 @@
 //!
 //! Router verbs: `SCORE` (both modes), `LEARN` (sharded mode only — in
 //! replicated mode it belongs on the primary and a replica would refuse
-//! it anyway), `PING`, `STATS`, `QUIT`.
+//! it anyway), `PING`, `STATS`, `METRICS`, `EVENTS [<max>]`, `QUIT`.
+//!
+//! `METRICS` answers `OK lines=<n>` followed by `n` Prometheus-style
+//! lines: the fleet view. The router fetches every member's own METRICS
+//! body (a member that refuses the verb or times out is skipped, not
+//! failed), appends its own series — per-member upstream latency
+//! histograms `fastpi_upstream_ns{member="<flat index>"}`, retry and
+//! circuit-transition counters — and merges the lot with
+//! [`crate::obs::registry::merge_bodies`]: histogram buckets add
+//! exactly, so a merged `_count` is bitwise the sum of the member
+//! counts. `EVENTS [<max>]` drains the router's own journal
+//! (`circuit_open`/`circuit_close` transitions carrying `member=<flat
+//! index>`, plus one `reshard` entry carrying `shards=<n>` at sharded
+//! start), one `seq=<s> t_ns=<t> kind=<k> <detail>` line per event
+//! after the same `OK lines=<k>` header. Both verbs answer `ERR
+//! observability disabled` when [`RouterConfig::obs`] is off.
+//! Instrumentation is observation-only: it never changes member
+//! selection, retries, or reply bytes.
 //!
 //! Trade-off, stated openly: fan-out groups do blocking socket I/O on the
 //! shared worker pool, so a blackholed replica can occupy a pool worker
@@ -104,11 +121,17 @@
 //! upstream stalls. If that ever bites, the fix is a dedicated I/O thread
 //! set — keep the observability probes in mind too (`probe_timeout`).
 
+use crate::obs;
+use crate::obs::EventKind;
 use std::io::{BufRead, BufReader, BufWriter, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
+
+/// Ring capacity of the router's event journal; old entries are
+/// overwritten (and counted) past this, so memory stays bounded.
+const JOURNAL_CAP: usize = 256;
 
 /// Router tuning knobs.
 #[derive(Debug, Clone)]
@@ -130,6 +153,11 @@ pub struct RouterConfig {
     pub health_cooldown: Duration,
     /// listen address (`127.0.0.1:0` = loopback, ephemeral)
     pub bind: String,
+    /// serve the `METRICS`/`EVENTS` verbs and record upstream latency,
+    /// retry, and circuit-transition telemetry; off = no clock reads on
+    /// the fan-out path and both verbs answer `ERR observability
+    /// disabled`
+    pub obs: bool,
 }
 
 impl Default for RouterConfig {
@@ -142,6 +170,7 @@ impl Default for RouterConfig {
             fail_threshold: 2,
             health_cooldown: Duration::from_secs(1),
             bind: "127.0.0.1:0".into(),
+            obs: true,
         }
     }
 }
@@ -160,6 +189,80 @@ pub struct RouterStats {
     pub retries: AtomicUsize,
     /// fan-out rounds executed
     pub batches: AtomicUsize,
+}
+
+/// Observation-only router telemetry (see `rust/src/obs/README.md`).
+///
+/// The per-member upstream histograms are pre-built at construction, one
+/// per flat member index in `probe_fleet` order, so the fan-out hot path
+/// indexes a `Vec` instead of taking the registry lock. Everything here
+/// is a sink: nothing reads it back into routing decisions.
+pub struct RouterObs {
+    registry: obs::Registry,
+    journal: obs::Journal,
+    /// `fastpi_upstream_ns{member="i"}`, indexed by flat member index
+    upstream: Vec<Arc<obs::Histogram>>,
+    /// `fastpi_retries_total` — request lines re-sent to siblings
+    retries: Arc<obs::Counter>,
+    /// `fastpi_circuit_open_total` / `fastpi_circuit_close_total`
+    circuit_opened: Arc<obs::Counter>,
+    circuit_closed: Arc<obs::Counter>,
+    /// journal entries lost to ring wraparound, refreshed at render
+    journal_dropped: Arc<obs::Gauge>,
+}
+
+impl RouterObs {
+    fn new(groups: &[Vec<SocketAddr>]) -> RouterObs {
+        let registry = obs::Registry::new();
+        let members: usize = groups.iter().map(|g| g.len()).sum();
+        let upstream = (0..members)
+            .map(|i| registry.hist(&format!("fastpi_upstream_ns{{member=\"{i}\"}}")))
+            .collect();
+        RouterObs {
+            retries: registry.counter("fastpi_retries_total"),
+            circuit_opened: registry.counter("fastpi_circuit_open_total"),
+            circuit_closed: registry.counter("fastpi_circuit_close_total"),
+            journal_dropped: registry.gauge("fastpi_journal_dropped_total"),
+            upstream,
+            journal: obs::Journal::new(JOURNAL_CAP),
+            registry,
+        }
+    }
+
+    /// The router's own METRICS body (its series only — the fleet merge
+    /// happens in the verb handler).
+    fn render(&self) -> String {
+        self.journal_dropped.set(self.journal.dropped());
+        self.registry.render()
+    }
+}
+
+/// Journal one circuit transition reported by [`HealthTable::record`].
+/// The health table itself stays observation-free; callers hand its
+/// verdict here so obs-off routers never pay for the journal.
+fn journal_transition(obs: Option<&RouterObs>, idx: usize, tr: Option<CircuitTransition>) {
+    let (Some(o), Some(tr)) = (obs, tr) else { return };
+    match tr {
+        CircuitTransition::Opened => {
+            o.circuit_opened.inc();
+            o.journal.record(EventKind::CircuitOpen, format!("member={idx}"));
+        }
+        CircuitTransition::Closed => {
+            o.circuit_closed.inc();
+            o.journal.record(EventKind::CircuitClose, format!("member={idx}"));
+        }
+    }
+}
+
+/// A circuit state change observed by [`HealthTable::record`], returned
+/// to the caller so the transition can be journaled without the table
+/// knowing about observability.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CircuitTransition {
+    /// consecutive failures just crossed the threshold on a closed circuit
+    Opened,
+    /// a success just reset a circuit that was open (or half-open)
+    Closed,
 }
 
 /// Per-member consecutive-failure circuit breaker, indexed flat in group
@@ -216,17 +319,27 @@ impl HealthTable {
         self.members[idx].lock().unwrap_or_else(|e| e.into_inner())
     }
 
-    /// Feed one observed outcome (fan-out round or observability probe).
-    fn record(&self, idx: usize, ok: bool) {
+    /// Feed one observed outcome (fan-out round or observability probe),
+    /// reporting the circuit transition it caused, if any: `Opened` when
+    /// the failure count crosses the threshold on a circuit that was
+    /// closed, `Closed` when a success resets an open (or half-open) one.
+    /// A half-open member failing its re-probe merely re-arms the same
+    /// open circuit — no transition.
+    fn record(&self, idx: usize, ok: bool) -> Option<CircuitTransition> {
         let mut h = self.lock(idx);
         if ok {
+            let was_open = h.open_until.is_some();
             h.consecutive_failures = 0;
             h.open_until = None;
+            was_open.then_some(CircuitTransition::Closed)
         } else {
             h.consecutive_failures = h.consecutive_failures.saturating_add(1);
             if h.consecutive_failures >= self.fail_threshold {
+                let was_closed = h.open_until.is_none();
                 h.open_until = Some(Instant::now() + self.cooldown);
+                return was_closed.then_some(CircuitTransition::Opened);
             }
+            None
         }
     }
 
@@ -280,6 +393,8 @@ pub struct Router {
     health: Arc<HealthTable>,
     mode: RouterMode,
     upstream_timeout: Duration,
+    /// telemetry sinks; `None` when `RouterConfig::obs` is off
+    obs: Option<Arc<RouterObs>>,
     stop: Arc<AtomicBool>,
     accept_handle: Option<std::thread::JoinHandle<()>>,
     batch_handle: Option<std::thread::JoinHandle<()>>,
@@ -321,6 +436,10 @@ impl Router {
         let groups = Arc::new(groups);
         let health = Arc::new(HealthTable::new(&groups, cfg.fail_threshold, cfg.health_cooldown));
         let queue = Arc::new(Queue::new(cfg.queue_capacity));
+        let obs = if cfg.obs { Some(Arc::new(RouterObs::new(&groups))) } else { None };
+        if let (Some(o), RouterMode::Sharded) = (&obs, mode) {
+            o.journal.record(EventKind::Reshard, format!("shards={}", groups.len()));
+        }
 
         let b_queue = queue.clone();
         let b_stop = stop.clone();
@@ -328,9 +447,10 @@ impl Router {
         let b_groups = groups.clone();
         let b_health = health.clone();
         let b_cfg = cfg.clone();
-        let batch_handle = std::thread::Builder::new()
-            .name("route-batcher".into())
-            .spawn(move || fanout_loop(b_groups, b_health, mode, b_queue, b_stop, b_stats, b_cfg))?;
+        let b_obs = obs.clone();
+        let batch_handle = std::thread::Builder::new().name("route-batcher".into()).spawn(
+            move || fanout_loop(b_groups, b_health, mode, b_queue, b_stop, b_stats, b_cfg, b_obs),
+        )?;
 
         let a_stop = stop.clone();
         let a_stats = stats.clone();
@@ -338,6 +458,7 @@ impl Router {
         let a_groups = groups.clone();
         let a_health = health.clone();
         let a_timeout = cfg.upstream_timeout;
+        let a_obs = obs.clone();
         let accept_handle = std::thread::Builder::new().name("route-accept".into()).spawn(
             move || {
                 let mut conns: Vec<std::thread::JoinHandle<()>> = Vec::new();
@@ -349,8 +470,10 @@ impl Router {
                             let stop2 = a_stop.clone();
                             let gs = a_groups.clone();
                             let hl = a_health.clone();
+                            let ob = a_obs.clone();
                             conns.push(std::thread::spawn(move || {
-                                let _ = handle_conn(stream, q, st, stop2, gs, hl, mode, a_timeout);
+                                let _ =
+                                    handle_conn(stream, q, st, stop2, gs, hl, mode, a_timeout, ob);
                             }));
                             // prune finished handlers (same unbounded-handle
                             // hazard as the scoring server's accept loop)
@@ -375,6 +498,7 @@ impl Router {
             health,
             mode,
             upstream_timeout: cfg.upstream_timeout,
+            obs,
             stop,
             accept_handle: Some(accept_handle),
             batch_handle: Some(batch_handle),
@@ -395,7 +519,7 @@ impl Router {
     /// member that stops answering probes is also skipped by fan-out.
     pub fn replica_versions(&self) -> Vec<Option<u64>> {
         let t = probe_timeout(self.upstream_timeout);
-        probe_fleet(&self.groups, &self.health, t)
+        probe_fleet(&self.groups, &self.health, t, self.obs.as_deref())
             .into_iter()
             .map(|m| m.and_then(|m| m.version))
             .collect()
@@ -489,6 +613,7 @@ fn probe_fleet(
     groups: &[Vec<SocketAddr>],
     health: &HealthTable,
     timeout: Duration,
+    obs: Option<&RouterObs>,
 ) -> Vec<Option<MemberStatus>> {
     groups
         .iter()
@@ -496,13 +621,15 @@ fn probe_fleet(
         .enumerate()
         .map(|(idx, addr)| {
             let status = probe_member(addr, timeout);
-            health.record(idx, status.is_some());
+            let tr = health.record(idx, status.is_some());
+            journal_transition(obs, idx, tr);
             status
         })
         .collect()
 }
 
 /// Drain batches off the queue and fan each one out across the groups.
+#[allow(clippy::too_many_arguments)]
 fn fanout_loop(
     groups: Arc<Vec<Vec<SocketAddr>>>,
     health: Arc<HealthTable>,
@@ -511,6 +638,7 @@ fn fanout_loop(
     stop: Arc<AtomicBool>,
     stats: Arc<RouterStats>,
     cfg: RouterConfig,
+    obs: Option<Arc<RouterObs>>,
 ) {
     let mut rotation = 0usize; // rotates so batch-of-1 traffic still spreads
     while !stop.load(Ordering::Relaxed) {
@@ -522,12 +650,13 @@ fn fanout_loop(
             }
             continue;
         }
+        let o = obs.as_deref();
         match mode {
             RouterMode::Replicated => {
-                fanout_replicated(&groups, &health, rotation, batch, &stats, &cfg);
+                fanout_replicated(&groups, &health, rotation, batch, &stats, &cfg, o);
             }
             RouterMode::Sharded => {
-                fanout_sharded(&groups, &health, rotation, batch, &stats, &cfg);
+                fanout_sharded(&groups, &health, rotation, batch, &stats, &cfg, o);
             }
         }
         rotation = rotation.wrapping_add(1);
@@ -560,10 +689,16 @@ fn forward_and_record(
     lines: &[String],
     health: &HealthTable,
     timeout: Duration,
+    obs: Option<&RouterObs>,
 ) -> Vec<Option<String>> {
+    let t = obs.map(|_| Instant::now());
     let replies = forward_group(addr, lines, timeout);
     if !lines.is_empty() {
-        health.record(member_idx, replies.iter().any(Option::is_some));
+        if let (Some(o), Some(t)) = (obs, t) {
+            o.upstream[member_idx].record_duration(t.elapsed());
+        }
+        let tr = health.record(member_idx, replies.iter().any(Option::is_some));
+        journal_transition(obs, member_idx, tr);
     }
     replies
 }
@@ -578,6 +713,7 @@ fn fanout_replicated(
     batch: Vec<Pending>,
     stats: &RouterStats,
     cfg: &RouterConfig,
+    obs: Option<&RouterObs>,
 ) {
     // replicated groups are single-member, so group index = member index;
     // spread this round over the available replicas only (everyone when
@@ -601,7 +737,8 @@ fn fanout_replicated(
     let targets: Vec<(usize, Vec<String>)> = pool_groups.into_iter().zip(lines).collect();
     let mut replies: Vec<Vec<Option<String>>> =
         crate::runtime::pool::runtime().pool().par_map(&targets, |(g, ls)| {
-            forward_and_record(groups[*g][0], health.idx(*g, 0), ls, health, cfg.upstream_timeout)
+            let idx = health.idx(*g, 0);
+            forward_and_record(groups[*g][0], idx, ls, health, cfg.upstream_timeout, obs)
         });
 
     // retry round: a slice whose replica failed goes ONCE to a different
@@ -623,6 +760,9 @@ fn fanout_replicated(
     if !retry.is_empty() {
         let resent: usize = retry.iter().map(|(_, _, ls)| ls.len()).sum();
         stats.retries.fetch_add(resent, Ordering::Relaxed);
+        if let Some(o) = obs {
+            o.retries.add(resent as u64);
+        }
         let second: Vec<Vec<Option<String>>> =
             crate::runtime::pool::runtime().pool().par_map(&retry, |(_, g2, ls)| {
                 forward_and_record(
@@ -631,6 +771,7 @@ fn fanout_replicated(
                     ls,
                     health,
                     cfg.upstream_timeout,
+                    obs,
                 )
             });
         for ((si, _, _), rs) in retry.into_iter().zip(second) {
@@ -658,6 +799,7 @@ fn fanout_sharded(
     batch: Vec<Pending>,
     stats: &RouterStats,
     cfg: &RouterConfig,
+    obs: Option<&RouterObs>,
 ) {
     let all_lines: Vec<String> = batch.iter().map(|p| p.line.clone()).collect();
     let targets: Vec<(usize, usize, SocketAddr)> = groups
@@ -674,7 +816,7 @@ fn fanout_sharded(
     let per_shard: Vec<Vec<Option<String>>> =
         crate::runtime::pool::runtime().pool().par_map(&targets, |&(g, m, addr)| {
             let t = cfg.upstream_timeout;
-            let replies = forward_and_record(addr, health.idx(g, m), &all_lines, health, t);
+            let replies = forward_and_record(addr, health.idx(g, m), &all_lines, health, t, obs);
             if all_lines.is_empty() || replies.iter().any(Option::is_some) {
                 return replies;
             }
@@ -689,7 +831,10 @@ fn fanout_sharded(
                 return replies;
             };
             stats.retries.fetch_add(all_lines.len(), Ordering::Relaxed);
-            forward_and_record(grp[m2], health.idx(g, m2), &all_lines, health, t)
+            if let Some(o) = obs {
+                o.retries.add(all_lines.len() as u64);
+            }
+            forward_and_record(grp[m2], health.idx(g, m2), &all_lines, health, t, obs)
         });
 
     stats.batches.fetch_add(1, Ordering::Relaxed);
@@ -847,6 +992,7 @@ fn handle_conn(
     health: Arc<HealthTable>,
     mode: RouterMode,
     upstream_timeout: Duration,
+    obs: Option<Arc<RouterObs>>,
 ) -> std::io::Result<()> {
     stream.set_read_timeout(Some(Duration::from_millis(200)))?;
     // a client that stops reading must error this thread out, not wedge it
@@ -884,7 +1030,7 @@ fn handle_conn(
         }
         if msg == "STATS" {
             let t = probe_timeout(upstream_timeout);
-            let probes = probe_fleet(&groups, &health, t);
+            let probes = probe_fleet(&groups, &health, t, obs.as_deref());
             let known: Vec<u64> =
                 probes.iter().filter_map(|m| m.as_ref().and_then(|m| m.version)).collect();
             let skew = match (known.iter().min(), known.iter().max()) {
@@ -922,6 +1068,63 @@ fn handle_conn(
                 health.unhealthy(),
                 versions.join(","),
             )?;
+            writer.flush()?;
+            continue;
+        }
+        if msg == "METRICS" {
+            match &obs {
+                Some(o) => {
+                    // fleet view: every member's own body plus the
+                    // router's, merged bucket-exact (see module doc); a
+                    // member that refuses the verb or times out is
+                    // skipped — its absence is visible through the
+                    // member-labelled upstream histograms, not an error
+                    let t = probe_timeout(upstream_timeout);
+                    let mut bodies: Vec<String> = Vec::new();
+                    for addr in groups.iter().flat_map(|g| g.iter().copied()) {
+                        if let Ok(body) = super::serve::multiline_request_timeout(addr, "METRICS", t)
+                        {
+                            bodies.push(body);
+                        }
+                    }
+                    bodies.push(o.render());
+                    let merged = obs::registry::merge_bodies(&bodies);
+                    writeln!(writer, "OK lines={}", merged.lines().count())?;
+                    writer.write_all(merged.as_bytes())?;
+                }
+                None => writeln!(writer, "ERR observability disabled")?,
+            }
+            writer.flush()?;
+            continue;
+        }
+        if msg == "EVENTS" || msg.starts_with("EVENTS ") {
+            match &obs {
+                Some(o) => {
+                    let max = if msg == "EVENTS" {
+                        Some(0)
+                    } else {
+                        msg["EVENTS ".len()..].trim().parse::<usize>().ok()
+                    };
+                    match max {
+                        Some(max) => {
+                            let events = o.journal.drain(max);
+                            writeln!(writer, "OK lines={}", events.len())?;
+                            for e in &events {
+                                writeln!(
+                                    writer,
+                                    "seq={} t_ns={} kind={} {}",
+                                    e.seq,
+                                    e.t_ns,
+                                    e.kind.as_str(),
+                                    e.detail
+                                )?;
+                            }
+                        }
+                        None => writeln!(writer, "ERR bad request")?,
+                    }
+                }
+                None => writeln!(writer, "ERR observability disabled")?,
+            }
             writer.flush()?;
             continue;
         }
@@ -1099,6 +1302,12 @@ mod tests {
         assert!(stats.contains("replicas=3"), "{stats}");
         assert_eq!(router.stats.errors.load(Ordering::Relaxed), 0);
 
+        // the sharded start is journaled; the event line carries the
+        // group count
+        let ev = super::super::serve::multiline_request(router.addr, "EVENTS").unwrap();
+        assert!(ev.starts_with("seq="), "{ev}");
+        assert!(ev.contains("kind=reshard shards=3"), "{ev}");
+
         router.shutdown();
         for s in shards {
             s.shutdown();
@@ -1175,6 +1384,9 @@ mod tests {
         assert!(stats.contains("skew=0"), "{stats}");
         assert!(stats.contains("unhealthy=1"), "{stats}");
         assert!(stats.contains("errors=0"), "{stats}");
+        // the open circuit was journaled with the dead member's flat index
+        let ev = super::super::serve::multiline_request(router.addr, "EVENTS").unwrap();
+        assert!(ev.contains("kind=circuit_open member=1"), "{ev}");
         router.shutdown();
         live.shutdown();
     }
@@ -1217,6 +1429,49 @@ mod tests {
         );
         router.shutdown();
         live.shutdown();
+    }
+
+    #[test]
+    fn router_metrics_merge_and_disabled_surface() {
+        use super::super::serve::multiline_request;
+        let r1 = backend(21);
+        let r2 = backend(21);
+        let router = Router::start(vec![r1.addr, r2.addr], RouterConfig::default()).unwrap();
+        for _ in 0..6 {
+            text_request(router.addr, "SCORE 2 0:1.0").unwrap();
+        }
+        let merged = multiline_request(router.addr, "METRICS").unwrap();
+        let m1 = multiline_request(r1.addr, "METRICS").unwrap();
+        let m2 = multiline_request(r2.addr, "METRICS").unwrap();
+        let count = |body: &str, name: &str| -> f64 {
+            crate::obs::registry::parse_scalars(body)
+                .expect("metrics body parses")
+                .into_iter()
+                .find(|(k, _)| k == name)
+                .map_or(0.0, |(_, v)| v)
+        };
+        // bucket-exact merge: the fleet's gemm count is bitwise the sum
+        // of the members' own counts (no traffic between the fetches)
+        let key = "fastpi_stage_ns_count{stage=\"gemm\"}";
+        assert_eq!(count(&merged, key), count(&m1, key) + count(&m2, key));
+        assert!(count(&merged, key) >= 6.0, "{merged}");
+        // the router's own series ride along in the same merged body
+        let up = count(&merged, "fastpi_upstream_ns_count{member=\"0\"}")
+            + count(&merged, "fastpi_upstream_ns_count{member=\"1\"}");
+        assert!(up >= 1.0, "{merged}");
+        assert_eq!(count(&merged, "fastpi_retries_total"), 0.0);
+        router.shutdown();
+
+        // obs off: both verbs refuse, scoring is unaffected
+        let off =
+            Router::start(vec![r1.addr], RouterConfig { obs: false, ..Default::default() })
+                .unwrap();
+        assert_eq!(text_request(off.addr, "METRICS").unwrap(), "ERR observability disabled");
+        assert_eq!(text_request(off.addr, "EVENTS").unwrap(), "ERR observability disabled");
+        assert!(text_request(off.addr, "SCORE 2 0:1.0").unwrap().starts_with("OK "));
+        off.shutdown();
+        r1.shutdown();
+        r2.shutdown();
     }
 
     #[test]

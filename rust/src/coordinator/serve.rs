@@ -106,6 +106,9 @@
 //!                    <- SNAPSHOT version=... [shard=<k>/<n>] epoch=... bytes=...<raw body> | UNCHANGED version=...
 //! -> PING            <- PONG
 //! -> STATS           <- STATS served=... batches=... rejected=... avg_batch=... queue_depth=... swaps=... learned=...
+//! -> METRICS         <- OK lines=<n>, then n Prometheus-style metric lines
+//! -> EVENTS [<max>]  <- OK lines=<k>, then k drained journal lines, each
+//!                       seq=<s> t_ns=<t> kind=<k> <detail>
 //! -> QUIT            (closes the connection)
 //! ```
 //!
@@ -116,8 +119,27 @@
 //! counts accepted LEARN examples. `LEARN`/`RELOAD` answer `ERR learning
 //! disabled` / `ERR no model store` on a server started without the
 //! corresponding lifecycle pieces.
+//!
+//! ## Observability
+//!
+//! With [`ServerConfig::obs`] on (the default) the server carries a
+//! [`ServerObs`] surface: per-stage latency histograms across the request
+//! path (parse → queue wait → batch assembly → score GEMM → reply write),
+//! fold/sync/ship timings, per-batch-size Welford cost estimates, and a
+//! ring-buffer lifecycle journal. `METRICS` renders it as Prometheus-style
+//! text (see `rust/src/obs/README.md` for the catalogue and merge rules);
+//! `EVENTS` drains the journal oldest-first (the optional `<max>` bounds
+//! the drain; omitted or 0 drains everything). Both replies are framed by
+//! an `OK lines=<n>` header so one request yields exactly n body lines —
+//! [`multiline_request`] is the matching client helper. Instrumentation is
+//! **observation only**: it never branches the math or the reply bytes
+//! (SCORE replies are asserted bitwise identical with obs on and off), and
+//! a server started with obs off answers both verbs with `ERR
+//! observability disabled` and reads no clocks on the request path.
 
-use crate::model::{ship, ModelStore, OnlineUpdater, ShardRange, UpdaterConfig};
+use crate::model::{ship, ModelStore, OnlineUpdater, ShardRange, UpdaterConfig, UpdaterObs};
+use crate::obs;
+use crate::obs::EventKind;
 use crate::regress::metrics::top_k_indices;
 use crate::regress::MultiLabelModel;
 use crate::sparse::{Coo, Csr};
@@ -143,6 +165,12 @@ pub struct ServerConfig {
     /// single-host stacks; multi-host replica fan-out binds a routable
     /// address here (`serve --bind 0.0.0.0:7070`).
     pub bind: String,
+    /// Observability (the `METRICS`/`EVENTS` surface plus the per-stage
+    /// spans feeding it). On by default; off means the request path reads
+    /// no clocks at all and both verbs answer `ERR observability
+    /// disabled`. Either way the replies of every other verb are bitwise
+    /// identical — instrumentation observes, it never participates.
+    pub obs: bool,
 }
 
 impl Default for ServerConfig {
@@ -153,6 +181,7 @@ impl Default for ServerConfig {
             queue_capacity: 1024,
             threads: 0,
             bind: "127.0.0.1:0".into(),
+            obs: true,
         }
     }
 }
@@ -246,6 +275,73 @@ impl ServerStats {
             }
             return if batches == 0 { 0.0 } else { served as f64 / batches as f64 };
         }
+    }
+}
+
+/// How many journal entries a server retains before wraparound starts
+/// overwriting the oldest (counted by the dropped-events gauge).
+const JOURNAL_CAP: usize = 256;
+
+/// Per-server observability surface: a private metric registry (in-process
+/// fleets must not share buckets), the per-stage request-path histograms,
+/// fold/sync/ship timings, the per-batch-size Welford cost table, and the
+/// lifecycle event journal. Everything here is observation only — nothing
+/// is read back on the request path, and recording never branches the math
+/// or the reply bytes.
+pub struct ServerObs {
+    registry: obs::Registry,
+    /// lifecycle event ring behind the `EVENTS` verb
+    journal: obs::Journal,
+    stage_parse: Arc<obs::Histogram>,
+    stage_queue: Arc<obs::Histogram>,
+    stage_assemble: Arc<obs::Histogram>,
+    stage_gemm: Arc<obs::Histogram>,
+    stage_reply: Arc<obs::Histogram>,
+    /// serving side of a `SHIP` round (directory scan + snapshot write)
+    ship_ns: Arc<obs::Histogram>,
+    /// replica side of one sync round trip (fetch + verify + install)
+    sync_ns: Arc<obs::Histogram>,
+    fold_ns: Arc<obs::Histogram>,
+    fold_rows: Arc<obs::Counter>,
+    resolve_flagged: Arc<obs::Gauge>,
+    gemm_batch: Arc<obs::BatchTiming>,
+    journal_dropped: Arc<obs::Gauge>,
+}
+
+impl ServerObs {
+    fn new() -> ServerObs {
+        let registry = obs::Registry::new();
+        ServerObs {
+            journal: obs::Journal::new(JOURNAL_CAP),
+            stage_parse: registry.hist("fastpi_stage_ns{stage=\"parse\"}"),
+            stage_queue: registry.hist("fastpi_stage_ns{stage=\"queue\"}"),
+            stage_assemble: registry.hist("fastpi_stage_ns{stage=\"assemble\"}"),
+            stage_gemm: registry.hist("fastpi_stage_ns{stage=\"gemm\"}"),
+            stage_reply: registry.hist("fastpi_stage_ns{stage=\"reply\"}"),
+            ship_ns: registry.hist("fastpi_ship_ns"),
+            sync_ns: registry.hist("fastpi_sync_ns"),
+            fold_ns: registry.hist("fastpi_fold_ns"),
+            fold_rows: registry.counter("fastpi_fold_rows_total"),
+            resolve_flagged: registry.gauge("fastpi_fold_resolve_flagged"),
+            gemm_batch: registry.timing("fastpi_gemm_batch"),
+            journal_dropped: registry.gauge("fastpi_journal_dropped_total"),
+            registry,
+        }
+    }
+
+    /// The sinks the [`OnlineUpdater`] records fold telemetry into.
+    fn updater_obs(&self) -> UpdaterObs {
+        UpdaterObs {
+            fold_ns: self.fold_ns.clone(),
+            fold_rows: self.fold_rows.clone(),
+            resolve_flagged: self.resolve_flagged.clone(),
+        }
+    }
+
+    /// Render the full `METRICS` body (derived gauges refreshed first).
+    fn render(&self) -> String {
+        self.journal_dropped.set(self.journal.dropped());
+        self.registry.render()
     }
 }
 
@@ -386,6 +482,9 @@ struct Pending {
     values: Vec<f64>,
     topk: usize,
     reply: std::sync::mpsc::Sender<BatchReply>,
+    /// enqueue instant feeding the queue-wait span; `None` with obs off,
+    /// so a dark server reads no clock on the request path
+    queued_at: Option<Instant>,
 }
 
 /// Bounded, poison-recovering request queue (shared with the router).
@@ -523,6 +622,12 @@ impl ScoreServer {
         let stats = Arc::new(ServerStats::default());
         let slot = Arc::new(ModelSlot::new(serving));
         let queue = Arc::new(Queue::new(cfg.queue_capacity));
+        let obs = if cfg.obs { Some(Arc::new(ServerObs::new())) } else { None };
+        if let (Some(o), Some(lc)) = (&obs, &lifecycle) {
+            // fold telemetry flows through the updater's own sink — no
+            // second clock read, the report already carries the wall time
+            lc.updater().attach_obs(o.updater_obs());
+        }
 
         // the store SHIP serves snapshots from: a replica re-ships its
         // local mirror (chained fan-out), a primary ships its own store
@@ -549,9 +654,10 @@ impl ScoreServer {
         let b_stats = stats.clone();
         let b_cfg = cfg.clone();
         let b_slot = slot.clone();
+        let b_obs = obs.clone();
         let batch_handle = std::thread::Builder::new()
             .name("score-batcher".into())
-            .spawn(move || batcher_loop(b_slot, b_queue, b_stop, b_stats, b_cfg))?;
+            .spawn(move || batcher_loop(b_slot, b_queue, b_stop, b_stats, b_cfg, b_obs))?;
 
         // replica sync thread: poll the primary, install, hot-swap —
         // until shutdown or a PROMOTE retires the follower role
@@ -561,8 +667,9 @@ impl ScoreServer {
                 let s_stats = stats.clone();
                 let s_stop = stop.clone();
                 let s_role = role.clone();
+                let s_obs = obs.clone();
                 Some(std::thread::Builder::new().name("replica-sync".into()).spawn(move || {
-                    replica_sync_loop(rstore, rc, s_slot, s_stats, s_stop, s_role)
+                    replica_sync_loop(rstore, rc, s_slot, s_stats, s_stop, s_role, s_obs)
                 })?)
             }
             None => None,
@@ -574,6 +681,7 @@ impl ScoreServer {
         let a_queue = queue.clone();
         let a_slot = slot.clone();
         let a_role = role.clone();
+        let a_obs = obs.clone();
         let accept_handle = std::thread::Builder::new().name("score-accept".into()).spawn(
             move || {
                 let mut conns: Vec<std::thread::JoinHandle<()>> = Vec::new();
@@ -585,8 +693,9 @@ impl ScoreServer {
                             let stop2 = a_stop.clone();
                             let sl = a_slot.clone();
                             let rl = a_role.clone();
+                            let ob = a_obs.clone();
                             conns.push(std::thread::spawn(move || {
-                                let _ = handle_conn(stream, q, st, stop2, sl, rl);
+                                let _ = handle_conn(stream, q, st, stop2, sl, rl, ob);
                             }));
                             // prune finished handlers: follower SHIP polls
                             // open a fresh connection every poll interval,
@@ -653,6 +762,7 @@ fn replica_sync_loop(
     stats: Arc<ServerStats>,
     stop: Arc<AtomicBool>,
     role: Arc<Role>,
+    obs: Option<Arc<ServerObs>>,
 ) {
     // Per-IO-op timeout capped short (matching the cold-start loop): the
     // socket timeout applies per read/write syscall, so a slow-but-flowing
@@ -670,7 +780,8 @@ fn replica_sync_loop(
             if stop.load(Ordering::Relaxed) || !role.sync_active() {
                 return;
             }
-            match ship::sync_shard_once(&store, rc.primary, rc.shard, step) {
+            let sync_hist = obs.as_ref().map(|o| &*o.sync_ns);
+            match ship::sync_shard_once_timed(&store, rc.primary, rc.shard, step, sync_hist) {
                 Ok(Some((version, artifact))) => {
                     let serving = ServingModel {
                         version,
@@ -680,6 +791,10 @@ fn replica_sync_loop(
                     };
                     slot.swap(Arc::new(serving));
                     stats.swaps.fetch_add(1, Ordering::Relaxed);
+                    if let Some(o) = &obs {
+                        o.journal.record(EventKind::Ship, format!("version={version}"));
+                        o.journal.record(EventKind::Swap, format!("version={version} via=sync"));
+                    }
                 }
                 Ok(None) => {}
                 Err(_) => {} // transient; retry next poll
@@ -704,6 +819,7 @@ fn batcher_loop(
     stop: Arc<AtomicBool>,
     stats: Arc<ServerStats>,
     cfg: ServerConfig,
+    obs: Option<Arc<ServerObs>>,
 ) {
     while !stop.load(Ordering::Relaxed) {
         // collect a batch (shared wait/drain/straggler discipline)
@@ -714,6 +830,16 @@ fn batcher_loop(
                 return;
             }
             continue;
+        }
+
+        // queue-wait span: enqueue → drained into a batch
+        if let Some(o) = &obs {
+            let now = Instant::now();
+            for p in &batch {
+                if let Some(q) = p.queued_at {
+                    o.stage_queue.record_duration(now.saturating_duration_since(q));
+                }
+            }
         }
 
         // Pin the model for this whole batch: the slot is read exactly once
@@ -732,8 +858,10 @@ fn batcher_loop(
         // shard offset: replies carry GLOBAL label ids, so a scatter-gather
         // merge of shard replies is exactly the full model's reply
         let label_lo = serving.shard.label_lo as usize;
+        let obs_ref = obs.as_deref();
         let replies = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
             crate::runtime::pool::with_thread_cap(cap, || {
+                let t_assemble = obs_ref.map(|_| Instant::now());
                 let mut coo = Coo::new(batch.len(), n_features);
                 for (i, p) in batch.iter().enumerate() {
                     for (&j, &v) in p.indices.iter().zip(&p.values) {
@@ -743,7 +871,16 @@ fn batcher_loop(
                     }
                 }
                 let a = Csr::from_coo(&coo);
+                if let (Some(o), Some(t)) = (obs_ref, t_assemble) {
+                    o.stage_assemble.record_duration(t.elapsed());
+                }
+                let t_gemm = obs_ref.map(|_| Instant::now());
                 let scores = model.predict(&a);
+                if let (Some(o), Some(t)) = (obs_ref, t_gemm) {
+                    let ns = u64::try_from(t.elapsed().as_nanos()).unwrap_or(u64::MAX);
+                    o.stage_gemm.record(ns);
+                    o.gemm_batch.record(batch.len(), ns);
+                }
                 batch
                     .iter()
                     .enumerate()
@@ -780,6 +917,7 @@ fn handle_conn(
     stop: Arc<AtomicBool>,
     slot: Arc<ModelSlot>,
     role: Arc<Role>,
+    obs: Option<Arc<ServerObs>>,
 ) -> std::io::Result<()> {
     stream.set_read_timeout(Some(Duration::from_millis(200)))?;
     // Bounded writes too: SHIP streams multi-MB snapshot bodies, and a
@@ -833,6 +971,49 @@ fn handle_conn(
             writer.flush()?;
             continue;
         }
+        if msg == "METRICS" {
+            match &obs {
+                Some(o) => {
+                    let body = o.render();
+                    writeln!(writer, "OK lines={}", body.lines().count())?;
+                    writer.write_all(body.as_bytes())?;
+                }
+                None => writeln!(writer, "ERR observability disabled")?,
+            }
+            writer.flush()?;
+            continue;
+        }
+        if msg == "EVENTS" || msg.starts_with("EVENTS ") {
+            match &obs {
+                Some(o) => {
+                    let max = if msg == "EVENTS" {
+                        Some(0)
+                    } else {
+                        msg["EVENTS ".len()..].trim().parse::<usize>().ok()
+                    };
+                    match max {
+                        Some(max) => {
+                            let events = o.journal.drain(max);
+                            writeln!(writer, "OK lines={}", events.len())?;
+                            for e in &events {
+                                writeln!(
+                                    writer,
+                                    "seq={} t_ns={} kind={} {}",
+                                    e.seq,
+                                    e.t_ns,
+                                    e.kind.as_str(),
+                                    e.detail
+                                )?;
+                            }
+                        }
+                        None => writeln!(writer, "ERR bad request")?,
+                    }
+                }
+                None => writeln!(writer, "ERR observability disabled")?,
+            }
+            writer.flush()?;
+            continue;
+        }
         if msg == "VERSION" {
             let serving = slot.get();
             let (updates, pending) = match role.lifecycle() {
@@ -859,12 +1040,12 @@ fn handle_conn(
             continue;
         }
         if msg == "RELOAD" {
-            writeln!(writer, "{}", handle_reload(&role.lifecycle(), &slot, &stats))?;
+            writeln!(writer, "{}", handle_reload(&role.lifecycle(), &slot, &stats, obs.as_deref()))?;
             writer.flush()?;
             continue;
         }
         if msg == "PROMOTE" {
-            writeln!(writer, "{}", handle_promote(&role, &slot, &stats))?;
+            writeln!(writer, "{}", handle_promote(&role, &slot, &stats, obs.as_deref()))?;
             writer.flush()?;
             continue;
         }
@@ -878,7 +1059,8 @@ fn handle_conn(
                 have.is_some() && (shard_tok.is_none() || shard.is_some()) && toks.next().is_none();
             match (well_formed, have, &role.ship_store) {
                 (true, Some(have), Some(store)) => {
-                    ship::serve_ship(&mut writer, store, have, shard)?
+                    let hist = obs.as_ref().map(|o| &*o.ship_ns);
+                    ship::serve_ship_timed(&mut writer, store, have, shard, hist)?
                 }
                 (true, Some(_), None) => {
                     writeln!(writer, "ERR no model store")?;
@@ -892,19 +1074,25 @@ fn handle_conn(
             continue;
         }
         if let Some(rest) = msg.strip_prefix("LEARN ") {
-            writeln!(writer, "{}", handle_learn(rest, &role.lifecycle(), &slot, &stats))?;
+            writeln!(writer, "{}", handle_learn(rest, &role.lifecycle(), &slot, &stats, obs.as_deref()))?;
             writer.flush()?;
             continue;
         }
-        match parse_score(msg) {
+        let t_parse = obs.as_ref().map(|_| Instant::now());
+        let parsed = parse_score(msg);
+        if let (Some(o), Some(t)) = (&obs, t_parse) {
+            o.stage_parse.record_duration(t.elapsed());
+        }
+        match parsed {
             Some((topk, indices, values)) => {
                 let (tx, rx) = std::sync::mpsc::channel();
+                let queued_at = obs.as_ref().map(|_| Instant::now());
                 let accepted = {
                     let mut dq = queue.lock();
                     if dq.len() >= queue.capacity() {
                         false
                     } else {
-                        dq.push_back(Pending { indices, values, topk, reply: tx });
+                        dq.push_back(Pending { indices, values, topk, reply: tx, queued_at });
                         true
                     }
                 };
@@ -915,7 +1103,11 @@ fn handle_conn(
                     continue;
                 }
                 queue.notify_one();
-                match rx.recv_timeout(Duration::from_secs(30)) {
+                let outcome = rx.recv_timeout(Duration::from_secs(30));
+                // reply-write span: formatting + write + flush only — the
+                // batch wait above is the queue/gemm spans' territory
+                let t_reply = obs.as_ref().map(|_| Instant::now());
+                match outcome {
                     // NaN scores (a degenerate model, not bad input — the
                     // parser already rejects non-finite features) answer
                     // ERR internal: `top_k_indices` ranks them totally
@@ -938,6 +1130,9 @@ fn handle_conn(
                     Err(_) => writeln!(writer, "ERR timeout")?,
                 }
                 writer.flush()?;
+                if let (Some(o), Some(t)) = (&obs, t_reply) {
+                    o.stage_reply.record_duration(t.elapsed());
+                }
             }
             None => {
                 writeln!(writer, "ERR bad request")?;
@@ -965,7 +1160,12 @@ fn handle_conn(
 /// artifact in. The store I/O all happens under the dedicated promotion
 /// lock, never the lifecycle slot lock, so concurrent VERSION/LEARN
 /// handlers — and the router's 2s health probes — stay fast throughout.
-fn handle_promote(role: &Role, slot: &ModelSlot, stats: &ServerStats) -> String {
+fn handle_promote(
+    role: &Role,
+    slot: &ModelSlot,
+    stats: &ServerStats,
+    obs: Option<&ServerObs>,
+) -> String {
     let Some(rep) = &role.replica else {
         return "ERR not a replica".into();
     };
@@ -1015,13 +1215,19 @@ fn handle_promote(role: &Role, slot: &ModelSlot, stats: &ServerStats) -> String 
         shard: artifact.meta.shard,
         model: artifact.model(),
     };
-    let updater = OnlineUpdater::new(artifact, rep.updater_cfg.clone());
+    let mut updater = OnlineUpdater::new(artifact, rep.updater_cfg.clone());
+    if let Some(o) = obs {
+        updater.attach_obs(o.updater_obs());
+    }
     *role.lifecycle.lock().unwrap_or_else(|e| e.into_inner()) = Some(Arc::new(Lifecycle {
         updater: Mutex::new(updater),
         store: Some(store.clone()),
     }));
     slot.swap(Arc::new(serving));
     stats.swaps.fetch_add(1, Ordering::Relaxed);
+    if let Some(o) = obs {
+        o.journal.record(EventKind::Promote, format!("version={version} epoch={epoch}"));
+    }
     format!("OK version={version} epoch={epoch}")
 }
 
@@ -1031,6 +1237,7 @@ fn handle_reload(
     lifecycle: &Option<Arc<Lifecycle>>,
     slot: &ModelSlot,
     stats: &ServerStats,
+    obs: Option<&ServerObs>,
 ) -> String {
     let Some(lc) = lifecycle else {
         return "ERR no model store".into();
@@ -1058,6 +1265,9 @@ fn handle_reload(
             slot.swap(Arc::new(serving));
             drop(up);
             stats.swaps.fetch_add(1, Ordering::Relaxed);
+            if let Some(o) = obs {
+                o.journal.record(EventKind::Swap, format!("version={id} via=reload"));
+            }
             format!("OK version={id}")
         }
         Ok(None) => "ERR empty store".into(),
@@ -1071,6 +1281,7 @@ fn handle_learn(
     lifecycle: &Option<Arc<Lifecycle>>,
     slot: &ModelSlot,
     stats: &ServerStats,
+    obs: Option<&ServerObs>,
 ) -> String {
     let Some(lc) = lifecycle else {
         return "ERR learning disabled".into();
@@ -1117,6 +1328,11 @@ fn handle_learn(
             };
             slot.swap(Arc::new(serving));
             stats.swaps.fetch_add(1, Ordering::Relaxed);
+            if let Some(o) = obs {
+                o.journal
+                    .record(EventKind::Learn, format!("version={version} rows={}", report.rows));
+                o.journal.record(EventKind::Swap, format!("version={version} via=learn"));
+            }
             let mut reply = format!(
                 "OK version={version} pending=0 rows={} drift={:.3e} resolve={}",
                 report.rows,
@@ -1248,6 +1464,58 @@ pub fn text_request_timeout(
         ));
     }
     Ok(reply.trim_end().to_string())
+}
+
+/// Blocking client helper for the multi-line verbs (`METRICS`, `EVENTS`):
+/// send one line, read the `OK lines=` framed header, then exactly that
+/// many body lines, returned as one newline-terminated string (empty for
+/// zero lines). An `ERR ...` header comes back as `InvalidData`.
+pub fn multiline_request(addr: std::net::SocketAddr, line: &str) -> std::io::Result<String> {
+    multiline_request_timeout(addr, line, REQUEST_TIMEOUT)
+}
+
+/// [`multiline_request`] with an explicit per-round-trip deadline.
+pub fn multiline_request_timeout(
+    addr: std::net::SocketAddr,
+    line: &str,
+    timeout: Duration,
+) -> std::io::Result<String> {
+    let stream = TcpStream::connect_timeout(&addr, timeout)?;
+    stream.set_read_timeout(Some(timeout))?;
+    stream.set_write_timeout(Some(timeout))?;
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut writer = BufWriter::new(stream);
+    writeln!(writer, "{line}")?;
+    writer.flush()?;
+    let mut header = String::new();
+    if reader.read_line(&mut header)? == 0 {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::UnexpectedEof,
+            "server closed the connection without replying",
+        ));
+    }
+    let header = header.trim_end();
+    let n: usize = header
+        .strip_prefix("OK lines=")
+        .and_then(|r| r.parse().ok())
+        .ok_or_else(|| {
+            std::io::Error::new(
+                std::io::ErrorKind::InvalidData,
+                format!("server said: {header}"),
+            )
+        })?;
+    let mut body = String::new();
+    for _ in 0..n {
+        let mut l = String::new();
+        if reader.read_line(&mut l)? == 0 {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::UnexpectedEof,
+                "multi-line body truncated",
+            ));
+        }
+        body.push_str(&l);
+    }
+    Ok(body)
 }
 
 #[cfg(test)]
@@ -1610,6 +1878,105 @@ mod tests {
         assert!((after[0].1 - z2[(0, best)]).abs() < 1e-5);
         // the pre-swap answer reflected the old model, not the new one
         assert!(before[0].0 != after[0].0 || (before[0].1 - after[0].1).abs() > 1e-12);
+        server.shutdown();
+    }
+
+    /// The observation-only contract: instrumentation must never change a
+    /// reply byte. Same model, same probes, obs on vs off — bitwise equal.
+    #[test]
+    fn score_bytes_identical_with_obs_on_and_off() {
+        let m = model(24, 9);
+        let m2 = MultiLabelModel { z: m.z.clone() };
+        let on = ScoreServer::start(m, ServerConfig::default()).unwrap();
+        let off =
+            ScoreServer::start(m2, ServerConfig { obs: false, ..Default::default() }).unwrap();
+        for probe in [
+            "SCORE 3 0:1.0,5:-0.5",
+            "SCORE 9 1:0.25,8:2.0,23:-1.0",
+            "SCORE 2 ",
+            "SCORE 1 2:1e-300",
+            "VERSION",
+            "NONSENSE",
+        ] {
+            let a = text_request(on.addr, probe).unwrap();
+            let b = text_request(off.addr, probe).unwrap();
+            assert_eq!(a, b, "obs must not change reply bytes for `{probe}`");
+        }
+        // a dark server refuses the obs verbs instead of serving empty data
+        assert_eq!(
+            text_request(off.addr, "METRICS").unwrap(),
+            "ERR observability disabled"
+        );
+        assert_eq!(
+            text_request(off.addr, "EVENTS").unwrap(),
+            "ERR observability disabled"
+        );
+        // the instrumented server actually recorded the traffic above
+        let body = multiline_request(on.addr, "METRICS").unwrap();
+        let scalars = crate::obs::registry::parse_scalars(&body).unwrap();
+        let get = |name: &str| {
+            scalars.iter().find(|(n, _)| n == name).map(|&(_, v)| v).unwrap_or(0.0)
+        };
+        assert!(get("fastpi_stage_ns_count{stage=\"parse\"}") >= 4.0, "{body}");
+        assert!(get("fastpi_stage_ns_count{stage=\"gemm\"}") >= 1.0, "{body}");
+        assert!(get("fastpi_stage_ns_count{stage=\"queue\"}") >= 4.0, "{body}");
+        assert!(get("fastpi_stage_ns_count{stage=\"reply\"}") >= 4.0, "{body}");
+        on.shutdown();
+        off.shutdown();
+    }
+
+    /// The wire surface: METRICS parses and is framed correctly, EVENTS
+    /// drains the journal with bounded reads, and a LEARN fold leaves
+    /// learn + swap events plus fold metrics behind.
+    #[test]
+    fn metrics_and_events_surface() {
+        use crate::model::format::testutil::sample_artifact;
+        use crate::model::UpdaterConfig;
+        let dir = std::env::temp_dir().join("fastpi_serve_obs");
+        let _ = std::fs::remove_dir_all(&dir);
+        let store = ModelStore::open(&dir).unwrap();
+        let art = sample_artifact(3, 12, 6, 4, 3);
+        assert_eq!(store.publish(&art).unwrap(), 1);
+        let server = ScoreServer::start_lifecycle(
+            OnlineUpdater::new(art, UpdaterConfig::default()),
+            Some(store),
+            1,
+            ServerConfig::default(),
+        )
+        .unwrap();
+
+        // traffic: one scored request, one fold (learn_batch=1), one reload
+        let _ = score_request(server.addr, &[(0, 1.0)], 2).unwrap();
+        let l = text_request(server.addr, "LEARN 1 0:1.0,5:-0.5").unwrap();
+        assert!(l.starts_with("OK version=2 pending=0"), "{l}");
+        assert_eq!(text_request(server.addr, "RELOAD").unwrap(), "OK version=2");
+
+        let body = multiline_request(server.addr, "METRICS").unwrap();
+        let scalars = crate::obs::registry::parse_scalars(&body).unwrap();
+        let get = |name: &str| {
+            scalars.iter().find(|(n, _)| n == name).map(|&(_, v)| v).unwrap_or(0.0)
+        };
+        assert!(get("fastpi_stage_ns_count{stage=\"gemm\"}") >= 1.0, "{body}");
+        assert!(get("fastpi_fold_ns_count") >= 1.0, "{body}");
+        assert!(get("fastpi_fold_rows_total") >= 1.0, "{body}");
+        // the Welford table has a batch-size-1 slot from the single probe
+        assert!(get("fastpi_gemm_batch_count{batch=\"1\"}") >= 1.0, "{body}");
+        assert_eq!(get("fastpi_journal_dropped_total"), 0.0, "{body}");
+
+        // journal: learn + swap (fold), then swap (reload) — drained
+        // oldest-first with a bounded first read
+        let first = multiline_request(server.addr, "EVENTS 1").unwrap();
+        assert_eq!(first.lines().count(), 1, "{first}");
+        assert!(first.starts_with("seq="), "{first}");
+        assert!(first.contains(" kind=learn "), "{first}");
+        let rest = multiline_request(server.addr, "EVENTS").unwrap();
+        assert!(rest.contains("kind=swap"), "{rest}");
+        assert!(rest.contains("via=learn"), "{rest}");
+        assert!(rest.contains("via=reload"), "{rest}");
+        // fully drained now
+        assert_eq!(multiline_request(server.addr, "EVENTS").unwrap(), "");
+        // malformed EVENTS operand is a bad request, not a hang
+        assert_eq!(text_request(server.addr, "EVENTS x").unwrap(), "ERR bad request");
         server.shutdown();
     }
 }

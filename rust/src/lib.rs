@@ -30,6 +30,7 @@ pub mod error;
 pub mod graph;
 pub mod harness;
 pub mod model;
+pub mod obs;
 pub mod pinv;
 pub mod regress;
 pub mod reorder;

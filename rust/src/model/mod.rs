@@ -42,4 +42,4 @@ pub use ship::{
     ShipReply,
 };
 pub use store::ModelStore;
-pub use updater::{OnlineUpdater, UpdateReport, UpdaterConfig};
+pub use updater::{OnlineUpdater, UpdateReport, UpdaterConfig, UpdaterObs};

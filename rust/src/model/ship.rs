@@ -200,6 +200,25 @@ pub fn sync_once(
     sync_shard_once(store, primary, None, timeout)
 }
 
+/// [`sync_shard_once`] that also records the round trip's wall-clock into
+/// `hist` (nanoseconds). Observation only: the sync outcome — including
+/// errors — is exactly [`sync_shard_once`]'s, and `None` skips the clock
+/// reads entirely.
+pub fn sync_shard_once_timed(
+    store: &ModelStore,
+    primary: SocketAddr,
+    shard: ShardSel,
+    timeout: Duration,
+    hist: Option<&crate::obs::Histogram>,
+) -> Result<Option<(u64, ModelArtifact)>> {
+    let t = hist.map(|_| std::time::Instant::now());
+    let out = sync_shard_once(store, primary, shard, timeout);
+    if let (Some(h), Some(t)) = (hist, t) {
+        h.record_duration(t.elapsed());
+    }
+    out
+}
+
 /// [`sync_once`] for one shard: fetch + install only slice `k` of `n`.
 /// After parsing, the artifact's own shard header must match the slice we
 /// asked for — a primary handing back mislabelled columns is rejected.
@@ -262,6 +281,24 @@ pub fn sync_shard_once(
             Ok(Some((version, artifact)))
         }
     }
+}
+
+/// [`serve_ship`] that also records the serve duration (directory scan
+/// through last body byte) into `hist`. Observation only — the bytes on
+/// the wire are exactly [`serve_ship`]'s.
+pub fn serve_ship_timed<W: Write>(
+    w: &mut W,
+    store: &ModelStore,
+    have: u64,
+    shard: ShardSel,
+    hist: Option<&crate::obs::Histogram>,
+) -> std::io::Result<()> {
+    let t = hist.map(|_| std::time::Instant::now());
+    let out = serve_ship(w, store, have, shard);
+    if let (Some(h), Some(t)) = (hist, t) {
+        h.record_duration(t.elapsed());
+    }
+    out
 }
 
 /// Serve one `SHIP <have> [<k>/<n>]` request (primary side). Writes exactly

@@ -75,17 +75,44 @@ struct PendingExample {
     labels: Vec<usize>,
 }
 
+/// Observation-only sinks for fold telemetry (see `rust/src/obs/README.md`).
+/// The updater records into these *after* a fold completes, from numbers the
+/// report already carries — attaching an observer never adds clock reads to
+/// the fold path and never branches the math.
+#[derive(Clone)]
+pub struct UpdaterObs {
+    /// fold wall-clock, from [`UpdateReport::secs`]
+    pub fold_ns: std::sync::Arc<crate::obs::Histogram>,
+    /// rows folded in, cumulative
+    pub fold_rows: std::sync::Arc<crate::obs::Counter>,
+    /// 1 while a full re-solve is flagged, else 0
+    pub resolve_flagged: std::sync::Arc<crate::obs::Gauge>,
+}
+
+impl std::fmt::Debug for UpdaterObs {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str("UpdaterObs")
+    }
+}
+
 /// Owns the live model and folds new examples into it.
 #[derive(Debug)]
 pub struct OnlineUpdater {
     artifact: ModelArtifact,
     cfg: UpdaterConfig,
     pending: Vec<PendingExample>,
+    obs: Option<UpdaterObs>,
 }
 
 impl OnlineUpdater {
     pub fn new(artifact: ModelArtifact, cfg: UpdaterConfig) -> OnlineUpdater {
-        OnlineUpdater { artifact, cfg, pending: Vec::new() }
+        OnlineUpdater { artifact, cfg, pending: Vec::new(), obs: None }
+    }
+
+    /// Attach (or replace) the observation sinks. Purely additive: folds
+    /// behave bit-identically with or without an observer.
+    pub fn attach_obs(&mut self, obs: UpdaterObs) {
+        self.obs = Some(obs);
     }
 
     /// The live model state.
@@ -252,14 +279,20 @@ impl OnlineUpdater {
         art.meta.updates_applied += 1;
         art.meta.drift += drift_inc;
 
-        Ok(UpdateReport {
+        let report = UpdateReport {
             rows,
             rank: self.artifact.rank(),
             drift_inc,
             drift_total: self.artifact.meta.drift,
             secs: t.elapsed().as_secs_f64(),
             needs_resolve: self.needs_resolve(),
-        })
+        };
+        if let Some(o) = &self.obs {
+            o.fold_ns.record((report.secs * 1e9) as u64);
+            o.fold_rows.add(report.rows as u64);
+            o.resolve_flagged.set(report.needs_resolve as u64);
+        }
+        Ok(report)
     }
 
     fn noop_report(&self) -> UpdateReport {

@@ -1,0 +1,262 @@
+//! Log2-bucketed mergeable latency histogram.
+//!
+//! Values (nanoseconds by convention) land in one of [`BUCKETS`] fixed
+//! buckets: values below 16 get exact unit buckets, everything above is
+//! bucketed by octave (log2) with 4 linear sub-buckets per octave — the
+//! HDR idiom — so the bucket upper edge over-reports a recorded value by
+//! at most 25%. The fixed, global bucket edges are the point: two
+//! histograms (from two servers, or two phases) merge by per-bucket
+//! addition with no resampling, and the merged count is exactly the sum
+//! of the member counts. Buckets are relaxed `AtomicU64`s, so recording
+//! is lock-free and wait-free; percentile reads (p50/p95/p99/p999) walk
+//! a self-consistent snapshot and need no stored samples.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Number of fixed buckets (16 unit buckets + 60 octaves × 4 sub-buckets).
+pub const BUCKETS: usize = 256;
+
+/// Bucket index for a value: exact below 16, then octave × 4 linear
+/// sub-buckets.
+pub fn bucket_index(v: u64) -> usize {
+    if v < 16 {
+        return v as usize;
+    }
+    let k = 63 - v.leading_zeros() as usize; // 2^k <= v < 2^(k+1), k >= 4
+    let sub = ((v >> (k - 2)) & 3) as usize;
+    16 + (k - 4) * 4 + sub
+}
+
+/// Largest value that lands in bucket `i` (the `le=` edge it renders as).
+pub fn bucket_upper(i: usize) -> u64 {
+    if i < 16 {
+        return i as u64;
+    }
+    let k = 4 + (i - 16) / 4;
+    let sub = ((i - 16) % 4) as u64;
+    if k >= 63 && sub == 3 {
+        return u64::MAX;
+    }
+    (1u64 << k) + (sub + 1) * (1u64 << (k - 2)) - 1
+}
+
+/// A point-in-time copy of a histogram: per-bucket counts plus the value
+/// sum. All percentile math runs on snapshots so one read is internally
+/// consistent; this is also the unit the router merges after parsing a
+/// member's `METRICS` body back into bucket counts.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct HistSnapshot {
+    pub buckets: Vec<u64>,
+    pub sum: u64,
+}
+
+impl HistSnapshot {
+    pub fn empty() -> HistSnapshot {
+        HistSnapshot { buckets: vec![0; BUCKETS], sum: 0 }
+    }
+
+    /// Total recorded values (derived from the buckets, not a separate
+    /// counter, so it always agrees with percentile walks).
+    pub fn count(&self) -> u64 {
+        self.buckets.iter().sum()
+    }
+
+    /// Merge another snapshot in: per-bucket addition. Associative and
+    /// commutative by construction.
+    pub fn merge(&mut self, other: &HistSnapshot) {
+        for (a, b) in self.buckets.iter_mut().zip(&other.buckets) {
+            *a += b;
+        }
+        self.sum += other.sum;
+    }
+
+    /// Quantile estimate: the upper edge of the bucket holding the
+    /// ceil(q·count)-th smallest value. Guaranteed ≥ the true sample
+    /// quantile and ≤ 1.25× it (one sub-bucket of slack).
+    pub fn quantile(&self, q: f64) -> u64 {
+        let total = self.count();
+        if total == 0 {
+            return 0;
+        }
+        let rank = ((q * total as f64).ceil() as u64).clamp(1, total);
+        let mut seen = 0u64;
+        for (i, &b) in self.buckets.iter().enumerate() {
+            seen += b;
+            if seen >= rank {
+                return bucket_upper(i);
+            }
+        }
+        bucket_upper(BUCKETS - 1)
+    }
+}
+
+/// The live, lock-free histogram. `record` is safe from any thread;
+/// `snapshot` gives readers a consistent view.
+pub struct Histogram {
+    buckets: Vec<AtomicU64>,
+    sum: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        Histogram {
+            buckets: (0..BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            sum: AtomicU64::new(0),
+        }
+    }
+
+    pub fn record(&self, v: u64) {
+        self.buckets[bucket_index(v)].fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+    }
+
+    /// Record a duration in nanoseconds (saturating at u64::MAX).
+    pub fn record_duration(&self, d: std::time::Duration) {
+        self.record(u64::try_from(d.as_nanos()).unwrap_or(u64::MAX));
+    }
+
+    pub fn count(&self) -> u64 {
+        self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).sum()
+    }
+
+    pub fn snapshot(&self) -> HistSnapshot {
+        HistSnapshot {
+            buckets: self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect(),
+            sum: self.sum.load(Ordering::Relaxed),
+        }
+    }
+
+    pub fn quantile(&self, q: f64) -> u64 {
+        self.snapshot().quantile(q)
+    }
+
+    /// Merge a snapshot (e.g. a parsed wire histogram) into this one.
+    pub fn merge_snapshot(&self, other: &HistSnapshot) {
+        for (a, b) in self.buckets.iter().zip(&other.buckets) {
+            a.fetch_add(*b, Ordering::Relaxed);
+        }
+        self.sum.fetch_add(other.sum, Ordering::Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn bucket_edges_are_consistent_and_increasing() {
+        // every value's bucket upper edge is >= the value and < 1.25x it
+        let mut rng = Rng::seed_from_u64(7);
+        let mut probe = |v: u64| {
+            let i = bucket_index(v);
+            let hi = bucket_upper(i);
+            assert!(hi >= v, "edge {hi} below value {v}");
+            assert!(hi - v <= v / 4, "edge {hi} over-reports {v} by more than 25%");
+            // the edge itself maps back to the same bucket
+            assert_eq!(bucket_index(hi), i, "edge {hi} not in its own bucket");
+        };
+        for v in 0..4096u64 {
+            probe(v);
+        }
+        for _ in 0..10_000 {
+            let shift = (rng.next_u64() % 63) as u32;
+            probe(rng.next_u64() >> shift);
+        }
+        probe(u64::MAX);
+        // edges strictly increase, so cumulative rendering is monotone
+        for i in 1..BUCKETS {
+            assert!(bucket_upper(i) > bucket_upper(i - 1));
+        }
+    }
+
+    fn fill(samples: &[u64]) -> Histogram {
+        let h = Histogram::new();
+        for &s in samples {
+            h.record(s);
+        }
+        h
+    }
+
+    fn random_samples(seed: u64, n: usize) -> Vec<u64> {
+        let mut rng = Rng::seed_from_u64(seed);
+        (0..n).map(|_| rng.next_u64() >> (32 + (rng.next_u64() % 28) as u32)).collect()
+    }
+
+    #[test]
+    fn merge_is_associative_and_commutative() {
+        let (a, b, c) =
+            (random_samples(1, 500), random_samples(2, 300), random_samples(3, 700));
+        let (ha, hb, hc) = (fill(&a), fill(&b), fill(&c));
+        // (a ∪ b) ∪ c == a ∪ (b ∪ c)
+        let mut ab_c = ha.snapshot();
+        ab_c.merge(&hb.snapshot());
+        ab_c.merge(&hc.snapshot());
+        let mut bc = hb.snapshot();
+        bc.merge(&hc.snapshot());
+        let mut a_bc = ha.snapshot();
+        a_bc.merge(&bc);
+        assert_eq!(ab_c, a_bc);
+        // a ∪ b == b ∪ a
+        let mut ab = ha.snapshot();
+        ab.merge(&hb.snapshot());
+        let mut ba = hb.snapshot();
+        ba.merge(&ha.snapshot());
+        assert_eq!(ab, ba);
+        // merged count is exactly the sum of member counts
+        assert_eq!(ab_c.count(), (a.len() + b.len() + c.len()) as u64);
+        // and identical to recording everything into one histogram
+        let mut all = a.clone();
+        all.extend(&b);
+        all.extend(&c);
+        assert_eq!(ab_c, fill(&all).snapshot());
+    }
+
+    #[test]
+    fn cumulative_buckets_are_monotone() {
+        let h = fill(&random_samples(4, 2000));
+        let snap = h.snapshot();
+        let mut cum = 0u64;
+        let mut prev = 0u64;
+        for b in &snap.buckets {
+            cum += b;
+            assert!(cum >= prev);
+            prev = cum;
+        }
+        assert_eq!(cum, snap.count());
+    }
+
+    #[test]
+    fn quantiles_bound_the_exact_sorted_percentile() {
+        for seed in 0..8u64 {
+            let samples = random_samples(10 + seed, 1500);
+            let h = fill(&samples);
+            let mut sorted = samples.clone();
+            sorted.sort_unstable();
+            for q in [0.5, 0.95, 0.99, 0.999] {
+                let rank = ((q * sorted.len() as f64).ceil() as usize)
+                    .clamp(1, sorted.len());
+                let exact = sorted[rank - 1];
+                let est = h.quantile(q);
+                assert!(est >= exact, "q{q}: est {est} < exact {exact}");
+                assert!(
+                    est <= exact + exact / 4,
+                    "q{q}: est {est} > 1.25x exact {exact}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn empty_histogram_reads_zero() {
+        let h = Histogram::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.quantile(0.99), 0);
+    }
+}

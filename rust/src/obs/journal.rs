@@ -1,0 +1,157 @@
+//! Fixed-capacity ring-buffer event journal.
+//!
+//! Lifecycle moments that flat counters can't reconstruct — hot swaps,
+//! LEARN folds, promotions, circuit trips, snapshot ships, reshards — are
+//! appended as [`Event`]s with a monotonic sequence number and a
+//! monotonic timestamp (nanoseconds since the journal was created; wall
+//! clocks never appear, so replays and tests stay deterministic enough to
+//! assert ordering). Capacity is fixed at construction: when full, the
+//! oldest entry is overwritten and `dropped` counts the loss, so the
+//! journal is O(capacity) memory no matter how long the process lives.
+//! The `EVENTS [n]` verb drains (removes) entries oldest-first.
+
+use std::collections::VecDeque;
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// What happened. The wire spelling (`as_str`) is part of the `EVENTS`
+/// surface documented in `coordinator/serve.rs`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EventKind {
+    Swap,
+    Learn,
+    Promote,
+    CircuitOpen,
+    CircuitClose,
+    Ship,
+    Reshard,
+}
+
+impl EventKind {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            EventKind::Swap => "swap",
+            EventKind::Learn => "learn",
+            EventKind::Promote => "promote",
+            EventKind::CircuitOpen => "circuit_open",
+            EventKind::CircuitClose => "circuit_close",
+            EventKind::Ship => "ship",
+            EventKind::Reshard => "reshard",
+        }
+    }
+}
+
+/// One journal entry.
+#[derive(Clone, Debug)]
+pub struct Event {
+    /// Monotonic per-journal sequence number, never reused; gaps after
+    /// wraparound reveal how many events were overwritten.
+    pub seq: u64,
+    /// Nanoseconds since journal creation (monotonic clock).
+    pub t_ns: u64,
+    pub kind: EventKind,
+    /// Free-form detail, e.g. `version=7`.
+    pub detail: String,
+}
+
+struct Inner {
+    buf: VecDeque<Event>,
+    next_seq: u64,
+    dropped: u64,
+}
+
+/// The ring. One leaf mutex; record is a push + possible pop-front.
+pub struct Journal {
+    cap: usize,
+    t0: Instant,
+    inner: Mutex<Inner>,
+}
+
+impl Journal {
+    pub fn new(cap: usize) -> Journal {
+        Journal {
+            cap: cap.max(1),
+            t0: Instant::now(),
+            inner: Mutex::new(Inner {
+                buf: VecDeque::new(),
+                next_seq: 0,
+                dropped: 0,
+            }),
+        }
+    }
+
+    pub fn record(&self, kind: EventKind, detail: impl Into<String>) {
+        let t_ns = u64::try_from(self.t0.elapsed().as_nanos()).unwrap_or(u64::MAX);
+        let mut inner = self.inner.lock().unwrap_or_else(|p| p.into_inner());
+        let seq = inner.next_seq;
+        inner.next_seq += 1;
+        if inner.buf.len() == self.cap {
+            inner.buf.pop_front();
+            inner.dropped += 1;
+        }
+        inner.buf.push_back(Event { seq, t_ns, kind, detail: detail.into() });
+    }
+
+    /// Remove and return up to `max` entries, oldest first (0 = all).
+    pub fn drain(&self, max: usize) -> Vec<Event> {
+        let mut inner = self.inner.lock().unwrap_or_else(|p| p.into_inner());
+        let take = if max == 0 { inner.buf.len() } else { max.min(inner.buf.len()) };
+        inner.buf.drain(..take).collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap_or_else(|p| p.into_inner()).buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Events overwritten by wraparound before anyone drained them.
+    pub fn dropped(&self) -> u64 {
+        self.inner.lock().unwrap_or_else(|p| p.into_inner()).dropped
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wraparound_keeps_newest_and_counts_drops() {
+        let j = Journal::new(4);
+        for i in 0..10 {
+            j.record(EventKind::Swap, format!("version={i}"));
+        }
+        assert_eq!(j.len(), 4);
+        assert_eq!(j.dropped(), 6);
+        let events = j.drain(0);
+        assert_eq!(events.len(), 4);
+        // the survivors are the newest four, in order, with original seqs
+        let seqs: Vec<u64> = events.iter().map(|e| e.seq).collect();
+        assert_eq!(seqs, vec![6, 7, 8, 9]);
+        assert_eq!(events[0].detail, "version=6");
+        assert!(j.is_empty());
+        // timestamps are monotone non-decreasing
+        for w in events.windows(2) {
+            assert!(w[0].t_ns <= w[1].t_ns);
+        }
+    }
+
+    #[test]
+    fn drain_is_bounded_and_oldest_first() {
+        let j = Journal::new(8);
+        j.record(EventKind::Learn, "version=1");
+        j.record(EventKind::Ship, "version=1");
+        j.record(EventKind::Promote, "epoch=1");
+        let first = j.drain(2);
+        assert_eq!(first.len(), 2);
+        assert_eq!(first[0].kind, EventKind::Learn);
+        assert_eq!(first[1].kind, EventKind::Ship);
+        let rest = j.drain(0);
+        assert_eq!(rest.len(), 1);
+        assert_eq!(rest[0].kind, EventKind::Promote);
+        assert_eq!(rest[0].kind.as_str(), "promote");
+        assert_eq!(j.dropped(), 0);
+    }
+}

@@ -1,0 +1,108 @@
+//! Zero-dependency observability substrate for the serving tier.
+//!
+//! Everything in here is **observation only**: recording never branches
+//! the math, never allocates on the reply path's byte formatting, and
+//! never appears in a reply — SCORE/LEARN bytes are bitwise identical
+//! with instrumentation on or off (asserted by
+//! `coordinator::serve::tests::score_bytes_identical_with_obs_on_and_off`).
+//! The numeric kernels stay clock-free; only this layer and the serving
+//! files read monotonic clocks.
+//!
+//! Pieces (see `rust/src/obs/README.md` for the metric catalogue):
+//!
+//! * [`Counter`] / [`Gauge`] — lock-free relaxed `AtomicU64`s;
+//! * [`Histogram`] — log2-bucketed (4 linear sub-buckets per octave)
+//!   mergeable latency histogram with p50/p95/p99/p999 reads and no
+//!   sample storage;
+//! * [`BatchTiming`] — per-batch-size Welford mean/variance buckets (the
+//!   cervo `timing.rs` design), the feed for deadline-aware batching;
+//! * [`Registry`] — named-metric registry rendering the Prometheus-style
+//!   `METRICS` body, plus [`registry::merge_bodies`] for the router's
+//!   merged view;
+//! * [`Journal`] — fixed-capacity ring-buffer event journal behind the
+//!   `EVENTS` verb.
+
+pub mod hist;
+pub mod journal;
+pub mod registry;
+pub mod welford;
+
+pub use hist::{HistSnapshot, Histogram};
+pub use journal::{Event, EventKind, Journal};
+pub use registry::Registry;
+pub use welford::{BatchStat, BatchTiming};
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Monotone lock-free counter.
+#[derive(Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn new() -> Counter {
+        Counter::default()
+    }
+
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Lock-free last-value gauge.
+#[derive(Default)]
+pub struct Gauge(AtomicU64);
+
+impl Gauge {
+    pub fn new() -> Gauge {
+        Gauge::default()
+    }
+
+    pub fn set(&self, v: u64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_and_gauge_basics() {
+        let c = Counter::new();
+        c.inc();
+        c.add(41);
+        assert_eq!(c.get(), 42);
+        let g = Gauge::new();
+        assert_eq!(g.get(), 0);
+        g.set(9);
+        g.set(3);
+        assert_eq!(g.get(), 3);
+    }
+
+    #[test]
+    fn counters_are_monotone_across_threads() {
+        let c = Counter::new();
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                s.spawn(|| {
+                    for _ in 0..1000 {
+                        c.inc();
+                    }
+                });
+            }
+        });
+        assert_eq!(c.get(), 4000);
+    }
+}

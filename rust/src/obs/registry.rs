@@ -1,0 +1,355 @@
+//! Named metric registry + the `METRICS` text rendering and merge rules.
+//!
+//! A [`Registry`] is a get-or-create map from a full series name (labels
+//! inline, e.g. `fastpi_stage_ns{stage="gemm"}`) to a metric handle. Each
+//! server owns its own registry — in-process fleets (tests, benches) must
+//! not share buckets — while [`Registry::global`] offers one process-wide
+//! instance for process-scoped metrics.
+//!
+//! `render` emits Prometheus-style text lines, one `name{labels} value`
+//! per line, deterministically sorted by family name:
+//!
+//! * counters/gauges: `name value` (counters are monotone by contract);
+//! * histograms: cumulative `<base>_bucket{...,le="<edge>"}` lines over
+//!   the fixed edges of [`super::hist`] (empty buckets skipped, `+Inf`
+//!   always present), then `<base>_count` and `<base>_sum`;
+//! * Welford timing buckets: per batch size, mergeable integers
+//!   `<base>_count{batch="b"}` / `<base>_total_ns{batch="b"}` plus float
+//!   `<base>_mean_ns` / `<base>_var_ns2` estimates.
+//!
+//! **Merge rules** ([`merge_bodies`], used by the router's `METRICS`):
+//! histogram buckets are parsed back into per-bucket counts (cumulative
+//! differences over numerically sorted edges — members may emit different
+//! non-empty subsets) and added exactly; integer families ending in
+//! `_total`, `_count`, `_sum`, or `_total_ns` are summed by series name;
+//! float series (means, variances, gauges) are dropped — means do not
+//! add. Everything is u64 arithmetic, so the merged count is bitwise the
+//! sum of the member counts. Label values must not contain commas.
+
+use super::hist::{bucket_index, bucket_upper, HistSnapshot, Histogram, BUCKETS};
+use super::welford::BatchTiming;
+use super::{Counter, Gauge};
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex, OnceLock};
+
+#[derive(Default)]
+struct Inner {
+    counters: Vec<(String, Arc<Counter>)>,
+    gauges: Vec<(String, Arc<Gauge>)>,
+    hists: Vec<(String, Arc<Histogram>)>,
+    timings: Vec<(String, Arc<BatchTiming>)>,
+}
+
+/// Process- or server-scoped collection of named metrics.
+#[derive(Default)]
+pub struct Registry {
+    inner: Mutex<Inner>,
+}
+
+fn get_or_insert<T>(list: &mut Vec<(String, Arc<T>)>, name: &str, make: impl FnOnce() -> T) -> Arc<T> {
+    if let Some((_, v)) = list.iter().find(|(n, _)| n == name) {
+        return Arc::clone(v);
+    }
+    let v = Arc::new(make());
+    list.push((name.to_string(), Arc::clone(&v)));
+    v
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    /// The process-wide registry.
+    pub fn global() -> &'static Registry {
+        static GLOBAL: OnceLock<Registry> = OnceLock::new();
+        GLOBAL.get_or_init(Registry::new)
+    }
+
+    pub fn counter(&self, name: &str) -> Arc<Counter> {
+        let mut inner = self.inner.lock().unwrap_or_else(|p| p.into_inner());
+        get_or_insert(&mut inner.counters, name, Counter::new)
+    }
+
+    pub fn gauge(&self, name: &str) -> Arc<Gauge> {
+        let mut inner = self.inner.lock().unwrap_or_else(|p| p.into_inner());
+        get_or_insert(&mut inner.gauges, name, Gauge::new)
+    }
+
+    pub fn hist(&self, name: &str) -> Arc<Histogram> {
+        let mut inner = self.inner.lock().unwrap_or_else(|p| p.into_inner());
+        get_or_insert(&mut inner.hists, name, Histogram::new)
+    }
+
+    pub fn timing(&self, name: &str) -> Arc<BatchTiming> {
+        let mut inner = self.inner.lock().unwrap_or_else(|p| p.into_inner());
+        get_or_insert(&mut inner.timings, name, BatchTiming::new)
+    }
+
+    /// Render every registered metric as sorted Prometheus-style lines.
+    pub fn render(&self) -> String {
+        // clone the handle lists out and drop the guard before touching
+        // any metric's own lock (BatchTiming) — keeps the lock graph flat
+        let (counters, gauges, hists, timings) = {
+            let inner = self.inner.lock().unwrap_or_else(|p| p.into_inner());
+            (
+                inner.counters.clone(),
+                inner.gauges.clone(),
+                inner.hists.clone(),
+                inner.timings.clone(),
+            )
+        };
+        let mut blocks: BTreeMap<String, String> = BTreeMap::new();
+        for (name, c) in counters {
+            blocks.insert(name.clone(), format!("{name} {}\n", c.get()));
+        }
+        for (name, g) in gauges {
+            blocks.insert(name.clone(), format!("{name} {}\n", g.get()));
+        }
+        for (name, h) in hists {
+            let snap = h.snapshot();
+            blocks.insert(name.clone(), render_hist(&name, &snap));
+        }
+        for (name, t) in timings {
+            let mut out = String::new();
+            for st in t.stats() {
+                let b = st.batch;
+                out.push_str(&format!("{name}_count{{batch=\"{b}\"}} {}\n", st.count));
+                out.push_str(&format!("{name}_total_ns{{batch=\"{b}\"}} {}\n", st.total_ns));
+                out.push_str(&format!("{name}_mean_ns{{batch=\"{b}\"}} {:?}\n", st.mean_ns));
+                out.push_str(&format!("{name}_var_ns2{{batch=\"{b}\"}} {:?}\n", st.var_ns2));
+            }
+            blocks.insert(name, out);
+        }
+        blocks.into_values().collect()
+    }
+}
+
+/// Split a full series name into (base, labels-without-braces).
+fn split_labels(name: &str) -> (&str, &str) {
+    match name.find('{') {
+        Some(i) => (&name[..i], name[i + 1..].trim_end_matches('}')),
+        None => (name, ""),
+    }
+}
+
+/// Compose `base_suffix{labels,extra}` with correct brace handling.
+fn series(base: &str, suffix: &str, labels: &str, extra: &str) -> String {
+    let mut l = String::new();
+    if !labels.is_empty() {
+        l.push_str(labels);
+    }
+    if !extra.is_empty() {
+        if !l.is_empty() {
+            l.push(',');
+        }
+        l.push_str(extra);
+    }
+    if l.is_empty() {
+        format!("{base}{suffix}")
+    } else {
+        format!("{base}{suffix}{{{l}}}")
+    }
+}
+
+/// Render one histogram family: cumulative non-empty buckets, `+Inf`,
+/// count, sum.
+pub fn render_hist(name: &str, snap: &HistSnapshot) -> String {
+    let (base, labels) = split_labels(name);
+    let mut out = String::new();
+    let mut cum = 0u64;
+    for (i, &b) in snap.buckets.iter().enumerate() {
+        if b == 0 {
+            continue;
+        }
+        cum += b;
+        let edge = bucket_upper(i);
+        out.push_str(&series(base, "_bucket", labels, &format!("le=\"{edge}\"")));
+        out.push_str(&format!(" {cum}\n"));
+    }
+    out.push_str(&series(base, "_bucket", labels, "le=\"+Inf\""));
+    out.push_str(&format!(" {cum}\n"));
+    out.push_str(&series(base, "_count", labels, ""));
+    out.push_str(&format!(" {cum}\n"));
+    out.push_str(&series(base, "_sum", labels, ""));
+    out.push_str(&format!(" {}\n", snap.sum));
+    out
+}
+
+/// Parse every `name value` line of a METRICS body into (series, value)
+/// pairs; non-numeric or malformed lines are reported as errors. Used by
+/// the CI checks to assert the surface parses and counters are monotone.
+pub fn parse_scalars(body: &str) -> Result<Vec<(String, f64)>, String> {
+    let mut out = Vec::new();
+    for line in body.lines() {
+        if line.is_empty() {
+            continue;
+        }
+        let Some((name, value)) = line.rsplit_once(' ') else {
+            return Err(format!("unparseable metrics line `{line}`"));
+        };
+        if name.is_empty() || name.starts_with(|c: char| !c.is_ascii_alphabetic()) {
+            return Err(format!("bad series name in `{line}`"));
+        }
+        let v: f64 = value
+            .parse()
+            .map_err(|_| format!("non-numeric value in `{line}`"))?;
+        out.push((name.to_string(), v));
+    }
+    Ok(out)
+}
+
+/// Does this base family name merge by integer summation?
+fn summable(base: &str) -> bool {
+    base.ends_with("_total")
+        || base.ends_with("_count")
+        || base.ends_with("_sum")
+        || base.ends_with("_total_ns")
+}
+
+/// Remove the `le="..."` label from a label list, returning (rest, edge).
+fn take_le(labels: &str) -> Option<(String, &str)> {
+    let mut rest = Vec::new();
+    let mut edge = None;
+    for part in labels.split(',') {
+        match part.strip_prefix("le=\"").and_then(|p| p.strip_suffix('"')) {
+            Some(e) => edge = Some(e),
+            None => rest.push(part),
+        }
+    }
+    edge.map(|e| (rest.join(","), e))
+}
+
+/// Merge METRICS bodies per the module-doc rules. Histograms are
+/// reconstructed bucket-exact; integer families are summed by series
+/// name; float series are dropped.
+pub fn merge_bodies(bodies: &[String]) -> String {
+    // full hist name -> (bucket counts, sum)
+    let mut hists: BTreeMap<String, HistSnapshot> = BTreeMap::new();
+    let mut scalars: BTreeMap<String, u64> = BTreeMap::new();
+    for body in bodies {
+        // per-body cumulative bucket lists, diffed once the body is read
+        let mut cums: BTreeMap<String, Vec<(u64, u64)>> = BTreeMap::new();
+        for line in body.lines() {
+            let Some((name, value)) = line.rsplit_once(' ') else { continue };
+            let (family, labels) = split_labels(name);
+            if let Some(base) = family.strip_suffix("_bucket") {
+                let Some((rest, edge)) = take_le(labels) else { continue };
+                if edge == "+Inf" {
+                    continue;
+                }
+                let (Ok(edge), Ok(cum)) = (edge.parse::<u64>(), value.parse::<u64>()) else {
+                    continue;
+                };
+                let key = if rest.is_empty() {
+                    base.to_string()
+                } else {
+                    format!("{base}{{{rest}}}")
+                };
+                cums.entry(key).or_default().push((edge, cum));
+            } else if summable(family) {
+                if let Ok(v) = value.parse::<u64>() {
+                    *scalars.entry(name.to_string()).or_insert(0) += v;
+                }
+            }
+        }
+        for (key, mut edges) in cums {
+            edges.sort_unstable();
+            let snap = hists.entry(key).or_insert_with(HistSnapshot::empty);
+            let mut prev = 0u64;
+            for (edge, cum) in edges {
+                let idx = bucket_index(edge).min(BUCKETS - 1);
+                snap.buckets[idx] += cum.saturating_sub(prev);
+                prev = cum;
+            }
+        }
+    }
+    // hist count/sum lines were summed into `scalars`; fold the sums back
+    // into the snapshots and drop the owned series from the scalar render
+    let mut blocks: BTreeMap<String, String> = BTreeMap::new();
+    for (key, snap) in &mut hists {
+        let (base, labels) = split_labels(key);
+        scalars.remove(&series(base, "_count", labels, ""));
+        if let Some(sum) = scalars.remove(&series(base, "_sum", labels, "")) {
+            snap.sum = sum;
+        }
+        blocks.insert(key.clone(), render_hist(key, snap));
+    }
+    for (name, v) in scalars {
+        blocks.insert(name.clone(), format!("{name} {v}\n"));
+    }
+    blocks.into_values().collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_get_or_create_and_render() {
+        let r = Registry::new();
+        let c = r.counter("fastpi_test_total");
+        c.inc();
+        c.add(2);
+        assert_eq!(r.counter("fastpi_test_total").get(), 3);
+        let g = r.gauge("fastpi_depth");
+        g.set(7);
+        let h = r.hist("fastpi_lat_ns{stage=\"gemm\"}");
+        h.record(100);
+        h.record(5000);
+        let t = r.timing("fastpi_batch");
+        t.record(8, 1000);
+        let body = r.render();
+        assert!(body.contains("fastpi_test_total 3\n"));
+        assert!(body.contains("fastpi_depth 7\n"));
+        assert!(body.contains("fastpi_lat_ns_count{stage=\"gemm\"} 2\n"));
+        assert!(body.contains("fastpi_lat_ns_sum{stage=\"gemm\"} 5100\n"));
+        assert!(body.contains("le=\"+Inf\"} 2\n"));
+        assert!(body.contains("fastpi_batch_count{batch=\"8\"} 1\n"));
+        assert!(body.contains("fastpi_batch_total_ns{batch=\"8\"} 1000\n"));
+        assert!(body.contains("fastpi_batch_mean_ns{batch=\"8\"} 1000.0\n"));
+        // every line parses, values numeric
+        let scalars = parse_scalars(&body).expect("body parses");
+        assert!(scalars.len() >= 8);
+    }
+
+    #[test]
+    fn render_then_merge_reconstructs_buckets_exactly() {
+        // two members with different bucket subsets merge to exactly the
+        // union histogram — count == sum of member counts, bucket-exact
+        let a = Histogram::new();
+        for v in [3u64, 3, 900, 1 << 20] {
+            a.record(v);
+        }
+        let b = Histogram::new();
+        for v in [70u64, 70, 70, 1 << 40] {
+            b.record(v);
+        }
+        let body_a = render_hist("fastpi_x_ns", &a.snapshot());
+        let body_b = render_hist("fastpi_x_ns", &b.snapshot());
+        let merged = merge_bodies(&[body_a, body_b]);
+        let mut want = a.snapshot();
+        want.merge(&b.snapshot());
+        assert_eq!(merged, render_hist("fastpi_x_ns", &want));
+        assert!(merged.contains("fastpi_x_ns_count 8\n"));
+    }
+
+    #[test]
+    fn merge_sums_integers_and_drops_floats() {
+        let a = "fastpi_served_total 5\nfastpi_mean_ns 12.5\n".to_string();
+        let b = "fastpi_served_total 7\nfastpi_mean_ns 90.5\n".to_string();
+        let merged = merge_bodies(&[a, b]);
+        assert_eq!(merged, "fastpi_served_total 12\n");
+    }
+
+    #[test]
+    fn merge_is_order_insensitive_on_line_order() {
+        let fwd = "fastpi_y_ns_bucket{le=\"15\"} 2\nfastpi_y_ns_bucket{le=\"95\"} 5\nfastpi_y_ns_bucket{le=\"+Inf\"} 5\nfastpi_y_ns_count 5\nfastpi_y_ns_sum 300\n";
+        let rev: String = fwd.lines().rev().map(|l| format!("{l}\n")).collect();
+        assert_eq!(
+            merge_bodies(&[fwd.to_string()]),
+            merge_bodies(&[rev]),
+            "cumulative parse must sort edges numerically"
+        );
+    }
+}

@@ -1,0 +1,141 @@
+//! Per-batch-size Welford timing buckets (the cervo `timing.rs` design).
+//!
+//! One slot per observed batch size accumulates count / mean / M2 with
+//! Welford's online algorithm, so the batcher (and, later, deadline-aware
+//! batching per ROADMAP item 1) can ask "what does a batch of size b cost,
+//! and how noisy is that estimate?" without storing samples. Slots live in
+//! a `BTreeMap` behind one leaf mutex — recording happens once per batch,
+//! not per request, so a lock is cheap and keeps mean/M2 updates atomic as
+//! a pair; iteration order is deterministic for rendering.
+//!
+//! Rendering emits, per batch size, the integer mergeable pair
+//! (`count`, `total_ns`) alongside the float `mean_ns` / `var_ns2`
+//! estimates; mergers (the router) keep the integers and drop the floats —
+//! means do not add.
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+#[derive(Clone, Copy, Default)]
+struct Slot {
+    count: u64,
+    mean: f64,
+    m2: f64,
+    total_ns: u64,
+}
+
+/// One batch size's accumulated timing statistics.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchStat {
+    pub batch: usize,
+    pub count: u64,
+    pub mean_ns: f64,
+    /// Population variance (M2 / count), 0 for a single observation.
+    pub var_ns2: f64,
+    pub total_ns: u64,
+}
+
+/// Per-batch-size Welford mean/variance buckets.
+#[derive(Default)]
+pub struct BatchTiming {
+    slots: Mutex<BTreeMap<usize, Slot>>,
+}
+
+impl BatchTiming {
+    pub fn new() -> BatchTiming {
+        BatchTiming::default()
+    }
+
+    /// Fold one observation (a batch of `batch` items took `ns`
+    /// nanoseconds) into that batch size's slot.
+    pub fn record(&self, batch: usize, ns: u64) {
+        let mut slots = self.slots.lock().unwrap_or_else(|p| p.into_inner());
+        let s = slots.entry(batch).or_default();
+        s.count += 1;
+        s.total_ns = s.total_ns.saturating_add(ns);
+        let x = ns as f64;
+        let delta = x - s.mean;
+        s.mean += delta / s.count as f64;
+        s.m2 += delta * (x - s.mean);
+    }
+
+    /// Mean cost estimate for a batch size, if it has been observed.
+    pub fn mean_ns(&self, batch: usize) -> Option<f64> {
+        let slots = self.slots.lock().unwrap_or_else(|p| p.into_inner());
+        slots.get(&batch).filter(|s| s.count > 0).map(|s| s.mean)
+    }
+
+    /// All observed batch sizes' stats, ascending by batch size.
+    pub fn stats(&self) -> Vec<BatchStat> {
+        let slots = self.slots.lock().unwrap_or_else(|p| p.into_inner());
+        slots
+            .iter()
+            .map(|(&batch, s)| BatchStat {
+                batch,
+                count: s.count,
+                mean_ns: s.mean,
+                var_ns2: if s.count > 0 { s.m2 / s.count as f64 } else { 0.0 },
+                total_ns: s.total_ns,
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    /// Welford must agree with the naive two-pass mean/variance.
+    #[test]
+    fn welford_matches_naive_mean_and_variance() {
+        let mut rng = Rng::seed_from_u64(99);
+        let t = BatchTiming::new();
+        let mut by_batch: BTreeMap<usize, Vec<u64>> = BTreeMap::new();
+        for _ in 0..5000 {
+            let batch = 1usize << (rng.next_u64() % 7);
+            let ns = 1000 + rng.next_u64() % 10_000_000;
+            t.record(batch, ns);
+            by_batch.entry(batch).or_default().push(ns);
+        }
+        for st in t.stats() {
+            let xs = &by_batch[&st.batch];
+            assert_eq!(st.count, xs.len() as u64);
+            assert_eq!(st.total_ns, xs.iter().sum::<u64>());
+            let naive_mean = xs.iter().map(|&x| x as f64).sum::<f64>() / xs.len() as f64;
+            let naive_var = xs
+                .iter()
+                .map(|&x| (x as f64 - naive_mean).powi(2))
+                .sum::<f64>()
+                / xs.len() as f64;
+            let rel = |a: f64, b: f64| (a - b).abs() / b.abs().max(1.0);
+            assert!(
+                rel(st.mean_ns, naive_mean) < 1e-9,
+                "batch {}: welford mean {} vs naive {naive_mean}",
+                st.batch,
+                st.mean_ns
+            );
+            assert!(
+                rel(st.var_ns2, naive_var) < 1e-6,
+                "batch {}: welford var {} vs naive {naive_var}",
+                st.batch,
+                st.var_ns2
+            );
+        }
+    }
+
+    #[test]
+    fn mean_lookup_and_empty_behavior() {
+        let t = BatchTiming::new();
+        assert!(t.mean_ns(8).is_none());
+        assert!(t.stats().is_empty());
+        t.record(8, 100);
+        t.record(8, 300);
+        let m = t.mean_ns(8).unwrap();
+        assert!((m - 200.0).abs() < 1e-12);
+        assert!(t.mean_ns(16).is_none());
+        let st = &t.stats()[0];
+        assert_eq!((st.batch, st.count, st.total_ns), (8, 2, 400));
+        assert!((st.var_ns2 - 10_000.0).abs() < 1e-9);
+    }
+}
