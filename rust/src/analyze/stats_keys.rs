@@ -254,6 +254,56 @@ mod tests {
     }
 
     #[test]
+    fn admission_and_model_keys_reconcile_with_the_doc_table() {
+        // the deadline/admission/multi-model wire surface: STATS gained
+        // `shed=`/`deadlines=`/`models=`, named-model VERSION emits
+        // `model=` — documented + emitted together is quiet
+        let live = "//! STATS: `<- STATS served=0 shed=0 deadlines=0 models=1`\n\
+                    //! Named models: `<- VERSION model=ranker id=3`\n\
+                    fn stats(s: u64, sh: u64, d: u64, m: usize) -> String {\n\
+                    format!(\"STATS served={s} shed={sh} deadlines={d} models={m}\\n\")\n\
+                    }\n\
+                    fn ver(name: &str, id: u64) -> String {\n\
+                    format!(\"VERSION model={name} id={id}\\n\")\n\
+                    }\n";
+        let r = analyze_sources(&[("rust/src/coordinator/serve.rs".to_string(), live.to_string())]);
+        assert!(r.findings.is_empty(), "{:?}", r.findings);
+        // drop `shed=` from the doc table: the emission fires at its line
+        let undocumented = "//! STATS: `<- STATS served=0 deadlines=0 models=1`\n\
+                            //! Named models: `<- VERSION model=ranker id=3`\n\
+                            fn stats(s: u64, sh: u64, d: u64, m: usize) -> String {\n\
+                            format!(\"STATS served={s} shed={sh} deadlines={d} models={m}\\n\")\n\
+                            }\n\
+                            fn ver(name: &str, id: u64) -> String {\n\
+                            format!(\"VERSION model={name} id={id}\\n\")\n\
+                            }\n";
+        let r = analyze_sources(&[(
+            "rust/src/coordinator/serve.rs".to_string(),
+            undocumented.to_string(),
+        )]);
+        assert_eq!(r.findings.len(), 1, "{:?}", r.findings);
+        assert!(r.findings[0].message.contains("`shed=`"), "{}", r.findings[0].message);
+        assert_eq!(r.findings[0].line, 4);
+        // a doc'd `model=` outliving the MODEL verb fires at the doc line
+        let stale = "//! Named models: `<- VERSION model=ranker id=3`\n\
+                     fn ver(id: u64) -> String { format!(\"VERSION id={id}\\n\") }\n";
+        let r =
+            analyze_sources(&[("rust/src/coordinator/serve.rs".to_string(), stale.to_string())]);
+        assert_eq!(r.findings.len(), 1, "{:?}", r.findings);
+        assert!(r.findings[0].message.contains("`model=`"), "{}", r.findings[0].message);
+        assert_eq!(r.findings[0].line, 1);
+        // ...and a reasoned allow on the emission line silences the fire
+        let allowed = "fn stats(sh: u64) -> String {\n\
+                       // analyze::allow(stats-key-drift): shed= doc row lands with the ops guide\n\
+                       format!(\"STATS shed={sh}\\n\")\n\
+                       }\n";
+        let r =
+            analyze_sources(&[("rust/src/coordinator/serve.rs".to_string(), allowed.to_string())]);
+        assert!(r.findings.is_empty(), "{:?}", r.findings);
+        assert_eq!(r.suppressed, 1);
+    }
+
+    #[test]
     fn reasoned_allow_silences_drift() {
         let src = "// analyze::allow(stats-key-drift): experimental key, doc lands with the client\n\
                    fn reply(b: u64) -> String { format!(\"OK bogus={b}\\n\") }\n";

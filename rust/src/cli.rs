@@ -90,6 +90,23 @@ LIFECYCLE OPTIONS:
   --resolve-drift 0.05 flag a full re-solve past accumulated drift
   --gc N               update: keep only the newest N store versions
 
+SERVING OPTIONS:
+  --slo-ms N           serve: per-batch latency budget in ms. The batcher
+                       sizes drains from its measured per-batch-size cost
+                       table to stay inside the budget (falling back to
+                       max_batch until it has observations), and the
+                       client reply deadline derives from it (`ERR
+                       deadline` on expiry). 0/absent = fixed max_batch
+  --shed-depth N       serve: admission control — refuse new SCOREs fast
+                       with `ERR busy` once the request queue holds N
+                       entries (0 = accept until hard-full). Shed
+                       requests count under STATS shed=
+
+  A primary with --model-dir also serves every models/<name> namespace
+  in the store as a named model: `MODEL <name> SCORE ...` scores it,
+  `MODEL <name> VERSION` reports its shape (publish into a namespace
+  with the store API; the bare verbs keep addressing the primary model)
+
 REPLICATION OPTIONS:
   --replica-of ADDR    serve: follow this primary (requires --model-dir,
                        the replica's own local store directory; the
@@ -118,7 +135,8 @@ BENCH-DIFF OPTIONS:
   --current DIR        fresh results (default target/bench_results)
   --max-regress 0.2    allowed fractional regression per gated key
   --keys a,b           gated value keys (default throughput_rps,p50_ms,
-                       p95_ms,p99_storm_ms,propagation_p95_ms,speedup_x)
+                       p95_ms,p99_ms,p99_storm_ms,propagation_p95_ms,
+                       speedup_x)
 ";
 
 pub fn main() {
@@ -423,13 +441,30 @@ fn shard_arg(args: &Args) -> crate::error::Result<Option<(u64, u64)>> {
     }
 }
 
+/// Parse `--slo-ms` into the serving latency budget (0 or absent = no
+/// budget: fixed `max_batch` drains and the default reply deadline).
+fn slo_arg(args: &Args) -> crate::error::Result<Option<std::time::Duration>> {
+    match args.get("slo-ms") {
+        None => Ok(None),
+        Some(v) => {
+            let ms: u64 = v.parse().map_err(|_| {
+                crate::error::Error::Invalid(format!("bad --slo-ms `{v}` (want milliseconds)"))
+            })?;
+            Ok((ms > 0).then(|| std::time::Duration::from_millis(ms)))
+        }
+    }
+}
+
 fn cmd_serve(args: &Args) -> crate::error::Result<()> {
     use crate::coordinator::{PinvJob, PipelineCoordinator, ReplicaConfig, ScoreServer, ServerConfig};
     use crate::data::load_dataset;
     use crate::model::{ModelStore, OnlineUpdater};
-    let server_cfg = ServerConfig {
+    use crate::regress::MultiLabelModel;
+    let mut server_cfg = ServerConfig {
         threads: args.parse_or("threads", 0usize),
         bind: args.str_or("bind", "127.0.0.1:0"),
+        slo: slo_arg(args)?,
+        shed_depth: args.parse_or("shed-depth", 0usize),
         ..Default::default()
     };
     let shard = shard_arg(args)?;
@@ -498,6 +533,19 @@ fn cmd_serve(args: &Args) -> crate::error::Result<()> {
                 artifact.rank()
             ),
         }
+        // named model namespaces ride along: each models/<name> child
+        // store's latest version is served under `MODEL <name>`
+        // (primary-only — replicas and shard slices sync one model)
+        if shard.is_none() {
+            for name in store.model_names()? {
+                let Some((mv, art)) = store.model_ns(&name)?.load_latest()? else {
+                    continue;
+                };
+                let (_, nf, nl) = art.shape();
+                println!("  named model `{name}` v{mv}: {nf} features, {nl} labels");
+                server_cfg.models.push((name, MultiLabelModel { z: art.z }));
+            }
+        }
         let updater = OnlineUpdater::new(artifact, updater_cfg_arg(args));
         ScoreServer::start_lifecycle(updater, Some(store), version, server_cfg)
             .map_err(crate::error::Error::Io)?
@@ -522,7 +570,7 @@ fn cmd_serve(args: &Args) -> crate::error::Result<()> {
             .map_err(crate::error::Error::Io)?
     };
     println!(
-        "scoring server on {} — verbs: SCORE <topk> j:v,... | LEARN <labels|-> j:v,... | VERSION | RELOAD | SHIP <have> | STATS  (Ctrl-C to stop)",
+        "scoring server on {} — verbs: SCORE <topk> j:v,... | MODEL <name> SCORE ... | LEARN <labels|-> j:v,... | VERSION | RELOAD | SHIP <have> | STATS  (Ctrl-C to stop)",
         server.addr
     );
     // machine-readable marker (line-buffered, so it flushes even when
@@ -725,11 +773,18 @@ fn cmd_bench_diff(args: &Args) -> crate::error::Result<()> {
     let baseline = args.str_or("baseline", "bench_baselines");
     let current = args.str_or("current", "target/bench_results");
     let max_regress: f64 = args.parse_or("max-regress", 0.20);
-    let default_keys: Vec<String> =
-        ["throughput_rps", "p50_ms", "p95_ms", "p99_storm_ms", "propagation_p95_ms", "speedup_x"]
-            .iter()
-            .map(|s| s.to_string())
-            .collect();
+    let default_keys: Vec<String> = [
+        "throughput_rps",
+        "p50_ms",
+        "p95_ms",
+        "p99_ms",
+        "p99_storm_ms",
+        "propagation_p95_ms",
+        "speedup_x",
+    ]
+    .iter()
+    .map(|s| s.to_string())
+    .collect();
     let keys = args.parse_list("keys", &default_keys);
     let failures = bench::diff_dirs(
         std::path::Path::new(&baseline),
@@ -876,6 +931,8 @@ fn cmd_lifecycle_check(args: &Args) -> crate::error::Result<()> {
         )));
     };
     let (_, n, _) = artifact.shape();
+    // the overload step below serves this same model under a tiny queue
+    let flood_z = artifact.z.clone();
     let updater = OnlineUpdater::new(artifact, updater_cfg_arg(args));
     let server = ScoreServer::start_lifecycle(updater, Some(store), version, ServerConfig::default())
         .map_err(Error::Io)?;
@@ -975,8 +1032,85 @@ fn cmd_lifecycle_check(args: &Args) -> crate::error::Result<()> {
         return Err(Error::Invalid(format!("EVENTS did not drain: second read got\n{drained}")));
     }
     println!("  EVENTS: learn + swap recorded, journal drained");
-
     server.shutdown();
+
+    // Overload discipline: flood a deliberately tiny-throughput server
+    // past its shed threshold — every reply must be OK or a fast
+    // `ERR busy` (never a queue timeout), STATS must reconcile exactly
+    // with the client-observed counts, and once the flood drains,
+    // steady-state traffic sees zero errors.
+    let flood_cfg = ServerConfig {
+        max_batch: 1, // one row per drain keeps a backlog alive under the flood
+        max_wait: std::time::Duration::ZERO,
+        queue_capacity: 64,
+        shed_depth: 2,
+        slo: Some(std::time::Duration::from_millis(50)),
+        ..Default::default()
+    };
+    let flood = ScoreServer::start(crate::regress::MultiLabelModel { z: flood_z }, flood_cfg)
+        .map_err(Error::Io)?;
+    let flood_addr = flood.addr;
+    let (threads, per) = (8usize, 25usize);
+    let (ok, busy) = std::thread::scope(|s| -> crate::error::Result<(usize, usize)> {
+        let mut handles = Vec::new();
+        for _ in 0..threads {
+            handles.push(s.spawn(move || -> Result<(usize, usize), String> {
+                let (mut ok, mut busy) = (0usize, 0usize);
+                for _ in 0..per {
+                    let r = text_request(flood_addr, "SCORE 1 0:1.0")
+                        .map_err(|e| format!("flood request io: {e}"))?;
+                    if r.starts_with("OK ") {
+                        ok += 1;
+                    } else if r == "ERR busy" {
+                        busy += 1;
+                    } else {
+                        return Err(format!("flood got `{r}` — only OK/ERR busy are allowed"));
+                    }
+                }
+                Ok((ok, busy))
+            }));
+        }
+        let (mut ok, mut busy) = (0usize, 0usize);
+        for h in handles {
+            let (o, b) = h.join().expect("flood thread panicked").map_err(Error::Invalid)?;
+            ok += o;
+            busy += b;
+        }
+        Ok((ok, busy))
+    })?;
+    if ok + busy != threads * per {
+        return Err(Error::Invalid(format!(
+            "flood accounting broken: {ok} OK + {busy} busy != {}",
+            threads * per
+        )));
+    }
+    let stats = text_request(flood_addr, "STATS").map_err(Error::Io)?;
+    let stat_field = |key: &str| -> crate::error::Result<usize> {
+        stats
+            .split_whitespace()
+            .find_map(|tok| tok.strip_prefix(key)?.parse().ok())
+            .ok_or_else(|| Error::Invalid(format!("STATS missing `{key}`: {stats}")))
+    };
+    let (served, shed) = (stat_field("served=")?, stat_field("shed=")?);
+    let (rejected, deadlines) = (stat_field("rejected=")?, stat_field("deadlines=")?);
+    if served != ok || shed != busy || rejected != 0 || deadlines != 0 {
+        return Err(Error::Invalid(format!(
+            "STATS does not reconcile with the flood: clients saw {ok} OK / {busy} busy, {stats}"
+        )));
+    }
+    // recovery: the drained server serves steady traffic error-free
+    for i in 0..10 {
+        let r = text_request(flood_addr, "SCORE 1 0:1.0").map_err(Error::Io)?;
+        if !r.starts_with("OK ") {
+            return Err(Error::Invalid(format!("post-flood request {i} got `{r}`")));
+        }
+    }
+    flood.shutdown();
+    println!(
+        "  overload: {ok} served + {busy} shed of {} (STATS reconciled), steady traffic clean",
+        threads * per
+    );
+
     println!("lifecycle-check OK: v{version} served, reloaded, learned into v{}", version + 1);
     Ok(())
 }

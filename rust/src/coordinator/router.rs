@@ -64,6 +64,24 @@
 //! is client-invisible while a sibling lives. `STATS retries=` counts the
 //! request lines re-sent this way.
 //!
+//! ## Multi-model forwarding and ticket-aging fairness
+//!
+//! Replicated mode forwards `MODEL <name> SCORE …` lines verbatim — the
+//! replicas resolve the name (see `super::serve`'s multi-model docs), so
+//! an unknown one comes back `ERR unknown model`. Sharded mode refuses
+//! them with `ERR bad request`: a shard fleet serves slices of exactly
+//! one model. Fan-out rounds are assembled with **ticket aging**: every
+//! queued request takes a monotonically increasing ticket, requests are
+//! grouped by model name (primary = its own group), and each round first
+//! hands every waiting model an equal share of the batch (oldest tickets
+//! first) before topping the round up strictly by ticket age
+//! (`assemble_fair_round`) — so a chatty tenant flooding one model can
+//! delay a quiet model's requests by at most a round, never starve them,
+//! while per-model FIFO order is preserved. Replica-side admission and
+//! deadline replies (`ERR busy`, `ERR deadline` — the deadline-aware
+//! batching policy in `super::serve`) pass through verbatim like every
+//! other upstream reply.
+//!
 //! ## Observability
 //!
 //! Version skew is the router's observability duty in both modes: stores
@@ -91,9 +109,11 @@
 //! 0 ⇒ the shard set is complete and in lockstep — the precondition for
 //! merged replies equalling an unsharded node's.
 //!
-//! Router verbs: `SCORE` (both modes), `LEARN` (sharded mode only — in
-//! replicated mode it belongs on the primary and a replica would refuse
-//! it anyway), `PING`, `STATS`, `METRICS`, `EVENTS [<max>]`, `QUIT`.
+//! Router verbs: `SCORE` (both modes), `MODEL <name> SCORE` (replicated
+//! mode only — see the multi-model section above), `LEARN` (sharded mode
+//! only — in replicated mode it belongs on the primary and a replica
+//! would refuse it anyway), `PING`, `STATS`, `METRICS`, `EVENTS
+//! [<max>]`, `QUIT`.
 //!
 //! `METRICS` answers `OK lines=<n>` followed by `n` Prometheus-style
 //! lines: the fleet view. The router fetches every member's own METRICS
@@ -374,6 +394,92 @@ struct Pending {
 /// server's batcher — see `coordinator/queue.rs`).
 type Queue = super::queue::BoundedQueue<Pending>;
 
+/// One backlogged request plus its age ticket — the fairness currency of
+/// [`assemble_fair_round`]. Tickets are issued in arrival order, so a
+/// smaller `seq` means "has waited longer".
+struct Ticket {
+    seq: u64,
+    p: Pending,
+}
+
+/// The model-namespace key a request line is grouped under for fairness:
+/// the `MODEL <name>` prefix when present, the primary (empty key)
+/// otherwise. Grouping keys on the raw token — an unknown name still
+/// forms its own group and the replicas answer it `ERR unknown model`.
+fn model_key(line: &str) -> &str {
+    line.strip_prefix("MODEL ")
+        .and_then(|rest| rest.split_whitespace().next())
+        .unwrap_or("")
+}
+
+/// True iff `msg` is a well-formed `MODEL <name> SCORE …` line — the only
+/// MODEL form the router forwards (replicated mode; the replicas resolve
+/// the name).
+fn is_model_score(msg: &str) -> bool {
+    let Some(rest) = msg.strip_prefix("MODEL ") else {
+        return false;
+    };
+    match rest.trim_start().split_once(' ') {
+        Some((name, verb)) => !name.is_empty() && verb.trim_start().starts_with("SCORE "),
+        None => false,
+    }
+}
+
+/// Assemble one fan-out round from the per-model backlog with ticket
+/// aging: every model with waiting tickets first claims an equal share
+/// of the round (`⌈max_batch / models⌉`, oldest tickets first; shares
+/// are claimed in oldest-head order, so when the shares over-subscribe
+/// the round the longest-waiting models collect theirs first), then the
+/// round is topped up strictly by ticket age. A chatty model can never
+/// push a quiet model's share below the fair split, and within every
+/// model requests stay FIFO. Emptied groups are dropped so `backlog`
+/// being empty means "nothing waits".
+fn assemble_fair_round(
+    backlog: &mut std::collections::BTreeMap<String, std::collections::VecDeque<Ticket>>,
+    max_batch: usize,
+) -> Vec<Ticket> {
+    let mut round = Vec::new();
+    if max_batch == 0 {
+        return round;
+    }
+    let head_seq = |q: &std::collections::VecDeque<Ticket>| q.front().map(|t| t.seq);
+    // models with work, longest-waiting head first
+    let mut order: Vec<String> = backlog
+        .iter()
+        .filter(|(_, q)| !q.is_empty())
+        .map(|(k, _)| k.clone())
+        .collect();
+    if order.is_empty() {
+        return round;
+    }
+    order.sort_by_key(|k| backlog.get(k).and_then(head_seq).unwrap_or(u64::MAX));
+    let share = max_batch.div_ceil(order.len());
+    for k in &order {
+        let Some(q) = backlog.get_mut(k) else { continue };
+        for _ in 0..share.min(max_batch - round.len()) {
+            match q.pop_front() {
+                Some(t) => round.push(t),
+                None => break,
+            }
+        }
+        if round.len() >= max_batch {
+            break;
+        }
+    }
+    // top-up strictly by age across whatever still waits
+    while round.len() < max_batch {
+        let oldest = backlog
+            .iter()
+            .filter_map(|(k, q)| head_seq(q).map(|s| (s, k.clone())))
+            .min();
+        let Some((_, k)) = oldest else { break };
+        let Some(t) = backlog.get_mut(&k).and_then(|q| q.pop_front()) else { break };
+        round.push(t);
+    }
+    backlog.retain(|_, q| !q.is_empty());
+    round
+}
+
 /// How the router treats its target groups.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum RouterMode {
@@ -641,13 +747,36 @@ fn fanout_loop(
     obs: Option<Arc<RouterObs>>,
 ) {
     let mut rotation = 0usize; // rotates so batch-of-1 traffic still spreads
+    let mut next_ticket = 0u64;
+    let mut backlog: std::collections::BTreeMap<
+        String,
+        std::collections::VecDeque<Ticket>,
+    > = std::collections::BTreeMap::new();
     while !stop.load(Ordering::Relaxed) {
-        let batch = queue.drain_batch(cfg.max_batch, cfg.max_wait, &stop);
-        if batch.is_empty() {
+        // block for work only when nothing is backlogged; with tickets
+        // still waiting, top up with whatever has arrived and keep
+        // serving — the fairness scheduler must not stall on an empty
+        // queue while it holds a backlog
+        let fresh = if backlog.is_empty() {
+            queue.drain_batch(cfg.max_batch, cfg.max_wait, &stop)
+        } else {
+            queue.drain_ready(cfg.max_batch)
+        };
+        if fresh.is_empty() && backlog.is_empty() {
             // empty ⇔ the drain observed `stop`
             if stop.load(Ordering::Relaxed) {
                 return;
             }
+            continue;
+        }
+        for p in fresh {
+            let key = model_key(&p.line).to_string();
+            backlog.entry(key).or_default().push_back(Ticket { seq: next_ticket, p });
+            next_ticket += 1;
+        }
+        let batch: Vec<Pending> =
+            assemble_fair_round(&mut backlog, cfg.max_batch).into_iter().map(|t| t.p).collect();
+        if batch.is_empty() {
             continue;
         }
         let o = obs.as_deref();
@@ -1129,27 +1258,20 @@ fn handle_conn(
             continue;
         }
         // sharded mode also forwards LEARN: the broadcast + unanimity
-        // check IS the sharded learning path
+        // check IS the sharded learning path; replicated mode also
+        // forwards MODEL-prefixed scores (a shard fleet serves one model,
+        // so sharded mode lets them fall through to `ERR bad request`)
         if msg.starts_with("SCORE ")
             || (mode == RouterMode::Sharded && msg.starts_with("LEARN "))
+            || (mode == RouterMode::Replicated && is_model_score(msg))
         {
             let (tx, rx) = std::sync::mpsc::channel();
-            let accepted = {
-                let mut dq = queue.lock();
-                if dq.len() >= queue.capacity() {
-                    false
-                } else {
-                    dq.push_back(Pending { line: msg.to_string(), reply: tx });
-                    true
-                }
-            };
-            if !accepted {
+            if !queue.try_push(Pending { line: msg.to_string(), reply: tx }) {
                 stats.rejected.fetch_add(1, Ordering::Relaxed);
                 writeln!(writer, "ERR overloaded")?;
                 writer.flush()?;
                 continue;
             }
-            queue.notify_one();
             // reply wait covers queue time + one fan-out round; derive it
             // from the configured upstream bound so a large
             // upstream_timeout is never silently undercut by a constant
@@ -1522,5 +1644,171 @@ mod tests {
         s0.shutdown();
         s1.shutdown();
         full.shutdown();
+    }
+
+    fn ticket(seq: u64, line: &str) -> Ticket {
+        // the receiver is dropped — these tickets are never replied to
+        let (tx, _) = std::sync::mpsc::channel();
+        Ticket { seq, p: Pending { line: line.to_string(), reply: tx } }
+    }
+
+    #[test]
+    fn fair_round_never_starves_the_quiet_model() {
+        use std::collections::{BTreeMap, VecDeque};
+        // a chatty primary with 100 waiting tickets vs one quiet named
+        // model whose single request arrived LAST
+        let mut backlog: BTreeMap<String, VecDeque<Ticket>> = BTreeMap::new();
+        let chatty: VecDeque<Ticket> =
+            (0..100).map(|i| ticket(i, "SCORE 2 0:1.0")).collect();
+        backlog.insert(String::new(), chatty);
+        backlog
+            .entry("quiet".to_string())
+            .or_default()
+            .push_back(ticket(100, "MODEL quiet SCORE 2 0:1.0"));
+
+        let round = assemble_fair_round(&mut backlog, 8);
+        assert_eq!(round.len(), 8);
+        assert!(
+            round.iter().any(|t| t.seq == 100),
+            "the quiet model's only ticket must ride in the first round"
+        );
+        // per-model FIFO: the chatty tickets in the round are its oldest,
+        // in order
+        let chatty_seqs: Vec<u64> =
+            round.iter().map(|t| t.seq).filter(|&s| s != 100).collect();
+        assert_eq!(chatty_seqs, (0..7).collect::<Vec<u64>>());
+        // nothing was dropped: the rest still waits, oldest first
+        assert_eq!(backlog.len(), 1);
+        assert_eq!(backlog[""].len(), 93);
+        assert_eq!(backlog[""].front().unwrap().seq, 7);
+
+        // drain the backlog to empty in max_batch-sized fair rounds; every
+        // ticket must come out exactly once
+        let mut seen = vec![false; 93];
+        loop {
+            let r = assemble_fair_round(&mut backlog, 8);
+            if r.is_empty() {
+                break;
+            }
+            for t in r {
+                let i = (t.seq - 7) as usize;
+                assert!(!seen[i], "ticket {} emitted twice", t.seq);
+                seen[i] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s), "every backlogged ticket must eventually be served");
+        assert!(backlog.is_empty());
+    }
+
+    #[test]
+    fn fair_round_orders_models_by_waiting_age() {
+        use std::collections::{BTreeMap, VecDeque};
+        // when the shares over-subscribe the round, the longest-waiting
+        // model collects its share first
+        let mut backlog: BTreeMap<String, VecDeque<Ticket>> = BTreeMap::new();
+        for (name, base) in [("a", 10u64), ("b", 0u64), ("c", 20u64)] {
+            let q: VecDeque<Ticket> =
+                (0..4).map(|i| ticket(base + i, "SCORE 1 0:1.0")).collect();
+            backlog.insert(name.to_string(), q);
+        }
+        // 3 models, max_batch 4 → share = 2; b (oldest head, seq 0) then a
+        // (seq 10) claim theirs, c waits for the next round
+        let round = assemble_fair_round(&mut backlog, 4);
+        let seqs: Vec<u64> = round.iter().map(|t| t.seq).collect();
+        assert_eq!(seqs, vec![0, 1, 10, 11]);
+        assert_eq!(backlog["c"].len(), 4, "over-subscribed round defers the youngest model");
+        // zero-width round asks for nothing
+        assert!(assemble_fair_round(&mut backlog, 0).is_empty());
+    }
+
+    #[test]
+    fn model_line_parsing() {
+        assert_eq!(model_key("SCORE 2 0:1.0"), "");
+        assert_eq!(model_key("MODEL ranker SCORE 2 0:1.0"), "ranker");
+        assert!(is_model_score("MODEL ranker SCORE 2 0:1.0"));
+        assert!(!is_model_score("MODEL ranker RELOAD"));
+        assert!(!is_model_score("MODEL ranker"));
+        assert!(!is_model_score("SCORE 2 0:1.0"));
+        assert!(!is_model_score("MODEL  SCORE 2 0:1.0"));
+    }
+
+    #[test]
+    fn model_scores_forward_in_replicated_mode_only() {
+        // two replicas hosting the same named model alongside different
+        // primaries — the router forwards the MODEL line verbatim and the
+        // replica resolves the name
+        let mut rng = Rng::seed_from_u64(31);
+        let named_z = Matrix::randn(9, 4, &mut rng);
+        let solo = ScoreServer::start(
+            MultiLabelModel { z: named_z.clone() },
+            ServerConfig::default(),
+        )
+        .unwrap();
+        let mk = |seed: u64| {
+            let mut rng = Rng::seed_from_u64(seed);
+            ScoreServer::start(
+                MultiLabelModel { z: Matrix::randn(10, 5, &mut rng) },
+                ServerConfig {
+                    models: vec![("ranker".into(), MultiLabelModel { z: named_z.clone() })],
+                    ..Default::default()
+                },
+            )
+            .unwrap()
+        };
+        let (r1, r2) = (mk(7), mk(8));
+        let router = Router::start(vec![r1.addr, r2.addr], RouterConfig::default()).unwrap();
+        let probe = "MODEL ranker SCORE 2 0:1.0,5:-0.5";
+        let want = text_request(solo.addr, "SCORE 2 0:1.0,5:-0.5").unwrap();
+        for _ in 0..4 {
+            let got = text_request(router.addr, probe).unwrap();
+            assert_eq!(got, want, "forwarded MODEL score must match a dedicated server");
+        }
+        // unknown names come back from the replica, not the router
+        assert_eq!(
+            text_request(router.addr, "MODEL nope SCORE 1 0:1.0").unwrap(),
+            "ERR unknown model"
+        );
+        // non-SCORE MODEL forms are refused at the router's door
+        assert_eq!(
+            text_request(router.addr, "MODEL ranker RELOAD").unwrap(),
+            "ERR bad request"
+        );
+        assert_eq!(router.stats.errors.load(Ordering::Relaxed), 0);
+        router.shutdown();
+        r1.shutdown();
+        r2.shutdown();
+
+        // sharded mode refuses MODEL outright: a shard fleet serves
+        // slices of exactly one model (no upstream is ever consulted, so
+        // dead members are fine here)
+        use crate::model::format::testutil::sample_artifact;
+        use crate::model::split_artifact;
+        let art = sample_artifact(74, 12, 8, 6, 4);
+        let set = split_artifact(&art, 2).unwrap();
+        let shards: Vec<ScoreServer> = set
+            .iter()
+            .map(|s| {
+                ScoreServer::start_sharded(
+                    MultiLabelModel { z: s.z.clone() },
+                    s.meta.shard,
+                    ServerConfig::default(),
+                )
+                .unwrap()
+            })
+            .collect();
+        let sharded = Router::start_sharded(
+            shards.iter().map(|s| vec![s.addr]).collect(),
+            RouterConfig::default(),
+        )
+        .unwrap();
+        assert_eq!(
+            text_request(sharded.addr, "MODEL ranker SCORE 1 0:1.0").unwrap(),
+            "ERR bad request"
+        );
+        sharded.shutdown();
+        for s in shards {
+            s.shutdown();
+        }
+        solo.shutdown();
     }
 }

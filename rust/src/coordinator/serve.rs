@@ -81,10 +81,52 @@
 //! parse, re-rank, and re-emit them without losing a bit — the property
 //! the sharded-equals-unsharded guarantee rests on.
 //!
+//! ## Deadline-aware batching and admission control
+//!
+//! With a latency budget configured ([`ServerConfig::slo`], CLI
+//! `--slo-ms`) the batcher consults the per-batch-size Welford cost table
+//! (`fastpi_gemm_batch`, the feed [`crate::obs::BatchTiming`] was built
+//! for) before each drain and caps the batch at the largest size whose
+//! *predicted* scoring cost still fits the budget — falling back to the
+//! fixed `max_batch` until the table has observations (or with obs off,
+//! which has no table). Score rows are independent, so the chosen batch
+//! size never changes a reply byte (pinned by the
+//! `score_bytes_invariant_to_batch_size` test). The same budget derives
+//! the per-connection reply wait (8× the budget plus the straggler grace,
+//! floored at 250ms): a request the batcher cannot answer inside that
+//! window gets `ERR deadline` (counted as `deadlines=`) instead of
+//! pinning its connection thread for the no-SLO default of 30s.
+//!
+//! Admission control sheds overload at the door: with
+//! [`ServerConfig::shed_depth`] > 0, a SCORE arriving while the queue is
+//! already that deep is refused immediately with `ERR busy` (counted as
+//! `shed=`) — a fast, explicit refusal the client can retry against a
+//! replica, instead of queueing toward a deadline expiry. The check reads
+//! the lock-free depth gauge, never the queue mutex. A hard-full queue
+//! still answers `ERR overloaded` (`rejected=`); `busy` means "past the
+//! policy threshold", `overloaded` means "out of queue".
+//!
+//! ## Multi-model serving
+//!
+//! One process can host several named models next to the primary
+//! ([`ServerConfig::models`], loaded from the store's `models/<name>/`
+//! namespace — see `rust/src/model/README.md`). `MODEL <name> SCORE ...`
+//! scores a named model; `MODEL <name> VERSION` reports its shape; bare
+//! verbs keep addressing the primary, so single-model deployments are
+//! byte-identical to before. The batcher drains one queue and groups each
+//! batch by model (order-preserving), scoring one GEMM per group, so a
+//! mixed batch still answers every request from exactly the model it
+//! named. Named models are fixed at start and read-only: the lifecycle
+//! verbs (LEARN/RELOAD/PROMOTE/SHIP) operate on the primary only.
+//!
 //! Protocol (line-oriented text):
 //! ```text
 //! -> SCORE <topk> j1:v1,j2:v2,...
 //! <- OK label:score,label:score,...
+//! -> MODEL <name> SCORE <topk> j1:v1,...   (score a named model; ERR
+//!                                           unknown model / ERR bad request)
+//! -> MODEL <name> VERSION
+//! <- VERSION model=<name> id=... rank=... features=... labels=...
 //! -> LEARN <l1,l2,...|-> j1:v1,j2:v2,...   (labels; "-" = none)
 //! <- OK version=... pending=...           (pending=0 means a fold+swap ran
 //!                                          and appends rows=... drift=...
@@ -105,7 +147,7 @@
 //! -> SHIP <have> [<k>/<n>]
 //!                    <- SNAPSHOT version=... [shard=<k>/<n>] epoch=... bytes=...<raw body> | UNCHANGED version=...
 //! -> PING            <- PONG
-//! -> STATS           <- STATS served=... batches=... rejected=... avg_batch=... queue_depth=... swaps=... learned=...
+//! -> STATS           <- STATS served=... batches=... rejected=... shed=... deadlines=... avg_batch=... queue_depth=... swaps=... learned=... models=...
 //! -> METRICS         <- OK lines=<n>, then n Prometheus-style metric lines
 //! -> EVENTS [<max>]  <- OK lines=<k>, then k drained journal lines, each
 //!                       seq=<s> t_ns=<t> kind=<k> <detail>
@@ -113,10 +155,14 @@
 //! ```
 //!
 //! `STATS` fields: `served`/`batches`/`avg_batch` count scored requests,
-//! `rejected` counts requests refused with `ERR overloaded`, `queue_depth`
-//! is the live backlog (watch it climb *before* rejections start),
-//! `swaps` counts model hot-swaps (LEARN folds + RELOADs), and `learned`
-//! counts accepted LEARN examples. `LEARN`/`RELOAD` answer `ERR learning
+//! `rejected` counts requests refused with `ERR overloaded`, `shed=`
+//! counts requests refused at the admission-control door (`ERR busy`),
+//! `deadlines=` counts reply waits that expired (`ERR deadline`),
+//! `queue_depth` is the live backlog read from the lock-free depth gauge
+//! (watch it climb *before* shedding starts), `swaps` counts model
+//! hot-swaps (LEARN folds + RELOADs), `learned` counts accepted LEARN
+//! examples, and `models=` is the number of models this process serves
+//! (primary + named). `LEARN`/`RELOAD` answer `ERR learning
 //! disabled` / `ERR no model store` on a server started without the
 //! corresponding lifecycle pieces.
 //!
@@ -171,6 +217,23 @@ pub struct ServerConfig {
     /// disabled`. Either way the replies of every other verb are bitwise
     /// identical — instrumentation observes, it never participates.
     pub obs: bool,
+    /// Soft per-request latency budget (CLI `--slo-ms`). `Some`: the
+    /// batcher caps each drain at the largest batch whose Welford-predicted
+    /// scoring cost fits the budget (falling back to `max_batch` until the
+    /// cost table has observations), and the per-connection reply wait is
+    /// derived from the budget instead of the 30s default — expiries
+    /// answer `ERR deadline`. `None` (default): fixed `max_batch` drains,
+    /// 30s reply wait.
+    pub slo: Option<Duration>,
+    /// Admission-control threshold: a SCORE arriving while the queue is
+    /// already this deep is refused immediately with `ERR busy` instead of
+    /// queueing toward a deadline expiry. 0 (default) disables shedding;
+    /// a hard-full queue answers `ERR overloaded` either way.
+    pub shed_depth: usize,
+    /// Named models served next to the primary (`MODEL <name> SCORE ...`).
+    /// Fixed at start and read-only — the lifecycle verbs stay
+    /// primary-only. Empty by default.
+    pub models: Vec<(String, MultiLabelModel)>,
 }
 
 impl Default for ServerConfig {
@@ -182,6 +245,9 @@ impl Default for ServerConfig {
             threads: 0,
             bind: "127.0.0.1:0".into(),
             obs: true,
+            slo: None,
+            shed_depth: 0,
+            models: Vec::new(),
         }
     }
 }
@@ -225,6 +291,10 @@ pub struct ServerStats {
     pub served: AtomicUsize,
     pub batches: AtomicUsize,
     pub rejected: AtomicUsize,
+    /// SCOREs refused at the admission-control door (`ERR busy`)
+    pub shed: AtomicUsize,
+    /// reply waits that expired before the batcher answered (`ERR deadline`)
+    pub deadlines: AtomicUsize,
     /// model hot-swaps (LEARN folds + RELOADs) since start
     pub swaps: AtomicUsize,
     /// LEARN examples accepted (buffered or folded) since start
@@ -306,6 +376,10 @@ pub struct ServerObs {
     resolve_flagged: Arc<obs::Gauge>,
     gemm_batch: Arc<obs::BatchTiming>,
     journal_dropped: Arc<obs::Gauge>,
+    /// requests refused at the admission-control door (`ERR busy`)
+    shed_total: Arc<obs::Counter>,
+    /// reply waits that expired before the batcher answered (`ERR deadline`)
+    deadline_expired: Arc<obs::Counter>,
 }
 
 impl ServerObs {
@@ -325,6 +399,8 @@ impl ServerObs {
             resolve_flagged: registry.gauge("fastpi_fold_resolve_flagged"),
             gemm_batch: registry.timing("fastpi_gemm_batch"),
             journal_dropped: registry.gauge("fastpi_journal_dropped_total"),
+            shed_total: registry.counter("fastpi_shed_total"),
+            deadline_expired: registry.counter("fastpi_deadline_expired_total"),
             registry,
         }
     }
@@ -394,6 +470,31 @@ impl ModelSlot {
     /// Publish a new model to readers.
     pub fn swap(&self, m: Arc<ServingModel>) {
         *self.current.lock().unwrap_or_else(|e| e.into_inner()) = m;
+    }
+}
+
+/// Every model one process serves: the primary at index 0 (all bare verbs
+/// address it, keeping the single-model wire protocol byte-identical) plus
+/// zero or more named models (`MODEL <name> ...`) in configuration order.
+/// Fixed at start; the lifecycle verbs operate on the primary only.
+struct ModelSlots {
+    primary: Arc<ModelSlot>,
+    named: Vec<(String, Arc<ModelSlot>)>,
+}
+
+impl ModelSlots {
+    /// Slot index for a `MODEL <name>` prefix (named models start at 1).
+    fn index_of(&self, name: &str) -> Option<usize> {
+        self.named.iter().position(|(n, _)| n == name).map(|i| i + 1)
+    }
+
+    /// Slot by index; 0 is the primary. Indices come only from
+    /// [`Self::index_of`], so they are always in range.
+    fn get(&self, idx: usize) -> &Arc<ModelSlot> {
+        match idx.checked_sub(1).and_then(|i| self.named.get(i)) {
+            Some((_, slot)) => slot,
+            None => &self.primary,
+        }
     }
 }
 
@@ -478,6 +579,9 @@ type BatchReply = Option<Vec<(usize, f64)>>;
 
 /// One queued request.
 struct Pending {
+    /// which model answers this request: a [`ModelSlots`] index (0 = the
+    /// primary) — the batcher groups each drained batch by this
+    model: usize,
     indices: Vec<usize>,
     values: Vec<f64>,
     topk: usize,
@@ -608,7 +712,7 @@ impl ScoreServer {
         serving: ServingModel,
         lifecycle: Option<Arc<Lifecycle>>,
         replica: Option<(Arc<ModelStore>, ReplicaConfig)>,
-        cfg: ServerConfig,
+        mut cfg: ServerConfig,
     ) -> std::io::Result<ScoreServer> {
         if cfg.threads > 0 {
             // request the pool width before the first scoring GEMM spins
@@ -621,6 +725,18 @@ impl ScoreServer {
         let stop = Arc::new(AtomicBool::new(false));
         let stats = Arc::new(ServerStats::default());
         let slot = Arc::new(ModelSlot::new(serving));
+        // the named-model slots own their models — the config keeps only
+        // the tuning knobs from here on
+        let named = std::mem::take(&mut cfg.models)
+            .into_iter()
+            .map(|(name, m)| {
+                let shard = ShardRange::full(m.z.cols());
+                let serving = ServingModel { version: 0, rank: 0, shard, model: m };
+                (name, Arc::new(ModelSlot::new(serving)))
+            })
+            .collect();
+        let slots = Arc::new(ModelSlots { primary: slot.clone(), named });
+        let cfg = Arc::new(cfg);
         let queue = Arc::new(Queue::new(cfg.queue_capacity));
         let obs = if cfg.obs { Some(Arc::new(ServerObs::new())) } else { None };
         if let (Some(o), Some(lc)) = (&obs, &lifecycle) {
@@ -653,11 +769,11 @@ impl ScoreServer {
         let b_stop = stop.clone();
         let b_stats = stats.clone();
         let b_cfg = cfg.clone();
-        let b_slot = slot.clone();
+        let b_slots = slots.clone();
         let b_obs = obs.clone();
         let batch_handle = std::thread::Builder::new()
             .name("score-batcher".into())
-            .spawn(move || batcher_loop(b_slot, b_queue, b_stop, b_stats, b_cfg, b_obs))?;
+            .spawn(move || batcher_loop(b_slots, b_queue, b_stop, b_stats, b_cfg, b_obs))?;
 
         // replica sync thread: poll the primary, install, hot-swap —
         // until shutdown or a PROMOTE retires the follower role
@@ -679,9 +795,10 @@ impl ScoreServer {
         let a_stop = stop.clone();
         let a_stats = stats.clone();
         let a_queue = queue.clone();
-        let a_slot = slot.clone();
+        let a_slots = slots.clone();
         let a_role = role.clone();
         let a_obs = obs.clone();
+        let a_cfg = cfg.clone();
         let accept_handle = std::thread::Builder::new().name("score-accept".into()).spawn(
             move || {
                 let mut conns: Vec<std::thread::JoinHandle<()>> = Vec::new();
@@ -691,11 +808,12 @@ impl ScoreServer {
                             let q = a_queue.clone();
                             let st = a_stats.clone();
                             let stop2 = a_stop.clone();
-                            let sl = a_slot.clone();
+                            let sl = a_slots.clone();
                             let rl = a_role.clone();
                             let ob = a_obs.clone();
+                            let cf = a_cfg.clone();
                             conns.push(std::thread::spawn(move || {
-                                let _ = handle_conn(stream, q, st, stop2, sl, rl, ob);
+                                let _ = handle_conn(stream, q, st, stop2, sl, rl, ob, cf);
                             }));
                             // prune finished handlers: follower SHIP polls
                             // open a fresh connection every poll interval,
@@ -813,17 +931,90 @@ fn replica_sync_loop(
     }
 }
 
+/// Predicted scoring cost (ns) of a batch of `b` rows, read off the
+/// Welford per-batch-size cost table: piecewise-linear interpolation
+/// between observed sizes, and proportional extrapolation below the first
+/// / above the last observation (per-row cost is near-constant, so cost
+/// scales ~linearly with batch size). `table` is `BatchTiming::stats()`
+/// output — ascending by batch size.
+fn predict_batch_ns(table: &[obs::BatchStat], b: usize) -> f64 {
+    let (Some(first), Some(last)) = (table.first(), table.last()) else {
+        return 0.0;
+    };
+    let bf = b as f64;
+    if b <= first.batch {
+        return first.mean_ns * bf / first.batch as f64;
+    }
+    if b >= last.batch {
+        return last.mean_ns * bf / last.batch as f64;
+    }
+    for w in table.windows(2) {
+        let (lo, hi) = (&w[0], &w[1]);
+        if b <= hi.batch {
+            let t = (bf - lo.batch as f64) / (hi.batch as f64 - lo.batch as f64);
+            return lo.mean_ns + t * (hi.mean_ns - lo.mean_ns);
+        }
+    }
+    last.mean_ns * bf / last.batch as f64
+}
+
+/// Deadline-aware drain size: the largest batch (≤ `max_batch`) whose
+/// predicted scoring cost still fits the latency budget. An empty cost
+/// table (a cold server, or one whose traffic pattern just changed after
+/// a restart) falls back to `max_batch` — no evidence, no policy. The
+/// floor is 1: even a budget no batch fits must not starve the queue,
+/// it just degrades to single-request batches (the reply-wait deadline
+/// is what actually fails requests under hopeless overload).
+fn deadline_batch_cap(timing: &obs::BatchTiming, max_batch: usize, slo: Duration) -> usize {
+    let table = timing.stats();
+    if table.is_empty() {
+        return max_batch;
+    }
+    let budget = slo.as_nanos() as f64;
+    let mut best = 1;
+    for b in 1..=max_batch {
+        if predict_batch_ns(&table, b) <= budget {
+            best = b;
+        } else {
+            break;
+        }
+    }
+    best
+}
+
+/// Per-connection reply wait. With an SLO the wait is budget-derived —
+/// 8× slack over the budget plus the straggler grace, floored so jittery
+/// schedulers cannot expire healthy requests — so a wedged batcher fails
+/// requests at SLO scale instead of pinning every connection thread for
+/// the no-SLO default of [`REQUEST_TIMEOUT`] (30s).
+fn reply_deadline(slo: Option<Duration>, max_wait: Duration) -> Duration {
+    const FLOOR: Duration = Duration::from_millis(250);
+    match slo {
+        Some(slo) => slo.saturating_mul(8).saturating_add(max_wait).max(FLOOR),
+        None => REQUEST_TIMEOUT,
+    }
+}
+
 fn batcher_loop(
-    slot: Arc<ModelSlot>,
+    slots: Arc<ModelSlots>,
     queue: Arc<Queue>,
     stop: Arc<AtomicBool>,
     stats: Arc<ServerStats>,
-    cfg: ServerConfig,
+    cfg: Arc<ServerConfig>,
     obs: Option<Arc<ServerObs>>,
 ) {
     while !stop.load(Ordering::Relaxed) {
+        // Deadline-aware drain size: with an SLO and a warm cost table,
+        // cap the batch at the largest size whose predicted GEMM cost fits
+        // the budget; cold table, no SLO, or obs off drains the fixed
+        // max_batch. Rows score independently, so the cap never changes
+        // reply bytes (pinned by `score_bytes_invariant_to_batch_size`).
+        let eff_batch = match (&obs, cfg.slo) {
+            (Some(o), Some(slo)) => deadline_batch_cap(&o.gemm_batch, cfg.max_batch, slo),
+            _ => cfg.max_batch,
+        };
         // collect a batch (shared wait/drain/straggler discipline)
-        let batch = queue.drain_batch(cfg.max_batch, cfg.max_wait, &stop);
+        let batch = queue.drain_batch(eff_batch, cfg.max_wait, &stop);
         if batch.is_empty() {
             // empty ⇔ the drain observed `stop`
             if stop.load(Ordering::Relaxed) {
@@ -842,83 +1033,104 @@ fn batcher_loop(
             }
         }
 
-        // Pin the model for this whole batch: the slot is read exactly once
-        // per batch, so a concurrent hot swap takes effect at the next batch
-        // boundary and can never mix two versions inside one scoring pass.
-        let serving = slot.get();
-        let model = &serving.model;
-        let n_features = model.z.rows();
+        // Group the drained batch by model (order-preserving, single-model
+        // traffic stays one group): each group scores in its own GEMM
+        // against its own pinned model, so a mixed batch answers every
+        // request from exactly the model it named.
+        let mut groups: Vec<(usize, Vec<Pending>)> = Vec::new();
+        for p in batch {
+            match groups.iter_mut().find(|(m, _)| *m == p.model) {
+                Some((_, g)) => g.push(p),
+                None => groups.push((p.model, vec![p])),
+            }
+        }
 
-        // Batch the sparse feature rows and score in one sparse×dense GEMM
-        // (`spmm` splits the batch rows across the shared worker pool, so a
-        // large batch does not serialize on one core). A panic anywhere in
-        // the scoring pass is contained to this batch: affected clients get
-        // an error line and the batcher keeps serving.
-        let cap = if cfg.threads > 0 { cfg.threads } else { usize::MAX };
-        // shard offset: replies carry GLOBAL label ids, so a scatter-gather
-        // merge of shard replies is exactly the full model's reply
-        let label_lo = serving.shard.label_lo as usize;
-        let obs_ref = obs.as_deref();
-        let replies = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-            crate::runtime::pool::with_thread_cap(cap, || {
-                let t_assemble = obs_ref.map(|_| Instant::now());
-                let mut coo = Coo::new(batch.len(), n_features);
-                for (i, p) in batch.iter().enumerate() {
-                    for (&j, &v) in p.indices.iter().zip(&p.values) {
-                        if j < n_features {
-                            coo.push(i, j, v);
+        for (midx, group) in groups {
+            // Pin the model for this whole group: the slot is read exactly
+            // once per group, so a concurrent hot swap takes effect at the
+            // next batch boundary and can never mix two versions inside
+            // one scoring pass.
+            let serving = slots.get(midx).get();
+            let model = &serving.model;
+            let n_features = model.z.rows();
+
+            // Batch the sparse feature rows and score in one sparse×dense
+            // GEMM (`spmm` splits the batch rows across the shared worker
+            // pool, so a large batch does not serialize on one core). A
+            // panic anywhere in the scoring pass is contained to this
+            // group: affected clients get an error line and the batcher
+            // keeps serving.
+            let cap = if cfg.threads > 0 { cfg.threads } else { usize::MAX };
+            // shard offset: replies carry GLOBAL label ids, so a
+            // scatter-gather merge of shard replies is exactly the full
+            // model's reply
+            let label_lo = serving.shard.label_lo as usize;
+            let obs_ref = obs.as_deref();
+            let replies = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                crate::runtime::pool::with_thread_cap(cap, || {
+                    let t_assemble = obs_ref.map(|_| Instant::now());
+                    let mut coo = Coo::new(group.len(), n_features);
+                    for (i, p) in group.iter().enumerate() {
+                        for (&j, &v) in p.indices.iter().zip(&p.values) {
+                            if j < n_features {
+                                coo.push(i, j, v);
+                            }
                         }
                     }
+                    let a = Csr::from_coo(&coo);
+                    if let (Some(o), Some(t)) = (obs_ref, t_assemble) {
+                        o.stage_assemble.record_duration(t.elapsed());
+                    }
+                    let t_gemm = obs_ref.map(|_| Instant::now());
+                    let scores = model.predict(&a);
+                    if let (Some(o), Some(t)) = (obs_ref, t_gemm) {
+                        let ns = u64::try_from(t.elapsed().as_nanos()).unwrap_or(u64::MAX);
+                        o.stage_gemm.record(ns);
+                        o.gemm_batch.record(group.len(), ns);
+                    }
+                    group
+                        .iter()
+                        .enumerate()
+                        .map(|(i, p)| {
+                            let row = scores.row(i);
+                            top_k_indices(row, p.topk)
+                                .into_iter()
+                                .map(|l| (label_lo + l, row[l]))
+                                .collect()
+                        })
+                        .collect::<Vec<Vec<(usize, f64)>>>()
+                })
+            }));
+            match replies {
+                Ok(outs) => {
+                    stats.record_batch(group.len());
+                    for (p, out) in group.into_iter().zip(outs) {
+                        let _ = p.reply.send(Some(out));
+                    }
                 }
-                let a = Csr::from_coo(&coo);
-                if let (Some(o), Some(t)) = (obs_ref, t_assemble) {
-                    o.stage_assemble.record_duration(t.elapsed());
-                }
-                let t_gemm = obs_ref.map(|_| Instant::now());
-                let scores = model.predict(&a);
-                if let (Some(o), Some(t)) = (obs_ref, t_gemm) {
-                    let ns = u64::try_from(t.elapsed().as_nanos()).unwrap_or(u64::MAX);
-                    o.stage_gemm.record(ns);
-                    o.gemm_batch.record(batch.len(), ns);
-                }
-                batch
-                    .iter()
-                    .enumerate()
-                    .map(|(i, p)| {
-                        let row = scores.row(i);
-                        top_k_indices(row, p.topk)
-                            .into_iter()
-                            .map(|l| (label_lo + l, row[l]))
-                            .collect()
-                    })
-                    .collect::<Vec<Vec<(usize, f64)>>>()
-            })
-        }));
-        match replies {
-            Ok(outs) => {
-                stats.record_batch(batch.len());
-                for (p, out) in batch.into_iter().zip(outs) {
-                    let _ = p.reply.send(Some(out));
-                }
-            }
-            Err(_) => {
-                for p in batch {
-                    let _ = p.reply.send(None);
+                Err(_) => {
+                    for p in group {
+                        let _ = p.reply.send(None);
+                    }
                 }
             }
         }
     }
 }
 
+#[allow(clippy::too_many_arguments)]
 fn handle_conn(
     stream: TcpStream,
     queue: Arc<Queue>,
     stats: Arc<ServerStats>,
     stop: Arc<AtomicBool>,
-    slot: Arc<ModelSlot>,
+    slots: Arc<ModelSlots>,
     role: Arc<Role>,
     obs: Option<Arc<ServerObs>>,
+    cfg: Arc<ServerConfig>,
 ) -> std::io::Result<()> {
+    let slot = &slots.primary;
+    let reply_wait = reply_deadline(cfg.slo, cfg.max_wait);
     stream.set_read_timeout(Some(Duration::from_millis(200)))?;
     // Bounded writes too: SHIP streams multi-MB snapshot bodies, and a
     // receiver that stops reading would otherwise block this thread in
@@ -956,17 +1168,21 @@ fn handle_conn(
             continue;
         }
         if msg == "STATS" {
-            let queue_depth = queue.lock().len();
+            // lock-free depth gauge: an ops poll must not contend with the
+            // enqueue hot path for the queue mutex
             writeln!(
                 writer,
-                "STATS served={} batches={} rejected={} avg_batch={:.2} queue_depth={} swaps={} learned={}",
+                "STATS served={} batches={} rejected={} shed={} deadlines={} avg_batch={:.2} queue_depth={} swaps={} learned={} models={}",
                 stats.served.load(Ordering::Relaxed),
                 stats.batches.load(Ordering::Relaxed),
                 stats.rejected.load(Ordering::Relaxed),
+                stats.shed.load(Ordering::Relaxed),
+                stats.deadlines.load(Ordering::Relaxed),
                 stats.avg_batch(),
-                queue_depth,
+                queue.depth(),
                 stats.swaps.load(Ordering::Relaxed),
                 stats.learned.load(Ordering::Relaxed),
+                1 + slots.named.len(),
             )?;
             writer.flush()?;
             continue;
@@ -1040,12 +1256,12 @@ fn handle_conn(
             continue;
         }
         if msg == "RELOAD" {
-            writeln!(writer, "{}", handle_reload(&role.lifecycle(), &slot, &stats, obs.as_deref()))?;
+            writeln!(writer, "{}", handle_reload(&role.lifecycle(), slot, &stats, obs.as_deref()))?;
             writer.flush()?;
             continue;
         }
         if msg == "PROMOTE" {
-            writeln!(writer, "{}", handle_promote(&role, &slot, &stats, obs.as_deref()))?;
+            writeln!(writer, "{}", handle_promote(&role, slot, &stats, obs.as_deref()))?;
             writer.flush()?;
             continue;
         }
@@ -1074,10 +1290,49 @@ fn handle_conn(
             continue;
         }
         if let Some(rest) = msg.strip_prefix("LEARN ") {
-            writeln!(writer, "{}", handle_learn(rest, &role.lifecycle(), &slot, &stats, obs.as_deref()))?;
+            writeln!(writer, "{}", handle_learn(rest, &role.lifecycle(), slot, &stats, obs.as_deref()))?;
             writer.flush()?;
             continue;
         }
+        // `MODEL <name> <verb>`: address a named model. Bare verbs address
+        // the primary (index 0), so single-model deployments stay
+        // byte-identical to the pre-multi-model protocol.
+        let (model_idx, msg) = match msg.strip_prefix("MODEL ") {
+            None => (0usize, msg),
+            Some(rest) => {
+                let (name, verb) = match rest.split_once(' ') {
+                    Some((n, v)) => (n, v.trim_start()),
+                    None => (rest, ""),
+                };
+                let Some(idx) = slots.index_of(name) else {
+                    writeln!(writer, "ERR unknown model")?;
+                    writer.flush()?;
+                    continue;
+                };
+                if verb == "VERSION" {
+                    let serving = slots.get(idx).get();
+                    writeln!(
+                        writer,
+                        "VERSION model={} id={} rank={} features={} labels={}",
+                        name,
+                        serving.version,
+                        serving.rank,
+                        serving.model.z.rows(),
+                        serving.model.z.cols(),
+                    )?;
+                    writer.flush()?;
+                    continue;
+                }
+                if verb.starts_with("SCORE ") {
+                    (idx, verb)
+                } else {
+                    // named models are read-only: no lifecycle sub-verbs
+                    writeln!(writer, "ERR bad request")?;
+                    writer.flush()?;
+                    continue;
+                }
+            }
+        };
         let t_parse = obs.as_ref().map(|_| Instant::now());
         let parsed = parse_score(msg);
         if let (Some(o), Some(t)) = (&obs, t_parse) {
@@ -1085,25 +1340,37 @@ fn handle_conn(
         }
         match parsed {
             Some((topk, indices, values)) => {
+                // Admission control: shed at the door once the backlog is
+                // past the policy threshold — a fast `ERR busy` the client
+                // can retry elsewhere beats a reply that would expire in
+                // the queue. Reads the lock-free depth gauge, never the
+                // queue mutex.
+                if cfg.shed_depth > 0 && queue.depth() >= cfg.shed_depth {
+                    stats.shed.fetch_add(1, Ordering::Relaxed);
+                    if let Some(o) = &obs {
+                        o.shed_total.inc();
+                    }
+                    writeln!(writer, "ERR busy")?;
+                    writer.flush()?;
+                    continue;
+                }
                 let (tx, rx) = std::sync::mpsc::channel();
                 let queued_at = obs.as_ref().map(|_| Instant::now());
-                let accepted = {
-                    let mut dq = queue.lock();
-                    if dq.len() >= queue.capacity() {
-                        false
-                    } else {
-                        dq.push_back(Pending { indices, values, topk, reply: tx, queued_at });
-                        true
-                    }
-                };
+                let accepted = queue.try_push(Pending {
+                    model: model_idx,
+                    indices,
+                    values,
+                    topk,
+                    reply: tx,
+                    queued_at,
+                });
                 if !accepted {
                     stats.rejected.fetch_add(1, Ordering::Relaxed);
                     writeln!(writer, "ERR overloaded")?;
                     writer.flush()?;
                     continue;
                 }
-                queue.notify_one();
-                let outcome = rx.recv_timeout(Duration::from_secs(30));
+                let outcome = rx.recv_timeout(reply_wait);
                 // reply-write span: formatting + write + flush only — the
                 // batch wait above is the queue/gemm spans' territory
                 let t_reply = obs.as_ref().map(|_| Instant::now());
@@ -1127,7 +1394,16 @@ fn handle_conn(
                         writeln!(writer, "OK {}", body.join(","))?;
                     }
                     Ok(None) => writeln!(writer, "ERR internal")?,
-                    Err(_) => writeln!(writer, "ERR timeout")?,
+                    Err(_) => {
+                        // the reply deadline expired before the batcher
+                        // answered — count it so overload shows up in
+                        // STATS/METRICS, not just as client-side stalls
+                        stats.deadlines.fetch_add(1, Ordering::Relaxed);
+                        if let Some(o) = &obs {
+                            o.deadline_expired.inc();
+                        }
+                        writeln!(writer, "ERR deadline")?
+                    }
                 }
                 writer.flush()?;
                 if let (Some(o), Some(t)) = (&obs, t_reply) {
@@ -1426,10 +1702,11 @@ pub fn score_request(
 }
 
 /// Default deadline for one [`text_request`] round trip. Matches the
-/// server's own 30 s internal batch-reply timeout, so a client never gives
-/// up on a reply the server still intends to send — but a hung or
-/// half-dead peer can no longer wedge a caller forever (the CI checks
-/// drive whole clusters through this helper).
+/// server's default (no-SLO) internal batch-reply deadline of 30 s — see
+/// [`reply_deadline`] — so a client never gives up on a reply the server
+/// still intends to send, but a hung or half-dead peer can no longer
+/// wedge a caller forever (the CI checks drive whole clusters through
+/// this helper).
 pub const REQUEST_TIMEOUT: Duration = Duration::from_secs(30);
 
 /// Blocking client helper: send one protocol line, return the reply line
@@ -1977,6 +2254,222 @@ mod tests {
         assert_eq!(multiline_request(server.addr, "EVENTS").unwrap(), "");
         // malformed EVENTS operand is a bad request, not a hang
         assert_eq!(text_request(server.addr, "EVENTS x").unwrap(), "ERR bad request");
+        server.shutdown();
+    }
+
+    /// The batcher's control loop consults the Welford cost table: given a
+    /// synthetic linear cost (1µs/row observed at sizes 4 and 16), the
+    /// drain cap lands exactly where the predicted cost crosses the budget.
+    #[test]
+    fn deadline_cap_consults_the_cost_table() {
+        let timing = obs::BatchTiming::new();
+        // empty table: no evidence, no policy — fall back to max_batch
+        assert_eq!(deadline_batch_cap(&timing, 64, Duration::from_micros(1)), 64);
+        for _ in 0..3 {
+            timing.record(4, 4_000);
+            timing.record(16, 16_000);
+        }
+        // 8µs budget → interpolated cost crosses the budget at batch 8
+        assert_eq!(deadline_batch_cap(&timing, 64, Duration::from_micros(8)), 8);
+        // a generous budget extrapolates past the last observation but
+        // still respects max_batch
+        assert_eq!(deadline_batch_cap(&timing, 64, Duration::from_secs(1)), 64);
+        assert_eq!(deadline_batch_cap(&timing, 6, Duration::from_micros(20)), 6);
+        // a budget no batch fits floors at 1 — degrade, never starve
+        assert_eq!(deadline_batch_cap(&timing, 64, Duration::from_nanos(1)), 1);
+        // extrapolation below the first observed size is proportional
+        assert!((predict_batch_ns(&timing.stats(), 2) - 2_000.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn reply_deadline_derives_from_the_slo() {
+        // no SLO: the historical 30s wait
+        assert_eq!(reply_deadline(None, Duration::from_millis(2)), REQUEST_TIMEOUT);
+        // 8× slack over the budget plus the straggler grace
+        assert_eq!(
+            reply_deadline(Some(Duration::from_millis(100)), Duration::from_millis(2)),
+            Duration::from_millis(802)
+        );
+        // floored so a tiny SLO cannot expire healthy requests on
+        // scheduler jitter alone
+        assert_eq!(
+            reply_deadline(Some(Duration::from_micros(50)), Duration::ZERO),
+            Duration::from_millis(250)
+        );
+    }
+
+    /// Tentpole pin: the chosen batch size must never change reply bytes.
+    /// The same model served at max_batch 1, 8, and 64 answers every
+    /// probe byte-identically — sequentially and under concurrent load
+    /// (where the wider servers genuinely drain multi-row batches).
+    #[test]
+    fn score_bytes_invariant_to_batch_size() {
+        let m = model(24, 9);
+        let servers: Vec<ScoreServer> = [1usize, 8, 64]
+            .into_iter()
+            .map(|mb| {
+                ScoreServer::start(
+                    MultiLabelModel { z: m.z.clone() },
+                    ServerConfig { max_batch: mb, ..Default::default() },
+                )
+                .unwrap()
+            })
+            .collect();
+        let probes = [
+            "SCORE 3 0:1.0,5:-0.5",
+            "SCORE 9 1:0.25,8:2.0,23:-1.0",
+            "SCORE 1 2:1e-300",
+            "SCORE 2 ",
+        ];
+        let mut reference = Vec::new();
+        for probe in probes {
+            let replies: Vec<String> =
+                servers.iter().map(|s| text_request(s.addr, probe).unwrap()).collect();
+            assert!(
+                replies.iter().all(|r| r == &replies[0]),
+                "batch size changed reply bytes for `{probe}`: {replies:?}"
+            );
+            reference.push(replies[0].clone());
+        }
+        std::thread::scope(|s| {
+            for srv in &servers {
+                for _ in 0..8 {
+                    let reference = &reference;
+                    s.spawn(move || {
+                        for (probe, want) in probes.iter().zip(reference) {
+                            let got = text_request(srv.addr, probe).unwrap();
+                            assert_eq!(&got, want, "concurrent batching changed `{probe}`");
+                        }
+                    });
+                }
+            }
+        });
+        for s in servers {
+            s.shutdown();
+        }
+    }
+
+    #[test]
+    fn multi_model_serving_routes_by_name() {
+        let primary = model(12, 5);
+        // a deliberately different shape so cross-talk is unmissable
+        let mut rng = Rng::seed_from_u64(7);
+        let other = Matrix::randn(9, 4, &mut rng);
+        let solo =
+            ScoreServer::start(MultiLabelModel { z: other.clone() }, ServerConfig::default())
+                .unwrap();
+        let server = ScoreServer::start(
+            primary,
+            ServerConfig {
+                models: vec![("ranker".into(), MultiLabelModel { z: other.clone() })],
+                ..Default::default()
+            },
+        )
+        .unwrap();
+
+        // a named model scores byte-identically to a dedicated server
+        let probe = "SCORE 2 0:1.0,5:-0.5";
+        let named = text_request(server.addr, &format!("MODEL ranker {probe}")).unwrap();
+        let alone = text_request(solo.addr, probe).unwrap();
+        assert!(named.starts_with("OK "), "{named}");
+        assert_eq!(named, alone, "named model must match a dedicated server bitwise");
+        // the bare verb still addresses the primary (different model ⇒
+        // different reply bytes)
+        let bare = text_request(server.addr, probe).unwrap();
+        assert!(bare.starts_with("OK "), "{bare}");
+        assert_ne!(bare, named);
+        // MODEL VERSION advertises the named model's shape
+        assert_eq!(
+            text_request(server.addr, "MODEL ranker VERSION").unwrap(),
+            "VERSION model=ranker id=0 rank=0 features=9 labels=4"
+        );
+        // unknown names and lifecycle sub-verbs fail fast
+        assert_eq!(
+            text_request(server.addr, "MODEL nope SCORE 1 0:1.0").unwrap(),
+            "ERR unknown model"
+        );
+        assert_eq!(text_request(server.addr, "MODEL ranker RELOAD").unwrap(), "ERR bad request");
+        // STATS counts the hosted models
+        let stats = text_request(server.addr, "STATS").unwrap();
+        assert!(stats.ends_with("models=2"), "{stats}");
+
+        // mixed concurrent traffic: per-model batch groups keep every
+        // reply pinned to the model it named
+        std::thread::scope(|s| {
+            for _ in 0..8 {
+                let (named, bare) = (&named, &bare);
+                s.spawn(move || {
+                    for _ in 0..4 {
+                        let n =
+                            text_request(server.addr, &format!("MODEL ranker {probe}")).unwrap();
+                        assert_eq!(&n, named);
+                        let b = text_request(server.addr, probe).unwrap();
+                        assert_eq!(&b, bare);
+                    }
+                });
+            }
+        });
+        server.shutdown();
+        solo.shutdown();
+    }
+
+    /// Overload discipline: a flood past the shed threshold sees only
+    /// `OK`/`ERR busy` (fast refusals, never a deadline expiry), STATS
+    /// reconciles exactly with the client-observed counts, and once the
+    /// flood drains, sub-threshold traffic sees zero errors.
+    #[test]
+    fn flood_sheds_busy_and_recovers() {
+        let m = model(16, 6);
+        let cfg = ServerConfig {
+            max_batch: 1, // one row per drain keeps a backlog alive under the flood
+            max_wait: Duration::ZERO,
+            queue_capacity: 64,
+            shed_depth: 2,
+            slo: Some(Duration::from_millis(50)),
+            ..Default::default()
+        };
+        let server = ScoreServer::start(m, cfg).unwrap();
+        let addr = server.addr;
+        let ok = AtomicUsize::new(0);
+        let busy = AtomicUsize::new(0);
+        std::thread::scope(|s| {
+            for t in 0..16usize {
+                let (ok, busy) = (&ok, &busy);
+                s.spawn(move || {
+                    for i in 0..25 {
+                        let r = text_request(addr, &format!("SCORE 1 {}:1.0", (t + i) % 16))
+                            .unwrap();
+                        if r.starts_with("OK ") {
+                            ok.fetch_add(1, Ordering::Relaxed);
+                        } else if r == "ERR busy" {
+                            busy.fetch_add(1, Ordering::Relaxed);
+                        } else {
+                            panic!("flood must see only OK or ERR busy, got `{r}`");
+                        }
+                    }
+                });
+            }
+        });
+        let (ok, busy) = (ok.into_inner(), busy.into_inner());
+        assert_eq!(ok + busy, 16 * 25);
+        let stats = text_request(addr, "STATS").unwrap();
+        let field = |k: &str| -> usize {
+            stats
+                .split_whitespace()
+                .find_map(|t| t.strip_prefix(k))
+                .unwrap_or_else(|| panic!("missing `{k}` in {stats}"))
+                .parse()
+                .unwrap()
+        };
+        assert_eq!(field("served="), ok, "{stats}");
+        assert_eq!(field("shed="), busy, "{stats}");
+        assert_eq!(field("rejected="), 0, "{stats}");
+        assert_eq!(field("deadlines="), 0, "{stats}");
+        // recovered: sequential (sub-threshold) traffic sees zero errors
+        for _ in 0..10 {
+            let r = text_request(addr, "SCORE 1 0:1.0").unwrap();
+            assert!(r.starts_with("OK "), "steady-state request failed: {r}");
+        }
         server.shutdown();
     }
 }

@@ -41,5 +41,5 @@ pub use ship::{
     fetch_shard_snapshot, fetch_snapshot, parse_shard_spec, sync_once, sync_shard_once, ShardSel,
     ShipReply,
 };
-pub use store::ModelStore;
+pub use store::{valid_model_name, ModelStore};
 pub use updater::{OnlineUpdater, UpdateReport, UpdaterConfig, UpdaterObs};

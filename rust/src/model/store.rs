@@ -9,6 +9,9 @@
 //!   v000002.s0of3.fpim   ── a sharded version: one file per label-space
 //!   v000002.s1of3.fpim      slice (shard k of n, see `model/shard.rs`);
 //!   v000002.s2of3.fpim      the version is complete when all n exist
+//!   models/<name>/       named model namespaces ([`ModelStore::model_ns`]):
+//!     MANIFEST           each an independent child store with its own
+//!     v000001.fpim       version sequence, MANIFEST, and EPOCH
 //! ```
 //!
 //! Publishing is atomic: the model is written to a hidden temp file in the
@@ -34,6 +37,18 @@
 //! unanimous-version check makes any divergence loud). Keep a directory
 //! homogeneous: either full-model history or one shard set's history, not
 //! both (the unsharded `load_latest` has no way to read a sharded id).
+//!
+//! **Model namespaces.** A multi-model serving process hosts several
+//! named models from one store directory: each name maps to an
+//! independent child store rooted at `<dir>/models/<name>`
+//! ([`ModelStore::model_ns`]), with its own version sequence, MANIFEST
+//! pointer, and promotion epoch — publish, gc, shipping, and sharding all
+//! work unchanged inside a namespace. The root store never sees the
+//! children: its scans read only file names, and `models/` is a
+//! directory, so a pre-namespace reader of the same store directory
+//! behaves exactly as before. Names are validated
+//! ([`valid_model_name`]) so a namespace can never escape the `models/`
+//! subtree or collide with the root's own files.
 
 use super::format::{
     read_model, validate_model_bytes, write_model, ModelArtifact, ValidatedModelBytes,
@@ -53,6 +68,23 @@ const MANIFEST: &str = "MANIFEST";
 
 /// Store-side promotion fence (see [`ModelStore::epoch`]).
 const EPOCH: &str = "EPOCH";
+
+/// Subdirectory holding named model namespaces (see [`ModelStore::model_ns`]).
+const MODELS_DIR: &str = "models";
+
+/// True iff `name` can name a model namespace: 1–64 chars of lowercase
+/// ASCII alphanumerics, `_`, or `-`, starting with an alphanumeric. The
+/// character set rules out path separators, `.`/`..`, and hidden-file
+/// prefixes, so a validated name can only ever address a direct child of
+/// the `models/` subtree.
+pub fn valid_model_name(name: &str) -> bool {
+    !name.is_empty()
+        && name.len() <= 64
+        && name.starts_with(|c: char| c.is_ascii_lowercase() || c.is_ascii_digit())
+        && name
+            .chars()
+            .all(|c| c.is_ascii_lowercase() || c.is_ascii_digit() || c == '_' || c == '-')
+}
 
 /// Parse a version filename: `v<id>.fpim` → `(id, None)`,
 /// `v<id>.s<k>of<n>.fpim` → `(id, Some((k, n)))`. Anything else → `None`.
@@ -86,6 +118,43 @@ impl ModelStore {
 
     pub fn dir(&self) -> &Path {
         &self.dir
+    }
+
+    // -- model namespaces --------------------------------------------------
+
+    /// Open (creating if needed) the named model namespace — a fully
+    /// independent child store at `<dir>/models/<name>` with its own
+    /// version sequence, MANIFEST, and epoch. Rejects names that fail
+    /// [`valid_model_name`], so a namespace can never alias the root
+    /// store's files or escape the `models/` subtree.
+    pub fn model_ns(&self, name: &str) -> Result<ModelStore> {
+        if !valid_model_name(name) {
+            return Err(Error::Invalid(format!(
+                "invalid model name {name:?} — want 1-64 of [a-z0-9_-], starting alphanumeric"
+            )));
+        }
+        ModelStore::open(&self.dir.join(MODELS_DIR).join(name))
+    }
+
+    /// Names of the model namespaces present under this store, ascending.
+    /// A store that has never hosted a namespace (no `models/` directory)
+    /// returns the empty list, not an error.
+    pub fn model_names(&self) -> Result<Vec<String>> {
+        let entries = match std::fs::read_dir(self.dir.join(MODELS_DIR)) {
+            Ok(entries) => entries,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(Vec::new()),
+            Err(e) => return Err(Error::Io(e)),
+        };
+        let mut out = Vec::new();
+        for entry in entries {
+            let entry = entry?;
+            let name = entry.file_name().to_string_lossy().into_owned();
+            if entry.file_type()?.is_dir() && valid_model_name(&name) {
+                out.push(name);
+            }
+        }
+        out.sort_unstable();
+        Ok(out)
     }
 
     fn version_path(&self, id: u64) -> PathBuf {
@@ -1054,6 +1123,59 @@ mod tests {
         store.gc(1).unwrap();
         assert_eq!(store.epoch().unwrap(), 5);
         assert_eq!(store.bump_epoch().unwrap(), 6);
+    }
+
+    #[test]
+    fn model_namespaces_are_isolated_child_stores() {
+        let dir = fresh_dir("ns");
+        let root = ModelStore::open(&dir).unwrap();
+        root.publish(&sample_artifact(1, 12, 6, 4, 3)).unwrap();
+
+        let ranker = root.model_ns("ranker").unwrap();
+        let spam = root.model_ns("spam-v2").unwrap();
+        // each namespace runs its own version sequence from 1
+        assert_eq!(ranker.publish(&sample_artifact(2, 9, 5, 4, 2)).unwrap(), 1);
+        assert_eq!(ranker.publish(&sample_artifact(3, 9, 5, 4, 2)).unwrap(), 2);
+        assert_eq!(spam.publish(&sample_artifact(4, 8, 4, 3, 2)).unwrap(), 1);
+        // the root never sees the children: versions, latest, gc all
+        // operate on the root's own files only
+        assert_eq!(root.versions().unwrap(), vec![1]);
+        assert_eq!(root.latest_version().unwrap(), Some(1));
+        assert_eq!(root.gc(1).unwrap(), 0);
+        assert_eq!(ranker.versions().unwrap(), vec![1, 2]);
+        // epochs are per-namespace too
+        ranker.bump_epoch().unwrap();
+        assert_eq!(ranker.epoch().unwrap(), 1);
+        assert_eq!(root.epoch().unwrap(), 0);
+        assert_eq!(spam.epoch().unwrap(), 0);
+        // listing is sorted and reopen-stable
+        assert_eq!(root.model_names().unwrap(), vec!["ranker", "spam-v2"]);
+        let reopened = ModelStore::open(&dir).unwrap();
+        assert_eq!(reopened.model_names().unwrap(), vec!["ranker", "spam-v2"]);
+        assert_eq!(reopened.model_ns("ranker").unwrap().latest_version().unwrap(), Some(2));
+        // a store with no namespaces lists empty, not an error
+        let bare = ModelStore::open(&fresh_dir("ns_bare")).unwrap();
+        assert!(bare.model_names().unwrap().is_empty());
+    }
+
+    #[test]
+    fn model_names_are_validated_at_the_door() {
+        let root = ModelStore::open(&fresh_dir("ns_valid")).unwrap();
+        for ok in ["a", "ranker", "spam-v2", "m_0", "0day"] {
+            assert!(valid_model_name(ok), "{ok}");
+            assert!(root.model_ns(ok).is_ok(), "{ok}");
+        }
+        let long = "x".repeat(65);
+        for bad in
+            ["", "Ranker", "a/b", "..", ".hidden", "a b", "-lead", "_lead", "a.b", long.as_str()]
+        {
+            assert!(!valid_model_name(bad), "{bad:?}");
+            assert!(root.model_ns(bad).is_err(), "{bad:?}");
+        }
+        // invalid directory names planted under models/ are not listed
+        std::fs::create_dir_all(root.dir().join("models").join(".partial")).unwrap();
+        std::fs::write(root.dir().join("models").join("notadir"), b"").unwrap();
+        assert_eq!(root.model_names().unwrap(), vec!["0day", "a", "m_0", "ranker", "spam-v2"]);
     }
 
     #[test]
