@@ -1,19 +1,68 @@
-//! Bench: GEMM roofline — the L3 hot path (native blocked GEMM) at one
-//! worker vs the full pool, the panel-reduced Gram kernel, and the AOT
+//! Bench: GEMM roofline — the L3 hot path (packed register-tiled GEMM) at
+//! one worker vs the full pool, the panel-reduced Gram kernel, the
+//! transpose-free `matmul_tn` path, a skewed SpMM point, and the AOT
 //! Pallas artifact path, in GFLOP/s across sizes. Feeds EXPERIMENTS.md
-//! §Perf and the worker-pool speedup gate (≥ 2× at 4 threads on the
-//! default shapes). Results land in `target/bench_results/` as both CSV
-//! and `BENCH_gemm_roofline.json` (name/config/throughput) for the
-//! cross-PR perf trajectory; the `speedup_x` rows at the biggest shapes
-//! are gated in CI against `bench_baselines/BENCH_gemm_roofline.json`
-//! (floors, not snapshots — they catch the pool collapsing to serial).
+//! §Perf and the worker-pool speedup gate. Results land in
+//! `target/bench_results/` as both CSV and `BENCH_gemm_roofline.json`
+//! (name/config/throughput) for the cross-PR perf trajectory; the
+//! `speedup_x` rows at the biggest shapes and the single-thread
+//! `gflops_1t` rows are gated in CI against
+//! `bench_baselines/BENCH_gemm_roofline.json` (floors, not snapshots —
+//! they catch the pool collapsing to serial AND the micro-kernel
+//! regressing to the pre-tiling saxpy throughput).
 //! Run: cargo bench --bench gemm_roofline
 //! (FASTPI_THREADS=4 pins the pool width for the scaling comparison.)
 
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicUsize, Ordering};
+
 use fastpi::dense::{gemm, Matrix};
 use fastpi::runtime::{pool, with_thread_cap, ExecMode, GemmDispatcher};
+use fastpi::sparse::{Coo, Csr};
 use fastpi::util::bench::{run, BenchConfig, Reporter};
 use fastpi::util::rng::Rng;
+
+/// Largest single allocation observed since the last reset — the
+/// no-extra-alloc gate for the transpose-free `matmul_tn` path: the packed
+/// kernel must never materialize the O(m·k) transposed copy the old
+/// `a.transpose()`-then-`matmul` implementation allocated per call.
+static LARGEST_ALLOC: AtomicUsize = AtomicUsize::new(0);
+
+struct MaxTrackingAlloc;
+
+unsafe impl GlobalAlloc for MaxTrackingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        LARGEST_ALLOC.fetch_max(layout.size(), Ordering::Relaxed);
+        System.alloc(layout)
+    }
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        LARGEST_ALLOC.fetch_max(new_size, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static ALLOC: MaxTrackingAlloc = MaxTrackingAlloc;
+
+/// A deterministic hub-skewed sparse matrix: `hubs` fully-dense rows carry
+/// most of the nnz (the post-hub-spoke-reorder shape), the rest are light.
+fn hub_matrix(rows: usize, cols: usize, hubs: usize, light_nnz: usize) -> Csr {
+    let mut coo = Coo::new(rows, cols);
+    for i in 0..hubs {
+        for j in 0..cols {
+            coo.push(i, j, 1.0 + ((i * cols + j) % 7) as f64);
+        }
+    }
+    for i in hubs..rows {
+        for t in 0..light_nnz {
+            coo.push(i, (i * 131 + t * 257) % cols, 1.0 + ((i + t) % 5) as f64);
+        }
+    }
+    Csr::from_coo(&coo)
+}
 
 fn main() {
     let cfg = BenchConfig::from_env();
@@ -30,13 +79,19 @@ fn main() {
         let labels = [("threads=1".to_string(), &serial), (format!("threads={threads}"), &parallel)];
         for (label, stats) in labels {
             let gflops = gemm::gemm_flops(s, s, s) / stats.min_s / 1e9;
+            let mut vals = vec![("secs", stats.min_s), ("gflops", gflops)];
+            if label == "threads=1" {
+                // separately-named copy so bench-diff can gate the
+                // single-thread floors without touching the other rows
+                vals.push(("gflops_1t", gflops));
+            }
             rep.add(
                 &[
                     ("backend", "native".into()),
                     ("config", label.clone()),
                     ("size", s.to_string()),
                 ],
-                &[("secs", stats.min_s), ("gflops", gflops)],
+                &vals,
             );
         }
         rep.add(
@@ -67,6 +122,64 @@ fn main() {
                 ("backend", "gram_tn".into()),
                 ("config", "speedup".into()),
                 ("size", format!("{m}x{w}")),
+            ],
+            &[("speedup_x", serial.min_s / parallel.min_s)],
+        );
+    }
+    // transpose-free matmul_tn on the incremental-update shape, with the
+    // no-extra-alloc assertion: the largest single allocation during the
+    // product must stay below the m×k transposed copy the old path made
+    {
+        let (m, w, n) = (20_000usize, 32usize, 32usize);
+        let a = Matrix::randn(m, w, &mut rng);
+        let b = Matrix::randn(m, n, &mut rng);
+        LARGEST_ALLOC.store(0, Ordering::Relaxed);
+        let c = gemm::matmul_tn(&a, &b);
+        assert_eq!(c.shape(), (w, n));
+        let largest = LARGEST_ALLOC.load(Ordering::Relaxed);
+        let transposed_copy = m * w * std::mem::size_of::<f64>();
+        assert!(
+            largest < transposed_copy,
+            "matmul_tn allocated a {largest}-byte buffer — at least as large as the \
+             {transposed_copy}-byte transposed copy the packed kernel exists to avoid"
+        );
+        let stats = run(&cfg, || gemm::matmul_tn(&a, &b));
+        rep.add(
+            &[("backend", "matmul_tn".into()), ("size", format!("{m}x{w}"))],
+            &[
+                ("secs", stats.min_s),
+                ("gflops", gemm::gemm_flops(w, n, m) / stats.min_s / 1e9),
+                ("peak_alloc_mb", largest as f64 / (1024.0 * 1024.0)),
+            ],
+        );
+    }
+    // skewed SpMM (hub rows after hub-spoke reordering): nnz-balanced
+    // chunking vs thread-count-1, on a matrix whose first rows carry ~1/3
+    // of the nnz — the shape that serialized under row-count chunking
+    {
+        let (rows, cols, nb) = (4096usize, 2048usize, 64usize);
+        let a = hub_matrix(rows, cols, 8, 8);
+        let b = Matrix::randn(cols, nb, &mut rng);
+        let serial = run(&cfg, || with_thread_cap(1, || a.spmm(&b)));
+        let parallel = run(&cfg, || a.spmm(&b));
+        let flops = 2.0 * a.nnz() as f64 * nb as f64;
+        let size = format!("{rows}x{cols}x{nb}");
+        let labels = [("threads=1".to_string(), &serial), (format!("threads={threads}"), &parallel)];
+        for (label, stats) in labels {
+            rep.add(
+                &[
+                    ("backend", "spmm_skew".into()),
+                    ("config", label.clone()),
+                    ("size", size.clone()),
+                ],
+                &[("secs", stats.min_s), ("gflops", flops / stats.min_s / 1e9)],
+            );
+        }
+        rep.add(
+            &[
+                ("backend", "spmm_skew".into()),
+                ("config", "speedup".into()),
+                ("size", size.clone()),
             ],
             &[("speedup_x", serial.min_s / parallel.min_s)],
         );

@@ -95,6 +95,17 @@ mod tests {
     }
 
     #[test]
+    fn packed_gemm_kernel_module_is_in_scope() {
+        // The register-tiled micro-kernel (dense/kernel.rs) carries the
+        // thread-count bitwise-invariance contract — pin that the lint
+        // watches it at its real path.
+        let src = "use std::collections::HashMap;\n";
+        let r = run_at("rust/src/dense/kernel.rs", src);
+        assert_eq!(r.findings.len(), 1, "{:?}", r.findings);
+        assert_eq!(r.findings[0].lint, "nondet-kernel");
+    }
+
+    #[test]
     fn updater_is_in_scope_and_allow_works() {
         let src = "fn t() { let _ = std::time::Instant::now(); }\n";
         let r = run_at("rust/src/model/updater.rs", src);

@@ -136,7 +136,7 @@ BENCH-DIFF OPTIONS:
   --max-regress 0.2    allowed fractional regression per gated key
   --keys a,b           gated value keys (default throughput_rps,p50_ms,
                        p95_ms,p99_ms,p99_storm_ms,propagation_p95_ms,
-                       speedup_x)
+                       speedup_x,gflops_1t)
 ";
 
 pub fn main() {
@@ -781,6 +781,7 @@ fn cmd_bench_diff(args: &Args) -> crate::error::Result<()> {
         "p99_storm_ms",
         "propagation_p95_ms",
         "speedup_x",
+        "gflops_1t",
     ]
     .iter()
     .map(|s| s.to_string())

@@ -1,18 +1,30 @@
-//! Blocked, multithreaded dense GEMM: `C = alpha * op(A) * op(B) + beta * C`.
+//! Packed, register-tiled, multithreaded dense GEMM:
+//! `C = alpha * op(A) * op(B) + beta * C`.
 //!
 //! This is the L3 hot path of every SVD engine in the library (randomized
-//! projections, incremental factor updates, pseudoinverse application), so it
-//! is written for cache behaviour: row panels of A are streamed against
-//! K-blocked panels of B with a contiguous inner loop over columns of C that
-//! the compiler auto-vectorizes, and the M dimension is parallelized over the
-//! worker pool. See EXPERIMENTS.md §Perf for the measured roofline.
+//! projections, incremental factor updates, pseudoinverse application). The
+//! heavy lifting lives in [`crate::dense::kernel`]: a three-level blocked
+//! scheme (NC column blocks → KC depth panels → MC row macro-panels) packs
+//! the A panel row-major-by-micro-row and the B panel
+//! column-major-by-micro-column into contiguous scratch, then drives an
+//! MR×NR register-tiled micro-kernel whose accumulators stay in registers
+//! across the whole KC depth. The M dimension is parallelized over the
+//! shared worker pool in MC-row panels.
+//!
+//! `matmul_tn` / `matmul_nt` pack directly from the untransposed operand
+//! (an [`kernel::Operand::transposed`] view), so the transpose variants no
+//! longer materialize an O(m·n) copy per call — the incremental-SVD update
+//! path calls them in a loop.
+//!
+//! Determinism: the micro-tile decomposition and k-order are functions of
+//! the shape alone, so every result is bitwise-identical at any thread
+//! count (re-pinned by the invariance tests below). See the module doc of
+//! [`crate::dense::kernel`] for the full argument, including the last-bit
+//! rounding difference vs the pre-tiling saxpy kernel.
 
+use super::kernel::{self, Operand};
 use super::matrix::Matrix;
 use crate::runtime::pool;
-
-/// Cache blocking parameters (tuned in the perf pass; see EXPERIMENTS.md §Perf).
-const MC: usize = 64; // rows of A per macro-block (parallel grain)
-const KC: usize = 256; // depth per panel — A panel (MC*KC) fits L2
 
 /// C = A · B.
 pub fn matmul(a: &Matrix, b: &Matrix) -> Matrix {
@@ -22,71 +34,27 @@ pub fn matmul(a: &Matrix, b: &Matrix) -> Matrix {
     c
 }
 
-/// C = Aᵀ · B (A given untransposed).
+/// C = Aᵀ · B (A given untransposed; packed straight from A's storage —
+/// no transposed copy is materialized).
 pub fn matmul_tn(a: &Matrix, b: &Matrix) -> Matrix {
     assert_eq!(a.rows(), b.rows(), "matmul_tn shape");
-    // Explicit transpose then GEMM: the O(mn) copy is negligible next to the
-    // O(mnk) product and keeps a single fast kernel.
-    matmul(&a.transpose(), b)
+    let mut c = Matrix::zeros(a.cols(), b.cols());
+    kernel::gemm_ops(1.0, Operand::transposed(a), Operand::normal(b), 0.0, &mut c);
+    c
 }
 
-/// C = A · Bᵀ (B given untransposed).
+/// C = A · Bᵀ (B given untransposed; packed straight from B's storage).
 pub fn matmul_nt(a: &Matrix, b: &Matrix) -> Matrix {
     assert_eq!(a.cols(), b.cols(), "matmul_nt shape");
-    matmul(a, &b.transpose())
+    let mut c = Matrix::zeros(a.rows(), b.rows());
+    kernel::gemm_ops(1.0, Operand::normal(a), Operand::transposed(b), 0.0, &mut c);
+    c
 }
 
 /// General form: C = alpha·A·B + beta·C.
 pub fn gemm_into(alpha: f64, a: &Matrix, b: &Matrix, beta: f64, c: &mut Matrix) {
-    let (m, k) = a.shape();
-    let (k2, n) = b.shape();
-    assert_eq!(k, k2, "gemm_into inner dim");
-    assert_eq!(c.shape(), (m, n), "gemm_into output shape");
-
-    if beta != 1.0 {
-        if beta == 0.0 {
-            c.data_mut().fill(0.0);
-        } else {
-            c.scale_inplace(beta);
-        }
-    }
-    if m == 0 || n == 0 || k == 0 || alpha == 0.0 {
-        return;
-    }
-
-    let a_data = a.data();
-    let b_data = b.data();
-    // Parallelize over MC-row panels on the shared worker pool; each panel
-    // owns disjoint C rows, and every row is reduced in fixed k-order, so
-    // the result is bitwise-identical at any thread count.
-    let c_ptr = CPtr(c.data_mut().as_mut_ptr());
-    let c_ptr = &c_ptr; // capture the Sync wrapper, not the raw field
-    pool::runtime().pool().par_chunks(m, MC, |rows| {
-        for k0 in (0..k).step_by(KC) {
-            let k1 = (k0 + KC).min(k);
-            for i in rows.clone() {
-                // SAFETY: this row panel is exclusively owned by this task.
-                let crow =
-                    unsafe { std::slice::from_raw_parts_mut(c_ptr.0.add(i * n), n) };
-                let arow = &a_data[i * k..(i + 1) * k];
-                for kk in k0..k1 {
-                    let aik = alpha * arow[kk];
-                    if aik != 0.0 {
-                        let brow = &b_data[kk * n..(kk + 1) * n];
-                        // contiguous saxpy over the C row — auto-vectorized
-                        for j in 0..n {
-                            crow[j] += aik * brow[j];
-                        }
-                    }
-                }
-            }
-        }
-    });
+    kernel::gemm_ops(alpha, Operand::normal(a), Operand::normal(b), beta, c);
 }
-
-/// Raw pointer wrapper: workers write disjoint row ranges of C.
-struct CPtr(*mut f64);
-unsafe impl Sync for CPtr {}
 
 /// Gram product `C = AᵀA` (w×w symmetric) for a tall A (m×w, m ≫ w).
 ///
@@ -95,28 +63,51 @@ unsafe impl Sync for CPtr {}
 /// produce (w is small, m is huge). This kernel instead splits the m
 /// dimension into fixed 256-row panels, accumulates one upper-triangular
 /// partial per panel on the worker pool, and reduces the partials in panel
-/// order. The panel structure is independent of the worker count, so the
-/// result is bitwise-identical at any `--threads` setting.
+/// order. Within a panel the work is register-tiled: the panel is packed
+/// once as Aᵀ micro-rows and once as A micro-columns, and each MR×NR tile
+/// of the upper triangle accumulates its 256-deep dot products in
+/// registers (diagonal-crossing tiles compute the full tile and write back
+/// only the upper-triangle entries). The panel structure and tile grid are
+/// independent of the worker count, so the result is bitwise-identical at
+/// any `--threads` setting.
 pub fn gram_tn(a: &Matrix) -> Matrix {
+    use kernel::{MR, NR};
     const PANEL: usize = 256;
     let (m, w) = a.shape();
     let mut c = Matrix::zeros(w, w);
     if m == 0 || w == 0 {
         return c;
     }
-    let a_data = a.data();
     let starts: Vec<usize> = (0..m).step_by(PANEL).collect();
     let partial = |&i0: &usize| -> Vec<f64> {
         let i1 = (i0 + PANEL).min(m);
+        let kc = i1 - i0;
+        // pack the panel both ways: Aᵀ micro-rows (the broadcast operand)
+        // and A micro-columns (the vector operand) — O(2·kc·w) packing
+        // against O(kc·w²/2) tile flops
+        let mut at_pack = vec![0.0f64; w.div_ceil(MR) * MR * kc];
+        kernel::pack_a(&Operand::transposed(a), 0, w, i0, kc, &mut at_pack);
+        let mut an_pack = vec![0.0f64; w.div_ceil(NR) * NR * kc];
+        kernel::pack_b(&Operand::normal(a), i0, kc, 0, w, &mut an_pack);
         let mut p = vec![0.0f64; w * w];
-        for i in i0..i1 {
-            let row = &a_data[i * w..(i + 1) * w];
-            for (pi, &aip) in row.iter().enumerate() {
-                if aip != 0.0 {
-                    let dst = &mut p[pi * w..(pi + 1) * w];
-                    // upper triangle only; mirrored after the reduction
-                    for q in pi..w {
-                        dst[q] += aip * row[q];
+        for pi0 in (0..w).step_by(MR) {
+            let mr = MR.min(w - pi0);
+            let aslab = &at_pack[(pi0 / MR) * MR * kc..][..MR * kc];
+            for q0 in (0..w).step_by(NR) {
+                let nr = NR.min(w - q0);
+                if q0 + nr <= pi0 {
+                    continue; // tile entirely below the diagonal
+                }
+                let bslab = &an_pack[(q0 / NR) * NR * kc..][..NR * kc];
+                let acc = kernel::micro_tile(aslab, bslab);
+                for r in 0..mr {
+                    let pi = pi0 + r;
+                    for (ci, arow) in acc[r][..nr].iter().enumerate() {
+                        let q = q0 + ci;
+                        if q >= pi {
+                            // upper triangle only; mirrored after reduction
+                            p[pi * w + q] = *arow;
+                        }
                     }
                 }
             }
@@ -146,7 +137,9 @@ pub fn gemm_flops(m: usize, n: usize, k: usize) -> f64 {
 
 #[cfg(test)]
 mod tests {
+    use super::kernel::{KC, MC, MR, NR};
     use super::*;
+    use crate::runtime::pool::with_thread_cap;
     use crate::util::propcheck::check;
     use crate::util::rng::Rng;
 
@@ -175,6 +168,80 @@ mod tests {
     }
 
     #[test]
+    fn micro_kernel_edge_shapes_match_naive_and_are_thread_invariant() {
+        // every remainder case around the tiling constants: m/n/k not
+        // multiples of MR/NR/KC, m < MR, n < NR, k below one unrolled step
+        let ms = [1, MR - 1, MR, MR + 1, MC - 1, MC, MC + 1, 2 * MC + 3];
+        let ns = [1, NR - 1, NR, NR + 1, 2 * NR + 5];
+        let ks = [1, 2, 7, KC - 1, KC, KC + 1];
+        let mut rng = Rng::seed_from_u64(21);
+        for &m in &ms {
+            for &n in &ns {
+                for &k in &ks {
+                    let a = Matrix::randn(m, k, &mut rng);
+                    let b = Matrix::randn(k, n, &mut rng);
+                    let c = matmul(&a, &b);
+                    let c0 = a.matmul_naive(&b);
+                    assert!(
+                        c.max_abs_diff(&c0) < 1e-9 * (1.0 + c0.max_abs()),
+                        "m={m} n={n} k={k}"
+                    );
+                    let serial = with_thread_cap(1, || matmul(&a, &b));
+                    let capped = with_thread_cap(4, || matmul(&a, &b));
+                    assert_eq!(serial, c, "serial differs m={m} n={n} k={k}");
+                    assert_eq!(capped, c, "capped differs m={m} n={n} k={k}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn alpha_beta_combinations_match_reference() {
+        let mut rng = Rng::seed_from_u64(22);
+        let (m, k, n) = (MC + 3, KC + 5, NR + 3);
+        let a = Matrix::randn(m, k, &mut rng);
+        let b = Matrix::randn(k, n, &mut rng);
+        let c0 = Matrix::randn(m, n, &mut rng);
+        for &alpha in &[0.0, 1.0, 2.0, -0.5] {
+            for &beta in &[0.0, 1.0, 0.5] {
+                let mut c = c0.clone();
+                gemm_into(alpha, &a, &b, beta, &mut c);
+                let expect = a.matmul_naive(&b).map(|x| alpha * x).axpy(beta, &c0);
+                assert!(
+                    c.max_abs_diff(&expect) < 1e-9 * (1.0 + expect.max_abs()),
+                    "alpha={alpha} beta={beta}"
+                );
+                // bitwise thread invariance for each scalar combination
+                let mut serial = c0.clone();
+                with_thread_cap(1, || gemm_into(alpha, &a, &b, beta, &mut serial));
+                assert_eq!(serial, c, "alpha={alpha} beta={beta}");
+            }
+        }
+    }
+
+    #[test]
+    fn gemm_propcheck_sweep() {
+        check("packed gemm sweep", 15, |rng: &mut Rng| {
+            let m = rng.usize_range(1, 150);
+            let k = rng.usize_range(1, 150);
+            let n = rng.usize_range(1, 150);
+            let a = Matrix::randn(m, k, rng);
+            let b = Matrix::randn(k, n, rng);
+            let c = matmul(&a, &b);
+            let c0 = a.matmul_naive(&b);
+            assert!(c.max_abs_diff(&c0) < 1e-9 * (1.0 + c0.max_abs()), "m={m} k={k} n={n}");
+            assert_eq!(with_thread_cap(1, || matmul(&a, &b)), c, "m={m} k={k} n={n}");
+            // transpose variants against the explicit-transpose oracle
+            let tn = matmul_tn(&a, &a);
+            let tn0 = a.transpose().matmul_naive(&a);
+            assert!(tn.max_abs_diff(&tn0) < 1e-9 * (1.0 + tn0.max_abs()));
+            let nt = matmul_nt(&b, &b);
+            let nt0 = b.matmul_naive(&b.transpose());
+            assert!(nt.max_abs_diff(&nt0) < 1e-9 * (1.0 + nt0.max_abs()));
+        });
+    }
+
+    #[test]
     fn transposed_variants() {
         let mut rng = Rng::seed_from_u64(4);
         let a = Matrix::randn(23, 17, &mut rng);
@@ -188,6 +255,19 @@ mod tests {
         let f = matmul_nt(&d, &e); // 9x13
         let f0 = d.matmul_naive(&e.transpose());
         assert!(f.max_abs_diff(&f0) < 1e-10);
+    }
+
+    #[test]
+    fn transposed_variants_bitwise_invariant_across_thread_caps() {
+        let mut rng = Rng::seed_from_u64(14);
+        let a = Matrix::randn(517, 33, &mut rng);
+        let b = Matrix::randn(517, 29, &mut rng);
+        let tn = matmul_tn(&a, &b);
+        assert_eq!(with_thread_cap(1, || matmul_tn(&a, &b)), tn);
+        let d = Matrix::randn(67, 517, &mut rng);
+        let e = Matrix::randn(41, 517, &mut rng);
+        let nt = matmul_nt(&d, &e);
+        assert_eq!(with_thread_cap(1, || matmul_nt(&d, &e)), nt);
     }
 
     #[test]
@@ -225,6 +305,20 @@ mod tests {
             // exactly symmetric by construction
             assert_eq!(g, g.transpose());
         });
+    }
+
+    #[test]
+    fn gram_tn_wide_crosses_tile_grid() {
+        // w spanning several MR/NR tiles, including diagonal-crossing ones
+        let mut rng = Rng::seed_from_u64(23);
+        for &(m, w) in &[(513usize, NR + 1), (700, 3 * NR + 5), (1030, 70)] {
+            let a = Matrix::randn(m, w, &mut rng);
+            let g = gram_tn(&a);
+            let g0 = matmul_tn(&a, &a);
+            assert!(g.max_abs_diff(&g0) < 1e-9 * (1.0 + g0.max_abs()), "m={m} w={w}");
+            assert_eq!(g, g.transpose());
+            assert_eq!(with_thread_cap(1, || gram_tn(&a)), g, "m={m} w={w}");
+        }
     }
 
     #[test]

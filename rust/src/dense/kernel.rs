@@ -1,0 +1,346 @@
+//! Register-tiled GEMM micro-kernel and panel packing.
+//!
+//! This module is the compute core under [`crate::dense::gemm`]: a classic
+//! three-level blocked GEMM in the BLIS/GotoBLAS mold, written so the
+//! compiler keeps the accumulators in registers and auto-vectorizes the
+//! rank-1 updates. The blocking hierarchy:
+//!
+//! - **NC** columns of C per packed B panel (`KC×NC`, targets L3);
+//! - **KC** depth per panel pair (bounds the A panel so `MC×KC` fits L2);
+//! - **MC** rows of C per macro-panel — the *parallel grain*: the shared
+//!   worker pool distributes MC-row panels, each owned by exactly one task;
+//! - **MR×NR** register micro-tile: `MR` micro-rows of packed A against
+//!   `NR` micro-columns of packed B, accumulated into an `[[f64; NR]; MR]`
+//!   stack array over the full KC depth before a single write-back to C.
+//!
+//! Packing layout: the A macro-panel is packed *row-major by micro-row* —
+//! slabs of MR rows, each slab interleaved as `kk`-major (`buf[kk*MR + r]`)
+//! so the micro-kernel reads MR contiguous A values per k step. The B panel
+//! is packed *column-major by micro-column* — slabs of NR columns
+//! interleaved as `buf[kk*NR + c]`. Remainder rows/columns are zero-padded
+//! inside their slab; the padded lanes accumulate garbage-free zeros and
+//! are simply not written back (the tail "kernels" are the same full-width
+//! micro-kernel with a clipped write-back).
+//!
+//! # Determinism
+//!
+//! The micro-tile decomposition and the k-order are functions of the
+//! *shape alone*: KC panels are reduced in ascending `k0` order by the
+//! serial outer loops, and within a panel every C element accumulates its
+//! `kc` products in ascending `kk` order inside one register tile.
+//! Parallelism only distributes ownership of disjoint MC row panels, so
+//! results are bitwise-identical at any thread count — including the
+//! pool's inline fallbacks (nested scope, `with_thread_cap(1)`), which run
+//! the very same loops. Note the accumulate-then-scale write-back
+//! (`C += α·acc`) rounds differently in the last bit than the previous
+//! per-k `C += (α·a)·b` saxpy kernel; the thread-count invariance tests in
+//! `dense/gemm.rs` re-pin the new sequence.
+
+use super::matrix::Matrix;
+use crate::runtime::pool;
+
+/// Micro-tile rows: A micro-panel height (broadcast operand).
+pub const MR: usize = 4;
+/// Micro-tile columns: B micro-panel width (vector operand); `MR·NR`
+/// accumulators stay within the FP register budget with room for loads.
+pub const NR: usize = 8;
+/// Rows of C per macro-panel — the parallel grain (multiple of MR).
+pub const MC: usize = 64;
+/// Depth per packed panel pair: the `MC×KC` A panel fits comfortably in L2.
+pub const KC: usize = 256;
+/// Columns of C per packed B panel (multiple of NR): `KC×NC` targets L3.
+pub const NC: usize = 512;
+
+/// A borrowed GEMM operand: a row-major buffer presented either as-is or
+/// logically transposed. The transposed view is what lets `matmul_tn` /
+/// `matmul_nt` pack straight from the untransposed storage instead of
+/// materializing an O(m·n) transposed copy first.
+#[derive(Clone, Copy)]
+pub struct Operand<'a> {
+    data: &'a [f64],
+    /// physical (storage) row count
+    rows: usize,
+    /// physical (storage) column count
+    cols: usize,
+    trans: bool,
+}
+
+impl<'a> Operand<'a> {
+    /// View `m` as itself.
+    pub fn normal(m: &'a Matrix) -> Operand<'a> {
+        Operand { data: m.data(), rows: m.rows(), cols: m.cols(), trans: false }
+    }
+
+    /// View `m` as its transpose without copying.
+    pub fn transposed(m: &'a Matrix) -> Operand<'a> {
+        Operand { data: m.data(), rows: m.rows(), cols: m.cols(), trans: true }
+    }
+
+    /// Logical shape after applying the transpose flag.
+    pub fn shape(&self) -> (usize, usize) {
+        if self.trans {
+            (self.cols, self.rows)
+        } else {
+            (self.rows, self.cols)
+        }
+    }
+}
+
+/// Pack the A macro-panel `rows i0..i0+mc × depth k0..k0+kc` (logical
+/// indices) row-major by micro-row: slab `s` holds rows `i0+s·MR ..`,
+/// interleaved `buf[s·MR·kc + kk·MR + r]`. Tail rows are zero-filled so the
+/// micro-kernel always reads full MR-wide groups.
+pub fn pack_a(op: &Operand, i0: usize, mc: usize, k0: usize, kc: usize, buf: &mut [f64]) {
+    debug_assert_eq!(buf.len(), mc.div_ceil(MR) * MR * kc);
+    for (s, slab) in buf.chunks_exact_mut(MR * kc).enumerate() {
+        let ir = s * MR;
+        let live = MR.min(mc - ir);
+        if !op.trans {
+            // logical rows are storage rows: walk each live row once
+            // (contiguous reads, strided writes into the small hot slab)
+            for r in 0..live {
+                let row = &op.data[(i0 + ir + r) * op.cols + k0..][..kc];
+                for (kk, &v) in row.iter().enumerate() {
+                    slab[kk * MR + r] = v;
+                }
+            }
+        } else {
+            // logical rows are storage columns: walk the depth (storage
+            // rows) — both reads and writes are unit-stride
+            for kk in 0..kc {
+                let src = &op.data[(k0 + kk) * op.cols + i0 + ir..][..live];
+                slab[kk * MR..kk * MR + live].copy_from_slice(src);
+            }
+        }
+        if live < MR {
+            for kk in 0..kc {
+                for r in live..MR {
+                    slab[kk * MR + r] = 0.0;
+                }
+            }
+        }
+    }
+}
+
+/// Pack the B panel `depth k0..k0+kc × cols j0..j0+nc` (logical indices)
+/// column-major by micro-column: slab `t` holds columns `j0+t·NR ..`,
+/// interleaved `buf[t·NR·kc + kk·NR + c]`. Tail columns are zero-filled.
+pub fn pack_b(op: &Operand, k0: usize, kc: usize, j0: usize, nc: usize, buf: &mut [f64]) {
+    debug_assert_eq!(buf.len(), nc.div_ceil(NR) * NR * kc);
+    for (t, slab) in buf.chunks_exact_mut(NR * kc).enumerate() {
+        let jr = t * NR;
+        let live = NR.min(nc - jr);
+        if !op.trans {
+            // logical rows are storage rows: unit-stride reads and writes
+            for kk in 0..kc {
+                let src = &op.data[(k0 + kk) * op.cols + j0 + jr..][..live];
+                slab[kk * NR..kk * NR + live].copy_from_slice(src);
+            }
+        } else {
+            // logical columns are storage rows: walk each live column once
+            for c in 0..live {
+                let col = &op.data[(j0 + jr + c) * op.cols + k0..][..kc];
+                for (kk, &v) in col.iter().enumerate() {
+                    slab[kk * NR + c] = v;
+                }
+            }
+        }
+        if live < NR {
+            for kk in 0..kc {
+                for c in live..NR {
+                    slab[kk * NR + c] = 0.0;
+                }
+            }
+        }
+    }
+}
+
+/// The register micro-kernel: accumulate `ap · bp` (one MR-row A slab
+/// against one NR-column B slab, shared depth `ap.len()/MR`) into an
+/// MR×NR stack tile, k ascending. The accumulators live in registers for
+/// the whole depth; each k step is an MR×NR rank-1 update the compiler
+/// auto-vectorizes across the NR lane dimension.
+#[inline(always)]
+pub fn micro_tile(ap: &[f64], bp: &[f64]) -> [[f64; NR]; MR] {
+    debug_assert_eq!(ap.len() / MR, bp.len() / NR);
+    let mut acc = [[0.0f64; NR]; MR];
+    for (av, bv) in ap.chunks_exact(MR).zip(bp.chunks_exact(NR)) {
+        for r in 0..MR {
+            let a = av[r];
+            for q in 0..NR {
+                acc[r][q] += a * bv[q];
+            }
+        }
+    }
+    acc
+}
+
+/// Workers write disjoint MC-row panels of C through this Sync wrapper.
+struct CPtr(*mut f64);
+unsafe impl Sync for CPtr {}
+
+/// `C = α·A·B + β·C` over [`Operand`] views — the packed, register-tiled
+/// driver behind `gemm_into`, `matmul_tn`, and `matmul_nt`. Serial loops
+/// over NC column blocks and KC depth panels (B packed once per pair by
+/// the caller thread); the worker pool distributes MC row panels, each
+/// task packing its own A panel and sweeping the NR×MR micro-tile grid.
+pub fn gemm_ops(alpha: f64, a: Operand, b: Operand, beta: f64, c: &mut Matrix) {
+    let (m, k) = a.shape();
+    let (k2, n) = b.shape();
+    assert_eq!(k, k2, "gemm inner dim: {m}x{k} · {k2}x{n}");
+    assert_eq!(c.shape(), (m, n), "gemm output shape");
+
+    if beta != 1.0 {
+        if beta == 0.0 {
+            c.data_mut().fill(0.0);
+        } else {
+            c.scale_inplace(beta);
+        }
+    }
+    if m == 0 || n == 0 || k == 0 || alpha == 0.0 {
+        return;
+    }
+
+    let c_ptr = CPtr(c.data_mut().as_mut_ptr());
+    let c_ptr = &c_ptr; // capture the Sync wrapper, not the raw field
+    let (a, b) = (&a, &b);
+    // one reusable B-panel buffer for the whole product (tight for skinny C)
+    let n_pad = n.div_ceil(NR) * NR;
+    let mut b_pack = vec![0.0f64; KC.min(k) * NC.min(n_pad)];
+    for j0 in (0..n).step_by(NC) {
+        let nc = NC.min(n - j0);
+        let nc_pad = nc.div_ceil(NR) * NR;
+        for k0 in (0..k).step_by(KC) {
+            let kc = KC.min(k - k0);
+            let bp = &mut b_pack[..nc_pad * kc];
+            pack_b(b, k0, kc, j0, nc, bp);
+            let bp = &b_pack[..nc_pad * kc];
+            // MC row panels on the shared pool: the atomic chunk counter
+            // hands out MC-aligned panels, so the decomposition is a
+            // function of the shape alone (see module doc).
+            pool::runtime().pool().par_chunks(m, MC, |rows| {
+                let (i0, mc) = (rows.start, rows.len());
+                let mut a_pack = vec![0.0f64; mc.div_ceil(MR) * MR * kc];
+                pack_a(a, i0, mc, k0, kc, &mut a_pack);
+                // SAFETY: MC panels partition 0..m; this task exclusively
+                // owns C rows i0..i0+mc for the duration of the scope.
+                let c_panel =
+                    unsafe { std::slice::from_raw_parts_mut(c_ptr.0.add(i0 * n), mc * n) };
+                for jr in (0..nc).step_by(NR) {
+                    let nr = NR.min(nc - jr);
+                    let bslab = &bp[(jr / NR) * NR * kc..][..NR * kc];
+                    for ir in (0..mc).step_by(MR) {
+                        let mr = MR.min(mc - ir);
+                        let aslab = &a_pack[(ir / MR) * MR * kc..][..MR * kc];
+                        let acc = micro_tile(aslab, bslab);
+                        for r in 0..mr {
+                            let crow = &mut c_panel[(ir + r) * n + j0 + jr..][..nr];
+                            for (q, cq) in crow.iter_mut().enumerate() {
+                                *cq += alpha * acc[r][q];
+                            }
+                        }
+                    }
+                }
+            });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn operand_shapes() {
+        let m = Matrix::zeros(3, 5);
+        assert_eq!(Operand::normal(&m).shape(), (3, 5));
+        assert_eq!(Operand::transposed(&m).shape(), (5, 3));
+    }
+
+    #[test]
+    fn pack_a_layout_and_padding() {
+        // 3×4 matrix, mc=3 (one partial slab of MR=4), kc=4
+        let a = Matrix::from_fn(3, 4, |i, j| (10 * i + j) as f64);
+        let mut buf = vec![f64::NAN; 3usize.div_ceil(MR) * MR * 4];
+        pack_a(&Operand::normal(&a), 0, 3, 0, 4, &mut buf);
+        for kk in 0..4 {
+            for r in 0..3 {
+                assert_eq!(buf[kk * MR + r], a[(r, kk)], "kk={kk} r={r}");
+            }
+            assert_eq!(buf[kk * MR + 3], 0.0, "pad row must be zero");
+        }
+        // transposed view packs Aᵀ without copying: logical (4, 3)
+        let mut tbuf = vec![f64::NAN; 4usize.div_ceil(MR) * MR * 3];
+        pack_a(&Operand::transposed(&a), 0, 4, 0, 3, &mut tbuf);
+        for kk in 0..3 {
+            for r in 0..4 {
+                assert_eq!(tbuf[kk * MR + r], a[(kk, r)], "kk={kk} r={r}");
+            }
+        }
+    }
+
+    #[test]
+    fn pack_b_layout_and_padding() {
+        // 4×3 matrix: one partial NR slab (live=3), kc=4
+        let b = Matrix::from_fn(4, 3, |i, j| (10 * i + j) as f64);
+        let mut buf = vec![f64::NAN; 3usize.div_ceil(NR) * NR * 4];
+        pack_b(&Operand::normal(&b), 0, 4, 0, 3, &mut buf);
+        for kk in 0..4 {
+            for c in 0..3 {
+                assert_eq!(buf[kk * NR + c], b[(kk, c)], "kk={kk} c={c}");
+            }
+            for c in 3..NR {
+                assert_eq!(buf[kk * NR + c], 0.0, "pad col must be zero");
+            }
+        }
+        // offset block of a bigger matrix
+        let big = Matrix::from_fn(10, 20, |i, j| (100 * i + j) as f64);
+        let (k0, kc, j0, nc) = (2usize, 5usize, 3usize, NR + 2);
+        let mut obuf = vec![f64::NAN; nc.div_ceil(NR) * NR * kc];
+        pack_b(&Operand::normal(&big), k0, kc, j0, nc, &mut obuf);
+        for kk in 0..kc {
+            for c in 0..nc {
+                let slab = c / NR;
+                let got = obuf[slab * NR * kc + kk * NR + (c % NR)];
+                assert_eq!(got, big[(k0 + kk, j0 + c)], "kk={kk} c={c}");
+            }
+        }
+    }
+
+    #[test]
+    fn micro_tile_is_outer_product_sum() {
+        let mut rng = Rng::seed_from_u64(3);
+        let kc = 5;
+        let ap: Vec<f64> = rng.normal_vec(MR * kc);
+        let bp: Vec<f64> = rng.normal_vec(NR * kc);
+        let acc = micro_tile(&ap, &bp);
+        for r in 0..MR {
+            for q in 0..NR {
+                let want: f64 = (0..kc).map(|kk| ap[kk * MR + r] * bp[kk * NR + q]).sum();
+                assert!((acc[r][q] - want).abs() < 1e-12, "r={r} q={q}");
+            }
+        }
+    }
+
+    #[test]
+    fn gemm_ops_transposed_views_match_explicit_transpose() {
+        let mut rng = Rng::seed_from_u64(9);
+        for &(p, m, n) in &[(7usize, 5usize, 9usize), (70, 13, 40), (300, 65, 17)] {
+            let a = Matrix::randn(p, m, &mut rng);
+            let b = Matrix::randn(p, n, &mut rng);
+            // tn: C = Aᵀ·B packed straight from A
+            let mut c = Matrix::zeros(m, n);
+            gemm_ops(1.0, Operand::transposed(&a), Operand::normal(&b), 0.0, &mut c);
+            let c0 = a.transpose().matmul_naive(&b);
+            assert!(c.max_abs_diff(&c0) < 1e-10 * (1.0 + c0.max_abs()), "tn {p}x{m}x{n}");
+            // nt: C = B·Aᵀ... use fresh shapes: d (m×p) · e (n×p)ᵀ
+            let d = Matrix::randn(m, p, &mut rng);
+            let e = Matrix::randn(n, p, &mut rng);
+            let mut f = Matrix::zeros(m, n);
+            gemm_ops(1.0, Operand::normal(&d), Operand::transposed(&e), 0.0, &mut f);
+            let f0 = d.matmul_naive(&e.transpose());
+            assert!(f.max_abs_diff(&f0) < 1e-10 * (1.0 + f0.max_abs()), "nt {p}x{m}x{n}");
+        }
+    }
+}

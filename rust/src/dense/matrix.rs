@@ -146,6 +146,18 @@ impl Matrix {
     /// Transposed copy (cache-blocked).
     pub fn transpose(&self) -> Matrix {
         let mut t = Matrix::zeros(self.cols, self.rows);
+        self.transpose_into(&mut t);
+        t
+    }
+
+    /// Blocked transpose into an existing (cols×rows) matrix — the
+    /// scratch-buffer form for call sites that reuse a destination instead
+    /// of allocating per call. (The GEMM transpose variants no longer need
+    /// a transposed copy at all — `dense::kernel` packs straight from the
+    /// untransposed operand — so this remains only for layout changes that
+    /// genuinely materialize, e.g. `Csr::rspmm`.)
+    pub fn transpose_into(&self, t: &mut Matrix) {
+        assert_eq!(t.shape(), (self.cols, self.rows), "transpose_into shape");
         const B: usize = 32;
         for ib in (0..self.rows).step_by(B) {
             for jb in (0..self.cols).step_by(B) {
@@ -156,7 +168,6 @@ impl Matrix {
                 }
             }
         }
-        t
     }
 
     /// Contiguous copy of a rectangular region.
@@ -371,6 +382,19 @@ mod tests {
         assert_eq!(t.shape(), (53, 37));
         assert_eq!(t.transpose(), m);
         assert_eq!(t[(10, 20)], m[(20, 10)]);
+    }
+
+    #[test]
+    fn transpose_into_reuses_buffer() {
+        let mut rng = Rng::seed_from_u64(7);
+        let a = Matrix::randn(41, 29, &mut rng);
+        let b = Matrix::randn(41, 29, &mut rng);
+        let mut t = Matrix::zeros(29, 41);
+        a.transpose_into(&mut t);
+        assert_eq!(t, a.transpose());
+        // every slot is overwritten on reuse — no stale entries survive
+        b.transpose_into(&mut t);
+        assert_eq!(t, b.transpose());
     }
 
     #[test]

@@ -4,6 +4,7 @@
 pub mod cholesky;
 pub mod gemm;
 pub mod gramsvd;
+pub mod kernel;
 pub mod lu;
 pub mod matrix;
 pub mod qr;

@@ -254,6 +254,28 @@ impl Pool {
         });
     }
 
+    /// Parallel for over an explicit list of index ranges — for irregular
+    /// partitions where equal-width chunking would misbalance the work
+    /// (e.g. `Csr::spmm`'s nnz-balanced row chunks, where one hub row can
+    /// carry as much work as thousands of light rows). Each range is
+    /// claimed atomically and processed whole by one participant; the
+    /// partition itself is the caller's and must not depend on which
+    /// thread runs what.
+    pub fn par_ranges<F>(&self, ranges: &[Range<usize>], f: F)
+    where
+        F: Fn(Range<usize>) + Sync,
+    {
+        match ranges.len() {
+            0 => {}
+            1 => f(ranges[0].clone()),
+            n => self.par_chunks(n, 1, |ri| {
+                for i in ri {
+                    f(ranges[i].clone());
+                }
+            }),
+        }
+    }
+
     /// Parallel for over single indices — for coarse jobs like per-block
     /// SVDs where each iteration is substantial.
     pub fn par_for<F>(&self, n: usize, f: F)
@@ -454,6 +476,27 @@ mod tests {
             total.fetch_add(s, Ordering::Relaxed);
         });
         assert_eq!(total.load(Ordering::Relaxed), (0..1003u64).sum::<u64>());
+    }
+
+    #[test]
+    fn par_ranges_covers_each_range_once() {
+        let pool = Pool::new(4);
+        let hits: Vec<AtomicUsize> = (0..500).map(|_| AtomicUsize::new(0)).collect();
+        // deliberately irregular partition of 0..500
+        let ranges = vec![0..1, 1..300, 300..301, 301..499, 499..500];
+        pool.par_ranges(&ranges, |r| {
+            for i in r {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            }
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+        // degenerate inputs
+        pool.par_ranges(&[], |_| panic!("no ranges, no calls"));
+        let one = AtomicUsize::new(0);
+        pool.par_ranges(&[7..9], |r| {
+            one.fetch_add(r.len(), Ordering::Relaxed);
+        });
+        assert_eq!(one.load(Ordering::Relaxed), 2);
     }
 
     #[test]

@@ -201,31 +201,34 @@ impl Csr {
         y
     }
 
-    /// Sparse × dense: C = A · B, parallel over row blocks.
+    /// Sparse × dense: C = A · B, parallel over nnz-balanced row chunks.
     pub fn spmm(&self, b: &Matrix) -> Matrix {
         assert_eq!(self.cols, b.rows(), "spmm: {}x{} · {}x{}", self.rows, self.cols, b.rows(), b.cols());
         let n = b.cols();
         let mut c = Matrix::zeros(self.rows, n);
+        if self.rows == 0 || n == 0 {
+            return c;
+        }
         let c_ptr = SyncPtr(c.data_mut().as_mut_ptr());
         let cp = &c_ptr;
-        // Row blocks dispatch onto the shared worker pool. This is also the
+        // Skew-aware chunking: split work by cumulative nnz (`indptr` IS
+        // the prefix sum) instead of raw row count, so a hub row — exactly
+        // the skew the paper's hub-spoke reordering concentrates — cannot
+        // serialize a whole chunk behind one worker. This is also the
         // serving-path scoring GEMM (batched ŷ = Zᵀa), where `rows` is one
-        // dynamic batch (often ≤ 64), so the chunk adapts to the pool width
-        // instead of handing the whole batch to one worker. Chunking only
+        // dynamic batch (often ≤ 64): the nnz target adapts to the pool
+        // width so one batch still engages every worker. Chunking only
         // partitions row ownership — each C row is still reduced in fixed
-        // column order — so results stay bitwise-identical at any width.
-        let chunk = self.rows.div_ceil(4 * pool::runtime().threads()).clamp(1, 64);
-        pool::runtime().pool().par_chunks(self.rows, chunk, move |range| {
+        // column order (see `spmm_row`) — so results stay bitwise-identical
+        // at any width.
+        let chunks = nnz_balanced_chunks(&self.indptr, pool::runtime().threads());
+        pool::runtime().pool().par_ranges(&chunks, move |range| {
             for i in range {
-                // SAFETY: each row of C is written by exactly one worker.
+                // SAFETY: chunks partition 0..rows; each C row is written
+                // by exactly one worker.
                 let crow = unsafe { std::slice::from_raw_parts_mut(cp.0.add(i * n), n) };
                 let (js, vs) = self.row(i);
-                for (&j, &v) in js.iter().zip(vs) {
-                    let brow = b.row(j);
-                    for (cj, bj) in crow.iter_mut().zip(brow) {
-                        *cj += v * bj;
-                    }
-                }
+                spmm_row(crow, js, vs, b);
             }
         });
         c
@@ -302,6 +305,71 @@ impl Csr {
 
 struct SyncPtr(*mut f64);
 unsafe impl Sync for SyncPtr {}
+
+/// Rows with at least this many nonzeros take the dense-row micro-kernel
+/// in [`spmm_row`] (4 nonzeros folded per traversal of the C row).
+const DENSE_ROW_NNZ: usize = 8;
+
+/// One spmm output row: `crow += Σ v·B[j,:]` over the row's nonzeros in
+/// ascending column position. Rows at or above [`DENSE_ROW_NNZ`] nonzeros
+/// (hub rows) use a micro-kernel that folds four nonzeros per traversal of
+/// the C row — 4× fewer passes over `crow`, with each element still
+/// accumulated in exactly the same left-to-right order as the scalar path
+/// (the parenthesization below is the sequential saxpy order), so the two
+/// paths are bitwise-identical and serving SCORE bytes are unchanged.
+#[inline]
+fn spmm_row(crow: &mut [f64], js: &[usize], vs: &[f64], b: &Matrix) {
+    let mut t = 0;
+    if js.len() >= DENSE_ROW_NNZ {
+        while t + 4 <= js.len() {
+            let (v0, v1, v2, v3) = (vs[t], vs[t + 1], vs[t + 2], vs[t + 3]);
+            let b0 = b.row(js[t]);
+            let b1 = b.row(js[t + 1]);
+            let b2 = b.row(js[t + 2]);
+            let b3 = b.row(js[t + 3]);
+            let quads = b0.iter().zip(b1).zip(b2).zip(b3);
+            for (cj, (((x0, x1), x2), x3)) in crow.iter_mut().zip(quads) {
+                *cj = (((*cj + v0 * x0) + v1 * x1) + v2 * x2) + v3 * x3;
+            }
+            t += 4;
+        }
+    }
+    for (&j, &v) in js[t..].iter().zip(&vs[t..]) {
+        let brow = b.row(j);
+        for (cj, bj) in crow.iter_mut().zip(brow) {
+            *cj += v * bj;
+        }
+    }
+}
+
+/// Partition `0..rows` into contiguous chunks of roughly equal *work*
+/// (cumulative nnz, read off the `indptr` prefix sum): each chunk closes
+/// once it reaches the per-chunk nnz target (~4 chunks per pool thread) or
+/// 64 rows, whichever comes first — the row cap keeps small serving
+/// batches spread across the pool even when every row is light. A single
+/// row heavier than the target gets a chunk of its own (a row cannot be
+/// split without changing its reduction order). The partition depends only
+/// on the matrix and the pool's fixed width — never on which thread runs
+/// what — so it preserves the thread-count invariance contract.
+fn nnz_balanced_chunks(indptr: &[usize], threads: usize) -> Vec<std::ops::Range<usize>> {
+    let rows = indptr.len() - 1;
+    let total = indptr[rows];
+    let target = total.div_ceil(4 * threads.max(1)).max(1);
+    let mut chunks = Vec::new();
+    let mut r0 = 0;
+    while r0 < rows {
+        // always take one row, then extend while the chunk stays within
+        // the target — a row is never absorbed if it would blow past it,
+        // which is what leaves heavy hub rows alone in their chunk
+        let mut r1 = r0 + 1;
+        while r1 < rows && r1 - r0 < 64 && indptr[r1 + 1] - indptr[r0] <= target {
+            r1 += 1;
+        }
+        chunks.push(r0..r1);
+        r0 = r1;
+    }
+    chunks
+}
 
 #[cfg(test)]
 mod tests {
@@ -394,6 +462,89 @@ mod tests {
             let cr0 = b3.matmul_naive(&csr.to_dense());
             assert!(cr.max_abs_diff(&cr0) < 1e-12);
         });
+    }
+
+    #[test]
+    fn spmm_hub_rows_match_dense_and_stay_bitwise_invariant() {
+        // pathological skew: a handful of hub rows carry almost all the
+        // nnz (the post-reorder shape the paper predicts); under the old
+        // row-count chunking they all landed in one chunk and serialized.
+        let mut rng = Rng::seed_from_u64(31);
+        let (rows, cols, nb) = (300usize, 500usize, 9usize);
+        let mut coo = Coo::new(rows, cols);
+        for hub in [0usize, 1, 150] {
+            for j in 0..cols {
+                coo.push(hub, j, rng.normal());
+            }
+        }
+        for i in 0..rows {
+            coo.push(i, rng.usize_below(cols), rng.normal());
+        }
+        let csr = Csr::from_coo(&coo);
+        assert!(csr.row_nnz(0) >= cols / 2, "hub row must dominate");
+        let b = Matrix::randn(cols, nb, &mut rng);
+        let c = csr.spmm(&b);
+        let c0 = csr.to_dense().matmul_naive(&b);
+        assert!(c.max_abs_diff(&c0) < 1e-10 * (1.0 + c0.max_abs()));
+        // serving SCORE bytes: bitwise across thread caps
+        let serial = crate::runtime::pool::with_thread_cap(1, || csr.spmm(&b));
+        assert_eq!(serial, c, "nnz chunking must not depend on thread count");
+    }
+
+    #[test]
+    fn spmm_dense_row_kernel_is_bitwise_equal_to_scalar_path() {
+        // rows straddling DENSE_ROW_NNZ on both sides, plus tails not a
+        // multiple of 4: the micro-kernel path must reproduce the scalar
+        // saxpy order exactly, element for element.
+        check("dense-row spmm == per-nz saxpy", 12, |rng| {
+            let (m, k) = (rng.usize_range(1, 20), rng.usize_range(8, 40));
+            let n = rng.usize_range(1, 12);
+            let mut coo = Coo::new(m, k);
+            for i in 0..m {
+                let nnz = rng.usize_range(0, k + 1); // spans sparse → fully dense rows
+                for _ in 0..nnz {
+                    coo.push(i, rng.usize_below(k), rng.normal());
+                }
+            }
+            let csr = Csr::from_coo(&coo);
+            let b = Matrix::randn(k, n, rng);
+            let fast = csr.spmm(&b);
+            // scalar oracle with the same per-row left-to-right order
+            let mut slow = Matrix::zeros(m, n);
+            for i in 0..m {
+                let (js, vs) = csr.row(i);
+                let crow = slow.row_mut(i);
+                for (&j, &v) in js.iter().zip(vs) {
+                    for (cj, bj) in crow.iter_mut().zip(b.row(j)) {
+                        *cj += v * bj;
+                    }
+                }
+            }
+            assert_eq!(fast, slow, "micro-kernel changed the reduction order");
+        });
+    }
+
+    #[test]
+    fn nnz_chunks_partition_rows_and_isolate_hubs() {
+        // indptr for rows with nnz [1, 100, 1, 1, 0, 1]
+        let indptr = vec![0usize, 1, 101, 102, 103, 103, 104];
+        let chunks = nnz_balanced_chunks(&indptr, 4);
+        // chunks tile 0..rows exactly, in order
+        let mut next = 0;
+        for c in &chunks {
+            assert_eq!(c.start, next);
+            assert!(c.end > c.start);
+            next = c.end;
+        }
+        assert_eq!(next, 6);
+        // the hub row exceeds the target → it is alone in its chunk
+        let hub = chunks.iter().find(|c| c.contains(&1)).unwrap();
+        assert_eq!(hub.clone(), 1..2, "hub row must not drag light rows along");
+        // all-empty matrix still partitions (64-row cap bounds each chunk)
+        let empty = vec![0usize; 201];
+        let ec = nnz_balanced_chunks(&empty, 2);
+        assert_eq!(ec.iter().map(|c| c.len()).sum::<usize>(), 200);
+        assert!(ec.iter().all(|c| c.len() <= 64));
     }
 
     #[test]
