@@ -8,7 +8,10 @@
 //! slogan), **replica propagation**: publish on a primary → all three
 //! snapshot-shipped replicas hot-swapped, measured under client load,
 //! and an **overload point**: offered concurrency far past the shed
-//! threshold, gating the accepted-request p99 with admission control on.
+//! threshold, gating the accepted-request p99 with admission control on,
+//! plus **delta shipping** at a high fold rate: per-hop FPID C/Z delta
+//! bytes vs full FPIM snapshot bytes over the real wire, with an asserted
+//! ≤ 25% size gate.
 //! Results land in `target/bench_results/` as CSV +
 //! `BENCH_serve_throughput.json` for the cross-PR perf trajectory
 //! (`fastpi bench-diff` gates them against `bench_baselines/` in CI).
@@ -19,7 +22,10 @@ use fastpi::coordinator::{
     RouterConfig, ScoreServer, ServerConfig,
 };
 use fastpi::data::{load_dataset, Dataset};
-use fastpi::model::{split_artifact, ModelStore, OnlineUpdater, UpdaterConfig};
+use fastpi::model::{
+    fetch_shard_delta, fetch_snapshot, split_artifact, FoldMode, ModelStore, OnlineUpdater,
+    ShipReply, UpdaterConfig,
+};
 use fastpi::obs::{HistSnapshot, Histogram};
 use fastpi::pinv::Method;
 use fastpi::regress::MultiLabelModel;
@@ -480,6 +486,98 @@ fn main() {
         for d in rdirs {
             let _ = std::fs::remove_dir_all(&d);
         }
+    }
+
+    // delta shipping at a high fold rate: a primary folding in
+    // FoldMode::Project publishes factor-stable successions, so each
+    // sync hop can ship the compact FPID C/Z delta instead of the full
+    // FPIM snapshot. Both payloads are fetched over the real wire for
+    // every hop of a fold burst and their byte totals compared — the
+    // replication-cost half of the paper's incremental story, with an
+    // **asserted size gate**: the delta burst must cost ≤ 25% of the
+    // snapshot burst (U dominates the file and never ships).
+    {
+        let dir = std::env::temp_dir().join("fastpi_bench_delta_store");
+        let _ = std::fs::remove_dir_all(&dir);
+        let store = ModelStore::open(&dir).expect("store");
+        let (artifact, _) = coord.train_model(&ds, &job, ds.a.rows()).expect("artifact");
+        let version = store.publish(&artifact).expect("publish");
+        let primary = ScoreServer::start_lifecycle(
+            OnlineUpdater::new(
+                artifact,
+                UpdaterConfig {
+                    learn_batch: 1,
+                    fold_mode: FoldMode::Project,
+                    // no mid-burst re-solve: a factor change would
+                    // (correctly) force the snapshot fallback and turn
+                    // this size measurement into a different experiment
+                    resolve_drift: 0.0,
+                    ..Default::default()
+                },
+            ),
+            Some(store),
+            version,
+            ServerConfig::default(),
+        )
+        .expect("primary");
+        let t = Duration::from_secs(30);
+        let folds: u64 = if fast { 4 } else { 8 };
+        let (mut delta_total, mut snapshot_total) = (0usize, 0usize);
+        let fetch_hist = Histogram::new();
+        for k in 0..folds {
+            let reply = text_request(primary.addr, &learn_line(&ds, (k as usize * 53) % ds.a.rows()))
+                .expect("learn");
+            assert!(
+                reply.starts_with(&format!("OK version={} ", version + k + 1)),
+                "projection fold failed: {reply}"
+            );
+            let have = version + k;
+            // what a delta-aware follower at `have` pulls for this hop
+            let t0 = Instant::now();
+            match fetch_shard_delta(primary.addr, have, None, t).expect("delta fetch") {
+                ShipReply::Delta { version: v, base, bytes, .. } => {
+                    assert_eq!((v, base), (have + 1, have), "wrong delta lineage");
+                    delta_total += bytes.len();
+                }
+                other => panic!("factor-stable hop {have} must ship as a delta, got {other:?}"),
+            }
+            fetch_hist.record_duration(t0.elapsed());
+            // what a plain-protocol follower pulls for the same hop
+            match fetch_snapshot(primary.addr, have, t).expect("snapshot fetch") {
+                ShipReply::Snapshot { version: v, bytes, .. } => {
+                    assert_eq!(v, have + 1, "wrong snapshot version");
+                    snapshot_total += bytes.len();
+                }
+                other => panic!("hop {have} snapshot fetch answered {other:?}"),
+            }
+        }
+        let ratio = delta_total as f64 / snapshot_total as f64;
+        let fetch_snap = fetch_hist.snapshot();
+        rep.add(
+            &[("policy", "delta_ship".into()), ("clients", "1".into())],
+            &[
+                ("folds", folds as f64),
+                ("delta_bytes", delta_total as f64),
+                ("snapshot_bytes", snapshot_total as f64),
+                ("delta_ratio", ratio),
+                ("delta_fetch_p95_ms", q_ms(&fetch_snap, 0.95)),
+            ],
+        );
+        println!(
+            "delta shipping over {folds} folds: {delta_total} delta bytes vs {snapshot_total} snapshot bytes ({:.1}% of full)",
+            ratio * 100.0
+        );
+        // THE GATE: delta shipping must stay a small fraction of the
+        // snapshot path or the delta protocol has stopped paying for
+        // itself (e.g. factors leaking into the FPID payload). bench-diff
+        // additionally gates delta_ratio against the committed baseline.
+        assert!(
+            ratio <= 0.25,
+            "delta-ship size gate failed: {delta_total} delta bytes > 25% of \
+             {snapshot_total} snapshot bytes"
+        );
+        primary.shutdown();
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     // scatter-gather vs unsharded at EQUAL total label width: the same

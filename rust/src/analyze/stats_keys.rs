@@ -304,6 +304,60 @@ mod tests {
     }
 
     #[test]
+    fn elastic_fleet_keys_reconcile_with_the_doc_table() {
+        // the elastic-fleet wire surface: the delta-ship header gained
+        // `base=`, the feature-growth LEARN COLS ack gained `cols=`, and
+        // the RESHARD acks gained `shards=` — documented + emitted
+        // together is quiet in both server files
+        let ship = "//! Delta wire: `<- DELTA version=3 base=2 epoch=1 bytes=640`\n\
+                    fn hdr(v: u64, have: u64, e: u64, n: usize) -> String {\n\
+                    format!(\"DELTA version={v} base={have} epoch={e} bytes={n}\\n\")\n\
+                    }\n";
+        let serve = "//! Growth: `<- OK version=2 cols=3` · reshard: `<- OK version=2 shards=4`\n\
+                     fn grow(v: u64, c: usize) -> String { format!(\"OK version={v} cols={c}\\n\") }\n\
+                     fn reshard(v: u64, m: usize) -> String {\n\
+                     format!(\"OK version={v} shards={m}\\n\")\n\
+                     }\n";
+        let r = analyze_sources(&[
+            ("rust/src/model/ship.rs".to_string(), ship.to_string()),
+            ("rust/src/coordinator/serve.rs".to_string(), serve.to_string()),
+        ]);
+        assert!(r.findings.is_empty(), "{:?}", r.findings);
+        // drop `base=` from the delta doc row: the emission fires at its line
+        let ship_undoc = "//! Delta wire: `<- DELTA version=3 epoch=1 bytes=640`\n\
+                          fn hdr(v: u64, have: u64, e: u64, n: usize) -> String {\n\
+                          format!(\"DELTA version={v} base={have} epoch={e} bytes={n}\\n\")\n\
+                          }\n";
+        let r = analyze_sources(&[(
+            "rust/src/model/ship.rs".to_string(),
+            ship_undoc.to_string(),
+        )]);
+        assert_eq!(r.findings.len(), 1, "{:?}", r.findings);
+        assert!(r.findings[0].message.contains("`base=`"), "{}", r.findings[0].message);
+        assert_eq!(r.findings[0].line, 3);
+        // a doc'd `shards=` outliving the RESHARD verb fires at the doc line
+        let serve_stale = "//! Reshard: `<- OK version=2 shards=4`\n\
+                           fn reshard(v: u64) -> String { format!(\"OK version={v}\\n\") }\n";
+        let r = analyze_sources(&[(
+            "rust/src/coordinator/serve.rs".to_string(),
+            serve_stale.to_string(),
+        )]);
+        assert_eq!(r.findings.len(), 1, "{:?}", r.findings);
+        assert!(r.findings[0].message.contains("`shards=`"), "{}", r.findings[0].message);
+        assert_eq!(r.findings[0].line, 1);
+        // the follower's `base=` parser probe alone keeps a doc'd-but-not-
+        // emitted key quiet (the emitting primary may live in another file)
+        let ship_probe = "//! Delta wire: `-> SHIP 2 DELTA`, `<- DELTA base=2 bytes=640`\n\
+                          fn parse(tok: &str) -> Option<&str> { tok.strip_prefix(\"base=\") }\n\
+                          fn hdr(n: usize) -> String { format!(\"DELTA bytes={n}\\n\") }\n";
+        let r = analyze_sources(&[(
+            "rust/src/model/ship.rs".to_string(),
+            ship_probe.to_string(),
+        )]);
+        assert!(r.findings.is_empty(), "{:?}", r.findings);
+    }
+
+    #[test]
     fn reasoned_allow_silences_drift() {
         let src = "// analyze::allow(stats-key-drift): experimental key, doc lands with the client\n\
                    fn reply(b: u64) -> String { format!(\"OK bogus={b}\\n\") }\n";

@@ -37,6 +37,13 @@ OPERATIONS:
              publishes out of the lineage), and enables LEARN/RELOAD
   shard      split the store's latest model into a label-space shard set
              and publish it (one atomic shard-set version) to --out
+  reshard    live N->M resharding: `fastpi reshard ADDR --shards M`
+             sends RESHARD to a serving node, which reassembles its
+             store's latest version bitwise and publishes one atomic
+             M-way shard-set version; `fastpi reshard ADDR --groups
+             a+b,c,d` flips a sharded router's fan-out map epoch-style
+             onto a new fleet (probed live, right slices, lockstep
+             versions before the swap — refused otherwise)
   route      front-end router fanning SCORE across replicas; STATS
              reports per-replica versions + skew. --sharded switches to
              scatter-gather over shard groups (SCORE merged bitwise,
@@ -53,6 +60,12 @@ OPERATIONS:
              kill one member per group mid-load, then promote the dead
              primary's follower — asserts zero dropped requests, bitwise
              SCORE vs an unsharded reference, LEARN restored, skew 0 (CI)
+  reshard-check    headless elastic-fleet check: 3-shard fleet under
+             concurrent load is live-resharded to 4 — atomic store
+             publish via the serve RESHARD verb, new shard processes,
+             one router map flip — asserting zero dropped requests,
+             bitwise SCORE vs the unsharded reference throughout, and
+             both reshard surfaces journaled (CI)
   metrics    dump a server or router METRICS snapshot: `fastpi metrics
              HOST:PORT` (routers answer with the fleet-merged view)
   events     drain a server or router EVENTS journal: `fastpi events
@@ -88,6 +101,12 @@ LIFECYCLE OPTIONS:
   --learn-batch 1      serve: LEARN examples buffered per fold
   --resolve-rows N     flag a full re-solve after N folded rows (0=never)
   --resolve-drift 0.05 flag a full re-solve past accumulated drift
+  --fold-mode exact    serve/update: row-fold basis policy. `project`
+                       freezes the factors (C/Z-only folds onto the
+                       frozen basis) so consecutive versions stay
+                       factor-stable and replica SHIP deltas fire;
+                       `exact` rotates the basis every fold (paper
+                       Eq. 2) and replicas fall back to full snapshots
   --gc N               update: keep only the newest N store versions
 
 SERVING OPTIONS:
@@ -136,7 +155,7 @@ BENCH-DIFF OPTIONS:
   --max-regress 0.2    allowed fractional regression per gated key
   --keys a,b           gated value keys (default throughput_rps,p50_ms,
                        p95_ms,p99_ms,p99_storm_ms,propagation_p95_ms,
-                       speedup_x,gflops_1t)
+                       delta_ratio,speedup_x,gflops_1t)
 ";
 
 pub fn main() {
@@ -165,6 +184,7 @@ pub fn main() {
         "ship" => cmd_ship(&args),
         "promote" => cmd_promote(&args),
         "shard" => cmd_shard(&args),
+        "reshard" => cmd_reshard(&args),
         "route" => cmd_route(&args),
         "metrics" => cmd_metrics(&args),
         "events" => cmd_events(&args),
@@ -172,6 +192,7 @@ pub fn main() {
         "cluster-check" => cmd_cluster_check(&args),
         "shard-check" => cmd_shard_check(&args),
         "failover-check" => cmd_failover_check(&args),
+        "reshard-check" => cmd_reshard_check(&args),
         "bench-diff" => cmd_bench_diff(&args),
         "analyze" => cmd_analyze(&args),
         "datagen" => cmd_datagen(&args),
@@ -386,6 +407,12 @@ fn updater_cfg_arg(args: &Args) -> crate::model::UpdaterConfig {
         learn_batch: args.parse_or("learn-batch", 1usize),
         resolve_rows: args.parse_or("resolve-rows", 0usize),
         resolve_drift: args.parse_or("resolve-drift", 0.05),
+        // `--fold-mode project` freezes the factors across row folds
+        // (C/Z-only updates), which is what makes SHIP deltas fire
+        fold_mode: args
+            .get("fold-mode")
+            .and_then(|s| crate::model::FoldMode::parse(&s))
+            .unwrap_or(crate::model::FoldMode::Exact),
         ..Default::default()
     }
 }
@@ -692,6 +719,57 @@ fn cmd_shard(args: &Args) -> crate::error::Result<()> {
     Ok(())
 }
 
+/// Live-reshard a fleet over the wire: one `RESHARD` round trip against
+/// either surface of the N→M dance.
+///
+/// * `fastpi reshard HOST:PORT --shards M` — a serving node with a
+///   store: reassemble the latest version bitwise and publish one atomic
+///   M-way shard-set version (the node's own serving slot is untouched;
+///   new servers pick the slices up with `--shard K/M` or `RELOAD K/M`).
+/// * `fastpi reshard HOST:PORT --groups a+b,c,d` — a scatter-gather
+///   router: probe the new fleet (every member live, serving the right
+///   slice, in version lockstep) and flip the fan-out map epoch-style;
+///   a refused flip leaves the old map serving untouched.
+fn cmd_reshard(args: &Args) -> crate::error::Result<()> {
+    use crate::coordinator::text_request;
+    use crate::error::Error;
+    let spec = args
+        .positional()
+        .get(1)
+        .map(String::as_str)
+        .or_else(|| args.get("addr"))
+        .ok_or_else(|| {
+            Error::Invalid(
+                "usage: fastpi reshard HOST:PORT --shards M (serving node) \
+                 | --groups a+b,c,d (router)"
+                    .into(),
+            )
+        })?;
+    let addr = resolve_addr(spec)?;
+    let line = match (args.get("groups"), args.get("shards")) {
+        (Some(groups), None) => format!("RESHARD {groups}"),
+        (None, Some(m)) => {
+            let m: usize = m
+                .parse()
+                .map_err(|_| Error::Invalid(format!("--shards must be a number, got `{m}`")))?;
+            format!("RESHARD {m}")
+        }
+        _ => {
+            return Err(Error::Invalid(
+                "exactly one of --shards M (serving node) or --groups a+b,c,d (router) required"
+                    .into(),
+            ))
+        }
+    };
+    let reply = text_request(addr, &line).map_err(Error::Io)?;
+    if reply.starts_with("OK ") {
+        println!("resharded {addr}: {reply}");
+        Ok(())
+    } else {
+        Err(Error::Invalid(format!("reshard {addr} failed: {reply}")))
+    }
+}
+
 fn cmd_route(args: &Args) -> crate::error::Result<()> {
     use crate::coordinator::{Router, RouterConfig};
     let spec = args.get("replicas").ok_or_else(|| {
@@ -780,6 +858,7 @@ fn cmd_bench_diff(args: &Args) -> crate::error::Result<()> {
         "p99_ms",
         "p99_storm_ms",
         "propagation_p95_ms",
+        "delta_ratio",
         "speedup_x",
         "gflops_1t",
     ]
@@ -1829,6 +1908,249 @@ fn cmd_failover_check(args: &Args) -> crate::error::Result<()> {
     println!(
         "failover-check OK: one member killed per group served {total} requests with zero \
          drops, promotion restored LEARN (v1 -> v{v_final}), skew 0 over the surviving fleet"
+    );
+    Ok(())
+}
+
+/// Headless live-resharding check — the elastic N→M acceptance property,
+/// across real OS processes:
+///
+/// 1. the trained model is split N ways and served by N shard processes
+///    with the scatter-gather router in front, plus an unsharded
+///    reference process for bitwise comparison;
+/// 2. **under concurrent SCORE load**, the fleet is regrown to M = N+1:
+///    a serve-side `RESHARD M` publishes an atomic M-way shard-set
+///    version, M fresh processes come up on the new slices, and one
+///    router `RESHARD` verb flips the fan-out map — every routed reply
+///    before, during, and after the flip must be byte-identical to the
+///    reference's, with zero drops;
+/// 3. the old fleet is retired only after the flip (kill + `RELOAD`
+///    re-slice both demonstrated), and the probes stay bitwise;
+/// 4. both journals carry the reshard: `via=publish` on the serving
+///    node, `via=flip` on the router.
+fn cmd_reshard_check(args: &Args) -> crate::error::Result<()> {
+    use crate::coordinator::{multiline_request, text_request, Router, RouterConfig};
+    use crate::error::Error;
+    use crate::model::{split_artifact, ModelStore};
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::time::{Duration, Instant};
+
+    let dir = model_dir_arg(args, &args.str_or("dataset", "bibtex"));
+    let old_shards: usize = args.parse_or("shards", 3usize);
+    let new_shards = old_shards + 1;
+    let load_threads: usize = args.parse_or("clients", 4usize);
+    let per_thread: usize = args.parse_or("requests", 40usize);
+    let source = ModelStore::open(&dir)?;
+    let Some((src_version, artifact)) = source.load_latest()? else {
+        return Err(Error::Invalid(format!(
+            "no model versions in {} — run `fastpi train` first",
+            dir.display()
+        )));
+    };
+    drop(source);
+    let (_, n, l) = artifact.shape();
+
+    // scratch stores: unsharded reference plus one shard store the whole
+    // fleet shares (the serve-side RESHARD publishes v2 into it)
+    let base = std::env::temp_dir().join(format!("fastpi_reshard_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&base);
+    let ref_dir = base.join("ref");
+    let shard_dir = base.join("shards");
+    let mut fleet = Fleet::new()?;
+    fleet.scratch.push(base.clone());
+    assert_eq!(ModelStore::open(&ref_dir)?.publish(&artifact)?, 1);
+    let set = split_artifact(&artifact, old_shards)?;
+    assert_eq!(ModelStore::open(&shard_dir)?.publish_shard_set(&set)?, 1);
+    println!(
+        "split v{src_version} ({l} labels, rank {}) into {old_shards} shards under {}",
+        artifact.rank(),
+        base.display()
+    );
+
+    // spawn order (== Fleet child indices): reference, then the old fleet
+    let reference = fleet.spawn_server(&[
+        "serve".into(),
+        "--model-dir".into(),
+        ref_dir.display().to_string(),
+        "--learn-batch".into(),
+        "1".into(),
+    ])?;
+    println!("reference (unsharded) on {reference}");
+    let mut old_addrs = Vec::new();
+    for k in 0..old_shards {
+        let addr = fleet.spawn_server(&[
+            "serve".into(),
+            "--model-dir".into(),
+            shard_dir.display().to_string(),
+            "--shard".into(),
+            format!("{k}/{old_shards}"),
+            "--learn-batch".into(),
+            "1".into(),
+        ])?;
+        println!("shard {k}/{old_shards} on {addr}");
+        old_addrs.push(addr);
+    }
+    let old_child = |k: usize| 1 + k;
+
+    let groups: Vec<Vec<std::net::SocketAddr>> =
+        old_addrs.iter().map(|&a| vec![a]).collect();
+    let cfg = RouterConfig { upstream_timeout: Duration::from_secs(5), ..Default::default() };
+    let router = Router::start_sharded(groups, cfg).map_err(Error::Io)?;
+
+    let req = |addr, line: &str| text_request(addr, line).map_err(Error::Io);
+
+    // expected replies pinned off the unsharded reference; `reassemble`
+    // is bitwise, so they hold across the whole reshard
+    let probes = [
+        format!("SCORE 5 0:1.0,{}:0.5", n.saturating_sub(1)),
+        "SCORE 1 0:1.0".to_string(),
+        format!("SCORE {l} 1:0.25,2:-1.0"),
+    ];
+    let mut want = Vec::new();
+    for probe in &probes {
+        let w = req(reference, probe)?;
+        if !w.starts_with("OK ") {
+            return Err(Error::Invalid(format!("reference SCORE failed: {w}")));
+        }
+        want.push(w);
+    }
+
+    // concurrent load through the router; mid-load, grow the fleet to
+    // M = N+1 and flip the fan-out map — not one reply may drop or differ
+    let progress = AtomicUsize::new(0);
+    let router_addr = router.addr;
+    let total = load_threads * per_thread;
+    let mut new_addrs: Vec<std::net::SocketAddr> = Vec::new();
+    std::thread::scope(|s| -> crate::error::Result<()> {
+        let mut handles = Vec::new();
+        for t in 0..load_threads {
+            let probes = &probes;
+            let want = &want;
+            let progress = &progress;
+            handles.push(s.spawn(move || -> Result<usize, String> {
+                let mut served = 0usize;
+                for i in 0..per_thread {
+                    let pi = (t + i) % probes.len();
+                    let got = text_request(router_addr, &probes[pi])
+                        .map_err(|e| format!("request io: {e}"))?;
+                    if got != want[pi] {
+                        return Err(format!(
+                            "reply diverged across the reshard on `{}`:\n  got:  {got}\n  want: {}",
+                            probes[pi], want[pi]
+                        ));
+                    }
+                    served += 1;
+                    progress.fetch_add(1, Ordering::Relaxed);
+                }
+                Ok(served)
+            }));
+        }
+        // let the old fleet serve for a moment, then regrow it live
+        let grow_after = total / 4;
+        let deadline = Instant::now() + Duration::from_secs(120);
+        while progress.load(Ordering::Relaxed) < grow_after {
+            if Instant::now() > deadline {
+                return Err(Error::Invalid("load never reached the reshard point".into()));
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        // (a) serve-side: publish the M-way shard-set version atomically
+        let reply = text_request(old_addrs[0], &format!("RESHARD {new_shards}"))
+            .map_err(Error::Io)?;
+        if reply != format!("OK version=2 shards={new_shards}") {
+            return Err(Error::Invalid(format!("serve-side RESHARD: {reply}")));
+        }
+        // (b) bring up the new fleet on the fresh slices
+        for k in 0..new_shards {
+            let addr = fleet.spawn_server(&[
+                "serve".into(),
+                "--model-dir".into(),
+                shard_dir.display().to_string(),
+                "--shard".into(),
+                format!("{k}/{new_shards}"),
+                "--learn-batch".into(),
+                "1".into(),
+            ])?;
+            new_addrs.push(addr);
+        }
+        // (c) one verb flips the router onto it
+        let spec: Vec<String> = new_addrs.iter().map(|a| a.to_string()).collect();
+        let flip = text_request(router_addr, &format!("RESHARD {}", spec.join(",")))
+            .map_err(Error::Io)?;
+        if flip != format!("OK shards={new_shards}") {
+            return Err(Error::Invalid(format!("router RESHARD: {flip}")));
+        }
+        println!(
+            "  flipped {old_shards} -> {new_shards} shards after {} requests",
+            progress.load(Ordering::Relaxed)
+        );
+        let mut served_total = 0usize;
+        for h in handles {
+            match h.join().expect("load thread panicked") {
+                Ok(srv) => served_total += srv,
+                Err(e) => return Err(Error::Invalid(e)),
+            }
+        }
+        if served_total != total {
+            return Err(Error::Invalid(format!(
+                "dropped requests across the reshard: served {served_total} of {total}"
+            )));
+        }
+        Ok(())
+    })?;
+    println!("  {total} routed SCOREs all byte-identical to the reference across the flip");
+
+    // the new fleet is serving v2 slices, and the router agrees
+    for (k, &addr) in new_addrs.iter().enumerate() {
+        let v = req(addr, "VERSION")?;
+        if !v.starts_with("VERSION id=2 ") || !v.ends_with(&format!("shard={k}/{new_shards}")) {
+            return Err(Error::Invalid(format!("new shard {k}: {v}")));
+        }
+    }
+    let stats = req(router.addr, "STATS")?;
+    if !stats.contains(&format!(" shards={new_shards}")) || !stats.contains(" skew=0") {
+        return Err(Error::Invalid(format!("router should see the new fleet: {stats}")));
+    }
+
+    // both journals carry the reshard
+    let serve_events = multiline_request(old_addrs[0], "EVENTS").map_err(Error::Io)?;
+    if !serve_events.contains(&format!("kind=reshard version=2 shards={new_shards} via=publish")) {
+        return Err(Error::Invalid(format!("serve journal missing the publish: {serve_events}")));
+    }
+    let router_events = multiline_request(router.addr, "EVENTS").map_err(Error::Io)?;
+    if !router_events
+        .contains(&format!("kind=reshard shards={new_shards} members={new_shards} via=flip"))
+    {
+        return Err(Error::Invalid(format!("router journal missing the flip: {router_events}")));
+    }
+
+    // retire the old fleet: one member re-slices in place via RELOAD
+    // (safe now — it is out of the fan-out map), the rest are killed
+    let reload = req(old_addrs[1], &format!("RELOAD 1/{new_shards}"))?;
+    if reload != format!("OK version=2 shard=1/{new_shards}") {
+        return Err(Error::Invalid(format!("post-flip RELOAD re-slice: {reload}")));
+    }
+    for k in 0..old_shards {
+        if k != 1 {
+            fleet.kill(old_child(k));
+        }
+    }
+
+    // scoring still byte-identical off the new fleet alone
+    for (probe, w) in probes.iter().zip(&want) {
+        let got = req(router.addr, probe)?;
+        if got != *w {
+            return Err(Error::Invalid(format!("post-retirement divergence on `{probe}`")));
+        }
+    }
+    let errors = router.stats.errors.load(std::sync::atomic::Ordering::Relaxed);
+    if errors != 0 {
+        return Err(Error::Invalid(format!("router reported {errors} errors")));
+    }
+    router.shutdown();
+    println!(
+        "reshard-check OK: live {old_shards} -> {new_shards} reshard under {total} requests \
+         with zero drops, old fleet retired after the flip"
     );
     Ok(())
 }

@@ -109,11 +109,37 @@
 //! 0 ⇒ the shard set is complete and in lockstep — the precondition for
 //! merged replies equalling an unsharded node's.
 //!
+//! ## Live resharding
+//!
+//! The fleet shape is a swappable runtime property, not a boot-time
+//! constant: groups, health circuits, and per-member latency histograms
+//! live together in one immutable [`FleetMap`] bundle behind a mutex'd
+//! `Arc`. Every fan-out round, probe, and verb loads the current map
+//! ONCE and works off that snapshot, so `RESHARD <groups>` (sharded
+//! mode only; same token syntax as `fastpi route --replicas` sharded
+//! mode — groups `,`-separated, members of a group `+`-joined) flips
+//! the fleet epoch-style: requests in flight finish on the old map,
+//! the next round fans out over the new one, and no request ever sees
+//! half a flip. Before the swap every member of the NEW fleet is
+//! probed — reachable, reporting `shard=<g>/<N>` for its group (the
+//! server's `VERSION` line carries it; an unsharded node says `0/1`
+//! and is refused), and the whole fleet in version lockstep — so a
+//! refused `RESHARD` leaves the old map serving untouched. The flip is
+//! journaled as `kind=reshard … via=flip`; health circuits restart
+//! closed on the new map (the probes just proved every member live),
+//! and member-indexed histogram series continue wherever flat indices
+//! overlap. The intended N→M dance: publish the M-way shard set on the
+//! store ([`super::serve`]'s `RESHARD <m>` verb), start M servers on
+//! the new slices, flip the router, then retire or re-slice
+//! (`RELOAD <k>/<m>`) the old fleet at leisure — it is out of the map
+//! and harmless.
+//!
 //! Router verbs: `SCORE` (both modes), `MODEL <name> SCORE` (replicated
 //! mode only — see the multi-model section above), `LEARN` (sharded mode
 //! only — in replicated mode it belongs on the primary and a replica
-//! would refuse it anyway), `PING`, `STATS`, `METRICS`, `EVENTS
-//! [<max>]`, `QUIT`.
+//! would refuse it anyway), `RESHARD <groups>` (sharded mode only —
+//! see above; replies `OK shards=<n>`), `PING`, `STATS`, `METRICS`,
+//! `EVENTS [<max>]`, `QUIT`.
 //!
 //! `METRICS` answers `OK lines=<n>` followed by `n` Prometheus-style
 //! lines: the fleet view. The router fetches every member's own METRICS
@@ -213,15 +239,15 @@ pub struct RouterStats {
 
 /// Observation-only router telemetry (see `rust/src/obs/README.md`).
 ///
-/// The per-member upstream histograms are pre-built at construction, one
-/// per flat member index in `probe_fleet` order, so the fan-out hot path
-/// indexes a `Vec` instead of taking the registry lock. Everything here
-/// is a sink: nothing reads it back into routing decisions.
+/// The registry and journal outlive fleet flips; the member-indexed
+/// upstream histograms live in [`FleetMap`] (their count is a property
+/// of the fleet shape), pre-built per map from this registry so the
+/// fan-out hot path indexes a `Vec` instead of taking the registry
+/// lock. Everything here is a sink: nothing reads it back into routing
+/// decisions.
 pub struct RouterObs {
     registry: obs::Registry,
     journal: obs::Journal,
-    /// `fastpi_upstream_ns{member="i"}`, indexed by flat member index
-    upstream: Vec<Arc<obs::Histogram>>,
     /// `fastpi_retries_total` — request lines re-sent to siblings
     retries: Arc<obs::Counter>,
     /// `fastpi_circuit_open_total` / `fastpi_circuit_close_total`
@@ -232,18 +258,13 @@ pub struct RouterObs {
 }
 
 impl RouterObs {
-    fn new(groups: &[Vec<SocketAddr>]) -> RouterObs {
+    fn new() -> RouterObs {
         let registry = obs::Registry::new();
-        let members: usize = groups.iter().map(|g| g.len()).sum();
-        let upstream = (0..members)
-            .map(|i| registry.hist(&format!("fastpi_upstream_ns{{member=\"{i}\"}}")))
-            .collect();
         RouterObs {
             retries: registry.counter("fastpi_retries_total"),
             circuit_opened: registry.counter("fastpi_circuit_open_total"),
             circuit_closed: registry.counter("fastpi_circuit_close_total"),
             journal_dropped: registry.gauge("fastpi_journal_dropped_total"),
-            upstream,
             journal: obs::Journal::new(JOURNAL_CAP),
             registry,
         }
@@ -381,6 +402,56 @@ impl HealthTable {
     }
 }
 
+/// One immutable fleet shape: the target groups plus everything whose
+/// size is derived from them — the health circuits and the
+/// member-indexed upstream histograms. The router holds the CURRENT map
+/// behind [`SharedMap`]; fan-out rounds, probes, and verb handlers each
+/// load it exactly once and work off that snapshot, which is what makes
+/// a `RESHARD` flip atomic: in-flight rounds finish on the map they
+/// loaded, the next round sees the new one, and nothing ever mixes the
+/// two (a mixed map would merge mismatched label slices — silently
+/// wrong answers, not an error).
+struct FleetMap {
+    /// replicated = one single-member group per replica; sharded =
+    /// group `k` holds the interchangeable servers of shard `k`
+    groups: Vec<Vec<SocketAddr>>,
+    health: HealthTable,
+    /// `fastpi_upstream_ns{member="i"}` by flat member index; empty when
+    /// obs is off. Series come from the shared registry by name, so
+    /// after a flip the indices that overlap the old shape continue the
+    /// same series — member identity is positional, like the circuits.
+    upstream: Vec<Arc<obs::Histogram>>,
+}
+
+impl FleetMap {
+    fn new(groups: Vec<Vec<SocketAddr>>, cfg: &RouterConfig, obs: Option<&RouterObs>) -> FleetMap {
+        let health = HealthTable::new(&groups, cfg.fail_threshold, cfg.health_cooldown);
+        let members: usize = groups.iter().map(|g| g.len()).sum();
+        let upstream = obs
+            .map(|o| {
+                (0..members)
+                    .map(|i| o.registry.hist(&format!("fastpi_upstream_ns{{member=\"{i}\"}}")))
+                    .collect()
+            })
+            .unwrap_or_default();
+        FleetMap { groups, health, upstream }
+    }
+
+    fn members(&self) -> usize {
+        self.groups.iter().map(|g| g.len()).sum()
+    }
+}
+
+/// The router's current fleet map. The mutex guards only the pointer
+/// swap — readers clone the `Arc` and drop the lock before any I/O.
+type SharedMap = Arc<Mutex<Arc<FleetMap>>>;
+
+/// Snapshot the current fleet map (poison-recovering: a panicked flipper
+/// leaves a fully valid old or new map behind the lock).
+fn load_map(map: &SharedMap) -> Arc<FleetMap> {
+    map.lock().unwrap_or_else(|e| e.into_inner()).clone()
+}
+
 /// `None` = the upstream replica failed; the client gets `ERR upstream`.
 type ReplySender = std::sync::mpsc::Sender<Option<String>>;
 
@@ -493,10 +564,8 @@ pub enum RouterMode {
 pub struct Router {
     pub addr: SocketAddr,
     pub stats: Arc<RouterStats>,
-    /// target groups: replicated = one single-member group per replica;
-    /// sharded = group `k` holds the interchangeable servers of shard `k`
-    groups: Arc<Vec<Vec<SocketAddr>>>,
-    health: Arc<HealthTable>,
+    /// the current fleet shape; swapped atomically by `RESHARD`
+    map: SharedMap,
     mode: RouterMode,
     upstream_timeout: Duration,
     /// telemetry sinks; `None` when `RouterConfig::obs` is off
@@ -539,31 +608,30 @@ impl Router {
         listener.set_nonblocking(true)?;
         let stop = Arc::new(AtomicBool::new(false));
         let stats = Arc::new(RouterStats::default());
-        let groups = Arc::new(groups);
-        let health = Arc::new(HealthTable::new(&groups, cfg.fail_threshold, cfg.health_cooldown));
         let queue = Arc::new(Queue::new(cfg.queue_capacity));
-        let obs = if cfg.obs { Some(Arc::new(RouterObs::new(&groups))) } else { None };
+        let obs = if cfg.obs { Some(Arc::new(RouterObs::new())) } else { None };
         if let (Some(o), RouterMode::Sharded) = (&obs, mode) {
             o.journal.record(EventKind::Reshard, format!("shards={}", groups.len()));
         }
+        let map: SharedMap =
+            Arc::new(Mutex::new(Arc::new(FleetMap::new(groups, &cfg, obs.as_deref()))));
+        let cfg = Arc::new(cfg);
 
         let b_queue = queue.clone();
         let b_stop = stop.clone();
         let b_stats = stats.clone();
-        let b_groups = groups.clone();
-        let b_health = health.clone();
+        let b_map = map.clone();
         let b_cfg = cfg.clone();
         let b_obs = obs.clone();
         let batch_handle = std::thread::Builder::new().name("route-batcher".into()).spawn(
-            move || fanout_loop(b_groups, b_health, mode, b_queue, b_stop, b_stats, b_cfg, b_obs),
+            move || fanout_loop(b_map, mode, b_queue, b_stop, b_stats, b_cfg, b_obs),
         )?;
 
         let a_stop = stop.clone();
         let a_stats = stats.clone();
         let a_queue = queue.clone();
-        let a_groups = groups.clone();
-        let a_health = health.clone();
-        let a_timeout = cfg.upstream_timeout;
+        let a_map = map.clone();
+        let a_cfg = cfg.clone();
         let a_obs = obs.clone();
         let accept_handle = std::thread::Builder::new().name("route-accept".into()).spawn(
             move || {
@@ -574,12 +642,11 @@ impl Router {
                             let q = a_queue.clone();
                             let st = a_stats.clone();
                             let stop2 = a_stop.clone();
-                            let gs = a_groups.clone();
-                            let hl = a_health.clone();
+                            let mp = a_map.clone();
+                            let cf = a_cfg.clone();
                             let ob = a_obs.clone();
                             conns.push(std::thread::spawn(move || {
-                                let _ =
-                                    handle_conn(stream, q, st, stop2, gs, hl, mode, a_timeout, ob);
+                                let _ = handle_conn(stream, q, st, stop2, mp, mode, cf, ob);
                             }));
                             // prune finished handlers (same unbounded-handle
                             // hazard as the scoring server's accept loop)
@@ -600,8 +667,7 @@ impl Router {
         Ok(Router {
             addr,
             stats,
-            groups,
-            health,
+            map,
             mode,
             upstream_timeout: cfg.upstream_timeout,
             obs,
@@ -625,7 +691,7 @@ impl Router {
     /// member that stops answering probes is also skipped by fan-out.
     pub fn replica_versions(&self) -> Vec<Option<u64>> {
         let t = probe_timeout(self.upstream_timeout);
-        probe_fleet(&self.groups, &self.health, t, self.obs.as_deref())
+        probe_fleet(&load_map(&self.map), t, self.obs.as_deref())
             .into_iter()
             .map(|m| m.and_then(|m| m.version))
             .collect()
@@ -642,7 +708,7 @@ impl Router {
     /// Members whose failure circuit is currently open (skipped by
     /// fan-out until their cooldown expires) — `STATS unhealthy=`.
     pub fn unhealthy_members(&self) -> usize {
-        self.health.unhealthy()
+        load_map(&self.map).health.unhealthy()
     }
 
     /// Stop the router and join its threads.
@@ -670,6 +736,10 @@ fn probe_timeout(upstream: Duration) -> Duration {
 struct MemberStatus {
     /// parsed `VERSION id=` (None on an unparseable reply)
     version: Option<u64>,
+    /// parsed `VERSION … shard=k/n` — the slice this member serves
+    /// (`(0, 1)` = the full model). `RESHARD` checks it against the
+    /// member's intended group before flipping the map.
+    shard: Option<(u64, u64)>,
     /// the member's own `STATS served=` counter
     served: u64,
     /// the member's own `STATS learned=` counter
@@ -704,8 +774,13 @@ fn probe_member(addr: SocketAddr, timeout: Duration) -> Option<MemberStatus> {
     let field = |line: &str, key: &str| -> Option<u64> {
         line.split_whitespace().find_map(|tok| tok.strip_prefix(key)?.parse().ok())
     };
+    let shard = version_line.split_whitespace().find_map(|tok| {
+        let (k, n) = tok.strip_prefix("shard=")?.split_once('/')?;
+        Some((k.parse().ok()?, n.parse().ok()?))
+    });
     Some(MemberStatus {
         version: field(version_line.trim_end(), "id="),
+        shard,
         served: field(stats_line.trim_end(), "served=").unwrap_or(0),
         learned: field(stats_line.trim_end(), "learned=").unwrap_or(0),
     })
@@ -716,18 +791,17 @@ fn probe_member(addr: SocketAddr, timeout: Duration) -> Option<MemberStatus> {
 /// traffic while a first-member-only probe still reported skew=0), feeding
 /// each outcome into the member's health circuit.
 fn probe_fleet(
-    groups: &[Vec<SocketAddr>],
-    health: &HealthTable,
+    map: &FleetMap,
     timeout: Duration,
     obs: Option<&RouterObs>,
 ) -> Vec<Option<MemberStatus>> {
-    groups
+    map.groups
         .iter()
         .flat_map(|g| g.iter().copied())
         .enumerate()
         .map(|(idx, addr)| {
             let status = probe_member(addr, timeout);
-            let tr = health.record(idx, status.is_some());
+            let tr = map.health.record(idx, status.is_some());
             journal_transition(obs, idx, tr);
             status
         })
@@ -735,15 +809,16 @@ fn probe_fleet(
 }
 
 /// Drain batches off the queue and fan each one out across the groups.
+/// Each round snapshots the current fleet map ONCE — a concurrent
+/// `RESHARD` flip lands between rounds, never inside one.
 #[allow(clippy::too_many_arguments)]
 fn fanout_loop(
-    groups: Arc<Vec<Vec<SocketAddr>>>,
-    health: Arc<HealthTable>,
+    map: SharedMap,
     mode: RouterMode,
     queue: Arc<Queue>,
     stop: Arc<AtomicBool>,
     stats: Arc<RouterStats>,
-    cfg: RouterConfig,
+    cfg: Arc<RouterConfig>,
     obs: Option<Arc<RouterObs>>,
 ) {
     let mut rotation = 0usize; // rotates so batch-of-1 traffic still spreads
@@ -780,12 +855,13 @@ fn fanout_loop(
             continue;
         }
         let o = obs.as_deref();
+        let m = load_map(&map);
         match mode {
             RouterMode::Replicated => {
-                fanout_replicated(&groups, &health, rotation, batch, &stats, &cfg, o);
+                fanout_replicated(&m, rotation, batch, &stats, &cfg, o);
             }
             RouterMode::Sharded => {
-                fanout_sharded(&groups, &health, rotation, batch, &stats, &cfg, o);
+                fanout_sharded(&m, rotation, batch, &stats, &cfg, o);
             }
         }
         rotation = rotation.wrapping_add(1);
@@ -816,17 +892,19 @@ fn forward_and_record(
     addr: SocketAddr,
     member_idx: usize,
     lines: &[String],
-    health: &HealthTable,
+    map: &FleetMap,
     timeout: Duration,
     obs: Option<&RouterObs>,
 ) -> Vec<Option<String>> {
     let t = obs.map(|_| Instant::now());
     let replies = forward_group(addr, lines, timeout);
     if !lines.is_empty() {
-        if let (Some(o), Some(t)) = (obs, t) {
-            o.upstream[member_idx].record_duration(t.elapsed());
+        if let Some(t) = t {
+            if let Some(h) = map.upstream.get(member_idx) {
+                h.record_duration(t.elapsed());
+            }
         }
-        let tr = health.record(member_idx, replies.iter().any(Option::is_some));
+        let tr = map.health.record(member_idx, replies.iter().any(Option::is_some));
         journal_transition(obs, member_idx, tr);
     }
     replies
@@ -836,14 +914,14 @@ fn forward_and_record(
 /// circuit is not open, then retry each failed slice once on a different
 /// available replica before its clients see `ERR upstream`.
 fn fanout_replicated(
-    groups: &[Vec<SocketAddr>],
-    health: &HealthTable,
+    map: &FleetMap,
     rotation: usize,
     batch: Vec<Pending>,
     stats: &RouterStats,
     cfg: &RouterConfig,
     obs: Option<&RouterObs>,
 ) {
+    let (groups, health) = (&map.groups, &map.health);
     // replicated groups are single-member, so group index = member index;
     // spread this round over the available replicas only (everyone when
     // none are available — the attempts double as half-open re-probes)
@@ -867,7 +945,7 @@ fn fanout_replicated(
     let mut replies: Vec<Vec<Option<String>>> =
         crate::runtime::pool::runtime().pool().par_map(&targets, |(g, ls)| {
             let idx = health.idx(*g, 0);
-            forward_and_record(groups[*g][0], idx, ls, health, cfg.upstream_timeout, obs)
+            forward_and_record(groups[*g][0], idx, ls, map, cfg.upstream_timeout, obs)
         });
 
     // retry round: a slice whose replica failed goes ONCE to a different
@@ -898,7 +976,7 @@ fn fanout_replicated(
                     groups[*g2][0],
                     health.idx(*g2, 0),
                     ls,
-                    health,
+                    map,
                     cfg.upstream_timeout,
                     obs,
                 )
@@ -922,14 +1000,14 @@ fn fanout_replicated(
 /// an available in-group sibling), then stitch each request's per-shard
 /// replies together.
 fn fanout_sharded(
-    groups: &[Vec<SocketAddr>],
-    health: &HealthTable,
+    map: &FleetMap,
     rotation: usize,
     batch: Vec<Pending>,
     stats: &RouterStats,
     cfg: &RouterConfig,
     obs: Option<&RouterObs>,
 ) {
+    let (groups, health) = (&map.groups, &map.health);
     let all_lines: Vec<String> = batch.iter().map(|p| p.line.clone()).collect();
     let targets: Vec<(usize, usize, SocketAddr)> = groups
         .iter()
@@ -945,7 +1023,7 @@ fn fanout_sharded(
     let per_shard: Vec<Vec<Option<String>>> =
         crate::runtime::pool::runtime().pool().par_map(&targets, |&(g, m, addr)| {
             let t = cfg.upstream_timeout;
-            let replies = forward_and_record(addr, health.idx(g, m), &all_lines, health, t, obs);
+            let replies = forward_and_record(addr, health.idx(g, m), &all_lines, map, t, obs);
             if all_lines.is_empty() || replies.iter().any(Option::is_some) {
                 return replies;
             }
@@ -963,7 +1041,7 @@ fn fanout_sharded(
             if let Some(o) = obs {
                 o.retries.add(all_lines.len() as u64);
             }
-            forward_and_record(grp[m2], health.idx(g, m2), &all_lines, health, t, obs)
+            forward_and_record(grp[m2], health.idx(g, m2), &all_lines, map, t, obs)
         });
 
     stats.batches.fetch_add(1, Ordering::Relaxed);
@@ -1073,6 +1151,75 @@ fn merge_score_replies(line: &str, shard_replies: &[&str]) -> Option<String> {
     Some(format!("OK {}", body.join(",")))
 }
 
+/// Parse a `RESHARD` fleet spec — the same token syntax `fastpi route
+/// --replicas` uses in sharded mode: groups `,`-separated, the members
+/// of a group `+`-joined (e.g. `a:1+a:2,b:1,c:1` = 3 shard groups, the
+/// first with two interchangeable members). One token only: whitespace,
+/// empty groups, empty members, and unparseable addresses all refuse.
+fn parse_group_spec(spec: &str) -> Option<Vec<Vec<SocketAddr>>> {
+    if spec.is_empty() || spec.contains(char::is_whitespace) {
+        return None;
+    }
+    spec.split(',')
+        .map(|g| {
+            g.split('+')
+                .map(|a| a.parse::<SocketAddr>().ok())
+                .collect::<Option<Vec<SocketAddr>>>()
+        })
+        .collect()
+}
+
+/// `RESHARD <groups>` — flip the fleet map to a new shard-group list,
+/// atomically and only once the new fleet is PROVEN whole: every member
+/// reachable, every member of group `g` reporting `shard=g/N` on its
+/// `VERSION` line (an old-shape or unsharded server can never sneak into
+/// the map and corrupt the merged label space), and the whole fleet in
+/// version lockstep (mixed versions would merge slices of different
+/// models). Any refusal leaves the old map serving untouched; rounds in
+/// flight at the instant of a successful flip finish on the map they
+/// already loaded.
+fn handle_reshard(
+    spec: &str,
+    map: &SharedMap,
+    cfg: &RouterConfig,
+    obs: Option<&RouterObs>,
+) -> String {
+    let Some(groups) = parse_group_spec(spec) else {
+        return "ERR bad request".into();
+    };
+    let n = groups.len();
+    if n < 2 {
+        return "ERR reshard: need at least 2 shard groups".into();
+    }
+    let t = probe_timeout(cfg.upstream_timeout);
+    let mut ids: Vec<u64> = Vec::new();
+    for (g, grp) in groups.iter().enumerate() {
+        for &addr in grp {
+            let Some(st) = probe_member(addr, t) else {
+                return format!("ERR reshard: member {addr} unreachable");
+            };
+            let Some(id) = st.version else {
+                return format!("ERR reshard: member {addr} reports no version");
+            };
+            if st.shard != Some((g as u64, n as u64)) {
+                return format!("ERR reshard: member {addr} is not serving shard {g}/{n}");
+            }
+            ids.push(id);
+        }
+    }
+    if ids.iter().min() != ids.iter().max() {
+        return "ERR reshard: new fleet is not in version lockstep".into();
+    }
+    let members: usize = groups.iter().map(|g| g.len()).sum();
+    let next = Arc::new(FleetMap::new(groups, cfg, obs));
+    // the flip: one pointer swap under the lock, nothing else
+    *map.lock().unwrap_or_else(|e| e.into_inner()) = next;
+    if let Some(o) = obs {
+        o.journal.record(EventKind::Reshard, format!("shards={n} members={members} via=flip"));
+    }
+    format!("OK shards={n}")
+}
+
 /// Forward one group of request lines over a single pipelined connection:
 /// write them all, then read the replies back in order. Any failure fails
 /// the whole group (`None` per request — the replica's per-connection
@@ -1117,12 +1264,12 @@ fn handle_conn(
     queue: Arc<Queue>,
     stats: Arc<RouterStats>,
     stop: Arc<AtomicBool>,
-    groups: Arc<Vec<Vec<SocketAddr>>>,
-    health: Arc<HealthTable>,
+    map: SharedMap,
     mode: RouterMode,
-    upstream_timeout: Duration,
+    cfg: Arc<RouterConfig>,
     obs: Option<Arc<RouterObs>>,
 ) -> std::io::Result<()> {
+    let upstream_timeout = cfg.upstream_timeout;
     stream.set_read_timeout(Some(Duration::from_millis(200)))?;
     // a client that stops reading must error this thread out, not wedge it
     stream.set_write_timeout(Some(Duration::from_secs(30)))?;
@@ -1158,8 +1305,9 @@ fn handle_conn(
             continue;
         }
         if msg == "STATS" {
+            let m = load_map(&map);
             let t = probe_timeout(upstream_timeout);
-            let probes = probe_fleet(&groups, &health, t, obs.as_deref());
+            let probes = probe_fleet(&m, t, obs.as_deref());
             let known: Vec<u64> =
                 probes.iter().filter_map(|m| m.as_ref().and_then(|m| m.version)).collect();
             let skew = match (known.iter().min(), known.iter().max()) {
@@ -1179,13 +1327,13 @@ fn handle_conn(
                 })
                 .collect();
             let sharded_suffix = match mode {
-                RouterMode::Sharded => format!(" shards={}", groups.len()),
+                RouterMode::Sharded => format!(" shards={}", m.groups.len()),
                 RouterMode::Replicated => String::new(),
             };
             // replicas= counts MEMBERS, so it always equals the length of
             // the versions= list (in replicated mode groups are
             // single-member, so it is also the group count)
-            let members: usize = groups.iter().map(|g| g.len()).sum();
+            let members = m.members();
             writeln!(
                 writer,
                 "STATS routed={} errors={} rejected={} retries={} batches={} replicas={members} unhealthy={} versions={} skew={skew} fleet_served={fleet_served} fleet_learned={fleet_learned}{sharded_suffix}",
@@ -1194,7 +1342,7 @@ fn handle_conn(
                 stats.rejected.load(Ordering::Relaxed),
                 stats.retries.load(Ordering::Relaxed),
                 stats.batches.load(Ordering::Relaxed),
-                health.unhealthy(),
+                m.health.unhealthy(),
                 versions.join(","),
             )?;
             writer.flush()?;
@@ -1209,8 +1357,9 @@ fn handle_conn(
                     // skipped — its absence is visible through the
                     // member-labelled upstream histograms, not an error
                     let t = probe_timeout(upstream_timeout);
+                    let m = load_map(&map);
                     let mut bodies: Vec<String> = Vec::new();
-                    for addr in groups.iter().flat_map(|g| g.iter().copied()) {
+                    for addr in m.groups.iter().flat_map(|g| g.iter().copied()) {
                         if let Ok(body) = super::serve::multiline_request_timeout(addr, "METRICS", t)
                         {
                             bodies.push(body);
@@ -1254,6 +1403,19 @@ fn handle_conn(
                 }
                 None => writeln!(writer, "ERR observability disabled")?,
             }
+            writer.flush()?;
+            continue;
+        }
+        if let Some(rest) = msg.strip_prefix("RESHARD ") {
+            // sharded mode only: the verb exists to change the shard
+            // count, and replicated fleets have no label slices to prove
+            let reply = match mode {
+                RouterMode::Sharded => {
+                    handle_reshard(rest.trim(), &map, &cfg, obs.as_deref())
+                }
+                RouterMode::Replicated => "ERR bad request".into(),
+            };
+            writeln!(writer, "{reply}")?;
             writer.flush()?;
             continue;
         }
@@ -1810,5 +1972,203 @@ mod tests {
             s.shutdown();
         }
         solo.shutdown();
+    }
+
+    #[test]
+    fn group_spec_parsing() {
+        let g = parse_group_spec("127.0.0.1:9001,127.0.0.1:9002").unwrap();
+        assert_eq!(g.len(), 2);
+        assert_eq!(g[0].len(), 1);
+        let g = parse_group_spec("127.0.0.1:9001+127.0.0.1:9002,127.0.0.1:9003").unwrap();
+        assert_eq!(g[0].len(), 2);
+        assert_eq!(g[1], vec!["127.0.0.1:9003".parse::<SocketAddr>().unwrap()]);
+        for bad in [
+            "",
+            " ",
+            "127.0.0.1:9001, 127.0.0.1:9002",
+            "nope",
+            "127.0.0.1:9001,",
+            "+127.0.0.1:9001",
+            "127.0.0.1:9001++127.0.0.1:9002",
+        ] {
+            assert!(parse_group_spec(bad).is_none(), "{bad:?}");
+        }
+    }
+
+    #[test]
+    fn reshard_flips_the_fleet_atomically_under_load() {
+        use crate::model::format::testutil::sample_artifact;
+        use crate::model::split_artifact;
+        let art = sample_artifact(81, 18, 10, 12, 5);
+        let full = ScoreServer::start(
+            MultiLabelModel { z: art.z.clone() },
+            ServerConfig::default(),
+        )
+        .unwrap();
+        let mk = |set: &[crate::model::ModelArtifact], k: usize| {
+            ScoreServer::start_sharded(
+                MultiLabelModel { z: set[k].z.clone() },
+                set[k].meta.shard,
+                ServerConfig::default(),
+            )
+            .unwrap()
+        };
+        let set3 = split_artifact(&art, 3).unwrap();
+        let old: Vec<ScoreServer> = (0..3).map(|k| mk(&set3, k)).collect();
+        let router = Router::start_sharded(
+            old.iter().map(|s| vec![s.addr]).collect(),
+            RouterConfig::default(),
+        )
+        .unwrap();
+
+        let probe = "SCORE 4 0:1.0,9:-0.5,3:0.25";
+        let want = text_request(full.addr, probe).unwrap();
+        assert_eq!(text_request(router.addr, probe).unwrap(), want);
+
+        // background load across the flip: every reply must stay bitwise
+        // the unsharded server's — no drops, no mixed-map merges
+        let stop = Arc::new(AtomicBool::new(false));
+        let mismatches = Arc::new(AtomicUsize::new(0));
+        let served = Arc::new(AtomicUsize::new(0));
+        let bg = {
+            let (stop, mism, served) = (stop.clone(), mismatches.clone(), served.clone());
+            let (addr, want) = (router.addr, want.clone());
+            std::thread::spawn(move || {
+                while !stop.load(Ordering::Relaxed) {
+                    match text_request(addr, probe) {
+                        Ok(got) if got == want => {
+                            served.fetch_add(1, Ordering::Relaxed);
+                        }
+                        _ => {
+                            mism.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                }
+            })
+        };
+
+        // the N→M dance: the 4-way fleet comes up on its slices first,
+        // then one verb flips the router onto it
+        let set4 = split_artifact(&art, 4).unwrap();
+        let new: Vec<ScoreServer> = (0..4).map(|k| mk(&set4, k)).collect();
+        let spec = new.iter().map(|s| s.addr.to_string()).collect::<Vec<_>>().join(",");
+        let reply = text_request(router.addr, &format!("RESHARD {spec}")).unwrap();
+        assert_eq!(reply, "OK shards=4");
+        for _ in 0..4 {
+            assert_eq!(text_request(router.addr, probe).unwrap(), want);
+        }
+        stop.store(true, Ordering::Relaxed);
+        bg.join().unwrap();
+        assert_eq!(
+            mismatches.load(Ordering::Relaxed),
+            0,
+            "a flip must never drop or corrupt a request"
+        );
+        assert!(served.load(Ordering::Relaxed) > 0, "the background load must have run");
+        assert_eq!(router.stats.errors.load(Ordering::Relaxed), 0);
+
+        // STATS reflects the new shape: 4 groups, 4 members, lockstep
+        let stats = text_request(router.addr, "STATS").unwrap();
+        assert!(stats.contains("shards=4"), "{stats}");
+        assert!(stats.contains("replicas=4"), "{stats}");
+        assert!(stats.contains("versions=0,0,0,0"), "{stats}");
+        assert!(stats.contains("skew=0"), "{stats}");
+
+        // the flip was journaled alongside the boot-time reshard record
+        let ev = super::super::serve::multiline_request(router.addr, "EVENTS").unwrap();
+        assert!(ev.contains("kind=reshard shards=3"), "{ev}");
+        assert!(ev.contains("kind=reshard shards=4 members=4 via=flip"), "{ev}");
+
+        // the old fleet is out of the map: retiring it is invisible
+        for s in old {
+            s.shutdown();
+        }
+        for _ in 0..3 {
+            assert_eq!(text_request(router.addr, probe).unwrap(), want);
+        }
+        assert_eq!(router.stats.errors.load(Ordering::Relaxed), 0);
+
+        router.shutdown();
+        for s in new {
+            s.shutdown();
+        }
+        full.shutdown();
+    }
+
+    #[test]
+    fn reshard_refuses_bad_fleets_and_keeps_the_old_map_serving() {
+        use crate::model::format::testutil::sample_artifact;
+        use crate::model::split_artifact;
+        let art = sample_artifact(82, 14, 8, 8, 4);
+        let set = split_artifact(&art, 2).unwrap();
+        let full = ScoreServer::start(
+            MultiLabelModel { z: art.z.clone() },
+            ServerConfig::default(),
+        )
+        .unwrap();
+        let shards: Vec<ScoreServer> = set
+            .iter()
+            .map(|s| {
+                ScoreServer::start_sharded(
+                    MultiLabelModel { z: s.z.clone() },
+                    s.meta.shard,
+                    ServerConfig::default(),
+                )
+                .unwrap()
+            })
+            .collect();
+        let cfg = RouterConfig {
+            upstream_timeout: Duration::from_millis(500),
+            ..Default::default()
+        };
+        let router =
+            Router::start_sharded(shards.iter().map(|s| vec![s.addr]).collect(), cfg).unwrap();
+        let probe = "SCORE 3 0:1.0,7:-0.5";
+        let want = text_request(full.addr, probe).unwrap();
+        assert_eq!(text_request(router.addr, probe).unwrap(), want);
+
+        let dead_addr = {
+            let l = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+            l.local_addr().unwrap()
+        };
+        let (a0, a1) = (shards[0].addr, shards[1].addr);
+        // malformed specs never reach a probe
+        let trailing = format!("RESHARD {a0},");
+        for bad in ["RESHARD nonsense", "RESHARD ", "RESHARD a,b", trailing.as_str()] {
+            assert!(text_request(router.addr, bad).unwrap().starts_with("ERR"), "{bad}");
+        }
+        // a single group is not a shard fleet
+        assert_eq!(
+            text_request(router.addr, &format!("RESHARD {a0}")).unwrap(),
+            "ERR reshard: need at least 2 shard groups"
+        );
+        // an unreachable member refuses the whole flip
+        let r = text_request(router.addr, &format!("RESHARD {a0},{dead_addr}")).unwrap();
+        assert!(r.starts_with("ERR reshard:") && r.contains("unreachable"), "{r}");
+        // a live member serving the WRONG slice refuses: groups swapped
+        let r = text_request(router.addr, &format!("RESHARD {a1},{a0}")).unwrap();
+        assert!(r.contains("not serving shard 0/2"), "{r}");
+        // an unsharded server (shard=0/1) can never join an N-way map
+        let r = text_request(router.addr, &format!("RESHARD {},{a1}", full.addr)).unwrap();
+        assert!(r.contains("not serving shard"), "{r}");
+
+        // every refusal left the old map serving, bitwise intact
+        assert_eq!(text_request(router.addr, probe).unwrap(), want);
+        let stats = text_request(router.addr, "STATS").unwrap();
+        assert!(stats.contains("shards=2"), "{stats}");
+
+        // replicated mode refuses the verb outright
+        let rep = Router::start(vec![full.addr], RouterConfig::default()).unwrap();
+        assert_eq!(
+            text_request(rep.addr, &format!("RESHARD {a0},{a1}")).unwrap(),
+            "ERR bad request"
+        );
+        rep.shutdown();
+
+        router.shutdown();
+        for s in shards {
+            s.shutdown();
+        }
+        full.shutdown();
     }
 }

@@ -29,6 +29,15 @@
 //! read-only (`LEARN`/`RELOAD` answer errors) but do answer `SHIP`, so
 //! fan-out can be chained.
 //!
+//! Replication is **delta-first**: once a replica holds a base version,
+//! its sync thread asks `SHIP <have> DELTA` and the primary answers with
+//! a compact `FPID` C/Z delta whenever the succession is factor-stable
+//! (online row folds in [`crate::model::FoldMode::Project`] touch only
+//! `C`/`Z`). The applied delta must reconstruct the primary's file
+//! **bitwise** or the follower falls back to the full snapshot — as it
+//! does on a diverged base, a factor rotation, or a primary too old to
+//! know the `DELTA` token. See `crate::model::ship` for the protocol.
+//!
 //! ## Failover: `PROMOTE`
 //!
 //! When a primary dies, any follower replica can be promoted in place
@@ -75,6 +84,21 @@
 //!   `ModelStore::publish_shard`), and the router checks unanimity.
 //! * `VERSION` reports `shard=K/N`, and `SHIP <have> <k>/<n>` serves the
 //!   shard-qualified snapshot so a shard replica syncs only its slice.
+//!
+//! ## Live resharding
+//!
+//! The shard count is a runtime property, not a deploy-time constant.
+//! `RESHARD <m>` on a store-backed server reassembles the store's latest
+//! version bitwise (whether it is one full file or an N-way shard set),
+//! re-splits it M ways, and publishes the result as **one atomic
+//! shard-set version** (`ModelStore::publish_shard_set` — readers see the
+//! old set or the whole new set, never a partial label space). Existing
+//! shard servers then re-slice live with `RELOAD <k>/<m>`, and the
+//! scatter-gather router flips its group map epoch-style (its own
+//! `RESHARD` verb): the old map keeps serving until every member of the
+//! new set answers consistently, so mid-flight requests never straddle
+//! the two shapes. Both the publish and each re-slice journal
+//! `kind=reshard` events, so `EVENTS` shows a live reshard end to end.
 //!
 //! **Wire format note:** scores are printed with Rust's shortest
 //! round-trip `f64` formatting (not a fixed precision), so a router can
@@ -141,11 +165,35 @@
 //!                                          publish persists it; a RELOAD
 //!                                          before that reverts to the
 //!                                          store's latest and discards it)
+//! -> LEARN COLS <col>|<col>|...            (fold NEW feature columns; each
+//!                                           <col> is r:v,r:v,... over trained
+//!                                           row ids, `-` = all-zero column)
+//! <- OK version=... cols=... features=... drift=... resolve=...
+//!                                          (cols= columns folded, features=
+//!                                           the grown feature width; pending
+//!                                           row examples flush first so the
+//!                                           online fold replays offline
+//!                                           bitwise; `unpublished=1` as for
+//!                                           LEARN)
 //! -> VERSION         <- VERSION id=... rank=... features=... labels=... updates=... pending=... epoch=... shard=K/N
-//! -> RELOAD          <- OK version=...    (re-serve the store's latest)
+//! -> RELOAD [<k>/<n>]
+//!                    <- OK version=... [shard=<k>/<n>]
+//!                                         (re-serve the store's latest; with
+//!                                          <k>/<n>, re-slice live to that
+//!                                          member of the latest shard set)
+//! -> RESHARD <m>     <- OK version=... shards=<m>
+//!                                         (reassemble the store's latest
+//!                                          bitwise and publish it as one
+//!                                          atomic m-way shard set)
 //! -> PROMOTE         <- OK version=... epoch=...   (follower → primary; see above)
-//! -> SHIP <have> [<k>/<n>]
-//!                    <- SNAPSHOT version=... [shard=<k>/<n>] epoch=... bytes=...<raw body> | UNCHANGED version=...
+//! -> SHIP <have> [<k>/<n>] [DELTA]
+//!                    <- SNAPSHOT version=... [shard=<k>/<n>] epoch=... bytes=...<raw body>
+//!                       | DELTA version=... base=<have> [shard=<k>/<n>] epoch=... bytes=...<raw body>
+//!                       | UNCHANGED version=...
+//!                                         (DELTA only when asked for AND the
+//!                                          succession over <have> is
+//!                                          factor-stable — C/Z-only `FPID`
+//!                                          payload, see `model/ship.rs`)
 //! -> PING            <- PONG
 //! -> STATS           <- STATS served=... batches=... rejected=... shed=... deadlines=... avg_batch=... queue_depth=... swaps=... learned=... models=...
 //! -> METRICS         <- OK lines=<n>, then n Prometheus-style metric lines
@@ -183,7 +231,10 @@
 //! a server started with obs off answers both verbs with `ERR
 //! observability disabled` and reads no clocks on the request path.
 
-use crate::model::{ship, ModelStore, OnlineUpdater, ShardRange, UpdaterConfig, UpdaterObs};
+use crate::model::{
+    reassemble, ship, split_artifact, ModelStore, OnlineUpdater, ShardRange, UpdaterConfig,
+    UpdaterObs,
+};
 use crate::obs;
 use crate::obs::EventKind;
 use crate::regress::metrics::top_k_indices;
@@ -868,11 +919,16 @@ impl ScoreServer {
 
 /// Follower sync loop: one `SHIP` round trip per poll interval; a new
 /// snapshot is installed into the local store and hot-swapped into the
-/// slot. Transient failures (primary down, mid-publish, network) are
-/// retried on the next poll — a replica keeps serving its current version
-/// no matter what happens to the primary. The loop also exits when
-/// `PROMOTE` clears the role's sync flag: a promoted replica stops
-/// following its (dead) old primary and owns the lineage itself.
+/// slot. The loop syncs **delta-first** (`SHIP <have> DELTA`): a
+/// factor-stable succession ships as a compact C/Z `FPID` delta that must
+/// reconstruct the primary's file bitwise, and every delta-path failure —
+/// diverged base, factor rotation, a primary without the verb — degrades
+/// to the plain full-snapshot round trip. Transient failures (primary
+/// down, mid-publish, network) are retried on the next poll — a replica
+/// keeps serving its current version no matter what happens to the
+/// primary. The loop also exits when `PROMOTE` clears the role's sync
+/// flag: a promoted replica stops following its (dead) old primary and
+/// owns the lineage itself.
 fn replica_sync_loop(
     store: Arc<ModelStore>,
     rc: ReplicaConfig,
@@ -899,7 +955,7 @@ fn replica_sync_loop(
                 return;
             }
             let sync_hist = obs.as_ref().map(|o| &*o.sync_ns);
-            match ship::sync_shard_once_timed(&store, rc.primary, rc.shard, step, sync_hist) {
+            match ship::sync_shard_once_timed(&store, rc.primary, rc.shard, true, step, sync_hist) {
                 Ok(Some((version, artifact))) => {
                     let serving = ServingModel {
                         version,
@@ -1255,8 +1311,26 @@ fn handle_conn(
             writer.flush()?;
             continue;
         }
-        if msg == "RELOAD" {
-            writeln!(writer, "{}", handle_reload(&role.lifecycle(), slot, &stats, obs.as_deref()))?;
+        if msg == "RELOAD" || msg.starts_with("RELOAD ") {
+            // `RELOAD` re-serves the current slice; `RELOAD <k>/<n>`
+            // re-slices live to that member of the latest shard set
+            let spec = msg["RELOAD".len()..].trim();
+            let reply = if spec.is_empty() {
+                handle_reload(None, &role.lifecycle(), slot, &stats, obs.as_deref())
+            } else {
+                match ship::parse_shard_spec(spec) {
+                    Some(sel) => {
+                        handle_reload(Some(sel), &role.lifecycle(), slot, &stats, obs.as_deref())
+                    }
+                    None => "ERR bad request".into(),
+                }
+            };
+            writeln!(writer, "{reply}")?;
+            writer.flush()?;
+            continue;
+        }
+        if let Some(rest) = msg.strip_prefix("RESHARD ") {
+            writeln!(writer, "{}", handle_reshard(rest, &role.lifecycle(), obs.as_deref()))?;
             writer.flush()?;
             continue;
         }
@@ -1266,17 +1340,28 @@ fn handle_conn(
             continue;
         }
         if let Some(rest) = msg.strip_prefix("SHIP ") {
-            // `SHIP <have>` or `SHIP <have> <k>/<n>`
+            // `SHIP <have> [<k>/<n>] [DELTA]`
             let mut toks = rest.split_whitespace();
             let have = toks.next().and_then(|t| t.parse::<u64>().ok());
-            let shard_tok = toks.next();
-            let shard = shard_tok.and_then(ship::parse_shard_spec);
-            let well_formed =
-                have.is_some() && (shard_tok.is_none() || shard.is_some()) && toks.next().is_none();
+            let mut shard: ship::ShardSel = None;
+            let mut want_delta = false;
+            let mut well_formed = have.is_some();
+            for tok in toks {
+                match tok {
+                    "DELTA" if !want_delta => want_delta = true,
+                    t if shard.is_none() && !want_delta => {
+                        shard = ship::parse_shard_spec(t);
+                        if shard.is_none() {
+                            well_formed = false;
+                        }
+                    }
+                    _ => well_formed = false,
+                }
+            }
             match (well_formed, have, &role.ship_store) {
                 (true, Some(have), Some(store)) => {
                     let hist = obs.as_ref().map(|o| &*o.ship_ns);
-                    ship::serve_ship_timed(&mut writer, store, have, shard, hist)?
+                    ship::serve_ship_timed(&mut writer, store, have, shard, want_delta, hist)?
                 }
                 (true, Some(_), None) => {
                     writeln!(writer, "ERR no model store")?;
@@ -1287,6 +1372,15 @@ fn handle_conn(
                     writer.flush()?;
                 }
             }
+            continue;
+        }
+        if let Some(rest) = msg.strip_prefix("LEARN COLS ") {
+            writeln!(
+                writer,
+                "{}",
+                handle_learn_cols(rest, &role.lifecycle(), slot, &stats, obs.as_deref())
+            )?;
+            writer.flush()?;
             continue;
         }
         if let Some(rest) = msg.strip_prefix("LEARN ") {
@@ -1508,8 +1602,13 @@ fn handle_promote(
 }
 
 /// Handle RELOAD: re-serve the store's latest published version — of this
-/// node's own slice when it serves a shard.
+/// node's own slice when it serves a shard, or of an explicitly requested
+/// `<k>/<n>` slice (`reslice`), which is how a live reshard re-points an
+/// existing shard server at its member of a freshly published M-way set.
+/// A re-slice that changes the served shard shape journals `kind=reshard`
+/// next to the usual swap event.
 fn handle_reload(
+    reslice: ship::ShardSel,
     lifecycle: &Option<Arc<Lifecycle>>,
     slot: &ModelSlot,
     stats: &ServerStats,
@@ -1521,11 +1620,16 @@ fn handle_reload(
     let Some(store) = &lc.store else {
         return "ERR no model store".into();
     };
-    let shard = slot.get().shard;
-    let latest = if shard.is_full() {
-        store.load_latest()
-    } else {
-        store.load_latest_shard(shard.index, shard.count)
+    let current = slot.get().shard;
+    let sel = match reslice {
+        Some((k, n)) => Some((k, n)),
+        None if current.is_full() => None,
+        None => Some((current.index, current.count)),
+    };
+    let resliced = matches!(reslice, Some((k, n)) if (k, n) != (current.index, current.count));
+    let latest = match sel {
+        Some((k, n)) => store.load_latest_shard(k, n),
+        None => store.load_latest(),
     };
     match latest {
         Ok(Some((id, art))) => {
@@ -1542,12 +1646,77 @@ fn handle_reload(
             drop(up);
             stats.swaps.fetch_add(1, Ordering::Relaxed);
             if let Some(o) = obs {
+                if resliced {
+                    let (k, n) = sel.unwrap_or((0, 1));
+                    o.journal
+                        .record(EventKind::Reshard, format!("version={id} shard={k}/{n} via=reload"));
+                }
                 o.journal.record(EventKind::Swap, format!("version={id} via=reload"));
             }
-            format!("OK version={id}")
+            match reslice {
+                Some((k, n)) => format!("OK version={id} shard={k}/{n}"),
+                None => format!("OK version={id}"),
+            }
         }
         Ok(None) => "ERR empty store".into(),
         Err(e) => format!("ERR reload failed: {e}"),
+    }
+}
+
+/// Handle `RESHARD <m>`: reassemble the store's latest version bitwise —
+/// whether it is one full file or an N-way shard set — re-split it `m`
+/// ways, and publish the result as **one atomic shard-set version**.
+/// Readers of the store see the old set or the whole new set, never a
+/// partial label space ([`ModelStore::publish_shard_set`] reserves the id
+/// by creating every member before the MANIFEST pointer moves). The serve
+/// slot is untouched: the publishing node keeps serving its current shape
+/// until someone re-points it (`RELOAD <k>/<m>`), which is what lets the
+/// router flip the fleet epoch-style with zero dropped requests.
+fn handle_reshard(
+    rest: &str,
+    lifecycle: &Option<Arc<Lifecycle>>,
+    obs: Option<&ServerObs>,
+) -> String {
+    let Some(lc) = lifecycle else {
+        return "ERR no model store".into();
+    };
+    let Some(store) = &lc.store else {
+        return "ERR no model store".into();
+    };
+    let Ok(m) = rest.trim().parse::<usize>() else {
+        return "ERR bad request".into();
+    };
+    if m < 2 {
+        return "ERR reshard: need at least 2 shards".into();
+    }
+    let latest = match store.latest_version() {
+        Ok(Some(id)) => id,
+        Ok(None) => return "ERR empty store".into(),
+        Err(e) => return format!("ERR reshard: {e}"),
+    };
+    // the latest version is either one full file or a shard set; both
+    // roads lead to the identical full-width artifact (reassemble is
+    // pinned bitwise against split_artifact)
+    let full = match store.load(latest) {
+        Ok(art) => art,
+        Err(_) => match store.load_shard_set(latest).and_then(|set| reassemble(&set)) {
+            Ok(art) => art,
+            Err(e) => return format!("ERR reshard: {e}"),
+        },
+    };
+    let set = match split_artifact(&full, m) {
+        Ok(s) => s,
+        Err(e) => return format!("ERR reshard: {e}"),
+    };
+    match store.publish_shard_set(&set) {
+        Ok(id) => {
+            if let Some(o) = obs {
+                o.journal
+                    .record(EventKind::Reshard, format!("version={id} shards={m} via=publish"));
+            }
+            format!("OK version={id} shards={m}")
+        }
+        Err(e) => format!("ERR reshard: {e}"),
     }
 }
 
@@ -1622,6 +1791,104 @@ fn handle_learn(
         }
         Err(e) => format!("ERR {e}"),
     }
+}
+
+/// Handle one `LEARN COLS` line (already stripped of both verb tokens):
+/// fold a block of NEW feature columns into the live model via
+/// [`OnlineUpdater::apply_cols`]. Buffered row examples are flushed first,
+/// so the canonical offline replay — fold the pending rows as one block,
+/// then fold the column block — reproduces the online artifact bitwise
+/// (the determinism contract the `learn_cols_*` tests pin). Column folds
+/// always rotate the factors, so the published succession is never
+/// delta-shippable — followers take one full snapshot and return to
+/// deltas on the next C/Z-only fold.
+fn handle_learn_cols(
+    rest: &str,
+    lifecycle: &Option<Arc<Lifecycle>>,
+    slot: &ModelSlot,
+    stats: &ServerStats,
+    obs: Option<&ServerObs>,
+) -> String {
+    let Some(lc) = lifecycle else {
+        return "ERR learning disabled".into();
+    };
+    let mut up = lc.updater();
+    let m = up.artifact().shape().0;
+    let Some(block) = parse_cols(rest, m) else {
+        return "ERR bad request".into();
+    };
+    let cols = block.cols();
+    if up.pending_len() > 0 {
+        if let Err(e) = up.flush() {
+            return format!("ERR {e}");
+        }
+    }
+    match up.apply_cols(&block) {
+        Ok(report) => {
+            stats.learned.fetch_add(1, Ordering::Relaxed);
+            let art = up.artifact();
+            // same swap discipline as handle_learn: the fold already
+            // happened, so the slot follows the updater even when the
+            // publish fails (`unpublished=1`, transient id)
+            let (version, unpublished) = match &lc.store {
+                Some(store) => match store.publish_artifact(art) {
+                    Ok(v) => (v, false),
+                    Err(_) => (next_transient_version(), true),
+                },
+                None => (slot.get().version + 1, false),
+            };
+            let serving = ServingModel {
+                version,
+                rank: art.rank(),
+                shard: art.meta.shard,
+                model: art.model(),
+            };
+            let features = art.shape().1;
+            slot.swap(Arc::new(serving));
+            stats.swaps.fetch_add(1, Ordering::Relaxed);
+            if let Some(o) = obs {
+                o.journal.record(EventKind::Learn, format!("version={version} cols={cols}"));
+                o.journal.record(EventKind::Swap, format!("version={version} via=learn"));
+            }
+            let mut reply = format!(
+                "OK version={version} cols={cols} features={features} drift={:.3e} resolve={}",
+                report.drift_total, report.needs_resolve as u8
+            );
+            if unpublished {
+                reply.push_str(" unpublished=1");
+            }
+            reply
+        }
+        Err(e) => format!("ERR {e}"),
+    }
+}
+
+/// Parse the `LEARN COLS` operand: `<col>|<col>|...`, one segment per new
+/// feature column, each a `r:v,r:v,...` list over trained-row ids (`-` or
+/// an empty segment = an all-zero column). Returns the m×k CSR block, or
+/// `None` on any malformed token or out-of-range row id — validated here
+/// so a hostile line can never reach the kernel's row-bound assertions.
+fn parse_cols(rest: &str, m: usize) -> Option<Csr> {
+    let rest = rest.trim();
+    if rest.is_empty() {
+        return None;
+    }
+    let cols: Vec<&str> = rest.split('|').collect();
+    let mut coo = Coo::new(m, cols.len());
+    for (j, col) in cols.iter().enumerate() {
+        let col = col.trim();
+        if col.is_empty() || col == "-" {
+            continue;
+        }
+        let (rows, values) = parse_features(col)?;
+        for (r, v) in rows.into_iter().zip(values) {
+            if r >= m {
+                return None;
+            }
+            coo.push(r, j, v);
+        }
+    }
+    Some(Csr::from_coo(&coo))
 }
 
 /// Parse `SCORE <topk> j:v,j:v,...` (feature list may be empty).
@@ -2471,5 +2738,244 @@ mod tests {
             assert!(r.starts_with("OK "), "steady-state request failed: {r}");
         }
         server.shutdown();
+    }
+
+    /// The `LEARN COLS` determinism contract: the online verb — including
+    /// the flush of a buffered row example — must produce an artifact
+    /// bitwise identical to the offline replay (fold the pending rows,
+    /// then fold the column block), across every factor AND `C`/`Z`.
+    #[test]
+    fn learn_cols_online_equals_offline_replay_bitwise() {
+        use crate::model::format::testutil::sample_artifact;
+        use crate::model::{format, UpdaterConfig};
+        let dir = std::env::temp_dir().join("fastpi_serve_cols");
+        let _ = std::fs::remove_dir_all(&dir);
+        let store = ModelStore::open(&dir).unwrap();
+        let art = sample_artifact(13, 12, 6, 4, 3);
+        assert_eq!(store.publish(&art).unwrap(), 1);
+        let cfg = UpdaterConfig { learn_batch: 8, ..Default::default() };
+        let server = ScoreServer::start_lifecycle(
+            OnlineUpdater::new(art.clone(), cfg.clone()),
+            Some(store),
+            1,
+            ServerConfig::default(),
+        )
+        .unwrap();
+
+        // one buffered row example (learn_batch=8 keeps it pending) ...
+        let l = text_request(server.addr, "LEARN 1 0:1.0,5:-0.5").unwrap();
+        assert!(l.starts_with("OK version=1 pending=1"), "{l}");
+        // ... then a 2-column fold: the pending row must flush first
+        let cols_line = "LEARN COLS 0:0.5,3:-1.0,11:2.0|-";
+        let r = text_request(server.addr, cols_line).unwrap();
+        assert!(r.starts_with("OK version=2 cols=2 features=8 "), "{r}");
+        let v = text_request(server.addr, "VERSION").unwrap();
+        assert!(v.contains(" features=8 "), "grown width must serve: {v}");
+        assert!(v.contains(" pending=0 "), "{v}");
+
+        // offline replay: same rows, then the same column block
+        let mut offline = OnlineUpdater::new(art, cfg);
+        assert!(offline.push_example_global(vec![(0, 1.0), (5, -0.5)], vec![1]).unwrap().is_none());
+        offline.flush().unwrap();
+        let mut coo = Coo::new(12, 2);
+        for (r, v) in [(0usize, 0.5f64), (3, -1.0), (11, 2.0)] {
+            coo.push(r, 0, v);
+        }
+        offline.apply_cols(&Csr::from_coo(&coo)).unwrap();
+        let want = format::encode_model_bytes(offline.artifact());
+        let got = std::fs::read(dir.join("v000002.fpim")).unwrap();
+        assert_eq!(got, want, "LEARN COLS online must equal the offline replay bitwise");
+
+        // malformed / hostile column lines are rejected before the kernel
+        for bad in ["LEARN COLS ", "LEARN COLS 12:1.0", "LEARN COLS 0:NaN", "LEARN COLS 0:x|1:2"] {
+            let r = text_request(server.addr, bad).unwrap();
+            assert!(r.starts_with("ERR"), "`{bad}` must be refused: {r}");
+        }
+        server.shutdown();
+    }
+
+    /// A broadcast column fold across a sharded fleet: every shard answers
+    /// the identical `LEARN COLS` line with byte-identical replies and
+    /// publishes its slice under the same next version id.
+    #[test]
+    fn broadcast_learn_cols_is_byte_unanimous_across_shards() {
+        use crate::model::format::testutil::sample_artifact;
+        use crate::model::{split_artifact, UpdaterConfig};
+        let dir = std::env::temp_dir().join("fastpi_serve_cols_shards");
+        let _ = std::fs::remove_dir_all(&dir);
+        let store = ModelStore::open(&dir).unwrap();
+        let art = sample_artifact(17, 12, 6, 6, 3);
+        let set = split_artifact(&art, 3).unwrap();
+        assert_eq!(store.publish_shard_set(&set).unwrap(), 1);
+
+        let servers: Vec<ScoreServer> = set
+            .iter()
+            .map(|s| {
+                ScoreServer::start_lifecycle(
+                    OnlineUpdater::new(s.clone(), UpdaterConfig::default()),
+                    Some(ModelStore::open(&dir).unwrap()),
+                    1,
+                    ServerConfig::default(),
+                )
+                .unwrap()
+            })
+            .collect();
+        let line = "LEARN COLS 1:1.0,4:-2.0|7:0.5";
+        let replies: Vec<String> =
+            servers.iter().map(|s| text_request(s.addr, line).unwrap()).collect();
+        assert!(replies[0].starts_with("OK version=2 cols=2 features=8 "), "{}", replies[0]);
+        assert!(
+            replies.iter().all(|r| r == &replies[0]),
+            "broadcast column fold must be byte-unanimous: {replies:?}"
+        );
+        for (k, s) in servers.iter().enumerate() {
+            let v = text_request(s.addr, "VERSION").unwrap();
+            assert!(v.contains(" id=2 ") || v.contains("id=2 "), "{v}");
+            assert!(v.ends_with(&format!("shard={k}/3")), "{v}");
+            assert!(dir.join(format!("v000002.s{k}of3.fpim")).exists());
+        }
+        for s in servers {
+            s.shutdown();
+        }
+    }
+
+    /// `RESHARD <m>` publishes one atomic m-way shard set of the store's
+    /// latest version, `RELOAD <k>/<m>` re-slices a live server onto the
+    /// new set, and both journal `kind=reshard` events.
+    #[test]
+    fn reshard_publishes_an_atomic_set_and_reload_reslices() {
+        use crate::model::format::testutil::sample_artifact;
+        use crate::model::{format, reassemble, UpdaterConfig};
+        let dir = std::env::temp_dir().join("fastpi_serve_reshard");
+        let _ = std::fs::remove_dir_all(&dir);
+        let store = ModelStore::open(&dir).unwrap();
+        let art = sample_artifact(19, 12, 6, 8, 3);
+        assert_eq!(store.publish(&art).unwrap(), 1);
+        let server = ScoreServer::start_lifecycle(
+            OnlineUpdater::new(art.clone(), UpdaterConfig::default()),
+            Some(store),
+            1,
+            ServerConfig::default(),
+        )
+        .unwrap();
+
+        let probe = "SCORE 3 0:1.0,5:-0.5";
+        let before = text_request(server.addr, probe).unwrap();
+
+        assert_eq!(text_request(server.addr, "RESHARD 4").unwrap(), "OK version=2 shards=4");
+        for k in 0..4 {
+            assert!(dir.join(format!("v000002.s{k}of4.fpim")).exists(), "slice {k} missing");
+        }
+        // the set reassembles to the source model bitwise — resharding
+        // never rewrites a number
+        let rebuilt = reassemble(&ModelStore::open(&dir).unwrap().load_shard_set(2).unwrap())
+            .unwrap();
+        assert_eq!(
+            format::encode_model_bytes(&rebuilt),
+            format::encode_model_bytes(&art),
+            "reassembled reshard set must equal the source bitwise"
+        );
+        // the publishing node's own slot is untouched until someone
+        // re-points it — zero-downtime by construction
+        assert_eq!(text_request(server.addr, probe).unwrap(), before);
+
+        // re-slice live onto the new set
+        assert_eq!(text_request(server.addr, "RELOAD 1/4").unwrap(), "OK version=2 shard=1/4");
+        let v = text_request(server.addr, "VERSION").unwrap();
+        assert!(v.ends_with("shard=1/4"), "{v}");
+        // bare RELOAD now re-serves the current (re-sliced) shape
+        assert_eq!(text_request(server.addr, "RELOAD").unwrap(), "OK version=2");
+
+        // a second reshard starts from the SET (reassemble path) — back
+        // to 2 shards
+        assert_eq!(text_request(server.addr, "RESHARD 2").unwrap(), "OK version=3 shards=2");
+
+        // both the publishes and the re-slice journaled reshard events
+        let events = multiline_request(server.addr, "EVENTS").unwrap();
+        assert!(
+            events.contains("kind=reshard version=2 shards=4 via=publish"),
+            "{events}"
+        );
+        assert!(events.contains("kind=reshard version=2 shard=1/4 via=reload"), "{events}");
+        assert!(events.contains("kind=reshard version=3 shards=2 via=publish"), "{events}");
+
+        // malformed / undersized operands are refused
+        for bad in ["RESHARD x", "RESHARD 1", "RESHARD 0"] {
+            let r = text_request(server.addr, bad).unwrap();
+            assert!(r.starts_with("ERR"), "`{bad}` must be refused: {r}");
+        }
+        // and a store-less server has nothing to reshard or re-slice
+        let bare = ScoreServer::start(model(6, 4), ServerConfig::default()).unwrap();
+        assert_eq!(text_request(bare.addr, "RESHARD 2").unwrap(), "ERR no model store");
+        assert_eq!(text_request(bare.addr, "RELOAD 0/2").unwrap(), "ERR no model store");
+        assert_eq!(text_request(bare.addr, "RELOAD 9/4").unwrap(), "ERR bad request");
+        bare.shutdown();
+        server.shutdown();
+    }
+
+    /// End-to-end delta replication through the real server: a primary
+    /// folding in [`crate::model::FoldMode::Project`] publishes
+    /// factor-stable successions, and the follower's sync loop (which asks
+    /// `SHIP <have> DELTA`) lands files bitwise identical to the
+    /// primary's.
+    #[test]
+    fn replica_syncs_projection_folds_delta_first() {
+        use crate::model::format::testutil::sample_artifact;
+        use crate::model::{FoldMode, UpdaterConfig};
+        let dir_p = std::env::temp_dir().join("fastpi_serve_delta_p");
+        let dir_r = std::env::temp_dir().join("fastpi_serve_delta_r");
+        for d in [&dir_p, &dir_r] {
+            let _ = std::fs::remove_dir_all(d);
+        }
+        let store_p = ModelStore::open(&dir_p).unwrap();
+        let art = sample_artifact(23, 12, 6, 4, 3);
+        assert_eq!(store_p.publish(&art).unwrap(), 1);
+        let cfg =
+            UpdaterConfig { learn_batch: 1, fold_mode: FoldMode::Project, ..Default::default() };
+        let primary = ScoreServer::start_lifecycle(
+            OnlineUpdater::new(art, cfg),
+            Some(store_p),
+            1,
+            ServerConfig::default(),
+        )
+        .unwrap();
+        let replica = ScoreServer::start_replica(
+            ModelStore::open(&dir_r).unwrap(),
+            ReplicaConfig {
+                primary: primary.addr,
+                poll: Duration::from_millis(10),
+                timeout: Duration::from_secs(10),
+                ..Default::default()
+            },
+            ServerConfig::default(),
+        )
+        .unwrap();
+        assert_eq!(replica.current_version(), 1);
+
+        // two projection folds: each publishes a factor-stable successor,
+        // so after the first full sync every hop is delta-shaped
+        for want in [2u64, 3] {
+            let l = text_request(primary.addr, "LEARN 1 0:1.0,5:-0.5").unwrap();
+            assert!(l.starts_with(&format!("OK version={want} pending=0")), "{l}");
+            let deadline = Instant::now() + Duration::from_secs(10);
+            while replica.current_version() != want {
+                assert!(Instant::now() < deadline, "replica never reached v{want}");
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            let a = std::fs::read(dir_p.join(format!("v{want:06}.fpim"))).unwrap();
+            let b = std::fs::read(dir_r.join(format!("v{want:06}.fpim"))).unwrap();
+            assert_eq!(a, b, "replica's v{want} must equal the primary's byte for byte");
+        }
+        // the real server dispatch really answers DELTA for this shape
+        match crate::model::fetch_shard_delta(primary.addr, 2, None, Duration::from_secs(10))
+            .unwrap()
+        {
+            crate::model::ShipReply::Delta { version, base, .. } => {
+                assert_eq!((version, base), (3, 2));
+            }
+            other => panic!("projection-fold succession must ship as a delta, got {other:?}"),
+        }
+        replica.shutdown();
+        primary.shutdown();
     }
 }

@@ -43,6 +43,36 @@
 //! `f64::to_le_bytes`/`from_le_bytes` are lossless, so a save→load
 //! round-trip is bitwise-identical — the property the hot-swap serving path
 //! relies on (`RELOAD` of the same version must not change a single score).
+//!
+//! ## `FPID` delta payloads
+//!
+//! A projection fold ([`crate::model::FoldMode::Project`]) rewrites only
+//! `C`/`Z` and the lifecycle counters — the factors `U/Σ/Vᵀ/Σ⁺` stay
+//! bitwise identical across versions. For those version pairs a follower
+//! that already holds the base version only needs the small part:
+//!
+//! ```text
+//! magic    "FPID"                     4 bytes
+//! version  u32                        delta format version (currently 1)
+//! length   u64                        payload byte count
+//! checksum u64                        FNV-1a over the payload bytes
+//! payload:
+//!   base_version target_version epoch full_len full_checksum   u64 ×5
+//!   meta block                        (identical encoding to FPIM v2:
+//!                                      dataset, counters, dims, shard)
+//!   C         rank·labels f64 (row-major)
+//!   Z         n·labels f64 (row-major)
+//! ```
+//!
+//! `full_len`/`full_checksum` describe the target's complete `FPIM` file:
+//! [`ModelDelta::apply`] splices the delta onto the local base factors,
+//! re-encodes, and refuses to hand the result over unless it is **bitwise**
+//! the sender's file — so a diverged base, a factor change the sender
+//! missed, or any reconstruction bug degrades to "fetch the full snapshot",
+//! never to a silently different model. Delta fields are untrusted input
+//! exactly like FPIM fields: framing first, then checked dimension
+//! arithmetic before any allocation, and lower-epoch deltas are refused the
+//! same way [`crate::model::ship`] fences full snapshots.
 
 use crate::dense::{matmul, Matrix, Svd};
 use crate::error::{Error, Result};
@@ -260,11 +290,15 @@ struct Cursor<'a> {
 
 impl<'a> Cursor<'a> {
     fn take(&mut self, n: usize) -> Result<&'a [u8]> {
-        if self.off + n > self.buf.len() {
-            return Err(Error::Invalid("FPIM payload truncated".into()));
-        }
-        let s = &self.buf[self.off..self.off + n];
-        self.off += n;
+        // checked: a hostile length field near usize::MAX must Err, not
+        // wrap past the bounds test
+        let end = self
+            .off
+            .checked_add(n)
+            .filter(|&e| e <= self.buf.len())
+            .ok_or_else(|| Error::Invalid("FPIM payload truncated".into()))?;
+        let s = &self.buf[self.off..end];
+        self.off = end;
         Ok(s)
     }
 
@@ -282,29 +316,92 @@ impl<'a> Cursor<'a> {
     }
 }
 
+/// Serialize the meta block — dataset, lifecycle counters, dimension quad,
+/// shard range — exactly as it appears in an FPIM v2 payload. Shared by the
+/// full-file and `FPID` delta encoders so the two encodings cannot drift.
+fn encode_meta_block(p: &mut Vec<u8>, meta: &ModelMeta, dims: [u64; 4]) {
+    push_u64(p, meta.dataset.len() as u64);
+    p.extend_from_slice(meta.dataset.as_bytes());
+    push_f64(p, meta.scale);
+    push_f64(p, meta.alpha);
+    push_f64(p, meta.k);
+    push_u64(p, meta.seed);
+    push_u64(p, meta.rows_trained);
+    push_u64(p, meta.dataset_rows);
+    push_u64(p, meta.rows_since_solve);
+    push_u64(p, meta.updates_applied);
+    push_f64(p, meta.drift);
+    for d in dims {
+        push_u64(p, d);
+    }
+    let sh = &meta.shard;
+    for d in [sh.index, sh.count, sh.label_lo, sh.label_hi, sh.label_total] {
+        push_u64(p, d);
+    }
+}
+
+/// Parse the meta block back, validating the untrusted shard fields.
+/// `with_shard_block` is false only for FPIM v1 files, which predate the
+/// block and always hold full models. Returns the meta plus the
+/// `[m, n, labels, rank]` dimension quad (still untrusted — callers run
+/// the checked body-size arithmetic before allocating matrices).
+fn parse_meta_block(
+    cur: &mut Cursor,
+    with_shard_block: bool,
+    ctx: &str,
+) -> Result<(ModelMeta, [usize; 4])> {
+    let ds_len = cur.u64()? as usize;
+    let dataset = String::from_utf8(cur.take(ds_len)?.to_vec())
+        .map_err(|_| Error::Invalid("FPIM dataset name is not utf-8".into()))?;
+    let scale = cur.f64()?;
+    let alpha = cur.f64()?;
+    let k = cur.f64()?;
+    let seed = cur.u64()?;
+    let rows_trained = cur.u64()?;
+    let dataset_rows = cur.u64()?;
+    let rows_since_solve = cur.u64()?;
+    let updates_applied = cur.u64()?;
+    let drift = cur.f64()?;
+    let m = cur.u64()? as usize;
+    let n = cur.u64()? as usize;
+    let labels = cur.u64()? as usize;
+    let rank = cur.u64()? as usize;
+    let shard = if with_shard_block {
+        ShardRange {
+            index: cur.u64()?,
+            count: cur.u64()?,
+            label_lo: cur.u64()?,
+            label_hi: cur.u64()?,
+            label_total: cur.u64()?,
+        }
+    } else {
+        ShardRange::full(labels)
+    };
+    // shard fields are untrusted like the dimensions: reject hostile but
+    // checksum-valid headers before any allocation
+    shard.validate(labels, ctx)?;
+    let meta = ModelMeta {
+        dataset,
+        scale,
+        alpha,
+        k,
+        seed,
+        rows_trained,
+        dataset_rows,
+        rows_since_solve,
+        updates_applied,
+        drift,
+        shard,
+    };
+    Ok((meta, [m, n, labels, rank]))
+}
+
 /// Serialize a model to its payload bytes (header excluded).
 fn encode_payload(a: &ModelArtifact) -> Vec<u8> {
     let (m, n, labels) = a.shape();
     let rank = a.rank();
     let mut p = Vec::new();
-    push_u64(&mut p, a.meta.dataset.len() as u64);
-    p.extend_from_slice(a.meta.dataset.as_bytes());
-    push_f64(&mut p, a.meta.scale);
-    push_f64(&mut p, a.meta.alpha);
-    push_f64(&mut p, a.meta.k);
-    push_u64(&mut p, a.meta.seed);
-    push_u64(&mut p, a.meta.rows_trained);
-    push_u64(&mut p, a.meta.dataset_rows);
-    push_u64(&mut p, a.meta.rows_since_solve);
-    push_u64(&mut p, a.meta.updates_applied);
-    push_f64(&mut p, a.meta.drift);
-    for d in [m, n, labels, rank] {
-        push_u64(&mut p, d as u64);
-    }
-    let sh = &a.meta.shard;
-    for d in [sh.index, sh.count, sh.label_lo, sh.label_hi, sh.label_total] {
-        push_u64(&mut p, d);
-    }
+    encode_meta_block(&mut p, &a.meta, [m as u64, n as u64, labels as u64, rank as u64]);
     push_f64s(&mut p, a.svd.u.data());
     push_f64s(&mut p, &a.svd.s);
     push_f64s(&mut p, a.svd.vt.data());
@@ -436,37 +533,8 @@ fn parse_payload(buf: &[u8], ctx: &str) -> Result<ModelArtifact> {
     let payload = &buf[24..];
 
     let mut cur = Cursor { buf: payload, off: 0 };
-    let ds_len = cur.u64()? as usize;
-    let dataset = String::from_utf8(cur.take(ds_len)?.to_vec())
-        .map_err(|_| Error::Invalid("FPIM dataset name is not utf-8".into()))?;
-    let scale = cur.f64()?;
-    let alpha = cur.f64()?;
-    let k = cur.f64()?;
-    let seed = cur.u64()?;
-    let rows_trained = cur.u64()?;
-    let dataset_rows = cur.u64()?;
-    let rows_since_solve = cur.u64()?;
-    let updates_applied = cur.u64()?;
-    let drift = cur.f64()?;
-    let m = cur.u64()? as usize;
-    let n = cur.u64()? as usize;
-    let labels = cur.u64()? as usize;
-    let rank = cur.u64()? as usize;
     // v1 files predate the shard block and are always full models
-    let shard = if version >= 2 {
-        ShardRange {
-            index: cur.u64()?,
-            count: cur.u64()?,
-            label_lo: cur.u64()?,
-            label_hi: cur.u64()?,
-            label_total: cur.u64()?,
-        }
-    } else {
-        ShardRange::full(labels)
-    };
-    // shard fields are untrusted like the dimensions: reject hostile but
-    // checksum-valid headers before any allocation
-    shard.validate(labels, ctx)?;
+    let (meta, [m, n, labels, rank]) = parse_meta_block(&mut cur, version >= 2, ctx)?;
     // dimensions are untrusted input: checked arithmetic so oversized
     // values are rejected instead of wrapping past the size check
     let expect = m
@@ -490,25 +558,249 @@ fn parse_payload(buf: &[u8], ctx: &str) -> Result<ModelArtifact> {
     let s_inv = cur.f64s(rank)?;
     let c = Matrix::from_vec(rank, labels, cur.f64s(rank * labels)?);
     let z = Matrix::from_vec(n, labels, cur.f64s(n * labels)?);
-    Ok(ModelArtifact {
-        meta: ModelMeta {
-            dataset,
-            scale,
-            alpha,
-            k,
-            seed,
-            rows_trained,
-            dataset_rows,
-            rows_since_solve,
-            updates_applied,
-            drift,
-            shard,
-        },
-        svd: Svd { u, s, vt },
-        s_inv,
+    Ok(ModelArtifact { meta, svd: Svd { u, s, vt }, s_inv, c, z })
+}
+
+// -- FPID delta payloads ----------------------------------------------------
+
+const DELTA_MAGIC: &[u8; 4] = b"FPID";
+/// Current delta write version (no older versions exist yet).
+const DELTA_FORMAT_VERSION: u32 = 1;
+
+/// True when two artifacts carry bitwise-identical factors `U/Σ/Vᵀ/Σ⁺` —
+/// the applicability condition for shipping an `FPID` delta between them.
+/// Projection folds preserve this; exact folds, re-solves, and column
+/// growth rotate the factors and force the full-snapshot path.
+pub fn factors_equal(a: &ModelArtifact, b: &ModelArtifact) -> bool {
+    a.svd.u.shape() == b.svd.u.shape()
+        && a.svd.u.data() == b.svd.u.data()
+        && a.svd.s == b.svd.s
+        && a.svd.vt.shape() == b.svd.vt.shape()
+        && a.svd.vt.data() == b.svd.vt.data()
+        && a.s_inv == b.s_inv
+}
+
+/// Stored FNV-1a payload checksum of a framed FPIM/FPID buffer (header
+/// bytes 16..24). Callers hand in buffers whose framing already passed.
+fn stored_checksum(bytes: &[u8]) -> u64 {
+    u64::from_le_bytes(bytes[16..24].try_into().unwrap())
+}
+
+/// Encode an `FPID` delta carrying `target` (a validated complete `FPIM`
+/// file at `target_version`) against `base_version`: the five-field delta
+/// header, the target's meta block, and its `C`/`Z` arrays. The factors are
+/// NOT shipped — [`ModelDelta::apply`] splices them in from the receiver's
+/// base copy and proves the reconstruction bitwise against
+/// `full_len`/`full_checksum` recorded here.
+pub fn encode_model_delta(
+    target: &ValidatedModelBytes,
+    target_version: u64,
+    base_version: u64,
+    epoch: u64,
+    ctx: &str,
+) -> Result<Vec<u8>> {
+    if target_version <= base_version {
+        return Err(Error::Invalid(format!(
+            "{ctx}: FPID target version {target_version} must be newer than base {base_version}"
+        )));
+    }
+    let art = target.parse(ctx)?;
+    let (m, n, labels) = art.shape();
+    let rank = art.rank();
+    let mut p = Vec::new();
+    push_u64(&mut p, base_version);
+    push_u64(&mut p, target_version);
+    push_u64(&mut p, epoch);
+    push_u64(&mut p, target.len() as u64);
+    push_u64(&mut p, stored_checksum(target.bytes()));
+    encode_meta_block(&mut p, &art.meta, [m as u64, n as u64, labels as u64, rank as u64]);
+    push_f64s(&mut p, art.c.data());
+    push_f64s(&mut p, art.z.data());
+    let mut out = Vec::with_capacity(24 + p.len());
+    out.extend_from_slice(DELTA_MAGIC);
+    out.extend_from_slice(&DELTA_FORMAT_VERSION.to_le_bytes());
+    out.extend_from_slice(&(p.len() as u64).to_le_bytes());
+    out.extend_from_slice(&fnv1a(&p).to_le_bytes());
+    out.extend_from_slice(&p);
+    Ok(out)
+}
+
+/// Proof-of-validation witness for `FPID` delta bytes, mirroring
+/// [`ValidatedModelBytes`]: the only constructor is
+/// [`validate_delta_bytes`], so holding one means magic, delta format
+/// version, payload length, and FNV-1a checksum all passed.
+#[derive(Debug, Clone)]
+pub struct ValidatedDeltaBytes {
+    bytes: Vec<u8>,
+}
+
+impl ValidatedDeltaBytes {
+    /// The complete delta bytes (header + payload), verbatim.
+    pub fn bytes(&self) -> &[u8] {
+        &self.bytes
+    }
+
+    pub fn len(&self) -> usize {
+        self.bytes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.bytes.is_empty()
+    }
+
+    /// Parse the payload WITHOUT re-running the checksum. Version ordering,
+    /// shard fields, and dimension arithmetic are still checked — cheap and
+    /// allocation-guarding.
+    pub fn parse(&self, ctx: &str) -> Result<ModelDelta> {
+        parse_delta_payload(&self.bytes, ctx)
+    }
+}
+
+/// Validate `FPID` framing once and wrap the bytes in the witness type.
+pub fn validate_delta_bytes(bytes: Vec<u8>, ctx: &str) -> Result<ValidatedDeltaBytes> {
+    let buf = &bytes;
+    if buf.len() < 24 || &buf[..4] != DELTA_MAGIC {
+        return Err(Error::Invalid(format!("{ctx}: not an FPID delta")));
+    }
+    let version = u32::from_le_bytes(buf[4..8].try_into().unwrap());
+    if version != DELTA_FORMAT_VERSION {
+        return Err(Error::Invalid(format!(
+            "{ctx}: FPID format version {version} (this build reads {DELTA_FORMAT_VERSION})"
+        )));
+    }
+    let len = u64::from_le_bytes(buf[8..16].try_into().unwrap()) as usize;
+    let checksum = u64::from_le_bytes(buf[16..24].try_into().unwrap());
+    let payload = &buf[24..];
+    if payload.len() != len {
+        return Err(Error::Invalid(format!(
+            "{ctx}: FPID length mismatch ({} vs {len})",
+            payload.len()
+        )));
+    }
+    if fnv1a(payload) != checksum {
+        return Err(Error::Invalid(format!("{ctx}: FPID checksum mismatch")));
+    }
+    Ok(ValidatedDeltaBytes { bytes })
+}
+
+/// A parsed `FPID` delta: the lifecycle meta and `C`/`Z` arrays of
+/// `target_version`, shipped against the (unshipped) factor bytes of
+/// `base_version`.
+#[derive(Debug, Clone)]
+pub struct ModelDelta {
+    /// version whose factors the receiver must already hold
+    pub base_version: u64,
+    /// version this delta reconstructs
+    pub target_version: u64,
+    /// promotion epoch the sender's store is fenced at
+    pub epoch: u64,
+    /// byte length of the target's complete FPIM file
+    full_len: u64,
+    /// the target FPIM file's stored payload checksum
+    full_checksum: u64,
+    /// the target's full lifecycle meta (counters, drift, shard range)
+    pub meta: ModelMeta,
+    /// `[m, n, labels, rank]` the sender encoded — checked against the base
+    dims: [usize; 4],
+    pub c: Matrix,
+    pub z: Matrix,
+}
+
+fn parse_delta_payload(buf: &[u8], ctx: &str) -> Result<ModelDelta> {
+    let payload = &buf[24..];
+    let mut cur = Cursor { buf: payload, off: 0 };
+    let base_version = cur.u64()?;
+    let target_version = cur.u64()?;
+    let epoch = cur.u64()?;
+    let full_len = cur.u64()?;
+    let full_checksum = cur.u64()?;
+    if target_version <= base_version {
+        return Err(Error::Invalid(format!(
+            "{ctx}: FPID target version {target_version} not newer than base {base_version}"
+        )));
+    }
+    if full_len < 24 {
+        return Err(Error::Invalid(format!(
+            "{ctx}: FPID full_len {full_len} is shorter than an FPIM header"
+        )));
+    }
+    let (meta, dims) = parse_meta_block(&mut cur, true, ctx)?;
+    let [_, n, labels, rank] = dims;
+    // only C (rank·labels) and Z (n·labels) follow — checked arithmetic so
+    // hostile dims Err before any allocation (m is not allocated against
+    // here at all; apply() checks it against the base factors)
+    let expect = rank
+        .checked_mul(labels)
+        .and_then(|cz| n.checked_mul(labels).and_then(|z| cz.checked_add(z)))
+        .and_then(|x| x.checked_mul(8))
+        .ok_or_else(|| Error::Invalid(format!("{ctx}: FPID dimensions overflow")))?;
+    if cur.buf.len() - cur.off != expect {
+        return Err(Error::Invalid(format!(
+            "{ctx}: FPID body mismatch: {} bytes left, {expect} expected",
+            cur.buf.len() - cur.off,
+        )));
+    }
+    let c = Matrix::from_vec(rank, labels, cur.f64s(rank * labels)?);
+    let z = Matrix::from_vec(n, labels, cur.f64s(n * labels)?);
+    Ok(ModelDelta {
+        base_version,
+        target_version,
+        epoch,
+        full_len,
+        full_checksum,
+        meta,
+        dims,
         c,
         z,
     })
+}
+
+impl ModelDelta {
+    /// Splice this delta onto the locally-held `base` artifact and prove the
+    /// result is **bitwise** the sender's target file: re-encode the spliced
+    /// artifact and compare length + stored checksum against the
+    /// `full_len`/`full_checksum` the delta carries. Any divergence — a base
+    /// that drifted, a factor change the sender missed — is an `Err` the
+    /// sync path answers by falling back to the full snapshot.
+    ///
+    /// `local_epoch` is the receiving store's promotion epoch: a delta from
+    /// a lower epoch is a fenced-out old primary and is refused before any
+    /// bytes land, exactly like the full-snapshot path.
+    pub fn apply(self, base: &ModelArtifact, local_epoch: u64, ctx: &str) -> Result<ValidatedModelBytes> {
+        if self.epoch < local_epoch {
+            return Err(Error::Invalid(format!(
+                "{ctx}: FPID delta from epoch {} refused (local store is fenced at {local_epoch})",
+                self.epoch
+            )));
+        }
+        let [m, n, _labels, rank] = self.dims;
+        if base.svd.u.rows() != m || base.svd.vt.cols() != n || base.rank() != rank {
+            return Err(Error::Invalid(format!(
+                "{ctx}: FPID delta dims {m}×{n} rank {rank} do not match the base \
+                 ({}×{} rank {}) — full snapshot required",
+                base.svd.u.rows(),
+                base.svd.vt.cols(),
+                base.rank(),
+            )));
+        }
+        let spliced = ModelArtifact {
+            meta: self.meta,
+            svd: base.svd.clone(),
+            s_inv: base.s_inv.clone(),
+            c: self.c,
+            z: self.z,
+        };
+        let bytes = encode_model_bytes(&spliced);
+        if bytes.len() as u64 != self.full_len || stored_checksum(&bytes) != self.full_checksum {
+            return Err(Error::Invalid(format!(
+                "{ctx}: FPID delta applied to a diverged base (reconstruction is not the \
+                 target file) — full snapshot required"
+            )));
+        }
+        // encoded by this build and proven byte-equal to the sender's
+        // validated file: it IS a validated FPIM buffer
+        Ok(ValidatedModelBytes { bytes })
+    }
 }
 
 #[cfg(test)]
@@ -813,6 +1105,186 @@ mod tests {
             bytes[16..24].copy_from_slice(&sum.to_le_bytes());
             let _ = read_model_bytes(&bytes, "shard-fuzz"); // must return
         });
+    }
+
+    // -- FPID delta payloads ------------------------------------------------
+    //
+    // The delta read path consumes wire bytes from a peer that may be
+    // stale, confused, or hostile. Same discipline as the FPIM suite:
+    // truncations and bit flips Err (never panic), checksum-valid-but-
+    // hostile dimension fields are stopped by checked arithmetic before
+    // any allocation, lower-epoch deltas are refused, and the one path
+    // that succeeds is proven bitwise against the full-file encoding.
+
+    /// A factor-stable successor of `base`: same `U/Σ/Vᵀ/Σ⁺`, new `C`/`Z`
+    /// and bumped lifecycle counters — the shape a projection fold leaves.
+    fn project_fold_target(base: &ModelArtifact) -> ModelArtifact {
+        let mut t = base.clone();
+        for x in t.c.data_mut() {
+            *x += 0.25;
+        }
+        t.z = matmul(&t.svd.vt.transpose(), &t.c.scale_rows(&t.s_inv));
+        t.meta.rows_since_solve += 1;
+        t.meta.updates_applied += 1;
+        t.meta.drift += 0.01;
+        t
+    }
+
+    fn sample_delta(seed: u64) -> (ModelArtifact, ValidatedModelBytes, Vec<u8>) {
+        let base = sample_artifact(seed, 12, 6, 5, 3);
+        let target = project_fold_target(&base);
+        let file = validate_model_bytes(encode_model_bytes(&target), "target").unwrap();
+        let delta = encode_model_delta(&file, 7, 3, 1, "enc").unwrap();
+        (base, file, delta)
+    }
+
+    #[test]
+    fn delta_applies_bitwise_identical_to_the_full_file() {
+        let (base, file, delta) = sample_delta(90);
+        // the factors stay home: the delta is substantially smaller
+        assert!(delta.len() < file.len(), "{} !< {}", delta.len(), file.len());
+        let parsed = validate_delta_bytes(delta, "d").unwrap().parse("d").unwrap();
+        assert_eq!(parsed.base_version, 3);
+        assert_eq!(parsed.target_version, 7);
+        assert_eq!(parsed.epoch, 1);
+        let rebuilt = parsed.apply(&base, 1, "apply").unwrap();
+        assert_eq!(
+            rebuilt.bytes(),
+            file.bytes(),
+            "the delta path must land bitwise on the full-file path"
+        );
+    }
+
+    #[test]
+    fn delta_refuses_a_diverged_base_and_a_lower_epoch() {
+        let (base, _file, delta) = sample_delta(91);
+        let witness = validate_delta_bytes(delta, "d").unwrap();
+
+        // lower-epoch deltas are fenced out before any splice happens
+        let err = witness.parse("d").unwrap().apply(&base, 2, "fence").unwrap_err();
+        assert!(format!("{err}").contains("fenced"), "{err}");
+
+        // a base with different factor BITS reconstructs a different file —
+        // refused, so the caller falls back to the full snapshot
+        let mut diverged = base.clone();
+        diverged.svd.u.data_mut()[0] += 1.0;
+        let err = witness.parse("d").unwrap().apply(&diverged, 0, "div").unwrap_err();
+        assert!(format!("{err}").contains("full snapshot"), "{err}");
+
+        // a base with a different SHAPE is refused by the dims check
+        let small = sample_artifact(92, 8, 6, 5, 2);
+        let err = witness.parse("d").unwrap().apply(&small, 0, "shape").unwrap_err();
+        assert!(format!("{err}").contains("full snapshot"), "{err}");
+
+        // encode refuses a non-advancing version pair outright
+        let (_, file2, _) = sample_delta(93);
+        assert!(encode_model_delta(&file2, 3, 3, 0, "enc").is_err());
+        assert!(encode_model_delta(&file2, 2, 3, 0, "enc").is_err());
+    }
+
+    #[test]
+    fn prop_delta_truncations_are_rejected_without_panic() {
+        use crate::util::propcheck::check;
+        let (_, _, good) = sample_delta(94);
+        assert!(validate_delta_bytes(good.clone(), "fuzz").is_ok());
+        check("every strict truncation of a valid FPID buffer errors", 200, |rng| {
+            let cut = rng.usize_below(good.len()); // 0..len-1: strictly shorter
+            assert!(
+                validate_delta_bytes(good[..cut].to_vec(), "trunc").is_err(),
+                "cut at {cut} validated"
+            );
+        });
+    }
+
+    #[test]
+    fn prop_delta_bit_flips_are_rejected_without_panic() {
+        use crate::util::propcheck::check;
+        let (base, file, good) = sample_delta(95);
+        check("every single-bit flip of a valid FPID buffer errors", 300, |rng| {
+            let mut bytes = good.clone();
+            let i = rng.usize_below(bytes.len());
+            let bit = 1u8 << rng.usize_below(8);
+            bytes[i] ^= bit;
+            // framing flips break magic/version/length/checksum; payload
+            // flips break the FNV-1a checksum — either way the flip must
+            // never survive to a successful apply
+            let survived = validate_delta_bytes(bytes, "flip")
+                .and_then(|w| w.parse("flip"))
+                .and_then(|d| d.apply(&base, 0, "flip"));
+            match survived {
+                Err(_) => {}
+                Ok(rebuilt) => assert_eq!(
+                    rebuilt.bytes(),
+                    file.bytes(),
+                    "flip at byte {i} bit {bit:#04b} produced a different model"
+                ),
+            }
+        });
+    }
+
+    #[test]
+    fn prop_delta_random_garbage_never_panics() {
+        use crate::util::propcheck::check;
+        check("arbitrary byte soup never panics the delta reader", 200, |rng| {
+            let n = rng.usize_below(4096);
+            let mut b = vec![0u8; n];
+            for x in b.iter_mut() {
+                *x = (rng.next_u64() & 0xFF) as u8;
+            }
+            // magic-prefix some cases so the fuzz reaches past the first check
+            if n >= 4 && rng.f64() < 0.5 {
+                b[..4].copy_from_slice(b"FPID");
+            }
+            let _ = validate_delta_bytes(b, "garbage").and_then(|w| w.parse("garbage"));
+        });
+    }
+
+    #[test]
+    fn hostile_delta_dimensions_are_rejected_before_allocation() {
+        use crate::util::hash::fnv1a;
+        let (base, _, good) = sample_delta(96);
+        let ds_len = base.meta.dataset.len();
+        // absolute offset of the meta block's `m` dim inside the delta:
+        // framing header (24) + five-u64 delta header (40) + dataset len
+        // field (8) + dataset bytes + scale/alpha/k (24) + five u64
+        // counters (40) + drift (8)
+        let m_off = 24 + 40 + 8 + ds_len + 24 + 40 + 8;
+        // hostile (m, n, labels, rank) quads, re-sealed so only the checked
+        // arithmetic can catch them. m itself is never allocated against in
+        // the delta parse, so the attack surface is n/labels/rank.
+        // labels stays 5 throughout: a mismatched label count would trip
+        // the (already-covered) shard-width guard before the arithmetic
+        let hostile: &[[u64; 4]] = &[
+            [12, u64::MAX, 5, 3],      // n·labels overflows
+            [12, u64::MAX / 8, 5, 3],  // n·labels·8 overflows
+            [12, 6, 5, u64::MAX],      // rank·labels overflows
+            [12, 1 << 61, 5, 1 << 61], // both products overflow
+            [12, 4096, 5, 4096],       // plausible but wrong sizes
+        ];
+        for quad in hostile {
+            let mut bytes = good.clone();
+            for (i, f) in quad.iter().enumerate() {
+                bytes[m_off + 8 * i..m_off + 8 * (i + 1)].copy_from_slice(&f.to_le_bytes());
+            }
+            let sum = fnv1a(&bytes[24..]);
+            bytes[16..24].copy_from_slice(&sum.to_le_bytes());
+            let err = validate_delta_bytes(bytes, "hostile")
+                .and_then(|w| w.parse("hostile"))
+                .unwrap_err();
+            let msg = format!("{err}");
+            assert!(
+                msg.contains("overflow") || msg.contains("body mismatch"),
+                "hostile dims {quad:?} must trip the guard, got: {msg}"
+            );
+        }
+        // a re-sealed version-order inversion is refused at parse
+        let mut bytes = good.clone();
+        bytes[24..32].copy_from_slice(&9u64.to_le_bytes()); // base_version = 9 > target 7
+        let sum = fnv1a(&bytes[24..]);
+        bytes[16..24].copy_from_slice(&sum.to_le_bytes());
+        let err =
+            validate_delta_bytes(bytes, "order").and_then(|w| w.parse("order")).unwrap_err();
+        assert!(format!("{err}").contains("not newer"), "{err}");
     }
 
     #[test]

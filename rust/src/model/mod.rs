@@ -14,7 +14,10 @@
 //!   form, and tracks truncation drift against a full re-solve threshold.
 //! * [`ship`] — snapshot shipping: the pull protocol follower replicas use
 //!   to mirror a primary's store over TCP, verbatim `FPIM` bytes validated
-//!   exactly once on receipt (the [`format::ValidatedModelBytes`] witness).
+//!   exactly once on receipt (the [`format::ValidatedModelBytes`] witness),
+//!   plus `FPID` C/Z delta shipping for factor-stable successions (the
+//!   delta applies onto the follower's base copy and must reconstruct the
+//!   primary's file bitwise, or the full snapshot ships instead).
 //! * [`shard`] — label-space sharding: split one model into a shard set
 //!   (full factors verbatim, contiguous `C`/`Z` column slices) and
 //!   reassemble it bitwise, which is what lets a model wider than one
@@ -33,13 +36,14 @@ pub mod store;
 pub mod updater;
 
 pub use format::{
-    read_model, validate_model_bytes, write_model, ModelArtifact, ModelMeta, ShardRange,
+    encode_model_delta, factors_equal, read_model, validate_delta_bytes, validate_model_bytes,
+    write_model, ModelArtifact, ModelDelta, ModelMeta, ShardRange, ValidatedDeltaBytes,
     ValidatedModelBytes,
 };
 pub use shard::{reassemble, split_artifact};
 pub use ship::{
-    fetch_shard_snapshot, fetch_snapshot, parse_shard_spec, sync_once, sync_shard_once, ShardSel,
-    ShipReply,
+    fetch_shard_delta, fetch_shard_snapshot, fetch_snapshot, parse_shard_spec, sync_once,
+    sync_once_delta, sync_shard_once, sync_shard_once_delta, ShardSel, ShipReply,
 };
 pub use store::{valid_model_name, ModelStore};
-pub use updater::{OnlineUpdater, UpdateReport, UpdaterConfig, UpdaterObs};
+pub use updater::{FoldMode, OnlineUpdater, UpdateReport, UpdaterConfig, UpdaterObs};

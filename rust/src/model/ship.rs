@@ -13,14 +13,37 @@
 //! -> SHIP <have_id>                      (full model)
 //! -> SHIP <have_id> <k>/<n>              (one label-space shard — see
 //!                                         `model/shard.rs`)
+//! -> SHIP <have_id> [<k>/<n>] DELTA      (the follower holds <have_id>
+//!                                         complete and can apply an FPID
+//!                                         C/Z delta against it)
 //! <- SNAPSHOT version=<id> epoch=<e> bytes=<n>\n
 //!                                        followed by n raw bytes: the
 //!                                        primary's v<id>.fpim file verbatim
 //! <- SNAPSHOT version=<id> shard=<k>/<n> epoch=<e> bytes=<n>\n
 //!                                        the v<id>.s<k>of<n>.fpim slice
+//! <- DELTA version=<id> base=<have_id> [shard=<k>/<n>] epoch=<e> bytes=<n>\n
+//!                                        followed by n raw FPID bytes
+//!                                        (`format.rs` delta payload)
 //! <- UNCHANGED version=<id>              (the primary has nothing newer)
 //! <- ERR <reason>
 //! ```
+//!
+//! ## Delta shipping
+//!
+//! A projection fold (`FoldMode::Project`) rewrites only `C`/`Z`, so at
+//! high fold rates consecutive versions share every factor byte. `SHIP
+//! <have> DELTA` lets a follower say so: the primary answers `DELTA` —
+//! base version id, target meta, and the `C`/`Z` arrays, a fraction of the
+//! file — **only when** it still holds `<have>` locally and its factors
+//! are bitwise identical to the latest version's. In every other case
+//! (base gc'd, exact folds, a re-solve, column growth, any doubt) it
+//! silently falls back to the full `SNAPSHOT` reply, which is always
+//! correct. The receiver splices the delta onto its own base copy and
+//! installs **only** if the reconstruction is bitwise the primary's file
+//! (`full_len`/`full_checksum` inside the FPID payload); a diverged base
+//! degrades to one extra round trip for the full snapshot. A primary too
+//! old to know the verb answers `ERR bad request` and the delta-aware
+//! sync path falls back to the plain protocol the same way.
 //!
 //! `epoch=` is the **promotion fence** (see `ModelStore::epoch`): a
 //! snapshot stamped with an epoch LOWER than the receiving store's is
@@ -63,7 +86,7 @@
 //! channel is deployment-layer work (run it over a private network or a
 //! tunnel), not wire-format work.
 
-use super::format::{self, ModelArtifact, ValidatedModelBytes};
+use super::format::{self, ModelArtifact, ValidatedDeltaBytes, ValidatedModelBytes};
 use super::store::ModelStore;
 use crate::error::{Error, Result};
 use std::io::{BufRead, BufReader, Read, Write};
@@ -92,6 +115,12 @@ pub enum ShipReply {
     /// type carries that proof to parse/install. `epoch` is the shipping
     /// store's promotion epoch (0 when the primary never advertised one).
     Snapshot { version: u64, epoch: u64, bytes: ValidatedModelBytes },
+    /// An `FPID` C/Z delta from `base` (which must be the `have` we sent)
+    /// to `version`. Only ever answered to a `SHIP ... DELTA` request;
+    /// framing-validated on receipt like a snapshot. Applying it against
+    /// the local copy of `base` reconstructs `version`'s file bitwise or
+    /// fails closed (see `format::ModelDelta::apply`).
+    Delta { version: u64, base: u64, epoch: u64, bytes: ValidatedDeltaBytes },
 }
 
 fn bad_header(header: &str) -> Error {
@@ -114,14 +143,40 @@ pub fn fetch_shard_snapshot(
     shard: ShardSel,
     timeout: Duration,
 ) -> Result<ShipReply> {
+    fetch_reply(primary, have, shard, false, timeout)
+}
+
+/// [`fetch_shard_snapshot`] that also advertises delta capability:
+/// `SHIP <have> [<k>/<n>] DELTA`. The primary may answer `DELTA` (when
+/// the factor-stability conditions hold), `SNAPSHOT` (the always-correct
+/// fallback), or `UNCHANGED`. A primary too old to know the token answers
+/// `ERR bad request`, which surfaces here as an error — callers fall back
+/// to the plain protocol (see [`sync_shard_once_delta`]).
+pub fn fetch_shard_delta(
+    primary: SocketAddr,
+    have: u64,
+    shard: ShardSel,
+    timeout: Duration,
+) -> Result<ShipReply> {
+    fetch_reply(primary, have, shard, true, timeout)
+}
+
+fn fetch_reply(
+    primary: SocketAddr,
+    have: u64,
+    shard: ShardSel,
+    want_delta: bool,
+    timeout: Duration,
+) -> Result<ShipReply> {
     let stream = TcpStream::connect_timeout(&primary, timeout)?;
     stream.set_read_timeout(Some(timeout))?;
     stream.set_write_timeout(Some(timeout))?;
     let mut reader = BufReader::new(stream.try_clone()?);
     let mut writer = stream;
+    let delta_tok = if want_delta { " DELTA" } else { "" };
     match shard {
-        Some((k, n)) => writeln!(writer, "SHIP {have} {k}/{n}")?,
-        None => writeln!(writer, "SHIP {have}")?,
+        Some((k, n)) => writeln!(writer, "SHIP {have} {k}/{n}{delta_tok}")?,
+        None => writeln!(writer, "SHIP {have}{delta_tok}")?,
     }
 
     let mut header = String::new();
@@ -133,10 +188,19 @@ pub fn fetch_shard_snapshot(
         let version = rest.trim().parse().map_err(|_| bad_header(header))?;
         return Ok(ShipReply::Unchanged { version });
     }
-    let Some(rest) = header.strip_prefix("SNAPSHOT ") else {
+    let (is_delta, rest) = if let Some(rest) = header.strip_prefix("SNAPSHOT ") {
+        (false, rest)
+    } else if let Some(rest) = header.strip_prefix("DELTA ") {
+        if !want_delta {
+            // we never asked for one — a primary volunteering deltas is
+            // off-protocol and its body must not be trusted as a snapshot
+            return Err(Error::Invalid(format!("ship: unsolicited delta `{header}`")));
+        }
+        (true, rest)
+    } else {
         return Err(Error::Invalid(format!("ship: primary said `{header}`")));
     };
-    let (mut version, mut nbytes, mut got_shard, mut epoch) = (None, None, None, 0u64);
+    let (mut version, mut nbytes, mut got_shard, mut epoch, mut base) = (None, None, None, 0u64, None);
     for tok in rest.split_whitespace() {
         if let Some(v) = tok.strip_prefix("version=") {
             version = v.parse::<u64>().ok();
@@ -146,6 +210,8 @@ pub fn fetch_shard_snapshot(
             got_shard = parse_shard_spec(v);
         } else if let Some(v) = tok.strip_prefix("epoch=") {
             epoch = v.parse::<u64>().map_err(|_| bad_header(header))?;
+        } else if let Some(v) = tok.strip_prefix("base=") {
+            base = v.parse::<u64>().ok();
         }
     }
     let (Some(version), Some(nbytes)) = (version, nbytes) else {
@@ -172,6 +238,19 @@ pub fn fetch_shard_snapshot(
             "ship: snapshot truncated ({} of {nbytes} bytes)",
             bytes.len()
         )));
+    }
+    if is_delta {
+        let Some(base) = base else {
+            return Err(bad_header(header));
+        };
+        if base != have {
+            return Err(Error::Invalid(format!(
+                "ship: delta is against base v{base}, we hold v{have}"
+            )));
+        }
+        // FNV-1a verified on receipt, exactly as for snapshots
+        let bytes = format::validate_delta_bytes(bytes, "shipped delta")?;
+        return Ok(ShipReply::Delta { version, base, epoch, bytes });
     }
     // FNV-1a verified on receipt — the ONLY hash pass this snapshot gets;
     // parse and install ride the returned witness
@@ -202,17 +281,23 @@ pub fn sync_once(
 
 /// [`sync_shard_once`] that also records the round trip's wall-clock into
 /// `hist` (nanoseconds). Observation only: the sync outcome — including
-/// errors — is exactly [`sync_shard_once`]'s, and `None` skips the clock
-/// reads entirely.
+/// errors — is exactly [`sync_shard_once`]'s (or, with `delta` set,
+/// [`sync_shard_once_delta`]'s), and `None` skips the clock reads
+/// entirely.
 pub fn sync_shard_once_timed(
     store: &ModelStore,
     primary: SocketAddr,
     shard: ShardSel,
+    delta: bool,
     timeout: Duration,
     hist: Option<&crate::obs::Histogram>,
 ) -> Result<Option<(u64, ModelArtifact)>> {
     let t = hist.map(|_| std::time::Instant::now());
-    let out = sync_shard_once(store, primary, shard, timeout);
+    let out = if delta {
+        sync_shard_once_delta(store, primary, shard, timeout)
+    } else {
+        sync_shard_once(store, primary, shard, timeout)
+    };
     if let (Some(h), Some(t)) = (hist, t) {
         h.record_duration(t.elapsed());
     }
@@ -235,51 +320,202 @@ pub fn sync_shard_once(
     match fetch_shard_snapshot(primary, have, shard, timeout)? {
         ShipReply::Unchanged { .. } => Ok(None),
         ShipReply::Snapshot { version, epoch, bytes } => {
-            if version <= have {
-                // a primary serving an older store than ours — never regress
-                return Ok(None);
-            }
-            // the promotion fence: a primary whose epoch trails ours is a
-            // resurrected pre-promotion node — its publishes are stale by
-            // definition and must not land, whatever their version ids say
-            let local_epoch = store.epoch()?;
-            if epoch < local_epoch {
-                return Err(Error::Invalid(format!(
-                    "ship: refusing snapshot v{version} from stale-epoch primary \
-                     (primary epoch {epoch} < local epoch {local_epoch})"
-                )));
-            }
-            let artifact = bytes.parse("shipped snapshot")?;
-            let art_shard = artifact.meta.shard;
-            match shard {
-                Some((k, n)) if (art_shard.index, art_shard.count) != (k, n) => {
-                    return Err(Error::Invalid(format!(
-                        "ship: snapshot labels itself shard {}/{}, expected {k}/{n}",
-                        art_shard.index, art_shard.count
-                    )));
-                }
-                None if !art_shard.is_full() => {
-                    return Err(Error::Invalid(format!(
-                        "ship: expected a full model, got shard {}/{}",
-                        art_shard.index, art_shard.count
-                    )));
-                }
-                _ => {}
-            }
-            // Adopt a promoted primary's newer epoch BEFORE the bytes land
-            // (no-op otherwise): adopting early is conservative — a crash
-            // between the two leaves the store fencing slightly ahead of
-            // its bytes, which only tightens the guard. The reverse order
-            // would leave a crash window where promoted-lineage bytes sit
-            // under the OLD epoch and a resurrected pre-promotion primary
-            // could slip its diverged publishes past the fence.
-            store.set_epoch(epoch)?;
-            match shard {
-                Some((k, n)) => store.install_shard_snapshot(version, k, n, &bytes)?,
-                None => store.install_snapshot(version, &bytes)?,
-            }
-            Ok(Some((version, artifact)))
+            install_full_snapshot(store, shard, have, version, epoch, bytes)
         }
+        ShipReply::Delta { .. } => {
+            // fetch_shard_snapshot never sends the DELTA token, and
+            // fetch_reply rejects unsolicited deltas before this point
+            Err(Error::Invalid("ship: unsolicited delta reply".into()))
+        }
+    }
+}
+
+/// [`sync_once`] that prefers delta shipping: ask the primary for an
+/// `FPID` C/Z delta against the local latest and fall back to the full
+/// snapshot whenever the delta path can't complete — base mismatch,
+/// diverged bytes, factor rotation, or a primary too old to know the
+/// `DELTA` token. The installed file is bitwise identical either way
+/// (`ModelDelta::apply` proves it before the bytes land), so callers
+/// observe exactly [`sync_once`]'s contract, just cheaper on the wire.
+pub fn sync_once_delta(
+    store: &ModelStore,
+    primary: SocketAddr,
+    timeout: Duration,
+) -> Result<Option<(u64, ModelArtifact)>> {
+    sync_shard_once_delta(store, primary, None, timeout)
+}
+
+/// [`sync_once_delta`] for one label-space slice.
+pub fn sync_shard_once_delta(
+    store: &ModelStore,
+    primary: SocketAddr,
+    shard: ShardSel,
+    timeout: Duration,
+) -> Result<Option<(u64, ModelArtifact)>> {
+    let have = match shard {
+        Some((k, n)) => store.shard_versions(k, n)?.last().copied().unwrap_or(0),
+        None => store.latest_version()?.unwrap_or(0),
+    };
+    if have == 0 {
+        // nothing local to base a delta on — cold followers bootstrap on
+        // the plain full-snapshot protocol
+        return sync_shard_once(store, primary, shard, timeout);
+    }
+    let reply = match fetch_shard_delta(primary, have, shard, timeout) {
+        Ok(reply) => reply,
+        // an old primary answers the DELTA token with `ERR bad request`
+        // (strict verb parsing); any delta-path failure degrades to the
+        // plain protocol rather than leaving the follower unsynced
+        Err(_) => return sync_shard_once(store, primary, shard, timeout),
+    };
+    match reply {
+        ShipReply::Unchanged { .. } => Ok(None),
+        ShipReply::Snapshot { version, epoch, bytes } => {
+            install_full_snapshot(store, shard, have, version, epoch, bytes)
+        }
+        ShipReply::Delta { version, base, epoch, bytes } => {
+            match apply_and_install_delta(store, shard, have, version, base, epoch, &bytes) {
+                Ok(out) => Ok(out),
+                // a diverged base (local v<have> bytes differ from the
+                // primary's) fails the bitwise-reconstruction proof; one
+                // extra round trip for the full snapshot is the recovery
+                Err(_) => sync_shard_once(store, primary, shard, timeout),
+            }
+        }
+    }
+}
+
+/// The shared install path for a full `SNAPSHOT` reply: version regress
+/// check, promotion-epoch fence, shard-header cross-check, then
+/// fence-before-install. Factored out so the delta-aware sync's fallback
+/// and the plain sync install identical bytes through identical checks.
+fn install_full_snapshot(
+    store: &ModelStore,
+    shard: ShardSel,
+    have: u64,
+    version: u64,
+    epoch: u64,
+    bytes: ValidatedModelBytes,
+) -> Result<Option<(u64, ModelArtifact)>> {
+    if version <= have {
+        // a primary serving an older store than ours — never regress
+        return Ok(None);
+    }
+    // the promotion fence: a primary whose epoch trails ours is a
+    // resurrected pre-promotion node — its publishes are stale by
+    // definition and must not land, whatever their version ids say
+    let local_epoch = store.epoch()?;
+    if epoch < local_epoch {
+        return Err(Error::Invalid(format!(
+            "ship: refusing snapshot v{version} from stale-epoch primary \
+             (primary epoch {epoch} < local epoch {local_epoch})"
+        )));
+    }
+    let artifact = bytes.parse("shipped snapshot")?;
+    check_shard_header(&artifact, shard)?;
+    // Adopt a promoted primary's newer epoch BEFORE the bytes land
+    // (no-op otherwise): adopting early is conservative — a crash
+    // between the two leaves the store fencing slightly ahead of
+    // its bytes, which only tightens the guard. The reverse order
+    // would leave a crash window where promoted-lineage bytes sit
+    // under the OLD epoch and a resurrected pre-promotion primary
+    // could slip its diverged publishes past the fence.
+    store.set_epoch(epoch)?;
+    match shard {
+        Some((k, n)) => store.install_shard_snapshot(version, k, n, &bytes)?,
+        None => store.install_snapshot(version, &bytes)?,
+    }
+    Ok(Some((version, artifact)))
+}
+
+/// Splice a shipped `FPID` delta onto the follower's own copy of the base
+/// version and install the reconstruction — which `ModelDelta::apply`
+/// only releases after proving it bitwise equal to the primary's file.
+/// Every check the snapshot path runs (version regress, epoch fence,
+/// shard cross-check, fence-before-install) runs here too.
+fn apply_and_install_delta(
+    store: &ModelStore,
+    shard: ShardSel,
+    have: u64,
+    version: u64,
+    base: u64,
+    epoch: u64,
+    delta: &ValidatedDeltaBytes,
+) -> Result<Option<(u64, ModelArtifact)>> {
+    if version <= have {
+        return Ok(None);
+    }
+    if base != have {
+        return Err(Error::Invalid(format!(
+            "ship: delta is against base v{base}, we hold v{have}"
+        )));
+    }
+    let local_epoch = store.epoch()?;
+    if epoch < local_epoch {
+        return Err(Error::Invalid(format!(
+            "ship: refusing delta v{version} from stale-epoch primary \
+             (primary epoch {epoch} < local epoch {local_epoch})"
+        )));
+    }
+    let parsed = delta.parse("shipped delta")?;
+    if parsed.target_version != version || parsed.base_version != base {
+        return Err(Error::Invalid(format!(
+            "ship: delta header says v{base}->v{version}, payload says v{}->v{}",
+            parsed.base_version, parsed.target_version
+        )));
+    }
+    // the delta's meta block must name the slice we asked for, like a
+    // snapshot's shard header would
+    let d_shard = parsed.meta.shard;
+    match shard {
+        Some((k, n)) if (d_shard.index, d_shard.count) != (k, n) => {
+            return Err(Error::Invalid(format!(
+                "ship: delta labels itself shard {}/{}, expected {k}/{n}",
+                d_shard.index, d_shard.count
+            )));
+        }
+        None if !d_shard.is_full() => {
+            return Err(Error::Invalid(format!(
+                "ship: expected a full-model delta, got shard {}/{}",
+                d_shard.index, d_shard.count
+            )));
+        }
+        _ => {}
+    }
+    // the base is the follower's OWN stored copy of v<have> — if it ever
+    // diverged from the primary's, apply's reconstruction proof fails and
+    // the caller falls back to the full snapshot
+    let base_art = match shard {
+        Some((k, n)) => store.load_shard(have, k, n)?,
+        None => store.load(have)?,
+    };
+    let bytes = parsed.apply(&base_art, local_epoch, "shipped delta")?;
+    let artifact = bytes.parse("shipped delta")?;
+    // same fence-then-install order as the snapshot path
+    store.set_epoch(epoch)?;
+    match shard {
+        Some((k, n)) => store.install_shard_snapshot(version, k, n, &bytes)?,
+        None => store.install_snapshot(version, &bytes)?,
+    }
+    Ok(Some((version, artifact)))
+}
+
+/// The artifact's own shard header must match the slice we asked for — a
+/// primary handing back mislabelled columns is rejected.
+fn check_shard_header(artifact: &ModelArtifact, shard: ShardSel) -> Result<()> {
+    let art_shard = artifact.meta.shard;
+    match shard {
+        Some((k, n)) if (art_shard.index, art_shard.count) != (k, n) => {
+            Err(Error::Invalid(format!(
+                "ship: snapshot labels itself shard {}/{}, expected {k}/{n}",
+                art_shard.index, art_shard.count
+            )))
+        }
+        None if !art_shard.is_full() => Err(Error::Invalid(format!(
+            "ship: expected a full model, got shard {}/{}",
+            art_shard.index, art_shard.count
+        ))),
+        _ => Ok(()),
     }
 }
 
@@ -291,27 +527,36 @@ pub fn serve_ship_timed<W: Write>(
     store: &ModelStore,
     have: u64,
     shard: ShardSel,
+    want_delta: bool,
     hist: Option<&crate::obs::Histogram>,
 ) -> std::io::Result<()> {
     let t = hist.map(|_| std::time::Instant::now());
-    let out = serve_ship(w, store, have, shard);
+    let out = serve_ship(w, store, have, shard, want_delta);
     if let (Some(h), Some(t)) = (hist, t) {
         h.record_duration(t.elapsed());
     }
     out
 }
 
-/// Serve one `SHIP <have> [<k>/<n>]` request (primary side). Writes exactly
-/// one header line, plus the raw snapshot body when the store holds
-/// something newer than `have`. IO errors propagate to the caller (the
-/// connection handler drops the connection); store errors are reported
-/// in-band as `ERR` so a follower can tell a broken store from a broken
-/// socket.
+/// Serve one `SHIP <have> [<k>/<n>] [DELTA]` request (primary side).
+/// Writes exactly one header line, plus the raw snapshot (or `FPID`
+/// delta) body when the store holds something newer than `have`. IO
+/// errors propagate to the caller (the connection handler drops the
+/// connection); store errors are reported in-band as `ERR` so a follower
+/// can tell a broken store from a broken socket.
+///
+/// With `want_delta` set and an eligible base (`have` still on disk,
+/// factors bitwise identical to the latest version's), the reply is a
+/// `DELTA` header plus the C/Z payload; in every other case — including
+/// any failure while building the delta — the full `SNAPSHOT` path
+/// answers instead, so delta capability can never make a sync less
+/// correct, only cheaper.
 pub fn serve_ship<W: Write>(
     w: &mut W,
     store: &ModelStore,
     have: u64,
     shard: ShardSel,
+    want_delta: bool,
 ) -> std::io::Result<()> {
     // Fast path: most polls find nothing new — answer UNCHANGED off the
     // directory scan alone, without reading (and re-hashing) a multi-MB
@@ -359,6 +604,25 @@ pub fn serve_ship<W: Write>(
                         return w.flush();
                     }
                 };
+                if want_delta && have > 0 {
+                    if let Some(delta) = try_encode_delta(store, shard, have, id, epoch, &bytes) {
+                        match shard {
+                            Some((k, n)) => writeln!(
+                                w,
+                                "DELTA version={id} base={have} shard={k}/{n} epoch={epoch} \
+                                 bytes={}",
+                                delta.len()
+                            )?,
+                            None => writeln!(
+                                w,
+                                "DELTA version={id} base={have} epoch={epoch} bytes={}",
+                                delta.len()
+                            )?,
+                        }
+                        w.write_all(&delta)?;
+                        return w.flush();
+                    }
+                }
                 match shard {
                     Some((k, n)) => writeln!(
                         w,
@@ -378,6 +642,33 @@ pub fn serve_ship<W: Write>(
     w.flush()
 }
 
+/// Build the `FPID` body for `have → id` when eligible: the base version
+/// must still exist locally (not gc'd) and carry factors bitwise
+/// identical to the target's — the projection-fold invariant that makes
+/// a C/Z-only delta lossless. Any failure (missing base, factor
+/// rotation, parse trouble) returns `None` and the caller answers with
+/// the full snapshot, which is always correct.
+fn try_encode_delta(
+    store: &ModelStore,
+    shard: ShardSel,
+    have: u64,
+    id: u64,
+    epoch: u64,
+    target: &ValidatedModelBytes,
+) -> Option<Vec<u8>> {
+    let base = match shard {
+        Some((k, n)) => store.shard_snapshot_bytes(have, k, n),
+        None => store.snapshot_bytes(have),
+    }
+    .ok()?;
+    let base_art = base.parse("delta base").ok()?;
+    let target_art = target.parse("delta target").ok()?;
+    if !format::factors_equal(&base_art, &target_art) {
+        return None;
+    }
+    format::encode_model_delta(target, id, have, epoch, "ship delta").ok()
+}
+
 #[cfg(test)]
 mod tests {
     use super::super::format::testutil::sample_artifact;
@@ -392,24 +683,57 @@ mod tests {
     }
 
     /// A one-shot in-thread primary speaking just the SHIP verb (with the
-    /// optional shard spec, like the real server).
+    /// optional shard spec and DELTA token, like the real server).
     fn one_shot_primary(store_dir: PathBuf) -> (SocketAddr, std::thread::JoinHandle<()>) {
+        n_shot_primary(store_dir, 1)
+    }
+
+    /// Like [`one_shot_primary`] but serves `shots` connections in
+    /// sequence — the delta sync's full-snapshot fallback needs a second
+    /// round trip against the same primary.
+    fn n_shot_primary(
+        store_dir: PathBuf,
+        shots: usize,
+    ) -> (SocketAddr, std::thread::JoinHandle<()>) {
         let listener = TcpListener::bind("127.0.0.1:0").unwrap();
         let addr = listener.local_addr().unwrap();
         let handle = std::thread::spawn(move || {
             let store = ModelStore::open(&store_dir).unwrap();
-            let (stream, _) = listener.accept().unwrap();
-            let mut reader = BufReader::new(stream.try_clone().unwrap());
-            let mut line = String::new();
-            reader.read_line(&mut line).unwrap();
-            let rest = line.trim().strip_prefix("SHIP ").unwrap();
-            let mut toks = rest.split_whitespace();
-            let have: u64 = toks.next().unwrap().parse().unwrap();
-            let shard = toks.next().and_then(parse_shard_spec);
-            let mut w = std::io::BufWriter::new(stream);
-            serve_ship(&mut w, &store, have, shard).unwrap();
+            for _ in 0..shots {
+                let (stream, _) = listener.accept().unwrap();
+                let mut reader = BufReader::new(stream.try_clone().unwrap());
+                let mut line = String::new();
+                reader.read_line(&mut line).unwrap();
+                let rest = line.trim().strip_prefix("SHIP ").unwrap();
+                let mut toks = rest.split_whitespace();
+                let have: u64 = toks.next().unwrap().parse().unwrap();
+                let (mut shard, mut want_delta) = (None, false);
+                for tok in toks {
+                    if tok == "DELTA" {
+                        want_delta = true;
+                    } else {
+                        shard = parse_shard_spec(tok);
+                    }
+                }
+                let mut w = std::io::BufWriter::new(stream);
+                serve_ship(&mut w, &store, have, shard, want_delta).unwrap();
+            }
         });
         (addr, handle)
+    }
+
+    /// A successor artifact that only rewrites C/Z (the projection-fold
+    /// shape): factors verbatim, counters bumped — delta-eligible.
+    fn cz_only_successor(base: &ModelArtifact) -> ModelArtifact {
+        use crate::dense::matmul;
+        let mut t = base.clone();
+        for x in t.c.data_mut() {
+            *x += 0.25;
+        }
+        t.z = matmul(&t.svd.vt.transpose(), &t.c.scale_rows(&t.s_inv));
+        t.meta.rows_since_solve += 4;
+        t.meta.updates_applied += 1;
+        t
     }
 
     #[test]
@@ -560,5 +884,193 @@ mod tests {
             assert!(fetch_snapshot(addr, 0, SHIP_TIMEOUT).is_err());
             h.join().unwrap();
         }
+    }
+
+    #[test]
+    fn delta_ship_lands_bitwise_identical_to_the_full_path() {
+        let src_dir = fresh_dir("delta_src");
+        let dst_dir = fresh_dir("delta_dst");
+        let src = ModelStore::open(&src_dir).unwrap();
+        let v1 = sample_artifact(21, 12, 6, 4, 3);
+        src.publish(&v1).unwrap();
+
+        // follower mirrors v1 over the plain protocol first
+        let dst = ModelStore::open(&dst_dir).unwrap();
+        let (addr, h) = one_shot_primary(src_dir.clone());
+        assert_eq!(sync_once(&dst, addr, SHIP_TIMEOUT).unwrap().unwrap().0, 1);
+        h.join().unwrap();
+
+        // a projection-fold-shaped v2: C/Z only, factors byte-identical
+        src.publish(&cz_only_successor(&v1)).unwrap();
+
+        // the wire really carries a DELTA, and it is much smaller
+        let (addr, h) = one_shot_primary(src_dir.clone());
+        let reply = fetch_shard_delta(addr, 1, None, SHIP_TIMEOUT).unwrap();
+        h.join().unwrap();
+        let full_len = src.snapshot_bytes(2).unwrap().len();
+        match &reply {
+            ShipReply::Delta { version, base, bytes, .. } => {
+                assert_eq!((*version, *base), (2, 1));
+                assert!(
+                    bytes.len() < full_len,
+                    "delta ({}) must be smaller than the file ({full_len})",
+                    bytes.len()
+                );
+            }
+            other => panic!("want a delta reply, got {other:?}"),
+        }
+
+        // the delta-aware sync installs it bitwise the primary's file
+        let (addr, h) = one_shot_primary(src_dir.clone());
+        let (id, art) = sync_once_delta(&dst, addr, SHIP_TIMEOUT).unwrap().unwrap();
+        h.join().unwrap();
+        assert_eq!(id, 2);
+        assert_eq!(art.meta.updates_applied, v1.meta.updates_applied + 1);
+        let a = std::fs::read(src_dir.join("v000002.fpim")).unwrap();
+        let b = std::fs::read(dst_dir.join("v000002.fpim")).unwrap();
+        assert_eq!(a, b, "delta-applied file must equal the full-snapshot path byte for byte");
+
+        // already current → UNCHANGED through the delta-aware path too
+        let (addr, h) = one_shot_primary(src_dir.clone());
+        assert!(sync_once_delta(&dst, addr, SHIP_TIMEOUT).unwrap().is_none());
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn factor_rotation_falls_back_to_a_full_snapshot() {
+        let src_dir = fresh_dir("delta_rotate_src");
+        let src = ModelStore::open(&src_dir).unwrap();
+        src.publish(&sample_artifact(31, 12, 6, 4, 3)).unwrap();
+        // v2 from a fresh solve: factors differ — not delta-eligible
+        src.publish(&sample_artifact(32, 12, 6, 4, 3)).unwrap();
+
+        let (addr, h) = one_shot_primary(src_dir.clone());
+        let reply = fetch_shard_delta(addr, 1, None, SHIP_TIMEOUT).unwrap();
+        h.join().unwrap();
+        assert!(
+            matches!(reply, ShipReply::Snapshot { version: 2, .. }),
+            "rotated factors must ship as a full snapshot, got {reply:?}"
+        );
+    }
+
+    #[test]
+    fn gcd_base_falls_back_to_a_full_snapshot() {
+        let src_dir = fresh_dir("delta_gc_src");
+        let src = ModelStore::open(&src_dir).unwrap();
+        let v1 = sample_artifact(41, 12, 6, 4, 3);
+        src.publish(&v1).unwrap();
+        src.publish(&cz_only_successor(&v1)).unwrap();
+        // the base version the follower claims is gone from the primary
+        std::fs::remove_file(src_dir.join("v000001.fpim")).unwrap();
+
+        let (addr, h) = one_shot_primary(src_dir.clone());
+        let reply = fetch_shard_delta(addr, 1, None, SHIP_TIMEOUT).unwrap();
+        h.join().unwrap();
+        assert!(
+            matches!(reply, ShipReply::Snapshot { version: 2, .. }),
+            "a gc'd base must ship as a full snapshot, got {reply:?}"
+        );
+    }
+
+    #[test]
+    fn diverged_base_degrades_to_the_full_snapshot() {
+        let src_dir = fresh_dir("delta_div_src");
+        let dst_dir = fresh_dir("delta_div_dst");
+        let src = ModelStore::open(&src_dir).unwrap();
+        let v1 = sample_artifact(51, 12, 6, 4, 3);
+        src.publish(&v1).unwrap();
+        src.publish(&cz_only_successor(&v1)).unwrap();
+
+        // the follower's v1 is NOT the primary's v1 (same id, same shape,
+        // different bytes) — the delta applies but fails the bitwise
+        // reconstruction proof, and the sync must recover via a second
+        // round trip for the full snapshot
+        let dst = ModelStore::open(&dst_dir).unwrap();
+        dst.publish(&sample_artifact(52, 12, 6, 4, 3)).unwrap();
+
+        let (addr, h) = n_shot_primary(src_dir.clone(), 2);
+        let (id, _) = sync_once_delta(&dst, addr, SHIP_TIMEOUT).unwrap().unwrap();
+        h.join().unwrap();
+        assert_eq!(id, 2);
+        let a = std::fs::read(src_dir.join("v000002.fpim")).unwrap();
+        let b = std::fs::read(dst_dir.join("v000002.fpim")).unwrap();
+        assert_eq!(a, b, "the fallback must land the primary's file byte for byte");
+    }
+
+    #[test]
+    fn stale_epoch_delta_is_refused() {
+        let src_dir = fresh_dir("delta_epoch_src");
+        let dst_dir = fresh_dir("delta_epoch_dst");
+        let src = ModelStore::open(&src_dir).unwrap();
+        let v1 = sample_artifact(61, 12, 6, 4, 3);
+        src.publish(&v1).unwrap();
+
+        let dst = ModelStore::open(&dst_dir).unwrap();
+        let (addr, h) = one_shot_primary(src_dir.clone());
+        sync_once(&dst, addr, SHIP_TIMEOUT).unwrap().unwrap();
+        h.join().unwrap();
+
+        // the follower is promoted past the primary; a delta-shaped v2
+        // from the stale-epoch primary must be fenced out on BOTH the
+        // delta path and its full-snapshot fallback
+        src.publish(&cz_only_successor(&v1)).unwrap();
+        dst.bump_epoch().unwrap();
+        let (addr, h) = n_shot_primary(src_dir.clone(), 2);
+        let err = sync_once_delta(&dst, addr, SHIP_TIMEOUT).unwrap_err();
+        h.join().unwrap();
+        assert!(
+            format!("{err}").contains("epoch"),
+            "stale-epoch delta must be refused by the fence, got: {err}"
+        );
+        assert!(!dst_dir.join("v000002.fpim").exists(), "refused bytes must not land");
+    }
+
+    #[test]
+    fn shard_delta_ship_syncs_only_the_requested_slice() {
+        use crate::model::shard::split_artifact;
+        let src_dir = fresh_dir("delta_shard_src");
+        let dst_dir = fresh_dir("delta_shard_dst");
+        let src = ModelStore::open(&src_dir).unwrap();
+        let v1 = sample_artifact(71, 12, 6, 6, 3);
+        src.publish_shard_set(&split_artifact(&v1, 3).unwrap()).unwrap();
+
+        let dst = ModelStore::open(&dst_dir).unwrap();
+        let (addr, h) = one_shot_primary(src_dir.clone());
+        assert_eq!(
+            sync_shard_once(&dst, addr, Some((1, 3)), SHIP_TIMEOUT).unwrap().unwrap().0,
+            1
+        );
+        h.join().unwrap();
+
+        src.publish_shard_set(&split_artifact(&cz_only_successor(&v1), 3).unwrap()).unwrap();
+        let (addr, h) = one_shot_primary(src_dir.clone());
+        let (id, art) = sync_shard_once_delta(&dst, addr, Some((1, 3)), SHIP_TIMEOUT)
+            .unwrap()
+            .unwrap();
+        h.join().unwrap();
+        assert_eq!(id, 2);
+        assert_eq!((art.meta.shard.index, art.meta.shard.count), (1, 3));
+        let a = std::fs::read(src_dir.join("v000002.s1of3.fpim")).unwrap();
+        let b = std::fs::read(dst_dir.join("v000002.s1of3.fpim")).unwrap();
+        assert_eq!(a, b, "delta-applied shard slice must be the primary's file byte for byte");
+        assert!(!dst_dir.join("v000002.s0of3.fpim").exists());
+        assert!(!dst_dir.join("v000002.s2of3.fpim").exists());
+    }
+
+    #[test]
+    fn cold_follower_bootstraps_over_the_full_protocol() {
+        let src_dir = fresh_dir("delta_cold_src");
+        let dst_dir = fresh_dir("delta_cold_dst");
+        let src = ModelStore::open(&src_dir).unwrap();
+        src.publish(&sample_artifact(81, 12, 6, 4, 3)).unwrap();
+
+        // have == 0 → the delta-aware sync never even sends the DELTA
+        // token; one shot suffices
+        let dst = ModelStore::open(&dst_dir).unwrap();
+        let (addr, h) = one_shot_primary(src_dir.clone());
+        let (id, _) = sync_once_delta(&dst, addr, SHIP_TIMEOUT).unwrap().unwrap();
+        h.join().unwrap();
+        assert_eq!(id, 1);
+        assert_eq!(dst.latest_version().unwrap(), Some(1));
     }
 }

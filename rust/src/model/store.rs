@@ -303,6 +303,23 @@ impl ModelStore {
         validate_model_bytes(bytes, &path.display().to_string())
     }
 
+    /// Verbatim, framing-validated bytes of one SPECIFIC published
+    /// version. Delta shipping reads the base this way: `SHIP <have>
+    /// DELTA` needs exactly the file the follower claims to hold, not the
+    /// latest — an `Err` (e.g. the base was gc'd) just means "offer the
+    /// full snapshot instead".
+    pub fn snapshot_bytes(&self, id: u64) -> Result<ValidatedModelBytes> {
+        self.read_valid_bytes(id)
+    }
+
+    /// [`Self::snapshot_bytes`] for shard `k` of the `n`-shard set at
+    /// version `id`.
+    pub fn shard_snapshot_bytes(&self, id: u64, k: u64, n: u64) -> Result<ValidatedModelBytes> {
+        let path = self.shard_path(id, k, n);
+        let bytes = std::fs::read(&path)?;
+        validate_model_bytes(bytes, &path.display().to_string())
+    }
+
     // -- shard-qualified reads ---------------------------------------------
 
     /// Load shard `k` of the `n`-shard set at version `id`.

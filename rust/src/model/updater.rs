@@ -18,14 +18,57 @@
 //! accumulates that *relative truncation drift* (plus a row counter) and
 //! reports when the configured threshold is crossed, signalling that a full
 //! FastPI re-solve should replace the incrementally maintained model.
+//!
+//! Two extensions ride the same machinery:
+//!
+//! * [`FoldMode::Project`] row folds freeze the factors and move only
+//!   `C`/`Z` (projection onto the fixed basis) — cheaper, RNG-free, and
+//!   the precondition for `SHIP ... DELTA` shipping C/Z-only payloads;
+//! * [`OnlineUpdater::apply_cols`] folds NEW feature columns in via
+//!   [`update_cols`] (paper Eq. (3)) — the feature-growth half of the
+//!   incremental story, with the label projection carried across the
+//!   left-basis rotation as `C ← (U_newᵀ·U_old)·C`.
 
 use super::format::{pinv_diagonal, ModelArtifact, PINV_RCOND};
 use crate::dense::{matmul, matmul_tn};
 use crate::error::{Error, Result};
 use crate::sparse::{Coo, Csr};
-use crate::svdlr::incremental::update_rows_detailed;
+use crate::svdlr::incremental::{update_cols, update_rows_detailed};
 use crate::svdlr::InnerSvd;
 use crate::util::rng::Rng;
+
+/// How a row fold moves the factorization.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FoldMode {
+    /// Paper Eq. (2): the factors absorb the new rows through the small
+    /// SVD — every fold rotates `U/Σ/Vᵀ`. Most accurate; the default.
+    Exact,
+    /// Projection fold: new rows are projected onto the FIXED left basis
+    /// (`u = a·V·Σ⁺`) and only `C`/`Z` move. Cheaper per fold (no SVD,
+    /// no RNG) and — because successive versions then share every factor
+    /// byte — it is what makes `SHIP ... DELTA` fire at high fold rates.
+    /// Energy outside the current right basis is discarded; the drift
+    /// accumulator charges for it, so the re-solve gates still fire.
+    Project,
+}
+
+impl FoldMode {
+    /// Parse a CLI/wire token (`exact` | `project`).
+    pub fn parse(s: &str) -> Option<FoldMode> {
+        match s {
+            "exact" => Some(FoldMode::Exact),
+            "project" => Some(FoldMode::Project),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            FoldMode::Exact => "exact",
+            FoldMode::Project => "project",
+        }
+    }
+}
 
 /// Updater tuning knobs.
 #[derive(Debug, Clone)]
@@ -38,6 +81,8 @@ pub struct UpdaterConfig {
     pub resolve_rows: usize,
     /// flag a full re-solve once accumulated drift exceeds this (0 = never)
     pub resolve_drift: f64,
+    /// how row folds move the factorization (see [`FoldMode`])
+    pub fold_mode: FoldMode,
 }
 
 impl Default for UpdaterConfig {
@@ -47,6 +92,7 @@ impl Default for UpdaterConfig {
             learn_batch: 1,
             resolve_rows: 0,
             resolve_drift: 0.05,
+            fold_mode: FoldMode::Exact,
         }
     }
 }
@@ -237,6 +283,9 @@ impl OnlineUpdater {
         if a_new.rows() == 0 {
             return Ok(self.noop_report());
         }
+        if self.cfg.fold_mode == FoldMode::Project {
+            return self.apply_block_project(a_new, y_new);
+        }
 
         // analyze::allow(nondet-kernel): report-only timing; the fold is seeded, bit-deterministic
         let t = std::time::Instant::now();
@@ -290,6 +339,150 @@ impl OnlineUpdater {
         if let Some(o) = &self.obs {
             o.fold_ns.record((report.secs * 1e9) as u64);
             o.fold_rows.add(report.rows as u64);
+            o.resolve_flagged.set(report.needs_resolve as u64);
+        }
+        Ok(report)
+    }
+
+    /// [`FoldMode::Project`] row fold: splice the new rows' label mass
+    /// into `C`/`Z` while leaving `U/Σ/Vᵀ/Σ⁺` byte-for-byte untouched.
+    ///
+    /// Each new row's left-basis coordinates are `u = a·V·Σ⁺` (the
+    /// least-squares projection onto the frozen factorization), so
+    /// `C ← C + (A_new V Σ⁺)ᵀ·Y_new` and `Z = VΣ⁺C` retrains in closed
+    /// form. No small SVD, no RNG draw — bit-determinism is structural.
+    /// The energy `‖A_new‖²_F − ‖A_new V‖²_F` living outside the current
+    /// right basis is *discarded*, and the drift accumulator charges for
+    /// exactly that, so truncation-quality gates behave like the exact
+    /// path's.
+    fn apply_block_project(&mut self, a_new: &Csr, y_new: &Csr) -> Result<UpdateReport> {
+        // analyze::allow(nondet-kernel): report-only timing; the fold is RNG-free
+        let t = std::time::Instant::now();
+        let art = &self.artifact;
+        let old_energy: f64 = art.svd.s.iter().map(|s| s * s).sum();
+        let block_energy = a_new.fro_norm().powi(2);
+
+        let v = art.svd.vt.transpose(); // n×r
+        let proj = a_new.spmm(&v); // right-basis coordinates, m_b×r
+        let captured = proj.fro_norm().powi(2);
+        // u = a·V·Σ⁺ per row — the frozen-basis left coordinates
+        let u_rows = proj.scale_cols(&art.s_inv);
+        // C ← C + U_rowsᵀ·Y_new
+        let c = art.c.axpy(1.0, &y_new.spmm_t(&u_rows).transpose());
+        // closed-form retrain on unchanged factors: Z = VΣ⁺C
+        let z = matmul(&v, &c.scale_rows(&art.s_inv));
+
+        // ‖A_new V‖ ≤ ‖A_new‖ (V has orthonormal columns): what the frozen
+        // basis cannot represent is charged as drift, mirroring the exact
+        // path's truncation accounting
+        let total = old_energy + block_energy;
+        let kept = old_energy + captured;
+        let drift_inc = if total > 0.0 { ((total - kept).max(0.0) / total).sqrt() } else { 0.0 };
+
+        let rows = a_new.rows();
+        let art = &mut self.artifact;
+        art.c = c;
+        art.z = z;
+        // rows_trained counts rows absorbed into the FACTORS — a projection
+        // fold leaves them untouched, so only the since-solve counter (which
+        // gates the re-solve) and the fold counter advance
+        art.meta.rows_since_solve += rows as u64;
+        art.meta.updates_applied += 1;
+        art.meta.drift += drift_inc;
+
+        let report = UpdateReport {
+            rows,
+            rank: self.artifact.rank(),
+            drift_inc,
+            drift_total: self.artifact.meta.drift,
+            secs: t.elapsed().as_secs_f64(),
+            needs_resolve: self.needs_resolve(),
+        };
+        if let Some(o) = &self.obs {
+            o.fold_ns.record((report.secs * 1e9) as u64);
+            o.fold_rows.add(report.rows as u64);
+            o.resolve_flagged.set(report.needs_resolve as u64);
+        }
+        Ok(report)
+    }
+
+    /// Fold a block of NEW feature columns: `A ← [A | T]` (paper Eq. (3),
+    /// via [`update_cols`]). `t_cols` has one row per trained row and one
+    /// column per appended feature; the label matrix is unchanged.
+    ///
+    /// The label projection is carried across the left-basis rotation as
+    /// `C ← (U_newᵀ·U_old)·C` — exact whenever `Y` lies in the old left
+    /// span (and the standard re-projection otherwise), so no old labels
+    /// are revisited. `Σ⁺` is refreshed and `Z = VΣ⁺C` regrows to the new
+    /// feature width. Column folds always rotate the factors (they are
+    /// never delta-shippable), in every [`FoldMode`].
+    ///
+    /// Buffered `LEARN` examples are untouched: their feature indices
+    /// remain valid in the grown space and fold on the next flush. Callers
+    /// that need replay determinism (the `LEARN COLS` verb) flush first so
+    /// online and offline orderings agree.
+    pub fn apply_cols(&mut self, t_cols: &Csr) -> Result<UpdateReport> {
+        let (m, _n, _l) = self.artifact.shape();
+        if t_cols.rows() != m {
+            return Err(Error::Dim(format!(
+                "column block has {} rows, model has {m}",
+                t_cols.rows()
+            )));
+        }
+        if t_cols.cols() == 0 {
+            return Ok(self.noop_report());
+        }
+
+        // analyze::allow(nondet-kernel): report-only timing; the fold is seeded, bit-deterministic
+        let t = std::time::Instant::now();
+        let art = &self.artifact;
+        // same deterministic per-fold stream as row folds: the online verb
+        // and an offline replay draw identical randomness
+        let mut rng = Rng::seed_from_u64(
+            art.meta.seed ^ art.meta.updates_applied.wrapping_mul(0x9E37_79B9_7F4A_7C15),
+        );
+        let target = if art.rank() > 0 {
+            art.rank()
+        } else {
+            let n_grown = art.svd.vt.cols() + t_cols.cols();
+            ((art.meta.alpha * n_grown as f64).ceil() as usize).clamp(1, n_grown.max(1))
+        };
+
+        let old_energy: f64 = art.svd.s.iter().map(|s| s * s).sum();
+        let block_energy = t_cols.fro_norm().powi(2);
+        let old_u = art.svd.u.clone();
+
+        let det = update_cols(&art.svd, t_cols, target, self.cfg.inner, &mut rng);
+        // C = UᵀY carried across the rotation: C_new = (U_newᵀ·U_old)·C
+        let c = matmul(&matmul_tn(&det.u, &old_u), &art.c);
+        let s_inv = pinv_diagonal(&det.s, PINV_RCOND);
+        // Z regrows to the new feature width: (n_old+n_new)×L
+        let z = matmul(&det.vt.transpose(), &c.scale_rows(&s_inv));
+
+        let new_energy: f64 = det.s.iter().map(|s| s * s).sum();
+        let total = old_energy + block_energy;
+        let drift_inc = if total > 0.0 { ((total - new_energy).max(0.0) / total).sqrt() } else { 0.0 };
+
+        let art = &mut self.artifact;
+        art.svd = det;
+        art.s_inv = s_inv;
+        art.c = c;
+        art.z = z;
+        // no rows were added — row counters hold; the fold counter advances
+        // (which also steps the deterministic RNG stream for the next fold)
+        art.meta.updates_applied += 1;
+        art.meta.drift += drift_inc;
+
+        let report = UpdateReport {
+            rows: 0,
+            rank: self.artifact.rank(),
+            drift_inc,
+            drift_total: self.artifact.meta.drift,
+            secs: t.elapsed().as_secs_f64(),
+            needs_resolve: self.needs_resolve(),
+        };
+        if let Some(o) = &self.obs {
+            o.fold_ns.record((report.secs * 1e9) as u64);
             o.resolve_flagged.set(report.needs_resolve as u64);
         }
         Ok(report)
@@ -507,5 +700,133 @@ mod tests {
         assert!(up.artifact().meta.drift > 1e-6, "truncated folds must register drift");
         assert!(tripped, "row threshold (6) must trip after 3×2 rows");
         assert_eq!(up.artifact().meta.rows_since_solve, 6);
+    }
+
+    #[test]
+    fn project_fold_touches_only_cz() {
+        let (art, _, _) = full_rank_artifact(61, 16, 6, 5);
+        let before = art.clone();
+        let cfg = UpdaterConfig {
+            inner: InnerSvd::Dense,
+            fold_mode: FoldMode::Project,
+            ..Default::default()
+        };
+        let mut up = OnlineUpdater::new(art, cfg);
+        let mut rng = Rng::seed_from_u64(62);
+        let a_new = random_block(&mut rng, 3, 6, 0.7);
+        let y_new = label_block(&mut rng, 3, 5);
+        let rep = up.apply_block(&a_new, &y_new).unwrap();
+        assert_eq!(rep.rows, 3);
+
+        let after = up.artifact();
+        // the factor bytes are EXACTLY the pre-fold ones — the invariant
+        // delta shipping is built on
+        assert!(super::super::format::factors_equal(&before, after));
+        assert_eq!(after.svd.u.max_abs_diff(&before.svd.u), 0.0);
+        // ...while the trained state moved
+        assert!(after.c.max_abs_diff(&before.c) > 0.0, "C must absorb the labels");
+        assert!(after.z.max_abs_diff(&before.z) > 0.0, "Z must retrain");
+        // counters: factors saw no rows, the re-solve gate still advances
+        assert_eq!(after.meta.rows_trained, before.meta.rows_trained);
+        assert_eq!(after.meta.rows_since_solve, before.meta.rows_since_solve + 3);
+        assert_eq!(after.meta.updates_applied, before.meta.updates_applied + 1);
+        assert!(after.meta.drift >= before.meta.drift);
+    }
+
+    #[test]
+    fn project_fold_is_deterministic_and_closed_form() {
+        let cfg = || UpdaterConfig {
+            inner: InnerSvd::Dense,
+            fold_mode: FoldMode::Project,
+            ..Default::default()
+        };
+        let mk = || OnlineUpdater::new(full_rank_artifact(63, 14, 6, 4).0, cfg());
+        let (mut u1, mut u2) = (mk(), mk());
+        for step in 0..3 {
+            let feats = vec![(step % 6, 1.0 + step as f64), ((step + 3) % 6, -0.25)];
+            let labels = vec![step % 4];
+            u1.push_example(feats.clone(), labels.clone()).unwrap();
+            u2.push_example(feats, labels).unwrap();
+        }
+        assert_eq!(u1.artifact().c.max_abs_diff(&u2.artifact().c), 0.0);
+        assert_eq!(u1.artifact().z.max_abs_diff(&u2.artifact().z), 0.0);
+        // Z must stay the closed-form retrain on the frozen factors
+        let art = u1.artifact();
+        let z = crate::dense::matmul(
+            &art.svd.vt.transpose(),
+            &art.c.scale_rows(&art.s_inv),
+        );
+        assert_eq!(art.z.max_abs_diff(&z), 0.0, "Z must equal VΣ⁺C bitwise");
+    }
+
+    #[test]
+    fn project_fold_on_in_span_rows_matches_exact_carry() {
+        // Rows that already lie in the model's right span lose nothing to
+        // projection: C must pick up exactly Uᵀ_rowsᵀ·Y with u = a·V·Σ⁺,
+        // and the drift charge must be ~0.
+        let (art, a, _) = full_rank_artifact(64, 12, 5, 4);
+        let cfg = UpdaterConfig {
+            inner: InnerSvd::Dense,
+            fold_mode: FoldMode::Project,
+            ..Default::default()
+        };
+        let mut up = OnlineUpdater::new(art, cfg);
+        // replay an existing data row: trivially in-span at full rank
+        let (js, vs) = a.row(0);
+        let feats: Vec<(usize, f64)> = js.iter().zip(vs).map(|(&j, &v)| (j, v)).collect();
+        let rep = up.push_example(feats, vec![1]).unwrap().unwrap();
+        // (total−kept) is O(ε·total), so the sqrt leaves ~1e-8 of noise
+        assert!(rep.drift_inc < 1e-6, "in-span row must not register drift, got {}", rep.drift_inc);
+    }
+
+    #[test]
+    fn apply_cols_grows_the_feature_space() {
+        let (art, _, _) = full_rank_artifact(65, 18, 6, 5);
+        let before = art.clone();
+        let mut up =
+            OnlineUpdater::new(art, UpdaterConfig { inner: InnerSvd::Dense, ..Default::default() });
+        let mut rng = Rng::seed_from_u64(66);
+        let t_cols = random_block(&mut rng, 18, 3, 0.6);
+        let rep = up.apply_cols(&t_cols).unwrap();
+        assert_eq!(rep.rows, 0, "a column fold adds no rows");
+
+        let after = up.artifact();
+        assert_eq!(after.shape(), (18, 9, 5), "feature width must grow 6 -> 9");
+        assert_eq!(after.z.rows(), 9, "Z must regrow to the new width");
+        assert_eq!(after.z.cols(), 5);
+        assert_eq!(after.meta.rows_trained, before.meta.rows_trained);
+        assert_eq!(after.meta.updates_applied, before.meta.updates_applied + 1);
+        assert!(
+            !super::super::format::factors_equal(&before, after),
+            "a column fold always rotates the factors"
+        );
+
+        // determinism: a second updater replaying the same fold lands
+        // bitwise identical — the LEARN COLS contract
+        let mut up2 = OnlineUpdater::new(
+            before,
+            UpdaterConfig { inner: InnerSvd::Dense, ..Default::default() },
+        );
+        up2.apply_cols(&t_cols).unwrap();
+        assert_eq!(up.artifact().svd.u.max_abs_diff(&up2.artifact().svd.u), 0.0);
+        assert_eq!(up.artifact().svd.vt.max_abs_diff(&up2.artifact().svd.vt), 0.0);
+        assert_eq!(up.artifact().svd.s, up2.artifact().svd.s);
+        assert_eq!(up.artifact().c.max_abs_diff(&up2.artifact().c), 0.0);
+        assert_eq!(up.artifact().z.max_abs_diff(&up2.artifact().z), 0.0);
+    }
+
+    #[test]
+    fn apply_cols_validates_shape_and_handles_empty() {
+        let (art, _, _) = full_rank_artifact(67, 10, 5, 4);
+        let mut up =
+            OnlineUpdater::new(art, UpdaterConfig { inner: InnerSvd::Dense, ..Default::default() });
+        // wrong row count is rejected before the kernel can assert
+        let mut rng = Rng::seed_from_u64(68);
+        assert!(up.apply_cols(&random_block(&mut rng, 9, 2, 0.5)).is_err());
+        // zero new columns is a no-op report
+        let rep = up.apply_cols(&Csr::zeros(10, 0)).unwrap();
+        assert_eq!(rep.rows, 0);
+        assert_eq!(up.artifact().meta.updates_applied, 0);
+        assert_eq!(up.artifact().shape(), (10, 5, 4));
     }
 }
